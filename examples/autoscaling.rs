@@ -1,0 +1,59 @@
+//! Auto-scaling demo — Figures 10b/10c at laptop scale.
+//!
+//! Runs the same Cholesky job at several scaling factors `sf` and
+//! prints (a) the worker-vs-pending trace for sf = 1 (Fig 10b) and
+//! (b) the cost/completion-time trade-off across sf (Fig 10c).
+//!
+//! ```text
+//! cargo run --release --example autoscaling
+//! ```
+
+use numpywren::config::{EngineConfig, ScalingMode};
+use numpywren::drivers;
+use numpywren::engine::Engine;
+use numpywren::linalg::matrix::Matrix;
+use numpywren::util::prng::Rng;
+use std::time::Duration;
+
+fn run_once(a: &Matrix, sf: f64) -> anyhow::Result<(f64, f64, usize)> {
+    let mut cfg = EngineConfig::default();
+    cfg.scaling = ScalingMode::Auto {
+        sf,
+        max_workers: 8,
+    };
+    cfg.idle_timeout = Duration::from_millis(80);
+    cfg.provision_period = Duration::from_millis(10);
+    cfg.store_latency = Duration::from_micros(300);
+    cfg.sample_period = Duration::from_millis(10);
+    let out = drivers::cholesky(&Engine::new(cfg), a, 16)?;
+    let r = &out.run.report;
+    if sf == 1.0 {
+        println!("— sf=1.0 trace (workers track pending tasks, Fig 10b) —");
+        let step = (r.samples.len() / 20).max(1);
+        for s in r.samples.iter().step_by(step) {
+            println!(
+                "  t={:>6.3}s pending={:>4} workers={:>2} {}",
+                s.t,
+                s.pending,
+                s.workers,
+                "#".repeat(s.workers)
+            );
+        }
+    }
+    Ok((r.wall_secs, r.core_secs_billed, r.workers_spawned))
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("autoscaling: Cholesky 192x192 (B=16) across scaling factors");
+    let mut rng = Rng::new(21);
+    let a = Matrix::rand_spd(192, &mut rng);
+
+    println!("— cost vs completion time (Fig 10c shape) —");
+    println!("  {:>6} {:>10} {:>14} {:>8}", "sf", "time (s)", "billed (c·s)", "workers");
+    for sf in [0.25, 0.5, 1.0, 2.0] {
+        let (t, billed, spawned) = run_once(&a, sf)?;
+        println!("  {sf:>6.2} {t:>10.3} {billed:>14.3} {spawned:>8}");
+    }
+    println!("OK — lower sf trades completion time for fewer core-seconds");
+    Ok(())
+}

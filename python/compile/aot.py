@@ -1,0 +1,86 @@
+"""AOT lowering: jax → HLO **text** → `artifacts/`.
+
+HLO text (not `.serialize()`d protos) is the interchange format: jax
+≥ 0.5 emits HloModuleProto with 64-bit instruction ids that
+xla_extension 0.5.1 (the PJRT the Rust `xla` crate binds) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts --blocks 32,64
+
+Produces `<kernel>_b<B>.hlo.txt` per kernel per block size plus
+`manifest.txt` (one line per artifact:
+`name block n_inputs n_outputs file`) that the Rust artifact registry
+reads.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, in_specs):
+    lowered = jax.jit(fn).lower(*in_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def check_no_custom_calls(name, hlo_text):
+    """Refuse to emit artifacts the Rust PJRT cannot run."""
+    bad = [
+        line.strip()
+        for line in hlo_text.splitlines()
+        if "custom-call" in line and "Sharding" not in line
+    ]
+    if bad:
+        raise RuntimeError(
+            f"kernel `{name}` lowered with custom-calls the CPU PJRT "
+            f"cannot execute:\n" + "\n".join(bad[:5])
+        )
+
+
+def build(out_dir, blocks):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for b in blocks:
+        for name, (fn, in_specs) in model.kernel_signatures(b).items():
+            hlo = to_hlo_text(fn, in_specs)
+            check_no_custom_calls(name, hlo)
+            fname = f"{name}_b{b}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(hlo)
+            n_out = len(fn(*[jax.ShapeDtypeStruct(s.shape, s.dtype) for s in in_specs])) \
+                if False else _n_outputs(fn, in_specs)
+            manifest.append((name, b, len(in_specs), n_out, fname))
+            print(f"  {fname}: {len(hlo)} chars")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        for name, b, nin, nout, fname in manifest:
+            f.write(f"{name} {b} {nin} {nout} {fname}\n")
+    print(f"wrote {len(manifest)} artifacts + manifest.txt to {out_dir}")
+
+
+def _n_outputs(fn, in_specs):
+    out = jax.eval_shape(fn, *in_specs)
+    return len(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--blocks", default="32,64",
+                    help="comma-separated tile sides to compile")
+    args = ap.parse_args()
+    blocks = [int(x) for x in args.blocks.split(",") if x]
+    build(args.out_dir, blocks)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""L2 — per-tile factorization kernels in pure jnp.
+
+`jnp.linalg.cholesky/qr` and `solve_triangular` lower to
+`lapack_*_ffi` custom-calls on CPU, which xla_extension 0.5.1 (the PJRT
+the Rust `xla` crate binds) cannot resolve. Every factorization here is
+therefore written *algorithmically* — `fori_loop` + masked rank-1
+updates — so the lowered HLO contains only plain ops and runs on any
+PJRT backend. The O(B³) GEMM-shaped work still goes through the Pallas
+kernel (matmul.py); these loops are the O(B³/3) panel factorizations
+that sit on the critical path but not in the flop budget.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul as mm
+
+
+def chol(a):
+    """Unblocked right-looking Cholesky: A (SPD) → L lower-triangular.
+
+    Column j: pivot sqrt, scale, then a masked rank-1 trailing update.
+    """
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, l):
+        d = jnp.sqrt(l[j, j])
+        col = l[:, j] / d
+        col = jnp.where(idx >= j, col, jnp.zeros_like(col))
+        l = l.at[:, j].set(col)
+        trailing = (idx[:, None] > j) & (idx[None, :] > j)
+        return l - jnp.where(trailing, jnp.outer(col, col), 0.0)
+
+    l = jax.lax.fori_loop(0, n, body, a)
+    return jnp.tril(l)
+
+
+def tri_inv_lower(l):
+    """Invert a lower-triangular tile by forward substitution on I.
+
+    Column-wise: X[:, j] solves L X[:, j] = e_j. Expressed as a
+    fori_loop over rows producing rows of X.
+    """
+    n = l.shape[0]
+    idx = jnp.arange(n)
+
+    def body(i, x):
+        # row i of X: (e_i - L[i, :i] @ X[:i]) / L[i, i]
+        li = jnp.where(idx < i, l[i, :], 0.0)
+        row = (jnp.eye(n, dtype=l.dtype)[i] - li @ x) / l[i, i]
+        return x.at[i, :].set(row)
+
+    x = jax.lax.fori_loop(0, n, body, jnp.zeros_like(l))
+    return x
+
+
+def trsm(l, a):
+    """Cholesky panel update: A · L⁻ᵀ.
+
+    The inverse is the O(B³/3) loop; the application is a Pallas GEMM
+    (A @ (L⁻¹)ᵀ) so the cubic work lands on the MXU.
+    """
+    linv = tri_inv_lower(l)
+    return mm.matmul_nt(a, linv)
+
+
+def syrk(s, lj, lk):
+    """Trailing update S − Lj·Lkᵀ — straight to the Pallas kernel."""
+    return mm.syrk_update(s, lj, lk)
+
+
+def gemm(a, b):
+    return mm.matmul(a, b)
+
+
+def gemm_accum(c, a, b):
+    return mm.matmul_accum(c, a, b)
+
+
+def householder_qr_r(a):
+    """R factor of the Householder QR of a (possibly stacked) tile.
+
+    Pure-jnp loop over columns; each step applies one reflector to the
+    trailing columns. Returns the n×n upper-triangular R.
+    """
+    m, n = a.shape
+    row_idx = jnp.arange(m)
+
+    def body(k, r):
+        col = jnp.where(row_idx >= k, r[:, k], 0.0)
+        norm = jnp.linalg.norm(col)
+        alpha = jnp.where(r[k, k] >= 0.0, -norm, norm)
+        v = col.at[k].add(-alpha)
+        vnorm2 = v @ v
+        # Guard zero columns (already eliminated).
+        safe = vnorm2 > 0.0
+        scale = jnp.where(safe, 2.0 / jnp.where(safe, vnorm2, 1.0), 0.0)
+        r = r - scale * jnp.outer(v, v @ r)
+        return r
+
+    r = jax.lax.fori_loop(0, n, body, a)
+    return jnp.triu(r[:n, :])
+
+
+def qr_factor(a):
+    """TSQR leaf: R of QR(A) for one tile."""
+    return householder_qr_r(a)
+
+
+def qr_factor2(r1, r2):
+    """TSQR pair reduction: R of QR([R1; R2])."""
+    return householder_qr_r(jnp.concatenate([r1, r2], axis=0))
+
+
+def copy(a):
+    return a

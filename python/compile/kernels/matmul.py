@@ -1,0 +1,141 @@
+"""L1 — the Pallas matmul kernel: numpywren's compute hot spot.
+
+Every O(N³) term in the paper's algorithms is a tile-level GEMM
+(`syrk`'s trailing update dominates Cholesky; `gemm_accum` IS the GEMM
+program; the CAQR applies are matmuls). This module implements that one
+hot spot as a single VMEM-tiled Pallas kernel with fused epilogues, so
+all GEMM-shaped kernels lower into the same MXU schedule:
+
+    out = epilogue(C_in, A @ op(B))        op ∈ {identity, transpose}
+    epilogue ∈ {none, add (accumulate), sub (trailing update)}
+
+TPU mapping (DESIGN.md §2 Hardware-Adaptation): the grid is
+(M/bm, N/bn, K/bk) with the K axis innermost; each step fetches a
+(bm×bk) A-tile and (bk×bn) B-tile into VMEM via BlockSpec and
+accumulates a (bm×bn) f32 partial in VMEM scratch — the same
+HBM↔scratchpad schedule a CUDA kernel would express with threadblocks,
+re-expressed for the MXU's 128×128 systolic shape. Tile sides are
+min(B, 128).
+
+`interpret=True` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact
+runs everywhere. Real-TPU efficiency is estimated from the BlockSpec
+footprint in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Epilogue modes.
+EPI_NONE = 0  # out = A @ B
+EPI_ADD = 1  # out = C + A @ B
+EPI_SUB = 2  # out = C - A @ B
+
+
+def _mm_kernel(c_in_ref, a_ref, b_ref, o_ref, acc_ref, *, nsteps, epilogue, transpose_b):
+    """One grid step: accumulate a (bm×bk)·(bk×bn) partial product."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    if transpose_b:
+        b = b.T
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nsteps - 1)
+    def _done():
+        acc = acc_ref[...]
+        if epilogue == EPI_ADD:
+            acc = c_in_ref[...] + acc
+        elif epilogue == EPI_SUB:
+            acc = c_in_ref[...] - acc
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("epilogue", "transpose_b", "bm", "bn", "bk")
+)
+def pallas_matmul(c_in, a, b, *, epilogue=EPI_NONE, transpose_b=False,
+                  bm=None, bn=None, bk=None):
+    """C = epilogue(c_in, a @ op(b)) as a Pallas kernel.
+
+    `a`: (m, k); `b`: (k, n) or (n, k) when `transpose_b`;
+    `c_in`: (m, n) — ignored (but still an operand, for a uniform
+    signature) when epilogue is EPI_NONE.
+    """
+    m, kdim = a.shape
+    if transpose_b:
+        n, kb = b.shape
+    else:
+        kb, n = b.shape
+    assert kdim == kb, (a.shape, b.shape)
+    bm = bm or min(m, 128)
+    bn = bn or min(n, 128)
+    bk = bk or min(kdim, 128)
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (
+        "tile sides must divide the block size", (m, n, kdim), (bm, bn, bk))
+    nsteps = kdim // bk
+
+    if transpose_b:
+        b_spec = pl.BlockSpec((bn, bk), lambda i, j, k: (j, k))
+    else:
+        b_spec = pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
+
+    kernel = functools.partial(
+        _mm_kernel, nsteps=nsteps, epilogue=epilogue, transpose_b=transpose_b)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nsteps),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),  # c_in
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),  # a
+            b_spec,                                           # b
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu_vmem((bm, bn))],
+        interpret=True,
+    )(c_in, a, b)
+
+
+def pltpu_vmem(shape):
+    """VMEM f32 scratch accumulator (interpret mode emulates it)."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM(shape, jnp.float32)
+    except Exception:  # pragma: no cover - CPU-only pallas builds
+        return pl.ANY
+
+
+# ---- public epilogue-specialized entry points (what model.py uses) ----
+
+def matmul(a, b):
+    """A @ B."""
+    m, n = a.shape[0], b.shape[1]
+    dummy = jnp.zeros((m, n), a.dtype)
+    return pallas_matmul(dummy, a, b, epilogue=EPI_NONE)
+
+
+def matmul_accum(c, a, b):
+    """C + A @ B (the tiled-GEMM reduction step)."""
+    return pallas_matmul(c, a, b, epilogue=EPI_ADD)
+
+
+def syrk_update(s, lj, lk):
+    """S − Lj @ Lkᵀ (Algorithm 1 line 8 — the dominant kernel)."""
+    return pallas_matmul(s, lj, lk, epilogue=EPI_SUB, transpose_b=True)
+
+
+def matmul_nt(a, b):
+    """A @ Bᵀ."""
+    m, n = a.shape[0], b.shape[0]
+    dummy = jnp.zeros((m, n), a.dtype)
+    return pallas_matmul(dummy, a, b, epilogue=EPI_NONE, transpose_b=True)

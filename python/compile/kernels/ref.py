@@ -1,0 +1,52 @@
+"""Pure-numpy oracles for every AOT'd kernel — the correctness ground
+truth pytest checks the Pallas/jnp implementations against (and the
+same semantics the Rust NativeKernels implement in f64)."""
+
+import numpy as np
+
+
+def chol(a):
+    return np.linalg.cholesky(a)
+
+
+def trsm(l, a):
+    """A · L⁻ᵀ (solve X Lᵀ = A)."""
+    # scipy-free: solve L Xᵀ = Aᵀ then transpose.
+    return np.linalg.solve(l, a.T).T
+
+
+def syrk(s, lj, lk):
+    return s - lj @ lk.T
+
+
+def gemm(a, b):
+    return a @ b
+
+
+def gemm_accum(c, a, b):
+    return c + a @ b
+
+
+def qr_factor(a):
+    """R with the Householder sign convention used by blockops (the
+    diagonal's sign is pinned so comparisons are direct: R is unique up
+    to row signs; normalize to non-negative diagonal)."""
+    r = np.linalg.qr(a, mode="r")
+    signs = np.sign(np.diag(r))
+    signs[signs == 0] = 1.0
+    return signs[:, None] * r
+
+
+def qr_factor2(r1, r2):
+    return qr_factor(np.concatenate([r1, r2], axis=0))
+
+
+def normalize_r(r):
+    """Pin R's row signs (non-negative diagonal) for comparison."""
+    signs = np.sign(np.diag(r)).copy()
+    signs[signs == 0] = 1.0
+    return signs[:, None] * r
+
+
+def copy(a):
+    return a

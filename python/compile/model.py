@@ -1,0 +1,72 @@
+"""L2 — the AOT kernel surface: one jitted jax function per LAmbdaPACK
+kernel, at fixed tile shapes, each calling into the L1 Pallas matmul
+where the work is GEMM-shaped.
+
+`aot.py` lowers each entry of `KERNELS` once per block size to HLO
+text; the Rust runtime (`rust/src/runtime/`) loads, compiles, and
+serves them from the request path. Python never runs at execution
+time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import blockops as ops
+
+F32 = jnp.float32
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def k_chol(a):
+    return (ops.chol(a),)
+
+
+def k_trsm(l, a):
+    return (ops.trsm(l, a),)
+
+
+def k_syrk(s, lj, lk):
+    return (ops.syrk(s, lj, lk),)
+
+
+def k_gemm(a, b):
+    return (ops.gemm(a, b),)
+
+
+def k_gemm_accum(c, a, b):
+    return (ops.gemm_accum(c, a, b),)
+
+
+def k_qr_factor(a):
+    return (ops.qr_factor(a),)
+
+
+def k_qr_factor2(r1, r2):
+    return (ops.qr_factor2(r1, r2),)
+
+
+def k_copy(a):
+    return (ops.copy(a),)
+
+
+def kernel_signatures(b):
+    """name → (python fn, input ShapeDtypeStructs) at block size `b`.
+
+    These are the kernels on numpywren's hot paths (Cholesky, GEMM,
+    TSQR). The CAQR/LQ family (qr_block/qr_pair/…) runs on the native
+    Rust fallback — its full-Q tiles are 2B×2B and dominate neither
+    table; see DESIGN.md.
+    """
+    return {
+        "chol": (k_chol, [spec(b, b)]),
+        "trsm": (k_trsm, [spec(b, b), spec(b, b)]),
+        "syrk": (k_syrk, [spec(b, b), spec(b, b), spec(b, b)]),
+        "gemm_kernel": (k_gemm, [spec(b, b), spec(b, b)]),
+        "gemm_accum": (k_gemm_accum, [spec(b, b), spec(b, b), spec(b, b)]),
+        "qr_factor": (k_qr_factor, [spec(b, b)]),
+        "qr_factor2": (k_qr_factor2, [spec(b, b), spec(b, b)]),
+        "copy": (k_copy, [spec(b, b)]),
+    }

@@ -1,0 +1,59 @@
+//! Shared helpers for the paper-figure bench targets.
+//!
+//! Each bench is a `harness = false` binary that regenerates one table
+//! or figure of the paper (criterion is not in the offline crate set).
+//! The numbers come from the discrete-event simulator with the
+//! calibrated cost model (DESIGN.md §1); EXPERIMENTS.md records the
+//! paper-vs-measured comparison for every row/series.
+
+#![allow(dead_code)] // each bench uses a different subset of helpers
+
+use numpywren::lambdapack::interp::Env;
+use numpywren::lambdapack::programs;
+use numpywren::sim::serverless::WorkerPolicy;
+use numpywren::sim::{CostModel, ServerlessSim, SimConfig, SimResult, Workload};
+
+pub fn grid_env(grid: usize) -> Env {
+    [("N".to_string(), grid as i64)].into_iter().collect()
+}
+
+/// Build a workload: algorithm at matrix dim `n`, tile side `block`.
+pub fn workload(algo: &str, n: u64, block: usize) -> Workload {
+    let spec = programs::by_name(algo).expect("algorithm");
+    let grid = (n as usize).div_ceil(block);
+    Workload::build(&spec.program, &grid_env(grid), block).expect("workload")
+}
+
+/// Fixed-pool serverless sim run.
+pub fn sim_fixed(w: &Workload, workers: usize, pipeline: usize) -> SimResult {
+    let mut c = SimConfig::default();
+    c.policy = WorkerPolicy::Fixed(workers);
+    c.pipeline_width = pipeline;
+    ServerlessSim::new(w, CostModel::default(), c).run()
+}
+
+/// Auto-scaled serverless sim run.
+pub fn sim_auto(w: &Workload, sf: f64, max_workers: usize, pipeline: usize) -> SimResult {
+    let mut c = SimConfig::default();
+    c.policy = WorkerPolicy::Auto {
+        sf,
+        max_workers,
+        t_timeout: 10.0,
+    };
+    c.pipeline_width = pipeline;
+    ServerlessSim::new(w, CostModel::default(), c).run()
+}
+
+/// Pretty seconds.
+pub fn s(t: f64) -> String {
+    if t >= 100.0 {
+        format!("{t:.0}")
+    } else {
+        format!("{t:.1}")
+    }
+}
+
+/// Run only when `NUMPYWREN_BENCH_FULL=1` (e.g. the 1M rows).
+pub fn full_scale() -> bool {
+    std::env::var("NUMPYWREN_BENCH_FULL").as_deref() == Ok("1")
+}

@@ -1,0 +1,43 @@
+//! Figure 10a — effect of block size on completion time at two levels
+//! of parallelism (180 and 1800 cores), 256K Cholesky.
+//!
+//! Paper: at 180 cores, bigger blocks win (more compute per task hides
+//! store latency); at 1800 cores the biggest block is slowest (too
+//! little parallelism to fill the fleet); 2048 suffers latency
+//! overheads in both regimes.
+
+mod common;
+
+use common::*;
+
+fn main() {
+    let n: u64 = 262_144; // the paper's size — smaller N starves the 180/1800-core comparison
+    println!("# Figure 10a — block size vs completion time, Cholesky N={n}");
+    println!("{:>8} {:>14} {:>14}", "block", "180 cores (s)", "1800 cores (s)");
+    let model = numpywren::sim::CostModel::default();
+    for block in [2048usize, 4096, 8192, 16384] {
+        if (n as usize) / block < 2 {
+            continue;
+        }
+        let w = workload("cholesky", n, block);
+        if w.max_task_time(&model) > model.runtime_limit {
+            println!(
+                "{:>8} {:>14} {:>14}   # task ({:.0}s) exceeds the {}s runtime limit — infeasible coarseness (§4)",
+                block, "—", "—", w.max_task_time(&model), model.runtime_limit
+            );
+            continue;
+        }
+        // pipeline width 1 — the setting §5.4 uses around this figure.
+        let lo = sim_fixed(&w, 180, 1);
+        let hi = sim_fixed(&w, 1800, 1);
+        println!(
+            "{:>8} {:>14} {:>14}",
+            block,
+            s(lo.completion_time),
+            s(hi.completion_time)
+        );
+    }
+    println!("# paper: 180 cores → bigger is better; 1800 cores → biggest slowest (parallelism-starved);");
+    println!("#        2048 latency/overhead-bound in both. Here 8192@180 is critical-path-bound and");
+    println!("#        16384 is infeasible under the 300s limit (f64 tiles) — see EXPERIMENTS.md.");
+}

@@ -1,0 +1,31 @@
+//! Figure 10c — cost vs completion-time trade-off across the scaling
+//! factor sf.
+//!
+//! Paper: sf ∈ {1/4, 1/3, 1/2, 1} balances cost and time; below the
+//! range the queue is never empty (cheap but slow), above it workers
+//! spawn and find nothing (fast but wasteful).
+
+mod common;
+
+use common::*;
+
+fn main() {
+    let n: u64 = 131_072;
+    let w = workload("cholesky", n, 4096);
+    println!("# Figure 10c — cost/performance across sf, Cholesky N={n}");
+    println!(
+        "{:>7} {:>11} {:>15} {:>13}",
+        "sf", "time (s)", "billed (c·s)", "peak workers"
+    );
+    for sf in [1.0 / 16.0, 1.0 / 8.0, 0.25, 1.0 / 3.0, 0.5, 1.0, 2.0] {
+        let r = sim_auto(&w, sf, 10_000, 1);
+        println!(
+            "{:>7.3} {:>11} {:>15.3e} {:>13}",
+            sf,
+            s(r.completion_time),
+            r.core_secs_billed,
+            r.peak_workers
+        );
+    }
+    println!("# paper: balanced range sf ∈ [1/4, 1]; lower → cheaper+slower, higher → faster+wasteful");
+}

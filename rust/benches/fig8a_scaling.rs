@@ -1,0 +1,49 @@
+//! Figure 8a — Cholesky completion time vs problem size:
+//! numpywren, ScaLAPACK-4K, ScaLAPACK-512, Dask, and the CPU-clock
+//! lower bound.
+//!
+//! Paper: numpywren 10–15% slower than ScaLAPACK-4K, 36% slower than
+//! ScaLAPACK-512 is *faster* than… (sic: numpywren sits between the
+//! two ScaLAPACK block sizes); Dask wins small, then degrades and
+//! fails at 512K/1M.
+
+mod common;
+
+use common::*;
+use numpywren::baselines::{dask_run, machines_to_fit, scalapack_run, Algorithm};
+use numpywren::sim::CostModel;
+
+fn main() {
+    let model = CostModel::default();
+    let mut sizes: Vec<u64> = vec![65_536, 131_072, 262_144];
+    if full_scale() {
+        sizes.push(524_288);
+        sizes.push(1_048_576);
+    }
+    println!("# Figure 8a — Cholesky completion time vs problem size");
+    println!(
+        "{:>9} {:>10} {:>9} {:>11} {:>11} {:>10} {:>10}",
+        "N", "machines", "npw(s)", "Sca-4K(s)", "Sca-512(s)", "Dask(s)", "bound(s)"
+    );
+    for n in sizes {
+        let machines = machines_to_fit(n, model.machine_memory).max(2);
+        let cores = machines * model.machine_cores;
+        let w4k = workload("cholesky", n, 4096);
+        let npw = sim_fixed(&w4k, cores, 3);
+        let sca4k = scalapack_run(Algorithm::Cholesky, n, 4096, machines, &model);
+        let sca512 = scalapack_run(Algorithm::Cholesky, n, 512, machines, &model);
+        let dask = dask_run(&w4k, n, machines, &model);
+        let bound = w4k.lower_bound(cores, &model);
+        println!(
+            "{:>9} {:>10} {:>9} {:>11} {:>11} {:>10} {:>10}",
+            n,
+            machines,
+            s(npw.completion_time),
+            s(sca4k.completion_time),
+            s(sca512.completion_time),
+            dask.completion_time.map(s).unwrap_or_else(|| "FAIL".into()),
+            s(bound)
+        );
+    }
+    println!("# paper: npw within 10-36% of ScaLAPACK; Dask fails at 512K & 1M");
+}

@@ -1,0 +1,48 @@
+//! Figure 8c — weak scaling: Cholesky is O(N³) with O(N²) max
+//! parallelism, so cores grow quadratically (57 → 1800) as N doubles
+//! (65K → 512K); ideal completion time then grows linearly (the
+//! diagonal in the paper's plot).
+
+mod common;
+
+use common::*;
+
+fn main() {
+    println!("# Figure 8c — weak scaling (cores ∝ N²)");
+    println!(
+        "{:>9} {:>7} {:>12} {:>13} {:>11}",
+        "N", "cores", "npw T(s)", "ideal T(s)", "T/ideal"
+    );
+    let base_n: u64 = 65_536;
+    let base_cores = 57usize;
+    let mut rows = vec![(base_n, base_cores)];
+    rows.push((131_072, base_cores * 4)); // 228
+    rows.push((262_144, base_cores * 16)); // 912
+    if full_scale() {
+        rows.push((524_288, 1800));
+    }
+    let model = numpywren::sim::CostModel::default();
+    let mut base_t = None;
+    for (n, cores) in rows {
+        let w = workload("cholesky", n, 4096);
+        let r = sim_fixed(&w, cores, 3);
+        // Ideal: T scales linearly with N at quadratic cores.
+        let ideal = match base_t {
+            None => {
+                base_t = Some(r.completion_time);
+                r.completion_time
+            }
+            Some(t0) => t0 * (n as f64 / base_n as f64),
+        };
+        println!(
+            "{:>9} {:>7} {:>12} {:>13} {:>11.2}",
+            n,
+            cores,
+            s(r.completion_time),
+            s(ideal),
+            r.completion_time / ideal
+        );
+        let _ = w.lower_bound(cores, &model);
+    }
+    println!("# paper: tracks the ideal diagonal closely despite communication overheads");
+}

@@ -1,0 +1,70 @@
+//! §Perf L3 — coordinator overhead per task.
+//!
+//! Runs a Cholesky with tiny tiles (kernel time ≈ µs) so everything
+//! measured is engine overhead: queue round-trip, lease registry,
+//! dependency analysis (children+parents solves), state-store RMW,
+//! store put/get, channel hops. Target: < 1 ms per task of per-worker
+//! overhead (paper tasks are O(seconds); coordinator must not matter).
+//!
+//! Also micro-profiles the two analysis primitives in isolation since
+//! they are the per-task hot path (`propagate` = children + lazy
+//! parents per child).
+
+mod common;
+
+use common::grid_env;
+use numpywren::config::{EngineConfig, ScalingMode};
+use numpywren::drivers;
+use numpywren::engine::Engine;
+use numpywren::lambdapack::analysis::Analyzer;
+use numpywren::lambdapack::interp::enumerate_nodes;
+use numpywren::lambdapack::programs;
+use numpywren::linalg::matrix::Matrix;
+use numpywren::util::prng::Rng;
+use numpywren::util::timer::Stopwatch;
+
+fn main() {
+    // --- analysis microbench (the propagate() hot path) ---
+    let grid = 32;
+    let spec = programs::cholesky_spec();
+    let env = grid_env(grid);
+    let analyzer = Analyzer::new(&spec.program, &env);
+    let mut nodes = Vec::new();
+    enumerate_nodes(&spec.program, &env, &mut |n, _| nodes.push(n.clone())).unwrap();
+    let sw = Stopwatch::start();
+    let mut edges = 0usize;
+    for n in &nodes {
+        edges += analyzer.children(n).unwrap().len();
+    }
+    let per_children = sw.secs() / nodes.len() as f64;
+    let sw = Stopwatch::start();
+    for n in &nodes {
+        let _ = analyzer.parents(n).unwrap();
+    }
+    let per_parents = sw.secs() / nodes.len() as f64;
+    println!("# §Perf L3 — analysis primitives (cholesky grid {grid}, {} nodes, {edges} edges)", nodes.len());
+    println!("children(): {:.1} µs/node", per_children * 1e6);
+    println!("parents():  {:.1} µs/node", per_parents * 1e6);
+
+    // --- end-to-end engine overhead with negligible kernels ---
+    for workers in [1usize, 4, 8] {
+        let mut rng = Rng::new(77);
+        let a = Matrix::rand_spd(4 * grid, &mut rng); // B = 4
+        let mut cfg = EngineConfig::default();
+        cfg.scaling = ScalingMode::Fixed(workers);
+        cfg.sample_period = std::time::Duration::from_millis(50);
+        cfg.job_timeout = std::time::Duration::from_secs(300);
+        let engine = Engine::new(cfg);
+        let sw = Stopwatch::start();
+        let out = drivers::cholesky(&engine, &a, 4).unwrap();
+        let wall = sw.secs();
+        let tasks = out.run.report.total_tasks as f64;
+        println!(
+            "engine overhead: {workers} workers, {tasks} tasks → {:.3}s wall, \
+             {:.0} µs/task/worker ({:.0} tasks/s aggregate)",
+            wall,
+            wall * workers as f64 / tasks * 1e6,
+            tasks / wall
+        );
+    }
+}

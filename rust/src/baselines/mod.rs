@@ -1,0 +1,42 @@
+//! Comparison baselines (§5: ScaLAPACK and Dask).
+//!
+//! Neither Fortran ScaLAPACK nor a Python Dask cluster exists on this
+//! testbed, so each is modelled by the execution structure that gives
+//! it its performance signature (DESIGN.md §1):
+//!
+//! * [`scalapack`] — gang-scheduled BSP: a *static* allocation of P
+//!   machines × c cores for the whole job, per-iteration barriers, and
+//!   machine-level locality (one copy of a broadcast panel serves all
+//!   c cores — the §1 observation that serverless fundamentally loses).
+//! * [`dask`] — a centralized driver that materializes the whole task
+//!   graph, dispatches at a bounded rate, and pays
+//!   serialization/deserialization on every transfer; fails outright
+//!   when the working set exceeds cluster memory (the paper's 512K/1M
+//!   failures).
+
+pub mod dask;
+pub mod scalapack;
+
+pub use dask::{dask_run, DaskResult};
+pub use scalapack::{scalapack_run, Algorithm, BspResult};
+
+/// Minimum machines needed to hold an n×n f64 matrix (with 3× working
+/// space, matching how §5.1 sized the comparison clusters).
+pub fn machines_to_fit(n: u64, machine_memory: f64) -> usize {
+    let bytes = (n as f64) * (n as f64) * 8.0 * 3.0;
+    (bytes / machine_memory).ceil().max(1.0) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn machines_to_fit_grows_quadratically() {
+        let m = 60e9; // c4.8xlarge
+        let m256 = machines_to_fit(256 * 1024, m);
+        let m512 = machines_to_fit(512 * 1024, m);
+        assert!(m512 >= 4 * (m256 - 1), "m256={m256} m512={m512}");
+        assert_eq!(machines_to_fit(1024, m), 1);
+    }
+}

@@ -1,0 +1,421 @@
+//! The `numpywren` command-line launcher.
+//!
+//! ```text
+//! numpywren run      --algo cholesky --n 512 --block 64 --workers 8
+//! numpywren simulate --algo cholesky --n 262144 --block 4096 --workers 180
+//! numpywren analyze  --algo cholesky --grid 32
+//! numpywren program  --algo cholesky --grid 8
+//! ```
+//!
+//! (`clap` is not in the offline crate set; this is a small hand-rolled
+//! flag parser with the same ergonomics.)
+
+use crate::baselines::{dask_run, machines_to_fit, scalapack_run, Algorithm};
+use crate::config::{EngineConfig, ScalingMode};
+use crate::drivers;
+use crate::engine::Engine;
+use crate::kernels::KernelExecutor;
+use crate::lambdapack::dag::Dag;
+use crate::lambdapack::interp::Env;
+use crate::lambdapack::{compiled, programs};
+use crate::linalg::matrix::Matrix;
+use crate::runtime::PjrtKernels;
+use crate::sim::{CostModel, ServerlessSim, SimConfig, Workload};
+use crate::util::prng::Rng;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Parsed flags: `--key value` pairs plus the subcommand.
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let command = argv.first().cloned().unwrap_or_else(|| "help".into());
+        let mut flags = HashMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let key = argv[i]
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got `{}`", argv[i]))?;
+            let val = argv
+                .get(i + 1)
+                .with_context(|| format!("flag --{key} needs a value"))?;
+            flags.insert(key.to_string(), val.clone());
+            i += 2;
+        }
+        Ok(Args { command, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("bad value for --{key}: `{v}`")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).with_context(|| format!("missing --{key}"))
+    }
+}
+
+const HELP: &str = "\
+numpywren — serverless linear algebra (paper reproduction)
+
+USAGE: numpywren <command> [--flag value]...
+
+COMMANDS:
+  run       execute an algorithm on the real engine
+            --algo {cholesky|gemm|tsqr|lu|qr|bdfac} --n DIM --block B
+            [--workers K | --sf F --max-workers K] [--pipeline W]
+            [--artifacts DIR] [--set key=value]...
+  simulate  paper-scale discrete-event simulation
+            --algo NAME --n DIM --block B --workers K [--sf F] [--pipeline W]
+            [--compare-scalapack true] [--compare-dask true]
+  analyze   DAG statistics via the LAmbdaPACK analyzer
+            (--algo NAME | --program FILE.lp) --grid N
+  program   show a program's parsed form + compiled size
+            (--algo NAME | --program FILE.lp) --grid N
+  help      this message
+";
+
+/// Entry point for `main`.
+pub fn run_cli(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "run" => cmd_run(&args),
+        "simulate" => cmd_simulate(&args),
+        "analyze" => cmd_analyze(&args),
+        "program" => cmd_program(&args),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command `{other}`\n{HELP}"),
+    }
+}
+
+fn grid_env(n_grid: usize) -> Env {
+    [("N".to_string(), n_grid as i64)].into_iter().collect()
+}
+
+/// Resolve `--algo NAME` (library) or `--program FILE.lp` (parsed from
+/// LAmbdaPACK surface syntax).
+fn resolve_program(args: &Args) -> Result<crate::lambdapack::ast::Program> {
+    if let Some(path) = args.get("program") {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        return crate::lambdapack::parser::parse(&src)
+            .with_context(|| format!("parsing {path}"));
+    }
+    let algo = args.require("algo")?;
+    Ok(programs::by_name(algo)
+        .with_context(|| format!("unknown algo {algo}"))?
+        .program)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let algo = args.require("algo")?.to_string();
+    let n: usize = args.num("n", 256)?;
+    let block: usize = args.num("block", 64)?;
+    let mut cfg = EngineConfig::default();
+    if let Some(sf) = args.get("sf") {
+        cfg.scaling = ScalingMode::Auto {
+            sf: sf.parse()?,
+            max_workers: args.num("max-workers", 64)?,
+        };
+    } else {
+        cfg.scaling = ScalingMode::Fixed(args.num("workers", 4)?);
+    }
+    cfg.pipeline_width = args.num("pipeline", 1)?;
+    if let Some(extra) = args.get("set") {
+        for kv in extra.split(',') {
+            let (k, v) = kv.split_once('=').context("--set key=value[,k=v]")?;
+            cfg.set(k, v)?;
+        }
+    }
+    let kernels: Option<Arc<dyn KernelExecutor>> = match args.get("artifacts") {
+        Some(dir) => Some(Arc::new(PjrtKernels::new(std::path::Path::new(dir), 2)?)),
+        None => None,
+    };
+    let engine = match kernels {
+        Some(k) => Engine::with_kernels(cfg, k),
+        None => Engine::new(cfg),
+    };
+    let mut rng = Rng::new(args.num("seed", 42u64)?);
+
+    let report = match algo.as_str() {
+        "cholesky" => {
+            let a = Matrix::rand_spd(n, &mut rng);
+            let out = drivers::cholesky(&engine, &a, block)?;
+            let err = out.result.matmul_nt(&out.result).max_abs_diff(&a) / a.fro_norm();
+            println!("‖LLᵀ−A‖∞/‖A‖F = {err:.2e}");
+            out.run.report
+        }
+        "gemm" => {
+            let a = Matrix::randn(n, n, &mut rng);
+            let b = Matrix::randn(n, n, &mut rng);
+            let out = drivers::gemm(&engine, &a, &b, block)?;
+            let err = out.result.max_abs_diff(&a.matmul(&b)) / a.fro_norm();
+            println!("‖C−AB‖∞/‖A‖F = {err:.2e}");
+            out.run.report
+        }
+        "tsqr" => {
+            let cols = block.min(n / 4).max(1);
+            let a = Matrix::randn(n, cols, &mut rng);
+            let out = drivers::tsqr(&engine, &a, block)?;
+            let r = &out.result;
+            let err = r.matmul_tn(r).max_abs_diff(&a.matmul_tn(&a)) / a.fro_norm();
+            println!("‖RᵀR−AᵀA‖∞/‖A‖F = {err:.2e}");
+            out.run.report
+        }
+        "lu" => {
+            let mut a = Matrix::randn(n, n, &mut rng);
+            for i in 0..n {
+                a[(i, i)] += 2.0 * n as f64;
+            }
+            let (l, u, run) = drivers::lu(&engine, &a, block)?;
+            let err = l.matmul(&u).max_abs_diff(&a) / a.fro_norm();
+            println!("‖LU−A‖∞/‖A‖F = {err:.2e}");
+            run.report
+        }
+        "qr" => {
+            let a = Matrix::randn(n, n, &mut rng);
+            let out = drivers::qr(&engine, &a, block)?;
+            let r = &out.result;
+            let err = r.matmul_tn(r).max_abs_diff(&a.matmul_tn(&a)) / a.fro_norm();
+            println!("‖RᵀR−AᵀA‖∞/‖A‖F = {err:.2e}");
+            out.run.report
+        }
+        "bdfac" => {
+            let a = Matrix::randn(n, n, &mut rng);
+            let out = drivers::bdfac(&engine, &a, block)?;
+            let err = (out.result.fro_norm() - a.fro_norm()).abs() / a.fro_norm();
+            println!("|‖B‖F−‖A‖F|/‖A‖F = {err:.2e}");
+            out.run.report
+        }
+        other => bail!("unknown algorithm `{other}` (see `numpywren help`)"),
+    };
+    println!(
+        "tasks={}/{} wall={:.3}s active-core-secs={:.3} billed={:.3} flops={:.3e} \
+         read={}B written={}B workers={}",
+        report.completed,
+        report.total_tasks,
+        report.wall_secs,
+        report.core_secs_active,
+        report.core_secs_billed,
+        report.total_flops as f64,
+        report.store.bytes_read,
+        report.store.bytes_written,
+        report.workers_spawned,
+    );
+    if let Some(e) = report.error {
+        bail!("job error: {e}");
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let algo = args.require("algo")?.to_string();
+    let n: u64 = args.num("n", 262_144u64)?;
+    let block: usize = args.num("block", 4096)?;
+    let workers: usize = args.num("workers", 180)?;
+    let spec = programs::by_name(&algo).with_context(|| format!("unknown algo {algo}"))?;
+    let grid = (n as usize).div_ceil(block);
+    let w = Workload::build(&spec.program, &grid_env(grid), block)?;
+    let model = CostModel::default();
+    let mut sc = SimConfig::default();
+    sc.pipeline_width = args.num("pipeline", 1)?;
+    sc.policy = match args.get("sf") {
+        Some(sf) => crate::sim::serverless::WorkerPolicy::Auto {
+            sf: sf.parse()?,
+            max_workers: workers,
+            t_timeout: 10.0,
+        },
+        None => crate::sim::serverless::WorkerPolicy::Fixed(workers),
+    };
+    let r = ServerlessSim::new(&w, model, sc).run();
+    println!(
+        "numpywren(sim): {} tasks={} T={:.0}s busy-core-secs={:.3e} billed={:.3e} \
+         read={:.3e}B peak-workers={}",
+        w.name,
+        r.tasks_done,
+        r.completion_time,
+        r.core_secs_busy,
+        r.core_secs_billed,
+        r.bytes_read,
+        r.peak_workers
+    );
+    println!(
+        "lower bound ({} cores): {:.0}s",
+        workers,
+        w.lower_bound(workers, &model)
+    );
+    if args.get("compare-scalapack").is_some() {
+        let alg = match algo.as_str() {
+            "cholesky" => Algorithm::Cholesky,
+            "gemm" => Algorithm::Gemm,
+            "qr" => Algorithm::Qr,
+            "bdfac" => Algorithm::Svd,
+            "lu" => Algorithm::Lu,
+            _ => bail!("no ScaLAPACK analogue for {algo}"),
+        };
+        let machines = machines_to_fit(n, model.machine_memory);
+        let b = scalapack_run(alg, n, block, machines, &model);
+        println!(
+            "ScaLAPACK(model): T={:.0}s core-secs={:.3e} bytes/machine={:.3e} \
+             ({} machines × {} cores)",
+            b.completion_time,
+            b.core_secs,
+            b.bytes_per_machine,
+            b.machines,
+            model.machine_cores
+        );
+    }
+    if args.get("compare-dask").is_some() {
+        let machines = machines_to_fit(n, model.machine_memory);
+        let d = dask_run(&w, n, machines, &model);
+        match d.completion_time {
+            Some(t) => println!(
+                "Dask(model): T={t:.0}s core-secs={:.3e} ({machines} machines)",
+                d.core_secs
+            ),
+            None => println!("Dask(model): FAILS (out of memory on {machines} machines)"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let grid: usize = args.num("grid", 16)?;
+    let program = resolve_program(args)?;
+    let sw = crate::util::timer::Stopwatch::start();
+    let dag = Dag::expand(&program, &grid_env(grid))?;
+    let expand_secs = sw.secs();
+    println!("program: {} (grid N={grid})", program.name);
+    println!(
+        "nodes={} edges={} critical-path={} roots={}",
+        dag.num_nodes(),
+        dag.num_edges(),
+        dag.critical_path_len(),
+        dag.roots().len()
+    );
+    println!(
+        "full-DAG expansion: {:.3}s, ~{:.1} MB resident",
+        expand_secs,
+        dag.memory_bytes() as f64 / 1e6
+    );
+    let profile = dag.parallelism_profile();
+    let peak = profile.iter().copied().max().unwrap_or(0);
+    println!("parallelism profile (peak {peak} tasks):");
+    let step = (profile.len() / 20).max(1);
+    for (i, w) in profile.iter().enumerate().step_by(step) {
+        let bar = "#".repeat((w * 60 / peak.max(1)).max(1));
+        println!("  level {i:>4}: {w:>8} {bar}");
+    }
+    Ok(())
+}
+
+fn cmd_program(args: &Args) -> Result<()> {
+    let grid: usize = args.num("grid", 16)?;
+    let program = resolve_program(args)?;
+    println!("{program:#?}");
+    let bytes = compiled::encode(&program, &grid_env(grid));
+    println!(
+        "compiled program: {} bytes (constant in N — Table 3)",
+        bytes.len()
+    );
+    if let Some(spec) = args.get("algo").and_then(programs::by_name) {
+        for out in &spec.outputs {
+            println!("output: {} — {}", out.matrix, out.convention);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+
+    #[test]
+    fn parse_flags() {
+        let a = Args::parse(&argv("run --algo cholesky --n 128")).unwrap();
+        assert_eq!(a.command, "run");
+        assert_eq!(a.get("algo"), Some("cholesky"));
+        assert_eq!(a.num("n", 0usize).unwrap(), 128);
+        assert_eq!(a.num("block", 64usize).unwrap(), 64);
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Args::parse(&argv("run --algo")).is_err());
+        assert!(Args::parse(&argv("run algo chol")).is_err());
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert!(run_cli(&argv("frobnicate")).is_err());
+    }
+
+    #[test]
+    fn help_runs() {
+        run_cli(&argv("help")).unwrap();
+    }
+
+    #[test]
+    fn analyze_runs() {
+        run_cli(&argv("analyze --algo cholesky --grid 8")).unwrap();
+    }
+
+    #[test]
+    fn program_runs() {
+        run_cli(&argv("program --algo tsqr --grid 8")).unwrap();
+    }
+
+    #[test]
+    fn analyze_from_lp_file() {
+        let dir = std::env::temp_dir().join(format!("npw_lp_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("chol.lp");
+        std::fs::write(&path, crate::lambdapack::parser::CHOLESKY_SRC).unwrap();
+        run_cli(&argv(&format!(
+            "analyze --program {} --grid 6",
+            path.display()
+        )))
+        .unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bad_lp_file_reports_error() {
+        assert!(run_cli(&argv("analyze --program /nonexistent.lp --grid 4")).is_err());
+    }
+
+    #[test]
+    fn tiny_run_executes() {
+        run_cli(&argv("run --algo cholesky --n 32 --block 8 --workers 2")).unwrap();
+    }
+
+    #[test]
+    fn tiny_simulate_executes() {
+        run_cli(&argv(
+            "simulate --algo cholesky --n 8192 --block 1024 --workers 16 \
+             --compare-scalapack true --compare-dask true",
+        ))
+        .unwrap();
+    }
+}

@@ -1,0 +1,190 @@
+//! Typed configuration for the engine, substrate, and autoscaler, with
+//! `key=value` overrides (config files and CLI flags share the same
+//! parser — the launcher's config system).
+
+use anyhow::{bail, Context, Result};
+use std::time::Duration;
+
+/// How the worker pool is managed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScalingMode {
+    /// A fixed pool of `n` workers for the whole job (the "emulated
+    /// Lambda on EC2" setup of §5.1).
+    Fixed(usize),
+    /// The §4.2 auto-scaling policy: scale up to `sf × pending /
+    /// pipeline_width`, scale down by idle expiry.
+    Auto {
+        /// Scaling factor `sf`.
+        sf: f64,
+        /// Max concurrent workers (the provider's concurrency limit).
+        max_workers: usize,
+    },
+}
+
+/// Failure injection (Figure 9b): at `at` seconds into the job, kill
+/// `fraction` of the currently-running workers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailureSpec {
+    pub at: Duration,
+    pub fraction: f64,
+}
+
+/// Everything the engine needs to run a job.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Worker-pool management.
+    pub scaling: ScalingMode,
+    /// §4.2 pipeline width (tasks in flight per worker).
+    pub pipeline_width: usize,
+    /// SQS visibility timeout (paper: ~10 s; scaled down for tests).
+    pub lease: Duration,
+    /// Lambda runtime limit (paper: 300 s). Workers self-terminate.
+    pub runtime_limit: Duration,
+    /// Provisioner idle scale-down timeout `T_timeout`.
+    pub idle_timeout: Duration,
+    /// Injected object-store per-op latency (S3 ~10 ms at scale).
+    pub store_latency: Duration,
+    /// Worker cold-start latency.
+    pub cold_start: Duration,
+    /// Provisioner control period.
+    pub provision_period: Duration,
+    /// Optional failure injection.
+    pub failure: Option<FailureSpec>,
+    /// Metrics sampling period (0 = disabled).
+    pub sample_period: Duration,
+    /// Hard wall-clock cap on the whole job (deadlock safety net).
+    pub job_timeout: Duration,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            scaling: ScalingMode::Fixed(4),
+            pipeline_width: 1,
+            lease: Duration::from_millis(500),
+            runtime_limit: Duration::from_secs(300),
+            idle_timeout: Duration::from_millis(200),
+            store_latency: Duration::ZERO,
+            cold_start: Duration::ZERO,
+            provision_period: Duration::from_millis(50),
+            failure: None,
+            sample_period: Duration::from_millis(20),
+            job_timeout: Duration::from_secs(600),
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Apply a `key=value` override. Durations are given in
+    /// (fractional) seconds; `scaling` is `fixed:N` or `auto:SF:MAX`.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let secs = |v: &str| -> Result<Duration> {
+            Ok(Duration::from_secs_f64(
+                v.parse::<f64>().with_context(|| format!("bad duration `{v}`"))?,
+            ))
+        };
+        match key {
+            "scaling" => {
+                let parts: Vec<&str> = value.split(':').collect();
+                self.scaling = match parts.as_slice() {
+                    ["fixed", n] => ScalingMode::Fixed(n.parse()?),
+                    ["auto", sf, max] => ScalingMode::Auto {
+                        sf: sf.parse()?,
+                        max_workers: max.parse()?,
+                    },
+                    _ => bail!("bad scaling spec `{value}` (fixed:N | auto:SF:MAX)"),
+                };
+            }
+            "pipeline_width" => self.pipeline_width = value.parse()?,
+            "lease" => self.lease = secs(value)?,
+            "runtime_limit" => self.runtime_limit = secs(value)?,
+            "idle_timeout" => self.idle_timeout = secs(value)?,
+            "store_latency" => self.store_latency = secs(value)?,
+            "cold_start" => self.cold_start = secs(value)?,
+            "provision_period" => self.provision_period = secs(value)?,
+            "sample_period" => self.sample_period = secs(value)?,
+            "job_timeout" => self.job_timeout = secs(value)?,
+            "failure" => {
+                let (at, frac) = value
+                    .split_once(':')
+                    .context("failure spec is AT_SECS:FRACTION")?;
+                self.failure = Some(FailureSpec {
+                    at: secs(at)?,
+                    fraction: frac.parse()?,
+                });
+            }
+            other => bail!("unknown config key `{other}`"),
+        }
+        Ok(())
+    }
+
+    /// Parse a whole config source: one `key = value` per line,
+    /// `#` comments.
+    pub fn apply_source(&mut self, src: &str) -> Result<()> {
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key=value", lineno + 1))?;
+            self.set(k.trim(), v.trim())
+                .with_context(|| format!("line {}", lineno + 1))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overrides_parse() {
+        let mut c = EngineConfig::default();
+        c.set("scaling", "auto:0.5:128").unwrap();
+        assert_eq!(
+            c.scaling,
+            ScalingMode::Auto {
+                sf: 0.5,
+                max_workers: 128
+            }
+        );
+        c.set("pipeline_width", "3").unwrap();
+        assert_eq!(c.pipeline_width, 3);
+        c.set("lease", "0.25").unwrap();
+        assert_eq!(c.lease, Duration::from_millis(250));
+        c.set("failure", "1.5:0.8").unwrap();
+        assert_eq!(
+            c.failure,
+            Some(FailureSpec {
+                at: Duration::from_millis(1500),
+                fraction: 0.8
+            })
+        );
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(EngineConfig::default().set("nope", "1").is_err());
+    }
+
+    #[test]
+    fn source_with_comments() {
+        let mut c = EngineConfig::default();
+        c.apply_source(
+            "# test config\nscaling = fixed:8\n\npipeline_width = 2 # pipelined\n",
+        )
+        .unwrap();
+        assert_eq!(c.scaling, ScalingMode::Fixed(8));
+        assert_eq!(c.pipeline_width, 2);
+    }
+
+    #[test]
+    fn bad_source_line_reports_position() {
+        let mut c = EngineConfig::default();
+        let err = c.apply_source("scaling = fixed:8\nbogus\n").unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"));
+    }
+}

@@ -1,0 +1,381 @@
+//! High-level algorithm drivers — the `numpywren`-as-a-library API.
+//!
+//! Each driver takes a dense matrix (or pair), blocks it, seeds the
+//! program's input tiles, runs the engine, and reassembles the dense
+//! result. This is the interface the examples and the end-to-end tests
+//! use; everything below it (engine, analyzer, substrate) is generic.
+
+use crate::engine::{Engine, RunOutput};
+use crate::lambdapack::analysis::Loc;
+use crate::lambdapack::interp::Env;
+use crate::lambdapack::programs;
+use crate::linalg::blocked::BlockedMatrix;
+use crate::linalg::matrix::Matrix;
+use anyhow::{bail, Result};
+
+fn grid_args(n_grid: usize) -> Env {
+    [("N".to_string(), n_grid as i64)].into_iter().collect()
+}
+
+/// Result of a driver run: dense output(s) + the engine report.
+pub struct DriverOutput {
+    pub result: Matrix,
+    pub run: RunOutput,
+}
+
+/// Blocked Cholesky: A (SPD) = L·Lᵀ. Returns dense L.
+pub fn cholesky(engine: &Engine, a: &Matrix, block: usize) -> Result<DriverOutput> {
+    if a.rows() != a.cols() {
+        bail!("cholesky: matrix must be square");
+    }
+    let blocked = BlockedMatrix::from_dense(a, block);
+    let n = blocked.grid_rows();
+    // Seed S[0, j, k] for the lower triangle (k ≤ j).
+    let mut inputs = Vec::new();
+    for j in 0..n {
+        for k in 0..=j {
+            inputs.push((
+                Loc::new("S", vec![0, j as i64, k as i64]),
+                blocked.tile(j, k).clone(),
+            ));
+        }
+    }
+    let spec = programs::cholesky_spec();
+    let run = engine.run(&spec.program, &grid_args(n), inputs)?;
+    if let Some(e) = &run.report.error {
+        bail!("cholesky failed: {e}");
+    }
+    // Collect L from O[j, i], j ≥ i.
+    let mut out = BlockedMatrix::zeros(a.rows(), a.cols(), block);
+    for j in 0..n {
+        for i in 0..=j {
+            let tile = run.tile("O", &[j as i64, i as i64])?;
+            out.set_tile(j, i, (*tile).clone());
+        }
+    }
+    let mut result = out.to_dense().tril();
+    // Padded diagonal tiles factor the identity padding — the valid
+    // region is untouched, but clear any padding leakage (none expected
+    // for exact-multiple sizes).
+    if a.rows() % block != 0 {
+        result = result.window(0, 0, a.rows(), a.cols());
+    }
+    Ok(DriverOutput { result, run })
+}
+
+/// Tiled GEMM: C = A·B (square, same size).
+pub fn gemm(engine: &Engine, a: &Matrix, b: &Matrix, block: usize) -> Result<DriverOutput> {
+    if a.cols() != b.rows() || a.rows() != a.cols() || b.rows() != b.cols() {
+        bail!("gemm driver: square same-size matrices required");
+    }
+    let ba = BlockedMatrix::from_dense(a, block);
+    let bb = BlockedMatrix::from_dense(b, block);
+    let n = ba.grid_rows();
+    let mut inputs = Vec::new();
+    for i in 0..n {
+        for k in 0..n {
+            // Mask the unit padding from_dense puts on diagonal tiles —
+            // GEMM must multiply with true zeros in the fringe.
+            inputs.push((
+                Loc::new("A", vec![i as i64, k as i64]),
+                masked_tile(&ba, i, k),
+            ));
+            inputs.push((
+                Loc::new("B", vec![i as i64, k as i64]),
+                masked_tile(&bb, i, k),
+            ));
+        }
+    }
+    let spec = programs::gemm_spec();
+    let run = engine.run(&spec.program, &grid_args(n), inputs)?;
+    if let Some(e) = &run.report.error {
+        bail!("gemm failed: {e}");
+    }
+    let mut out = BlockedMatrix::zeros(a.rows(), b.cols(), block);
+    for i in 0..n {
+        for j in 0..n {
+            let tile = run.tile("Ctmp", &[i as i64, j as i64, n as i64 - 1])?;
+            out.set_tile(i, j, (*tile).clone());
+        }
+    }
+    Ok(DriverOutput {
+        result: out.to_dense(),
+        run,
+    })
+}
+
+/// Zero out the padding region of a tile (including the unit diagonal
+/// `from_dense` adds to keep factorizations well-posed).
+fn masked_tile(bm: &BlockedMatrix, bi: usize, bj: usize) -> Matrix {
+    let b = bm.layout.block;
+    let (h, w) = bm.layout.tile_extent(bi, bj);
+    if (h, w) == (b, b) {
+        return bm.tile(bi, bj).clone();
+    }
+    let mut t = Matrix::zeros(b, b);
+    t.set_window(0, 0, &bm.tile(bi, bj).window(0, 0, h, w));
+    t
+}
+
+/// TSQR: R factor of a tall matrix (rows split into B-row blocks).
+/// Returns the final R (width = a.cols()).
+pub fn tsqr(engine: &Engine, a: &Matrix, block_rows: usize) -> Result<DriverOutput> {
+    if a.rows() < a.cols() {
+        bail!("tsqr: matrix must be tall");
+    }
+    if block_rows < a.cols() {
+        bail!("tsqr: block_rows must be >= matrix width");
+    }
+    let n = a.rows().div_ceil(block_rows);
+    let mut inputs = Vec::new();
+    for i in 0..n {
+        let h = (a.rows() - i * block_rows).min(block_rows);
+        let mut tile = Matrix::zeros(block_rows, a.cols());
+        tile.set_window(0, 0, &a.window(i * block_rows, 0, h, a.cols()));
+        inputs.push((Loc::new("A", vec![i as i64]), tile));
+    }
+    let spec = programs::tsqr_spec();
+    let run = engine.run(&spec.program, &grid_args(n), inputs)?;
+    if let Some(e) = &run.report.error {
+        bail!("tsqr failed: {e}");
+    }
+    let levels = (n as f64).log2().ceil() as i64;
+    let tile = run.tile("R", &[0, levels.max(0)])?;
+    Ok(DriverOutput {
+        result: (*tile).clone(),
+        run,
+    })
+}
+
+/// Block LU (no pivoting; matrix should be diagonally dominant).
+/// Returns (L, U) dense.
+pub fn lu(engine: &Engine, a: &Matrix, block: usize) -> Result<(Matrix, Matrix, RunOutput)> {
+    if a.rows() != a.cols() {
+        bail!("lu: square matrix required");
+    }
+    let blocked = BlockedMatrix::from_dense(a, block);
+    let n = blocked.grid_rows();
+    let mut inputs = Vec::new();
+    for j in 0..n {
+        for k in 0..n {
+            inputs.push((
+                Loc::new("S", vec![0, j as i64, k as i64]),
+                blocked.tile(j, k).clone(),
+            ));
+        }
+    }
+    let spec = programs::lu_spec();
+    let run = engine.run(&spec.program, &grid_args(n), inputs)?;
+    if let Some(e) = &run.report.error {
+        bail!("lu failed: {e}");
+    }
+    let mut lo = BlockedMatrix::zeros(a.rows(), a.cols(), block);
+    let mut uo = BlockedMatrix::zeros(a.rows(), a.cols(), block);
+    for i in 0..n {
+        for j in 0..n {
+            if j <= i {
+                lo.set_tile(i, j, (*run.tile("L", &[i as i64, j as i64])?).clone());
+            }
+            if j >= i {
+                uo.set_tile(i, j, (*run.tile("U", &[i as i64, j as i64])?).clone());
+            }
+        }
+    }
+    Ok((lo.to_dense(), uo.to_dense(), run))
+}
+
+/// Blocked QR via flat-tree CAQR. Returns dense R (upper triangular).
+pub fn qr(engine: &Engine, a: &Matrix, block: usize) -> Result<DriverOutput> {
+    if a.rows() != a.cols() {
+        bail!("qr driver: square matrix required");
+    }
+    let blocked = BlockedMatrix::from_dense(a, block);
+    let n = blocked.grid_rows();
+    let mut inputs = Vec::new();
+    for j in 0..n {
+        for k in 0..n {
+            inputs.push((
+                Loc::new("S", vec![0, j as i64, k as i64]),
+                masked_tile(&blocked, j, k),
+            ));
+        }
+    }
+    let spec = programs::qr_spec();
+    let run = engine.run(&spec.program, &grid_args(n), inputs)?;
+    if let Some(e) = &run.report.error {
+        bail!("qr failed: {e}");
+    }
+    // R tile (i,i) = Rc[i, N-1] (or Rc[i,i] for the last panel);
+    // R tile (i,k), k > i = T[i, N-1, k] (or T[i,i,k] when the apply
+    // chain was empty, i.e. i = N-1 — impossible since k > i ≤ N-1).
+    let mut out = BlockedMatrix::zeros(a.rows(), a.cols(), block);
+    let last = n as i64 - 1;
+    for i in 0..n {
+        let ii = i as i64;
+        let diag = if ii == last {
+            run.tile("Rc", &[ii, ii])?
+        } else {
+            run.tile("Rc", &[ii, last])?
+        };
+        out.set_tile(i, i, (*diag).clone());
+        for k in (i + 1)..n {
+            let t = run.tile("T", &[ii, last, k as i64])?;
+            out.set_tile(i, k, (*t).clone());
+        }
+    }
+    Ok(DriverOutput {
+        result: out.to_dense().triu(),
+        run,
+    })
+}
+
+/// BDFAC: two-sided reduction of A to block bidiagonal (banded) form —
+/// the parallel phase of the paper's SVD. Returns the banded matrix
+/// assembled dense (diagonal blocks upper-triangular, superdiagonal
+/// blocks present, everything else ~0).
+pub fn bdfac(engine: &Engine, a: &Matrix, block: usize) -> Result<DriverOutput> {
+    if a.rows() != a.cols() {
+        bail!("bdfac: square matrix required");
+    }
+    let blocked = BlockedMatrix::from_dense(a, block);
+    let n = blocked.grid_rows();
+    let mut inputs = Vec::new();
+    for j in 0..n {
+        for k in 0..n {
+            inputs.push((
+                Loc::new("S", vec![0, j as i64, k as i64]),
+                masked_tile(&blocked, j, k),
+            ));
+        }
+    }
+    let spec = programs::bdfac_spec();
+    let run = engine.run(&spec.program, &grid_args(n), inputs)?;
+    if let Some(e) = &run.report.error {
+        bail!("bdfac failed: {e}");
+    }
+    let mut out = BlockedMatrix::zeros(a.rows(), a.cols(), block);
+    let last = n as i64 - 1;
+    for i in 0..n {
+        let ii = i as i64;
+        // Diagonal: final Rc of the QR chain at iteration i.
+        let diag = if ii == last {
+            run.tile("Rc", &[ii, ii])?
+        } else {
+            run.tile("Rc", &[ii, last])?
+        };
+        out.set_tile(i, i, (*diag).clone());
+        // Superdiagonal: final Lc of the LQ chain (k index runs i+1..N;
+        // the last chain value sits at Lc[i, N-1], or Lc[i, i+1] when
+        // the chain had a single element).
+        if i + 1 < n {
+            let sup = run.tile("Lc", &[ii, last.max(ii + 1)])?;
+            out.set_tile(i, i + 1, (*sup).clone());
+        }
+    }
+    Ok(DriverOutput {
+        result: out.to_dense(),
+        run,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::util::prng::Rng;
+
+    fn engine(workers: usize) -> Engine {
+        let mut cfg = EngineConfig::default();
+        cfg.scaling = crate::config::ScalingMode::Fixed(workers);
+        Engine::new(cfg)
+    }
+
+    #[test]
+    fn cholesky_end_to_end() {
+        let mut rng = Rng::new(40);
+        let a = Matrix::rand_spd(24, &mut rng);
+        let out = cholesky(&engine(4), &a, 8).unwrap();
+        let l = &out.result;
+        assert!(l.matmul_nt(l).max_abs_diff(&a) < 1e-8, "LLᵀ ≠ A");
+        assert_eq!(out.run.report.completed, out.run.report.total_tasks);
+    }
+
+    #[test]
+    fn cholesky_ragged_size() {
+        let mut rng = Rng::new(41);
+        let a = Matrix::rand_spd(21, &mut rng); // 21 = 3·8 - 3 → padding
+        let out = cholesky(&engine(3), &a, 8).unwrap();
+        let l = &out.result;
+        assert!(l.matmul_nt(l).max_abs_diff(&a) < 1e-8);
+    }
+
+    #[test]
+    fn gemm_end_to_end() {
+        let mut rng = Rng::new(42);
+        let a = Matrix::randn(18, 18, &mut rng);
+        let b = Matrix::randn(18, 18, &mut rng);
+        let out = gemm(&engine(4), &a, &b, 6).unwrap();
+        assert!(out.result.max_abs_diff(&a.matmul(&b)) < 1e-9);
+    }
+
+    #[test]
+    fn tsqr_end_to_end() {
+        let mut rng = Rng::new(43);
+        let a = Matrix::randn(40, 5, &mut rng);
+        let out = tsqr(&engine(4), &a, 5).unwrap();
+        let r = &out.result;
+        // RᵀR = AᵀA (Gram identity — R unique up to row signs).
+        assert!(r.matmul_tn(r).max_abs_diff(&a.matmul_tn(&a)) < 1e-8);
+    }
+
+    #[test]
+    fn tsqr_non_power_of_two_blocks() {
+        let mut rng = Rng::new(44);
+        let a = Matrix::randn(30, 4, &mut rng); // 30/6 = 5 blocks
+        let out = tsqr(&engine(3), &a, 6).unwrap();
+        let r = &out.result;
+        assert!(r.matmul_tn(r).max_abs_diff(&a.matmul_tn(&a)) < 1e-8);
+    }
+
+    #[test]
+    fn lu_end_to_end() {
+        let mut rng = Rng::new(45);
+        let mut a = Matrix::randn(20, 20, &mut rng);
+        for i in 0..20 {
+            a[(i, i)] += 30.0; // diagonally dominant
+        }
+        let (l, u, run) = lu(&engine(4), &a, 5).unwrap();
+        assert!(l.matmul(&u).max_abs_diff(&a) < 1e-8);
+        assert_eq!(run.report.completed, run.report.total_tasks);
+    }
+
+    #[test]
+    fn qr_end_to_end() {
+        let mut rng = Rng::new(46);
+        let a = Matrix::randn(18, 18, &mut rng);
+        let out = qr(&engine(4), &a, 6).unwrap();
+        let r = &out.result;
+        // Gram identity: RᵀR = AᵀA.
+        assert!(
+            r.matmul_tn(r).max_abs_diff(&a.matmul_tn(&a)) < 1e-8,
+            "RᵀR ≠ AᵀA (max diff {})",
+            r.matmul_tn(r).max_abs_diff(&a.matmul_tn(&a))
+        );
+        assert!(r.max_abs_diff(&r.triu()) < 1e-12, "R not upper triangular");
+    }
+
+    #[test]
+    fn bdfac_end_to_end() {
+        let mut rng = Rng::new(47);
+        let a = Matrix::randn(12, 12, &mut rng);
+        let out = bdfac(&engine(4), &a, 4).unwrap();
+        let band = &out.result;
+        // Orthogonal invariance: ‖banded‖_F = ‖A‖_F.
+        assert!(
+            (band.fro_norm() - a.fro_norm()).abs() / a.fro_norm() < 1e-9,
+            "Frobenius norm not preserved: {} vs {}",
+            band.fro_norm(),
+            a.fro_norm()
+        );
+    }
+}

@@ -1,0 +1,297 @@
+//! The execution engine — Figure 6 wired together.
+//!
+//! `Engine::run` takes a LAmbdaPACK program, its arguments, and the
+//! seeded input tiles, stands up the substrate (object store, task
+//! queue, state store), enqueues the root tasks, manages the worker
+//! pool (fixed or auto-scaled), injects failures if asked, samples
+//! metrics, and waits for completion. Workers do all scheduling
+//! themselves (decentralized, §4); the engine only watches the
+//! completed-task counter.
+
+use crate::config::{EngineConfig, ScalingMode};
+use crate::executor::worker::ExitReason;
+use crate::executor::{JobContext, KillSwitch};
+use crate::kernels::{KernelExecutor, NativeKernels};
+use crate::lambdapack::analysis::{Analyzer, Loc};
+use crate::lambdapack::ast::Program;
+use crate::lambdapack::interp::{count_nodes, Env};
+use crate::linalg::matrix::Matrix;
+use crate::metrics::{MetricsHub, Sample, TaskRecord};
+use crate::provisioner::{run_provisioner, WorkerPool};
+use crate::storage::{ObjectStore, StateStore, StoreStats, TaskQueue};
+use crate::util::prng::Rng;
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Client attribution id for seeded inputs (not a worker).
+pub const CLIENT_ID: usize = usize::MAX;
+
+pub use crate::config::EngineConfig as Config;
+
+/// Everything a finished run reports.
+#[derive(Clone, Debug)]
+pub struct EngineReport {
+    pub wall_secs: f64,
+    pub total_tasks: u64,
+    pub completed: u64,
+    /// ∫ min(running, live workers) dt — "how many cores were actively
+    /// working on tasks at any given point in time" (Table 2).
+    pub core_secs_active: f64,
+    /// Total worker lifetime (billed Lambda seconds).
+    pub core_secs_billed: f64,
+    pub total_flops: u64,
+    pub store: StoreStats,
+    pub samples: Vec<Sample>,
+    pub tasks: Vec<TaskRecord>,
+    pub workers_spawned: usize,
+    pub exits_idle: usize,
+    pub exits_killed: usize,
+    pub error: Option<String>,
+}
+
+impl EngineReport {
+    /// Mean flop rate over the whole job.
+    pub fn avg_flop_rate(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.total_flops as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A finished run: the report plus the store holding output tiles.
+pub struct RunOutput {
+    pub report: EngineReport,
+    pub store: ObjectStore,
+}
+
+impl RunOutput {
+    /// Fetch an output tile by location.
+    pub fn tile(&self, matrix: &str, idx: &[i64]) -> Result<Arc<Matrix>> {
+        let loc = Loc::new(matrix, idx.to_vec());
+        self.store
+            .get(CLIENT_ID, &loc.key())
+            .with_context(|| format!("output tile {loc} missing"))
+    }
+}
+
+/// The engine: configuration + kernel backend.
+pub struct Engine {
+    cfg: EngineConfig,
+    kernels: Arc<dyn KernelExecutor>,
+}
+
+impl Engine {
+    /// Engine with the native f64 kernel backend.
+    pub fn new(cfg: EngineConfig) -> Self {
+        Engine {
+            cfg,
+            kernels: Arc::new(NativeKernels),
+        }
+    }
+
+    /// Engine with a custom kernel backend (e.g. the PJRT runtime).
+    pub fn with_kernels(cfg: EngineConfig, kernels: Arc<dyn KernelExecutor>) -> Self {
+        Engine { cfg, kernels }
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Run `program(args)` over `inputs` to completion.
+    pub fn run(
+        &self,
+        program: &Program,
+        args: &Env,
+        inputs: Vec<(Loc, Matrix)>,
+    ) -> Result<RunOutput> {
+        let analyzer = Arc::new(Analyzer::new(program, args));
+        let total = count_nodes(program, args)? as u64;
+        if total == 0 {
+            bail!("program `{}` has an empty iteration space", program.name);
+        }
+        let store = ObjectStore::with_latency(self.cfg.store_latency);
+        let queue = TaskQueue::new(self.cfg.lease);
+        let state = StateStore::new();
+        let metrics = MetricsHub::new();
+
+        // Client: seed input tiles, then enqueue the root tasks.
+        for (loc, tile) in inputs {
+            store.put(CLIENT_ID, &loc.key(), tile)?;
+        }
+        let roots = analyzer.roots()?;
+        if roots.is_empty() {
+            bail!("program has no root tasks");
+        }
+        for root in &roots {
+            state.init_counter(&crate::executor::deps_key(root), 0);
+            queue.send(&root.id(), crate::executor::priority(root));
+        }
+
+        let ctx = Arc::new(JobContext {
+            queue: queue.clone(),
+            store: store.clone(),
+            state: state.clone(),
+            analyzer,
+            kernels: self.kernels.clone(),
+            metrics: metrics.clone(),
+            cfg: self.cfg.clone(),
+            kill: KillSwitch::default(),
+            done: AtomicBool::new(false),
+            total_tasks: total,
+        });
+
+        // Metrics sampler.
+        let sampler = {
+            let ctx = ctx.clone();
+            let period = self.cfg.sample_period;
+            std::thread::spawn(move || {
+                if period.is_zero() {
+                    return;
+                }
+                while !ctx.is_done() {
+                    ctx.metrics.sample(ctx.queue.len());
+                    std::thread::sleep(period);
+                }
+                ctx.metrics.sample(ctx.queue.len());
+            })
+        };
+
+        // Worker pool.
+        let pool = WorkerPool::default();
+        let provisioner = match self.cfg.scaling {
+            ScalingMode::Fixed(n) => {
+                for _ in 0..n {
+                    pool.spawn(ctx.clone(), false);
+                }
+                None
+            }
+            ScalingMode::Auto { sf, max_workers } => {
+                let ctx = ctx.clone();
+                let pool = pool.clone();
+                Some(std::thread::spawn(move || {
+                    run_provisioner(ctx, pool, sf, max_workers)
+                }))
+            }
+        };
+
+        // Failure injection (Figure 9b).
+        let failer = self.cfg.failure.map(|spec| {
+            let ctx = ctx.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(spec.at);
+                if ctx.is_done() {
+                    return 0usize;
+                }
+                let mut rng = Rng::new(0xFA11);
+                let mut ids = ctx.kill.registered();
+                rng.shuffle(&mut ids);
+                let live = ctx.metrics.live_workers();
+                let n_kill = ((live as f64) * spec.fraction).round() as usize;
+                let mut killed = 0;
+                for id in ids {
+                    if killed >= n_kill {
+                        break;
+                    }
+                    if ctx.kill.kill(id) {
+                        killed += 1;
+                    }
+                }
+                killed
+            })
+        });
+
+        // Wait for completion / error / timeout.
+        let sw = crate::util::timer::Stopwatch::start();
+        let mut error: Option<String> = None;
+        loop {
+            let completed = state.counter("completed_total") as u64;
+            if completed >= total {
+                break;
+            }
+            if let Some(e) = ctx.job_error() {
+                error = Some(e);
+                break;
+            }
+            if sw.elapsed() > self.cfg.job_timeout {
+                error = Some(format!(
+                    "job timeout after {:.1}s ({}/{} tasks done)",
+                    sw.secs(),
+                    completed,
+                    total
+                ));
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        ctx.set_done();
+        if error.is_some() {
+            ctx.kill.kill_all();
+        }
+        let wall_secs = sw.secs();
+
+        // Teardown.
+        if let Some(p) = provisioner {
+            let _ = p.join();
+        }
+        let exits = pool.join_all();
+        let _ = sampler.join();
+        if let Some(f) = failer {
+            let _ = f.join();
+        }
+
+        let samples = metrics.samples();
+        let core_secs_active = integrate_active(&samples);
+        let report = EngineReport {
+            wall_secs,
+            total_tasks: total,
+            completed: state.counter("completed_total") as u64,
+            core_secs_active,
+            core_secs_billed: metrics.billed_core_secs(),
+            total_flops: metrics.total_flops(),
+            store: store.stats(),
+            samples,
+            tasks: metrics.task_records(),
+            workers_spawned: pool.spawned_count(),
+            exits_idle: exits.iter().filter(|e| **e == ExitReason::Idle).count(),
+            exits_killed: exits.iter().filter(|e| **e == ExitReason::Killed).count(),
+            error,
+        };
+        Ok(RunOutput { report, store })
+    }
+}
+
+/// ∫ min(running, workers) dt over the sample series.
+fn integrate_active(samples: &[Sample]) -> f64 {
+    samples
+        .windows(2)
+        .map(|w| {
+            let dt = (w[1].t - w[0].t).max(0.0);
+            dt * (w[0].running.min(w[0].workers)) as f64
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integrate_active_simple() {
+        let mk = |t, running, workers| Sample {
+            t,
+            pending: 0,
+            workers,
+            running,
+            completed: 0,
+            flops: 0,
+        };
+        let s = vec![mk(0.0, 2, 4), mk(1.0, 8, 4), mk(2.0, 0, 4)];
+        // [0,1): min(2,4)=2 → 2.0; [1,2): min(8,4)=4 → 4.0.
+        assert!((integrate_active(&s) - 6.0).abs() < 1e-12);
+    }
+}

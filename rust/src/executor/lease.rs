@@ -1,0 +1,149 @@
+//! Background lease renewal (§4.1).
+//!
+//! "During normal operation, the worker will renew the lease of the
+//! task using a background thread until the task is completed." A
+//! [`LeaseRegistry`] holds every lease a worker's pipeline currently
+//! owns; one renewer thread per worker renews them all at a fraction of
+//! the visibility timeout. When the worker dies (or is killed by
+//! failure injection), the renewer stops with it and every held task
+//! becomes visible again after at most one lease period — that *is* the
+//! failure-detection mechanism.
+
+use crate::storage::{Lease, TaskQueue};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// The set of leases a worker currently holds, keyed by node id.
+#[derive(Clone, Default)]
+pub struct LeaseRegistry {
+    inner: Arc<Mutex<HashMap<String, Lease>>>,
+}
+
+impl LeaseRegistry {
+    pub fn insert(&self, node_id: &str, lease: Lease) {
+        self.inner.lock().unwrap().insert(node_id.to_string(), lease);
+    }
+
+    /// Remove and return the lease (after completion/delete).
+    pub fn remove(&self, node_id: &str) -> Option<Lease> {
+        self.inner.lock().unwrap().remove(node_id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn snapshot(&self) -> Vec<(String, Lease)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+}
+
+/// The per-worker renewer thread. Dropping the handle (or setting
+/// `stop`) ends renewal — lease expiry then redelivers in-flight tasks.
+pub struct LeaseRenewer {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl LeaseRenewer {
+    /// Renew every lease in `registry` each `period` (use
+    /// `lease_duration / 3`).
+    pub fn spawn(queue: TaskQueue, registry: LeaseRegistry, period: Duration) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::SeqCst) {
+                std::thread::sleep(period);
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                for (node_id, lease) in registry.snapshot() {
+                    // A failed renewal means the lease was lost (e.g.
+                    // expired under extreme delay and got redelivered);
+                    // drop it from the registry — the other holder owns
+                    // the task now, and our eventual delete will no-op.
+                    if !queue.renew(&lease) {
+                        registry.remove(&node_id);
+                    }
+                }
+            }
+        });
+        LeaseRenewer {
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    /// Stop renewing (keeps already-held leases valid until expiry).
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for LeaseRenewer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::queue::{Clock, TestClock};
+
+    #[test]
+    fn renewer_keeps_task_invisible() {
+        // Wall-clock-based: short lease, renewer at lease/3 keeps the
+        // message invisible well past several lease periods.
+        let q = TaskQueue::new(Duration::from_millis(60));
+        q.send("t", 0);
+        let (_, lease) = q.receive().unwrap();
+        let reg = LeaseRegistry::default();
+        reg.insert("t", lease);
+        let renewer = LeaseRenewer::spawn(q.clone(), reg.clone(), Duration::from_millis(20));
+        std::thread::sleep(Duration::from_millis(200));
+        assert!(q.receive().is_none(), "renewed task must stay invisible");
+        renewer.stop();
+        // After stopping, the lease eventually expires.
+        std::thread::sleep(Duration::from_millis(100));
+        assert!(q.receive().is_some(), "expired after renewer stopped");
+    }
+
+    #[test]
+    fn dead_worker_lease_expires_via_test_clock() {
+        let clock = Arc::new(TestClock::default());
+        let q = TaskQueue::with_clock(Duration::from_secs(10), clock.clone() as Arc<dyn Clock>);
+        q.send("t", 0);
+        let (_, _lease_dropped) = q.receive().unwrap();
+        // Worker "dies": no renewal. Advance past the lease.
+        clock.advance(Duration::from_secs(11));
+        let redelivered = q.receive();
+        assert!(redelivered.is_some());
+        assert_eq!(q.delivery_count("t"), 2);
+    }
+
+    #[test]
+    fn registry_remove_is_idempotent() {
+        let reg = LeaseRegistry::default();
+        assert!(reg.remove("x").is_none());
+        assert!(reg.is_empty());
+    }
+}

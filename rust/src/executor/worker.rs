@@ -1,0 +1,335 @@
+//! The worker loop — one serverless function invocation chain.
+//!
+//! Each worker emulates a Lambda-style executor: single compute core,
+//! a hard runtime limit per invocation (after which it "self
+//! terminates" and, in fixed-pool mode, is immediately re-invoked with
+//! a fresh cold start), no state carried between tasks beyond the
+//! in-flight pipeline.
+//!
+//! §4.2 pipelining: "every LAmbdaPACK instruction block has three
+//! execution phases: read, compute and write … we allow a worker to
+//! fetch multiple tasks and run them in parallel" — implemented as
+//! three stage threads (fetch+read → compute → write+propagate+delete)
+//! connected by bounded channels whose depth is the *pipeline width*.
+//! The compute stage is the single "core"; read and write of other
+//! tasks overlap with it.
+
+use crate::executor::lease::{LeaseRegistry, LeaseRenewer};
+use crate::executor::{propagate, status_key, JobContext};
+use crate::lambdapack::analysis::ConcreteTask;
+use crate::lambdapack::interp::Node;
+use crate::linalg::matrix::Matrix;
+use crate::storage::state_store::status;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Why a worker exited.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExitReason {
+    /// Job completed (or aborted).
+    JobDone,
+    /// Idle past `T_timeout` with `exit_on_idle` (auto-scaling down).
+    Idle,
+    /// Failure injection.
+    Killed,
+}
+
+/// Static worker parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerParams {
+    pub id: usize,
+    /// Auto-scaled workers exit when idle (scale-down §4.2); fixed-pool
+    /// workers poll until the job finishes.
+    pub exit_on_idle: bool,
+}
+
+struct WorkItem {
+    node: Node,
+    task: ConcreteTask,
+    inputs: Vec<Arc<Matrix>>,
+    /// Task already completed by someone else — skip compute and write,
+    /// still propagate + delete (the crash-after-completion path).
+    skip: bool,
+    start: f64,
+    bytes_read: u64,
+}
+
+struct DoneItem {
+    node: Node,
+    task: ConcreteTask,
+    outputs: Vec<Matrix>,
+    skip_write: bool,
+    /// Kill-drain: abandon without completing or deleting.
+    abandoned: bool,
+    start: f64,
+    flops: u64,
+    bytes_read: u64,
+}
+
+/// Run a worker until the job ends (or it is killed / scaled down).
+/// Emulates successive function invocations: each invocation lasts at
+/// most `runtime_limit`, then the worker re-enters with a fresh cold
+/// start.
+pub fn run_worker(ctx: Arc<JobContext>, params: WorkerParams) -> ExitReason {
+    let kill = ctx.kill.register(params.id);
+    ctx.metrics.worker_started();
+    let worker_birth = Instant::now();
+    let reason = loop {
+        // One "invocation".
+        if !ctx.cfg.cold_start.is_zero() {
+            std::thread::sleep(ctx.cfg.cold_start);
+        }
+        match run_invocation(&ctx, &params, &kill) {
+            InvocationEnd::RuntimeLimit => continue, // re-invoked
+            InvocationEnd::Exit(r) => break r,
+        }
+    };
+    ctx.metrics.worker_stopped(worker_birth.elapsed());
+    reason
+}
+
+enum InvocationEnd {
+    RuntimeLimit,
+    Exit(ExitReason),
+}
+
+fn run_invocation(
+    ctx: &Arc<JobContext>,
+    params: &WorkerParams,
+    kill: &Arc<AtomicBool>,
+) -> InvocationEnd {
+    let pw = ctx.cfg.pipeline_width.max(1);
+    let registry = LeaseRegistry::default();
+    let renewer = LeaseRenewer::spawn(
+        ctx.queue.clone(),
+        registry.clone(),
+        ctx.cfg.lease / 3,
+    );
+    let (work_tx, work_rx) = std::sync::mpsc::sync_channel::<WorkItem>(pw);
+    let (done_tx, done_rx) = std::sync::mpsc::sync_channel::<DoneItem>(pw);
+
+    // --- compute stage (the "core") ---
+    let compute = {
+        let ctx = ctx.clone();
+        let kill = kill.clone();
+        let registry = registry.clone();
+        std::thread::spawn(move || compute_stage(&ctx, &kill, &registry, work_rx, done_tx))
+    };
+    // --- write stage ---
+    let write = {
+        let ctx = ctx.clone();
+        let kill = kill.clone();
+        let registry = registry.clone();
+        let id = params.id;
+        std::thread::spawn(move || write_stage(&ctx, &kill, &registry, id, done_rx))
+    };
+
+    // --- fetch/read stage (this thread) ---
+    let end = read_stage(ctx, params, kill, &registry, work_tx);
+
+    // work_tx dropped → compute drains → done_tx dropped → write drains.
+    let _ = compute.join();
+    let _ = write.join();
+    renewer.stop();
+    end
+}
+
+fn read_stage(
+    ctx: &Arc<JobContext>,
+    params: &WorkerParams,
+    kill: &Arc<AtomicBool>,
+    registry: &LeaseRegistry,
+    work_tx: SyncSender<WorkItem>,
+) -> InvocationEnd {
+    let invocation_birth = Instant::now();
+    let mut last_work = Instant::now();
+    let poll = Duration::from_millis(5).min(ctx.cfg.idle_timeout.max(Duration::from_millis(1)));
+    loop {
+        if kill.load(Ordering::SeqCst) {
+            return InvocationEnd::Exit(ExitReason::Killed);
+        }
+        if ctx.is_done() {
+            return InvocationEnd::Exit(ExitReason::JobDone);
+        }
+        if invocation_birth.elapsed() >= ctx.cfg.runtime_limit {
+            // Self-terminate near the runtime limit (§4 step 3); the
+            // in-flight pipeline drains gracefully.
+            return InvocationEnd::RuntimeLimit;
+        }
+        let Some((body, lease)) = ctx.queue.receive_timeout(poll) else {
+            if params.exit_on_idle && last_work.elapsed() >= ctx.cfg.idle_timeout {
+                return InvocationEnd::Exit(ExitReason::Idle);
+            }
+            continue;
+        };
+        last_work = Instant::now();
+        let node = match Node::parse(&body) {
+            Ok(n) => n,
+            Err(_) => {
+                // Poison message: drop it.
+                ctx.queue.delete(&lease);
+                continue;
+            }
+        };
+        registry.insert(&node.id(), lease);
+        let task = match ctx.analyzer.concretize(&node) {
+            Ok(t) => t,
+            Err(e) => {
+                ctx.report_error(&node, &e);
+                registry.remove(&node.id());
+                continue;
+            }
+        };
+        let already_done =
+            ctx.state.get(&status_key(&node)).as_deref() == Some(status::COMPLETED);
+        let start = ctx.metrics.task_started();
+        let (inputs, bytes_read) = if already_done {
+            (Vec::new(), 0)
+        } else {
+            let mut tiles = Vec::with_capacity(task.reads.len());
+            let mut bytes = 0u64;
+            let mut failed = None;
+            for loc in &task.reads {
+                match ctx.store.get(params.id, &loc.key()) {
+                    Ok(t) => {
+                        bytes += (t.rows() * t.cols() * 8) as u64;
+                        tiles.push(t);
+                    }
+                    Err(e) => {
+                        failed = Some(e);
+                        break;
+                    }
+                }
+            }
+            if let Some(e) = failed {
+                // Dependency protocol guarantees presence; a miss is a
+                // protocol bug — surface it.
+                ctx.report_error(&node, &e);
+                ctx.metrics.task_finished(&node.id(), &task.fn_name, params.id, start, 0, 0, 0);
+                registry.remove(&node.id());
+                continue;
+            }
+            (tiles, bytes)
+        };
+        let item = WorkItem {
+            node,
+            task,
+            inputs,
+            skip: already_done,
+            start,
+            bytes_read,
+        };
+        if work_tx.send(item).is_err() {
+            return InvocationEnd::Exit(ExitReason::JobDone);
+        }
+    }
+}
+
+fn compute_stage(
+    ctx: &Arc<JobContext>,
+    kill: &Arc<AtomicBool>,
+    registry: &LeaseRegistry,
+    work_rx: Receiver<WorkItem>,
+    done_tx: SyncSender<DoneItem>,
+) {
+    for item in work_rx {
+        let killed = kill.load(Ordering::SeqCst);
+        let mut done = DoneItem {
+            node: item.node,
+            task: item.task,
+            outputs: Vec::new(),
+            skip_write: item.skip,
+            abandoned: killed,
+            start: item.start,
+            flops: 0,
+            bytes_read: item.bytes_read,
+        };
+        if !killed && !item.skip {
+            match ctx.kernels.execute(&done.task.fn_name, &item.inputs, &done.task.scalars) {
+                Ok(outs) => {
+                    done.flops = ctx.kernels.flops(&done.task.fn_name, &item.inputs);
+                    done.outputs = outs;
+                }
+                Err(e) => {
+                    ctx.report_error(&done.node, &e);
+                    ctx.metrics.task_finished(
+                        &done.node.id(),
+                        &done.task.fn_name,
+                        0,
+                        done.start,
+                        0,
+                        done.bytes_read,
+                        0,
+                    );
+                    registry.remove(&done.node.id());
+                    continue;
+                }
+            }
+        }
+        if done_tx.send(done).is_err() {
+            return;
+        }
+    }
+}
+
+fn write_stage(
+    ctx: &Arc<JobContext>,
+    kill: &Arc<AtomicBool>,
+    registry: &LeaseRegistry,
+    worker_id: usize,
+    done_rx: Receiver<DoneItem>,
+) {
+    for item in done_rx {
+        if item.abandoned || kill.load(Ordering::SeqCst) {
+            // Kill-drain: leave lease to expire; the task redelivers.
+            ctx.metrics.task_finished(
+                &item.node.id(),
+                &item.task.fn_name,
+                worker_id,
+                item.start,
+                0,
+                item.bytes_read,
+                0,
+            );
+            continue;
+        }
+        let mut bytes_written = 0u64;
+        if !item.skip_write {
+            debug_assert_eq!(item.outputs.len(), item.task.writes.len());
+            for (loc, out) in item.task.writes.iter().zip(item.outputs) {
+                bytes_written += (out.rows() * out.cols() * 8) as u64;
+                if let Err(e) = ctx.store.put(worker_id, &loc.key(), out) {
+                    ctx.report_error(&item.node, &e);
+                }
+            }
+        }
+        // Exactly one completer wins the CAS and owns the "completed"
+        // accounting; propagation runs unconditionally (idempotent) so
+        // a predecessor's crash between CAS and enqueue heals here.
+        let won = ctx
+            .state
+            .cas(&status_key(&item.node), None, status::COMPLETED);
+        if won {
+            ctx.state.incr("completed_total", 1);
+        }
+        if let Err(e) = propagate(ctx, &item.node) {
+            ctx.report_error(&item.node, &e);
+        }
+        ctx.metrics.task_finished(
+            &item.node.id(),
+            &item.task.fn_name,
+            worker_id,
+            item.start,
+            item.flops,
+            item.bytes_read,
+            bytes_written,
+        );
+        // §4.1 invariant: delete only after effects are durable (tiles
+        // written, state updated, children propagated).
+        if let Some(lease) = registry.remove(&item.node.id()) {
+            ctx.queue.delete(&lease);
+        }
+    }
+}

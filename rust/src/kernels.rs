@@ -1,0 +1,343 @@
+//! Kernel dispatch — "most tasks involve … executing BLAS/LAPACK
+//! functions" (§4 step 3).
+//!
+//! Every LAmbdaPACK kernel name maps to a tile operation. Two
+//! implementations live behind [`KernelExecutor`]:
+//!
+//! * [`NativeKernels`] — pure-Rust f64 oracle (this module), always
+//!   available, used by tests, small runs, and as the numeric ground
+//!   truth;
+//! * [`crate::runtime::PjrtKernels`] — the production path: AOT-lowered
+//!   JAX/Pallas HLO artifacts executed on the PJRT CPU client, with
+//!   native fallback for kernels/shapes without artifacts.
+//!
+//! ## Kernel semantics
+//!
+//! | name | inputs | outputs |
+//! |---|---|---|
+//! | `chol` | A (SPD) | L with A = LLᵀ |
+//! | `trsm` | L, A | A·L⁻ᵀ (Cholesky panel update) |
+//! | `syrk` | S, Lj, Lk | S − Lj·Lkᵀ (trailing update — the hot spot) |
+//! | `gemm_kernel` | A, B | A·B |
+//! | `gemm_accum` | C, A, B | C + A·B |
+//! | `gemm_sub` | S, L, U | S − L·U |
+//! | `copy` | A | A |
+//! | `qr_factor` | A | R of QR(A) |
+//! | `qr_factor2` | R1, R2 | R of QR([R1; R2]) (TSQR pair) |
+//! | `qr_block` | A | (Q full, R) |
+//! | `qr_pair` | Rprev, Anew | (Q full of [Rprev; Anew], R) |
+//! | `qr_apply` | T, S, V | Vᵀ·[T; S] split into (T', S') |
+//! | `qr_apply1` | S, V | Vᵀ·S (diagonal-block Q applied to one tile) |
+//! | `lu_block` | A | (L, U) with A = LU |
+//! | `trsm_lower` | L, A | L⁻¹·A |
+//! | `trsm_upper` | U, A | A·U⁻¹ |
+//! | `lq_block` | A | (P full, L) with A = L·P |
+//! | `lq_pair` | Lprev, Anew | (P full of [Lprev Anew], L) |
+//! | `lq_apply` | U, W, P | [U W]·Pᵀ split into (U', S') |
+//! | `lq_apply1` | W, P | W·Pᵀ (diagonal-block P applied to one tile) |
+
+use crate::linalg::factor;
+use crate::linalg::matrix::Matrix;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Executes a named kernel over tile inputs.
+pub trait KernelExecutor: Send + Sync {
+    fn execute(
+        &self,
+        fn_name: &str,
+        inputs: &[Arc<Matrix>],
+        scalars: &[f64],
+    ) -> Result<Vec<Matrix>>;
+
+    /// Approximate floating-point work of one invocation (for flop-rate
+    /// metrics and the simulator's cost model).
+    fn flops(&self, fn_name: &str, inputs: &[Arc<Matrix>]) -> u64 {
+        let b = inputs
+            .first()
+            .map(|m| m.rows().max(m.cols()) as u64)
+            .unwrap_or(1);
+        kernel_flops(fn_name, b)
+    }
+}
+
+/// Flop model per kernel at tile side `b` (cubic terms only; constants
+/// from the standard LAPACK operation counts).
+pub fn kernel_flops(fn_name: &str, b: u64) -> u64 {
+    let b3 = b * b * b;
+    match fn_name {
+        "chol" => b3 / 3,
+        "lu_block" => 2 * b3 / 3,
+        "trsm" | "trsm_lower" | "trsm_upper" => b3,
+        "syrk" | "gemm_sub" | "gemm_accum" | "gemm_kernel" => 2 * b3,
+        // Householder QR of a B×B (or 2B×B pair) tile ≈ 4/3·b³ (+ Q
+        // formation ≈ 4/3·b³); applies are 2 GEMMs.
+        "qr_factor" => 4 * b3 / 3,
+        "qr_factor2" | "qr_block" | "qr_pair" | "lq_block" | "lq_pair" => 8 * b3 / 3,
+        "qr_apply" | "lq_apply" => 4 * b3,
+        "qr_apply1" | "lq_apply1" => 2 * b3,
+        "copy" => 0,
+        _ => 2 * b3,
+    }
+}
+
+/// The native f64 oracle implementation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeKernels;
+
+impl NativeKernels {
+    /// Stack two tiles vertically.
+    pub fn vstack(top: &Matrix, bot: &Matrix) -> Result<Matrix> {
+        if top.cols() != bot.cols() {
+            bail!("vstack: column mismatch");
+        }
+        let mut out = Matrix::zeros(top.rows() + bot.rows(), top.cols());
+        out.set_window(0, 0, top);
+        out.set_window(top.rows(), 0, bot);
+        Ok(out)
+    }
+
+    /// Stack two tiles horizontally.
+    pub fn hstack(left: &Matrix, right: &Matrix) -> Result<Matrix> {
+        if left.rows() != right.rows() {
+            bail!("hstack: row mismatch");
+        }
+        let mut out = Matrix::zeros(left.rows(), left.cols() + right.cols());
+        out.set_window(0, 0, left);
+        out.set_window(0, left.cols(), right);
+        Ok(out)
+    }
+}
+
+impl KernelExecutor for NativeKernels {
+    fn execute(
+        &self,
+        fn_name: &str,
+        inputs: &[Arc<Matrix>],
+        _scalars: &[f64],
+    ) -> Result<Vec<Matrix>> {
+        let need = |n: usize| -> Result<()> {
+            if inputs.len() != n {
+                bail!("kernel `{fn_name}` expects {n} inputs, got {}", inputs.len());
+            }
+            Ok(())
+        };
+        Ok(match fn_name {
+            "chol" => {
+                need(1)?;
+                vec![factor::cholesky(&inputs[0])?]
+            }
+            "trsm" => {
+                need(2)?;
+                vec![factor::trsm_right_lt(&inputs[0], &inputs[1])?]
+            }
+            "syrk" => {
+                need(3)?;
+                vec![factor::syrk_update(&inputs[0], &inputs[1], &inputs[2])?]
+            }
+            "gemm_kernel" => {
+                need(2)?;
+                vec![factor::gemm(&inputs[0], &inputs[1])?]
+            }
+            "gemm_accum" => {
+                need(3)?;
+                vec![factor::gemm_accum(&inputs[0], &inputs[1], &inputs[2])?]
+            }
+            "gemm_sub" => {
+                need(3)?;
+                let prod = inputs[1].matmul(&inputs[2]);
+                vec![&*inputs[0] - &prod]
+            }
+            "copy" => {
+                need(1)?;
+                vec![(*inputs[0]).clone()]
+            }
+            "qr_factor" => {
+                need(1)?;
+                vec![factor::qr_r(&inputs[0])?]
+            }
+            "qr_factor2" => {
+                need(2)?;
+                vec![factor::qr_r2(&inputs[0], &inputs[1])?]
+            }
+            "qr_block" => {
+                need(1)?;
+                let (q, r) = factor::qr_full(&inputs[0])?;
+                vec![q, r]
+            }
+            "qr_pair" => {
+                need(2)?;
+                let stacked = Self::vstack(&inputs[0], &inputs[1])?;
+                let (q, r) = factor::qr_full(&stacked)?;
+                vec![q, r]
+            }
+            "qr_apply" => {
+                need(3)?;
+                let (t, s, v) = (&inputs[0], &inputs[1], &inputs[2]);
+                let stacked = Self::vstack(t, s)?;
+                // [T'; S'] = Vᵀ · [T; S].
+                let updated = v.matmul_tn(&stacked);
+                let top = updated.window(0, 0, t.rows(), t.cols());
+                let bot = updated.window(t.rows(), 0, s.rows(), s.cols());
+                vec![top, bot]
+            }
+            "qr_apply1" => {
+                need(2)?;
+                // Vᵀ·S with V the diagonal block's full Q.
+                vec![inputs[1].matmul_tn(&inputs[0])]
+            }
+            "lq_apply1" => {
+                need(2)?;
+                // W·Pᵀ with P the diagonal block's full row-orthogonal
+                // factor.
+                vec![inputs[0].matmul_nt(&inputs[1])]
+            }
+            "lu_block" => {
+                need(1)?;
+                let (l, u) = factor::lu_nopiv(&inputs[0])?;
+                vec![l, u]
+            }
+            "trsm_lower" => {
+                need(2)?;
+                vec![factor::trsm_left_lower(&inputs[0], &inputs[1])?]
+            }
+            "trsm_upper" => {
+                need(2)?;
+                vec![factor::trsm_right_upper(&inputs[0], &inputs[1])?]
+            }
+            "lq_block" => {
+                need(1)?;
+                // A = L·P via QR of Aᵀ: Aᵀ = Q·R ⇒ A = Rᵀ·Qᵀ, P = Qᵀ.
+                let (q, r) = factor::qr_full(&inputs[0].transpose())?;
+                vec![q.transpose(), r.transpose()]
+            }
+            "lq_pair" => {
+                need(2)?;
+                let wide = Self::hstack(&inputs[0], &inputs[1])?;
+                let (q, r) = factor::qr_full(&wide.transpose())?;
+                vec![q.transpose(), r.transpose()]
+            }
+            "lq_apply" => {
+                need(3)?;
+                let (u, w, p) = (&inputs[0], &inputs[1], &inputs[2]);
+                let wide = Self::hstack(u, w)?;
+                // [U' S'] = [U W] · Pᵀ.
+                let updated = wide.matmul_nt(p);
+                let left = updated.window(0, 0, u.rows(), u.cols());
+                let right = updated.window(0, u.cols(), w.rows(), w.cols());
+                vec![left, right]
+            }
+            other => bail!("unknown kernel `{other}`"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn nk() -> NativeKernels {
+        NativeKernels
+    }
+
+    fn arc(m: Matrix) -> Arc<Matrix> {
+        Arc::new(m)
+    }
+
+    #[test]
+    fn chol_kernel() {
+        let mut rng = Rng::new(30);
+        let a = Matrix::rand_spd(8, &mut rng);
+        let out = nk().execute("chol", &[arc(a.clone())], &[]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].matmul_nt(&out[0]).max_abs_diff(&a) < 1e-8);
+    }
+
+    #[test]
+    fn unknown_kernel_rejected() {
+        assert!(nk().execute("frobnicate", &[], &[]).is_err());
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let m = arc(Matrix::eye(2));
+        assert!(nk().execute("chol", &[m.clone(), m], &[]).is_err());
+    }
+
+    #[test]
+    fn qr_pair_and_apply_consistent() {
+        // The flat-CAQR invariant: qr_pair's Q reproduces the stacked
+        // factorization, and qr_apply applies the same transform.
+        let mut rng = Rng::new(31);
+        let b = 6;
+        let r_prev = Matrix::randn(b, b, &mut rng).triu();
+        let a_new = Matrix::randn(b, b, &mut rng);
+        let out = nk()
+            .execute("qr_pair", &[arc(r_prev.clone()), arc(a_new.clone())], &[])
+            .unwrap();
+        let (q, r) = (&out[0], &out[1]);
+        assert_eq!(q.shape(), (2 * b, 2 * b));
+        // Q orthogonal.
+        assert!(q.matmul_tn(q).max_abs_diff(&Matrix::eye(2 * b)) < 1e-9);
+        // Qᵀ·[Rprev; Anew] = [R; 0].
+        let stacked = NativeKernels::vstack(&r_prev, &a_new).unwrap();
+        let qts = q.matmul_tn(&stacked);
+        assert!(qts.window(0, 0, b, b).max_abs_diff(r) < 1e-9);
+        assert!(qts.window(b, 0, b, b).fro_norm() < 1e-9);
+        // qr_apply with V = Q on another column pair gives Vᵀ·[T;S].
+        let t = Matrix::randn(b, b, &mut rng);
+        let s = Matrix::randn(b, b, &mut rng);
+        let applied = nk()
+            .execute(
+                "qr_apply",
+                &[arc(t.clone()), arc(s.clone()), arc(q.clone())],
+                &[],
+            )
+            .unwrap();
+        let direct = q.matmul_tn(&NativeKernels::vstack(&t, &s).unwrap());
+        assert!(applied[0].max_abs_diff(&direct.window(0, 0, b, b)) < 1e-12);
+        assert!(applied[1].max_abs_diff(&direct.window(b, 0, b, b)) < 1e-12);
+    }
+
+    #[test]
+    fn lq_pair_and_apply_consistent() {
+        let mut rng = Rng::new(32);
+        let b = 5;
+        let l_prev = Matrix::randn(b, b, &mut rng).tril();
+        let a_new = Matrix::randn(b, b, &mut rng);
+        let out = nk()
+            .execute("lq_pair", &[arc(l_prev.clone()), arc(a_new.clone())], &[])
+            .unwrap();
+        let (p, l) = (&out[0], &out[1]);
+        assert_eq!(p.shape(), (2 * b, 2 * b));
+        assert!(p.matmul_nt(p).max_abs_diff(&Matrix::eye(2 * b)) < 1e-9);
+        // [Lprev Anew]·Pᵀ = [L 0].
+        let wide = NativeKernels::hstack(&l_prev, &a_new).unwrap();
+        let folded = wide.matmul_nt(p);
+        assert!(folded.window(0, 0, b, b).max_abs_diff(l) < 1e-9);
+        assert!(folded.window(0, b, b, b).fro_norm() < 1e-9);
+        // L lower-triangular.
+        assert!(l.max_abs_diff(&l.tril()) < 1e-9);
+        // lq_apply matches direct multiplication.
+        let u = Matrix::randn(b, b, &mut rng);
+        let w = Matrix::randn(b, b, &mut rng);
+        let applied = nk()
+            .execute(
+                "lq_apply",
+                &[arc(u.clone()), arc(w.clone()), arc(p.clone())],
+                &[],
+            )
+            .unwrap();
+        let direct = NativeKernels::hstack(&u, &w).unwrap().matmul_nt(p);
+        assert!(applied[0].max_abs_diff(&direct.window(0, 0, b, b)) < 1e-12);
+        assert!(applied[1].max_abs_diff(&direct.window(0, b, b, b)) < 1e-12);
+    }
+
+    #[test]
+    fn flop_model_orders() {
+        assert!(kernel_flops("syrk", 512) > kernel_flops("chol", 512));
+        assert_eq!(kernel_flops("copy", 512), 0);
+        assert_eq!(kernel_flops("gemm_kernel", 100), 2_000_000);
+    }
+}

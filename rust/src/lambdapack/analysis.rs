@@ -1,0 +1,829 @@
+//! Algorithm 2 — runtime dependency analysis.
+//!
+//! numpywren never materializes the task DAG. A task is a tuple
+//! `(line, loop-indices)`; when it finishes, the *worker itself* finds
+//! the downstream tasks by solving, for every read expression in the
+//! program, the system of index equations
+//! `read_indices(loop_vars) == written_location`, subject to the loop
+//! bounds and `if` guards enclosing that read. The same solver run in
+//! reverse (writes vs. a read location) yields a task's parents, which
+//! is how the engine initializes dependency counters lazily.
+//!
+//! Solving strategy (§3.2 of the paper):
+//!
+//! 1. Walk the loop nest enclosing the candidate line from the
+//!    outermost loop inwards.
+//! 2. At each loop variable, try to *determine* it from an equation
+//!    whose other variables are already bound, by structural inversion
+//!    (affine terms exactly; `c ** var` nonlinear terms by integer-log
+//!    back-substitution — the paper's "solve the linear equations, then
+//!    plug into the nonlinear ones").
+//! 3. Variables no equation determines are enumerated over their
+//!    (now-concrete) bounds — these are the genuinely free axes, and
+//!    each feasible assignment is a distinct dependent task.
+//! 4. At the innermost level every equation must check out exactly and
+//!    every enclosing guard must hold.
+//!
+//! The cost depends only on the *program* size (lines × loop depth),
+//! never on the matrix size — the property Table 3 measures.
+
+use crate::lambdapack::ast::{Bop, Expr, IdxExpr, Program, Stmt, Uop};
+use crate::lambdapack::interp::{eval, eval_int, Env, Node};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeSet;
+use std::fmt;
+
+/// A concrete tile location: matrix name + concrete indices. Its
+/// `Display` form (`S[1,2,3]`) is the object-store key.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Loc {
+    pub matrix: String,
+    pub idx: Vec<i64>,
+}
+
+impl Loc {
+    pub fn new(matrix: &str, idx: Vec<i64>) -> Self {
+        Loc {
+            matrix: matrix.to_string(),
+            idx,
+        }
+    }
+
+    /// Object-store key.
+    pub fn key(&self) -> String {
+        format!("{self}")
+    }
+}
+
+impl fmt::Display for Loc {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[", self.matrix)?;
+        for (i, v) in self.idx.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{v}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// A fully-evaluated kernel invocation, ready for an executor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConcreteTask {
+    pub node: Node,
+    pub fn_name: String,
+    pub reads: Vec<Loc>,
+    pub writes: Vec<Loc>,
+    pub scalars: Vec<f64>,
+}
+
+/// One step of the static path from the program root to a kernel call.
+#[derive(Clone, Debug)]
+enum PathItem {
+    Loop {
+        var: String,
+        min: Expr,
+        max: Expr,
+        step: Expr,
+    },
+    /// `cond` must evaluate to `polarity`.
+    Guard { cond: Expr, polarity: bool },
+    /// Lexically-scoped scalar binding.
+    Assign { name: String, val: Expr },
+}
+
+/// Pre-extracted info for one kernel-call line.
+#[derive(Clone, Debug)]
+struct LineInfo {
+    line: usize,
+    fn_name: String,
+    path: Vec<PathItem>,
+    writes: Vec<IdxExpr>,
+    reads: Vec<IdxExpr>,
+    scalars: Vec<Expr>,
+    /// Loop variables on the path, outermost first (node identity).
+    loop_vars: Vec<String>,
+}
+
+/// The dependency analyzer for one (program, arguments) pair.
+#[derive(Clone, Debug)]
+pub struct Analyzer {
+    program: Program,
+    args: Env,
+    lines: Vec<LineInfo>,
+}
+
+/// Result of trying to invert an equation for a single variable.
+enum Inversion {
+    /// Unique solution.
+    Solved(i64),
+    /// Equation provably unsatisfiable (e.g. divisibility failure).
+    NoSolution,
+    /// Structure not invertible — fall back to enumeration.
+    CantInvert,
+}
+
+impl Analyzer {
+    pub fn new(program: &Program, args: &Env) -> Self {
+        let mut lines = Vec::new();
+        let mut path: Vec<PathItem> = Vec::new();
+        fn walk(stmts: &[Stmt], path: &mut Vec<PathItem>, lines: &mut Vec<LineInfo>) {
+            for s in stmts {
+                match s {
+                    Stmt::KernelCall {
+                        line,
+                        fn_name,
+                        outputs,
+                        mat_inputs,
+                        scalar_inputs,
+                    } => {
+                        let loop_vars = path
+                            .iter()
+                            .filter_map(|p| match p {
+                                PathItem::Loop { var, .. } => Some(var.clone()),
+                                _ => None,
+                            })
+                            .collect();
+                        lines.push(LineInfo {
+                            line: *line,
+                            fn_name: fn_name.clone(),
+                            path: path.clone(),
+                            writes: outputs.clone(),
+                            reads: mat_inputs.clone(),
+                            scalars: scalar_inputs.clone(),
+                            loop_vars,
+                        });
+                    }
+                    Stmt::Assign { name, val } => {
+                        path.push(PathItem::Assign {
+                            name: name.clone(),
+                            val: val.clone(),
+                        });
+                        // Assigns stay in scope for the remainder of the
+                        // enclosing block; popped with the block below.
+                    }
+                    Stmt::If {
+                        cond,
+                        body,
+                        else_body,
+                    } => {
+                        let depth = path.len();
+                        path.push(PathItem::Guard {
+                            cond: cond.clone(),
+                            polarity: true,
+                        });
+                        walk(body, path, lines);
+                        path.truncate(depth);
+                        path.push(PathItem::Guard {
+                            cond: cond.clone(),
+                            polarity: false,
+                        });
+                        walk(else_body, path, lines);
+                        path.truncate(depth);
+                    }
+                    Stmt::For {
+                        var,
+                        min,
+                        max,
+                        step,
+                        body,
+                    } => {
+                        let depth = path.len();
+                        path.push(PathItem::Loop {
+                            var: var.clone(),
+                            min: min.clone(),
+                            max: max.clone(),
+                            step: step.clone(),
+                        });
+                        walk(body, path, lines);
+                        path.truncate(depth);
+                    }
+                }
+            }
+        }
+        walk(&program.body, &mut path, &mut lines);
+        Analyzer {
+            program: program.clone(),
+            args: args.clone(),
+            lines,
+        }
+    }
+
+    pub fn program(&self) -> &Program {
+        &self.program
+    }
+
+    pub fn args(&self) -> &Env {
+        &self.args
+    }
+
+    /// Concretize a node into an executable task (evaluate its kernel
+    /// name, read/write locations, and scalar arguments).
+    pub fn concretize(&self, node: &Node) -> Result<ConcreteTask> {
+        let info = self
+            .lines
+            .iter()
+            .find(|l| l.line == node.line)
+            .with_context(|| format!("no kernel-call line {}", node.line))?;
+        let mut env = self.args.clone();
+        env.extend(node.env.iter().map(|(k, v)| (k.clone(), *v)));
+        // Lexically-scoped assigns on the path.
+        for item in &info.path {
+            if let PathItem::Assign { name, val } = item {
+                let v = eval_int(val, &env)?;
+                env.insert(name.clone(), v);
+            }
+        }
+        let eval_idx = |ix: &IdxExpr, env: &Env| -> Result<Loc> {
+            let idx = ix
+                .indices
+                .iter()
+                .map(|e| eval_int(e, env))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Loc::new(&ix.matrix, idx))
+        };
+        let reads = info
+            .reads
+            .iter()
+            .map(|r| eval_idx(r, &env))
+            .collect::<Result<Vec<_>>>()?;
+        let writes = info
+            .writes
+            .iter()
+            .map(|w| eval_idx(w, &env))
+            .collect::<Result<Vec<_>>>()?;
+        let scalars = info
+            .scalars
+            .iter()
+            .map(|e| Ok(eval(e, &env)?.as_f64()))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ConcreteTask {
+            node: node.clone(),
+            fn_name: info.fn_name.clone(),
+            reads,
+            writes,
+            scalars,
+        })
+    }
+
+    /// All nodes that **read** `loc` — the children search (Alg. 2).
+    pub fn find_readers(&self, loc: &Loc) -> Result<Vec<Node>> {
+        self.find_accessors(loc, AccessKind::Read)
+    }
+
+    /// All nodes that **write** `loc` — the parents search.
+    pub fn find_writers(&self, loc: &Loc) -> Result<Vec<Node>> {
+        self.find_accessors(loc, AccessKind::Write)
+    }
+
+    /// Downstream dependents of `node`: everything that reads any
+    /// location `node` writes.
+    pub fn children(&self, node: &Node) -> Result<Vec<Node>> {
+        let task = self.concretize(node)?;
+        let mut out = BTreeSet::new();
+        for w in &task.writes {
+            for r in self.find_readers(w)? {
+                if &r != node {
+                    out.insert(r);
+                }
+            }
+        }
+        Ok(out.into_iter().collect())
+    }
+
+    /// Upstream dependencies of `node`: everything that writes any
+    /// location `node` reads. Reads with no writer are program inputs.
+    pub fn parents(&self, node: &Node) -> Result<Vec<Node>> {
+        let task = self.concretize(node)?;
+        let mut out = BTreeSet::new();
+        for r in &task.reads {
+            for w in self.find_writers(r)? {
+                if &w != node {
+                    out.insert(w);
+                }
+            }
+        }
+        Ok(out.into_iter().collect())
+    }
+
+    /// Is `loc` a program input (written by no node)?
+    pub fn is_input(&self, loc: &Loc) -> Result<bool> {
+        Ok(self.find_writers(loc)?.is_empty())
+    }
+
+    /// Root tasks: nodes all of whose reads are program inputs. This is
+    /// the one full-iteration-space scan, done once by the *client* at
+    /// job-submission time (workers never enumerate).
+    pub fn roots(&self) -> Result<Vec<Node>> {
+        let mut roots = Vec::new();
+        let mut err = None;
+        crate::lambdapack::interp::enumerate_nodes(&self.program, &self.args, &mut |node, _| {
+            if err.is_some() {
+                return;
+            }
+            match self.parents(node) {
+                Ok(ps) => {
+                    if ps.is_empty() {
+                        roots.push(node.clone());
+                    }
+                }
+                Err(e) => err = Some(e),
+            }
+        })?;
+        if let Some(e) = err {
+            return Err(e);
+        }
+        Ok(roots)
+    }
+
+    fn find_accessors(&self, loc: &Loc, kind: AccessKind) -> Result<Vec<Node>> {
+        let mut out = Vec::new();
+        for info in &self.lines {
+            let exprs = match kind {
+                AccessKind::Read => &info.reads,
+                AccessKind::Write => &info.writes,
+            };
+            for ix in exprs {
+                if ix.matrix != loc.matrix || ix.indices.len() != loc.idx.len() {
+                    continue;
+                }
+                self.solve_line(info, ix, loc, &mut out)?;
+            }
+        }
+        // Dedup (a line can read the same location through two
+        // expressions, e.g. syrk when j == k).
+        let set: BTreeSet<Node> = out.into_iter().collect();
+        Ok(set.into_iter().collect())
+    }
+
+    /// Find every loop assignment for `info` under which `ix` evaluates
+    /// to `loc`.
+    fn solve_line(
+        &self,
+        info: &LineInfo,
+        ix: &IdxExpr,
+        loc: &Loc,
+        out: &mut Vec<Node>,
+    ) -> Result<()> {
+        // Equations: ix.indices[d](vars) == loc.idx[d].
+        let equations: Vec<(&Expr, i64)> = ix
+            .indices
+            .iter()
+            .zip(loc.idx.iter().copied())
+            .collect();
+        let mut env = self.args.clone();
+        self.descend(info, &info.path, &equations, &mut env, out)?;
+        Ok(())
+    }
+
+    fn descend(
+        &self,
+        info: &LineInfo,
+        path: &[PathItem],
+        equations: &[(&Expr, i64)],
+        env: &mut Env,
+        out: &mut Vec<Node>,
+    ) -> Result<()> {
+        let Some((item, rest)) = path.split_first() else {
+            // Innermost: every equation must hold exactly.
+            for (expr, target) in equations {
+                if eval_int(expr, env)? != *target {
+                    return Ok(());
+                }
+            }
+            let node_env: Env = info
+                .loop_vars
+                .iter()
+                .map(|v| (v.clone(), *env.get(v).expect("loop var bound")))
+                .collect();
+            out.push(Node::new(info.line, node_env));
+            return Ok(());
+        };
+        match item {
+            PathItem::Assign { name, val } => {
+                let v = eval_int(val, env)?;
+                let old = env.insert(name.clone(), v);
+                self.descend(info, rest, equations, env, out)?;
+                match old {
+                    Some(o) => {
+                        env.insert(name.clone(), o);
+                    }
+                    None => {
+                        env.remove(name);
+                    }
+                }
+            }
+            PathItem::Guard { cond, polarity } => {
+                // Guards may reference not-yet-bound inner variables
+                // only if the program is malformed; all our guards use
+                // outer vars, so evaluate now and prune.
+                let mut refs = Vec::new();
+                cond.free_vars(&mut refs);
+                let all_bound = refs.iter().all(|r| env.contains_key(r));
+                if all_bound {
+                    if eval(cond, env)?.as_bool()? != *polarity {
+                        return Ok(()); // pruned
+                    }
+                    self.descend(info, rest, equations, env, out)?;
+                } else {
+                    // Defer: check again at the leaf by re-walking —
+                    // conservative: descend and verify at the end.
+                    // (Not exercised by the shipped programs.)
+                    self.descend(info, rest, equations, env, out)?;
+                }
+            }
+            PathItem::Loop {
+                var,
+                min,
+                max,
+                step,
+            } => {
+                let lo = eval_int(min, env)?;
+                let hi = eval_int(max, env)?;
+                let st = eval_int(step, env)?;
+                if st <= 0 {
+                    bail!("non-positive loop step for `{var}`");
+                }
+                // Try to determine `var` from an invertible equation
+                // whose other variables are all bound.
+                let mut determined: Option<i64> = None;
+                let mut infeasible = false;
+                for (expr, target) in equations {
+                    if !expr.references(var) {
+                        continue;
+                    }
+                    let mut refs = Vec::new();
+                    expr.free_vars(&mut refs);
+                    if refs.iter().any(|r| r != var && !env.contains_key(r)) {
+                        continue; // references unbound inner vars
+                    }
+                    match invert(expr, *target, var, env)? {
+                        Inversion::Solved(v) => match determined {
+                            None => determined = Some(v),
+                            Some(prev) if prev != v => {
+                                infeasible = true;
+                                break;
+                            }
+                            _ => {}
+                        },
+                        Inversion::NoSolution => {
+                            infeasible = true;
+                            break;
+                        }
+                        Inversion::CantInvert => {
+                            // Try scanning below if nothing else pins it.
+                        }
+                    }
+                }
+                if infeasible {
+                    return Ok(());
+                }
+                match determined {
+                    Some(val) => {
+                        if val < lo || val >= hi || (val - lo).rem_euclid(st) != 0 {
+                            return Ok(()); // outside iteration space
+                        }
+                        let old = env.insert(var.clone(), val);
+                        self.descend(info, rest, equations, env, out)?;
+                        restore(env, var, old);
+                    }
+                    None => {
+                        // Free (or non-invertible) variable: enumerate
+                        // its bounded range. If some equation references
+                        // only this var (but was CantInvert), the leaf
+                        // check filters.
+                        let mut val = lo;
+                        while val < hi {
+                            let old = env.insert(var.clone(), val);
+                            self.descend(info, rest, equations, env, out)?;
+                            restore(env, var, old);
+                            val += st;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn restore(env: &mut Env, var: &str, old: Option<i64>) {
+    match old {
+        Some(o) => {
+            env.insert(var.to_string(), o);
+        }
+        None => {
+            env.remove(var);
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+enum AccessKind {
+    Read,
+    Write,
+}
+
+/// Structurally invert `expr(var) == target` for `var`, with every
+/// other variable bound in `env`. Affine terms invert exactly;
+/// `c ** var` inverts by integer logarithm (the nonlinear class §3.2
+/// covers: tree-reduction strides).
+fn invert(expr: &Expr, target: i64, var: &str, env: &Env) -> Result<Inversion> {
+    // Count references — multiple occurrences (e.g. i + i) are not
+    // handled structurally; fall back to enumeration.
+    fn count_refs(e: &Expr, var: &str) -> usize {
+        match e {
+            Expr::Bin(_, a, b) | Expr::Cmp(_, a, b) => count_refs(a, var) + count_refs(b, var),
+            Expr::Un(_, e) => count_refs(e, var),
+            Expr::Ref(n) => (n == var) as usize,
+            _ => 0,
+        }
+    }
+    if count_refs(expr, var) != 1 {
+        return Ok(Inversion::CantInvert);
+    }
+    fn go(e: &Expr, target: i64, var: &str, env: &Env) -> Result<Inversion> {
+        Ok(match e {
+            Expr::Ref(n) if n == var => Inversion::Solved(target),
+            Expr::Bin(op, a, b) => {
+                let a_has = a.references(var);
+                let (sub, other) = if a_has { (a, b) } else { (b, a) };
+                // `other` is fully bound (single-occurrence checked).
+                let c = eval_int(other, env)?;
+                match op {
+                    Bop::Add => go(sub, target - c, var, env)?,
+                    Bop::Sub => {
+                        if a_has {
+                            go(sub, target + c, var, env)?
+                        } else {
+                            go(sub, c - target, var, env)?
+                        }
+                    }
+                    Bop::Mul => {
+                        if c == 0 {
+                            if target == 0 {
+                                Inversion::CantInvert // any value works
+                            } else {
+                                Inversion::NoSolution
+                            }
+                        } else if target % c == 0 {
+                            go(sub, target / c, var, env)?
+                        } else {
+                            Inversion::NoSolution
+                        }
+                    }
+                    Bop::Pow => {
+                        if a_has {
+                            // var ** c — rarely used; invert by integer root.
+                            Inversion::CantInvert
+                        } else {
+                            // c ** var == target → var = log_c(target).
+                            if c < 2 || target < 1 {
+                                Inversion::NoSolution
+                            } else {
+                                let mut v = 0i64;
+                                let mut acc = 1i64;
+                                while acc < target {
+                                    acc *= c;
+                                    v += 1;
+                                }
+                                if acc == target {
+                                    go(sub, v, var, env)?
+                                } else {
+                                    Inversion::NoSolution
+                                }
+                            }
+                        }
+                    }
+                    _ => Inversion::CantInvert,
+                }
+            }
+            Expr::Un(Uop::Neg, inner) => go(inner, -target, var, env)?,
+            _ => Inversion::CantInvert,
+        })
+    }
+    go(expr, target, var, env)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lambdapack::interp::enumerate_nodes;
+    use crate::lambdapack::programs;
+    use std::collections::BTreeMap;
+
+    fn args(n: i64) -> Env {
+        [("N".to_string(), n)].into_iter().collect()
+    }
+
+    fn env(pairs: &[(&str, i64)]) -> Env {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn cholesky_chol_children_are_trsms() {
+        let p = programs::cholesky();
+        let a = Analyzer::new(&p, &args(4));
+        // chol at i=1 writes O[1,1]; children: trsm j in 2..4 at i=1.
+        let node = Node::new(0, env(&[("i", 1)]));
+        let ch = a.children(&node).unwrap();
+        let ids: Vec<String> = ch.iter().map(|n| n.id()).collect();
+        assert_eq!(ids, vec!["1@i=1,j=2", "1@i=1,j=3"]);
+    }
+
+    #[test]
+    fn cholesky_trsm_children_are_syrks() {
+        let p = programs::cholesky();
+        let a = Analyzer::new(&p, &args(4));
+        // trsm (i=0, j=2) writes O[2,0]. Readers: syrk i=0 with
+        // (j=2, k in 1..3) via O[j,i], plus (j in 2..4, k=2) via O[k,i].
+        let node = Node::new(1, env(&[("i", 0), ("j", 2)]));
+        let mut ids: Vec<String> = a
+            .children(&node)
+            .unwrap()
+            .iter()
+            .map(|n| n.id())
+            .collect();
+        ids.sort();
+        assert_eq!(
+            ids,
+            vec![
+                "2@i=0,j=2,k=1",
+                "2@i=0,j=2,k=2",
+                "2@i=0,j=3,k=2",
+            ]
+        );
+    }
+
+    #[test]
+    fn cholesky_syrk_child_matches_paper_example() {
+        // Paper §3.2: executing the syrk line with i=0, j=1, k=1 writes
+        // S[1,1,1]; the only child is the chol at i=1.
+        let p = programs::cholesky();
+        let a = Analyzer::new(&p, &args(4));
+        let node = Node::new(2, env(&[("i", 0), ("j", 1), ("k", 1)]));
+        let ch = a.children(&node).unwrap();
+        assert_eq!(ch.len(), 1);
+        assert_eq!(ch[0].id(), "0@i=1");
+    }
+
+    #[test]
+    fn tsqr_nonlinear_solve_matches_paper_example() {
+        // Paper §3.2: writing R[6,1] (qr_factor2 at level=0, i=6 with
+        // N=8 — our line 1), the child via the nonlinear read
+        // R[i + 2**level, level] is (i=4, level=1).
+        let p = programs::tsqr();
+        let a = Analyzer::new(&p, &args(8));
+        let node = Node::new(1, env(&[("level", 0), ("i", 6)]));
+        let ch = a.children(&node).unwrap();
+        assert_eq!(ch.len(), 1);
+        assert_eq!(ch[0].id(), "1@i=4,level=1");
+    }
+
+    #[test]
+    fn parents_inverse_of_children_cholesky() {
+        check_parents_children_inverse(&programs::cholesky(), &args(5));
+    }
+
+    #[test]
+    fn parents_inverse_of_children_tsqr() {
+        check_parents_children_inverse(&programs::tsqr(), &args(8));
+        check_parents_children_inverse(&programs::tsqr(), &args(5));
+    }
+
+    #[test]
+    fn parents_inverse_of_children_gemm() {
+        check_parents_children_inverse(&programs::gemm(), &args(3));
+    }
+
+    #[test]
+    fn parents_inverse_of_children_lu() {
+        check_parents_children_inverse(&programs::lu(), &args(4));
+    }
+
+    #[test]
+    fn parents_inverse_of_children_qr() {
+        check_parents_children_inverse(&programs::qr(), &args(4));
+    }
+
+    #[test]
+    fn parents_inverse_of_children_bdfac() {
+        check_parents_children_inverse(&programs::bdfac(), &args(3));
+    }
+
+    /// Cross-validate the solver against brute force: expand the full
+    /// DAG by enumeration and compare children/parents per node.
+    fn check_parents_children_inverse(p: &crate::lambdapack::ast::Program, a: &Env) {
+        let an = Analyzer::new(p, a);
+        let mut nodes = Vec::new();
+        enumerate_nodes(p, a, &mut |n, _| nodes.push(n.clone())).unwrap();
+        // Brute-force location maps.
+        let mut writers: BTreeMap<Loc, Vec<Node>> = BTreeMap::new();
+        let mut readers: BTreeMap<Loc, Vec<Node>> = BTreeMap::new();
+        for n in &nodes {
+            let t = an.concretize(n).unwrap();
+            for w in &t.writes {
+                writers.entry(w.clone()).or_default().push(n.clone());
+            }
+            for r in &t.reads {
+                readers.entry(r.clone()).or_default().push(n.clone());
+            }
+        }
+        // SSA: every location written at most once.
+        for (loc, ws) in &writers {
+            assert_eq!(ws.len(), 1, "location {loc} written more than once");
+        }
+        for n in &nodes {
+            let t = an.concretize(n).unwrap();
+            // children == union of brute-force readers of writes
+            let mut expect: BTreeSet<Node> = BTreeSet::new();
+            for w in &t.writes {
+                for r in readers.get(w).into_iter().flatten() {
+                    if r != n {
+                        expect.insert(r.clone());
+                    }
+                }
+            }
+            let got: BTreeSet<Node> = an.children(n).unwrap().into_iter().collect();
+            assert_eq!(got, expect, "children mismatch at {}", n.id());
+            // parents == union of brute-force writers of reads
+            let mut expect_p: BTreeSet<Node> = BTreeSet::new();
+            for r in &t.reads {
+                for w in writers.get(r).into_iter().flatten() {
+                    if w != n {
+                        expect_p.insert(w.clone());
+                    }
+                }
+            }
+            let got_p: BTreeSet<Node> = an.parents(n).unwrap().into_iter().collect();
+            assert_eq!(got_p, expect_p, "parents mismatch at {}", n.id());
+        }
+    }
+
+    #[test]
+    fn roots_cholesky_single() {
+        let p = programs::cholesky();
+        let a = Analyzer::new(&p, &args(6));
+        let roots = a.roots().unwrap();
+        assert_eq!(roots.len(), 1);
+        assert_eq!(roots[0].id(), "0@i=0");
+    }
+
+    #[test]
+    fn roots_gemm_all_first_products() {
+        let p = programs::gemm();
+        let a = Analyzer::new(&p, &args(3));
+        let roots = a.roots().unwrap();
+        assert_eq!(roots.len(), 9); // every (i, j) first product
+        assert!(roots.iter().all(|r| r.line == 0));
+    }
+
+    #[test]
+    fn roots_tsqr_all_leaves() {
+        let p = programs::tsqr();
+        let a = Analyzer::new(&p, &args(8));
+        let roots = a.roots().unwrap();
+        assert_eq!(roots.len(), 8);
+    }
+
+    #[test]
+    fn is_input_distinguishes_seeded_tiles() {
+        let p = programs::cholesky();
+        let a = Analyzer::new(&p, &args(4));
+        assert!(a.is_input(&Loc::new("S", vec![0, 2, 1])).unwrap());
+        assert!(!a.is_input(&Loc::new("S", vec![1, 2, 1])).unwrap());
+        assert!(!a.is_input(&Loc::new("O", vec![0, 0])).unwrap());
+    }
+
+    #[test]
+    fn concretize_evaluates_locations() {
+        let p = programs::cholesky();
+        let a = Analyzer::new(&p, &args(4));
+        let t = a
+            .concretize(&Node::new(2, env(&[("i", 1), ("j", 2), ("k", 2)])))
+            .unwrap();
+        assert_eq!(t.fn_name, "syrk");
+        assert_eq!(t.writes, vec![Loc::new("S", vec![2, 2, 2])]);
+        assert_eq!(
+            t.reads,
+            vec![
+                Loc::new("S", vec![1, 2, 2]),
+                Loc::new("O", vec![2, 1]),
+                Loc::new("O", vec![2, 1]),
+            ]
+        );
+    }
+
+    #[test]
+    fn out_of_space_locations_have_no_accessors() {
+        let p = programs::cholesky();
+        let a = Analyzer::new(&p, &args(4));
+        assert!(a.find_readers(&Loc::new("O", vec![9, 9])).unwrap().is_empty());
+        assert!(a
+            .find_writers(&Loc::new("S", vec![7, 1, 1]))
+            .unwrap()
+            .is_empty());
+        assert!(a.find_readers(&Loc::new("Zz", vec![0])).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,362 @@
+//! The LAmbdaPACK abstract syntax — Figure 3 of the paper, verbatim,
+//! plus `Pow` (the paper's TSQR program uses `2**level`; the figure's
+//! grammar omits the operator but the example requires it).
+
+use std::fmt;
+
+/// Unary operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Uop {
+    Neg,
+    Not,
+    Log,
+    Ceiling,
+    Floor,
+    Log2,
+}
+
+/// Binary operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Bop {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    And,
+    Or,
+    /// `a ** b` — needed for tree reductions (`2**level`).
+    Pow,
+}
+
+/// Comparison operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Cop {
+    Eq,
+    Ne,
+    Lt,
+    Gt,
+    Le,
+    Ge,
+}
+
+/// Scalar expressions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    Bin(Bop, Box<Expr>, Box<Expr>),
+    Cmp(Cop, Box<Expr>, Box<Expr>),
+    Un(Uop, Box<Expr>),
+    /// Reference to a loop variable or program argument.
+    Ref(String),
+    IntConst(i64),
+    FloatConst(f64),
+}
+
+impl Expr {
+    pub fn int(v: i64) -> Expr {
+        Expr::IntConst(v)
+    }
+
+    pub fn var(name: &str) -> Expr {
+        Expr::Ref(name.to_string())
+    }
+
+    pub fn add(a: Expr, b: Expr) -> Expr {
+        Expr::Bin(Bop::Add, Box::new(a), Box::new(b))
+    }
+
+    pub fn sub(a: Expr, b: Expr) -> Expr {
+        Expr::Bin(Bop::Sub, Box::new(a), Box::new(b))
+    }
+
+    pub fn mul(a: Expr, b: Expr) -> Expr {
+        Expr::Bin(Bop::Mul, Box::new(a), Box::new(b))
+    }
+
+    pub fn pow(a: Expr, b: Expr) -> Expr {
+        Expr::Bin(Bop::Pow, Box::new(a), Box::new(b))
+    }
+
+    /// `2**e` — the tree-reduction stride.
+    pub fn pow2(e: Expr) -> Expr {
+        Expr::pow(Expr::int(2), e)
+    }
+
+    pub fn log2(e: Expr) -> Expr {
+        Expr::Un(Uop::Log2, Box::new(e))
+    }
+
+    /// Free variables referenced by this expression.
+    pub fn free_vars(&self, out: &mut Vec<String>) {
+        match self {
+            Expr::Bin(_, a, b) | Expr::Cmp(_, a, b) => {
+                a.free_vars(out);
+                b.free_vars(out);
+            }
+            Expr::Un(_, e) => e.free_vars(out),
+            Expr::Ref(n) => {
+                if !out.contains(n) {
+                    out.push(n.clone());
+                }
+            }
+            Expr::IntConst(_) | Expr::FloatConst(_) => {}
+        }
+    }
+
+    /// Does the expression reference `var`?
+    pub fn references(&self, var: &str) -> bool {
+        match self {
+            Expr::Bin(_, a, b) | Expr::Cmp(_, a, b) => a.references(var) || b.references(var),
+            Expr::Un(_, e) => e.references(var),
+            Expr::Ref(n) => n == var,
+            _ => false,
+        }
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Bin(op, a, b) => {
+                let s = match op {
+                    Bop::Add => "+",
+                    Bop::Sub => "-",
+                    Bop::Mul => "*",
+                    Bop::Div => "/",
+                    Bop::Mod => "%",
+                    Bop::And => "and",
+                    Bop::Or => "or",
+                    Bop::Pow => "**",
+                };
+                write!(f, "({a} {s} {b})")
+            }
+            Expr::Cmp(op, a, b) => {
+                let s = match op {
+                    Cop::Eq => "==",
+                    Cop::Ne => "!=",
+                    Cop::Lt => "<",
+                    Cop::Gt => ">",
+                    Cop::Le => "<=",
+                    Cop::Ge => ">=",
+                };
+                write!(f, "({a} {s} {b})")
+            }
+            Expr::Un(op, e) => match op {
+                Uop::Neg => write!(f, "(-{e})"),
+                Uop::Not => write!(f, "(not {e})"),
+                Uop::Log => write!(f, "log({e})"),
+                Uop::Ceiling => write!(f, "ceiling({e})"),
+                Uop::Floor => write!(f, "floor({e})"),
+                Uop::Log2 => write!(f, "log2({e})"),
+            },
+            Expr::Ref(n) => write!(f, "{n}"),
+            Expr::IntConst(v) => write!(f, "{v}"),
+            Expr::FloatConst(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+/// A symbolic tile reference: `matrix_name[e0, e1, …]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IdxExpr {
+    pub matrix: String,
+    pub indices: Vec<Expr>,
+}
+
+impl IdxExpr {
+    pub fn new(matrix: &str, indices: Vec<Expr>) -> Self {
+        IdxExpr {
+            matrix: matrix.to_string(),
+            indices,
+        }
+    }
+}
+
+impl fmt::Display for IdxExpr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[", self.matrix)?;
+        for (i, e) in self.indices.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{e}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Statements.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stmt {
+    /// A kernel invocation — the only way tiles are produced/consumed.
+    /// `line` is the statement's stable id within the program (assigned
+    /// by [`Program::renumber`]); a DAG node is `(line, loop indices)`.
+    KernelCall {
+        line: usize,
+        fn_name: String,
+        outputs: Vec<IdxExpr>,
+        mat_inputs: Vec<IdxExpr>,
+        scalar_inputs: Vec<Expr>,
+    },
+    /// Scalar assignment.
+    Assign { name: String, val: Expr },
+    If {
+        cond: Expr,
+        body: Vec<Stmt>,
+        else_body: Vec<Stmt>,
+    },
+    For {
+        var: String,
+        min: Expr,
+        max: Expr,
+        step: Expr,
+        body: Vec<Stmt>,
+    },
+}
+
+/// A LAmbdaPACK program: a named routine with scalar integer arguments
+/// (matrix names are free — they denote object-store prefixes).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Program {
+    pub name: String,
+    /// Scalar (integer) parameters, e.g. `N` = grid dimension.
+    pub args: Vec<String>,
+    /// Matrix parameters (object-store namespaces).
+    pub matrices: Vec<String>,
+    pub body: Vec<Stmt>,
+}
+
+impl Program {
+    pub fn new(name: &str, args: &[&str], matrices: &[&str], body: Vec<Stmt>) -> Self {
+        let mut p = Program {
+            name: name.to_string(),
+            args: args.iter().map(|s| s.to_string()).collect(),
+            matrices: matrices.iter().map(|s| s.to_string()).collect(),
+            body,
+        };
+        p.renumber();
+        p
+    }
+
+    /// Assign stable, dense line ids (0..#kernel-calls) to every
+    /// `KernelCall` in program order.
+    pub fn renumber(&mut self) {
+        fn walk(stmts: &mut [Stmt], next: &mut usize) {
+            for s in stmts {
+                match s {
+                    Stmt::KernelCall { line, .. } => {
+                        *line = *next;
+                        *next += 1;
+                    }
+                    Stmt::If {
+                        body, else_body, ..
+                    } => {
+                        walk(body, next);
+                        walk(else_body, next);
+                    }
+                    Stmt::For { body, .. } => walk(body, next),
+                    Stmt::Assign { .. } => {}
+                }
+            }
+        }
+        let mut next = 0;
+        walk(&mut self.body, &mut next);
+    }
+
+    /// Number of kernel-call lines.
+    pub fn num_lines(&self) -> usize {
+        fn count(stmts: &[Stmt]) -> usize {
+            stmts
+                .iter()
+                .map(|s| match s {
+                    Stmt::KernelCall { .. } => 1,
+                    Stmt::If {
+                        body, else_body, ..
+                    } => count(body) + count(else_body),
+                    Stmt::For { body, .. } => count(body),
+                    Stmt::Assign { .. } => 0,
+                })
+                .sum()
+        }
+        count(&self.body)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kc(name: &str) -> Stmt {
+        Stmt::KernelCall {
+            line: usize::MAX,
+            fn_name: name.into(),
+            outputs: vec![],
+            mat_inputs: vec![],
+            scalar_inputs: vec![],
+        }
+    }
+
+    #[test]
+    fn renumber_assigns_dense_ids() {
+        let p = Program::new(
+            "t",
+            &["N"],
+            &["A"],
+            vec![
+                kc("a"),
+                Stmt::For {
+                    var: "i".into(),
+                    min: Expr::int(0),
+                    max: Expr::var("N"),
+                    step: Expr::int(1),
+                    body: vec![
+                        kc("b"),
+                        Stmt::If {
+                            cond: Expr::Cmp(
+                                Cop::Lt,
+                                Box::new(Expr::var("i")),
+                                Box::new(Expr::int(3)),
+                            ),
+                            body: vec![kc("c")],
+                            else_body: vec![kc("d")],
+                        },
+                    ],
+                },
+            ],
+        );
+        assert_eq!(p.num_lines(), 4);
+        // Collect line ids in order.
+        fn lines(stmts: &[Stmt], out: &mut Vec<usize>) {
+            for s in stmts {
+                match s {
+                    Stmt::KernelCall { line, .. } => out.push(*line),
+                    Stmt::If {
+                        body, else_body, ..
+                    } => {
+                        lines(body, out);
+                        lines(else_body, out);
+                    }
+                    Stmt::For { body, .. } => lines(body, out),
+                    _ => {}
+                }
+            }
+        }
+        let mut v = vec![];
+        lines(&p.body, &mut v);
+        assert_eq!(v, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn expr_display_roundtrippable_shape() {
+        let e = Expr::add(Expr::var("i"), Expr::pow2(Expr::var("level")));
+        assert_eq!(format!("{e}"), "(i + (2 ** level))");
+    }
+
+    #[test]
+    fn free_vars_dedup() {
+        let e = Expr::add(Expr::var("i"), Expr::mul(Expr::var("i"), Expr::var("j")));
+        let mut v = vec![];
+        e.free_vars(&mut v);
+        assert_eq!(v, vec!["i".to_string(), "j".to_string()]);
+    }
+}

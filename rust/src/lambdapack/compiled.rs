@@ -1,0 +1,467 @@
+//! The compiled-program wire format.
+//!
+//! The whole point of LAmbdaPACK (§3.2, Table 3) is that workers never
+//! receive the task DAG — they receive the *program*, whose size is
+//! constant in the matrix dimension, and re-derive dependencies
+//! locally. This module is that wire format: a compact binary encoding
+//! of a [`Program`] (plus its argument bindings) that the engine hands
+//! to every worker. Table 3's "Compiled Program (MB)" column is
+//! `encode(...).len()` here — a few hundred bytes to ~2 KB for every
+//! algorithm in the library, independent of N.
+
+use crate::lambdapack::ast::{Bop, Cop, Expr, IdxExpr, Program, Stmt, Uop};
+use crate::lambdapack::interp::Env;
+use anyhow::{bail, Context, Result};
+
+// ---- primitive encoders ----
+
+fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn put_i64(out: &mut Vec<u8>, v: i64) {
+    // zigzag
+    put_varint(out, ((v << 1) ^ (v >> 63)) as u64);
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_varint(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn byte(&mut self) -> Result<u8> {
+        let b = *self.buf.get(self.pos).context("truncated program")?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn varint(&mut self) -> Result<u64> {
+        let mut v = 0u64;
+        let mut shift = 0;
+        loop {
+            let b = self.byte()?;
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+            if shift > 63 {
+                bail!("varint overflow");
+            }
+        }
+    }
+
+    fn i64(&mut self) -> Result<i64> {
+        let z = self.varint()?;
+        Ok(((z >> 1) as i64) ^ -((z & 1) as i64))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.varint()? as usize;
+        let end = self.pos + len;
+        if end > self.buf.len() {
+            bail!("truncated string");
+        }
+        let s = std::str::from_utf8(&self.buf[self.pos..end])?.to_string();
+        self.pos = end;
+        Ok(s)
+    }
+}
+
+// ---- expr/stmt encoding ----
+
+fn bop_tag(op: Bop) -> u8 {
+    match op {
+        Bop::Add => 0,
+        Bop::Sub => 1,
+        Bop::Mul => 2,
+        Bop::Div => 3,
+        Bop::Mod => 4,
+        Bop::And => 5,
+        Bop::Or => 6,
+        Bop::Pow => 7,
+    }
+}
+
+fn bop_from(t: u8) -> Result<Bop> {
+    Ok(match t {
+        0 => Bop::Add,
+        1 => Bop::Sub,
+        2 => Bop::Mul,
+        3 => Bop::Div,
+        4 => Bop::Mod,
+        5 => Bop::And,
+        6 => Bop::Or,
+        7 => Bop::Pow,
+        _ => bail!("bad bop tag {t}"),
+    })
+}
+
+fn cop_tag(op: Cop) -> u8 {
+    match op {
+        Cop::Eq => 0,
+        Cop::Ne => 1,
+        Cop::Lt => 2,
+        Cop::Gt => 3,
+        Cop::Le => 4,
+        Cop::Ge => 5,
+    }
+}
+
+fn cop_from(t: u8) -> Result<Cop> {
+    Ok(match t {
+        0 => Cop::Eq,
+        1 => Cop::Ne,
+        2 => Cop::Lt,
+        3 => Cop::Gt,
+        4 => Cop::Le,
+        5 => Cop::Ge,
+        _ => bail!("bad cop tag {t}"),
+    })
+}
+
+fn uop_tag(op: Uop) -> u8 {
+    match op {
+        Uop::Neg => 0,
+        Uop::Not => 1,
+        Uop::Log => 2,
+        Uop::Ceiling => 3,
+        Uop::Floor => 4,
+        Uop::Log2 => 5,
+    }
+}
+
+fn uop_from(t: u8) -> Result<Uop> {
+    Ok(match t {
+        0 => Uop::Neg,
+        1 => Uop::Not,
+        2 => Uop::Log,
+        3 => Uop::Ceiling,
+        4 => Uop::Floor,
+        5 => Uop::Log2,
+        _ => bail!("bad uop tag {t}"),
+    })
+}
+
+fn put_expr(out: &mut Vec<u8>, e: &Expr) {
+    match e {
+        Expr::Bin(op, a, b) => {
+            out.push(0);
+            out.push(bop_tag(*op));
+            put_expr(out, a);
+            put_expr(out, b);
+        }
+        Expr::Cmp(op, a, b) => {
+            out.push(1);
+            out.push(cop_tag(*op));
+            put_expr(out, a);
+            put_expr(out, b);
+        }
+        Expr::Un(op, a) => {
+            out.push(2);
+            out.push(uop_tag(*op));
+            put_expr(out, a);
+        }
+        Expr::Ref(n) => {
+            out.push(3);
+            put_str(out, n);
+        }
+        Expr::IntConst(v) => {
+            out.push(4);
+            put_i64(out, *v);
+        }
+        Expr::FloatConst(v) => {
+            out.push(5);
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+fn get_expr(r: &mut Reader) -> Result<Expr> {
+    Ok(match r.byte()? {
+        0 => {
+            let op = bop_from(r.byte()?)?;
+            Expr::Bin(op, Box::new(get_expr(r)?), Box::new(get_expr(r)?))
+        }
+        1 => {
+            let op = cop_from(r.byte()?)?;
+            Expr::Cmp(op, Box::new(get_expr(r)?), Box::new(get_expr(r)?))
+        }
+        2 => {
+            let op = uop_from(r.byte()?)?;
+            Expr::Un(op, Box::new(get_expr(r)?))
+        }
+        3 => Expr::Ref(r.str()?),
+        4 => Expr::IntConst(r.i64()?),
+        5 => {
+            let mut b = [0u8; 8];
+            for x in &mut b {
+                *x = r.byte()?;
+            }
+            Expr::FloatConst(f64::from_le_bytes(b))
+        }
+        t => bail!("bad expr tag {t}"),
+    })
+}
+
+fn put_idx(out: &mut Vec<u8>, ix: &IdxExpr) {
+    put_str(out, &ix.matrix);
+    put_varint(out, ix.indices.len() as u64);
+    for e in &ix.indices {
+        put_expr(out, e);
+    }
+}
+
+fn get_idx(r: &mut Reader) -> Result<IdxExpr> {
+    let matrix = r.str()?;
+    let n = r.varint()? as usize;
+    let mut indices = Vec::with_capacity(n);
+    for _ in 0..n {
+        indices.push(get_expr(r)?);
+    }
+    Ok(IdxExpr { matrix, indices })
+}
+
+fn put_stmts(out: &mut Vec<u8>, stmts: &[Stmt]) {
+    put_varint(out, stmts.len() as u64);
+    for s in stmts {
+        match s {
+            Stmt::KernelCall {
+                line,
+                fn_name,
+                outputs,
+                mat_inputs,
+                scalar_inputs,
+            } => {
+                out.push(0);
+                put_varint(out, *line as u64);
+                put_str(out, fn_name);
+                put_varint(out, outputs.len() as u64);
+                for o in outputs {
+                    put_idx(out, o);
+                }
+                put_varint(out, mat_inputs.len() as u64);
+                for i in mat_inputs {
+                    put_idx(out, i);
+                }
+                put_varint(out, scalar_inputs.len() as u64);
+                for e in scalar_inputs {
+                    put_expr(out, e);
+                }
+            }
+            Stmt::Assign { name, val } => {
+                out.push(1);
+                put_str(out, name);
+                put_expr(out, val);
+            }
+            Stmt::If {
+                cond,
+                body,
+                else_body,
+            } => {
+                out.push(2);
+                put_expr(out, cond);
+                put_stmts(out, body);
+                put_stmts(out, else_body);
+            }
+            Stmt::For {
+                var,
+                min,
+                max,
+                step,
+                body,
+            } => {
+                out.push(3);
+                put_str(out, var);
+                put_expr(out, min);
+                put_expr(out, max);
+                put_expr(out, step);
+                put_stmts(out, body);
+            }
+        }
+    }
+}
+
+fn get_stmts(r: &mut Reader) -> Result<Vec<Stmt>> {
+    let n = r.varint()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(match r.byte()? {
+            0 => {
+                let line = r.varint()? as usize;
+                let fn_name = r.str()?;
+                let no = r.varint()? as usize;
+                let mut outputs = Vec::with_capacity(no);
+                for _ in 0..no {
+                    outputs.push(get_idx(r)?);
+                }
+                let ni = r.varint()? as usize;
+                let mut mat_inputs = Vec::with_capacity(ni);
+                for _ in 0..ni {
+                    mat_inputs.push(get_idx(r)?);
+                }
+                let ns = r.varint()? as usize;
+                let mut scalar_inputs = Vec::with_capacity(ns);
+                for _ in 0..ns {
+                    scalar_inputs.push(get_expr(r)?);
+                }
+                Stmt::KernelCall {
+                    line,
+                    fn_name,
+                    outputs,
+                    mat_inputs,
+                    scalar_inputs,
+                }
+            }
+            1 => Stmt::Assign {
+                name: r.str()?,
+                val: get_expr(r)?,
+            },
+            2 => Stmt::If {
+                cond: get_expr(r)?,
+                body: get_stmts(r)?,
+                else_body: get_stmts(r)?,
+            },
+            3 => Stmt::For {
+                var: r.str()?,
+                min: get_expr(r)?,
+                max: get_expr(r)?,
+                step: get_expr(r)?,
+                body: get_stmts(r)?,
+            },
+            t => bail!("bad stmt tag {t}"),
+        });
+    }
+    Ok(out)
+}
+
+const MAGIC: &[u8; 4] = b"LPK1";
+
+/// Encode a program plus its concrete argument bindings — the complete
+/// payload a worker needs to execute and analyze any task.
+pub fn encode(program: &Program, args: &Env) -> Vec<u8> {
+    let mut out = Vec::with_capacity(512);
+    out.extend_from_slice(MAGIC);
+    put_str(&mut out, &program.name);
+    put_varint(&mut out, program.args.len() as u64);
+    for a in &program.args {
+        put_str(&mut out, a);
+    }
+    put_varint(&mut out, program.matrices.len() as u64);
+    for m in &program.matrices {
+        put_str(&mut out, m);
+    }
+    put_stmts(&mut out, &program.body);
+    put_varint(&mut out, args.len() as u64);
+    for (k, v) in args {
+        put_str(&mut out, k);
+        put_i64(&mut out, *v);
+    }
+    out
+}
+
+/// Decode [`encode`]'s output.
+pub fn decode(buf: &[u8]) -> Result<(Program, Env)> {
+    if buf.len() < 4 || &buf[..4] != MAGIC {
+        bail!("not a compiled LAmbdaPACK program (bad magic)");
+    }
+    let mut r = Reader { buf, pos: 4 };
+    let name = r.str()?;
+    let na = r.varint()? as usize;
+    let mut args_names = Vec::with_capacity(na);
+    for _ in 0..na {
+        args_names.push(r.str()?);
+    }
+    let nm = r.varint()? as usize;
+    let mut matrices = Vec::with_capacity(nm);
+    for _ in 0..nm {
+        matrices.push(r.str()?);
+    }
+    let body = get_stmts(&mut r)?;
+    let nb = r.varint()? as usize;
+    let mut env = Env::new();
+    for _ in 0..nb {
+        let k = r.str()?;
+        let v = r.i64()?;
+        env.insert(k, v);
+    }
+    Ok((
+        Program {
+            name,
+            args: args_names,
+            matrices,
+            body,
+        },
+        env,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lambdapack::programs;
+
+    fn args(n: i64) -> Env {
+        [("N".to_string(), n)].into_iter().collect()
+    }
+
+    #[test]
+    fn roundtrip_all_programs() {
+        for name in programs::ALL {
+            let p = programs::by_name(name).unwrap().program;
+            let bytes = encode(&p, &args(1_000_000));
+            let (p2, a2) = decode(&bytes).unwrap();
+            assert_eq!(p, p2, "{name}");
+            assert_eq!(a2.get("N"), Some(&1_000_000));
+        }
+    }
+
+    #[test]
+    fn encoding_is_constant_in_n() {
+        // The Table-3 property: program size does not grow with the
+        // matrix (only the varint argument value, by a few bytes).
+        let p = programs::cholesky();
+        let small = encode(&p, &args(16)).len();
+        let huge = encode(&p, &args(1 << 40)).len();
+        assert!(huge - small <= 8, "small={small} huge={huge}");
+    }
+
+    #[test]
+    fn encoding_is_compact() {
+        // The paper quotes ~2 KB; every shipped program must beat it.
+        for name in programs::ALL {
+            let p = programs::by_name(name).unwrap().program;
+            let len = encode(&p, &args(1 << 20)).len();
+            assert!(len <= 2048, "{name}: {len} B > 2 KB");
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        assert!(decode(b"XXXXjunk").is_err());
+        assert!(decode(b"").is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let p = programs::cholesky();
+        let bytes = encode(&p, &args(8));
+        for cut in [5, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+}

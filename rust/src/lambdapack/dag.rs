@@ -1,0 +1,224 @@
+//! Explicit DAG expansion — what LAmbdaPACK exists to avoid.
+//!
+//! Materializes the full task graph of a (program, args) pair:
+//! every node, every edge. This is (a) the "Full DAG" baseline of
+//! Table 3 (time + memory vs. the implicit analyzer), (b) the input
+//! the discrete-event simulator schedules against, and (c) the ground
+//! truth the analyzer is property-tested against.
+
+use crate::lambdapack::analysis::Analyzer;
+use crate::lambdapack::ast::Program;
+use crate::lambdapack::interp::{enumerate_nodes, Env, Node};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// The explicit task graph.
+#[derive(Clone, Debug, Default)]
+pub struct Dag {
+    /// Node list; index = dense node id.
+    pub nodes: Vec<Node>,
+    /// node id → ids of downstream dependents.
+    pub children: Vec<Vec<u32>>,
+    /// node id → number of upstream dependencies.
+    pub num_parents: Vec<u32>,
+    /// node id → kernel name index into `kernels`.
+    pub kernel_of: Vec<u16>,
+    /// Interned kernel names.
+    pub kernels: Vec<String>,
+    /// node id → (tiles read, tiles written) — for the communication
+    /// accounting in the simulator / Figure 7.
+    pub io_counts: Vec<(u8, u8)>,
+}
+
+impl Dag {
+    /// Expand the full DAG. O(nodes × program-size) time,
+    /// O(nodes + edges) memory.
+    pub fn expand(program: &Program, args: &Env) -> Result<Dag> {
+        let analyzer = Analyzer::new(program, args);
+        let mut nodes = Vec::new();
+        enumerate_nodes(program, args, &mut |n, _| nodes.push(n.clone()))?;
+        let index: HashMap<&Node, u32> = nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n, i as u32))
+            .collect();
+        let mut children: Vec<Vec<u32>> = vec![Vec::new(); nodes.len()];
+        let mut num_parents = vec![0u32; nodes.len()];
+        let mut kernels: Vec<String> = Vec::new();
+        let mut kernel_ids: HashMap<String, u16> = HashMap::new();
+        let mut kernel_of = Vec::with_capacity(nodes.len());
+        let mut io_counts = Vec::with_capacity(nodes.len());
+        for (i, node) in nodes.iter().enumerate() {
+            let task = analyzer.concretize(node)?;
+            let kid = *kernel_ids.entry(task.fn_name.clone()).or_insert_with(|| {
+                kernels.push(task.fn_name.clone());
+                (kernels.len() - 1) as u16
+            });
+            kernel_of.push(kid);
+            io_counts.push((task.reads.len() as u8, task.writes.len() as u8));
+            for ch in analyzer.children(node)? {
+                let j = index[&ch];
+                children[i].push(j);
+                num_parents[j as usize] += 1;
+            }
+        }
+        Ok(Dag {
+            nodes,
+            children,
+            num_parents,
+            kernel_of,
+            kernels,
+            io_counts,
+        })
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.children.iter().map(|c| c.len()).sum()
+    }
+
+    /// Roots: nodes with no parents.
+    pub fn roots(&self) -> Vec<u32> {
+        (0..self.nodes.len() as u32)
+            .filter(|&i| self.num_parents[i as usize] == 0)
+            .collect()
+    }
+
+    /// Estimated resident size in bytes (nodes, edge lists, metadata) —
+    /// the Table-3 "Expanded DAG (MB)" column.
+    pub fn memory_bytes(&self) -> usize {
+        let node_bytes: usize = self
+            .nodes
+            .iter()
+            .map(|n| {
+                std::mem::size_of::<Node>()
+                    + n.env
+                        .iter()
+                        .map(|(k, _)| k.len() + std::mem::size_of::<(String, i64)>() + 32)
+                        .sum::<usize>()
+            })
+            .sum();
+        let edge_bytes: usize = self
+            .children
+            .iter()
+            .map(|c| c.capacity() * 4 + std::mem::size_of::<Vec<u32>>())
+            .sum();
+        node_bytes
+            + edge_bytes
+            + self.num_parents.capacity() * 4
+            + self.kernel_of.capacity() * 2
+            + self.io_counts.capacity() * 2
+    }
+
+    /// Topological levels (wavefronts): level[i] = longest path from a
+    /// root to node i. Level sizes are the paper's Figure-1
+    /// "available parallelism over time" profile.
+    pub fn levels(&self) -> Vec<u32> {
+        let mut level = vec![0u32; self.num_nodes()];
+        let mut indeg: Vec<u32> = self.num_parents.clone();
+        let mut queue: std::collections::VecDeque<u32> = self.roots().into();
+        while let Some(i) = queue.pop_front() {
+            for &c in &self.children[i as usize] {
+                let parent_level = level[i as usize];
+                let cl = &mut level[c as usize];
+                *cl = (*cl).max(parent_level + 1);
+                indeg[c as usize] -= 1;
+                if indeg[c as usize] == 0 {
+                    queue.push_back(c);
+                }
+            }
+        }
+        level
+    }
+
+    /// Critical-path length in nodes (max level + 1).
+    pub fn critical_path_len(&self) -> usize {
+        self.levels().iter().copied().max().map_or(0, |m| m as usize + 1)
+    }
+
+    /// Histogram of wavefront widths: width[l] = #nodes at level l —
+    /// the parallelism profile (Figure 1).
+    pub fn parallelism_profile(&self) -> Vec<usize> {
+        let levels = self.levels();
+        let depth = levels.iter().copied().max().map_or(0, |m| m as usize + 1);
+        let mut width = vec![0usize; depth];
+        for &l in &levels {
+            width[l as usize] += 1;
+        }
+        width
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lambdapack::programs;
+
+    fn args(n: i64) -> Env {
+        [("N".to_string(), n)].into_iter().collect()
+    }
+
+    #[test]
+    fn cholesky_dag_shape() {
+        let p = programs::cholesky();
+        let d = Dag::expand(&p, &args(4)).unwrap();
+        // N=4: 4 chol + 6 trsm + Σ syrk (see interp tests) nodes.
+        assert_eq!(d.num_nodes(), 20);
+        assert_eq!(d.roots().len(), 1);
+        // DAG is acyclic and fully reachable from the root for Cholesky.
+        let levels = d.levels();
+        assert!(levels.iter().all(|&l| (l as usize) < d.num_nodes()));
+    }
+
+    #[test]
+    fn edges_match_parent_counts() {
+        for name in programs::ALL {
+            let p = programs::by_name(name).unwrap().program;
+            let d = Dag::expand(&p, &args(4)).unwrap();
+            let total_children: usize = d.children.iter().map(|c| c.len()).sum();
+            let total_parents: usize = d.num_parents.iter().map(|&x| x as usize).sum();
+            assert_eq!(total_children, total_parents, "{name}");
+        }
+    }
+
+    #[test]
+    fn cholesky_critical_path() {
+        // Chain: chol_i → trsm(i, i+1) → syrk(i, i+1, i+1) → chol_{i+1};
+        // 3 nodes per iteration except the last: 3(N-1) + 1.
+        for n in [2i64, 3, 4, 5] {
+            let d = Dag::expand(&programs::cholesky(), &args(n)).unwrap();
+            assert_eq!(d.critical_path_len(), (3 * (n - 1) + 1) as usize, "N={n}");
+        }
+    }
+
+    #[test]
+    fn tsqr_depth_logarithmic() {
+        let d = Dag::expand(&programs::tsqr(), &args(16)).unwrap();
+        // 1 leaf level + log2(16) reduction levels.
+        assert_eq!(d.critical_path_len(), 5);
+    }
+
+    #[test]
+    fn parallelism_profile_sums_to_nodes() {
+        let d = Dag::expand(&programs::cholesky(), &args(6)).unwrap();
+        assert_eq!(d.parallelism_profile().iter().sum::<usize>(), d.num_nodes());
+    }
+
+    #[test]
+    fn gemm_profile_flat_then_done() {
+        // GEMM has N² independent chains of length N: profile is
+        // constant N² width for N levels.
+        let d = Dag::expand(&programs::gemm(), &args(3)).unwrap();
+        assert_eq!(d.parallelism_profile(), vec![9, 9, 9]);
+    }
+
+    #[test]
+    fn memory_grows_with_n() {
+        let d4 = Dag::expand(&programs::cholesky(), &args(4)).unwrap();
+        let d8 = Dag::expand(&programs::cholesky(), &args(8)).unwrap();
+        assert!(d8.memory_bytes() > d4.memory_bytes());
+    }
+}

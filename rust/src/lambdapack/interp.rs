@@ -1,0 +1,374 @@
+//! Scalar evaluation and iteration-space enumeration.
+//!
+//! LAmbdaPACK programs compute tile indices with integer scalar
+//! arithmetic. This module evaluates [`Expr`]s under an environment of
+//! loop-variable/argument bindings, and enumerates the concrete
+//! `(line, loop-indices)` nodes of a program — the explicit walk used
+//! by the DAG expander and the engine's root scan (the *analyzer* in
+//! [`crate::lambdapack::analysis`] never enumerates the full space).
+
+use crate::lambdapack::ast::{Bop, Cop, Expr, Program, Stmt, Uop};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A binding environment: loop variables and program arguments.
+/// BTreeMap so environments have a canonical order (node identity,
+/// hashing, serialization all rely on it).
+pub type Env = BTreeMap<String, i64>;
+
+/// Scalar values (integers dominate; floats appear only in scalar
+/// kernel arguments).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_int(self) -> Result<i64> {
+        match self {
+            Value::Int(v) => Ok(v),
+            Value::Float(f) if f.fract() == 0.0 => Ok(f as i64),
+            other => bail!("expected integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(b),
+            Value::Int(v) => Ok(v != 0),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn as_f64(self) -> f64 {
+        match self {
+            Value::Int(v) => v as f64,
+            Value::Float(f) => f,
+            Value::Bool(b) => b as i64 as f64,
+        }
+    }
+}
+
+/// Evaluate an expression under `env`.
+pub fn eval(expr: &Expr, env: &Env) -> Result<Value> {
+    Ok(match expr {
+        Expr::IntConst(v) => Value::Int(*v),
+        Expr::FloatConst(v) => Value::Float(*v),
+        Expr::Ref(name) => Value::Int(
+            *env.get(name)
+                .with_context(|| format!("unbound variable `{name}`"))?,
+        ),
+        Expr::Un(op, e) => {
+            let v = eval(e, env)?;
+            match op {
+                Uop::Neg => match v {
+                    Value::Int(i) => Value::Int(-i),
+                    Value::Float(f) => Value::Float(-f),
+                    Value::Bool(_) => bail!("neg of bool"),
+                },
+                Uop::Not => Value::Bool(!v.as_bool()?),
+                Uop::Log => Value::Float(v.as_f64().ln()),
+                Uop::Log2 => {
+                    // Integer log2 when exact (tree reductions rely on
+                    // ceil(log2(n)) loop bounds being integers).
+                    let f = v.as_f64().log2();
+                    Value::Float(f)
+                }
+                Uop::Ceiling => Value::Int(v.as_f64().ceil() as i64),
+                Uop::Floor => Value::Int(v.as_f64().floor() as i64),
+            }
+        }
+        Expr::Cmp(op, a, b) => {
+            let (a, b) = (eval(a, env)?.as_f64(), eval(b, env)?.as_f64());
+            Value::Bool(match op {
+                Cop::Eq => a == b,
+                Cop::Ne => a != b,
+                Cop::Lt => a < b,
+                Cop::Gt => a > b,
+                Cop::Le => a <= b,
+                Cop::Ge => a >= b,
+            })
+        }
+        Expr::Bin(op, a, b) => {
+            match op {
+                Bop::And => return Ok(Value::Bool(eval(a, env)?.as_bool()? && eval(b, env)?.as_bool()?)),
+                Bop::Or => return Ok(Value::Bool(eval(a, env)?.as_bool()? || eval(b, env)?.as_bool()?)),
+                _ => {}
+            }
+            let (va, vb) = (eval(a, env)?, eval(b, env)?);
+            match (va, vb) {
+                (Value::Int(x), Value::Int(y)) => match op {
+                    Bop::Add => Value::Int(x + y),
+                    Bop::Sub => Value::Int(x - y),
+                    Bop::Mul => Value::Int(x * y),
+                    Bop::Div => {
+                        if y == 0 {
+                            bail!("division by zero");
+                        }
+                        Value::Int(x.div_euclid(y))
+                    }
+                    Bop::Mod => {
+                        if y == 0 {
+                            bail!("mod by zero");
+                        }
+                        Value::Int(x.rem_euclid(y))
+                    }
+                    Bop::Pow => {
+                        if y < 0 {
+                            bail!("negative integer power");
+                        }
+                        Value::Int(x.pow(y as u32))
+                    }
+                    Bop::And | Bop::Or => unreachable!(),
+                },
+                _ => {
+                    let (x, y) = (va.as_f64(), vb.as_f64());
+                    match op {
+                        Bop::Add => Value::Float(x + y),
+                        Bop::Sub => Value::Float(x - y),
+                        Bop::Mul => Value::Float(x * y),
+                        Bop::Div => Value::Float(x / y),
+                        Bop::Mod => Value::Float(x.rem_euclid(y)),
+                        Bop::Pow => Value::Float(x.powf(y)),
+                        Bop::And | Bop::Or => unreachable!(),
+                    }
+                }
+            }
+        }
+    })
+}
+
+/// Evaluate an expression to an integer (the common case for indices
+/// and loop bounds). `log2` results are ceiled — the paper's TSQR bound
+/// `log2(N)` iterates ceil(log2(N)) times for non-power-of-two N.
+pub fn eval_int(expr: &Expr, env: &Env) -> Result<i64> {
+    match eval(expr, env)? {
+        Value::Int(v) => Ok(v),
+        Value::Float(f) => Ok(f.ceil() as i64),
+        Value::Bool(_) => bail!("expected integer, got bool"),
+    }
+}
+
+/// A concrete DAG node: a kernel-call line plus the loop bindings that
+/// reach it (the paper's `(line_number, loop_indices)` tuple).
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Node {
+    pub line: usize,
+    pub env: Env,
+}
+
+impl Node {
+    pub fn new(line: usize, env: Env) -> Self {
+        Node { line, env }
+    }
+
+    /// A compact, stable textual id (used as a queue payload / state
+    /// store key), e.g. `2@i=1,j=3`.
+    pub fn id(&self) -> String {
+        let vars: Vec<String> = self.env.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        format!("{}@{}", self.line, vars.join(","))
+    }
+
+    /// Parse a node id produced by [`Node::id`].
+    pub fn parse(s: &str) -> Result<Node> {
+        let (line, rest) = s
+            .split_once('@')
+            .with_context(|| format!("bad node id `{s}`"))?;
+        let mut env = Env::new();
+        if !rest.is_empty() {
+            for kv in rest.split(',') {
+                let (k, v) = kv
+                    .split_once('=')
+                    .with_context(|| format!("bad binding `{kv}` in `{s}`"))?;
+                env.insert(k.to_string(), v.parse()?);
+            }
+        }
+        Ok(Node {
+            line: line.parse()?,
+            env,
+        })
+    }
+}
+
+/// Walk the full iteration space of `program` under the argument
+/// bindings `args`, invoking `f` for every kernel-call node in program
+/// order. Node identity is the *loop* bindings visible at the call
+/// (program args and lexically-scoped scalar `Assign`s are excluded —
+/// both are recomputable from the loop bindings, matching the
+/// analyzer's convention).
+pub fn enumerate_nodes<F: FnMut(&Node, &Stmt)>(
+    program: &Program,
+    args: &Env,
+    f: &mut F,
+) -> Result<()> {
+    fn full_env(args: &Env, loops: &Env, scalars: &[(String, i64)]) -> Env {
+        let mut full = args.clone();
+        full.extend(loops.iter().map(|(k, v)| (k.clone(), *v)));
+        full.extend(scalars.iter().cloned());
+        full
+    }
+    fn walk<F: FnMut(&Node, &Stmt)>(
+        stmts: &[Stmt],
+        args: &Env,
+        loops: &mut Env,
+        scalars: &mut Vec<(String, i64)>,
+        f: &mut F,
+    ) -> Result<()> {
+        let scope = scalars.len(); // assigns are scoped to this block
+        for s in stmts {
+            match s {
+                Stmt::KernelCall { line, .. } => {
+                    f(&Node::new(*line, loops.clone()), s);
+                }
+                Stmt::Assign { name, val } => {
+                    let v = eval_int(val, &full_env(args, loops, scalars))?;
+                    scalars.push((name.clone(), v));
+                }
+                Stmt::If {
+                    cond,
+                    body,
+                    else_body,
+                } => {
+                    if eval(cond, &full_env(args, loops, scalars))?.as_bool()? {
+                        walk(body, args, loops, scalars, f)?;
+                    } else {
+                        walk(else_body, args, loops, scalars, f)?;
+                    }
+                }
+                Stmt::For {
+                    var,
+                    min,
+                    max,
+                    step,
+                    body,
+                } => {
+                    let full = full_env(args, loops, scalars);
+                    let lo = eval_int(min, &full)?;
+                    let hi = eval_int(max, &full)?;
+                    let st = eval_int(step, &full)?;
+                    if st <= 0 {
+                        bail!("non-positive loop step");
+                    }
+                    let mut v = lo;
+                    while v < hi {
+                        loops.insert(var.clone(), v);
+                        walk(body, args, loops, scalars, f)?;
+                        v += st;
+                    }
+                    loops.remove(var);
+                }
+            }
+        }
+        scalars.truncate(scope);
+        Ok(())
+    }
+    let mut loops = Env::new();
+    let mut scalars = Vec::new();
+    walk(&program.body, args, &mut loops, &mut scalars, f)
+}
+
+/// Count the nodes in the iteration space (cheap full walk, no edges).
+pub fn count_nodes(program: &Program, args: &Env) -> Result<usize> {
+    let mut n = 0;
+    enumerate_nodes(program, args, &mut |_, _| n += 1)?;
+    Ok(n)
+}
+
+/// Find the statement (kernel call) with the given line id.
+pub fn find_line(program: &Program, line: usize) -> Option<&Stmt> {
+    fn walk(stmts: &[Stmt], line: usize) -> Option<&Stmt> {
+        for s in stmts {
+            match s {
+                Stmt::KernelCall { line: l, .. } if *l == line => return Some(s),
+                Stmt::If {
+                    body, else_body, ..
+                } => {
+                    if let Some(x) = walk(body, line).or_else(|| walk(else_body, line)) {
+                        return Some(x);
+                    }
+                }
+                Stmt::For { body, .. } => {
+                    if let Some(x) = walk(body, line) {
+                        return Some(x);
+                    }
+                }
+                _ => {}
+            }
+        }
+        None
+    }
+    walk(&program.body, line)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lambdapack::programs;
+
+    fn env(pairs: &[(&str, i64)]) -> Env {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn eval_arithmetic() {
+        let e = Expr::add(
+            Expr::mul(Expr::var("i"), Expr::int(3)),
+            Expr::pow2(Expr::var("l")),
+        );
+        let v = eval_int(&e, &env(&[("i", 2), ("l", 3)])).unwrap();
+        assert_eq!(v, 14);
+    }
+
+    #[test]
+    fn eval_unbound_fails() {
+        assert!(eval(&Expr::var("zzz"), &Env::new()).is_err());
+    }
+
+    #[test]
+    fn node_id_roundtrip() {
+        let n = Node::new(3, env(&[("i", 1), ("j", 12)]));
+        assert_eq!(Node::parse(&n.id()).unwrap(), n);
+        let n0 = Node::new(0, Env::new());
+        assert_eq!(Node::parse(&n0.id()).unwrap(), n0);
+    }
+
+    #[test]
+    fn cholesky_node_count() {
+        // For grid dimension N the Cholesky program has:
+        //   N chol + Σ_i (N-1-i) trsm + Σ_i Σ_{j>i} (j-i) syrk nodes.
+        let p = programs::cholesky();
+        for n in [1i64, 2, 3, 5, 8] {
+            let mut expected = n as usize; // chol
+            for i in 0..n {
+                expected += (n - 1 - i) as usize; // trsm
+                for j in (i + 1)..n {
+                    expected += (j - i) as usize; // syrk k in [i+1, j+1)
+                }
+            }
+            let count = count_nodes(&p, &env(&[("N", n)])).unwrap();
+            assert_eq!(count, expected, "N={n}");
+        }
+    }
+
+    #[test]
+    fn tsqr_node_count() {
+        // N leaf QRs + (N-1) pair reductions for power-of-two N.
+        let p = programs::tsqr();
+        for n in [2i64, 4, 8, 16] {
+            let count = count_nodes(&p, &env(&[("N", n)])).unwrap();
+            assert_eq!(count, (2 * n - 1) as usize, "N={n}");
+        }
+    }
+
+    #[test]
+    fn find_line_locates_kernel_calls() {
+        let p = programs::cholesky();
+        for l in 0..p.num_lines() {
+            let s = find_line(&p, l).unwrap();
+            assert!(matches!(s, Stmt::KernelCall { line, .. } if *line == l));
+        }
+        assert!(find_line(&p, 999).is_none());
+    }
+}

@@ -1,0 +1,40 @@
+//! LAmbdaPACK — the paper's domain-specific language for tiled linear
+//! algebra (§3).
+//!
+//! A LAmbdaPACK program is a small imperative routine over matrix
+//! *tiles*: `for` loops, `if` statements, scalar arithmetic, and calls
+//! to native kernels (`chol`, `trsm`, `syrk`, `gemm`, `qr_factor`, …)
+//! whose tile arguments are referenced by symbolic index expressions.
+//! Every tile index is written at most once (static single assignment),
+//! which is what makes the fault-tolerance protocol recomputation-free.
+//!
+//! The modules mirror the paper's pipeline:
+//!
+//! * [`ast`] — the Figure-3 grammar.
+//! * [`parser`] — the Figure-4/5 surface syntax (python-like).
+//! * [`interp`] — scalar expression evaluation and iteration-space
+//!   enumeration.
+//! * [`analysis`] — Algorithm 2: *runtime* dependency analysis. Given a
+//!   concrete array location, find every `(line, loop-indices)` node
+//!   that reads (children) or writes (parents) it, by solving the index
+//!   equations — affine systems exactly, nonlinear (`2**level`) terms by
+//!   back-substitution, with bounded enumeration as the fallback.
+//! * [`compiled`] — the constant-size binary program format (the
+//!   "2 KB for a 16M-node DAG" claim of Table 3).
+//! * [`dag`] — *explicit* DAG expansion, the baseline LAmbdaPACK
+//!   replaces (Table 3's "Full DAG" column) and what the simulator and
+//!   the profile figures consume.
+//! * [`programs`] — the algorithm library: Cholesky, TSQR, GEMM,
+//!   block LU, and the BDFAC-style banded reduction used by the SVD
+//!   driver.
+
+pub mod analysis;
+pub mod ast;
+pub mod compiled;
+pub mod dag;
+pub mod interp;
+pub mod parser;
+pub mod programs;
+
+pub use analysis::Analyzer;
+pub use ast::{Expr, IdxExpr, Program, Stmt};

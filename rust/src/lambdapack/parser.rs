@@ -1,0 +1,698 @@
+//! The LAmbdaPACK surface syntax — the python-like notation of
+//! Figures 4 and 5 of the paper.
+//!
+//! ```text
+//! def cholesky(O, S, N: int):
+//!     for i in range(0, N):
+//!         O[i,i] = chol(S[i,i,i])
+//!         for j in range(i+1, N):
+//!             O[j,i] = trsm(O[i,i], S[i,j,i])
+//!             for k in range(i+1, j+1):
+//!                 S[i+1,j,k] = syrk(S[i,j,k], O[j,i], O[k,i])
+//! ```
+//!
+//! Indentation-sensitive, python-style. Parameters with a `: int`
+//! annotation (or the conventional upper-case `N`) are scalar
+//! arguments; the rest are matrix names. Multiple outputs use tuple
+//! syntax: `(L[i,i], U[i,i]) = lu_block(S[i,i,i])`.
+
+use crate::lambdapack::ast::{Bop, Cop, Expr, IdxExpr, Program, Stmt, Uop};
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+enum Tok {
+    Name(String),
+    Int(i64),
+    Float(f64),
+    Sym(String), // operators and punctuation
+    Newline,
+    Indent,
+    Dedent,
+    Eof,
+}
+
+/// Tokenize with python-style indentation tracking.
+fn lex(src: &str) -> Result<Vec<Tok>> {
+    let mut toks = Vec::new();
+    let mut indents = vec![0usize];
+    for raw_line in src.lines() {
+        let line = raw_line.split('#').next().unwrap_or("");
+        if line.trim().is_empty() {
+            continue;
+        }
+        let indent = line.len() - line.trim_start().len();
+        let cur = *indents.last().unwrap();
+        if indent > cur {
+            indents.push(indent);
+            toks.push(Tok::Indent);
+        } else {
+            while indent < *indents.last().unwrap() {
+                indents.pop();
+                toks.push(Tok::Dedent);
+            }
+            if indent != *indents.last().unwrap() {
+                bail!("inconsistent indentation: {raw_line:?}");
+            }
+        }
+        let mut chars = line.trim_start().chars().peekable();
+        while let Some(&c) = chars.peek() {
+            match c {
+                ' ' | '\t' => {
+                    chars.next();
+                }
+                'a'..='z' | 'A'..='Z' | '_' => {
+                    let mut s = String::new();
+                    while let Some(&c) = chars.peek() {
+                        if c.is_ascii_alphanumeric() || c == '_' {
+                            s.push(c);
+                            chars.next();
+                        } else {
+                            break;
+                        }
+                    }
+                    toks.push(Tok::Name(s));
+                }
+                '0'..='9' => {
+                    let mut s = String::new();
+                    let mut is_float = false;
+                    while let Some(&c) = chars.peek() {
+                        if c.is_ascii_digit() {
+                            s.push(c);
+                            chars.next();
+                        } else if c == '.' && !is_float {
+                            is_float = true;
+                            s.push(c);
+                            chars.next();
+                        } else {
+                            break;
+                        }
+                    }
+                    if is_float {
+                        toks.push(Tok::Float(s.parse()?));
+                    } else {
+                        toks.push(Tok::Int(s.parse()?));
+                    }
+                }
+                '*' => {
+                    chars.next();
+                    if chars.peek() == Some(&'*') {
+                        chars.next();
+                        toks.push(Tok::Sym("**".into()));
+                    } else {
+                        toks.push(Tok::Sym("*".into()));
+                    }
+                }
+                '<' | '>' | '=' | '!' => {
+                    chars.next();
+                    if chars.peek() == Some(&'=') {
+                        chars.next();
+                        toks.push(Tok::Sym(format!("{c}=")));
+                    } else {
+                        toks.push(Tok::Sym(c.to_string()));
+                    }
+                }
+                '+' | '-' | '/' | '%' | '(' | ')' | '[' | ']' | ',' | ':' => {
+                    chars.next();
+                    toks.push(Tok::Sym(c.to_string()));
+                }
+                other => bail!("unexpected character {other:?} in {raw_line:?}"),
+            }
+        }
+        toks.push(Tok::Newline);
+    }
+    while indents.len() > 1 {
+        indents.pop();
+        toks.push(Tok::Dedent);
+    }
+    toks.push(Tok::Eof);
+    Ok(toks)
+}
+
+struct Parser {
+    toks: Vec<Tok>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos]
+    }
+
+    fn next(&mut self) -> Tok {
+        let t = self.toks[self.pos].clone();
+        self.pos += 1;
+        t
+    }
+
+    fn expect_sym(&mut self, s: &str) -> Result<()> {
+        match self.next() {
+            Tok::Sym(x) if x == s => Ok(()),
+            other => bail!("expected `{s}`, got {other:?}"),
+        }
+    }
+
+    fn expect_name(&mut self, s: &str) -> Result<()> {
+        match self.next() {
+            Tok::Name(x) if x == s => Ok(()),
+            other => bail!("expected `{s}`, got {other:?}"),
+        }
+    }
+
+    fn eat_sym(&mut self, s: &str) -> bool {
+        if matches!(self.peek(), Tok::Sym(x) if x == s) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn eat_name(&mut self, s: &str) -> bool {
+        if matches!(self.peek(), Tok::Name(x) if x == s) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, t: Tok) -> Result<()> {
+        let got = self.next();
+        if got != t {
+            bail!("expected {t:?}, got {got:?}");
+        }
+        Ok(())
+    }
+
+    // ---- expressions (precedence climbing) ----
+
+    fn expr(&mut self) -> Result<Expr> {
+        self.or_expr()
+    }
+
+    fn or_expr(&mut self) -> Result<Expr> {
+        let mut e = self.and_expr()?;
+        while self.eat_name("or") {
+            let r = self.and_expr()?;
+            e = Expr::Bin(Bop::Or, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr> {
+        let mut e = self.not_expr()?;
+        while self.eat_name("and") {
+            let r = self.not_expr()?;
+            e = Expr::Bin(Bop::And, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn not_expr(&mut self) -> Result<Expr> {
+        if self.eat_name("not") {
+            let e = self.not_expr()?;
+            return Ok(Expr::Un(Uop::Not, Box::new(e)));
+        }
+        self.cmp_expr()
+    }
+
+    fn cmp_expr(&mut self) -> Result<Expr> {
+        let e = self.add_expr()?;
+        let op = match self.peek() {
+            Tok::Sym(s) => match s.as_str() {
+                "==" => Some(Cop::Eq),
+                "!=" => Some(Cop::Ne),
+                "<" => Some(Cop::Lt),
+                ">" => Some(Cop::Gt),
+                "<=" => Some(Cop::Le),
+                ">=" => Some(Cop::Ge),
+                _ => None,
+            },
+            _ => None,
+        };
+        if let Some(op) = op {
+            self.pos += 1;
+            let r = self.add_expr()?;
+            return Ok(Expr::Cmp(op, Box::new(e), Box::new(r)));
+        }
+        Ok(e)
+    }
+
+    fn add_expr(&mut self) -> Result<Expr> {
+        let mut e = self.mul_expr()?;
+        loop {
+            if self.eat_sym("+") {
+                let r = self.mul_expr()?;
+                e = Expr::Bin(Bop::Add, Box::new(e), Box::new(r));
+            } else if self.eat_sym("-") {
+                let r = self.mul_expr()?;
+                e = Expr::Bin(Bop::Sub, Box::new(e), Box::new(r));
+            } else {
+                break;
+            }
+        }
+        Ok(e)
+    }
+
+    fn mul_expr(&mut self) -> Result<Expr> {
+        let mut e = self.unary_expr()?;
+        loop {
+            if self.eat_sym("*") {
+                let r = self.unary_expr()?;
+                e = Expr::Bin(Bop::Mul, Box::new(e), Box::new(r));
+            } else if self.eat_sym("/") {
+                let r = self.unary_expr()?;
+                e = Expr::Bin(Bop::Div, Box::new(e), Box::new(r));
+            } else if self.eat_sym("%") {
+                let r = self.unary_expr()?;
+                e = Expr::Bin(Bop::Mod, Box::new(e), Box::new(r));
+            } else {
+                break;
+            }
+        }
+        Ok(e)
+    }
+
+    fn unary_expr(&mut self) -> Result<Expr> {
+        if self.eat_sym("-") {
+            let e = self.unary_expr()?;
+            return Ok(Expr::Un(Uop::Neg, Box::new(e)));
+        }
+        self.pow_expr()
+    }
+
+    fn pow_expr(&mut self) -> Result<Expr> {
+        let base = self.atom()?;
+        if self.eat_sym("**") {
+            // Right-associative.
+            let exp = self.unary_expr()?;
+            return Ok(Expr::Bin(Bop::Pow, Box::new(base), Box::new(exp)));
+        }
+        Ok(base)
+    }
+
+    fn atom(&mut self) -> Result<Expr> {
+        match self.next() {
+            Tok::Int(v) => Ok(Expr::IntConst(v)),
+            Tok::Float(v) => Ok(Expr::FloatConst(v)),
+            Tok::Sym(s) if s == "(" => {
+                let e = self.expr()?;
+                self.expect_sym(")")?;
+                Ok(e)
+            }
+            Tok::Name(n) => {
+                // Builtin unary functions.
+                let uop = match n.as_str() {
+                    "log" => Some(Uop::Log),
+                    "log2" => Some(Uop::Log2),
+                    "ceiling" | "ceil" => Some(Uop::Ceiling),
+                    "floor" => Some(Uop::Floor),
+                    _ => None,
+                };
+                if let Some(op) = uop {
+                    self.expect_sym("(")?;
+                    let e = self.expr()?;
+                    self.expect_sym(")")?;
+                    return Ok(Expr::Un(op, Box::new(e)));
+                }
+                Ok(Expr::Ref(n))
+            }
+            other => bail!("unexpected token in expression: {other:?}"),
+        }
+    }
+
+    // ---- index expressions & statements ----
+
+    fn idx_expr(&mut self, matrix: String) -> Result<IdxExpr> {
+        self.expect_sym("[")?;
+        let mut indices = vec![self.expr()?];
+        while self.eat_sym(",") {
+            indices.push(self.expr()?);
+        }
+        self.expect_sym("]")?;
+        Ok(IdxExpr { matrix, indices })
+    }
+
+    fn block(&mut self) -> Result<Vec<Stmt>> {
+        self.expect_sym(":")?;
+        self.expect(Tok::Newline)?;
+        self.expect(Tok::Indent)?;
+        let mut body = Vec::new();
+        loop {
+            match self.peek() {
+                Tok::Dedent => {
+                    self.pos += 1;
+                    break;
+                }
+                Tok::Eof => break,
+                _ => body.push(self.stmt()?),
+            }
+        }
+        Ok(body)
+    }
+
+    fn stmt(&mut self) -> Result<Stmt> {
+        match self.peek().clone() {
+            Tok::Name(n) if n == "for" => {
+                self.pos += 1;
+                let var = match self.next() {
+                    Tok::Name(v) => v,
+                    other => bail!("expected loop variable, got {other:?}"),
+                };
+                self.expect_name("in")?;
+                self.expect_name("range")?;
+                self.expect_sym("(")?;
+                let min = self.expr()?;
+                self.expect_sym(",")?;
+                let max = self.expr()?;
+                let step = if self.eat_sym(",") {
+                    self.expr()?
+                } else {
+                    Expr::IntConst(1)
+                };
+                self.expect_sym(")")?;
+                let body = self.block()?;
+                Ok(Stmt::For {
+                    var,
+                    min,
+                    max,
+                    step,
+                    body,
+                })
+            }
+            Tok::Name(n) if n == "if" => {
+                self.pos += 1;
+                let cond = self.expr()?;
+                let body = self.block()?;
+                let else_body = if self.eat_name("else") {
+                    self.block()?
+                } else {
+                    Vec::new()
+                };
+                Ok(Stmt::If {
+                    cond,
+                    body,
+                    else_body,
+                })
+            }
+            Tok::Sym(s) if s == "(" => {
+                // Tuple assignment: (A[..], B[..]) = kernel(...).
+                self.pos += 1;
+                let mut outputs = Vec::new();
+                loop {
+                    let m = match self.next() {
+                        Tok::Name(m) => m,
+                        other => bail!("expected matrix name in tuple, got {other:?}"),
+                    };
+                    outputs.push(self.idx_expr(m)?);
+                    if !self.eat_sym(",") {
+                        break;
+                    }
+                }
+                self.expect_sym(")")?;
+                self.expect_sym("=")?;
+                self.kernel_call(outputs)
+            }
+            Tok::Name(name) => {
+                self.pos += 1;
+                if matches!(self.peek(), Tok::Sym(s) if s == "[") {
+                    // Matrix write: A[..] = kernel(...).
+                    let out = self.idx_expr(name)?;
+                    self.expect_sym("=")?;
+                    self.kernel_call(vec![out])
+                } else {
+                    // Scalar assignment: x = expr.
+                    self.expect_sym("=")?;
+                    let val = self.expr()?;
+                    self.expect(Tok::Newline)?;
+                    Ok(Stmt::Assign { name, val })
+                }
+            }
+            other => bail!("unexpected token at statement start: {other:?}"),
+        }
+    }
+
+    /// Parse `kernel(arg, arg, …)\n` — args with brackets are matrix
+    /// inputs, bare expressions are scalar inputs.
+    fn kernel_call(&mut self, outputs: Vec<IdxExpr>) -> Result<Stmt> {
+        let fn_name = match self.next() {
+            Tok::Name(f) => f,
+            other => bail!("expected kernel name, got {other:?}"),
+        };
+        self.expect_sym("(")?;
+        let mut mat_inputs = Vec::new();
+        let mut scalar_inputs = Vec::new();
+        if !self.eat_sym(")") {
+            loop {
+                // Matrix arg iff a name directly followed by `[`.
+                let is_mat = matches!(self.peek(), Tok::Name(_))
+                    && matches!(self.toks.get(self.pos + 1), Some(Tok::Sym(s)) if s == "[");
+                if is_mat {
+                    let m = match self.next() {
+                        Tok::Name(m) => m,
+                        _ => unreachable!(),
+                    };
+                    mat_inputs.push(self.idx_expr(m)?);
+                } else {
+                    scalar_inputs.push(self.expr()?);
+                }
+                if !self.eat_sym(",") {
+                    break;
+                }
+            }
+            self.expect_sym(")")?;
+        }
+        self.expect(Tok::Newline)?;
+        Ok(Stmt::KernelCall {
+            line: usize::MAX,
+            fn_name,
+            outputs,
+            mat_inputs,
+            scalar_inputs,
+        })
+    }
+}
+
+/// Parse a LAmbdaPACK source file into a [`Program`].
+pub fn parse(src: &str) -> Result<Program> {
+    let toks = lex(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    p.expect_name("def").context("program must start with `def`")?;
+    let name = match p.next() {
+        Tok::Name(n) => n,
+        other => bail!("expected program name, got {other:?}"),
+    };
+    p.expect_sym("(")?;
+    let mut args = Vec::new();
+    let mut matrices = Vec::new();
+    if !p.eat_sym(")") {
+        loop {
+            let pname = match p.next() {
+                Tok::Name(n) => n,
+                other => bail!("expected parameter name, got {other:?}"),
+            };
+            // Optional `: type` annotation. `int` → scalar; `BigMatrix`
+            // (or anything else) → matrix. Without an annotation, a
+            // single upper-case letter or ALL-CAPS name is scalar by
+            // convention only if it is `N`-like; default: matrix for
+            // leading-uppercase multichar… keep it simple: `int` or the
+            // name `N`/`M`/`K` → scalar, else matrix.
+            let mut is_scalar = matches!(pname.as_str(), "N" | "M" | "K");
+            if p.eat_sym(":") {
+                let ty = match p.next() {
+                    Tok::Name(t) => t,
+                    other => bail!("expected type name, got {other:?}"),
+                };
+                is_scalar = ty == "int" || ty == "Int";
+            }
+            if is_scalar {
+                args.push(pname);
+            } else {
+                matrices.push(pname);
+            }
+            if !p.eat_sym(",") {
+                break;
+            }
+        }
+        p.expect_sym(")")?;
+    }
+    let body = p.block()?;
+    // Trailing EOF (after dedents).
+    let prog = Program {
+        name,
+        args: args.clone(),
+        matrices,
+        body,
+    };
+    let mut prog = prog;
+    prog.renumber();
+    Ok(prog)
+}
+
+/// The Figure-4 Cholesky source, verbatim (module-level so tests and
+/// docs share it).
+pub const CHOLESKY_SRC: &str = "\
+def cholesky(O, S, N: int):
+    for i in range(0, N):
+        O[i,i] = chol(S[i,i,i])
+        for j in range(i+1, N):
+            O[j,i] = trsm(O[i,i], S[i,j,i])
+            for k in range(i+1, j+1):
+                S[i+1,j,k] = syrk(S[i,j,k], O[j,i], O[k,i])
+";
+
+/// The Figure-5 TSQR source (with the non-power-of-two guard).
+pub const TSQR_SRC: &str = "\
+def tsqr(A, R, N: int):
+    for i in range(0, N):
+        R[i, 0] = qr_factor(A[i])
+    for level in range(0, log2(N)):
+        for i in range(0, N, 2**(level+1)):
+            if i + 2**level < N:
+                R[i, level+1] = qr_factor2(R[i, level], R[i+2**level, level])
+            else:
+                R[i, level+1] = copy(R[i, level])
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lambdapack::interp::count_nodes;
+    use crate::lambdapack::programs;
+
+    fn args(n: i64) -> crate::lambdapack::interp::Env {
+        [("N".to_string(), n)].into_iter().collect()
+    }
+
+    #[test]
+    fn parses_figure4_cholesky_to_builder_ast() {
+        let parsed = parse(CHOLESKY_SRC).unwrap();
+        let built = programs::cholesky();
+        assert_eq!(parsed, built, "parsed Figure-4 source != builder AST");
+    }
+
+    #[test]
+    fn parses_figure5_tsqr_to_builder_ast() {
+        let parsed = parse(TSQR_SRC).unwrap();
+        let built = programs::tsqr();
+        assert_eq!(parsed, built, "parsed Figure-5 source != builder AST");
+    }
+
+    #[test]
+    fn parsed_cholesky_same_node_count() {
+        let parsed = parse(CHOLESKY_SRC).unwrap();
+        assert_eq!(
+            count_nodes(&parsed, &args(6)).unwrap(),
+            count_nodes(&programs::cholesky(), &args(6)).unwrap()
+        );
+    }
+
+    #[test]
+    fn tuple_outputs_parse() {
+        let src = "\
+def lu(L, U, S, N: int):
+    for i in range(0, N):
+        (L[i,i], U[i,i]) = lu_block(S[i,i,i])
+";
+        let p = parse(src).unwrap();
+        assert_eq!(p.num_lines(), 1);
+        match &p.body[0] {
+            Stmt::For { body, .. } => match &body[0] {
+                Stmt::KernelCall { outputs, .. } => assert_eq!(outputs.len(), 2),
+                other => panic!("expected kernel call, got {other:?}"),
+            },
+            other => panic!("expected for, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scalar_kernel_args_parse() {
+        let src = "\
+def scale(A, B, N: int):
+    for i in range(0, N):
+        B[i] = smul(A[i], 2.5)
+";
+        let p = parse(src).unwrap();
+        match &p.body[0] {
+            Stmt::For { body, .. } => match &body[0] {
+                Stmt::KernelCall {
+                    scalar_inputs,
+                    mat_inputs,
+                    ..
+                } => {
+                    assert_eq!(mat_inputs.len(), 1);
+                    assert_eq!(scalar_inputs, &vec![Expr::FloatConst(2.5)]);
+                }
+                other => panic!("{other:?}"),
+            },
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let src = "\
+def t(A, B, N: int):
+    # a comment line
+
+    for i in range(0, N):
+        B[i] = copy(A[i])  # trailing comment
+";
+        let p = parse(src).unwrap();
+        assert_eq!(p.num_lines(), 1);
+    }
+
+    #[test]
+    fn bad_indentation_rejected() {
+        let src = "\
+def t(A, B, N: int):
+    for i in range(0, N):
+        B[i] = copy(A[i])
+      B[i] = copy(A[i])
+";
+        assert!(parse(src).is_err());
+    }
+
+    #[test]
+    fn scalar_assignment_parses() {
+        let src = "\
+def t(A, B, N: int):
+    for i in range(0, N):
+        half = i / 2
+        B[i] = copy(A[half])
+";
+        let p = parse(src).unwrap();
+        match &p.body[0] {
+            Stmt::For { body, .. } => {
+                assert!(matches!(&body[0], Stmt::Assign { name, .. } if name == "half"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn operator_precedence() {
+        let src = "\
+def t(A, B, N: int):
+    B[2*N+1, N-1*2] = copy(A[2**N+1])
+";
+        let p = parse(src).unwrap();
+        match &p.body[0] {
+            Stmt::KernelCall { outputs, mat_inputs, .. } => {
+                assert_eq!(
+                    outputs[0].indices[0],
+                    Expr::add(Expr::mul(Expr::int(2), Expr::var("N")), Expr::int(1))
+                );
+                assert_eq!(
+                    outputs[0].indices[1],
+                    Expr::sub(Expr::var("N"), Expr::mul(Expr::int(1), Expr::int(2)))
+                );
+                assert_eq!(
+                    mat_inputs[0].indices[0],
+                    Expr::add(Expr::pow(Expr::int(2), Expr::var("N")), Expr::int(1))
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

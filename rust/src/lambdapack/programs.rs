@@ -1,0 +1,784 @@
+//! The tiled-algorithm library: LAmbdaPACK programs for every algorithm
+//! the paper evaluates (§5: Cholesky, GEMM, QR, SVD-via-BDFAC) plus the
+//! TSQR and block-LU programs §3 discusses.
+//!
+//! Program conventions:
+//!
+//! * Scalar argument `N` is the **grid dimension** (number of tile
+//!   rows/cols), not the matrix dimension.
+//! * Intermediate matrices carry an iteration index as their first
+//!   coordinate so every tile location is written exactly once (SSA):
+//!   `S[i, j, k]` is tile (j,k) of the trailing matrix entering outer
+//!   iteration `i`; `S[0, ·, ·]` is the program *input* seeded by the
+//!   client.
+//! * Outputs are read from well-known locations recorded in
+//!   [`ProgramSpec::outputs`] (no copy tasks for extraction unless the
+//!   algorithm needs them).
+
+use crate::lambdapack::ast::{Cop, Expr, IdxExpr, Program, Stmt};
+
+/// Where a program's logical outputs live, e.g. Cholesky's `L[j, i]` =
+/// store key `O[j, i]`.
+#[derive(Clone, Debug)]
+pub struct OutputSpec {
+    /// Matrix (store namespace) holding the output tiles.
+    pub matrix: String,
+    /// Human description of the index convention.
+    pub convention: String,
+}
+
+/// A program plus its I/O conventions.
+#[derive(Clone, Debug)]
+pub struct ProgramSpec {
+    pub program: Program,
+    /// Input matrix namespace(s) the client must seed.
+    pub inputs: Vec<String>,
+    pub outputs: Vec<OutputSpec>,
+}
+
+fn v(name: &str) -> Expr {
+    Expr::var(name)
+}
+
+fn i(val: i64) -> Expr {
+    Expr::int(val)
+}
+
+fn idx(m: &str, ixs: Vec<Expr>) -> IdxExpr {
+    IdxExpr::new(m, ixs)
+}
+
+fn call(fn_name: &str, outputs: Vec<IdxExpr>, inputs: Vec<IdxExpr>) -> Stmt {
+    Stmt::KernelCall {
+        line: usize::MAX, // renumbered by Program::new
+        fn_name: fn_name.to_string(),
+        outputs,
+        mat_inputs: inputs,
+        scalar_inputs: vec![],
+    }
+}
+
+fn for_(var: &str, min: Expr, max: Expr, body: Vec<Stmt>) -> Stmt {
+    Stmt::For {
+        var: var.to_string(),
+        min,
+        max,
+        step: i(1),
+        body,
+    }
+}
+
+fn for_step(var: &str, min: Expr, max: Expr, step: Expr, body: Vec<Stmt>) -> Stmt {
+    Stmt::For {
+        var: var.to_string(),
+        min,
+        max,
+        step,
+        body,
+    }
+}
+
+/// Figure 4 of the paper — communication-avoiding blocked Cholesky.
+///
+/// ```text
+/// def cholesky(O, S, N):
+///     for i in range(0, N):
+///         O[i,i] = chol(S[i,i,i])
+///         for j in range(i+1, N):
+///             O[j,i] = trsm(O[i,i], S[i,j,i])
+///             for k in range(i+1, j+1):
+///                 S[i+1,j,k] = syrk(S[i,j,k], O[j,i], O[k,i])
+/// ```
+///
+/// Input: `S[0, j, k]` = tile (j,k) of the SPD matrix A (lower
+/// triangle, j ≥ k). Output: `O[j, i]` = tile (j,i) of L.
+pub fn cholesky() -> Program {
+    Program::new(
+        "cholesky",
+        &["N"],
+        &["O", "S"],
+        vec![for_(
+            "i",
+            i(0),
+            v("N"),
+            vec![
+                call(
+                    "chol",
+                    vec![idx("O", vec![v("i"), v("i")])],
+                    vec![idx("S", vec![v("i"), v("i"), v("i")])],
+                ),
+                for_(
+                    "j",
+                    Expr::add(v("i"), i(1)),
+                    v("N"),
+                    vec![
+                        call(
+                            "trsm",
+                            vec![idx("O", vec![v("j"), v("i")])],
+                            vec![
+                                idx("O", vec![v("i"), v("i")]),
+                                idx("S", vec![v("i"), v("j"), v("i")]),
+                            ],
+                        ),
+                        for_(
+                            "k",
+                            Expr::add(v("i"), i(1)),
+                            Expr::add(v("j"), i(1)),
+                            vec![call(
+                                "syrk",
+                                vec![idx("S", vec![Expr::add(v("i"), i(1)), v("j"), v("k")])],
+                                vec![
+                                    idx("S", vec![v("i"), v("j"), v("k")]),
+                                    idx("O", vec![v("j"), v("i")]),
+                                    idx("O", vec![v("k"), v("i")]),
+                                ],
+                            )],
+                        ),
+                    ],
+                ),
+            ],
+        )],
+    )
+}
+
+/// Cholesky with I/O conventions.
+pub fn cholesky_spec() -> ProgramSpec {
+    ProgramSpec {
+        program: cholesky(),
+        inputs: vec!["S".into()],
+        outputs: vec![OutputSpec {
+            matrix: "O".into(),
+            convention: "L tile (j,i) at O[j,i], j >= i (lower triangle)".into(),
+        }],
+    }
+}
+
+/// Figure 5 of the paper — Tall-Skinny QR (tree reduction, branching
+/// factor 2), with an `if` guard so non-power-of-two `N` works (odd
+/// survivor tiles are carried up a level unchanged).
+///
+/// ```text
+/// def tsqr(A, R, N):
+///     for i in range(0, N):
+///         R[i, 0] = qr_factor(A[i])
+///     for level in range(0, log2(N)):
+///         for i in range(0, N, 2**(level+1)):
+///             if i + 2**level < N:
+///                 R[i, level+1] = qr_factor2(R[i, level], R[i+2**level, level])
+///             else:
+///                 R[i, level+1] = copy(R[i, level])
+/// ```
+///
+/// Input: `A[i]` — the i-th B×B row-block of the tall matrix.
+/// Output: `R[0, ceil(log2 N)]` — the final R factor.
+pub fn tsqr() -> Program {
+    let two_lvl = Expr::pow2(v("level"));
+    Program::new(
+        "tsqr",
+        &["N"],
+        &["A", "R"],
+        vec![
+            for_(
+                "i",
+                i(0),
+                v("N"),
+                vec![call(
+                    "qr_factor",
+                    vec![idx("R", vec![v("i"), i(0)])],
+                    vec![idx("A", vec![v("i")])],
+                )],
+            ),
+            for_(
+                "level",
+                i(0),
+                Expr::log2(v("N")),
+                vec![for_step(
+                    "i",
+                    i(0),
+                    v("N"),
+                    Expr::pow2(Expr::add(v("level"), i(1))),
+                    vec![Stmt::If {
+                        cond: Expr::Cmp(
+                            Cop::Lt,
+                            Box::new(Expr::add(v("i"), two_lvl.clone())),
+                            Box::new(v("N")),
+                        ),
+                        body: vec![call(
+                            "qr_factor2",
+                            vec![idx("R", vec![v("i"), Expr::add(v("level"), i(1))])],
+                            vec![
+                                idx("R", vec![v("i"), v("level")]),
+                                idx(
+                                    "R",
+                                    vec![Expr::add(v("i"), two_lvl.clone()), v("level")],
+                                ),
+                            ],
+                        )],
+                        else_body: vec![call(
+                            "copy",
+                            vec![idx("R", vec![v("i"), Expr::add(v("level"), i(1))])],
+                            vec![idx("R", vec![v("i"), v("level")])],
+                        )],
+                    }],
+                )],
+            ),
+        ],
+    )
+}
+
+pub fn tsqr_spec() -> ProgramSpec {
+    ProgramSpec {
+        program: tsqr(),
+        inputs: vec!["A".into()],
+        outputs: vec![OutputSpec {
+            matrix: "R".into(),
+            convention: "final R at R[0, ceil(log2 N)]".into(),
+        }],
+    }
+}
+
+/// Tiled matrix multiply C = A·B with sequential K-accumulation
+/// (SSA via the third index of `Ctmp`).
+///
+/// ```text
+/// def gemm(A, B, Ctmp, C, N):
+///     for i in range(0, N):
+///         for j in range(0, N):
+///             Ctmp[i,j,0] = gemm_kernel(A[i,0], B[0,j])
+///             for k in range(1, N):
+///                 Ctmp[i,j,k] = gemm_accum(Ctmp[i,j,k-1], A[i,k], B[k,j])
+/// ```
+///
+/// Output: `Ctmp[i, j, N-1]`.
+pub fn gemm() -> Program {
+    Program::new(
+        "gemm",
+        &["N"],
+        &["A", "B", "Ctmp"],
+        vec![for_(
+            "i",
+            i(0),
+            v("N"),
+            vec![for_(
+                "j",
+                i(0),
+                v("N"),
+                vec![
+                    call(
+                        "gemm_kernel",
+                        vec![idx("Ctmp", vec![v("i"), v("j"), i(0)])],
+                        vec![idx("A", vec![v("i"), i(0)]), idx("B", vec![i(0), v("j")])],
+                    ),
+                    for_(
+                        "k",
+                        i(1),
+                        v("N"),
+                        vec![call(
+                            "gemm_accum",
+                            vec![idx("Ctmp", vec![v("i"), v("j"), v("k")])],
+                            vec![
+                                idx("Ctmp", vec![v("i"), v("j"), Expr::sub(v("k"), i(1))]),
+                                idx("A", vec![v("i"), v("k")]),
+                                idx("B", vec![v("k"), v("j")]),
+                            ],
+                        )],
+                    ),
+                ],
+            )],
+        )],
+    )
+}
+
+pub fn gemm_spec() -> ProgramSpec {
+    ProgramSpec {
+        program: gemm(),
+        inputs: vec!["A".into(), "B".into()],
+        outputs: vec![OutputSpec {
+            matrix: "Ctmp".into(),
+            convention: "C tile (i,j) at Ctmp[i,j,N-1]".into(),
+        }],
+    }
+}
+
+/// Block LU without pivoting (right-looking), for diagonally dominant
+/// matrices. Demonstrates multi-output kernel calls.
+///
+/// ```text
+/// def lu(L, U, S, N):
+///     for i in range(0, N):
+///         (L[i,i], U[i,i]) = lu_block(S[i,i,i])
+///         for j in range(i+1, N):
+///             U[i,j] = trsm_lower(L[i,i], S[i,i,j])
+///             L[j,i] = trsm_upper(U[i,i], S[i,j,i])
+///         for j in range(i+1, N):
+///             for k in range(i+1, N):
+///                 S[i+1,j,k] = gemm_sub(S[i,j,k], L[j,i], U[i,k])
+/// ```
+pub fn lu() -> Program {
+    Program::new(
+        "lu",
+        &["N"],
+        &["L", "U", "S"],
+        vec![for_(
+            "i",
+            i(0),
+            v("N"),
+            vec![
+                call(
+                    "lu_block",
+                    vec![
+                        idx("L", vec![v("i"), v("i")]),
+                        idx("U", vec![v("i"), v("i")]),
+                    ],
+                    vec![idx("S", vec![v("i"), v("i"), v("i")])],
+                ),
+                for_(
+                    "j",
+                    Expr::add(v("i"), i(1)),
+                    v("N"),
+                    vec![
+                        call(
+                            "trsm_lower",
+                            vec![idx("U", vec![v("i"), v("j")])],
+                            vec![
+                                idx("L", vec![v("i"), v("i")]),
+                                idx("S", vec![v("i"), v("i"), v("j")]),
+                            ],
+                        ),
+                        call(
+                            "trsm_upper",
+                            vec![idx("L", vec![v("j"), v("i")])],
+                            vec![
+                                idx("U", vec![v("i"), v("i")]),
+                                idx("S", vec![v("i"), v("j"), v("i")]),
+                            ],
+                        ),
+                    ],
+                ),
+                for_(
+                    "j",
+                    Expr::add(v("i"), i(1)),
+                    v("N"),
+                    vec![for_(
+                        "k",
+                        Expr::add(v("i"), i(1)),
+                        v("N"),
+                        vec![call(
+                            "gemm_sub",
+                            vec![idx("S", vec![Expr::add(v("i"), i(1)), v("j"), v("k")])],
+                            vec![
+                                idx("S", vec![v("i"), v("j"), v("k")]),
+                                idx("L", vec![v("j"), v("i")]),
+                                idx("U", vec![v("i"), v("k")]),
+                            ],
+                        )],
+                    )],
+                ),
+            ],
+        )],
+    )
+}
+
+pub fn lu_spec() -> ProgramSpec {
+    ProgramSpec {
+        program: lu(),
+        inputs: vec!["S".into()],
+        outputs: vec![
+            OutputSpec {
+                matrix: "L".into(),
+                convention: "L tile (j,i) at L[j,i], j >= i".into(),
+            },
+            OutputSpec {
+                matrix: "U".into(),
+                convention: "U tile (i,j) at U[i,j], j >= i".into(),
+            },
+        ],
+    }
+}
+
+/// Square blocked QR via flat-tree CAQR (sequential elimination chain
+/// per panel — the "communication-avoiding QR" structure the paper's
+/// §5 QR numbers exercise, with its characteristically heavy data
+/// movement: every elimination step touches the whole trailing row
+/// pair).
+///
+/// ```text
+/// def qr(S, V, Rc, T, N):
+///     for i in range(0, N):
+///         (V[i,i], Rc[i,i]) = qr_block(S[i,i,i])
+///         for j in range(i+1, N):
+///             (V[i,j], Rc[i,j]) = qr_pair(Rc[i,j-1], S[i,j,i])
+///         for k in range(i+1, N):
+///             T[i,i,k] = qr_apply1(S[i,i,k], V[i,i])
+///             for j in range(i+1, N):
+///                 (T[i,j,k], S[i+1,j,k]) = qr_apply(T[i,j-1,k], S[i,j,k], V[i,j])
+/// ```
+///
+/// Input: `S[0, j, k]` = tile (j,k) of A. Outputs: R's diagonal-row
+/// tiles at `Rc[i, N-1]`-style locations (see spec convention);
+/// the implicit Q lives in the `V` tiles.
+pub fn qr() -> Program {
+    Program::new(
+        "qr",
+        &["N"],
+        &["S", "V", "Rc", "T"],
+        vec![for_(
+            "i",
+            i(0),
+            v("N"),
+            vec![
+                call(
+                    "qr_block",
+                    vec![
+                        idx("V", vec![v("i"), v("i")]),
+                        idx("Rc", vec![v("i"), v("i")]),
+                    ],
+                    vec![idx("S", vec![v("i"), v("i"), v("i")])],
+                ),
+                for_(
+                    "j",
+                    Expr::add(v("i"), i(1)),
+                    v("N"),
+                    vec![call(
+                        "qr_pair",
+                        vec![
+                            idx("V", vec![v("i"), v("j")]),
+                            idx("Rc", vec![v("i"), v("j")]),
+                        ],
+                        vec![
+                            idx("Rc", vec![v("i"), Expr::sub(v("j"), i(1))]),
+                            idx("S", vec![v("i"), v("j"), v("i")]),
+                        ],
+                    )],
+                ),
+                for_(
+                    "k",
+                    Expr::add(v("i"), i(1)),
+                    v("N"),
+                    vec![
+                        call(
+                            "qr_apply1",
+                            vec![idx("T", vec![v("i"), v("i"), v("k")])],
+                            vec![
+                                idx("S", vec![v("i"), v("i"), v("k")]),
+                                idx("V", vec![v("i"), v("i")]),
+                            ],
+                        ),
+                        for_(
+                            "j",
+                            Expr::add(v("i"), i(1)),
+                            v("N"),
+                            vec![call(
+                                "qr_apply",
+                                vec![
+                                    idx("T", vec![v("i"), v("j"), v("k")]),
+                                    idx("S", vec![Expr::add(v("i"), i(1)), v("j"), v("k")]),
+                                ],
+                                vec![
+                                    idx("T", vec![v("i"), Expr::sub(v("j"), i(1)), v("k")]),
+                                    idx("S", vec![v("i"), v("j"), v("k")]),
+                                    idx("V", vec![v("i"), v("j")]),
+                                ],
+                            )],
+                        ),
+                    ],
+                ),
+            ],
+        )],
+    )
+}
+
+pub fn qr_spec() -> ProgramSpec {
+    ProgramSpec {
+        program: qr(),
+        inputs: vec!["S".into()],
+        outputs: vec![
+            OutputSpec {
+                matrix: "Rc".into(),
+                convention: "R diagonal tile (i,i) at Rc[i, N-1] (Rc[i,i] when i = N-1)".into(),
+            },
+            OutputSpec {
+                matrix: "T".into(),
+                convention: "R off-diagonal tile (i,k), k > i, at T[i, N-1, k]".into(),
+            },
+        ],
+    }
+}
+
+/// BDFAC — two-sided banded (block-bidiagonal) reduction, the parallel
+/// phase of the paper's SVD (§5 footnote: "only the reduction to banded
+/// form is done in parallel"). Each outer step QR-eliminates the blocks
+/// below the diagonal of column i (flat chain, like [`qr`]) and then
+/// LQ-eliminates the blocks right of the superdiagonal of row i.
+pub fn bdfac() -> Program {
+    Program::new(
+        "bdfac",
+        &["N"],
+        &["S", "W", "V", "Rc", "T", "P", "Lc", "U"],
+        vec![for_(
+            "i",
+            i(0),
+            v("N"),
+            vec![
+                // --- QR pass on column i (eliminate S[·, j, i], j > i) ---
+                call(
+                    "qr_block",
+                    vec![
+                        idx("V", vec![v("i"), v("i")]),
+                        idx("Rc", vec![v("i"), v("i")]),
+                    ],
+                    vec![idx("S", vec![v("i"), v("i"), v("i")])],
+                ),
+                for_(
+                    "j",
+                    Expr::add(v("i"), i(1)),
+                    v("N"),
+                    vec![call(
+                        "qr_pair",
+                        vec![
+                            idx("V", vec![v("i"), v("j")]),
+                            idx("Rc", vec![v("i"), v("j")]),
+                        ],
+                        vec![
+                            idx("Rc", vec![v("i"), Expr::sub(v("j"), i(1))]),
+                            idx("S", vec![v("i"), v("j"), v("i")]),
+                        ],
+                    )],
+                ),
+                for_(
+                    "k",
+                    Expr::add(v("i"), i(1)),
+                    v("N"),
+                    vec![
+                        call(
+                            "qr_apply1",
+                            vec![idx("T", vec![v("i"), v("i"), v("k")])],
+                            vec![
+                                idx("S", vec![v("i"), v("i"), v("k")]),
+                                idx("V", vec![v("i"), v("i")]),
+                            ],
+                        ),
+                        for_(
+                            "j",
+                            Expr::add(v("i"), i(1)),
+                            v("N"),
+                            vec![call(
+                                "qr_apply",
+                                vec![
+                                    idx("T", vec![v("i"), v("j"), v("k")]),
+                                    // W = post-QR trailing tile, consumed
+                                    // by the LQ pass below.
+                                    idx("W", vec![v("i"), v("j"), v("k")]),
+                                ],
+                                vec![
+                                    idx("T", vec![v("i"), Expr::sub(v("j"), i(1)), v("k")]),
+                                    idx("S", vec![v("i"), v("j"), v("k")]),
+                                    idx("V", vec![v("i"), v("j")]),
+                                ],
+                            )],
+                        ),
+                    ],
+                ),
+                // --- LQ pass on row i (eliminate row tiles right of the
+                //     superdiagonal: T[i, N-1, k] for k > i+1) ---
+                Stmt::If {
+                    cond: Expr::Cmp(
+                        Cop::Lt,
+                        Box::new(Expr::add(v("i"), i(1))),
+                        Box::new(v("N")),
+                    ),
+                    body: vec![
+                        call(
+                            "lq_block",
+                            vec![
+                                idx("P", vec![v("i"), Expr::add(v("i"), i(1))]),
+                                idx("Lc", vec![v("i"), Expr::add(v("i"), i(1))]),
+                            ],
+                            vec![idx(
+                                "T",
+                                vec![v("i"), Expr::sub(v("N"), i(1)), Expr::add(v("i"), i(1))],
+                            )],
+                        ),
+                        for_(
+                            "k",
+                            Expr::add(v("i"), i(2)),
+                            v("N"),
+                            vec![call(
+                                "lq_pair",
+                                vec![
+                                    idx("P", vec![v("i"), v("k")]),
+                                    idx("Lc", vec![v("i"), v("k")]),
+                                ],
+                                vec![
+                                    idx("Lc", vec![v("i"), Expr::sub(v("k"), i(1))]),
+                                    idx("T", vec![v("i"), Expr::sub(v("N"), i(1)), v("k")]),
+                                ],
+                            )],
+                        ),
+                        // Apply the row transformations to the trailing
+                        // matrix: W[i, j, ·] rows get mixed column-wise.
+                        for_(
+                            "j",
+                            Expr::add(v("i"), i(1)),
+                            v("N"),
+                            vec![
+                                call(
+                                    "lq_apply1",
+                                    vec![idx("U", vec![v("i"), v("j"), Expr::add(v("i"), i(1))])],
+                                    vec![
+                                        idx("W", vec![v("i"), v("j"), Expr::add(v("i"), i(1))]),
+                                        idx("P", vec![v("i"), Expr::add(v("i"), i(1))]),
+                                    ],
+                                ),
+                                for_(
+                                    "k",
+                                    Expr::add(v("i"), i(2)),
+                                    v("N"),
+                                    vec![call(
+                                        "lq_apply",
+                                        vec![
+                                            idx("U", vec![v("i"), v("j"), v("k")]),
+                                            idx(
+                                                "S",
+                                                vec![Expr::add(v("i"), i(1)), v("j"), v("k")],
+                                            ),
+                                        ],
+                                        vec![
+                                            idx(
+                                                "U",
+                                                vec![v("i"), v("j"), Expr::sub(v("k"), i(1))],
+                                            ),
+                                            idx("W", vec![v("i"), v("j"), v("k")]),
+                                            idx("P", vec![v("i"), v("k")]),
+                                        ],
+                                    )],
+                                ),
+                                // The fully-folded chain accumulator is the
+                                // leading column of the next trailing matrix.
+                                call(
+                                    "copy",
+                                    vec![idx(
+                                        "S",
+                                        vec![
+                                            Expr::add(v("i"), i(1)),
+                                            v("j"),
+                                            Expr::add(v("i"), i(1)),
+                                        ],
+                                    )],
+                                    vec![idx(
+                                        "U",
+                                        vec![v("i"), v("j"), Expr::sub(v("N"), i(1))],
+                                    )],
+                                ),
+                            ],
+                        ),
+                    ],
+                    else_body: vec![],
+                },
+            ],
+        )],
+    )
+}
+
+pub fn bdfac_spec() -> ProgramSpec {
+    ProgramSpec {
+        program: bdfac(),
+        inputs: vec!["S".into()],
+        outputs: vec![OutputSpec {
+            matrix: "Rc".into(),
+            convention: "band diagonal tile at Rc[i, N-1]; superdiagonal at Lc[i, N-1]".into(),
+        }],
+    }
+}
+
+/// Look up a program spec by algorithm name (CLI entry point).
+pub fn by_name(name: &str) -> Option<ProgramSpec> {
+    match name {
+        "cholesky" => Some(cholesky_spec()),
+        "tsqr" => Some(tsqr_spec()),
+        "gemm" => Some(gemm_spec()),
+        "lu" => Some(lu_spec()),
+        "qr" => Some(qr_spec()),
+        "bdfac" => Some(bdfac_spec()),
+        _ => None,
+    }
+}
+
+/// All algorithm names (for `--help` and sweep benches).
+pub const ALL: &[&str] = &["cholesky", "tsqr", "gemm", "lu", "qr", "bdfac"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lambdapack::interp::{count_nodes, Env};
+
+    fn args(n: i64) -> Env {
+        [("N".to_string(), n)].into_iter().collect()
+    }
+
+    #[test]
+    fn all_programs_buildable_and_numbered() {
+        for name in ALL {
+            let spec = by_name(name).unwrap();
+            assert!(spec.program.num_lines() > 0, "{name}");
+            assert!(!spec.inputs.is_empty(), "{name}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn gemm_node_count_is_n_cubed() {
+        let p = gemm();
+        for n in [1i64, 2, 4, 6] {
+            let c = count_nodes(&p, &args(n)).unwrap();
+            assert_eq!(c, (n * n * n) as usize, "N={n}");
+        }
+    }
+
+    #[test]
+    fn lu_node_count() {
+        // Per i: 1 + 2(N-1-i) + (N-1-i)^2.
+        let p = lu();
+        for n in [1i64, 2, 3, 5] {
+            let mut expected = 0usize;
+            for i in 0..n {
+                let r = (n - 1 - i) as usize;
+                expected += 1 + 2 * r + r * r;
+            }
+            assert_eq!(count_nodes(&p, &args(n)).unwrap(), expected, "N={n}");
+        }
+    }
+
+    #[test]
+    fn qr_node_count() {
+        // Per i: 1 + (N-1-i) + (N-1-i)·(1 + (N-1-i)).
+        let p = qr();
+        for n in [1i64, 2, 3, 5] {
+            let mut expected = 0usize;
+            for i in 0..n {
+                let r = (n - 1 - i) as usize;
+                expected += 1 + r + r * (1 + r);
+            }
+            assert_eq!(count_nodes(&p, &args(n)).unwrap(), expected, "N={n}");
+        }
+    }
+
+    #[test]
+    fn bdfac_enumerates_without_error() {
+        let p = bdfac();
+        for n in [1i64, 2, 3, 4] {
+            let c = count_nodes(&p, &args(n)).unwrap();
+            assert!(c > 0, "N={n} -> {c}");
+        }
+    }
+
+    #[test]
+    fn tsqr_handles_non_power_of_two() {
+        let p = tsqr();
+        // N=3: 3 leaves; level 0: pairs (0,1) + carry 2; level 1: pair (0,2).
+        // ceil(log2 3) = 2 levels -> 3 + 2 + 1 = 6 nodes.
+        assert_eq!(count_nodes(&p, &args(3)).unwrap(), 6);
+        // N=5: 5 + (2 pairs + 1 carry) + (1 pair + 1 carry) + 1 pair = 11.
+        assert_eq!(count_nodes(&p, &args(5)).unwrap(), 11);
+    }
+}

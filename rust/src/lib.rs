@@ -1,0 +1,59 @@
+//! # numpywren — serverless linear algebra
+//!
+//! A from-scratch reproduction of *"numpywren: Serverless Linear Algebra"*
+//! (Shankar et al., 2018) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate provides:
+//!
+//! * [`lambdapack`] — the LAmbdaPACK domain-specific language: AST,
+//!   parser, scalar interpreter, the runtime dependency analyzer
+//!   (Algorithm 2 of the paper: affine integer solving plus nonlinear
+//!   back-substitution), the constant-size compiled-program format, and
+//!   the library of tiled algorithms (Cholesky, TSQR, GEMM, LU, BDFAC).
+//! * [`storage`] — the simulated serverless substrate: an S3-like
+//!   [`storage::ObjectStore`], an SQS-like [`storage::TaskQueue`] with
+//!   visibility-timeout leases, and a Redis-like atomic
+//!   [`storage::StateStore`].
+//! * [`executor`] — the stateless worker: poll → read → compute → write
+//!   → runtime-state update → child enqueue, with lease renewal,
+//!   pipelining, and self-termination at the runtime limit.
+//! * [`provisioner`] — the auto-scaling policy (`sf` scale-up factor,
+//!   `T_timeout` idle scale-down).
+//! * [`engine`] — wires a LAmbdaPACK program, a blocked matrix, and the
+//!   substrate together and runs it to completion on a worker pool.
+//! * [`runtime`] — the PJRT execution path: loads AOT-compiled HLO-text
+//!   artifacts (produced once by `python/compile/aot.py` from JAX +
+//!   Pallas kernels) and serves kernel calls from compiled executables.
+//! * [`kernels`] — kernel dispatch: native f64 oracle implementations
+//!   and the PJRT f32 hot path behind one trait.
+//! * [`linalg`] — the dense linear-algebra substrate (matrices, blocked
+//!   partitioning, reference factorizations).
+//! * [`sim`] — a discrete-event simulator with a calibrated cost model
+//!   used to regenerate the paper-scale experiments (256K–1M matrices,
+//!   180–1800 cores).
+//! * [`baselines`] — ScaLAPACK-like gang-scheduled BSP and Dask-like
+//!   centralized-scheduler baselines.
+//!
+//! See `DESIGN.md` for the complete system inventory and the experiment
+//! index mapping every table and figure of the paper to a bench target.
+
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod drivers;
+pub mod engine;
+pub mod executor;
+pub mod kernels;
+pub mod lambdapack;
+pub mod linalg;
+pub mod metrics;
+pub mod provisioner;
+pub mod runtime;
+pub mod sim;
+pub mod storage;
+pub mod util;
+
+
+pub use config::EngineConfig;
+pub use engine::{Engine, EngineReport};
+pub use lambdapack::{analysis::Analyzer, ast::Program, programs};

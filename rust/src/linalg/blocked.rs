@@ -1,0 +1,223 @@
+//! Blocked (tiled) matrix partitioning.
+//!
+//! numpywren stores a big logical matrix as a grid of B×B tiles in the
+//! object store ("BigMatrix" in the paper). [`BlockLayout`] describes
+//! the grid (with zero-padding of the ragged last row/column so every
+//! tile is exactly B×B — the same choice the paper's implementation
+//! makes so a single AOT-compiled kernel shape serves every tile);
+//! [`BlockedMatrix`] holds the tiles in memory for seeding the store
+//! and for checking results.
+
+use crate::linalg::matrix::Matrix;
+
+/// Grid geometry of a blocked matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockLayout {
+    /// Logical (unpadded) rows.
+    pub rows: usize,
+    /// Logical (unpadded) cols.
+    pub cols: usize,
+    /// Tile side (tiles are square B×B, zero-padded at the fringe).
+    pub block: usize,
+}
+
+impl BlockLayout {
+    pub fn new(rows: usize, cols: usize, block: usize) -> Self {
+        assert!(block > 0, "block size must be positive");
+        BlockLayout { rows, cols, block }
+    }
+
+    pub fn square(n: usize, block: usize) -> Self {
+        Self::new(n, n, block)
+    }
+
+    /// Number of tile rows.
+    pub fn grid_rows(&self) -> usize {
+        self.rows.div_ceil(self.block)
+    }
+
+    /// Number of tile cols.
+    pub fn grid_cols(&self) -> usize {
+        self.cols.div_ceil(self.block)
+    }
+
+    /// Total tiles.
+    pub fn num_tiles(&self) -> usize {
+        self.grid_rows() * self.grid_cols()
+    }
+
+    /// Bytes per (padded) f64 tile.
+    pub fn tile_bytes(&self) -> usize {
+        self.block * self.block * std::mem::size_of::<f64>()
+    }
+
+    /// Valid (unpadded) extent of tile (bi, bj): (height, width).
+    pub fn tile_extent(&self, bi: usize, bj: usize) -> (usize, usize) {
+        let h = (self.rows - bi * self.block).min(self.block);
+        let w = (self.cols - bj * self.block).min(self.block);
+        (h, w)
+    }
+}
+
+/// An in-memory blocked matrix: a grid of B×B tiles (fringe tiles
+/// zero-padded to full size).
+#[derive(Clone, Debug)]
+pub struct BlockedMatrix {
+    pub layout: BlockLayout,
+    tiles: Vec<Matrix>, // row-major over the grid
+}
+
+impl BlockedMatrix {
+    /// Partition a dense matrix into padded tiles.
+    pub fn from_dense(a: &Matrix, block: usize) -> Self {
+        let layout = BlockLayout::new(a.rows(), a.cols(), block);
+        let (gr, gc) = (layout.grid_rows(), layout.grid_cols());
+        let mut tiles = Vec::with_capacity(gr * gc);
+        for bi in 0..gr {
+            for bj in 0..gc {
+                let (h, w) = layout.tile_extent(bi, bj);
+                let win = a.window(bi * block, bj * block, h, w);
+                let mut tile = Matrix::zeros(block, block);
+                tile.set_window(0, 0, &win);
+                // Keep padded diagonal tiles factorizable: put 1s on the
+                // padding diagonal of diagonal tiles so chol/lu of the
+                // fringe tile stays well-defined (identity block has no
+                // effect on the valid region).
+                if bi == bj {
+                    for d in h.max(w)..block {
+                        tile[(d, d)] = 1.0;
+                    }
+                }
+                tiles.push(tile);
+            }
+        }
+        BlockedMatrix { layout, tiles }
+    }
+
+    /// An all-zeros blocked matrix with the given logical shape.
+    pub fn zeros(rows: usize, cols: usize, block: usize) -> Self {
+        let layout = BlockLayout::new(rows, cols, block);
+        let tiles = vec![Matrix::zeros(block, block); layout.num_tiles()];
+        BlockedMatrix { layout, tiles }
+    }
+
+    pub fn grid_rows(&self) -> usize {
+        self.layout.grid_rows()
+    }
+
+    pub fn grid_cols(&self) -> usize {
+        self.layout.grid_cols()
+    }
+
+    /// Borrow tile (bi, bj).
+    pub fn tile(&self, bi: usize, bj: usize) -> &Matrix {
+        &self.tiles[bi * self.grid_cols() + bj]
+    }
+
+    /// Replace tile (bi, bj).
+    pub fn set_tile(&mut self, bi: usize, bj: usize, t: Matrix) {
+        assert_eq!(t.shape(), (self.layout.block, self.layout.block));
+        let gc = self.grid_cols();
+        self.tiles[bi * gc + bj] = t;
+    }
+
+    /// Reassemble the dense logical matrix (padding dropped).
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.layout.rows, self.layout.cols);
+        let b = self.layout.block;
+        for bi in 0..self.grid_rows() {
+            for bj in 0..self.grid_cols() {
+                let (h, w) = self.layout.tile_extent(bi, bj);
+                let win = self.tile(bi, bj).window(0, 0, h, w);
+                out.set_window(bi * b, bj * b, &win);
+            }
+        }
+        out
+    }
+
+    /// Iterate (bi, bj, tile).
+    pub fn iter_tiles(&self) -> impl Iterator<Item = (usize, usize, &Matrix)> {
+        let gc = self.grid_cols();
+        self.tiles
+            .iter()
+            .enumerate()
+            .map(move |(i, t)| (i / gc, i % gc, t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip_exact_multiple() {
+        let mut rng = Rng::new(20);
+        let a = Matrix::randn(12, 12, &mut rng);
+        let b = BlockedMatrix::from_dense(&a, 4);
+        assert_eq!(b.grid_rows(), 3);
+        assert!(b.to_dense().max_abs_diff(&a) == 0.0);
+    }
+
+    #[test]
+    fn roundtrip_ragged() {
+        let mut rng = Rng::new(21);
+        let a = Matrix::randn(13, 10, &mut rng);
+        let b = BlockedMatrix::from_dense(&a, 4);
+        assert_eq!((b.grid_rows(), b.grid_cols()), (4, 3));
+        assert!(b.to_dense().max_abs_diff(&a) == 0.0);
+    }
+
+    #[test]
+    fn padded_diag_tile_has_unit_padding() {
+        let mut rng = Rng::new(22);
+        let a = Matrix::rand_spd(10, &mut rng);
+        let b = BlockedMatrix::from_dense(&a, 4);
+        // Tile (2,2) covers rows 8..10, padded 2 more.
+        let t = b.tile(2, 2);
+        assert_eq!(t[(2, 2)], 1.0);
+        assert_eq!(t[(3, 3)], 1.0);
+        assert_eq!(t[(2, 3)], 0.0);
+    }
+
+    #[test]
+    fn tile_extent_fringe() {
+        let l = BlockLayout::new(13, 10, 4);
+        assert_eq!(l.tile_extent(0, 0), (4, 4));
+        assert_eq!(l.tile_extent(3, 0), (1, 4));
+        assert_eq!(l.tile_extent(0, 2), (4, 2));
+        assert_eq!(l.tile_extent(3, 2), (1, 2));
+    }
+
+    #[test]
+    fn blocked_matmul_agrees_with_dense() {
+        // Sanity: tile-level GEMM over the grid == dense matmul (padding
+        // contributes zeros).
+        let mut rng = Rng::new(23);
+        let a = Matrix::randn(9, 7, &mut rng);
+        let c = Matrix::randn(7, 11, &mut rng);
+        let (ba, bc) = (BlockedMatrix::from_dense(&a, 4), BlockedMatrix::from_dense(&c, 4));
+        let mut out = BlockedMatrix::zeros(9, 11, 4);
+        for bi in 0..ba.grid_rows() {
+            for bj in 0..bc.grid_cols() {
+                let mut acc = Matrix::zeros(4, 4);
+                for bk in 0..ba.grid_cols() {
+                    // Padding of diagonal tiles only affects tiles where
+                    // a is square-padded; a is not SPD-seeded here so we
+                    // build via from_dense on non-square → no unit diag
+                    // (bi==bj tiles of non-square grids are still padded
+                    // with 1s; mask by valid extent instead).
+                    let (h, w) = ba.layout.tile_extent(bi, bk);
+                    let mut ta = Matrix::zeros(4, 4);
+                    ta.set_window(0, 0, &ba.tile(bi, bk).window(0, 0, h, w));
+                    let (h2, w2) = bc.layout.tile_extent(bk, bj);
+                    let mut tc = Matrix::zeros(4, 4);
+                    tc.set_window(0, 0, &bc.tile(bk, bj).window(0, 0, h2, w2));
+                    acc = &acc + &ta.matmul(&tc);
+                }
+                out.set_tile(bi, bj, acc);
+            }
+        }
+        assert!(out.to_dense().max_abs_diff(&a.matmul(&c)) < 1e-10);
+    }
+}

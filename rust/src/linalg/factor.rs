@@ -1,0 +1,487 @@
+//! Native (oracle / fallback) factorization kernels.
+//!
+//! These are the per-tile BLAS/LAPACK-shaped operations the paper's
+//! LAmbdaPACK programs call: `chol`, `trsm`, `syrk`, `gemm`,
+//! `qr_factor`, plus forward/backward substitution used by the
+//! `cholesky_solve` example. The PJRT path (AOT-compiled JAX/Pallas)
+//! is the production route; these f64 versions are the correctness
+//! oracle it is cross-checked against, and the fallback when no
+//! artifacts are built.
+
+use crate::linalg::matrix::Matrix;
+use anyhow::{bail, Result};
+
+/// Unblocked right-looking Cholesky of an SPD tile: A = L Lᵀ, returns L
+/// (lower triangular).
+pub fn cholesky(a: &Matrix) -> Result<Matrix> {
+    let n = a.rows();
+    if a.cols() != n {
+        bail!("cholesky: tile not square: {:?}", a.shape());
+    }
+    let mut l = Matrix::zeros(n, n);
+    for j in 0..n {
+        let mut d = a[(j, j)];
+        for k in 0..j {
+            d -= l[(j, k)] * l[(j, k)];
+        }
+        if d <= 0.0 {
+            bail!("cholesky: tile not positive definite at pivot {j} (d = {d})");
+        }
+        let d = d.sqrt();
+        l[(j, j)] = d;
+        for i in (j + 1)..n {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            l[(i, j)] = s / d;
+        }
+    }
+    Ok(l)
+}
+
+/// Panel update for blocked Cholesky (the paper's `trsm` kernel):
+/// given the diagonal factor `l` (lower triangular) and a panel tile
+/// `a` = A_ij, compute X = A L^{-T}, i.e. solve X Lᵀ = A.
+pub fn trsm_right_lt(l: &Matrix, a: &Matrix) -> Result<Matrix> {
+    let n = l.rows();
+    if l.cols() != n || a.cols() != n {
+        bail!("trsm: shape mismatch l={:?} a={:?}", l.shape(), a.shape());
+    }
+    let m = a.rows();
+    let mut x = a.clone();
+    // Solve X Lᵀ = A column-block by column: Lᵀ upper triangular, so
+    // x[:, j] = (a[:, j] - Σ_{k<j} x[:, k]·Lᵀ[k, j]) / Lᵀ[j, j]
+    //         = (a[:, j] - Σ_{k<j} x[:, k]·l[j, k]) / l[j, j].
+    for j in 0..n {
+        let d = l[(j, j)];
+        if d == 0.0 {
+            bail!("trsm: singular triangular factor at {j}");
+        }
+        for i in 0..m {
+            let mut s = x[(i, j)];
+            for k in 0..j {
+                s -= x[(i, k)] * l[(j, k)];
+            }
+            x[(i, j)] = s / d;
+        }
+    }
+    Ok(x)
+}
+
+/// Left lower-triangular solve: solve L X = B.
+pub fn trsm_left_lower(l: &Matrix, b: &Matrix) -> Result<Matrix> {
+    let n = l.rows();
+    if l.cols() != n || b.rows() != n {
+        bail!("trsm_left: shape mismatch");
+    }
+    let w = b.cols();
+    let mut x = b.clone();
+    for i in 0..n {
+        let d = l[(i, i)];
+        if d == 0.0 {
+            bail!("trsm_left: singular at {i}");
+        }
+        for j in 0..w {
+            let mut s = x[(i, j)];
+            for k in 0..i {
+                s -= l[(i, k)] * x[(k, j)];
+            }
+            x[(i, j)] = s / d;
+        }
+    }
+    Ok(x)
+}
+
+/// Left upper-triangular solve: solve U X = B.
+pub fn trsm_left_upper(u: &Matrix, b: &Matrix) -> Result<Matrix> {
+    let n = u.rows();
+    if u.cols() != n || b.rows() != n {
+        bail!("trsm_left_upper: shape mismatch");
+    }
+    let w = b.cols();
+    let mut x = b.clone();
+    for i in (0..n).rev() {
+        let d = u[(i, i)];
+        if d == 0.0 {
+            bail!("trsm_left_upper: singular at {i}");
+        }
+        for j in 0..w {
+            let mut s = x[(i, j)];
+            for k in (i + 1)..n {
+                s -= u[(i, k)] * x[(k, j)];
+            }
+            x[(i, j)] = s / d;
+        }
+    }
+    Ok(x)
+}
+
+/// The trailing-update kernel (the paper's `syrk`, line 8 of Alg. 1):
+/// S' = S − L_kj · L_ljᵀ. This is the O(N³) hot spot.
+pub fn syrk_update(s: &Matrix, lk: &Matrix, ll: &Matrix) -> Result<Matrix> {
+    if lk.cols() != ll.cols() || s.rows() != lk.rows() || s.cols() != ll.rows() {
+        bail!(
+            "syrk: shape mismatch s={:?} lk={:?} ll={:?}",
+            s.shape(),
+            lk.shape(),
+            ll.shape()
+        );
+    }
+    let prod = lk.matmul_nt(ll);
+    Ok(s - &prod)
+}
+
+/// Plain tile GEMM: C = A · B.
+pub fn gemm(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    if a.cols() != b.rows() {
+        bail!("gemm: inner-dim mismatch {:?} {:?}", a.shape(), b.shape());
+    }
+    Ok(a.matmul(b))
+}
+
+/// Accumulating GEMM: C' = C + A · B (the reduction step of the tiled
+/// matrix-multiply program).
+pub fn gemm_accum(c: &Matrix, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    if a.cols() != b.rows() || c.rows() != a.rows() || c.cols() != b.cols() {
+        bail!("gemm_accum: shape mismatch");
+    }
+    Ok(c + &a.matmul(b))
+}
+
+/// Householder QR of a (possibly tall) tile. Returns (Q, R) with
+/// Q: m×n (thin), R: n×n upper triangular, A = Q R.
+pub fn qr(a: &Matrix) -> Result<(Matrix, Matrix)> {
+    let (m, n) = a.shape();
+    if m < n {
+        bail!("qr: tile must be tall or square ({m}x{n})");
+    }
+    let mut r = a.clone();
+    // Accumulate Householder vectors; apply to I at the end for thin Q.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // Build Householder vector for column k below the diagonal.
+        let mut norm = 0.0;
+        for i in k..m {
+            norm += r[(i, k)] * r[(i, k)];
+        }
+        let norm = norm.sqrt();
+        let mut v = vec![0.0; m];
+        if norm > 0.0 {
+            let alpha = if r[(k, k)] >= 0.0 { -norm } else { norm };
+            v[k] = r[(k, k)] - alpha;
+            for i in (k + 1)..m {
+                v[i] = r[(i, k)];
+            }
+            let vnorm2: f64 = v[k..].iter().map(|x| x * x).sum();
+            if vnorm2 > 0.0 {
+                // Apply H = I - 2 v vᵀ / (vᵀv) to R (columns k..n).
+                for j in k..n {
+                    let mut dot = 0.0;
+                    for i in k..m {
+                        dot += v[i] * r[(i, j)];
+                    }
+                    let scale = 2.0 * dot / vnorm2;
+                    for i in k..m {
+                        r[(i, j)] -= scale * v[i];
+                    }
+                }
+            }
+        }
+        vs.push(v);
+    }
+    // Zero sub-diagonal numerically (exact zeros for downstream checks).
+    let mut r_out = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r_out[(i, j)] = r[(i, j)];
+        }
+    }
+    // Thin Q = H_0 H_1 … H_{n-1} · I_{m×n}.
+    let mut q = Matrix::zeros(m, n);
+    for i in 0..n {
+        q[(i, i)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v[k..].iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i] * q[(i, j)];
+            }
+            let scale = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[(i, j)] -= scale * v[i];
+            }
+        }
+    }
+    Ok((q, r_out))
+}
+
+/// Householder QR with the **full** m×m Q — needed by the CAQR pair
+/// kernels, whose orthogonal factor must act on the full row pair.
+pub fn qr_full(a: &Matrix) -> Result<(Matrix, Matrix)> {
+    let (m, n) = a.shape();
+    if m < n {
+        bail!("qr_full: tile must be tall or square ({m}x{n})");
+    }
+    let mut r = a.clone();
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for k in 0..n {
+        let mut norm = 0.0;
+        for i in k..m {
+            norm += r[(i, k)] * r[(i, k)];
+        }
+        let norm = norm.sqrt();
+        let mut v = vec![0.0; m];
+        if norm > 0.0 {
+            let alpha = if r[(k, k)] >= 0.0 { -norm } else { norm };
+            v[k] = r[(k, k)] - alpha;
+            for i in (k + 1)..m {
+                v[i] = r[(i, k)];
+            }
+            let vnorm2: f64 = v[k..].iter().map(|x| x * x).sum();
+            if vnorm2 > 0.0 {
+                for j in k..n {
+                    let mut dot = 0.0;
+                    for i in k..m {
+                        dot += v[i] * r[(i, j)];
+                    }
+                    let scale = 2.0 * dot / vnorm2;
+                    for i in k..m {
+                        r[(i, j)] -= scale * v[i];
+                    }
+                }
+            }
+        }
+        vs.push(v);
+    }
+    // R: m×n upper-trapezoidal → return the n×n upper block, rows below
+    // are exactly zero after elimination.
+    let mut r_out = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r_out[(i, j)] = r[(i, j)];
+        }
+    }
+    // Full Q = H_0 … H_{n-1} · I_{m×m}.
+    let mut q = Matrix::eye(m);
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v[k..].iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for j in 0..m {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i] * q[(i, j)];
+            }
+            let scale = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[(i, j)] -= scale * v[i];
+            }
+        }
+    }
+    Ok((q, r_out))
+}
+
+/// Right upper-triangular solve: X U = B → X = B U⁻¹ (used by block
+/// LU's column-panel update).
+pub fn trsm_right_upper(u: &Matrix, b: &Matrix) -> Result<Matrix> {
+    let n = u.rows();
+    if u.cols() != n || b.cols() != n {
+        bail!("trsm_right_upper: shape mismatch");
+    }
+    let m = b.rows();
+    let mut x = b.clone();
+    // x[:, j] = (b[:, j] - Σ_{k<j} x[:, k] u[k, j]) / u[j, j].
+    for j in 0..n {
+        let d = u[(j, j)];
+        if d == 0.0 {
+            bail!("trsm_right_upper: singular at {j}");
+        }
+        for i in 0..m {
+            let mut s = x[(i, j)];
+            for k in 0..j {
+                s -= x[(i, k)] * u[(k, j)];
+            }
+            x[(i, j)] = s / d;
+        }
+    }
+    Ok(x)
+}
+
+/// The TSQR reduction kernel: QR-factor one tile, return R only.
+pub fn qr_r(a: &Matrix) -> Result<Matrix> {
+    Ok(qr(a)?.1)
+}
+
+/// The TSQR pair-reduction kernel: stack two R tiles and return the R
+/// of their QR factorization.
+pub fn qr_r2(top: &Matrix, bot: &Matrix) -> Result<Matrix> {
+    if top.cols() != bot.cols() {
+        bail!("qr_r2: column mismatch");
+    }
+    let (t, b) = (top.rows(), bot.rows());
+    let mut stacked = Matrix::zeros(t + b, top.cols());
+    stacked.set_window(0, 0, top);
+    stacked.set_window(t, 0, bot);
+    qr_r(&stacked)
+}
+
+/// LU factorization without pivoting of a (diagonally dominant) tile:
+/// A = L U with unit lower-triangular L. Returns (L, U) packed as two
+/// matrices. Used by the block-LU LAmbdaPACK program.
+pub fn lu_nopiv(a: &Matrix) -> Result<(Matrix, Matrix)> {
+    let n = a.rows();
+    if a.cols() != n {
+        bail!("lu: tile not square");
+    }
+    let mut u = a.clone();
+    let mut l = Matrix::eye(n);
+    for k in 0..n {
+        let p = u[(k, k)];
+        if p == 0.0 {
+            bail!("lu_nopiv: zero pivot at {k} (tile not diagonally dominant?)");
+        }
+        for i in (k + 1)..n {
+            let f = u[(i, k)] / p;
+            l[(i, k)] = f;
+            for j in k..n {
+                let v = u[(k, j)];
+                u[(i, j)] -= f * v;
+            }
+        }
+    }
+    Ok((l, u.triu()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::rand_spd(n, &mut rng)
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = spd(24, 10);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul_nt(&l);
+        assert!(rec.max_abs_diff(&a) < 1e-8, "‖LLᵀ−A‖∞ too big");
+        // L is lower triangular.
+        assert!(l.max_abs_diff(&l.tril()) == 0.0);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eig −1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn trsm_right_lt_solves() {
+        let a = spd(12, 11);
+        let l = cholesky(&a).unwrap();
+        let mut rng = Rng::new(12);
+        let b = Matrix::randn(7, 12, &mut rng);
+        let x = trsm_right_lt(&l, &b).unwrap();
+        // X Lᵀ should equal B.
+        let rec = x.matmul(&l.transpose());
+        assert!(rec.max_abs_diff(&b) < 1e-9);
+    }
+
+    #[test]
+    fn trsm_left_solves() {
+        let a = spd(10, 13);
+        let l = cholesky(&a).unwrap();
+        let mut rng = Rng::new(14);
+        let b = Matrix::randn(10, 3, &mut rng);
+        let y = trsm_left_lower(&l, &b).unwrap();
+        assert!(l.matmul(&y).max_abs_diff(&b) < 1e-9);
+        let x = trsm_left_upper(&l.transpose(), &y).unwrap();
+        assert!(a.matmul(&x).max_abs_diff(&b) < 1e-7);
+    }
+
+    #[test]
+    fn syrk_matches_direct() {
+        let mut rng = Rng::new(15);
+        let s = Matrix::randn(6, 6, &mut rng);
+        let lk = Matrix::randn(6, 4, &mut rng);
+        let ll = Matrix::randn(6, 4, &mut rng);
+        let out = syrk_update(&s, &lk, &ll).unwrap();
+        let direct = &s - &lk.matmul(&ll.transpose());
+        assert!(out.max_abs_diff(&direct) < 1e-12);
+    }
+
+    #[test]
+    fn qr_reconstructs_and_orthogonal() {
+        let mut rng = Rng::new(16);
+        let a = Matrix::randn(20, 8, &mut rng);
+        let (q, r) = qr(&a).unwrap();
+        assert!(q.matmul(&r).max_abs_diff(&a) < 1e-9, "QR ≠ A");
+        let qtq = q.matmul_tn(&q);
+        assert!(qtq.max_abs_diff(&Matrix::eye(8)) < 1e-9, "QᵀQ ≠ I");
+        assert!(r.max_abs_diff(&r.triu()) == 0.0, "R not upper");
+    }
+
+    #[test]
+    fn qr_r2_matches_stacked() {
+        let mut rng = Rng::new(17);
+        let a = Matrix::randn(6, 6, &mut rng);
+        let b = Matrix::randn(6, 6, &mut rng);
+        let r2 = qr_r2(&a, &b).unwrap();
+        // R from the pair reduction must satisfy RᵀR = AᵀA + BᵀB
+        // (same Gram matrix as the stacked tile), even though the sign
+        // convention of individual rows may differ.
+        let gram = &a.matmul_tn(&a) + &b.matmul_tn(&b);
+        let rtr = r2.matmul_tn(&r2);
+        assert!(rtr.max_abs_diff(&gram) < 1e-9);
+    }
+
+    #[test]
+    fn qr_full_orthogonal_and_reconstructs() {
+        let mut rng = Rng::new(19);
+        let a = Matrix::randn(12, 6, &mut rng);
+        let (q, r) = qr_full(&a).unwrap();
+        assert_eq!(q.shape(), (12, 12));
+        assert!(q.matmul_tn(&q).max_abs_diff(&Matrix::eye(12)) < 1e-9);
+        // Q · [R; 0] = A.
+        let mut r_ext = Matrix::zeros(12, 6);
+        r_ext.set_window(0, 0, &r);
+        assert!(q.matmul(&r_ext).max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn trsm_right_upper_solves() {
+        let mut rng = Rng::new(20);
+        let a = Matrix::rand_spd(8, &mut rng);
+        let u = cholesky(&a).unwrap().transpose();
+        let b = Matrix::randn(5, 8, &mut rng);
+        let x = trsm_right_upper(&u, &b).unwrap();
+        assert!(x.matmul(&u).max_abs_diff(&b) < 1e-9);
+    }
+
+    #[test]
+    fn lu_reconstructs() {
+        // Diagonally dominant → no pivoting needed.
+        let mut rng = Rng::new(18);
+        let mut a = Matrix::randn(15, 15, &mut rng);
+        for i in 0..15 {
+            a[(i, i)] += 20.0;
+        }
+        let (l, u) = lu_nopiv(&a).unwrap();
+        assert!(l.matmul(&u).max_abs_diff(&a) < 1e-9);
+        for i in 0..15 {
+            assert!((l[(i, i)] - 1.0).abs() < 1e-12);
+        }
+    }
+}

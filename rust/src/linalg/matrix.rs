@@ -1,0 +1,370 @@
+//! A dense row-major `f64` matrix — the tile payload type.
+//!
+//! Deliberately minimal: the tile sizes numpywren uses (hundreds to a
+//! few thousand on a side) are served either by the PJRT hot path
+//! (AOT-compiled JAX/Pallas kernels) or by the blocked native kernels
+//! in [`crate::linalg::factor`]; this type is the shared container plus
+//! the basic BLAS-1/3 operations the engine and tests need.
+
+use crate::util::prng::Rng;
+use std::fmt;
+use std::ops::{Add, Index, IndexMut, Mul, Sub};
+
+/// Dense row-major matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// From row-major data.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// From a nested-slice literal (row major).
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Matrix::from_vec(r, c, data)
+    }
+
+    /// i.i.d. standard normal entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.normal()).collect();
+        Matrix::from_vec(rows, cols, data)
+    }
+
+    /// Random symmetric positive-definite matrix: G Gᵀ + n·I.
+    pub fn rand_spd(n: usize, rng: &mut Rng) -> Self {
+        let g = Matrix::randn(n, n, rng);
+        let mut a = g.matmul_nt(&g);
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        a
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Row slice.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// `self @ other` (ikj loop order, cache-friendly for row major).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut c = Matrix::zeros(m, n);
+        for i in 0..m {
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += a * bv;
+                }
+            }
+        }
+        c
+    }
+
+    /// `self @ otherᵀ` without materializing the transpose.
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut c = Matrix::zeros(m, n);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &other.data[j * k..(j + 1) * k];
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += arow[p] * brow[p];
+                }
+                c.data[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    /// `selfᵀ @ other`.
+    pub fn matmul_tn(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
+        let (m, k, n) = (self.cols, self.rows, other.cols);
+        let mut c = Matrix::zeros(m, n);
+        for p in 0..k {
+            let arow = &self.data[p * m..(p + 1) * m];
+            let brow = &other.data[p * n..(p + 1) * n];
+            for i in 0..m {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += a * bv;
+                }
+            }
+        }
+        c
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Copy a rectangular window `[r0..r0+h, c0..c0+w]` into a new matrix.
+    pub fn window(&self, r0: usize, c0: usize, h: usize, w: usize) -> Matrix {
+        assert!(r0 + h <= self.rows && c0 + w <= self.cols, "window OOB");
+        let mut out = Matrix::zeros(h, w);
+        for i in 0..h {
+            let src = &self.data[(r0 + i) * self.cols + c0..(r0 + i) * self.cols + c0 + w];
+            out.data[i * w..(i + 1) * w].copy_from_slice(src);
+        }
+        out
+    }
+
+    /// Write `block` into the window at (r0, c0).
+    pub fn set_window(&mut self, r0: usize, c0: usize, block: &Matrix) {
+        let (h, w) = block.shape();
+        assert!(r0 + h <= self.rows && c0 + w <= self.cols, "set_window OOB");
+        for i in 0..h {
+            let dst_off = (r0 + i) * self.cols + c0;
+            self.data[dst_off..dst_off + w].copy_from_slice(block.row(i));
+        }
+    }
+
+    /// Lower-triangular copy (strict upper zeroed).
+    pub fn tril(&self) -> Matrix {
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                out[(i, j)] = 0.0;
+            }
+        }
+        out
+    }
+
+    /// Upper-triangular copy (strict lower zeroed).
+    pub fn triu(&self) -> Matrix {
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            for j in 0..i.min(self.cols) {
+                out[(i, j)] = 0.0;
+            }
+        }
+        out
+    }
+
+    /// Scale in place.
+    pub fn scale(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Add for &Matrix {
+    type Output = Matrix;
+    fn add(self, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), rhs.shape());
+        let data = self.data.iter().zip(&rhs.data).map(|(a, b)| a + b).collect();
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+}
+
+impl Sub for &Matrix {
+    type Output = Matrix;
+    fn sub(self, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), rhs.shape());
+        let data = self.data.iter().zip(&rhs.data).map(|(a, b)| a - b).collect();
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+}
+
+impl Mul for &Matrix {
+    type Output = Matrix;
+    fn mul(self, rhs: &Matrix) -> Matrix {
+        self.matmul(rhs)
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:9.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(5, 7, &mut rng);
+        let i5 = Matrix::eye(5);
+        let i7 = Matrix::eye(7);
+        assert!(i5.matmul(&a).max_abs_diff(&a) < 1e-12);
+        assert!(a.matmul(&i7).max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(4, 6, &mut rng);
+        let b = Matrix::randn(6, 3, &mut rng);
+        let c = a.matmul(&b);
+        for i in 0..4 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for p in 0..6 {
+                    s += a[(i, p)] * b[(p, j)];
+                }
+                assert!((c[(i, j)] - s).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_nt_tn_consistent() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(4, 5, &mut rng);
+        let b = Matrix::randn(6, 5, &mut rng);
+        let via_t = a.matmul(&b.transpose());
+        assert!(a.matmul_nt(&b).max_abs_diff(&via_t) < 1e-12);
+        let c = Matrix::randn(4, 6, &mut rng);
+        let via_t2 = a.transpose().matmul(&c);
+        assert!(a.matmul_tn(&c).max_abs_diff(&via_t2) < 1e-12);
+    }
+
+    #[test]
+    fn window_roundtrip() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(8, 8, &mut rng);
+        let w = a.window(2, 3, 4, 5);
+        let mut b = Matrix::zeros(8, 8);
+        b.set_window(2, 3, &w);
+        assert_eq!(b.window(2, 3, 4, 5), w);
+    }
+
+    #[test]
+    fn spd_is_symmetric() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::rand_spd(16, &mut rng);
+        assert!(a.max_abs_diff(&a.transpose()) < 1e-12);
+    }
+
+    #[test]
+    fn tril_triu_partition() {
+        let mut rng = Rng::new(6);
+        let a = Matrix::randn(6, 6, &mut rng);
+        let mut diag = Matrix::zeros(6, 6);
+        for i in 0..6 {
+            diag[(i, i)] = a[(i, i)];
+        }
+        let sum = &(&a.tril() + &a.triu()) - &diag;
+        assert!(sum.max_abs_diff(&a) < 1e-12);
+    }
+}

@@ -1,0 +1,15 @@
+//! Dense linear-algebra substrate.
+//!
+//! numpywren's tasks operate on matrix *tiles* — small dense blocks
+//! that fit in a worker's memory. This module provides the dense
+//! [`Matrix`] type those tiles are made of, the native (oracle /
+//! fallback) factorization kernels, and the [`blocked`] partitioning
+//! helpers that slice a large logical matrix into a tile grid and
+//! stitch it back.
+
+pub mod blocked;
+pub mod factor;
+pub mod matrix;
+
+pub use blocked::{BlockLayout, BlockedMatrix};
+pub use matrix::Matrix;

@@ -1,0 +1,14 @@
+//! `numpywren` — the leader/launcher binary.
+
+fn main() {
+    // Die quietly on a closed pipe (`numpywren analyze | head`) like a
+    // well-behaved CLI instead of panicking on println!.
+    unsafe {
+        libc::signal(libc::SIGPIPE, libc::SIG_DFL);
+    }
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = numpywren::cli::run_cli(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

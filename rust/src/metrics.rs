@@ -1,0 +1,251 @@
+//! Execution metrics: time-series samples and per-task logs.
+//!
+//! Feeds every profile figure: Figure 1 / 9a (flop-rate & parallelism
+//! profiles), Figure 9b (recovery), Figure 10b (workers vs. pending
+//! tasks), and the core-seconds accounting of Tables 1–2 ("how many
+//! cores were actively working on tasks at any given point in time").
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One sampled point of engine state.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Sample {
+    /// Seconds since job start.
+    pub t: f64,
+    /// Messages in the task queue (visible + leased).
+    pub pending: usize,
+    /// Live workers.
+    pub workers: usize,
+    /// Tasks whose compute is currently in flight.
+    pub running: usize,
+    /// Completed task count.
+    pub completed: u64,
+    /// Cumulative flops executed.
+    pub flops: u64,
+}
+
+/// One completed task record.
+#[derive(Clone, Debug)]
+pub struct TaskRecord {
+    pub node_id: String,
+    pub kernel: String,
+    pub worker: usize,
+    /// Seconds since job start.
+    pub start: f64,
+    pub end: f64,
+    pub flops: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+}
+
+/// Shared metrics sink.
+#[derive(Clone)]
+pub struct MetricsHub {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    epoch: Instant,
+    samples: Mutex<Vec<Sample>>,
+    tasks: Mutex<Vec<TaskRecord>>,
+    flops: AtomicU64,
+    completed: AtomicU64,
+    running: AtomicUsize,
+    workers: AtomicUsize,
+    /// Nanoseconds of busy (compute-in-flight) worker time — the
+    /// core-seconds numerator.
+    busy_ns: AtomicU64,
+    /// Nanoseconds of total worker lifetime — billed Lambda time.
+    alive_ns: AtomicU64,
+}
+
+impl MetricsHub {
+    pub fn new() -> Self {
+        MetricsHub {
+            inner: Arc::new(Inner {
+                epoch: Instant::now(),
+                samples: Mutex::new(Vec::new()),
+                tasks: Mutex::new(Vec::new()),
+                flops: AtomicU64::new(0),
+                completed: AtomicU64::new(0),
+                running: AtomicUsize::new(0),
+                workers: AtomicUsize::new(0),
+                busy_ns: AtomicU64::new(0),
+                alive_ns: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Seconds since hub creation (job start).
+    pub fn now(&self) -> f64 {
+        self.inner.epoch.elapsed().as_secs_f64()
+    }
+
+    pub fn worker_started(&self) {
+        self.inner.workers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn worker_stopped(&self, lifetime: Duration) {
+        self.inner.workers.fetch_sub(1, Ordering::Relaxed);
+        self.inner
+            .alive_ns
+            .fetch_add(lifetime.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn live_workers(&self) -> usize {
+        self.inner.workers.load(Ordering::Relaxed)
+    }
+
+    pub fn task_started(&self) -> f64 {
+        self.inner.running.fetch_add(1, Ordering::Relaxed);
+        self.now()
+    }
+
+    /// Record a finished task (compute phase done).
+    #[allow(clippy::too_many_arguments)]
+    pub fn task_finished(
+        &self,
+        node_id: &str,
+        kernel: &str,
+        worker: usize,
+        start: f64,
+        flops: u64,
+        bytes_read: u64,
+        bytes_written: u64,
+    ) {
+        let end = self.now();
+        self.inner.running.fetch_sub(1, Ordering::Relaxed);
+        self.inner.flops.fetch_add(flops, Ordering::Relaxed);
+        self.inner.completed.fetch_add(1, Ordering::Relaxed);
+        self.inner
+            .busy_ns
+            .fetch_add(((end - start) * 1e9) as u64, Ordering::Relaxed);
+        self.inner.tasks.lock().unwrap().push(TaskRecord {
+            node_id: node_id.to_string(),
+            kernel: kernel.to_string(),
+            worker,
+            start,
+            end,
+            flops,
+            bytes_read,
+            bytes_written,
+        });
+    }
+
+    /// Take a sample (called by the engine's sampler thread).
+    pub fn sample(&self, pending: usize) {
+        let s = Sample {
+            t: self.now(),
+            pending,
+            workers: self.inner.workers.load(Ordering::Relaxed),
+            running: self.inner.running.load(Ordering::Relaxed),
+            completed: self.inner.completed.load(Ordering::Relaxed),
+            flops: self.inner.flops.load(Ordering::Relaxed),
+        };
+        self.inner.samples.lock().unwrap().push(s);
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.inner.completed.load(Ordering::Relaxed)
+    }
+
+    pub fn total_flops(&self) -> u64 {
+        self.inner.flops.load(Ordering::Relaxed)
+    }
+
+    /// Core-seconds actively spent on tasks.
+    pub fn busy_core_secs(&self) -> f64 {
+        self.inner.busy_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Total billed worker lifetime in core-seconds.
+    pub fn billed_core_secs(&self) -> f64 {
+        self.inner.alive_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn samples(&self) -> Vec<Sample> {
+        self.inner.samples.lock().unwrap().clone()
+    }
+
+    pub fn task_records(&self) -> Vec<TaskRecord> {
+        self.inner.tasks.lock().unwrap().clone()
+    }
+
+    /// Flop-rate profile: (t, flops/sec) per sample interval — the
+    /// Figure 9a series.
+    pub fn flop_rate_profile(&self) -> Vec<(f64, f64)> {
+        let samples = self.samples();
+        samples
+            .windows(2)
+            .filter(|w| w[1].t > w[0].t)
+            .map(|w| {
+                let rate = (w[1].flops - w[0].flops) as f64 / (w[1].t - w[0].t);
+                (w[1].t, rate)
+            })
+            .collect()
+    }
+}
+
+impl Default for MetricsHub {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_lifecycle_counts() {
+        let m = MetricsHub::new();
+        let s = m.task_started();
+        std::thread::sleep(Duration::from_millis(5));
+        m.task_finished("0@i=0", "chol", 1, s, 1000, 64, 32);
+        assert_eq!(m.completed(), 1);
+        assert_eq!(m.total_flops(), 1000);
+        assert!(m.busy_core_secs() >= 0.005);
+        let recs = m.task_records();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].kernel, "chol");
+        assert!(recs[0].end >= recs[0].start);
+    }
+
+    #[test]
+    fn samples_accumulate() {
+        let m = MetricsHub::new();
+        m.sample(10);
+        m.sample(5);
+        let s = m.samples();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].pending, 10);
+        assert!(s[1].t >= s[0].t);
+    }
+
+    #[test]
+    fn worker_accounting() {
+        let m = MetricsHub::new();
+        m.worker_started();
+        m.worker_started();
+        assert_eq!(m.live_workers(), 2);
+        m.worker_stopped(Duration::from_secs(2));
+        assert_eq!(m.live_workers(), 1);
+        assert!((m.billed_core_secs() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flop_rate_profile_positive() {
+        let m = MetricsHub::new();
+        m.sample(0);
+        let s = m.task_started();
+        std::thread::sleep(Duration::from_millis(2));
+        m.task_finished("n", "syrk", 0, s, 1_000_000, 0, 0);
+        std::thread::sleep(Duration::from_millis(1));
+        m.sample(0);
+        let prof = m.flop_rate_profile();
+        assert_eq!(prof.len(), 1);
+        assert!(prof[0].1 > 0.0);
+    }
+}

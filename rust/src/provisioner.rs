@@ -1,0 +1,101 @@
+//! The provisioner — §4.2 auto-scaling.
+//!
+//! "For scaling up, numpywren's auto-scaling framework tracks the
+//! number of pending tasks and periodically increases the number of
+//! running workers to match the pending tasks with a scaling factor
+//! sf. … If pipeline width is not 1, numpywren also factors in
+//! pipeline width. For scaling down, numpywren uses an expiration
+//! policy where each worker shuts down itself if no task has been
+//! found for the last T_timeout seconds."
+//!
+//! Scale-down is implemented *in the worker* (`exit_on_idle`); the
+//! provisioner only launches. At equilibrium the number of running
+//! workers is `sf × pending / pipeline_width`, exactly the paper's
+//! policy (including its worked example: sf = 0.5, 100 pending, 40
+//! running → launch 100·0.5 − 40 = 10).
+
+use crate::executor::worker::{run_worker, ExitReason, WorkerParams};
+use crate::executor::JobContext;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Compute the §4.2 scale-up target.
+pub fn scale_target(sf: f64, pending: usize, pipeline_width: usize, max_workers: usize) -> usize {
+    let want = (sf * pending as f64 / pipeline_width.max(1) as f64).ceil() as usize;
+    want.min(max_workers)
+}
+
+/// Shared registry of worker join handles (provisioner spawns, engine
+/// joins).
+#[derive(Clone, Default)]
+pub struct WorkerPool {
+    handles: Arc<Mutex<Vec<JoinHandle<ExitReason>>>>,
+    next_id: Arc<AtomicUsize>,
+}
+
+impl WorkerPool {
+    pub fn spawn(&self, ctx: Arc<JobContext>, exit_on_idle: bool) -> usize {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let params = WorkerParams { id, exit_on_idle };
+        let handle = std::thread::spawn(move || run_worker(ctx, params));
+        self.handles.lock().unwrap().push(handle);
+        id
+    }
+
+    /// Join every worker ever spawned, returning exit reasons.
+    pub fn join_all(&self) -> Vec<ExitReason> {
+        let handles: Vec<_> = std::mem::take(&mut *self.handles.lock().unwrap());
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or(ExitReason::Killed))
+            .collect()
+    }
+
+    pub fn spawned_count(&self) -> usize {
+        self.next_id.load(Ordering::SeqCst)
+    }
+}
+
+/// Run the provisioning loop until the job completes. Launches workers
+/// to close the gap between the live count and the §4.2 target.
+pub fn run_provisioner(ctx: Arc<JobContext>, pool: WorkerPool, sf: f64, max_workers: usize) {
+    while !ctx.is_done() {
+        let pending = ctx.queue.len();
+        let live = ctx.metrics.live_workers();
+        let target = scale_target(sf, pending, ctx.cfg.pipeline_width, max_workers);
+        if target > live {
+            for _ in 0..(target - live) {
+                pool.spawn(ctx.clone(), true);
+            }
+        }
+        std::thread::sleep(ctx.cfg.provision_period);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_worked_example() {
+        // sf = 0.5, 100 pending, pipeline width 1 → target 50 (launch
+        // 10 on top of 40 running).
+        assert_eq!(scale_target(0.5, 100, 1, 1000), 50);
+    }
+
+    #[test]
+    fn pipeline_width_factored_in() {
+        assert_eq!(scale_target(1.0, 90, 3, 1000), 30);
+    }
+
+    #[test]
+    fn capped_by_max_workers() {
+        assert_eq!(scale_target(1.0, 10_000, 1, 64), 64);
+    }
+
+    #[test]
+    fn zero_pending_zero_target() {
+        assert_eq!(scale_target(1.0, 0, 1, 64), 0);
+    }
+}

@@ -1,0 +1,125 @@
+//! The artifact registry: `artifacts/manifest.txt` → kernel lookup.
+//!
+//! Manifest format (one artifact per line, written by aot.py):
+//!
+//! ```text
+//! <kernel_name> <block> <n_inputs> <n_outputs> <file>
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One manifest entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    pub kernel: String,
+    pub block: usize,
+    pub n_inputs: usize,
+    pub n_outputs: usize,
+    pub path: PathBuf,
+}
+
+/// Parsed manifest, indexed by (kernel, block).
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactRegistry {
+    entries: HashMap<(String, usize), ArtifactEntry>,
+}
+
+impl ArtifactRegistry {
+    /// Load `<dir>/manifest.txt`. A missing directory yields an empty
+    /// registry (native fallback everywhere).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        if !manifest.exists() {
+            return Ok(Self::default());
+        }
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let mut entries = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 5 {
+                bail!("manifest line {}: expected 5 fields", lineno + 1);
+            }
+            let entry = ArtifactEntry {
+                kernel: parts[0].to_string(),
+                block: parts[1].parse().context("block")?,
+                n_inputs: parts[2].parse().context("n_inputs")?,
+                n_outputs: parts[3].parse().context("n_outputs")?,
+                path: dir.join(parts[4]),
+            };
+            if !entry.path.exists() {
+                bail!("manifest references missing file {}", entry.path.display());
+            }
+            entries.insert((entry.kernel.clone(), entry.block), entry);
+        }
+        Ok(ArtifactRegistry { entries })
+    }
+
+    pub fn get(&self, kernel: &str, block: usize) -> Option<&ArtifactEntry> {
+        self.entries.get(&(kernel.to_string(), block))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Block sizes available for a kernel.
+    pub fn blocks_for(&self, kernel: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .keys()
+            .filter(|(k, _)| k == kernel)
+            .map(|(_, b)| *b)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_built_manifest_if_present() {
+        let dir = repo_artifacts();
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        if dir.join("manifest.txt").exists() {
+            assert!(!reg.is_empty());
+            let chol = reg.get("chol", 32).expect("chol_b32 artifact");
+            assert_eq!(chol.n_inputs, 1);
+            assert_eq!(chol.n_outputs, 1);
+            assert!(reg.blocks_for("syrk").contains(&32));
+        }
+    }
+
+    #[test]
+    fn missing_dir_is_empty_registry() {
+        let reg = ArtifactRegistry::load(Path::new("/nonexistent/xyz")).unwrap();
+        assert!(reg.is_empty());
+        assert!(reg.get("chol", 32).is_none());
+    }
+
+    #[test]
+    fn malformed_manifest_rejected() {
+        let dir = std::env::temp_dir().join(format!("npw_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "bad line\n").unwrap();
+        assert!(ArtifactRegistry::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,20 @@
+//! The PJRT execution path — Python never runs at request time.
+//!
+//! `make artifacts` (python/compile/aot.py) lowers every hot-path
+//! kernel to HLO **text** once; this module loads those artifacts,
+//! compiles each on the PJRT CPU client exactly once (lazily, cached),
+//! and serves kernel calls from the compiled executables. Kernels or
+//! tile shapes without an artifact fall back to the native f64
+//! implementation, so the engine runs with or without a build step.
+//!
+//! * [`artifacts`] — the on-disk manifest + HLO registry.
+//! * [`pjrt`] — the `xla`-crate client wrapper ([`pjrt::PjrtKernels`]).
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::ArtifactRegistry;
+pub use pjrt::PjrtKernels;
+
+/// Default artifact directory, relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

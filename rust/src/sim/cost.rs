@@ -1,0 +1,136 @@
+//! The calibrated cost model.
+//!
+//! Constants follow the paper's testbed (§2.1, §5.1):
+//!
+//! * **Lambda worker** — one AVX/AVX2 core. Sustained dgemm on such a
+//!   core ≈ 30 GFLOP/s (2.9 GHz × 16 f64 FLOP/cycle × ~0.65
+//!   efficiency).
+//! * **S3** — ~10 ms per-op latency; per-function streaming bandwidth
+//!   ~75 MB/s read / 50 MB/s write (the pywren measurements the paper
+//!   cites), aggregate fleet cap 250 GB/s.
+//! * **c4.8xlarge** (ScaLAPACK/Dask baseline) — 18 physical cores,
+//!   60 GB memory, 10 Gbit/s NIC.
+//! * **Lambda lifecycle** — 300 s runtime limit, ~3 s cold start
+//!   (T_timeout = 10 s per §4.2).
+
+/// Cost-model constants (all f64 SI units: seconds, bytes, flops).
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Sustained f64 flop rate of one serverless core.
+    pub worker_flops: f64,
+    /// Object-store per-operation latency.
+    pub store_latency: f64,
+    /// Per-worker object-store read bandwidth (B/s).
+    pub store_read_bw: f64,
+    /// Per-worker object-store write bandwidth (B/s).
+    pub store_write_bw: f64,
+    /// Fleet-wide aggregate store bandwidth cap (B/s).
+    pub store_aggregate_bw: f64,
+    /// Worker cold-start latency.
+    pub cold_start: f64,
+    /// Serverless runtime limit (s).
+    pub runtime_limit: f64,
+    /// Lease / visibility timeout (s) — failure recovery latency.
+    pub lease: f64,
+    /// Fixed per-task overhead (s): invocation dispatch, program/arg
+    /// fetch, runtime-state round-trips — what makes tiny blocks lose
+    /// (Fig 10a's latency-bound 2048 regime).
+    pub task_overhead: f64,
+    /// Baseline machine: cores per machine.
+    pub machine_cores: usize,
+    /// Baseline machine: memory bytes.
+    pub machine_memory: f64,
+    /// Baseline machine: NIC bandwidth (B/s).
+    pub machine_nic_bw: f64,
+    /// Efficiency factor for a tuned MPI library (ScaLAPACK) relative
+    /// to raw per-core peak.
+    pub bsp_efficiency: f64,
+    /// Centralized scheduler (Dask) per-task dispatch overhead (s).
+    pub driver_task_overhead: f64,
+    /// Dask serialization throughput (B/s per machine) — the paper:
+    /// "Dask spends a majority of its time serializing and
+    /// deserializing data".
+    pub serialization_bw: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            worker_flops: 30e9,
+            store_latency: 10e-3,
+            store_read_bw: 75e6,
+            store_write_bw: 50e6,
+            store_aggregate_bw: 250e9,
+            cold_start: 3.0,
+            runtime_limit: 300.0,
+            lease: 10.0,
+            task_overhead: 0.3,
+            machine_cores: 18,
+            machine_memory: 60e9,
+            machine_nic_bw: 1.25e9, // 10 Gbit
+            bsp_efficiency: 0.85,
+            driver_task_overhead: 1e-3,
+            serialization_bw: 300e6,
+        }
+    }
+}
+
+impl CostModel {
+    /// Time for a worker to read `bytes` over `ops` store operations.
+    pub fn read_time(&self, ops: usize, bytes: f64) -> f64 {
+        self.store_latency * ops as f64 + bytes / self.store_read_bw
+    }
+
+    /// Time for a worker to write `bytes` over `ops` store operations.
+    pub fn write_time(&self, ops: usize, bytes: f64) -> f64 {
+        self.store_latency * ops as f64 + bytes / self.store_write_bw
+    }
+
+    /// Compute time for `flops` on one worker core.
+    pub fn compute_time(&self, flops: f64) -> f64 {
+        flops / self.worker_flops
+    }
+
+    /// f64 bytes of one B×B tile.
+    pub fn tile_bytes(block: usize) -> f64 {
+        (block * block * 8) as f64
+    }
+
+    /// BLAS efficiency as a function of tile side: small tiles do not
+    /// amortize loop/pack overheads (the reason ScaLAPACK-512 trails
+    /// ScaLAPACK-4K in Fig 8a and block size 2048 loses in Fig 10a).
+    pub fn blas_efficiency(block: usize) -> f64 {
+        let b = block as f64;
+        1.0 - 256.0 / (b + 512.0)
+    }
+
+    /// Effective compute time for a kernel of `flops` at tile side
+    /// `block` (applies the BLAS-efficiency curve).
+    pub fn kernel_time(&self, flops: f64, block: usize) -> f64 {
+        flops / (self.worker_flops * Self::blas_efficiency(block))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_dominates_small_tiles() {
+        let m = CostModel::default();
+        // 2048² tile = 32 MB: read ≈ 10ms + 0.45s — bandwidth-bound.
+        let big = m.read_time(1, CostModel::tile_bytes(2048));
+        assert!(big > 0.4);
+        // 64² tile = 32 KB: latency-bound.
+        let small = m.read_time(1, CostModel::tile_bytes(64));
+        assert!(small < 0.012 && small > 0.009);
+    }
+
+    #[test]
+    fn compute_scale_sane() {
+        let m = CostModel::default();
+        // 4096³·2 flops syrk ≈ 137 GFLOP ≈ 4.6 s at 30 GFLOP/s.
+        let t = m.compute_time(2.0 * 4096f64.powi(3));
+        assert!(t > 3.0 && t < 6.0, "{t}");
+    }
+}

@@ -1,0 +1,665 @@
+//! Event-driven simulation of the numpywren execution model.
+//!
+//! Faithfully mirrors the real engine's semantics at task granularity:
+//! elastic workers with cold starts, runtime-limit recycling, the §4.2
+//! autoscaling policy and idle expiry, lease-based failure recovery,
+//! and the read/compute/write pipeline (pipeline width = concurrent
+//! tasks per worker; the core serializes compute while IO overlaps —
+//! exactly the worker implementation in `executor/worker.rs`).
+
+use crate::sim::cost::CostModel;
+use crate::sim::workload::Workload;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Worker-pool policy.
+#[derive(Clone, Copy, Debug)]
+pub enum WorkerPolicy {
+    /// Fixed pool of n single-core workers.
+    Fixed(usize),
+    /// §4.2 autoscaling: target = sf × pending / pipeline_width,
+    /// capped; scale-down via idle expiry T_timeout.
+    Auto {
+        sf: f64,
+        max_workers: usize,
+        t_timeout: f64,
+    },
+}
+
+/// Simulation parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    pub policy: WorkerPolicy,
+    pub pipeline_width: usize,
+    /// Kill (at_time, fraction of live workers).
+    pub failure: Option<(f64, f64)>,
+    /// Metrics sampling period (s).
+    pub sample_dt: f64,
+    /// Stop after this many completed tasks (Fig 10b runs "the first
+    /// 5000 instructions").
+    pub limit_tasks: Option<usize>,
+    /// Autoscaler control period.
+    pub provision_period: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            policy: WorkerPolicy::Fixed(64),
+            pipeline_width: 1,
+            failure: None,
+            sample_dt: 1.0,
+            limit_tasks: None,
+            provision_period: 1.0,
+        }
+    }
+}
+
+/// One metrics sample.
+#[derive(Clone, Copy, Debug)]
+pub struct SimSample {
+    pub t: f64,
+    pub pending: usize,
+    pub running: usize,
+    pub workers: usize,
+    pub flops_done: f64,
+    pub tasks_done: usize,
+}
+
+/// Simulation outcome.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub completion_time: f64,
+    /// Billed worker-seconds (alive time).
+    pub core_secs_billed: f64,
+    /// Compute-busy worker-seconds.
+    pub core_secs_busy: f64,
+    pub bytes_read: f64,
+    pub bytes_written: f64,
+    pub tasks_done: usize,
+    pub samples: Vec<SimSample>,
+    pub peak_workers: usize,
+    pub workers_spawned: usize,
+    /// Mean bytes read per worker spawned (Figure 7's per-machine
+    /// network bytes).
+    pub bytes_read_per_worker: f64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Event {
+    WorkerUp(usize),
+    WorkerDeath(usize, u64),
+    TaskDone { task: u32, worker: usize },
+    IdleCheck(usize, u64),
+    Provision,
+    Kill,
+    Sample,
+    Requeue(u32),
+}
+
+#[derive(PartialEq)]
+struct Scheduled(f64, u64, Event); // (time, seq, event)
+
+impl Eq for Scheduled {}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap: reverse on time, tie-break by sequence.
+        other
+            .0
+            .partial_cmp(&self.0)
+            .unwrap_or(Ordering::Equal)
+            .then(other.1.cmp(&self.1))
+    }
+}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+struct Worker {
+    up: bool,
+    /// Incarnation counter — stale death/idle events are ignored.
+    epoch: u64,
+    up_at: f64,
+    die_at: f64,
+    slots_free: usize,
+    core_free_at: f64,
+    idle_since: f64,
+    alive_secs: f64,
+    bytes_read: f64,
+    /// Tasks in flight (for failure re-queue).
+    inflight: Vec<u32>,
+}
+
+/// The simulator.
+pub struct ServerlessSim<'a> {
+    pub workload: &'a Workload,
+    pub model: CostModel,
+    pub config: SimConfig,
+}
+
+impl<'a> ServerlessSim<'a> {
+    pub fn new(workload: &'a Workload, model: CostModel, config: SimConfig) -> Self {
+        ServerlessSim {
+            workload,
+            model,
+            config,
+        }
+    }
+
+    pub fn run(&self) -> SimResult {
+        let dag = &self.workload.dag;
+        let costs = &self.workload.costs;
+        let n = dag.num_nodes();
+        let total_target = self.config.limit_tasks.unwrap_or(n).min(n);
+        let pw = self.config.pipeline_width.max(1);
+
+        let mut parents_left: Vec<u32> = dag.num_parents.clone();
+        let mut completed = vec![false; n];
+        // Ready queue: (priority, task) — deeper program lines last
+        // (factorization pivots first), matching the engine.
+        let mut ready: BinaryHeap<(i64, std::cmp::Reverse<u32>)> = BinaryHeap::new();
+        for r in dag.roots() {
+            ready.push((task_priority(dag, r), std::cmp::Reverse(r)));
+        }
+
+        let mut heap: BinaryHeap<Scheduled> = BinaryHeap::new();
+        let mut seq = 0u64;
+        let push = |heap: &mut BinaryHeap<Scheduled>, seq: &mut u64, t: f64, e: Event| {
+            *seq += 1;
+            heap.push(Scheduled(t, *seq, e));
+        };
+
+        let mut workers: Vec<Worker> = Vec::new();
+        let mut booting = 0usize;
+        let spawn = |workers: &mut Vec<Worker>,
+                     heap: &mut BinaryHeap<Scheduled>,
+                     seq: &mut u64,
+                     booting: &mut usize,
+                     now: f64|
+         -> usize {
+            *booting += 1;
+            let id = workers.len();
+            workers.push(Worker {
+                up: false,
+                epoch: 0,
+                up_at: 0.0,
+                die_at: 0.0,
+                slots_free: pw,
+                core_free_at: 0.0,
+                idle_since: 0.0,
+                alive_secs: 0.0,
+                bytes_read: 0.0,
+                inflight: Vec::new(),
+            });
+            push(heap, seq, now + self.model.cold_start, Event::WorkerUp(id));
+            id
+        };
+
+        // Initial pool / autoscaler bootstrap.
+        match self.config.policy {
+            WorkerPolicy::Fixed(k) => {
+                for _ in 0..k {
+                    spawn(&mut workers, &mut heap, &mut seq, &mut booting, 0.0);
+                }
+            }
+            WorkerPolicy::Auto { .. } => {
+                push(&mut heap, &mut seq, 0.0, Event::Provision);
+            }
+        }
+        if let Some((at, _)) = self.config.failure {
+            push(&mut heap, &mut seq, at, Event::Kill);
+        }
+        push(&mut heap, &mut seq, 0.0, Event::Sample);
+
+        let mut now = 0.0f64;
+        let mut done_count = 0usize;
+        // Livelock guard: a task whose service time exceeds the
+        // runtime limit redelivers forever (the paper's §4: "choose
+        // the coarseness of tasks such that many tasks can be
+        // successfully completed in the allocated time interval").
+        // Cap total requeues and bail with partial progress.
+        let mut requeues = 0usize;
+        let requeue_budget = 50 * n + 10_000;
+        let mut flops_done = 0.0f64;
+        let mut bytes_read = 0.0f64;
+        let mut bytes_written = 0.0f64;
+        let mut busy = 0.0f64;
+        let mut running = 0usize;
+        let mut samples = Vec::new();
+        let mut peak_workers = 0usize;
+
+        // Assign ready tasks to free slots. Aggregate-bandwidth cap:
+        // effective per-worker bw shrinks when the fleet exceeds it.
+        macro_rules! try_assign {
+            () => {{
+                let live = workers.iter().filter(|w| w.up).count();
+                let bw_scale = if live as f64 * self.model.store_read_bw
+                    > self.model.store_aggregate_bw
+                {
+                    self.model.store_aggregate_bw
+                        / (live as f64 * self.model.store_read_bw)
+                } else {
+                    1.0
+                };
+                'outer: while !ready.is_empty() {
+                    // Pick the first up worker with a free slot,
+                    // preferring the least-backlogged core.
+                    let mut best: Option<usize> = None;
+                    for (i, w) in workers.iter().enumerate() {
+                        if w.up && w.slots_free > 0 && now < w.die_at {
+                            best = match best {
+                                Some(b)
+                                    if workers[b].core_free_at <= w.core_free_at =>
+                                {
+                                    Some(b)
+                                }
+                                _ => Some(i),
+                            };
+                        }
+                    }
+                    let Some(widx) = best else { break 'outer };
+                    let (_, std::cmp::Reverse(task)) = ready.pop().unwrap();
+                    let ti = task as usize;
+                    if completed[ti] {
+                        continue;
+                    }
+                    let c = &costs[ti];
+                    let read_t = self.model.task_overhead
+                        + self.model.store_latency * c.reads as f64
+                        + c.bytes_in / (self.model.store_read_bw * bw_scale);
+                    let compute_t = self.model.kernel_time(c.flops, self.workload.block);
+                    let write_t = self.model.store_latency * c.writes as f64
+                        + c.bytes_out / (self.model.store_write_bw * bw_scale);
+                    let w = &mut workers[widx];
+                    let io_in_end = now + read_t;
+                    let compute_start = io_in_end.max(w.core_free_at);
+                    let compute_end = compute_start + compute_t;
+                    w.core_free_at = compute_end;
+                    let finish = compute_end + write_t;
+                    w.slots_free -= 1;
+                    w.inflight.push(task);
+                    w.bytes_read += c.bytes_in;
+                    busy += compute_t;
+                    bytes_read += c.bytes_in;
+                    bytes_written += c.bytes_out;
+                    running += 1;
+                    push(
+                        &mut heap,
+                        &mut seq,
+                        finish,
+                        Event::TaskDone { task, worker: widx },
+                    );
+                }
+            }};
+        }
+
+        while done_count < total_target {
+            if requeues > requeue_budget {
+                break;
+            }
+            let Some(Scheduled(t, _, ev)) = heap.pop() else {
+                break; // deadlock — shouldn't happen
+            };
+            now = t;
+            match ev {
+                Event::WorkerUp(id) => {
+                    booting = booting.saturating_sub(1);
+                    let rl = self.model.runtime_limit;
+                    let w = &mut workers[id];
+                    w.up = true;
+                    w.up_at = now;
+                    w.die_at = now + rl;
+                    w.idle_since = now;
+                    let epoch = w.epoch;
+                    push(&mut heap, &mut seq, now + rl, Event::WorkerDeath(id, epoch));
+                    if let WorkerPolicy::Auto { t_timeout, .. } = self.config.policy {
+                        push(
+                            &mut heap,
+                            &mut seq,
+                            now + t_timeout,
+                            Event::IdleCheck(id, epoch),
+                        );
+                    }
+                    let live = workers.iter().filter(|w| w.up).count();
+                    peak_workers = peak_workers.max(live);
+                    try_assign!();
+                }
+                Event::WorkerDeath(id, epoch) => {
+                    let requeue_at = now + self.model.lease;
+                    let w = &mut workers[id];
+                    if !w.up || w.epoch != epoch {
+                        continue;
+                    }
+                    w.up = false;
+                    w.epoch += 1;
+                    w.alive_secs += now - w.up_at;
+                    // In-flight tasks recover via lease expiry.
+                    let inflight = std::mem::take(&mut w.inflight);
+                    running -= inflight.len();
+                    w.slots_free = pw;
+                    w.core_free_at = 0.0;
+                    for task in inflight {
+                        push(&mut heap, &mut seq, requeue_at, Event::Requeue(task));
+                    }
+                    // Fixed pools keep their size: immediate re-invocation
+                    // (the §4-step-3 "provisioner launches new workers").
+                    if matches!(self.config.policy, WorkerPolicy::Fixed(_)) {
+                        spawn(&mut workers, &mut heap, &mut seq, &mut booting, now);
+                    }
+                }
+                Event::TaskDone { task, worker } => {
+                    let ti = task as usize;
+                    let w = &mut workers[worker];
+                    // Stale completion from a killed worker: ignore (its
+                    // inflight list was already requeued).
+                    if !w.inflight.contains(&task) {
+                        continue;
+                    }
+                    w.inflight.retain(|&x| x != task);
+                    w.slots_free += 1;
+                    if w.slots_free == pw {
+                        w.idle_since = now;
+                        let epoch = w.epoch;
+                        if let WorkerPolicy::Auto { t_timeout, .. } = self.config.policy {
+                            push(
+                                &mut heap,
+                                &mut seq,
+                                now + t_timeout,
+                                Event::IdleCheck(worker, epoch),
+                            );
+                        }
+                    }
+                    running -= 1;
+                    if !completed[ti] {
+                        completed[ti] = true;
+                        done_count += 1;
+                        flops_done += costs[ti].flops;
+                        for &c in &dag.children[ti] {
+                            parents_left[c as usize] -= 1;
+                            if parents_left[c as usize] == 0 {
+                                ready.push((task_priority(dag, c), std::cmp::Reverse(c)));
+                            }
+                        }
+                    }
+                    try_assign!();
+                }
+                Event::Requeue(task) => {
+                    requeues += 1;
+                    if requeues > requeue_budget {
+                        break; // livelock: tasks larger than the runtime limit
+                    }
+                    if !completed[task as usize] {
+                        ready.push((task_priority(dag, task), std::cmp::Reverse(task)));
+                        try_assign!();
+                    }
+                }
+                Event::IdleCheck(id, epoch) => {
+                    if let WorkerPolicy::Auto { t_timeout, .. } = self.config.policy {
+                        let w = &mut workers[id];
+                        if w.up
+                            && w.epoch == epoch
+                            && w.slots_free == pw
+                            && now - w.idle_since >= t_timeout - 1e-9
+                        {
+                            w.up = false;
+                            w.epoch += 1;
+                            w.alive_secs += now - w.up_at;
+                        }
+                    }
+                }
+                Event::Provision => {
+                    if let WorkerPolicy::Auto {
+                        sf, max_workers, ..
+                    } = self.config.policy
+                    {
+                        let pending = ready.len() + running;
+                        // Count booting workers too, or the cold-start
+                        // window makes every tick respawn the same gap.
+                        let live =
+                            workers.iter().filter(|w| w.up).count() + booting;
+                        let target = ((sf * pending as f64 / pw as f64).ceil() as usize)
+                            .min(max_workers);
+                        if target > live {
+                            for _ in 0..(target - live) {
+                                spawn(&mut workers, &mut heap, &mut seq, &mut booting, now);
+                            }
+                        }
+                        push(
+                            &mut heap,
+                            &mut seq,
+                            now + self.config.provision_period,
+                            Event::Provision,
+                        );
+                    }
+                }
+                Event::Kill => {
+                    if let Some((_, frac)) = self.config.failure {
+                        let live_ids: Vec<usize> = workers
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, w)| w.up)
+                            .map(|(i, _)| i)
+                            .collect();
+                        let n_kill = (live_ids.len() as f64 * frac).round() as usize;
+                        let requeue_at = now + self.model.lease;
+                        for &id in live_ids.iter().take(n_kill) {
+                            let w = &mut workers[id];
+                            w.up = false;
+                            w.epoch += 1;
+                            w.alive_secs += now - w.up_at;
+                            let inflight = std::mem::take(&mut w.inflight);
+                            running -= inflight.len();
+                            w.slots_free = pw;
+                            w.core_free_at = 0.0;
+                            for task in inflight {
+                                push(&mut heap, &mut seq, requeue_at, Event::Requeue(task));
+                            }
+                        }
+                    }
+                }
+                Event::Sample => {
+                    let live = workers.iter().filter(|w| w.up).count();
+                    samples.push(SimSample {
+                        t: now,
+                        pending: ready.len(),
+                        running,
+                        workers: live,
+                        flops_done,
+                        tasks_done: done_count,
+                    });
+                    push(
+                        &mut heap,
+                        &mut seq,
+                        now + self.config.sample_dt,
+                        Event::Sample,
+                    );
+                }
+            }
+        }
+
+        // Final accounting for still-alive workers.
+        let mut billed = 0.0;
+        for w in &mut workers {
+            if w.up {
+                w.alive_secs += now - w.up_at;
+                w.up = false;
+            }
+            billed += w.alive_secs;
+        }
+        let spawned = workers.len();
+        let bytes_per_worker = if spawned > 0 {
+            workers.iter().map(|w| w.bytes_read).sum::<f64>() / spawned as f64
+        } else {
+            0.0
+        };
+        SimResult {
+            completion_time: now,
+            core_secs_billed: billed,
+            core_secs_busy: busy,
+            bytes_read,
+            bytes_written,
+            tasks_done: done_count,
+            samples,
+            peak_workers,
+            workers_spawned: spawned,
+            bytes_read_per_worker: bytes_per_worker,
+        }
+    }
+}
+
+fn task_priority(dag: &crate::lambdapack::dag::Dag, task: u32) -> i64 {
+    // Earlier kernel lines first (same heuristic as the engine).
+    -(dag.kernel_of[task as usize] as i64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lambdapack::interp::Env;
+    use crate::lambdapack::programs;
+
+    fn args(n: i64) -> Env {
+        [("N".to_string(), n)].into_iter().collect()
+    }
+
+    fn chol_workload(n: i64, b: usize) -> Workload {
+        Workload::build(&programs::cholesky(), &args(n), b).unwrap()
+    }
+
+    #[test]
+    fn completes_all_tasks() {
+        let w = chol_workload(8, 512);
+        let sim = ServerlessSim::new(&w, CostModel::default(), SimConfig::default());
+        let r = sim.run();
+        assert_eq!(r.tasks_done, w.num_tasks());
+        assert!(r.completion_time > 0.0);
+        assert!(r.core_secs_busy > 0.0);
+        assert!(r.core_secs_billed >= r.core_secs_busy * 0.5);
+    }
+
+    #[test]
+    fn more_workers_faster_until_parallelism_exhausted() {
+        let w = chol_workload(16, 1024);
+        let m = CostModel::default();
+        let t = |k| {
+            let mut c = SimConfig::default();
+            c.policy = WorkerPolicy::Fixed(k);
+            ServerlessSim::new(&w, m, c).run().completion_time
+        };
+        let (t4, t32, t256) = (t(4), t(32), t(256));
+        assert!(t4 > t32, "t4={t4} t32={t32}");
+        assert!(t32 >= t256 * 0.95, "t32={t32} t256={t256}");
+    }
+
+    #[test]
+    fn respects_lower_bound() {
+        let w = chol_workload(8, 2048);
+        let m = CostModel::default();
+        let mut c = SimConfig::default();
+        c.policy = WorkerPolicy::Fixed(64);
+        let r = ServerlessSim::new(&w, m, c).run();
+        let lb = w.lower_bound(64, &m);
+        assert!(
+            r.completion_time >= lb * 0.999,
+            "sim {} < lower bound {}",
+            r.completion_time,
+            lb
+        );
+    }
+
+    #[test]
+    fn pipelining_improves_flop_rate() {
+        // Fig 9a: with IO comparable to compute, pw=3 beats pw=1 —
+        // in the *saturated* regime (enough ready tasks per worker).
+        let w = chol_workload(24, 2048);
+        let m = CostModel::default();
+        let run = |pw| {
+            let mut c = SimConfig::default();
+            c.policy = WorkerPolicy::Fixed(20);
+            c.pipeline_width = pw;
+            ServerlessSim::new(&w, m, c).run()
+        };
+        let r1 = run(1);
+        let r3 = run(3);
+        assert!(
+            r3.completion_time < r1.completion_time,
+            "pw3 {} !< pw1 {}",
+            r3.completion_time,
+            r1.completion_time
+        );
+    }
+
+    #[test]
+    fn autoscaler_tracks_parallelism() {
+        let w = chol_workload(12, 1024);
+        let m = CostModel::default();
+        let mut c = SimConfig::default();
+        c.policy = WorkerPolicy::Auto {
+            sf: 1.0,
+            max_workers: 256,
+            t_timeout: 10.0,
+        };
+        let r = ServerlessSim::new(&w, m, c).run();
+        assert_eq!(r.tasks_done, w.num_tasks());
+        assert!(r.peak_workers > 4, "peak {}", r.peak_workers);
+        // Billed core-secs must beat an always-max static pool.
+        let static_billed = r.completion_time * 256.0;
+        assert!(r.core_secs_billed < static_billed);
+    }
+
+    #[test]
+    fn failure_injection_recovers_and_slows() {
+        let w = chol_workload(12, 2048);
+        let m = CostModel::default();
+        let base = {
+            let mut c = SimConfig::default();
+            c.policy = WorkerPolicy::Auto {
+                sf: 1.0,
+                max_workers: 128,
+                t_timeout: 10.0,
+            };
+            ServerlessSim::new(&w, m, c).run()
+        };
+        let failed = {
+            let mut c = SimConfig::default();
+            c.policy = WorkerPolicy::Auto {
+                sf: 1.0,
+                max_workers: 128,
+                t_timeout: 10.0,
+            };
+            c.failure = Some((base.completion_time * 0.4, 0.8));
+            ServerlessSim::new(&w, m, c).run()
+        };
+        assert_eq!(failed.tasks_done, w.num_tasks(), "must recover");
+        assert!(
+            failed.completion_time > base.completion_time,
+            "failure must cost time: {} vs {}",
+            failed.completion_time,
+            base.completion_time
+        );
+    }
+
+    #[test]
+    fn runtime_limit_recycling_preserves_progress() {
+        let w = chol_workload(10, 4096);
+        let mut m = CostModel::default();
+        m.runtime_limit = 60.0; // aggressive recycling
+        let mut c = SimConfig::default();
+        c.policy = WorkerPolicy::Fixed(32);
+        let r = ServerlessSim::new(&w, m, c).run();
+        assert_eq!(r.tasks_done, w.num_tasks());
+    }
+
+    #[test]
+    fn limit_tasks_stops_early() {
+        let w = chol_workload(12, 1024);
+        let mut c = SimConfig::default();
+        c.limit_tasks = Some(50);
+        let r = ServerlessSim::new(&w, CostModel::default(), c).run();
+        assert_eq!(r.tasks_done, 50);
+    }
+}

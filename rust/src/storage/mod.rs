@@ -1,0 +1,25 @@
+//! The simulated serverless substrate.
+//!
+//! numpywren runs on three cloud services (§4, Figure 6); this module
+//! provides behaviour-preserving local implementations of each (see
+//! DESIGN.md §1 for the substitution argument):
+//!
+//! * [`ObjectStore`] — Amazon S3: a keyed tile store with
+//!   read-after-write consistency per key, per-operation latency
+//!   injection, and byte accounting (Figure 7's network-bytes numbers
+//!   come from these counters).
+//! * [`TaskQueue`] — Amazon SQS: at-least-once delivery with a
+//!   visibility timeout; fetching a task takes a *lease*, renewable by
+//!   the worker, and an expired lease makes the task visible again
+//!   (the entire §4.1 fault-tolerance protocol rests on this).
+//! * [`StateStore`] — Redis/ElastiCache: linearizable per-key
+//!   compare-and-swap and counters, used for task status and
+//!   dependency counting.
+
+pub mod object_store;
+pub mod queue;
+pub mod state_store;
+
+pub use object_store::{ObjectStore, StoreStats};
+pub use queue::{Lease, TaskQueue};
+pub use state_store::StateStore;

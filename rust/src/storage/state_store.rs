@@ -1,0 +1,283 @@
+//! Redis-like runtime state store.
+//!
+//! §4 step 4: "the runtime state store tracks the control state of the
+//! entire execution and needs to support fast, atomic updates for each
+//! task". The operations numpywren's protocol needs — and all we
+//! provide — are per-key linearizable RMW:
+//!
+//! * `cas` — task-status transitions (exactly one worker wins the
+//!   `Pending → Completed` transition and performs child enqueue);
+//! * `set_nx` — per-edge "decremented" markers making dependency
+//!   decrements idempotent under task re-execution;
+//! * `decr`/`init_counter` — lazily-initialized dependency counters
+//!   (DESIGN.md §5.2);
+//! * plain get/set for job metadata and counters for metrics.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Task status values used by the engine (stored as strings — the
+/// store itself is schema-less, like Redis).
+pub mod status {
+    pub const PENDING: &str = "pending";
+    pub const RUNNING: &str = "running";
+    pub const COMPLETED: &str = "completed";
+}
+
+/// The store. Clone-shared.
+#[derive(Clone, Default)]
+pub struct StateStore {
+    kv: Arc<Mutex<HashMap<String, String>>>,
+    counters: Arc<Mutex<HashMap<String, i64>>>,
+    ops: Arc<AtomicU64>,
+}
+
+impl StateStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bump(&self) {
+        self.ops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total operations served (control-plane load metric).
+    pub fn op_count(&self) -> u64 {
+        self.ops.load(Ordering::Relaxed)
+    }
+
+    pub fn get(&self, key: &str) -> Option<String> {
+        self.bump();
+        self.kv.lock().unwrap().get(key).cloned()
+    }
+
+    pub fn set(&self, key: &str, value: &str) {
+        self.bump();
+        self.kv
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), value.to_string());
+    }
+
+    /// Set iff absent. Returns true when this call created the key —
+    /// the idempotence primitive (only the first caller proceeds).
+    pub fn set_nx(&self, key: &str, value: &str) -> bool {
+        self.bump();
+        let mut kv = self.kv.lock().unwrap();
+        if kv.contains_key(key) {
+            false
+        } else {
+            kv.insert(key.to_string(), value.to_string());
+            true
+        }
+    }
+
+    /// Compare-and-swap: if current == `expect` (None = absent), set to
+    /// `value` and return true.
+    pub fn cas(&self, key: &str, expect: Option<&str>, value: &str) -> bool {
+        self.bump();
+        let mut kv = self.kv.lock().unwrap();
+        let cur = kv.get(key).map(|s| s.as_str());
+        if cur == expect {
+            kv.insert(key.to_string(), value.to_string());
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Initialize a counter iff absent; returns true if this call
+    /// initialized it.
+    pub fn init_counter(&self, key: &str, value: i64) -> bool {
+        self.bump();
+        let mut c = self.counters.lock().unwrap();
+        if c.contains_key(key) {
+            false
+        } else {
+            c.insert(key.to_string(), value);
+            true
+        }
+    }
+
+    /// Atomically add `delta` (counter created as 0 if absent);
+    /// returns the new value.
+    pub fn incr(&self, key: &str, delta: i64) -> i64 {
+        self.bump();
+        let mut c = self.counters.lock().unwrap();
+        let v = c.entry(key.to_string()).or_insert(0);
+        *v += delta;
+        *v
+    }
+
+    /// Atomically decrement; returns the new value.
+    pub fn decr(&self, key: &str) -> i64 {
+        self.incr(key, -1)
+    }
+
+    pub fn counter(&self, key: &str) -> i64 {
+        self.bump();
+        *self.counters.lock().unwrap().get(key).unwrap_or(&0)
+    }
+
+    /// Does the counter exist (distinct from == 0)?
+    pub fn counter_exists(&self, key: &str) -> bool {
+        self.counters.lock().unwrap().contains_key(key)
+    }
+
+    /// The dependency-propagation primitive: atomically, if `edge_key`
+    /// has not been marked, mark it and decrement `counter_key`.
+    /// Returns the counter value after the (possibly skipped)
+    /// decrement. Idempotent per edge — a re-executed parent task
+    /// re-observes the value instead of double-decrementing, and a
+    /// worker that crashed between the decrement and the child enqueue
+    /// lets its successor re-observe the 0 and enqueue (at-least-once
+    /// enqueue is safe; execution is idempotent).
+    pub fn edge_decr(&self, edge_key: &str, counter_key: &str) -> i64 {
+        self.bump();
+        let mut c = self.counters.lock().unwrap();
+        if c.contains_key(edge_key) {
+            *c.get(counter_key).unwrap_or(&0)
+        } else {
+            c.insert(edge_key.to_string(), 1);
+            let v = c.entry(counter_key.to_string()).or_insert(0);
+            *v -= 1;
+            *v
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn get_set() {
+        let s = StateStore::new();
+        assert_eq!(s.get("k"), None);
+        s.set("k", "v");
+        assert_eq!(s.get("k").as_deref(), Some("v"));
+    }
+
+    #[test]
+    fn cas_transitions() {
+        let s = StateStore::new();
+        assert!(s.cas("t", None, status::PENDING));
+        assert!(!s.cas("t", None, status::PENDING), "already exists");
+        assert!(s.cas("t", Some(status::PENDING), status::COMPLETED));
+        assert!(
+            !s.cas("t", Some(status::PENDING), status::COMPLETED),
+            "second completer must lose"
+        );
+    }
+
+    #[test]
+    fn set_nx_exactly_one_winner_concurrent() {
+        let s = StateStore::new();
+        let mut handles = Vec::new();
+        for i in 0..16 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || s.set_nx("edge:a:b", &i.to_string())));
+        }
+        let wins: usize = handles
+            .into_iter()
+            .map(|h| h.join().unwrap() as usize)
+            .sum();
+        assert_eq!(wins, 1);
+    }
+
+    #[test]
+    fn concurrent_decrements_hit_zero_exactly_once() {
+        // The dependency-counter invariant: N workers each decrement
+        // once; exactly one observes the 0 crossing.
+        let s = StateStore::new();
+        s.init_counter("deps", 16);
+        let mut handles = Vec::new();
+        for _ in 0..16 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || s.decr("deps") == 0));
+        }
+        let zeros: usize = handles
+            .into_iter()
+            .map(|h| h.join().unwrap() as usize)
+            .sum();
+        assert_eq!(zeros, 1);
+        assert_eq!(s.counter("deps"), 0);
+    }
+
+    #[test]
+    fn init_counter_only_first_wins() {
+        let s = StateStore::new();
+        assert!(s.init_counter("c", 5));
+        assert!(!s.init_counter("c", 99));
+        assert_eq!(s.counter("c"), 5);
+    }
+
+    #[test]
+    fn edge_decr_idempotent() {
+        let s = StateStore::new();
+        s.init_counter("deps:c", 3);
+        assert_eq!(s.edge_decr("edge:a:c", "deps:c"), 2);
+        // Re-execution of parent a: no double decrement, value observed.
+        assert_eq!(s.edge_decr("edge:a:c", "deps:c"), 2);
+        assert_eq!(s.edge_decr("edge:b:c", "deps:c"), 1);
+        assert_eq!(s.edge_decr("edge:d:c", "deps:c"), 0);
+        assert_eq!(s.edge_decr("edge:d:c", "deps:c"), 0);
+    }
+
+    #[test]
+    fn edge_decr_concurrent_zero_crossing() {
+        // n distinct parents racing (with duplicates): counter ends at
+        // exactly 0 and at least one caller observes 0.
+        let s = StateStore::new();
+        let n = 8;
+        s.init_counter("deps", n);
+        let mut handles = Vec::new();
+        for i in 0..n {
+            for _dup in 0..3 {
+                let s = s.clone();
+                handles.push(std::thread::spawn(move || {
+                    s.edge_decr(&format!("edge:{i}"), "deps") == 0
+                }));
+            }
+        }
+        let zeros: usize = handles
+            .into_iter()
+            .map(|h| h.join().unwrap() as usize)
+            .sum();
+        assert!(zeros >= 1);
+        assert_eq!(s.counter("deps"), 0);
+    }
+
+    #[test]
+    fn prop_counter_sum_invariant() {
+        // Random interleavings of incr/decr across threads conserve the
+        // arithmetic sum.
+        forall("counter conserves sum", 99, 16, |rng, _| {
+            let s = StateStore::new();
+            let n_threads = 1 + rng.below(6);
+            let per = 1 + rng.below(50);
+            let deltas: Vec<Vec<i64>> = (0..n_threads)
+                .map(|_| (0..per).map(|_| rng.range_i64(-3, 3)).collect())
+                .collect();
+            let expected: i64 = deltas.iter().flatten().sum();
+            let mut handles = Vec::new();
+            for d in deltas {
+                let s = s.clone();
+                handles.push(std::thread::spawn(move || {
+                    for x in d {
+                        s.incr("c", x);
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            prop_assert_eq!(s.counter("c"), expected);
+            prop_assert!(s.op_count() > 0);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,10 @@
+//! Small shared utilities: deterministic PRNG, timing helpers, and a
+//! tiny property-testing harness (the offline crate set has neither
+//! `rand` nor `proptest`, so we carry our own).
+
+pub mod prng;
+pub mod proptest;
+pub mod timer;
+
+pub use prng::Rng;
+pub use timer::Stopwatch;

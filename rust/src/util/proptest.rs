@@ -1,0 +1,89 @@
+//! A miniature property-testing harness.
+//!
+//! The offline crate set carries neither `proptest` nor `quickcheck`,
+//! so we provide the 5% of the idea that the coordinator-invariant
+//! tests need: run a property over many deterministic random cases and,
+//! on failure, report the seed + case index so the exact case replays.
+
+use crate::util::prng::Rng;
+
+/// Number of cases `forall` runs by default (override with the
+/// `NUMPYWREN_PROPTEST_CASES` env var).
+pub fn default_cases() -> usize {
+    std::env::var("NUMPYWREN_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop(rng, case_index)` over `cases` deterministic cases.
+/// `prop` returns `Err(msg)` to fail the property; panics propagate
+/// with seed/case attribution too.
+pub fn forall<F>(name: &str, seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cases {
+        // Derive a fresh generator per case so a failing case replays
+        // in isolation: Rng::new(seed ^ case-hash).
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!("property `{name}` failed at case {case} (seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Convenience macro: `prop_assert!(cond, "msg {}", x)` inside a
+/// `forall` body returns an Err instead of panicking.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// `prop_assert_eq!(a, b)` — equality with value printing.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("u64 xor is involutive", 42, 32, |rng, _| {
+            let a = rng.next_u64();
+            let b = rng.next_u64();
+            prop_assert_eq!(a ^ b ^ b, a);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn forall_reports_failure() {
+        forall("always fails", 1, 4, |_, _| Err("nope".into()));
+    }
+}

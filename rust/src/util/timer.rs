@@ -1,0 +1,89 @@
+//! Wall-clock timing helpers for the engine, examples, and the
+//! hand-rolled bench harness (criterion is not in the offline crate
+//! set; `cargo bench` targets use `harness = false` and these helpers).
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Run `f` `iters` times and return (total, per-iter) durations.
+pub fn time_n<F: FnMut()>(iters: usize, mut f: F) -> (Duration, Duration) {
+    let sw = Stopwatch::start();
+    for _ in 0..iters {
+        f();
+    }
+    let total = sw.elapsed();
+    (total, total / iters.max(1) as u32)
+}
+
+/// Median-of-runs micro-bench: runs `f` until `min_time` has elapsed or
+/// `max_iters` reached, returns (iters, median seconds/iter).
+/// Used by the `benches/` targets for stable per-row numbers.
+pub fn bench_median<F: FnMut()>(min_time: Duration, max_iters: usize, mut f: F) -> (usize, f64) {
+    let mut samples = Vec::new();
+    let overall = Stopwatch::start();
+    while samples.len() < 3 || (overall.elapsed() < min_time && samples.len() < max_iters) {
+        let sw = Stopwatch::start();
+        f();
+        samples.push(sw.secs());
+        if samples.len() >= max_iters {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    (samples.len(), median)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        let a = sw.secs();
+        let b = sw.secs();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn time_n_counts() {
+        let mut n = 0usize;
+        let (_, _) = time_n(10, || n += 1);
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    fn bench_median_runs_at_least_three() {
+        let mut n = 0usize;
+        let (iters, med) = bench_median(Duration::from_millis(1), 5, || n += 1);
+        assert!(iters >= 3 && iters <= 5);
+        assert!(med >= 0.0);
+        assert_eq!(n, iters);
+    }
+}

@@ -1,0 +1,254 @@
+//! Integration tests: the full engine (queue + state store + object
+//! store + workers + provisioner) under fault injection, stragglers,
+//! runtime limits, pipelining, and autoscaling — the §4.1/§4.2
+//! machinery end-to-end on real numerics.
+
+use numpywren::config::{EngineConfig, FailureSpec, ScalingMode};
+use numpywren::drivers;
+use numpywren::engine::Engine;
+use numpywren::linalg::matrix::Matrix;
+use numpywren::util::prng::Rng;
+use std::time::Duration;
+
+fn spd(n: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::rand_spd(n, &mut rng)
+}
+
+fn base_cfg() -> EngineConfig {
+    let mut cfg = EngineConfig::default();
+    cfg.job_timeout = Duration::from_secs(120);
+    cfg
+}
+
+#[test]
+fn fixed_pool_cholesky_correct() {
+    let a = spd(32, 1);
+    let mut cfg = base_cfg();
+    cfg.scaling = ScalingMode::Fixed(6);
+    let out = drivers::cholesky(&Engine::new(cfg), &a, 8).unwrap();
+    assert!(out.result.matmul_nt(&out.result).max_abs_diff(&a) < 1e-8);
+    let r = &out.run.report;
+    assert_eq!(r.completed, r.total_tasks);
+    assert!(r.store.bytes_read > 0 && r.store.bytes_written > 0);
+    assert!(r.total_flops > 0);
+    assert!(r.error.is_none());
+}
+
+#[test]
+fn autoscaled_cholesky_scales_up_and_down() {
+    let a = spd(32, 2);
+    let mut cfg = base_cfg();
+    cfg.scaling = ScalingMode::Auto {
+        sf: 1.0,
+        max_workers: 8,
+    };
+    cfg.idle_timeout = Duration::from_millis(50);
+    cfg.provision_period = Duration::from_millis(10);
+    let out = drivers::cholesky(&Engine::new(cfg), &a, 8).unwrap();
+    assert!(out.result.matmul_nt(&out.result).max_abs_diff(&a) < 1e-8);
+    let r = &out.run.report;
+    assert!(r.workers_spawned >= 1);
+    // Auto-scaled workers exit on idle or job completion.
+    assert_eq!(r.completed, r.total_tasks);
+}
+
+#[test]
+fn failure_injection_recovers() {
+    // Kill 60% of the pool mid-run (Figure 9b at miniature scale):
+    // leases expire, tasks redeliver, the provisioner replenishes, the
+    // job completes and the numbers are right.
+    let a = spd(40, 3);
+    let mut cfg = base_cfg();
+    cfg.scaling = ScalingMode::Auto {
+        sf: 1.0,
+        max_workers: 6,
+    };
+    cfg.lease = Duration::from_millis(100);
+    cfg.idle_timeout = Duration::from_millis(80);
+    cfg.provision_period = Duration::from_millis(10);
+    cfg.store_latency = Duration::from_micros(300); // slow things down
+    cfg.failure = Some(FailureSpec {
+        at: Duration::from_millis(60),
+        fraction: 0.6,
+    });
+    let out = drivers::cholesky(&Engine::new(cfg), &a, 8).unwrap();
+    assert!(out.result.matmul_nt(&out.result).max_abs_diff(&a) < 1e-8);
+    let r = &out.run.report;
+    assert_eq!(r.completed, r.total_tasks);
+    assert!(r.error.is_none());
+}
+
+#[test]
+fn straggler_duplicate_execution_is_safe() {
+    // A lease much shorter than the injected store latency forces
+    // redeliveries while the original holder still works: tasks execute
+    // more than once. Idempotence (SSA writes + CAS completion + edge-
+    // guarded decrements) must keep the result exact.
+    let a = spd(24, 4);
+    let mut cfg = base_cfg();
+    cfg.scaling = ScalingMode::Fixed(6);
+    cfg.lease = Duration::from_millis(20);
+    cfg.store_latency = Duration::from_millis(8);
+    let out = drivers::cholesky(&Engine::new(cfg), &a, 8).unwrap();
+    assert!(out.result.matmul_nt(&out.result).max_abs_diff(&a) < 1e-8);
+    let r = &out.run.report;
+    // completed counts CAS winners — exactly the task count even if
+    // more executions happened.
+    assert_eq!(r.completed, r.total_tasks);
+    // Task records may exceed total (duplicates recorded).
+    assert!(r.tasks.len() as u64 >= r.total_tasks);
+}
+
+#[test]
+fn runtime_limit_recycles_workers() {
+    // Lambda-style: invocations die every 150 ms (with a cold start on
+    // re-entry) — the job must still complete.
+    let a = spd(24, 5);
+    let mut cfg = base_cfg();
+    cfg.scaling = ScalingMode::Fixed(4);
+    cfg.runtime_limit = Duration::from_millis(150);
+    cfg.cold_start = Duration::from_millis(10);
+    cfg.store_latency = Duration::from_micros(200);
+    let out = drivers::cholesky(&Engine::new(cfg), &a, 8).unwrap();
+    assert!(out.result.matmul_nt(&out.result).max_abs_diff(&a) < 1e-8);
+}
+
+#[test]
+fn pipelining_correct_and_overlaps() {
+    let a = spd(40, 6);
+    let mut cfg = base_cfg();
+    cfg.scaling = ScalingMode::Fixed(3);
+    cfg.pipeline_width = 3;
+    cfg.store_latency = Duration::from_micros(500);
+    let out = drivers::cholesky(&Engine::new(cfg), &a, 8).unwrap();
+    assert!(out.result.matmul_nt(&out.result).max_abs_diff(&a) < 1e-8);
+}
+
+#[test]
+fn gemm_under_faults() {
+    let mut rng = Rng::new(7);
+    let a = Matrix::randn(24, 24, &mut rng);
+    let b = Matrix::randn(24, 24, &mut rng);
+    let mut cfg = base_cfg();
+    cfg.scaling = ScalingMode::Auto {
+        sf: 0.5,
+        max_workers: 5,
+    };
+    cfg.lease = Duration::from_millis(100);
+    cfg.idle_timeout = Duration::from_millis(60);
+    cfg.provision_period = Duration::from_millis(10);
+    cfg.failure = Some(FailureSpec {
+        at: Duration::from_millis(40),
+        fraction: 0.5,
+    });
+    cfg.store_latency = Duration::from_micros(200);
+    let out = drivers::gemm(&Engine::new(cfg), &a, &b, 8).unwrap();
+    assert!(out.result.max_abs_diff(&a.matmul(&b)) < 1e-9);
+}
+
+#[test]
+fn tsqr_autoscaled() {
+    let mut rng = Rng::new(8);
+    let a = Matrix::randn(64, 8, &mut rng);
+    let mut cfg = base_cfg();
+    cfg.scaling = ScalingMode::Auto {
+        sf: 1.0,
+        max_workers: 6,
+    };
+    cfg.idle_timeout = Duration::from_millis(60);
+    cfg.provision_period = Duration::from_millis(10);
+    let out = drivers::tsqr(&Engine::new(cfg), &a, 8).unwrap();
+    let r = &out.result;
+    assert!(r.matmul_tn(r).max_abs_diff(&a.matmul_tn(&a)) < 1e-8);
+}
+
+#[test]
+fn qr_with_pipelining() {
+    let mut rng = Rng::new(9);
+    let a = Matrix::randn(24, 24, &mut rng);
+    let mut cfg = base_cfg();
+    cfg.scaling = ScalingMode::Fixed(4);
+    cfg.pipeline_width = 2;
+    let out = drivers::qr(&Engine::new(cfg), &a, 8).unwrap();
+    let r = &out.result;
+    assert!(r.matmul_tn(r).max_abs_diff(&a.matmul_tn(&a)) < 1e-8);
+}
+
+#[test]
+fn non_spd_input_aborts_with_error() {
+    // chol of an indefinite matrix must fail the job cleanly, not hang.
+    let mut a = Matrix::eye(16);
+    a[(0, 0)] = -5.0;
+    let mut cfg = base_cfg();
+    cfg.scaling = ScalingMode::Fixed(2);
+    cfg.job_timeout = Duration::from_secs(20);
+    let msg = match drivers::cholesky(&Engine::new(cfg), &a, 8) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("indefinite matrix must fail"),
+    };
+    assert!(
+        msg.contains("positive definite") || msg.contains("cholesky"),
+        "unexpected error: {msg}"
+    );
+}
+
+#[test]
+fn metrics_profile_nonempty() {
+    let a = spd(32, 10);
+    let mut cfg = base_cfg();
+    cfg.scaling = ScalingMode::Fixed(4);
+    cfg.sample_period = Duration::from_millis(2);
+    cfg.store_latency = Duration::from_micros(300);
+    let out = drivers::cholesky(&Engine::new(cfg), &a, 8).unwrap();
+    let r = &out.run.report;
+    assert!(r.samples.len() >= 2, "sampler must have run");
+    assert!(r.core_secs_active >= 0.0);
+    assert!(r.core_secs_billed > 0.0);
+    // Per-worker byte accounting (Figure 7 mechanics).
+    let workers = out.run.store.known_workers();
+    assert!(!workers.is_empty());
+}
+
+#[test]
+fn pjrt_full_stack_cholesky() {
+    // The production path end-to-end: serverless engine + AOT-compiled
+    // JAX/Pallas kernels via PJRT (f32), verified against the input.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let kernels =
+        std::sync::Arc::new(numpywren::runtime::PjrtKernels::new(&dir, 2).unwrap());
+    let a = spd(128, 11);
+    let mut cfg = base_cfg();
+    cfg.scaling = ScalingMode::Fixed(4);
+    let engine = Engine::with_kernels(cfg, kernels.clone());
+    let out = drivers::cholesky(&engine, &a, 32).unwrap();
+    let l = &out.result;
+    let rel = l.matmul_nt(l).max_abs_diff(&a) / a.fro_norm();
+    assert!(rel < 1e-4, "relative reconstruction error {rel}");
+    let (pjrt, _native) = kernels.call_counts();
+    assert!(pjrt > 0, "PJRT path must actually serve kernels");
+}
+
+#[test]
+fn pjrt_full_stack_gemm() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        return;
+    }
+    let kernels =
+        std::sync::Arc::new(numpywren::runtime::PjrtKernels::new(&dir, 2).unwrap());
+    let mut rng = Rng::new(12);
+    let a = Matrix::randn(96, 96, &mut rng);
+    let b = Matrix::randn(96, 96, &mut rng);
+    let mut cfg = base_cfg();
+    cfg.scaling = ScalingMode::Fixed(4);
+    let engine = Engine::with_kernels(cfg, kernels.clone());
+    let out = drivers::gemm(&engine, &a, &b, 32).unwrap();
+    let rel = out.result.max_abs_diff(&a.matmul(&b)) / a.fro_norm();
+    assert!(rel < 1e-4, "relative error {rel}");
+    assert!(kernels.call_counts().0 > 0);
+}

@@ -1,0 +1,248 @@
+//! Property tests for the LAmbdaPACK dependency analyzer (the paper's
+//! core contribution): on *randomly generated* programs — random loop
+//! nests, affine and `2**var` index expressions, `if` guards — the
+//! analyzer's `find_readers`/`find_writers` must agree exactly with
+//! brute-force enumeration of the whole iteration space.
+
+use numpywren::lambdapack::analysis::{Analyzer, Loc};
+use numpywren::lambdapack::ast::{Cop, Expr, IdxExpr, Program, Stmt};
+use numpywren::lambdapack::interp::{enumerate_nodes, Env, Node};
+use numpywren::util::prng::Rng;
+use std::collections::{BTreeMap, BTreeSet};
+
+const MATRICES: &[&str] = &["A", "B", "C"];
+const VARS: &[&str] = &["i", "j", "k"];
+
+/// A random affine-ish index expression over the in-scope vars.
+fn rand_index(rng: &mut Rng, scope: &[String]) -> Expr {
+    if scope.is_empty() {
+        return Expr::int(rng.range_i64(0, 3));
+    }
+    let v = scope[rng.below(scope.len())].clone();
+    match rng.below(6) {
+        0 => Expr::var(&v),
+        1 => Expr::add(Expr::var(&v), Expr::int(rng.range_i64(-1, 2))),
+        2 => Expr::mul(Expr::int(rng.range_i64(1, 2)), Expr::var(&v)),
+        3 => {
+            // two-variable affine when possible
+            let w = scope[rng.below(scope.len())].clone();
+            Expr::add(Expr::var(&v), Expr::var(&w))
+        }
+        4 => Expr::pow2(Expr::var(&v)), // the nonlinear class
+        _ => Expr::int(rng.range_i64(0, 3)),
+    }
+}
+
+fn rand_idx_expr(rng: &mut Rng, scope: &[String]) -> IdxExpr {
+    let m = MATRICES[rng.below(MATRICES.len())];
+    let arity = 1 + rng.below(2);
+    IdxExpr::new(
+        m,
+        (0..arity).map(|_| rand_index(rng, scope)).collect(),
+    )
+}
+
+fn rand_body(rng: &mut Rng, depth: usize, scope: &mut Vec<String>, lines: &mut usize) -> Vec<Stmt> {
+    let mut body = Vec::new();
+    let n_stmts = 1 + rng.below(2);
+    for _ in 0..n_stmts {
+        if *lines >= 5 {
+            break;
+        }
+        let choice = rng.below(if depth < 3 { 4 } else { 2 });
+        match choice {
+            // kernel call
+            0 | 1 => {
+                *lines += 1;
+                body.push(Stmt::KernelCall {
+                    line: usize::MAX,
+                    fn_name: "op".into(),
+                    outputs: vec![rand_idx_expr(rng, scope)],
+                    mat_inputs: (0..1 + rng.below(2))
+                        .map(|_| rand_idx_expr(rng, scope))
+                        .collect(),
+                    scalar_inputs: vec![],
+                });
+            }
+            // loop
+            2 => {
+                let var = VARS[depth % VARS.len()].to_string();
+                if scope.contains(&var) {
+                    continue;
+                }
+                let lo = rng.range_i64(0, 1);
+                let hi = lo + rng.range_i64(1, 4);
+                scope.push(var.clone());
+                let inner = rand_body(rng, depth + 1, scope, lines);
+                scope.pop();
+                if inner.is_empty() {
+                    continue;
+                }
+                body.push(Stmt::For {
+                    var,
+                    min: Expr::int(lo),
+                    max: if rng.chance(0.3) && !scope.is_empty() {
+                        // bound depending on an outer var
+                        Expr::add(
+                            Expr::var(&scope[rng.below(scope.len())]),
+                            Expr::int(rng.range_i64(1, 3)),
+                        )
+                    } else {
+                        Expr::int(hi)
+                    },
+                    step: Expr::int(if rng.chance(0.2) { 2 } else { 1 }),
+                    body: inner,
+                });
+            }
+            // guard
+            _ => {
+                if scope.is_empty() {
+                    continue;
+                }
+                let v = scope[rng.below(scope.len())].clone();
+                let inner = rand_body(rng, depth + 1, scope, lines);
+                let else_inner = if rng.chance(0.3) {
+                    rand_body(rng, depth + 1, scope, lines)
+                } else {
+                    vec![]
+                };
+                if inner.is_empty() && else_inner.is_empty() {
+                    continue;
+                }
+                body.push(Stmt::If {
+                    cond: Expr::Cmp(
+                        Cop::Lt,
+                        Box::new(Expr::var(&v)),
+                        Box::new(Expr::int(rng.range_i64(1, 3))),
+                    ),
+                    body: inner,
+                    else_body: else_inner,
+                });
+            }
+        }
+    }
+    body
+}
+
+fn rand_program(rng: &mut Rng) -> Program {
+    let mut lines = 0;
+    let mut scope = Vec::new();
+    let mut body = rand_body(rng, 0, &mut scope, &mut lines);
+    if lines == 0 {
+        // Guarantee at least one node.
+        body.push(Stmt::KernelCall {
+            line: usize::MAX,
+            fn_name: "op".into(),
+            outputs: vec![IdxExpr::new("A", vec![Expr::int(0)])],
+            mat_inputs: vec![IdxExpr::new("B", vec![Expr::int(0)])],
+            scalar_inputs: vec![],
+        });
+    }
+    Program::new("fuzz", &[], MATRICES, body)
+}
+
+/// Ground truth by full enumeration.
+fn brute_force(
+    program: &Program,
+    analyzer: &Analyzer,
+) -> (BTreeMap<Loc, BTreeSet<Node>>, BTreeMap<Loc, BTreeSet<Node>>) {
+    let mut readers: BTreeMap<Loc, BTreeSet<Node>> = BTreeMap::new();
+    let mut writers: BTreeMap<Loc, BTreeSet<Node>> = BTreeMap::new();
+    let env = Env::new();
+    enumerate_nodes(program, &env, &mut |node, _| {
+        let task = analyzer.concretize(node).unwrap();
+        for r in &task.reads {
+            readers.entry(r.clone()).or_default().insert(node.clone());
+        }
+        for w in &task.writes {
+            writers.entry(w.clone()).or_default().insert(node.clone());
+        }
+    })
+    .unwrap();
+    (readers, writers)
+}
+
+#[test]
+fn analyzer_matches_brute_force_on_random_programs() {
+    let cases: usize = std::env::var("NUMPYWREN_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150);
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let program = rand_program(&mut rng);
+        let env = Env::new();
+        let analyzer = Analyzer::new(&program, &env);
+        let (readers, writers) = brute_force(&program, &analyzer);
+        // Check every location that is actually touched…
+        for (loc, expect) in &readers {
+            let got: BTreeSet<Node> =
+                analyzer.find_readers(loc).unwrap().into_iter().collect();
+            assert_eq!(
+                &got, expect,
+                "readers mismatch at {loc} (case {case}, seed {seed:#x})\nprogram: {program:#?}"
+            );
+        }
+        for (loc, expect) in &writers {
+            let got: BTreeSet<Node> =
+                analyzer.find_writers(loc).unwrap().into_iter().collect();
+            assert_eq!(
+                &got, expect,
+                "writers mismatch at {loc} (case {case}, seed {seed:#x})\nprogram: {program:#?}"
+            );
+        }
+        // …and some that are not (must return empty, not error).
+        for probe in 0..5 {
+            let m = MATRICES[probe % MATRICES.len()];
+            let loc = Loc::new(m, vec![rng.range_i64(90, 99)]);
+            if !readers.contains_key(&loc) {
+                assert!(
+                    analyzer.find_readers(&loc).unwrap().is_empty(),
+                    "phantom readers at {loc} (case {case})"
+                );
+            }
+            if !writers.contains_key(&loc) {
+                assert!(
+                    analyzer.find_writers(&loc).unwrap().is_empty(),
+                    "phantom writers at {loc} (case {case})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn children_parents_duality_on_random_programs() {
+    // For every edge (p → c) reported by children(), parents(c) must
+    // contain p, and vice versa — on random programs.
+    for case in 0..60usize {
+        let seed = 0xD0A1 ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let program = rand_program(&mut rng);
+        let env = Env::new();
+        let analyzer = Analyzer::new(&program, &env);
+        let mut nodes = Vec::new();
+        enumerate_nodes(&program, &env, &mut |n, _| nodes.push(n.clone())).unwrap();
+        for n in &nodes {
+            for c in analyzer.children(n).unwrap() {
+                let ps = analyzer.parents(&c).unwrap();
+                assert!(
+                    ps.contains(n),
+                    "child {} of {} does not list it as parent (case {case})",
+                    c.id(),
+                    n.id()
+                );
+            }
+            for p in analyzer.parents(n).unwrap() {
+                let cs = analyzer.children(&p).unwrap();
+                assert!(
+                    cs.contains(n),
+                    "parent {} of {} does not list it as child (case {case})",
+                    p.id(),
+                    n.id()
+                );
+            }
+        }
+    }
+}
