@@ -42,9 +42,30 @@ fn main() {
         let _ = analyzer.parents(n).unwrap();
     }
     let per_parents = sw.secs() / nodes.len() as f64;
+    // The propagate() hot path uses the memoized parent_count: first
+    // pass pays the reverse solve, repeats are a map hit. In a real run
+    // a k-parent child would otherwise pay the solve k times (once per
+    // completing parent).
+    let fresh = Analyzer::new(&spec.program, &env);
+    let sw = Stopwatch::start();
+    for n in &nodes {
+        let _ = fresh.parent_count(n).unwrap();
+    }
+    let per_count_cold = sw.secs() / nodes.len() as f64;
+    let sw = Stopwatch::start();
+    for n in &nodes {
+        let _ = fresh.parent_count(n).unwrap();
+    }
+    let per_count_warm = sw.secs() / nodes.len() as f64;
     println!("# §Perf L3 — analysis primitives (cholesky grid {grid}, {} nodes, {edges} edges)", nodes.len());
     println!("children(): {:.1} µs/node", per_children * 1e6);
     println!("parents():  {:.1} µs/node", per_parents * 1e6);
+    println!(
+        "parent_count(): {:.1} µs/node cold, {:.3} µs/node memoized (×{:.0})",
+        per_count_cold * 1e6,
+        per_count_warm * 1e6,
+        per_count_cold / per_count_warm.max(1e-12)
+    );
 
     // --- end-to-end engine overhead with negligible kernels ---
     for workers in [1usize, 4, 8] {

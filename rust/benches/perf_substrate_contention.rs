@@ -1,0 +1,197 @@
+//! §Perf — substrate contention: single-lock `strict` vs `sharded`.
+//!
+//! Two measurements per (backend, worker-count) point, workers ∈
+//! {1, 4, 16, 64}:
+//!
+//! * **raw substrate ops/sec** — worker threads hammering each service
+//!   through its trait handle with engine-shaped keys: KV
+//!   (`incr` + `edge_decr` + `cas`), queue (send → receive → delete
+//!   cycles), blob (put → get of small tiles);
+//! * **engine wall-clock** — a tiny-tile Cholesky (kernel ≈ µs, so the
+//!   run is all coordination) on a fixed pool of that many workers.
+//!
+//! Emits `BENCH_substrate.json`. The acceptance bar for the sharded
+//! default: at 64 workers its throughput must be ≥ the single-lock
+//! backend's on every raw-ops series.
+
+use numpywren::config::{EngineConfig, ScalingMode, SubstrateConfig};
+use numpywren::drivers;
+use numpywren::engine::Engine;
+use numpywren::linalg::matrix::Matrix;
+use numpywren::storage::{BlobStore as _, KvState as _, Queue as _, Substrate};
+use numpywren::util::prng::Rng;
+use numpywren::util::timer::Stopwatch;
+use std::sync::Arc;
+use std::time::Duration;
+
+const WORKERS: [usize; 4] = [1, 4, 16, 64];
+const BACKENDS: [&str; 2] = ["strict", "sharded:16"];
+
+fn substrate(spec: &str) -> Substrate {
+    Substrate::build(
+        &SubstrateConfig::parse(spec).unwrap(),
+        Duration::from_secs(30),
+        Duration::ZERO,
+    )
+}
+
+/// Run `per_thread` closures on `n` threads; return aggregate ops/sec.
+fn hammer<F>(n: usize, ops_per_thread: u64, f: F) -> f64
+where
+    F: Fn(usize) + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let sw = Stopwatch::start();
+    let mut handles = Vec::new();
+    for t in 0..n {
+        let f = f.clone();
+        handles.push(std::thread::spawn(move || f(t)));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    (n as u64 * ops_per_thread) as f64 / sw.secs().max(1e-9)
+}
+
+/// KV: the propagate()-shaped mix — per-edge guarded decrements into a
+/// shared-ish counter space, status CAS, metrics incr.
+fn bench_kv(spec: &str, workers: usize) -> f64 {
+    let sub = substrate(spec);
+    let iters = 2_000u64;
+    let state = sub.state;
+    // 3 ops per iteration.
+    hammer(workers, iters * 3, move |t| {
+        for i in 0..iters {
+            let child = i % 64;
+            state.edge_decr(&format!("edge:{t}:{i}"), &format!("deps:{child}"));
+            state.cas(&format!("status:{t}:{i}"), None, "completed");
+            state.incr("completed_total", 1);
+        }
+    })
+}
+
+/// Queue: full send → receive → delete cycles (3 ops each).
+fn bench_queue(spec: &str, workers: usize) -> f64 {
+    let sub = substrate(spec);
+    let iters = 1_500u64;
+    let queue = sub.queue;
+    hammer(workers, iters * 3, move |t| {
+        for i in 0..iters {
+            queue.send(&format!("{t}@{i}"), -((i % 7) as i64));
+            if let Some((_, lease)) = queue.receive() {
+                queue.delete(&lease);
+            }
+        }
+    })
+}
+
+/// Blob: put + get of 16×16 tiles (2 ops each).
+fn bench_blob(spec: &str, workers: usize) -> f64 {
+    let sub = substrate(spec);
+    let iters = 800u64;
+    let blob = sub.blob;
+    let tile = Matrix::zeros(16, 16);
+    hammer(workers, iters * 2, move |t| {
+        for i in 0..iters {
+            let key = format!("T[{t},{}]", i % 32);
+            blob.put(t, &key, tile.clone()).unwrap();
+            blob.get(t, &key).unwrap();
+        }
+    })
+}
+
+/// Tiny-tile Cholesky so wall-clock is coordination, not math.
+fn bench_engine(spec: &str, workers: usize) -> (f64, f64) {
+    let mut rng = Rng::new(0xBEEF);
+    let a = Matrix::rand_spd(96, &mut rng);
+    let mut cfg = EngineConfig::default();
+    cfg.scaling = ScalingMode::Fixed(workers);
+    cfg.substrate = SubstrateConfig::parse(spec).unwrap();
+    cfg.sample_period = Duration::from_millis(50);
+    cfg.job_timeout = Duration::from_secs(300);
+    let sw = Stopwatch::start();
+    let out = drivers::cholesky(&Engine::new(cfg), &a, 8).unwrap();
+    let wall = sw.secs();
+    let tasks = out.run.report.total_tasks as f64;
+    (wall, tasks / wall)
+}
+
+struct Point {
+    backend: &'static str,
+    workers: usize,
+    kv_ops_per_sec: f64,
+    queue_ops_per_sec: f64,
+    blob_ops_per_sec: f64,
+    engine_wall_secs: f64,
+    engine_tasks_per_sec: f64,
+}
+
+fn main() {
+    let mut points: Vec<Point> = Vec::new();
+    println!(
+        "# §Perf substrate contention — raw ops/sec and engine wall-clock, {:?} workers",
+        WORKERS
+    );
+    for backend in BACKENDS {
+        for workers in WORKERS {
+            let kv = bench_kv(backend, workers);
+            let queue = bench_queue(backend, workers);
+            let blob = bench_blob(backend, workers);
+            let (wall, tps) = bench_engine(backend, workers);
+            println!(
+                "{backend:>10} w={workers:<3} kv={:.2e} ops/s  queue={:.2e} ops/s  \
+                 blob={:.2e} ops/s  engine={:.3}s ({:.0} tasks/s)",
+                kv, queue, blob, wall, tps
+            );
+            points.push(Point {
+                backend,
+                workers,
+                kv_ops_per_sec: kv,
+                queue_ops_per_sec: queue,
+                blob_ops_per_sec: blob,
+                engine_wall_secs: wall,
+                engine_tasks_per_sec: tps,
+            });
+        }
+    }
+
+    // Speedup summary at the top worker count.
+    let top = *WORKERS.last().unwrap();
+    let find = |b: &str| points.iter().find(|p| p.backend == b && p.workers == top);
+    if let (Some(s), Some(sh)) = (find("strict"), find("sharded:16")) {
+        println!(
+            "# at {top} workers, sharded/strict: kv ×{:.2}  queue ×{:.2}  blob ×{:.2}  \
+             engine ×{:.2}",
+            sh.kv_ops_per_sec / s.kv_ops_per_sec,
+            sh.queue_ops_per_sec / s.queue_ops_per_sec,
+            sh.blob_ops_per_sec / s.blob_ops_per_sec,
+            s.engine_wall_secs / sh.engine_wall_secs,
+        );
+    }
+
+    // Hand-rolled JSON (no serde in the offline crate set).
+    let mut json = String::from("{\n  \"bench\": \"perf_substrate_contention\",\n");
+    let workers_list: Vec<String> = WORKERS.iter().map(|w| w.to_string()).collect();
+    json.push_str(&format!(
+        "  \"workers\": [{}],\n  \"results\": [\n",
+        workers_list.join(", ")
+    ));
+    for (i, p) in points.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"backend\": \"{}\", \"workers\": {}, \"kv_ops_per_sec\": {:.1}, \
+             \"queue_ops_per_sec\": {:.1}, \"blob_ops_per_sec\": {:.1}, \
+             \"engine_wall_secs\": {:.4}, \"engine_tasks_per_sec\": {:.1}}}{}\n",
+            p.backend,
+            p.workers,
+            p.kv_ops_per_sec,
+            p.queue_ops_per_sec,
+            p.blob_ops_per_sec,
+            p.engine_wall_secs,
+            p.engine_tasks_per_sec,
+            if i + 1 == points.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_substrate.json", &json).expect("write BENCH_substrate.json");
+    println!("# wrote BENCH_substrate.json");
+}

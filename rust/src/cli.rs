@@ -77,7 +77,8 @@ COMMANDS:
   run       execute an algorithm on the real engine
             --algo {cholesky|gemm|tsqr|lu|qr|bdfac} --n DIM --block B
             [--workers K | --sf F --max-workers K] [--pipeline W]
-            [--artifacts DIR] [--set key=value]...
+            [--substrate strict|sharded[:N]] [--artifacts DIR]
+            [--set key=value]...
   simulate  paper-scale discrete-event simulation
             --algo NAME --n DIM --block B --workers K [--sf F] [--pipeline W]
             [--compare-scalapack true] [--compare-dask true]
@@ -137,6 +138,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.scaling = ScalingMode::Fixed(args.num("workers", 4)?);
     }
     cfg.pipeline_width = args.num("pipeline", 1)?;
+    if let Some(spec) = args.get("substrate") {
+        cfg.set("substrate", spec)?;
+    }
     if let Some(extra) = args.get("set") {
         for kv in extra.split(',') {
             let (k, v) = kv.split_once('=').context("--set key=value[,k=v]")?;
@@ -233,15 +237,18 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let grid = (n as usize).div_ceil(block);
     let w = Workload::build(&spec.program, &grid_env(grid), block)?;
     let model = CostModel::default();
-    let mut sc = SimConfig::default();
-    sc.pipeline_width = args.num("pipeline", 1)?;
-    sc.policy = match args.get("sf") {
+    let policy = match args.get("sf") {
         Some(sf) => crate::sim::serverless::WorkerPolicy::Auto {
             sf: sf.parse()?,
             max_workers: workers,
             t_timeout: 10.0,
         },
         None => crate::sim::serverless::WorkerPolicy::Fixed(workers),
+    };
+    let sc = SimConfig {
+        policy,
+        pipeline_width: args.num("pipeline", 1)?,
+        ..SimConfig::default()
     };
     let r = ServerlessSim::new(&w, model, sc).run();
     println!(
@@ -408,6 +415,22 @@ mod tests {
     #[test]
     fn tiny_run_executes() {
         run_cli(&argv("run --algo cholesky --n 32 --block 8 --workers 2")).unwrap();
+    }
+
+    #[test]
+    fn tiny_run_executes_on_each_substrate() {
+        run_cli(&argv(
+            "run --algo cholesky --n 24 --block 8 --workers 2 --substrate strict",
+        ))
+        .unwrap();
+        run_cli(&argv(
+            "run --algo cholesky --n 24 --block 8 --workers 2 --substrate sharded:4",
+        ))
+        .unwrap();
+        assert!(run_cli(&argv(
+            "run --algo cholesky --n 24 --block 8 --workers 2 --substrate bogus",
+        ))
+        .is_err());
     }
 
     #[test]

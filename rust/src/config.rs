@@ -29,6 +29,74 @@ pub struct FailureSpec {
     pub fraction: f64,
 }
 
+/// Which substrate backend family a job runs on (see
+/// [`crate::storage`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubstrateBackend {
+    /// The single-lock, globally-ordered, SSA-policing family — the
+    /// test/debug backend.
+    Strict,
+    /// N-way key-hash sharding with per-shard locks and a
+    /// work-stealing queue — the high-concurrency default.
+    Sharded { shards: usize },
+}
+
+/// Default shard count for the sharded family: comfortably above the
+/// core counts we run on, so same-shard collisions are the exception.
+pub const DEFAULT_SHARDS: usize = 16;
+
+/// Substrate selection, settable as `substrate=strict` or
+/// `substrate=sharded[:N]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SubstrateConfig {
+    pub backend: SubstrateBackend,
+}
+
+impl Default for SubstrateConfig {
+    fn default() -> Self {
+        SubstrateConfig {
+            backend: SubstrateBackend::Sharded {
+                shards: DEFAULT_SHARDS,
+            },
+        }
+    }
+}
+
+impl SubstrateConfig {
+    pub fn strict() -> Self {
+        SubstrateConfig {
+            backend: SubstrateBackend::Strict,
+        }
+    }
+
+    pub fn sharded(shards: usize) -> Self {
+        SubstrateConfig {
+            backend: SubstrateBackend::Sharded { shards },
+        }
+    }
+
+    /// Parse `strict` | `sharded` | `sharded:N`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        match spec.split_once(':') {
+            None => match spec {
+                "strict" => Ok(Self::strict()),
+                "sharded" => Ok(Self::default()),
+                _ => bail!("bad substrate spec `{spec}` (strict | sharded[:N])"),
+            },
+            Some(("sharded", n)) => {
+                let shards: usize = n
+                    .parse()
+                    .with_context(|| format!("bad shard count `{n}`"))?;
+                if shards == 0 {
+                    bail!("substrate shard count must be >= 1");
+                }
+                Ok(Self::sharded(shards))
+            }
+            Some(_) => bail!("bad substrate spec `{spec}` (strict | sharded[:N])"),
+        }
+    }
+}
+
 /// Everything the engine needs to run a job.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -54,6 +122,8 @@ pub struct EngineConfig {
     pub sample_period: Duration,
     /// Hard wall-clock cap on the whole job (deadlock safety net).
     pub job_timeout: Duration,
+    /// Which substrate backend family to run on.
+    pub substrate: SubstrateConfig,
 }
 
 impl Default for EngineConfig {
@@ -70,13 +140,15 @@ impl Default for EngineConfig {
             failure: None,
             sample_period: Duration::from_millis(20),
             job_timeout: Duration::from_secs(600),
+            substrate: SubstrateConfig::default(),
         }
     }
 }
 
 impl EngineConfig {
     /// Apply a `key=value` override. Durations are given in
-    /// (fractional) seconds; `scaling` is `fixed:N` or `auto:SF:MAX`.
+    /// (fractional) seconds; `scaling` is `fixed:N` or `auto:SF:MAX`;
+    /// `substrate` is `strict` or `sharded[:N]`.
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
         let secs = |v: &str| -> Result<Duration> {
             Ok(Duration::from_secs_f64(
@@ -104,6 +176,7 @@ impl EngineConfig {
             "provision_period" => self.provision_period = secs(value)?,
             "sample_period" => self.sample_period = secs(value)?,
             "job_timeout" => self.job_timeout = secs(value)?,
+            "substrate" => self.substrate = SubstrateConfig::parse(value)?,
             "failure" => {
                 let (at, frac) = value
                     .split_once(':')
@@ -168,6 +241,32 @@ mod tests {
     #[test]
     fn unknown_key_rejected() {
         assert!(EngineConfig::default().set("nope", "1").is_err());
+    }
+
+    #[test]
+    fn substrate_specs_parse() {
+        let mut c = EngineConfig::default();
+        assert_eq!(
+            c.substrate.backend,
+            SubstrateBackend::Sharded {
+                shards: DEFAULT_SHARDS
+            },
+            "sharded is the default"
+        );
+        c.set("substrate", "strict").unwrap();
+        assert_eq!(c.substrate.backend, SubstrateBackend::Strict);
+        c.set("substrate", "sharded:4").unwrap();
+        assert_eq!(c.substrate.backend, SubstrateBackend::Sharded { shards: 4 });
+        c.set("substrate", "sharded").unwrap();
+        assert_eq!(
+            c.substrate.backend,
+            SubstrateBackend::Sharded {
+                shards: DEFAULT_SHARDS
+            }
+        );
+        assert!(c.set("substrate", "sharded:0").is_err());
+        assert!(c.set("substrate", "sharded:x").is_err());
+        assert!(c.set("substrate", "redis").is_err());
     }
 
     #[test]

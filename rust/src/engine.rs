@@ -1,12 +1,15 @@
 //! The execution engine — Figure 6 wired together.
 //!
 //! `Engine::run` takes a LAmbdaPACK program, its arguments, and the
-//! seeded input tiles, stands up the substrate (object store, task
-//! queue, state store), enqueues the root tasks, manages the worker
-//! pool (fixed or auto-scaled), injects failures if asked, samples
-//! metrics, and waits for completion. Workers do all scheduling
-//! themselves (decentralized, §4); the engine only watches the
-//! completed-task counter.
+//! seeded input tiles, stands up the substrate (blob store, task
+//! queue, KV state — whichever backend family the config selects),
+//! enqueues the root tasks, manages the worker pool (fixed or
+//! auto-scaled), injects failures if asked, samples metrics, and waits
+//! for completion. Workers do all scheduling themselves
+//! (decentralized, §4); the engine only watches the completed-task
+//! counter. The engine holds the substrate purely through the
+//! `storage::traits` handles — it neither knows nor cares which
+//! backend is underneath.
 
 use crate::config::{EngineConfig, ScalingMode};
 use crate::executor::worker::ExitReason;
@@ -18,7 +21,7 @@ use crate::lambdapack::interp::{count_nodes, Env};
 use crate::linalg::matrix::Matrix;
 use crate::metrics::{MetricsHub, Sample, TaskRecord};
 use crate::provisioner::{run_provisioner, WorkerPool};
-use crate::storage::{ObjectStore, StateStore, StoreStats, TaskQueue};
+use crate::storage::{BlobStore, KvState, Queue, StoreStats, Substrate};
 use crate::util::prng::Rng;
 use anyhow::{bail, Context, Result};
 use std::sync::atomic::AtomicBool;
@@ -65,7 +68,7 @@ impl EngineReport {
 /// A finished run: the report plus the store holding output tiles.
 pub struct RunOutput {
     pub report: EngineReport,
-    pub store: ObjectStore,
+    pub store: Arc<dyn BlobStore>,
 }
 
 impl RunOutput {
@@ -114,9 +117,8 @@ impl Engine {
         if total == 0 {
             bail!("program `{}` has an empty iteration space", program.name);
         }
-        let store = ObjectStore::with_latency(self.cfg.store_latency);
-        let queue = TaskQueue::new(self.cfg.lease);
-        let state = StateStore::new();
+        let Substrate { blob: store, queue, state } =
+            Substrate::build(&self.cfg.substrate, self.cfg.lease, self.cfg.store_latency);
         let metrics = MetricsHub::new();
 
         // Client: seed input tiles, then enqueue the root tasks.

@@ -9,7 +9,7 @@
 //! becomes visible again after at most one lease period — that *is* the
 //! failure-detection mechanism.
 
-use crate::storage::{Lease, TaskQueue};
+use crate::storage::{Lease, Queue};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -60,7 +60,7 @@ pub struct LeaseRenewer {
 impl LeaseRenewer {
     /// Renew every lease in `registry` each `period` (use
     /// `lease_duration / 3`).
-    pub fn spawn(queue: TaskQueue, registry: LeaseRegistry, period: Duration) -> Self {
+    pub fn spawn(queue: Arc<dyn Queue>, registry: LeaseRegistry, period: Duration) -> Self {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let handle = std::thread::spawn(move || {
@@ -107,13 +107,18 @@ impl Drop for LeaseRenewer {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::storage::queue::{Clock, TestClock};
+    use crate::config::SubstrateConfig;
+    use crate::storage::{Substrate, TestClock};
+
+    fn queue(lease: Duration) -> Arc<dyn Queue> {
+        Substrate::build(&SubstrateConfig::strict(), lease, Duration::ZERO).queue
+    }
 
     #[test]
     fn renewer_keeps_task_invisible() {
         // Wall-clock-based: short lease, renewer at lease/3 keeps the
         // message invisible well past several lease periods.
-        let q = TaskQueue::new(Duration::from_millis(60));
+        let q = queue(Duration::from_millis(60));
         q.send("t", 0);
         let (_, lease) = q.receive().unwrap();
         let reg = LeaseRegistry::default();
@@ -130,7 +135,13 @@ mod tests {
     #[test]
     fn dead_worker_lease_expires_via_test_clock() {
         let clock = Arc::new(TestClock::default());
-        let q = TaskQueue::with_clock(Duration::from_secs(10), clock.clone() as Arc<dyn Clock>);
+        let q = Substrate::build_with_clock(
+            &SubstrateConfig::strict(),
+            Duration::from_secs(10),
+            Duration::ZERO,
+            clock.clone(),
+        )
+        .queue;
         q.send("t", 0);
         let (_, _lease_dropped) = q.receive().unwrap();
         // Worker "dies": no renewal. Advance past the lease.

@@ -23,11 +23,12 @@ use crate::kernels::KernelExecutor;
 use crate::lambdapack::analysis::Analyzer;
 use crate::lambdapack::interp::Node;
 use crate::metrics::MetricsHub;
-use crate::storage::{ObjectStore, StateStore, TaskQueue};
+use crate::storage::{BlobStore, KvState, Queue};
 use anyhow::Result;
+use std::collections::HashMap;
+use std::fmt::Write as _;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::collections::HashMap;
 
 /// Status keys in the state store.
 pub fn status_key(node: &Node) -> String {
@@ -46,7 +47,13 @@ pub fn edge_key(parent: &Node, child: &Node) -> String {
 
 /// Queue priority for a node: earlier program lines first (the
 /// factorization pivot chain — `chol` before `trsm` before `syrk` —
-/// sits on the critical path).
+/// sits on the critical path). Every task from the same program line
+/// shares this value; the queue backends break the tie FIFO by global
+/// enqueue sequence number (the `storage::traits::Queue` contract)
+/// instead of arbitrary heap order. That FIFO order is exact on the
+/// globally-ordered backends (`strict`, `sharded:1`); the sharded
+/// default keeps it per shard and is only best-effort across shards —
+/// correctness never depends on ordering, only schedule quality.
 pub fn priority(node: &Node) -> i64 {
     -(node.line as i64)
 }
@@ -89,9 +96,9 @@ impl KillSwitch {
 
 /// Shared job state: the substrate handles plus control flags.
 pub struct JobContext {
-    pub queue: TaskQueue,
-    pub store: ObjectStore,
-    pub state: StateStore,
+    pub queue: Arc<dyn Queue>,
+    pub store: Arc<dyn BlobStore>,
+    pub state: Arc<dyn KvState>,
     pub analyzer: Arc<Analyzer>,
     pub kernels: Arc<dyn KernelExecutor>,
     pub metrics: MetricsHub,
@@ -136,26 +143,34 @@ impl JobContext {
 pub fn propagate(ctx: &JobContext, node: &Node) -> Result<usize> {
     let children = ctx.analyzer.children(node)?;
     let mut enqueued = 0;
-    // §Perf: node ids are recomputed per key otherwise — build each
-    // once (propagate is the per-task hot path).
+    // §Perf: this is the per-task hot path — node ids are built once,
+    // state-store keys are formatted into two reused buffers instead
+    // of fresh allocations per edge, and the child's parent count
+    // comes from the analyzer's memo (`Analyzer::parent_count`) so a
+    // k-parent child costs one reverse solve per job, not one per
+    // completing parent. perf_l3_overhead prints the measured
+    // cold-vs-memoized cost.
     let node_id = node.id();
+    let mut dk = String::with_capacity(48);
+    let mut ek = String::with_capacity(96);
     for child in &children {
         let child_id = child.id();
-        let dk = format!("deps:{child_id}");
+        dk.clear();
+        let _ = write!(dk, "deps:{child_id}");
         if !ctx.state.counter_exists(&dk) {
-            let total = ctx.analyzer.parents(child)?.len() as i64;
+            let total = ctx.analyzer.parent_count(child)?;
             ctx.state.init_counter(&dk, total);
         }
-        let ek = format!("edge:{node_id}:{child_id}");
+        ek.clear();
+        let _ = write!(ek, "edge:{node_id}:{child_id}");
         let remaining = ctx.state.edge_decr(&ek, &dk);
         if remaining <= 0 {
             // Skip enqueue if the child already completed (safe
             // optimization: completion is durable before delete).
-            let already_done = ctx
-                .state
-                .get(&format!("status:{child_id}"))
-                .as_deref()
-                == Some(crate::storage::state_store::status::COMPLETED);
+            ek.clear();
+            let _ = write!(ek, "status:{child_id}");
+            let already_done =
+                ctx.state.get(&ek).as_deref() == Some(crate::storage::status::COMPLETED);
             if !already_done {
                 ctx.queue.send(&child_id, priority(child));
                 enqueued += 1;
@@ -168,17 +183,24 @@ pub fn propagate(ctx: &JobContext, node: &Node) -> Result<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::SubstrateConfig;
     use crate::lambdapack::interp::Env;
     use crate::lambdapack::programs;
+    use crate::storage::Substrate;
     use std::time::Duration;
 
     fn ctx_for(n: i64) -> JobContext {
         let program = programs::cholesky();
         let args: Env = [("N".to_string(), n)].into_iter().collect();
+        let sub = Substrate::build(
+            &SubstrateConfig::strict(),
+            Duration::from_secs(5),
+            Duration::ZERO,
+        );
         JobContext {
-            queue: TaskQueue::new(Duration::from_secs(5)),
-            store: ObjectStore::new(),
-            state: StateStore::new(),
+            queue: sub.queue,
+            store: sub.blob,
+            state: sub.state,
             analyzer: Arc::new(Analyzer::new(&program, &args)),
             kernels: Arc::new(crate::kernels::NativeKernels),
             metrics: MetricsHub::new(),
@@ -246,10 +268,8 @@ mod tests {
             ctx.queue.delete(l);
         }
         for child in ctx.analyzer.children(&node).unwrap() {
-            ctx.state.set(
-                &status_key(&child),
-                crate::storage::state_store::status::COMPLETED,
-            );
+            ctx.state
+                .set(&status_key(&child), crate::storage::status::COMPLETED);
         }
         let second = propagate(&ctx, &node).unwrap();
         assert_eq!(first, 2);

@@ -19,7 +19,7 @@ use crate::executor::{propagate, status_key, JobContext};
 use crate::lambdapack::analysis::ConcreteTask;
 use crate::lambdapack::interp::Node;
 use crate::linalg::matrix::Matrix;
-use crate::storage::state_store::status;
+use crate::storage::{status, BlobStore, KvState, Queue};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Arc;

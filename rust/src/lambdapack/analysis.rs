@@ -30,8 +30,9 @@
 use crate::lambdapack::ast::{Bop, Expr, IdxExpr, Program, Stmt, Uop};
 use crate::lambdapack::interp::{eval, eval_int, Env, Node};
 use anyhow::{bail, Context, Result};
-use std::collections::BTreeSet;
+use std::collections::{BTreeSet, HashMap};
 use std::fmt;
+use std::sync::{Arc, Mutex};
 
 /// A concrete tile location: matrix name + concrete indices. Its
 /// `Display` form (`S[1,2,3]`) is the object-store key.
@@ -107,11 +108,16 @@ struct LineInfo {
 }
 
 /// The dependency analyzer for one (program, arguments) pair.
+///
+/// Clones share the parent-count memo (it is keyed by node identity,
+/// which is fixed by the (program, args) pair).
 #[derive(Clone, Debug)]
 pub struct Analyzer {
     program: Program,
     args: Env,
     lines: Vec<LineInfo>,
+    /// node id → number of distinct parents (see [`Analyzer::parent_count`]).
+    parent_counts: Arc<Mutex<HashMap<String, i64>>>,
 }
 
 /// Result of trying to invert an equation for a single variable.
@@ -207,6 +213,7 @@ impl Analyzer {
             program: program.clone(),
             args: args.clone(),
             lines,
+            parent_counts: Arc::new(Mutex::new(HashMap::new())),
         }
     }
 
@@ -307,6 +314,26 @@ impl Analyzer {
         Ok(out.into_iter().collect())
     }
 
+    /// Number of distinct parents of `node`, memoized per node id.
+    ///
+    /// §Perf: `propagate` needs every child's parent count on the
+    /// per-task hot path to lazily initialize dependency counters.
+    /// Without the memo a k-parent child pays a full reverse solve
+    /// (`parents`) once per completing parent — k solves for a value
+    /// that never changes; with it, one solve per child per job (and
+    /// zero during execution when the root scan already warmed the
+    /// memo). `perf_l3_overhead` prints the measured cold-vs-memoized
+    /// per-node cost.
+    pub fn parent_count(&self, node: &Node) -> Result<i64> {
+        let id = node.id();
+        if let Some(&n) = self.parent_counts.lock().unwrap().get(&id) {
+            return Ok(n);
+        }
+        let n = self.parents(node)?.len() as i64;
+        self.parent_counts.lock().unwrap().insert(id, n);
+        Ok(n)
+    }
+
     /// Is `loc` a program input (written by no node)?
     pub fn is_input(&self, loc: &Loc) -> Result<bool> {
         Ok(self.find_writers(loc)?.is_empty())
@@ -318,13 +345,15 @@ impl Analyzer {
     pub fn roots(&self) -> Result<Vec<Node>> {
         let mut roots = Vec::new();
         let mut err = None;
+        // Uses `parent_count`, so the one client-side full scan also
+        // warms the memo for every node the workers will later touch.
         crate::lambdapack::interp::enumerate_nodes(&self.program, &self.args, &mut |node, _| {
             if err.is_some() {
                 return;
             }
-            match self.parents(node) {
-                Ok(ps) => {
-                    if ps.is_empty() {
+            match self.parent_count(node) {
+                Ok(n) => {
+                    if n == 0 {
                         roots.push(node.clone());
                     }
                 }
@@ -785,6 +814,25 @@ mod tests {
         let a = Analyzer::new(&p, &args(8));
         let roots = a.roots().unwrap();
         assert_eq!(roots.len(), 8);
+    }
+
+    #[test]
+    fn parent_count_memo_matches_parents() {
+        let p = programs::cholesky();
+        let a = Analyzer::new(&p, &args(5));
+        let mut nodes = Vec::new();
+        enumerate_nodes(&p, &args(5), &mut |n, _| nodes.push(n.clone())).unwrap();
+        for n in &nodes {
+            let want = a.parents(n).unwrap().len() as i64;
+            assert_eq!(a.parent_count(n).unwrap(), want, "cold at {}", n.id());
+            assert_eq!(a.parent_count(n).unwrap(), want, "memoized at {}", n.id());
+        }
+        // Clones share the memo.
+        let b = a.clone();
+        assert_eq!(
+            b.parent_count(&nodes[0]).unwrap(),
+            a.parents(&nodes[0]).unwrap().len() as i64
+        );
     }
 
     #[test]

@@ -10,13 +10,18 @@
 //!   (Algorithm 2 of the paper: affine integer solving plus nonlinear
 //!   back-substitution), the constant-size compiled-program format, and
 //!   the library of tiled algorithms (Cholesky, TSQR, GEMM, LU, BDFAC).
-//! * [`storage`] — the simulated serverless substrate: an S3-like
-//!   [`storage::ObjectStore`], an SQS-like [`storage::TaskQueue`] with
-//!   visibility-timeout leases, and a Redis-like atomic
-//!   [`storage::StateStore`].
+//! * [`storage`] — the pluggable serverless substrate: three
+//!   object-safe traits — an S3-like [`storage::BlobStore`], an
+//!   SQS-like [`storage::Queue`] with visibility-timeout leases, and a
+//!   Redis-like atomic [`storage::KvState`] — with two backend
+//!   families behind them: the sharded high-concurrency default
+//!   (N-way key-hash shards, work-stealing queue) and the single-lock
+//!   `strict` test backend (globally ordered, SSA-policing). Selected
+//!   by [`config::SubstrateConfig`] (`--substrate strict|sharded[:N]`).
 //! * [`executor`] — the stateless worker: poll → read → compute → write
 //!   → runtime-state update → child enqueue, with lease renewal,
-//!   pipelining, and self-termination at the runtime limit.
+//!   pipelining, and self-termination at the runtime limit. Workers
+//!   hold the substrate only through `Arc<dyn …>` trait handles.
 //! * [`provisioner`] — the auto-scaling policy (`sf` scale-up factor,
 //!   `T_timeout` idle scale-down).
 //! * [`engine`] — wires a LAmbdaPACK program, a blocked matrix, and the

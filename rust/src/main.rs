@@ -1,11 +1,26 @@
 //! `numpywren` — the leader/launcher binary.
 
-fn main() {
-    // Die quietly on a closed pipe (`numpywren analyze | head`) like a
-    // well-behaved CLI instead of panicking on println!.
-    unsafe {
-        libc::signal(libc::SIGPIPE, libc::SIG_DFL);
+/// Reset SIGPIPE to the default disposition so `numpywren analyze |
+/// head` dies quietly on a closed pipe instead of panicking in
+/// `println!`. Declared directly (one call) rather than pulling in the
+/// `libc` crate, which the offline build environment does not carry.
+#[cfg(unix)]
+fn reset_sigpipe() {
+    const SIGPIPE: i32 = 13;
+    const SIG_DFL: usize = 0;
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
     }
+    unsafe {
+        signal(SIGPIPE, SIG_DFL);
+    }
+}
+
+#[cfg(not(unix))]
+fn reset_sigpipe() {}
+
+fn main() {
+    reset_sigpipe();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = numpywren::cli::run_cli(&argv) {
         eprintln!("error: {e:#}");

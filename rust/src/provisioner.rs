@@ -16,6 +16,7 @@
 
 use crate::executor::worker::{run_worker, ExitReason, WorkerParams};
 use crate::executor::JobContext;
+use crate::storage::Queue as _;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;

@@ -1,0 +1,56 @@
+//! Injectable time for the queue backends.
+//!
+//! Visibility-timeout semantics depend on "now"; making the clock a
+//! trait lets fault-tolerance tests expire leases deterministically
+//! and lets the simulator reuse the same semantics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Injectable time source.
+pub trait Clock: Send + Sync + 'static {
+    fn now(&self) -> Duration;
+}
+
+/// Real wall-clock.
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock {
+            epoch: Instant::now(),
+        }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> Duration {
+        self.epoch.elapsed()
+    }
+}
+
+/// Manually-advanced clock for tests.
+#[derive(Default)]
+pub struct TestClock {
+    now_ns: AtomicU64,
+}
+
+impl TestClock {
+    pub fn advance(&self, d: Duration) {
+        self.now_ns.fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
+    }
+}
+
+impl Clock for TestClock {
+    fn now(&self) -> Duration {
+        Duration::from_nanos(self.now_ns.load(Ordering::SeqCst))
+    }
+}

@@ -1,4 +1,4 @@
-//! S3-like object store for matrix tiles.
+//! Single-lock S3-like object store — the `strict` blob backend.
 //!
 //! Semantics preserved from the real service (the ones the paper's
 //! design depends on):
@@ -12,61 +12,43 @@
 //!   a key is only ever written once with one value. Re-writes from
 //!   duplicated (straggler / retried) tasks are *idempotent*; the store
 //!   tolerates them but can be armed to panic on non-idempotent
-//!   rewrites in tests (`strict_ssa`).
+//!   rewrites in tests (`strict_ssa`) — the reason this single-lock
+//!   implementation stays around as the test backend after the sharded
+//!   family became the default.
 
 use crate::linalg::matrix::Matrix;
+use crate::storage::traits::{BlobStore, StoreStats, TransferAccounting};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::Duration;
 
-/// Aggregate transfer statistics.
-#[derive(Clone, Debug, Default, PartialEq, Eq)]
-pub struct StoreStats {
-    pub bytes_read: u64,
-    pub bytes_written: u64,
-    pub get_ops: u64,
-    pub put_ops: u64,
-}
-
-#[derive(Default)]
-struct Counters {
-    bytes_read: AtomicU64,
-    bytes_written: AtomicU64,
-    get_ops: AtomicU64,
-    put_ops: AtomicU64,
-}
-
 /// The store. Cheap to clone (Arc-shared).
 #[derive(Clone)]
-pub struct ObjectStore {
+pub struct StrictBlobStore {
     inner: Arc<Inner>,
 }
 
 struct Inner {
     map: RwLock<HashMap<String, Arc<Matrix>>>,
-    totals: Counters,
-    /// Per-worker counters (worker id → counters) for Figure 7.
-    per_worker: RwLock<HashMap<usize, Arc<Counters>>>,
+    accounting: TransferAccounting,
     /// Injected latency per operation (simulates S3's ~10 ms).
     latency: Duration,
     /// Panic if a key is rewritten with different contents.
     strict_ssa: bool,
 }
 
-impl ObjectStore {
+impl StrictBlobStore {
     pub fn new() -> Self {
         Self::with_latency(Duration::ZERO)
     }
 
     /// A store that sleeps `latency` on every get/put.
     pub fn with_latency(latency: Duration) -> Self {
-        ObjectStore {
+        StrictBlobStore {
             inner: Arc::new(Inner {
                 map: RwLock::new(HashMap::new()),
-                totals: Counters::default(),
-                per_worker: RwLock::new(HashMap::new()),
+                accounting: TransferAccounting::default(),
                 latency,
                 strict_ssa: false,
             }),
@@ -77,23 +59,14 @@ impl ObjectStore {
     /// panics (SSA violation); identical rewrites (task re-execution)
     /// are allowed, as the paper's idempotence argument requires.
     pub fn strict_ssa() -> Self {
-        ObjectStore {
+        StrictBlobStore {
             inner: Arc::new(Inner {
                 map: RwLock::new(HashMap::new()),
-                totals: Counters::default(),
-                per_worker: RwLock::new(HashMap::new()),
+                accounting: TransferAccounting::default(),
                 latency: Duration::ZERO,
                 strict_ssa: true,
             }),
         }
-    }
-
-    fn worker_counters(&self, worker: usize) -> Arc<Counters> {
-        if let Some(c) = self.inner.per_worker.read().unwrap().get(&worker) {
-            return c.clone();
-        }
-        let mut w = self.inner.per_worker.write().unwrap();
-        w.entry(worker).or_insert_with(Default::default).clone()
     }
 
     fn latency(&self) {
@@ -101,9 +74,16 @@ impl ObjectStore {
             std::thread::sleep(self.inner.latency);
         }
     }
+}
 
-    /// Store a tile under `key`, attributed to `worker`.
-    pub fn put(&self, worker: usize, key: &str, value: Matrix) -> Result<()> {
+impl Default for StrictBlobStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BlobStore for StrictBlobStore {
+    fn put(&self, worker: usize, key: &str, value: Matrix) -> Result<()> {
         self.latency();
         let bytes = (value.rows() * value.cols() * 8) as u64;
         {
@@ -117,16 +97,11 @@ impl ObjectStore {
             }
             map.insert(key.to_string(), Arc::new(value));
         }
-        self.inner.totals.bytes_written.fetch_add(bytes, Ordering::Relaxed);
-        self.inner.totals.put_ops.fetch_add(1, Ordering::Relaxed);
-        let wc = self.worker_counters(worker);
-        wc.bytes_written.fetch_add(bytes, Ordering::Relaxed);
-        wc.put_ops.fetch_add(1, Ordering::Relaxed);
+        self.inner.accounting.record_put(worker, bytes);
         Ok(())
     }
 
-    /// Fetch the tile at `key`, attributed to `worker`.
-    pub fn get(&self, worker: usize, key: &str) -> Result<Arc<Matrix>> {
+    fn get(&self, worker: usize, key: &str) -> Result<Arc<Matrix>> {
         self.latency();
         let v = self
             .inner
@@ -137,63 +112,28 @@ impl ObjectStore {
             .cloned()
             .with_context(|| format!("object-store key `{key}` not found"))?;
         let bytes = (v.rows() * v.cols() * 8) as u64;
-        self.inner.totals.bytes_read.fetch_add(bytes, Ordering::Relaxed);
-        self.inner.totals.get_ops.fetch_add(1, Ordering::Relaxed);
-        let wc = self.worker_counters(worker);
-        wc.bytes_read.fetch_add(bytes, Ordering::Relaxed);
-        wc.get_ops.fetch_add(1, Ordering::Relaxed);
+        self.inner.accounting.record_get(worker, bytes);
         Ok(v)
     }
 
-    /// Does `key` exist? (No latency or accounting — control-plane op.)
-    pub fn contains(&self, key: &str) -> bool {
+    fn contains(&self, key: &str) -> bool {
         self.inner.map.read().unwrap().contains_key(key)
     }
 
-    /// Number of stored objects.
-    pub fn len(&self) -> usize {
+    fn len(&self) -> usize {
         self.inner.map.read().unwrap().len()
     }
 
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
+    fn stats(&self) -> StoreStats {
+        self.inner.accounting.stats()
     }
 
-    /// Aggregate stats.
-    pub fn stats(&self) -> StoreStats {
-        StoreStats {
-            bytes_read: self.inner.totals.bytes_read.load(Ordering::Relaxed),
-            bytes_written: self.inner.totals.bytes_written.load(Ordering::Relaxed),
-            get_ops: self.inner.totals.get_ops.load(Ordering::Relaxed),
-            put_ops: self.inner.totals.put_ops.load(Ordering::Relaxed),
-        }
+    fn worker_stats(&self, worker: usize) -> StoreStats {
+        self.inner.accounting.worker_stats(worker)
     }
 
-    /// Per-worker stats (Figure 7's per-machine bytes).
-    pub fn worker_stats(&self, worker: usize) -> StoreStats {
-        let w = self.inner.per_worker.read().unwrap();
-        match w.get(&worker) {
-            Some(c) => StoreStats {
-                bytes_read: c.bytes_read.load(Ordering::Relaxed),
-                bytes_written: c.bytes_written.load(Ordering::Relaxed),
-                get_ops: c.get_ops.load(Ordering::Relaxed),
-                put_ops: c.put_ops.load(Ordering::Relaxed),
-            },
-            None => StoreStats::default(),
-        }
-    }
-
-    /// Ids of workers that have touched the store.
-    pub fn known_workers(&self) -> Vec<usize> {
-        let mut v: Vec<usize> = self.inner.per_worker.read().unwrap().keys().copied().collect();
-        v.sort_unstable();
-        v
-    }
-}
-
-impl Default for ObjectStore {
-    fn default() -> Self {
-        Self::new()
+    fn known_workers(&self) -> Vec<usize> {
+        self.inner.accounting.known_workers()
     }
 }
 
@@ -204,7 +144,7 @@ mod tests {
 
     #[test]
     fn put_get_roundtrip() {
-        let s = ObjectStore::new();
+        let s = StrictBlobStore::new();
         let mut rng = Rng::new(1);
         let m = Matrix::randn(4, 4, &mut rng);
         s.put(0, "A[0,0]", m.clone()).unwrap();
@@ -213,13 +153,13 @@ mod tests {
 
     #[test]
     fn missing_key_errors() {
-        let s = ObjectStore::new();
+        let s = StrictBlobStore::new();
         assert!(s.get(0, "nope").is_err());
     }
 
     #[test]
     fn read_after_write_consistency_across_threads() {
-        let s = ObjectStore::new();
+        let s = StrictBlobStore::new();
         let mut handles = Vec::new();
         for t in 0..8 {
             let s = s.clone();
@@ -238,7 +178,7 @@ mod tests {
 
     #[test]
     fn byte_accounting() {
-        let s = ObjectStore::new();
+        let s = StrictBlobStore::new();
         let m = Matrix::zeros(4, 8); // 256 bytes
         s.put(3, "X[0]", m).unwrap();
         s.get(3, "X[0]").unwrap();
@@ -255,7 +195,7 @@ mod tests {
 
     #[test]
     fn idempotent_rewrite_allowed_in_strict_mode() {
-        let s = ObjectStore::strict_ssa();
+        let s = StrictBlobStore::strict_ssa();
         let m = Matrix::zeros(2, 2);
         s.put(0, "A[0]", m.clone()).unwrap();
         s.put(0, "A[0]", m).unwrap(); // same contents — fine
@@ -264,14 +204,14 @@ mod tests {
     #[test]
     #[should_panic(expected = "SSA violation")]
     fn conflicting_rewrite_panics_in_strict_mode() {
-        let s = ObjectStore::strict_ssa();
+        let s = StrictBlobStore::strict_ssa();
         s.put(0, "A[0]", Matrix::zeros(2, 2)).unwrap();
         s.put(0, "A[0]", Matrix::eye(2)).unwrap();
     }
 
     #[test]
     fn latency_is_injected() {
-        let s = ObjectStore::with_latency(Duration::from_millis(5));
+        let s = StrictBlobStore::with_latency(Duration::from_millis(5));
         let sw = crate::util::timer::Stopwatch::start();
         s.put(0, "A[0]", Matrix::zeros(1, 1)).unwrap();
         s.get(0, "A[0]").unwrap();

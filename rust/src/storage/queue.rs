@@ -1,4 +1,4 @@
-//! SQS-like task queue with visibility-timeout leases.
+//! Single-lock SQS-like task queue — the `strict` queue backend.
 //!
 //! Guarantees modelled after the real service, exactly the ones §4.1
 //! relies on:
@@ -10,162 +10,47 @@
 //! * **delete-after-complete** — the invariant that a task is removed
 //!   only once its effects are durable lives in the *executor*, not
 //!   here; the queue just provides `delete` keyed by the lease;
-//! * no exactly-once, no ordering (the paper: "numpywren does not
-//!   require strong guarantees … at-least-once is enough").
+//! * no exactly-once (the paper: "numpywren does not require strong
+//!   guarantees … at-least-once is enough"), but deterministic order:
+//!   highest priority first, FIFO within a priority by the global
+//!   message id — the one guarantee the sharded backend relaxes
+//!   across shards.
 //!
 //! Time is injectable (a [`Clock`]) so fault-tolerance tests can expire
 //! leases deterministically and the simulator can reuse the semantics.
-//!
-//! §Perf note: `receive` pops a visible-candidate max-heap (O(log n))
-//! instead of scanning the message map — the map scan serialized
-//! workers behind the queue mutex at high task rates (see
-//! EXPERIMENTS.md §Perf). Lease expiry re-feeds the heap lazily on the
-//! (rare) path where the heap runs dry.
+//! The message/heap mechanics live in
+//! [`QueueCore`](crate::storage::queue_core::QueueCore), shared with
+//! the sharded backend.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::storage::clock::{Clock, WallClock};
+use crate::storage::queue_core::QueueCore;
+use crate::storage::traits::{Lease, Queue};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// Injectable time source.
-pub trait Clock: Send + Sync + 'static {
-    fn now(&self) -> Duration;
-}
-
-/// Real wall-clock.
-pub struct WallClock {
-    epoch: Instant,
-}
-
-impl WallClock {
-    pub fn new() -> Self {
-        WallClock {
-            epoch: Instant::now(),
-        }
-    }
-}
-
-impl Default for WallClock {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl Clock for WallClock {
-    fn now(&self) -> Duration {
-        self.epoch.elapsed()
-    }
-}
-
-/// Manually-advanced clock for tests.
-#[derive(Default)]
-pub struct TestClock {
-    now_ns: AtomicU64,
-}
-
-impl TestClock {
-    pub fn advance(&self, d: Duration) {
-        self.now_ns.fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
-    }
-}
-
-impl Clock for TestClock {
-    fn now(&self) -> Duration {
-        Duration::from_nanos(self.now_ns.load(Ordering::SeqCst))
-    }
-}
-
-/// A held lease on a message. Deleting or renewing requires the lease;
-/// a stale lease (superseded by redelivery) is rejected.
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub struct Lease {
-    msg_id: u64,
-    receipt: u64,
-}
-
-#[derive(Debug)]
-struct Message {
-    body: String,
-    priority: i64,
-    /// Invisible until this instant (ZERO = visible).
-    invisible_until: Duration,
-    /// Receipt counter — bumped on every delivery; stale receipts
-    /// cannot delete/renew.
-    receipt: u64,
-    delivery_count: u32,
-}
-
-struct QueueInner {
-    messages: HashMap<u64, Message>,
-    /// Max-heap of candidates believed visible: (priority, FIFO id).
-    /// Entries can be stale (message leased or deleted since push) —
-    /// `receive` validates against `messages` on pop.
-    visible: BinaryHeap<(i64, Reverse<u64>)>,
+struct Inner {
+    core: QueueCore,
     next_id: u64,
-}
-
-impl QueueInner {
-    /// Re-feed the candidate heap with messages whose lease expired.
-    /// Called only when the heap yields nothing (rare path).
-    fn refresh_expired(&mut self, now: Duration) {
-        for (id, m) in &self.messages {
-            if m.invisible_until != Duration::ZERO && m.invisible_until <= now {
-                self.visible.push((m.priority, Reverse(*id)));
-            }
-        }
-    }
-
-    /// Pop the best valid visible message; take a lease on it.
-    fn try_receive(&mut self, now: Duration, lease_len: Duration) -> Option<(String, Lease)> {
-        loop {
-            let (_, Reverse(id)) = match self.visible.pop() {
-                Some(x) => x,
-                None => {
-                    // Heap dry: maybe leases expired — refresh once.
-                    self.refresh_expired(now);
-                    self.visible.pop()?
-                }
-            };
-            let Some(m) = self.messages.get_mut(&id) else {
-                continue; // deleted since pushed — stale entry
-            };
-            if m.invisible_until > now && m.invisible_until != Duration::ZERO {
-                continue; // leased since pushed — stale entry
-            }
-            m.invisible_until = now + lease_len;
-            m.receipt += 1;
-            m.delivery_count += 1;
-            return Some((
-                m.body.clone(),
-                Lease {
-                    msg_id: id,
-                    receipt: m.receipt,
-                },
-            ));
-        }
-    }
 }
 
 /// The queue. Clone-shared.
 #[derive(Clone)]
-pub struct TaskQueue {
-    inner: Arc<(Mutex<QueueInner>, Condvar)>,
+pub struct StrictQueue {
+    inner: Arc<(Mutex<Inner>, Condvar)>,
     clock: Arc<dyn Clock>,
     default_lease: Duration,
 }
 
-impl TaskQueue {
+impl StrictQueue {
     pub fn new(default_lease: Duration) -> Self {
         Self::with_clock(default_lease, Arc::new(WallClock::new()))
     }
 
     pub fn with_clock(default_lease: Duration, clock: Arc<dyn Clock>) -> Self {
-        TaskQueue {
+        StrictQueue {
             inner: Arc::new((
-                Mutex::new(QueueInner {
-                    messages: HashMap::new(),
-                    visible: BinaryHeap::new(),
+                Mutex::new(Inner {
+                    core: QueueCore::default(),
                     next_id: 1,
                 }),
                 Condvar::new(),
@@ -174,45 +59,38 @@ impl TaskQueue {
             default_lease,
         }
     }
+}
 
+impl Queue for StrictQueue {
     /// Enqueue a message (highest `priority` delivered first among
     /// visible messages; FIFO within a priority).
-    pub fn send(&self, body: &str, priority: i64) {
+    fn send(&self, body: &str, priority: i64) {
         let (lock, cv) = &*self.inner;
         let mut q = lock.lock().unwrap();
         let id = q.next_id;
         q.next_id += 1;
-        q.messages.insert(
-            id,
-            Message {
-                body: body.to_string(),
-                priority,
-                invisible_until: Duration::ZERO,
-                receipt: 0,
-                delivery_count: 0,
-            },
-        );
-        q.visible.push((priority, Reverse(id)));
+        q.core.insert(id, body, priority);
         cv.notify_one();
     }
 
-    /// Try to receive the highest-priority visible message; takes a
-    /// lease for `default_lease`. Non-blocking.
-    pub fn receive(&self) -> Option<(String, Lease)> {
+    fn receive(&self) -> Option<(String, Lease)> {
         let now = self.clock.now();
         let (lock, _) = &*self.inner;
-        lock.lock().unwrap().try_receive(now, self.default_lease)
+        lock.lock()
+            .unwrap()
+            .core
+            .try_receive(now, self.default_lease)
     }
 
     /// Blocking receive with timeout. Returns `None` on timeout. The
     /// wait and the visibility check share one lock acquisition, so a
     /// concurrent `send`'s notification cannot be lost.
-    pub fn receive_timeout(&self, timeout: Duration) -> Option<(String, Lease)> {
+    fn receive_timeout(&self, timeout: Duration) -> Option<(String, Lease)> {
         let deadline = Instant::now() + timeout;
         let (lock, cv) = &*self.inner;
         let mut q = lock.lock().unwrap();
         loop {
-            if let Some(x) = q.try_receive(self.clock.now(), self.default_lease) {
+            if let Some(x) = q.core.try_receive(self.clock.now(), self.default_lease) {
                 return Some(x);
             }
             let remaining = deadline.checked_duration_since(Instant::now())?;
@@ -225,88 +103,56 @@ impl TaskQueue {
         }
     }
 
-    /// Renew the lease for another `default_lease` from now. Fails if
-    /// the lease is stale (message redelivered or deleted).
-    pub fn renew(&self, lease: &Lease) -> bool {
+    fn renew(&self, lease: &Lease) -> bool {
         let now = self.clock.now();
         let (lock, _) = &*self.inner;
-        let mut q = lock.lock().unwrap();
-        match q.messages.get_mut(&lease.msg_id) {
-            Some(m) if m.receipt == lease.receipt => {
-                m.invisible_until = now + self.default_lease;
-                true
-            }
-            _ => false,
-        }
+        lock.lock()
+            .unwrap()
+            .core
+            .renew(lease, now, self.default_lease)
     }
 
-    /// Delete the message — only valid while holding the current lease
-    /// (the §4.1 invariant: delete happens only after the task's
-    /// effects are durable).
-    pub fn delete(&self, lease: &Lease) -> bool {
+    fn delete(&self, lease: &Lease) -> bool {
         let (lock, _) = &*self.inner;
-        let mut q = lock.lock().unwrap();
-        match q.messages.get(&lease.msg_id) {
-            Some(m) if m.receipt == lease.receipt => {
-                q.messages.remove(&lease.msg_id);
-                true
-            }
-            _ => false,
-        }
+        lock.lock().unwrap().core.delete(lease)
     }
 
-    /// Number of messages (visible + invisible) — the provisioner's
-    /// "pending tasks" signal.
-    pub fn len(&self) -> usize {
-        self.inner.0.lock().unwrap().messages.len()
+    fn len(&self) -> usize {
+        self.inner.0.lock().unwrap().core.len()
     }
 
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-
-    /// Number of currently-visible messages.
-    pub fn visible_len(&self) -> usize {
+    fn visible_len(&self) -> usize {
         let now = self.clock.now();
+        self.inner.0.lock().unwrap().core.visible_len(now)
+    }
+
+    fn delivery_count(&self, body: &str) -> u32 {
         self.inner
             .0
             .lock()
             .unwrap()
-            .messages
-            .values()
-            .filter(|m| m.invisible_until == Duration::ZERO || m.invisible_until <= now)
-            .count()
-    }
-
-    /// How many times the message body has been delivered (testing aid;
-    /// at-least-once shows up as counts > 1).
-    pub fn delivery_count(&self, body: &str) -> u32 {
-        self.inner
-            .0
-            .lock()
-            .unwrap()
-            .messages
-            .values()
-            .find(|m| m.body == body)
-            .map_or(0, |m| m.delivery_count)
+            .core
+            .delivery_count(body)
+            .unwrap_or(0)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::storage::clock::TestClock;
 
-    fn queue_with_test_clock(lease: Duration) -> (TaskQueue, Arc<TestClock>) {
+    fn queue_with_test_clock(lease: Duration) -> (StrictQueue, Arc<TestClock>) {
         let clock = Arc::new(TestClock::default());
         (
-            TaskQueue::with_clock(lease, clock.clone() as Arc<dyn Clock>),
+            StrictQueue::with_clock(lease, clock.clone() as Arc<dyn Clock>),
             clock,
         )
     }
 
     #[test]
     fn send_receive_delete() {
-        let q = TaskQueue::new(Duration::from_secs(10));
+        let q = StrictQueue::new(Duration::from_secs(10));
         q.send("t1", 0);
         let (body, lease) = q.receive().unwrap();
         assert_eq!(body, "t1");
@@ -317,7 +163,7 @@ mod tests {
 
     #[test]
     fn priority_order() {
-        let q = TaskQueue::new(Duration::from_secs(10));
+        let q = StrictQueue::new(Duration::from_secs(10));
         q.send("low", 1);
         q.send("high", 5);
         q.send("mid", 3);
@@ -328,7 +174,7 @@ mod tests {
 
     #[test]
     fn fifo_within_priority() {
-        let q = TaskQueue::new(Duration::from_secs(10));
+        let q = StrictQueue::new(Duration::from_secs(10));
         q.send("first", 0);
         q.send("second", 0);
         assert_eq!(q.receive().unwrap().0, "first");
@@ -383,7 +229,7 @@ mod tests {
 
     #[test]
     fn receive_timeout_blocks_until_send() {
-        let q = TaskQueue::new(Duration::from_secs(10));
+        let q = StrictQueue::new(Duration::from_secs(10));
         let q2 = q.clone();
         let h = std::thread::spawn(move || q2.receive_timeout(Duration::from_secs(5)));
         std::thread::sleep(Duration::from_millis(30));
@@ -394,13 +240,13 @@ mod tests {
 
     #[test]
     fn receive_timeout_times_out() {
-        let q = TaskQueue::new(Duration::from_secs(10));
+        let q = StrictQueue::new(Duration::from_secs(10));
         assert!(q.receive_timeout(Duration::from_millis(30)).is_none());
     }
 
     #[test]
     fn concurrent_receivers_each_get_distinct_messages() {
-        let q = TaskQueue::new(Duration::from_secs(30));
+        let q = StrictQueue::new(Duration::from_secs(30));
         for i in 0..64 {
             q.send(&format!("m{i}"), 0);
         }
@@ -429,7 +275,7 @@ mod tests {
     fn stale_heap_entries_skipped() {
         // Re-sent priorities + deletes leave stale heap entries; the
         // queue must never deliver a deleted message.
-        let q = TaskQueue::new(Duration::from_secs(10));
+        let q = StrictQueue::new(Duration::from_secs(10));
         q.send("a", 1);
         q.send("b", 2);
         let (b, lease_b) = q.receive().unwrap();

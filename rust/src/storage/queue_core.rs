@@ -1,0 +1,143 @@
+//! The visibility-timeout message store shared by the queue backends.
+//!
+//! One `QueueCore` is a map of messages plus a max-heap of
+//! visible-candidate entries: the strict backend wraps a single core
+//! in one mutex; the sharded backend holds one core per shard. Message
+//! ids are assigned by the *caller* so the sharded backend can hand
+//! out globally-unique ids (the FIFO-within-priority tiebreak and the
+//! shard-routing key for leases).
+//!
+//! §Perf note: `try_receive` pops the candidate heap (O(log n))
+//! instead of scanning the message map — the map scan serialized
+//! workers behind the queue lock at high task rates (see
+//! EXPERIMENTS.md §Perf). Lease expiry re-feeds the heap lazily on the
+//! (rare) path where the heap runs dry.
+
+use crate::storage::traits::Lease;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::time::Duration;
+
+#[derive(Debug)]
+struct Message {
+    body: String,
+    priority: i64,
+    /// Invisible until this instant (ZERO = visible).
+    invisible_until: Duration,
+    /// Receipt counter — bumped on every delivery; stale receipts
+    /// cannot delete/renew.
+    receipt: u64,
+    delivery_count: u32,
+}
+
+/// The mechanics of one (shard of a) queue. Not thread-safe — callers
+/// hold a lock around it.
+#[derive(Default)]
+pub(crate) struct QueueCore {
+    messages: HashMap<u64, Message>,
+    /// Max-heap of candidates believed visible: (priority, FIFO id).
+    /// Entries can be stale (message leased or deleted since push) —
+    /// `try_receive` validates against `messages` on pop.
+    visible: BinaryHeap<(i64, Reverse<u64>)>,
+}
+
+impl QueueCore {
+    /// Insert a message under a caller-assigned unique id.
+    pub(crate) fn insert(&mut self, id: u64, body: &str, priority: i64) {
+        self.messages.insert(
+            id,
+            Message {
+                body: body.to_string(),
+                priority,
+                invisible_until: Duration::ZERO,
+                receipt: 0,
+                delivery_count: 0,
+            },
+        );
+        self.visible.push((priority, Reverse(id)));
+    }
+
+    /// Re-feed the candidate heap with messages whose lease expired.
+    /// Called only when the heap yields nothing (rare path).
+    fn refresh_expired(&mut self, now: Duration) {
+        for (id, m) in &self.messages {
+            if m.invisible_until != Duration::ZERO && m.invisible_until <= now {
+                self.visible.push((m.priority, Reverse(*id)));
+            }
+        }
+    }
+
+    /// Pop the best valid visible message; take a lease on it.
+    pub(crate) fn try_receive(
+        &mut self,
+        now: Duration,
+        lease_len: Duration,
+    ) -> Option<(String, Lease)> {
+        loop {
+            let (_, Reverse(id)) = match self.visible.pop() {
+                Some(x) => x,
+                None => {
+                    // Heap dry: maybe leases expired — refresh once.
+                    self.refresh_expired(now);
+                    self.visible.pop()?
+                }
+            };
+            let Some(m) = self.messages.get_mut(&id) else {
+                continue; // deleted since pushed — stale entry
+            };
+            if m.invisible_until > now && m.invisible_until != Duration::ZERO {
+                continue; // leased since pushed — stale entry
+            }
+            m.invisible_until = now + lease_len;
+            m.receipt += 1;
+            m.delivery_count += 1;
+            return Some((
+                m.body.clone(),
+                Lease {
+                    msg_id: id,
+                    receipt: m.receipt,
+                },
+            ));
+        }
+    }
+
+    /// Extend the lease to `now + lease_len` iff it is current.
+    pub(crate) fn renew(&mut self, lease: &Lease, now: Duration, lease_len: Duration) -> bool {
+        match self.messages.get_mut(&lease.msg_id) {
+            Some(m) if m.receipt == lease.receipt => {
+                m.invisible_until = now + lease_len;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Remove the message iff the lease is current.
+    pub(crate) fn delete(&mut self, lease: &Lease) -> bool {
+        match self.messages.get(&lease.msg_id) {
+            Some(m) if m.receipt == lease.receipt => {
+                self.messages.remove(&lease.msg_id);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.messages.len()
+    }
+
+    pub(crate) fn visible_len(&self, now: Duration) -> usize {
+        self.messages
+            .values()
+            .filter(|m| m.invisible_until == Duration::ZERO || m.invisible_until <= now)
+            .count()
+    }
+
+    pub(crate) fn delivery_count(&self, body: &str) -> Option<u32> {
+        self.messages
+            .values()
+            .find(|m| m.body == body)
+            .map(|m| m.delivery_count)
+    }
+}

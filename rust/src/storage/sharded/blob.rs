@@ -1,0 +1,170 @@
+//! N-way sharded object store.
+//!
+//! Keys hash onto independent `RwLock<HashMap>` shards, so concurrent
+//! tile puts/gets from many workers contend only when they land on the
+//! same shard (1/N of the time for uniform keys) instead of always.
+//! Accounting is the same lock-free atomics as the strict backend. No
+//! `strict_ssa` mode — SSA policing is the test backend's job.
+
+use crate::linalg::matrix::Matrix;
+use crate::storage::sharded::shard_of;
+use crate::storage::traits::{BlobStore, StoreStats, TransferAccounting};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+type Shard = RwLock<HashMap<String, Arc<Matrix>>>;
+
+/// The store. Cheap to clone (Arc-shared).
+#[derive(Clone)]
+pub struct ShardedBlobStore {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    shards: Vec<Shard>,
+    accounting: TransferAccounting,
+    /// Injected latency per operation (simulates S3's ~10 ms).
+    latency: Duration,
+}
+
+impl ShardedBlobStore {
+    pub fn new(n_shards: usize) -> Self {
+        Self::with_latency(n_shards, Duration::ZERO)
+    }
+
+    /// A store that sleeps `latency` on every get/put.
+    pub fn with_latency(n_shards: usize, latency: Duration) -> Self {
+        let n = n_shards.max(1);
+        ShardedBlobStore {
+            inner: Arc::new(Inner {
+                shards: (0..n).map(|_| RwLock::new(HashMap::new())).collect(),
+                accounting: TransferAccounting::default(),
+                latency,
+            }),
+        }
+    }
+
+    fn shard(&self, key: &str) -> &Shard {
+        &self.inner.shards[shard_of(key, self.inner.shards.len())]
+    }
+
+    fn latency(&self) {
+        if !self.inner.latency.is_zero() {
+            std::thread::sleep(self.inner.latency);
+        }
+    }
+}
+
+impl BlobStore for ShardedBlobStore {
+    fn put(&self, worker: usize, key: &str, value: Matrix) -> Result<()> {
+        self.latency();
+        let bytes = (value.rows() * value.cols() * 8) as u64;
+        self.shard(key)
+            .write()
+            .unwrap()
+            .insert(key.to_string(), Arc::new(value));
+        self.inner.accounting.record_put(worker, bytes);
+        Ok(())
+    }
+
+    fn get(&self, worker: usize, key: &str) -> Result<Arc<Matrix>> {
+        self.latency();
+        let v = self
+            .shard(key)
+            .read()
+            .unwrap()
+            .get(key)
+            .cloned()
+            .with_context(|| format!("object-store key `{key}` not found"))?;
+        let bytes = (v.rows() * v.cols() * 8) as u64;
+        self.inner.accounting.record_get(worker, bytes);
+        Ok(v)
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.shard(key).read().unwrap().contains_key(key)
+    }
+
+    fn len(&self) -> usize {
+        self.inner
+            .shards
+            .iter()
+            .map(|s| s.read().unwrap().len())
+            .sum()
+    }
+
+    fn stats(&self) -> StoreStats {
+        self.inner.accounting.stats()
+    }
+
+    fn worker_stats(&self, worker: usize) -> StoreStats {
+        self.inner.accounting.worker_stats(worker)
+    }
+
+    fn known_workers(&self) -> Vec<usize> {
+        self.inner.accounting.known_workers()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip_across_shard_counts() {
+        for n in [1usize, 4, 16] {
+            let s = ShardedBlobStore::new(n);
+            let mut rng = Rng::new(7);
+            for i in 0..32 {
+                let m = Matrix::randn(2, 2, &mut rng);
+                let key = format!("T[{i},{}]", i % 5);
+                s.put(0, &key, m.clone()).unwrap();
+                assert_eq!(*s.get(0, &key).unwrap(), m);
+                assert!(s.contains(&key));
+            }
+            assert_eq!(s.len(), 32);
+            assert!(s.get(0, "missing").is_err());
+        }
+    }
+
+    #[test]
+    fn concurrent_writers_on_distinct_keys() {
+        let s = ShardedBlobStore::new(8);
+        let mut handles = Vec::new();
+        for t in 0..16usize {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..20 {
+                    let key = format!("K[{t},{i}]");
+                    s.put(t, &key, Matrix::from_vec(1, 1, vec![t as f64]))
+                        .unwrap();
+                    assert_eq!(s.get(t, &key).unwrap()[(0, 0)], t as f64);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.len(), 16 * 20);
+        assert_eq!(s.known_workers().len(), 16);
+    }
+
+    #[test]
+    fn accounting_matches_strict_semantics() {
+        let s = ShardedBlobStore::new(4);
+        let m = Matrix::zeros(4, 8); // 256 bytes
+        s.put(3, "X[0]", m).unwrap();
+        s.get(3, "X[0]").unwrap();
+        s.get(4, "X[0]").unwrap();
+        let t = s.stats();
+        assert_eq!(t.bytes_written, 256);
+        assert_eq!(t.bytes_read, 512);
+        assert_eq!(t.put_ops, 1);
+        assert_eq!(t.get_ops, 2);
+        assert_eq!(s.worker_stats(4).bytes_read, 256);
+        assert_eq!(s.worker_stats(4).bytes_written, 0);
+    }
+}

@@ -1,9 +1,10 @@
-//! Redis-like runtime state store.
+//! Single-lock Redis-like runtime state store — the `strict` KV
+//! backend.
 //!
 //! §4 step 4: "the runtime state store tracks the control state of the
 //! entire execution and needs to support fast, atomic updates for each
-//! task". The operations numpywren's protocol needs — and all we
-//! provide — are per-key linearizable RMW:
+//! task". The operations numpywren's protocol needs — and all the
+//! [`KvState`] trait asks for — are per-key linearizable RMW:
 //!
 //! * `cas` — task-status transitions (exactly one worker wins the
 //!   `Pending → Completed` transition and performs child enqueue);
@@ -13,6 +14,7 @@
 //!   (DESIGN.md §5.2);
 //! * plain get/set for job metadata and counters for metrics.
 
+use crate::storage::traits::KvState;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -27,13 +29,13 @@ pub mod status {
 
 /// The store. Clone-shared.
 #[derive(Clone, Default)]
-pub struct StateStore {
+pub struct StrictKvState {
     kv: Arc<Mutex<HashMap<String, String>>>,
     counters: Arc<Mutex<HashMap<String, i64>>>,
     ops: Arc<AtomicU64>,
 }
 
-impl StateStore {
+impl StrictKvState {
     pub fn new() -> Self {
         Self::default()
     }
@@ -41,18 +43,19 @@ impl StateStore {
     fn bump(&self) {
         self.ops.fetch_add(1, Ordering::Relaxed);
     }
+}
 
-    /// Total operations served (control-plane load metric).
-    pub fn op_count(&self) -> u64 {
+impl KvState for StrictKvState {
+    fn op_count(&self) -> u64 {
         self.ops.load(Ordering::Relaxed)
     }
 
-    pub fn get(&self, key: &str) -> Option<String> {
+    fn get(&self, key: &str) -> Option<String> {
         self.bump();
         self.kv.lock().unwrap().get(key).cloned()
     }
 
-    pub fn set(&self, key: &str, value: &str) {
+    fn set(&self, key: &str, value: &str) {
         self.bump();
         self.kv
             .lock()
@@ -60,9 +63,7 @@ impl StateStore {
             .insert(key.to_string(), value.to_string());
     }
 
-    /// Set iff absent. Returns true when this call created the key —
-    /// the idempotence primitive (only the first caller proceeds).
-    pub fn set_nx(&self, key: &str, value: &str) -> bool {
+    fn set_nx(&self, key: &str, value: &str) -> bool {
         self.bump();
         let mut kv = self.kv.lock().unwrap();
         if kv.contains_key(key) {
@@ -73,9 +74,7 @@ impl StateStore {
         }
     }
 
-    /// Compare-and-swap: if current == `expect` (None = absent), set to
-    /// `value` and return true.
-    pub fn cas(&self, key: &str, expect: Option<&str>, value: &str) -> bool {
+    fn cas(&self, key: &str, expect: Option<&str>, value: &str) -> bool {
         self.bump();
         let mut kv = self.kv.lock().unwrap();
         let cur = kv.get(key).map(|s| s.as_str());
@@ -87,9 +86,7 @@ impl StateStore {
         }
     }
 
-    /// Initialize a counter iff absent; returns true if this call
-    /// initialized it.
-    pub fn init_counter(&self, key: &str, value: i64) -> bool {
+    fn init_counter(&self, key: &str, value: i64) -> bool {
         self.bump();
         let mut c = self.counters.lock().unwrap();
         if c.contains_key(key) {
@@ -100,9 +97,7 @@ impl StateStore {
         }
     }
 
-    /// Atomically add `delta` (counter created as 0 if absent);
-    /// returns the new value.
-    pub fn incr(&self, key: &str, delta: i64) -> i64 {
+    fn incr(&self, key: &str, delta: i64) -> i64 {
         self.bump();
         let mut c = self.counters.lock().unwrap();
         let v = c.entry(key.to_string()).or_insert(0);
@@ -110,30 +105,16 @@ impl StateStore {
         *v
     }
 
-    /// Atomically decrement; returns the new value.
-    pub fn decr(&self, key: &str) -> i64 {
-        self.incr(key, -1)
-    }
-
-    pub fn counter(&self, key: &str) -> i64 {
+    fn counter(&self, key: &str) -> i64 {
         self.bump();
         *self.counters.lock().unwrap().get(key).unwrap_or(&0)
     }
 
-    /// Does the counter exist (distinct from == 0)?
-    pub fn counter_exists(&self, key: &str) -> bool {
+    fn counter_exists(&self, key: &str) -> bool {
         self.counters.lock().unwrap().contains_key(key)
     }
 
-    /// The dependency-propagation primitive: atomically, if `edge_key`
-    /// has not been marked, mark it and decrement `counter_key`.
-    /// Returns the counter value after the (possibly skipped)
-    /// decrement. Idempotent per edge — a re-executed parent task
-    /// re-observes the value instead of double-decrementing, and a
-    /// worker that crashed between the decrement and the child enqueue
-    /// lets its successor re-observe the 0 and enqueue (at-least-once
-    /// enqueue is safe; execution is idempotent).
-    pub fn edge_decr(&self, edge_key: &str, counter_key: &str) -> i64 {
+    fn edge_decr(&self, edge_key: &str, counter_key: &str) -> i64 {
         self.bump();
         let mut c = self.counters.lock().unwrap();
         if c.contains_key(edge_key) {
@@ -155,7 +136,7 @@ mod tests {
 
     #[test]
     fn get_set() {
-        let s = StateStore::new();
+        let s = StrictKvState::new();
         assert_eq!(s.get("k"), None);
         s.set("k", "v");
         assert_eq!(s.get("k").as_deref(), Some("v"));
@@ -163,7 +144,7 @@ mod tests {
 
     #[test]
     fn cas_transitions() {
-        let s = StateStore::new();
+        let s = StrictKvState::new();
         assert!(s.cas("t", None, status::PENDING));
         assert!(!s.cas("t", None, status::PENDING), "already exists");
         assert!(s.cas("t", Some(status::PENDING), status::COMPLETED));
@@ -175,7 +156,7 @@ mod tests {
 
     #[test]
     fn set_nx_exactly_one_winner_concurrent() {
-        let s = StateStore::new();
+        let s = StrictKvState::new();
         let mut handles = Vec::new();
         for i in 0..16 {
             let s = s.clone();
@@ -192,7 +173,7 @@ mod tests {
     fn concurrent_decrements_hit_zero_exactly_once() {
         // The dependency-counter invariant: N workers each decrement
         // once; exactly one observes the 0 crossing.
-        let s = StateStore::new();
+        let s = StrictKvState::new();
         s.init_counter("deps", 16);
         let mut handles = Vec::new();
         for _ in 0..16 {
@@ -209,7 +190,7 @@ mod tests {
 
     #[test]
     fn init_counter_only_first_wins() {
-        let s = StateStore::new();
+        let s = StrictKvState::new();
         assert!(s.init_counter("c", 5));
         assert!(!s.init_counter("c", 99));
         assert_eq!(s.counter("c"), 5);
@@ -217,7 +198,7 @@ mod tests {
 
     #[test]
     fn edge_decr_idempotent() {
-        let s = StateStore::new();
+        let s = StrictKvState::new();
         s.init_counter("deps:c", 3);
         assert_eq!(s.edge_decr("edge:a:c", "deps:c"), 2);
         // Re-execution of parent a: no double decrement, value observed.
@@ -231,7 +212,7 @@ mod tests {
     fn edge_decr_concurrent_zero_crossing() {
         // n distinct parents racing (with duplicates): counter ends at
         // exactly 0 and at least one caller observes 0.
-        let s = StateStore::new();
+        let s = StrictKvState::new();
         let n = 8;
         s.init_counter("deps", n);
         let mut handles = Vec::new();
@@ -256,7 +237,7 @@ mod tests {
         // Random interleavings of incr/decr across threads conserve the
         // arithmetic sum.
         forall("counter conserves sum", 99, 16, |rng, _| {
-            let s = StateStore::new();
+            let s = StrictKvState::new();
             let n_threads = 1 + rng.below(6);
             let per = 1 + rng.below(50);
             let deltas: Vec<Vec<i64>> = (0..n_threads)

@@ -1,0 +1,239 @@
+//! The substrate abstraction — one object-safe trait per cloud
+//! service the paper builds on (§4, Figure 6).
+//!
+//! Everything above the substrate (engine, executor, provisioner)
+//! holds `Arc<dyn …>` handles to these traits, never concrete types,
+//! so backends are interchangeable: the single-lock `strict` family
+//! (linearizable, test-friendly, SSA-checking), the `sharded` family
+//! (N-way key-hash sharding for high worker counts), and — eventually —
+//! real S3/SQS/Redis clients or fault-injecting decorators.
+//!
+//! Semantics every backend must provide (the conformance suite in
+//! `tests/substrate_conformance.rs` checks both shipped families):
+//!
+//! * [`BlobStore`] — S3: unbounded keyed tile storage,
+//!   read-after-write consistency *per key*, byte/op accounting per
+//!   logical worker;
+//! * [`Queue`] — SQS: at-least-once delivery with visibility-timeout
+//!   leases; renewal and delete require the current lease; **FIFO
+//!   within a priority** by global enqueue order (sequence-number
+//!   tiebreak), so same-priority tasks pop deterministically —
+//!   sharded backends may relax cross-shard ordering but never lose
+//!   or duplicate a live lease;
+//! * [`KvState`] — Redis: per-key linearizable RMW (`cas`, `set_nx`,
+//!   counters) plus the two-key [`KvState::edge_decr`] dependency
+//!   primitive, atomic across both keys.
+
+use crate::linalg::matrix::Matrix;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+/// Aggregate transfer statistics.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub get_ops: u64,
+    pub put_ops: u64,
+}
+
+/// A held lease on a queue message. Deleting or renewing requires the
+/// lease; a stale lease (superseded by redelivery) is rejected.
+/// Message ids are globally unique within a queue, so sharded backends
+/// can route a lease back to its shard.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Lease {
+    pub(crate) msg_id: u64,
+    pub(crate) receipt: u64,
+}
+
+/// S3-like tile store: high-throughput keyed storage with per-key
+/// read-after-write consistency and transfer accounting.
+pub trait BlobStore: Send + Sync {
+    /// Store a tile under `key`, attributed to `worker`.
+    fn put(&self, worker: usize, key: &str, value: Matrix) -> Result<()>;
+
+    /// Fetch the tile at `key`, attributed to `worker`.
+    fn get(&self, worker: usize, key: &str) -> Result<Arc<Matrix>>;
+
+    /// Does `key` exist? (No latency or accounting — control-plane op.)
+    fn contains(&self, key: &str) -> bool;
+
+    /// Number of stored objects.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Aggregate stats.
+    fn stats(&self) -> StoreStats;
+
+    /// Per-worker stats (Figure 7's per-machine bytes).
+    fn worker_stats(&self, worker: usize) -> StoreStats;
+
+    /// Ids of workers that have touched the store.
+    fn known_workers(&self) -> Vec<usize>;
+}
+
+/// SQS-like task queue: at-least-once delivery with visibility-timeout
+/// leases (the §4.1 fault-tolerance protocol rests on these exact
+/// guarantees). Highest priority first among visible messages; ties
+/// break FIFO by enqueue order.
+pub trait Queue: Send + Sync {
+    /// Enqueue a message.
+    fn send(&self, body: &str, priority: i64);
+
+    /// Try to receive the best visible message; takes a lease for the
+    /// queue's default lease duration. Non-blocking.
+    fn receive(&self) -> Option<(String, Lease)>;
+
+    /// Blocking receive with timeout. Returns `None` on timeout.
+    fn receive_timeout(&self, timeout: Duration) -> Option<(String, Lease)>;
+
+    /// Renew the lease for another lease period from now. Fails if the
+    /// lease is stale (message redelivered or deleted).
+    fn renew(&self, lease: &Lease) -> bool;
+
+    /// Delete the message — only valid while holding the current lease
+    /// (the §4.1 invariant: delete only after effects are durable).
+    fn delete(&self, lease: &Lease) -> bool;
+
+    /// Number of messages (visible + invisible) — the provisioner's
+    /// "pending tasks" signal.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of currently-visible messages.
+    fn visible_len(&self) -> usize;
+
+    /// How many times the message body has been delivered (testing
+    /// aid; at-least-once shows up as counts > 1).
+    fn delivery_count(&self, body: &str) -> u32;
+}
+
+/// Redis-like runtime state store: per-key linearizable RMW — all the
+/// control-plane atomicity numpywren's protocol needs (§4 step 4).
+pub trait KvState: Send + Sync {
+    fn get(&self, key: &str) -> Option<String>;
+
+    fn set(&self, key: &str, value: &str);
+
+    /// Set iff absent. Returns true when this call created the key —
+    /// the idempotence primitive (only the first caller proceeds).
+    fn set_nx(&self, key: &str, value: &str) -> bool;
+
+    /// Compare-and-swap: if current == `expect` (None = absent), set
+    /// to `value` and return true.
+    fn cas(&self, key: &str, expect: Option<&str>, value: &str) -> bool;
+
+    /// Initialize a counter iff absent; returns true if this call
+    /// initialized it.
+    fn init_counter(&self, key: &str, value: i64) -> bool;
+
+    /// Atomically add `delta` (counter created as 0 if absent);
+    /// returns the new value.
+    fn incr(&self, key: &str, delta: i64) -> i64;
+
+    /// Atomically decrement; returns the new value.
+    fn decr(&self, key: &str) -> i64 {
+        self.incr(key, -1)
+    }
+
+    fn counter(&self, key: &str) -> i64;
+
+    /// Does the counter exist (distinct from == 0)?
+    fn counter_exists(&self, key: &str) -> bool;
+
+    /// The dependency-propagation primitive: atomically, if `edge_key`
+    /// has not been marked, mark it and decrement `counter_key`.
+    /// Returns the counter value after the (possibly skipped)
+    /// decrement. Idempotent per edge — a re-executed parent task
+    /// re-observes the value instead of double-decrementing, and a
+    /// worker that crashed between the decrement and the child enqueue
+    /// lets its successor re-observe the 0 and enqueue (at-least-once
+    /// enqueue is safe; execution is idempotent). Both keys update
+    /// under one atomic step even when a backend shards them apart.
+    fn edge_decr(&self, edge_key: &str, counter_key: &str) -> i64;
+
+    /// Total operations served (control-plane load metric).
+    fn op_count(&self) -> u64;
+}
+
+/// Byte/op counters shared by the blob-store backends.
+#[derive(Default)]
+pub(crate) struct Counters {
+    pub(crate) bytes_read: AtomicU64,
+    pub(crate) bytes_written: AtomicU64,
+    pub(crate) get_ops: AtomicU64,
+    pub(crate) put_ops: AtomicU64,
+}
+
+impl Counters {
+    pub(crate) fn snapshot(&self) -> StoreStats {
+        StoreStats {
+            bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            bytes_written: self.bytes_written.load(Ordering::Relaxed),
+            get_ops: self.get_ops.load(Ordering::Relaxed),
+            put_ops: self.put_ops.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Totals + per-worker transfer accounting (Figure 7), shared by the
+/// blob-store backends. Counter bumps are lock-free; the per-worker
+/// map takes its write lock only on a worker's first operation.
+#[derive(Default)]
+pub(crate) struct TransferAccounting {
+    totals: Counters,
+    per_worker: RwLock<HashMap<usize, Arc<Counters>>>,
+}
+
+impl TransferAccounting {
+    fn worker_counters(&self, worker: usize) -> Arc<Counters> {
+        if let Some(c) = self.per_worker.read().unwrap().get(&worker) {
+            return c.clone();
+        }
+        let mut w = self.per_worker.write().unwrap();
+        w.entry(worker).or_default().clone()
+    }
+
+    pub(crate) fn record_get(&self, worker: usize, bytes: u64) {
+        self.totals.bytes_read.fetch_add(bytes, Ordering::Relaxed);
+        self.totals.get_ops.fetch_add(1, Ordering::Relaxed);
+        let wc = self.worker_counters(worker);
+        wc.bytes_read.fetch_add(bytes, Ordering::Relaxed);
+        wc.get_ops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_put(&self, worker: usize, bytes: u64) {
+        self.totals.bytes_written.fetch_add(bytes, Ordering::Relaxed);
+        self.totals.put_ops.fetch_add(1, Ordering::Relaxed);
+        let wc = self.worker_counters(worker);
+        wc.bytes_written.fetch_add(bytes, Ordering::Relaxed);
+        wc.put_ops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn stats(&self) -> StoreStats {
+        self.totals.snapshot()
+    }
+
+    pub(crate) fn worker_stats(&self, worker: usize) -> StoreStats {
+        match self.per_worker.read().unwrap().get(&worker) {
+            Some(c) => c.snapshot(),
+            None => StoreStats::default(),
+        }
+    }
+
+    pub(crate) fn known_workers(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.per_worker.read().unwrap().keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+}

@@ -7,6 +7,7 @@ use numpywren::config::{EngineConfig, FailureSpec, ScalingMode};
 use numpywren::drivers;
 use numpywren::engine::Engine;
 use numpywren::linalg::matrix::Matrix;
+use numpywren::storage::BlobStore as _;
 use numpywren::util::prng::Rng;
 use std::time::Duration;
 

@@ -1,0 +1,327 @@
+//! Substrate conformance suite — every backend family must provide the
+//! same semantics through the `storage::traits` interfaces.
+//!
+//! Each test runs against all shipped backends (strict single-lock and
+//! sharded at several shard counts) through `Arc<dyn …>` handles only,
+//! exactly as the engine holds them. Concurrency tests hammer the
+//! linearizable primitives (`cas`, `set_nx`, `edge_decr`) and the
+//! queue's lease machinery; the ordering tests pin the
+//! FIFO-within-priority contract on the backends that guarantee it
+//! globally (strict, and sharded with one shard).
+
+use numpywren::config::{EngineConfig, ScalingMode, SubstrateConfig};
+use numpywren::drivers;
+use numpywren::engine::Engine;
+use numpywren::linalg::matrix::Matrix;
+use numpywren::storage::{BlobStore as _, KvState as _, Queue as _, Substrate, TestClock};
+use numpywren::util::prng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+const LEASE: Duration = Duration::from_secs(10);
+
+/// All backend families, built on a deterministic test clock.
+fn backends() -> Vec<(&'static str, Substrate, Arc<TestClock>)> {
+    ["strict", "sharded:1", "sharded:4", "sharded:16"]
+        .into_iter()
+        .map(|spec| {
+            let clock = Arc::new(TestClock::default());
+            let cfg = SubstrateConfig::parse(spec).unwrap();
+            let sub = Substrate::build_with_clock(&cfg, LEASE, Duration::ZERO, clock.clone());
+            (spec, sub, clock)
+        })
+        .collect()
+}
+
+/// The backends that guarantee *global* priority + FIFO ordering.
+fn ordered_backends() -> Vec<(&'static str, Substrate, Arc<TestClock>)> {
+    backends()
+        .into_iter()
+        .filter(|(spec, _, _)| *spec == "strict" || *spec == "sharded:1")
+        .collect()
+}
+
+// ---------- KvState ----------
+
+#[test]
+fn kv_cas_exactly_one_winner_concurrent() {
+    for (spec, sub, _) in backends() {
+        let state = sub.state;
+        let mut handles = Vec::new();
+        for _ in 0..16 {
+            let state = state.clone();
+            handles.push(std::thread::spawn(move || {
+                state.cas("status:t", None, "completed")
+            }));
+        }
+        let wins: usize = handles
+            .into_iter()
+            .map(|h| h.join().unwrap() as usize)
+            .sum();
+        assert_eq!(wins, 1, "[{spec}] exactly one CAS winner");
+        assert_eq!(state.get("status:t").as_deref(), Some("completed"));
+    }
+}
+
+#[test]
+fn kv_set_nx_exactly_one_winner_concurrent() {
+    for (spec, sub, _) in backends() {
+        let state = sub.state;
+        let mut handles = Vec::new();
+        for i in 0..16 {
+            let state = state.clone();
+            handles.push(std::thread::spawn(move || {
+                state.set_nx("job:error", &format!("worker {i}"))
+            }));
+        }
+        let wins: usize = handles
+            .into_iter()
+            .map(|h| h.join().unwrap() as usize)
+            .sum();
+        assert_eq!(wins, 1, "[{spec}] exactly one set_nx winner");
+    }
+}
+
+#[test]
+fn kv_edge_decr_idempotent_and_exact_concurrent() {
+    // N distinct parents, each decrementing its edge 3 times from
+    // separate threads: the counter must land on exactly 0, at least
+    // one caller must observe the 0 crossing, and re-observation must
+    // never double-decrement.
+    for (spec, sub, _) in backends() {
+        let state = sub.state;
+        let n = 12i64;
+        assert!(state.init_counter("deps:child", n));
+        assert!(!state.init_counter("deps:child", 99));
+        let mut handles = Vec::new();
+        for p in 0..n {
+            for _dup in 0..3 {
+                let state = state.clone();
+                handles.push(std::thread::spawn(move || {
+                    state.edge_decr(&format!("edge:{p}:child"), "deps:child") == 0
+                }));
+            }
+        }
+        let zeros: usize = handles
+            .into_iter()
+            .map(|h| h.join().unwrap() as usize)
+            .sum();
+        assert!(zeros >= 1, "[{spec}] someone must observe the 0 crossing");
+        assert_eq!(state.counter("deps:child"), 0, "[{spec}] exact count");
+        // Post-hoc re-execution still observes 0, still no drift.
+        assert_eq!(state.edge_decr("edge:0:child", "deps:child"), 0);
+        assert_eq!(state.counter("deps:child"), 0);
+    }
+}
+
+#[test]
+fn kv_counter_sum_exact_under_contention() {
+    for (spec, sub, _) in backends() {
+        let state = sub.state;
+        let threads = 8;
+        let per = 200;
+        let mut handles = Vec::new();
+        for _ in 0..threads {
+            let state = state.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..per {
+                    state.incr("hot", 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(state.counter("hot"), (threads * per) as i64, "[{spec}]");
+        assert!(state.op_count() >= (threads * per) as u64, "[{spec}]");
+    }
+}
+
+// ---------- Queue ----------
+
+#[test]
+fn queue_lease_expiry_redelivers_and_rejects_stale() {
+    for (spec, sub, clock) in backends() {
+        let q = sub.queue;
+        q.send("t", 0);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.visible_len(), 1);
+        let (_, lease1) = q.receive().unwrap();
+        assert!(q.receive().is_none(), "[{spec}] invisible while leased");
+        assert_eq!(q.visible_len(), 0, "[{spec}]");
+        clock.advance(LEASE + Duration::from_secs(1));
+        // Lease expired → visible again (at-least-once).
+        let (_, lease2) = q.receive().unwrap();
+        assert_eq!(q.delivery_count("t"), 2, "[{spec}]");
+        // Stale lease can neither renew nor delete.
+        assert!(!q.renew(&lease1), "[{spec}]");
+        assert!(!q.delete(&lease1), "[{spec}]");
+        // Fresh lease works.
+        assert!(q.renew(&lease2), "[{spec}]");
+        assert!(q.delete(&lease2), "[{spec}]");
+        assert!(q.is_empty(), "[{spec}]");
+    }
+}
+
+#[test]
+fn queue_renewal_keeps_invisible() {
+    for (spec, sub, clock) in backends() {
+        let q = sub.queue;
+        q.send("t", 0);
+        let (_, lease) = q.receive().unwrap();
+        clock.advance(Duration::from_secs(8));
+        assert!(q.renew(&lease), "[{spec}]");
+        clock.advance(Duration::from_secs(8));
+        // 16s since receive but renewed at 8s → still invisible.
+        assert!(q.receive().is_none(), "[{spec}]");
+        clock.advance(Duration::from_secs(3));
+        assert!(q.receive().is_some(), "[{spec}] expired after renewal lapsed");
+    }
+}
+
+#[test]
+fn queue_concurrent_receivers_no_loss_no_duplication() {
+    for (spec, sub, _) in backends() {
+        let q = sub.queue;
+        let total = 96;
+        for i in 0..total {
+            q.send(&format!("m{i}"), (i % 5) as i64);
+        }
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some((body, lease)) = q.receive() {
+                    got.push(body);
+                    assert!(q.delete(&lease));
+                }
+                got
+            }));
+        }
+        let mut all: Vec<String> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), total, "[{spec}] exactly-once while leases held");
+        assert!(q.is_empty(), "[{spec}]");
+    }
+}
+
+#[test]
+fn queue_fifo_within_priority_deterministic() {
+    // The critical-path satellite: same-priority messages (tasks from
+    // the same program line) must pop in enqueue order, not arbitrary
+    // heap order. Pinned on the globally-ordered backends.
+    for (spec, sub, _) in ordered_backends() {
+        let q = sub.queue;
+        for i in 0..20 {
+            q.send(&format!("line2-{i}"), -2);
+        }
+        q.send("line0", 0);
+        q.send("line1", -1);
+        assert_eq!(q.receive().unwrap().0, "line0", "[{spec}] priority first");
+        assert_eq!(q.receive().unwrap().0, "line1", "[{spec}]");
+        for i in 0..20 {
+            let (body, lease) = q.receive().unwrap();
+            assert_eq!(body, format!("line2-{i}"), "[{spec}] FIFO within priority");
+            q.delete(&lease);
+        }
+    }
+}
+
+#[test]
+fn queue_blocking_receive_sees_cross_thread_send() {
+    for (spec, sub, _) in backends() {
+        let q = sub.queue;
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.receive_timeout(Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(20));
+        q.send("x", 0);
+        assert_eq!(h.join().unwrap().unwrap().0, "x", "[{spec}]");
+        assert!(
+            q.receive_timeout(Duration::from_millis(20)).is_none(),
+            "[{spec}] times out empty"
+        );
+    }
+}
+
+// ---------- BlobStore ----------
+
+#[test]
+fn blob_read_after_write_and_accounting() {
+    for (spec, sub, _) in backends() {
+        let blob = sub.blob;
+        let mut handles = Vec::new();
+        for t in 0..8usize {
+            let blob = blob.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..16 {
+                    let key = format!("T[{t},{i}]");
+                    let m = Matrix::from_vec(1, 2, vec![t as f64, i as f64]);
+                    blob.put(t, &key, m).unwrap();
+                    let got = blob.get(t, &key).unwrap();
+                    assert_eq!(got[(0, 1)], i as f64);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(blob.len(), 8 * 16, "[{spec}]");
+        assert!(blob.contains("T[0,0]"), "[{spec}]");
+        assert!(!blob.contains("T[9,9]"), "[{spec}]");
+        assert!(blob.get(0, "T[9,9]").is_err(), "[{spec}]");
+        let stats = blob.stats();
+        // 1×2 f64 tiles = 16 bytes each way per op.
+        assert_eq!(stats.put_ops, 8 * 16, "[{spec}]");
+        assert_eq!(stats.get_ops, 8 * 16, "[{spec}]");
+        assert_eq!(stats.bytes_written, 8 * 16 * 16, "[{spec}]");
+        assert_eq!(stats.bytes_read, 8 * 16 * 16, "[{spec}]");
+        assert_eq!(blob.known_workers().len(), 8, "[{spec}]");
+        assert_eq!(blob.worker_stats(3).put_ops, 16, "[{spec}]");
+        assert_eq!(blob.worker_stats(99).put_ops, 0, "[{spec}]");
+    }
+}
+
+// ---------- End-to-end ----------
+
+#[test]
+fn engine_cholesky_correct_on_every_backend() {
+    for spec in ["strict", "sharded:4"] {
+        let mut rng = Rng::new(17);
+        let a = Matrix::rand_spd(24, &mut rng);
+        let mut cfg = EngineConfig::default();
+        cfg.scaling = ScalingMode::Fixed(4);
+        cfg.job_timeout = Duration::from_secs(120);
+        cfg.substrate = SubstrateConfig::parse(spec).unwrap();
+        let out = drivers::cholesky(&Engine::new(cfg), &a, 8).unwrap();
+        assert!(
+            out.result.matmul_nt(&out.result).max_abs_diff(&a) < 1e-8,
+            "[{spec}] LLᵀ ≠ A"
+        );
+        let r = &out.run.report;
+        assert_eq!(r.completed, r.total_tasks, "[{spec}]");
+        assert!(r.error.is_none(), "[{spec}]");
+    }
+}
+
+#[test]
+fn engine_short_lease_stragglers_safe_on_sharded() {
+    // Redelivery + duplicate execution under the sharded backend:
+    // idempotence must hold exactly as it does on strict.
+    let mut rng = Rng::new(18);
+    let a = Matrix::rand_spd(24, &mut rng);
+    let mut cfg = EngineConfig::default();
+    cfg.scaling = ScalingMode::Fixed(6);
+    cfg.lease = Duration::from_millis(20);
+    cfg.store_latency = Duration::from_millis(8);
+    cfg.job_timeout = Duration::from_secs(120);
+    cfg.substrate = SubstrateConfig::parse("sharded:8").unwrap();
+    let out = drivers::cholesky(&Engine::new(cfg), &a, 8).unwrap();
+    assert!(out.result.matmul_nt(&out.result).max_abs_diff(&a) < 1e-8);
+    let r = &out.run.report;
+    assert_eq!(r.completed, r.total_tasks);
+}

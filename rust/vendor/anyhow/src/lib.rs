@@ -1,0 +1,207 @@
+//! A vendored, offline, API-compatible subset of the `anyhow` crate.
+//!
+//! The build environment for this repository carries no registry
+//! crates, so the workspace depends on this shim by path under the
+//! same crate name. It implements exactly the surface the codebase
+//! uses:
+//!
+//! * [`Error`] — an opaque error with a context chain;
+//! * [`Result<T>`] — alias defaulting the error type;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on both
+//!   `Result` and `Option`;
+//! * [`anyhow!`] / [`bail!`] — format-style constructors;
+//! * `{e}` prints the outermost message, `{e:#}` the whole chain
+//!   colon-separated, `{e:?}` a multi-line report — matching the real
+//!   crate's formatting contract closely enough for tests that assert
+//!   on substrings.
+//!
+//! Deliberately not implemented (unused here): downcasting, backtrace
+//! capture, `ensure!`, `Error::new`/`chain` accessors.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error with an ordered chain of context messages. The most
+/// recently attached context is the outermost message.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Self {
+        Error {
+            msg: msg.to_string(),
+            cause: None,
+        }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error {
+            msg: context.to_string(),
+            cause: Some(Box::new(self)),
+        }
+    }
+
+    fn write_chain(&self, f: &mut fmt::Formatter<'_>, sep: &str) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.cause.as_deref();
+        while let Some(e) = cur {
+            write!(f, "{sep}{}", e.msg)?;
+            cur = e.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{e:#}` — the full chain, outermost first.
+            self.write_chain(f, ": ")
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = self.cause.as_deref();
+            let mut i = 0;
+            while let Some(e) = cur {
+                write!(f, "\n    {i}: {}", e.msg)?;
+                cur = e.cause.as_deref();
+                i += 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` intentionally does NOT implement `std::error::Error`: that
+// is what keeps this blanket conversion coherent alongside the
+// identity `From<Error> for Error`, exactly as in the real crate.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain: Vec<String> = Vec::new();
+        chain.push(e.to_string());
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in chain.into_iter().rev() {
+            err = Some(Error {
+                msg,
+                cause: err.map(Box::new),
+            });
+        }
+        err.expect("chain has at least one entry")
+    }
+}
+
+/// Context attachment for `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Like [`Context::context`], evaluating the message lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i64> {
+        let n: i64 = s.parse().context("not an integer")?;
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("41").unwrap(), 41);
+        let e = parse("x").unwrap_err();
+        assert_eq!(format!("{e}"), "not an integer");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("not an integer: "), "{full}");
+    }
+
+    #[test]
+    fn context_chain_orders_outermost_first() {
+        let base: Error = anyhow!("inner");
+        let e = Err::<(), Error>(base)
+            .context("middle")
+            .with_context(|| format!("line {}", 2))
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "line 2");
+        assert_eq!(format!("{e:#}"), "line 2: middle: inner");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.with_context(|| "missing --flag").unwrap_err();
+        assert_eq!(format!("{e:#}"), "missing --flag");
+        assert_eq!(Some(3u8).context("present").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_returns_formatted() {
+        fn f(x: i64) -> Result<i64> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(format!("{}", f(-2).unwrap_err()), "negative: -2");
+        assert_eq!(f(5).unwrap(), 5);
+    }
+}
