@@ -16,15 +16,14 @@ use numpywren::util::prng::Rng;
 use std::time::Duration;
 
 fn run_once(a: &Matrix, sf: f64) -> anyhow::Result<(f64, f64, usize)> {
-    let mut cfg = EngineConfig::default();
-    cfg.scaling = ScalingMode::Auto {
-        sf,
-        max_workers: 8,
+    let cfg = EngineConfig {
+        scaling: ScalingMode::Auto { sf, max_workers: 8 },
+        idle_timeout: Duration::from_millis(80),
+        provision_period: Duration::from_millis(10),
+        store_latency: Duration::from_micros(300),
+        sample_period: Duration::from_millis(10),
+        ..EngineConfig::default()
     };
-    cfg.idle_timeout = Duration::from_millis(80);
-    cfg.provision_period = Duration::from_millis(10);
-    cfg.store_latency = Duration::from_micros(300);
-    cfg.sample_period = Duration::from_millis(10);
     let out = drivers::cholesky(&Engine::new(cfg), a, 16)?;
     let r = &out.run.report;
     if sf == 1.0 {

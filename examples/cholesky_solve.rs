@@ -31,10 +31,12 @@ fn main() -> anyhow::Result<()> {
     let b = a.matmul(&x_true);
 
     // 1. Distributed Cholesky (the O(n³) step) on the engine.
-    let mut cfg = EngineConfig::default();
-    cfg.scaling = ScalingMode::Auto {
-        sf: 1.0,
-        max_workers: 8,
+    let cfg = EngineConfig {
+        scaling: ScalingMode::Auto {
+            sf: 1.0,
+            max_workers: 8,
+        },
+        ..EngineConfig::default()
     };
     let engine = Engine::new(cfg);
     let out = drivers::cholesky(&engine, &a, block)?;

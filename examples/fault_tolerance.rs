@@ -24,20 +24,22 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(13);
     let a = Matrix::rand_spd(n, &mut rng);
 
-    let mut cfg = EngineConfig::default();
-    cfg.scaling = ScalingMode::Auto {
-        sf: 1.0,
-        max_workers: 8,
+    let cfg = EngineConfig {
+        scaling: ScalingMode::Auto {
+            sf: 1.0,
+            max_workers: 8,
+        },
+        lease: Duration::from_millis(150),
+        idle_timeout: Duration::from_millis(100),
+        provision_period: Duration::from_millis(10),
+        store_latency: Duration::from_millis(1),
+        sample_period: Duration::from_millis(10),
+        failure: Some(FailureSpec {
+            at: Duration::from_millis(100),
+            fraction: 0.8,
+        }),
+        ..EngineConfig::default()
     };
-    cfg.lease = Duration::from_millis(150);
-    cfg.idle_timeout = Duration::from_millis(100);
-    cfg.provision_period = Duration::from_millis(10);
-    cfg.store_latency = Duration::from_millis(1);
-    cfg.sample_period = Duration::from_millis(10);
-    cfg.failure = Some(FailureSpec {
-        at: Duration::from_millis(100),
-        fraction: 0.8,
-    });
 
     let out = drivers::cholesky(&Engine::new(cfg), &a, block)?;
     let l = &out.result;

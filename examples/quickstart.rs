@@ -33,9 +33,11 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(2018);
     let a = Matrix::rand_spd(n, &mut rng);
 
-    let mut cfg = EngineConfig::default();
-    cfg.scaling = ScalingMode::Fixed(workers);
-    cfg.pipeline_width = 2;
+    let cfg = EngineConfig {
+        scaling: ScalingMode::Fixed(workers),
+        pipeline_width: 2,
+        ..EngineConfig::default()
+    };
 
     // Prefer the AOT PJRT path; fall back to native kernels.
     let artifact_dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");

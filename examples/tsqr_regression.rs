@@ -38,9 +38,11 @@ fn main() -> anyhow::Result<()> {
     // w = R⁻¹ z.
     let aug = NativeKernels::hstack(&x, &y)?;
 
-    let mut cfg = EngineConfig::default();
-    cfg.scaling = ScalingMode::Fixed(8);
-    cfg.pipeline_width = 2;
+    let cfg = EngineConfig {
+        scaling: ScalingMode::Fixed(8),
+        pipeline_width: 2,
+        ..EngineConfig::default()
+    };
     let engine = Engine::new(cfg);
     let out = drivers::tsqr(&engine, &aug, block_rows)?;
     let r_aug = &out.result;

@@ -26,21 +26,25 @@ pub fn workload(algo: &str, n: u64, block: usize) -> Workload {
 
 /// Fixed-pool serverless sim run.
 pub fn sim_fixed(w: &Workload, workers: usize, pipeline: usize) -> SimResult {
-    let mut c = SimConfig::default();
-    c.policy = WorkerPolicy::Fixed(workers);
-    c.pipeline_width = pipeline;
+    let c = SimConfig {
+        policy: WorkerPolicy::Fixed(workers),
+        pipeline_width: pipeline,
+        ..SimConfig::default()
+    };
     ServerlessSim::new(w, CostModel::default(), c).run()
 }
 
 /// Auto-scaled serverless sim run.
 pub fn sim_auto(w: &Workload, sf: f64, max_workers: usize, pipeline: usize) -> SimResult {
-    let mut c = SimConfig::default();
-    c.policy = WorkerPolicy::Auto {
-        sf,
-        max_workers,
-        t_timeout: 10.0,
+    let c = SimConfig {
+        policy: WorkerPolicy::Auto {
+            sf,
+            max_workers,
+            t_timeout: 10.0,
+        },
+        pipeline_width: pipeline,
+        ..SimConfig::default()
     };
-    c.pipeline_width = pipeline;
     ServerlessSim::new(w, CostModel::default(), c).run()
 }
 

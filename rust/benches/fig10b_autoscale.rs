@@ -14,20 +14,22 @@ use numpywren::sim::{CostModel, ServerlessSim, SimConfig};
 fn main() {
     let n: u64 = if full_scale() { 262_144 } else { 131_072 };
     let w = workload("cholesky", n, 4096);
-    let mut cfg = SimConfig::default();
-    cfg.policy = WorkerPolicy::Auto {
-        sf: 1.0,
-        max_workers: 10_000,
-        t_timeout: 10.0,
+    let cfg = SimConfig {
+        policy: WorkerPolicy::Auto {
+            sf: 1.0,
+            max_workers: 10_000,
+            t_timeout: 10.0,
+        },
+        pipeline_width: 1,
+        limit_tasks: Some(5000.min(w.num_tasks())),
+        ..SimConfig::default()
     };
-    cfg.pipeline_width = 1;
-    cfg.limit_tasks = Some(5000.min(w.num_tasks()));
     let r = ServerlessSim::new(&w, CostModel::default(), cfg).run();
     println!("# Figure 10b — autoscaling trace (first 5000 instructions, sf=1, pw=1), N={n}");
     println!("{:>9} {:>9} {:>9}", "t(s)", "pending", "workers");
     let step = (r.samples.len() / 40).max(1);
     for s in r.samples.iter().step_by(step) {
-        let bar = "#".repeat((s.workers / 8).max(1).min(70));
+        let bar = "#".repeat((s.workers / 8).clamp(1, 70));
         println!("{:>9.0} {:>9} {:>9} {bar}", s.t, s.pending, s.workers);
     }
     println!(

@@ -29,7 +29,7 @@ fn main() {
             let dt = s.t - prev.0;
             if dt > 0.0 {
                 let rate = (s.flops_done - prev.1) / dt / 1e9;
-                let bar = "#".repeat(((rate / (rate3 / 1e9) * 40.0) as usize).min(60).max(1));
+                let bar = "#".repeat(((rate / (rate3 / 1e9) * 40.0) as usize).clamp(1, 60));
                 println!("  t={:>7.0}s {:>9.1} {bar}", s.t, rate);
             }
             prev = (s.t, s.flops_done);

@@ -71,10 +71,12 @@ fn main() {
     for workers in [1usize, 4, 8] {
         let mut rng = Rng::new(77);
         let a = Matrix::rand_spd(4 * grid, &mut rng); // B = 4
-        let mut cfg = EngineConfig::default();
-        cfg.scaling = ScalingMode::Fixed(workers);
-        cfg.sample_period = std::time::Duration::from_millis(50);
-        cfg.job_timeout = std::time::Duration::from_secs(300);
+        let cfg = EngineConfig {
+            scaling: ScalingMode::Fixed(workers),
+            sample_period: std::time::Duration::from_millis(50),
+            job_timeout: std::time::Duration::from_secs(300),
+            ..EngineConfig::default()
+        };
         let engine = Engine::new(cfg);
         let sw = Stopwatch::start();
         let out = drivers::cholesky(&engine, &a, 4).unwrap();

@@ -24,8 +24,19 @@ use numpywren::util::timer::Stopwatch;
 use std::sync::Arc;
 use std::time::Duration;
 
-const WORKERS: [usize; 4] = [1, 4, 16, 64];
+const WORKERS_FULL: [usize; 4] = [1, 4, 16, 64];
+const WORKERS_QUICK: [usize; 2] = [1, 4];
 const BACKENDS: [&str; 2] = ["strict", "sharded:16"];
+
+/// `NUMPYWREN_BENCH_QUICK=1` (the CI smoke step) trims the worker
+/// grid; the full grid wants a many-core box.
+fn worker_counts() -> &'static [usize] {
+    if std::env::var("NUMPYWREN_BENCH_QUICK").as_deref() == Ok("1") {
+        &WORKERS_QUICK
+    } else {
+        &WORKERS_FULL
+    }
+}
 
 fn substrate(spec: &str) -> Substrate {
     Substrate::build(
@@ -104,11 +115,13 @@ fn bench_blob(spec: &str, workers: usize) -> f64 {
 fn bench_engine(spec: &str, workers: usize) -> (f64, f64) {
     let mut rng = Rng::new(0xBEEF);
     let a = Matrix::rand_spd(96, &mut rng);
-    let mut cfg = EngineConfig::default();
-    cfg.scaling = ScalingMode::Fixed(workers);
-    cfg.substrate = SubstrateConfig::parse(spec).unwrap();
-    cfg.sample_period = Duration::from_millis(50);
-    cfg.job_timeout = Duration::from_secs(300);
+    let cfg = EngineConfig {
+        scaling: ScalingMode::Fixed(workers),
+        substrate: SubstrateConfig::parse(spec).unwrap(),
+        sample_period: Duration::from_millis(50),
+        job_timeout: Duration::from_secs(300),
+        ..EngineConfig::default()
+    };
     let sw = Stopwatch::start();
     let out = drivers::cholesky(&Engine::new(cfg), &a, 8).unwrap();
     let wall = sw.secs();
@@ -130,10 +143,10 @@ fn main() {
     let mut points: Vec<Point> = Vec::new();
     println!(
         "# §Perf substrate contention — raw ops/sec and engine wall-clock, {:?} workers",
-        WORKERS
+        worker_counts()
     );
     for backend in BACKENDS {
-        for workers in WORKERS {
+        for &workers in worker_counts() {
             let kv = bench_kv(backend, workers);
             let queue = bench_queue(backend, workers);
             let blob = bench_blob(backend, workers);
@@ -156,7 +169,7 @@ fn main() {
     }
 
     // Speedup summary at the top worker count.
-    let top = *WORKERS.last().unwrap();
+    let top = *worker_counts().last().unwrap();
     let find = |b: &str| points.iter().find(|p| p.backend == b && p.workers == top);
     if let (Some(s), Some(sh)) = (find("strict"), find("sharded:16")) {
         println!(
@@ -171,7 +184,7 @@ fn main() {
 
     // Hand-rolled JSON (no serde in the offline crate set).
     let mut json = String::from("{\n  \"bench\": \"perf_substrate_contention\",\n");
-    let workers_list: Vec<String> = WORKERS.iter().map(|w| w.to_string()).collect();
+    let workers_list: Vec<String> = worker_counts().iter().map(|w| w.to_string()).collect();
     json.push_str(&format!(
         "  \"workers\": [{}],\n  \"results\": [\n",
         workers_list.join(", ")

@@ -11,7 +11,7 @@
 //! flag parser with the same ergonomics.)
 
 use crate::baselines::{dask_run, machines_to_fit, scalapack_run, Algorithm};
-use crate::config::{EngineConfig, ScalingMode};
+use crate::config::{EngineConfig, ScalingMode, SubstrateConfig};
 use crate::drivers;
 use crate::engine::Engine;
 use crate::kernels::KernelExecutor;
@@ -77,11 +77,21 @@ COMMANDS:
   run       execute an algorithm on the real engine
             --algo {cholesky|gemm|tsqr|lu|qr|bdfac} --n DIM --block B
             [--workers K | --sf F --max-workers K] [--pipeline W]
-            [--substrate strict|sharded[:N]] [--artifacts DIR]
+            [--substrate SPEC] [--artifacts DIR]
             [--set key=value]...
-  simulate  paper-scale discrete-event simulation
+  simulate  paper-scale discrete-event simulation (runs on the same
+            substrate backends as the engine, virtual-time clock)
             --algo NAME --n DIM --block B --workers K [--sf F] [--pipeline W]
+            [--substrate SPEC]
             [--compare-scalapack true] [--compare-dask true]
+
+            SPEC is strict | sharded[:N], optionally with a chaos
+            decorator: sharded:16+chaos(err=0.01,lat=lognorm:5ms).
+            Chaos clauses: err/drop/dup (probabilities),
+            lat|read_lat|write_lat|recv_lat|kv_lat (D | fixed:D |
+            uniform:LO:HI | lognorm:MED[:SIGMA]), straggle=FRAC:MULT,
+            seed=N. Chaos specs contain commas — pass them via
+            --substrate (not --set, which splits on commas).
   analyze   DAG statistics via the LAmbdaPACK analyzer
             (--algo NAME | --program FILE.lp) --grid N
   program   show a program's parsed form + compiled size
@@ -245,9 +255,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         },
         None => crate::sim::serverless::WorkerPolicy::Fixed(workers),
     };
+    let substrate = match args.get("substrate") {
+        Some(spec) => SubstrateConfig::parse(spec)?,
+        None => SubstrateConfig::strict(),
+    };
     let sc = SimConfig {
         policy,
         pipeline_width: args.num("pipeline", 1)?,
+        substrate,
         ..SimConfig::default()
     };
     let r = ServerlessSim::new(&w, model, sc).run();
@@ -357,7 +372,6 @@ mod tests {
         s.split_whitespace().map(|x| x.to_string()).collect()
     }
 
-
     #[test]
     fn parse_flags() {
         let a = Args::parse(&argv("run --algo cholesky --n 128")).unwrap();
@@ -434,10 +448,35 @@ mod tests {
     }
 
     #[test]
+    fn tiny_run_executes_under_chaos() {
+        // Fault injection end-to-end from the CLI: transient blob
+        // errors + shaped latency, recovered by retries and leases.
+        run_cli(&argv(
+            "run --algo cholesky --n 24 --block 8 --workers 3 \
+             --substrate sharded:4+chaos(err=0.05,lat=fixed:100us,seed=7)",
+        ))
+        .unwrap();
+        assert!(run_cli(&argv(
+            "run --algo cholesky --n 24 --block 8 --workers 2 \
+             --substrate sharded:4+chaos(err=oops)",
+        ))
+        .is_err());
+    }
+
+    #[test]
     fn tiny_simulate_executes() {
         run_cli(&argv(
             "simulate --algo cholesky --n 8192 --block 1024 --workers 16 \
              --compare-scalapack true --compare-dask true",
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn tiny_simulate_executes_with_chaos_substrate() {
+        run_cli(&argv(
+            "simulate --algo cholesky --n 8192 --block 1024 --workers 16 \
+             --substrate strict+chaos(drop=0.05,dup=0.05,seed=3)",
         ))
         .unwrap();
     }

@@ -2,6 +2,7 @@
 //! `key=value` overrides (config files and CLI flags share the same
 //! parser — the launcher's config system).
 
+use crate::storage::chaos::ChaosConfig;
 use anyhow::{bail, Context, Result};
 use std::time::Duration;
 
@@ -46,10 +47,14 @@ pub enum SubstrateBackend {
 pub const DEFAULT_SHARDS: usize = 16;
 
 /// Substrate selection, settable as `substrate=strict` or
-/// `substrate=sharded[:N]`.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// `substrate=sharded[:N]`, optionally decorated with a chaos layer:
+/// `substrate=sharded:16+chaos(err=0.01,lat=lognorm:5ms)` (see
+/// [`crate::storage::chaos`] for the clause grammar).
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SubstrateConfig {
     pub backend: SubstrateBackend,
+    /// Optional fault/latency decorator layer over the backend family.
+    pub chaos: Option<ChaosConfig>,
 }
 
 impl Default for SubstrateConfig {
@@ -58,6 +63,7 @@ impl Default for SubstrateConfig {
             backend: SubstrateBackend::Sharded {
                 shards: DEFAULT_SHARDS,
             },
+            chaos: None,
         }
     }
 }
@@ -66,22 +72,37 @@ impl SubstrateConfig {
     pub fn strict() -> Self {
         SubstrateConfig {
             backend: SubstrateBackend::Strict,
+            chaos: None,
         }
     }
 
     pub fn sharded(shards: usize) -> Self {
         SubstrateConfig {
             backend: SubstrateBackend::Sharded { shards },
+            chaos: None,
         }
     }
 
-    /// Parse `strict` | `sharded` | `sharded:N`.
+    /// Parse `strict` | `sharded` | `sharded:N`, each optionally
+    /// followed by `+chaos(key=value,…)`.
     pub fn parse(spec: &str) -> Result<Self> {
-        match spec.split_once(':') {
-            None => match spec {
-                "strict" => Ok(Self::strict()),
-                "sharded" => Ok(Self::default()),
-                _ => bail!("bad substrate spec `{spec}` (strict | sharded[:N])"),
+        let (base, chaos) = match spec.split_once('+') {
+            None => (spec, None),
+            Some((base, decorator)) => {
+                let body = decorator
+                    .strip_prefix("chaos(")
+                    .and_then(|r| r.strip_suffix(')'))
+                    .with_context(|| {
+                        format!("bad substrate decorator `{decorator}` (chaos(k=v,…))")
+                    })?;
+                (base, Some(ChaosConfig::parse(body)?))
+            }
+        };
+        let mut cfg = match base.split_once(':') {
+            None => match base {
+                "strict" => Self::strict(),
+                "sharded" => Self::default(),
+                _ => bail!("bad substrate spec `{base}` (strict | sharded[:N][+chaos(…)])"),
             },
             Some(("sharded", n)) => {
                 let shards: usize = n
@@ -90,9 +111,25 @@ impl SubstrateConfig {
                 if shards == 0 {
                     bail!("substrate shard count must be >= 1");
                 }
-                Ok(Self::sharded(shards))
+                Self::sharded(shards)
             }
-            Some(_) => bail!("bad substrate spec `{spec}` (strict | sharded[:N])"),
+            Some(_) => bail!("bad substrate spec `{base}` (strict | sharded[:N][+chaos(…)])"),
+        };
+        cfg.chaos = chaos;
+        Ok(cfg)
+    }
+
+    /// CI/test hook: `NUMPYWREN_SUBSTRATE` overrides the default
+    /// substrate for everything that starts from
+    /// [`EngineConfig::default`], so one test binary can run against
+    /// every backend family (the CI substrate matrix). Panics on an
+    /// invalid spec — a typo in CI must fail loudly, not silently fall
+    /// back to the default.
+    pub fn from_env_or_default() -> Self {
+        match std::env::var("NUMPYWREN_SUBSTRATE") {
+            Ok(spec) if !spec.trim().is_empty() => Self::parse(spec.trim())
+                .unwrap_or_else(|e| panic!("bad NUMPYWREN_SUBSTRATE `{spec}`: {e:#}")),
+            _ => Self::default(),
         }
     }
 }
@@ -140,7 +177,7 @@ impl Default for EngineConfig {
             failure: None,
             sample_period: Duration::from_millis(20),
             job_timeout: Duration::from_secs(600),
-            substrate: SubstrateConfig::default(),
+            substrate: SubstrateConfig::from_env_or_default(),
         }
     }
 }
@@ -148,7 +185,8 @@ impl Default for EngineConfig {
 impl EngineConfig {
     /// Apply a `key=value` override. Durations are given in
     /// (fractional) seconds; `scaling` is `fixed:N` or `auto:SF:MAX`;
-    /// `substrate` is `strict` or `sharded[:N]`.
+    /// `substrate` is `strict` or `sharded[:N]`, optionally with a
+    /// `+chaos(…)` decorator clause.
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
         let secs = |v: &str| -> Result<Duration> {
             Ok(Duration::from_secs_f64(
@@ -245,14 +283,16 @@ mod tests {
 
     #[test]
     fn substrate_specs_parse() {
-        let mut c = EngineConfig::default();
+        // The *pure* default (EngineConfig::default honors the
+        // NUMPYWREN_SUBSTRATE CI hook, so assert on SubstrateConfig).
         assert_eq!(
-            c.substrate.backend,
+            SubstrateConfig::default().backend,
             SubstrateBackend::Sharded {
                 shards: DEFAULT_SHARDS
             },
             "sharded is the default"
         );
+        let mut c = EngineConfig::default();
         c.set("substrate", "strict").unwrap();
         assert_eq!(c.substrate.backend, SubstrateBackend::Strict);
         c.set("substrate", "sharded:4").unwrap();
@@ -267,6 +307,31 @@ mod tests {
         assert!(c.set("substrate", "sharded:0").is_err());
         assert!(c.set("substrate", "sharded:x").is_err());
         assert!(c.set("substrate", "redis").is_err());
+    }
+
+    #[test]
+    fn substrate_chaos_decorator_parses() {
+        let c = SubstrateConfig::parse("sharded:4+chaos(err=0.01,drop=0.05,seed=7)").unwrap();
+        assert_eq!(c.backend, SubstrateBackend::Sharded { shards: 4 });
+        let chaos = c.chaos.expect("chaos layer");
+        assert_eq!(chaos.err, 0.01);
+        assert_eq!(chaos.drop, 0.05);
+        assert_eq!(chaos.seed, 7);
+        // Empty clause body → a default (no-op) layer, still wrapped.
+        let c = SubstrateConfig::parse("strict+chaos()").unwrap();
+        assert_eq!(c.backend, SubstrateBackend::Strict);
+        assert!(c.chaos.is_some());
+        assert!(SubstrateConfig::parse("strict").unwrap().chaos.is_none());
+        assert!(SubstrateConfig::parse("strict+noise(err=1)").is_err());
+        assert!(SubstrateConfig::parse("strict+chaos(err=2)").is_err());
+        assert!(SubstrateConfig::parse("strict+chaos(err=0.1").is_err());
+        assert!(SubstrateConfig::parse("bogus+chaos(err=0.1)").is_err());
+        // Via the EngineConfig override path, as a config file would.
+        let mut e = EngineConfig::default();
+        e.set("substrate", "sharded:8+chaos(lat=uniform:1ms:2ms,straggle=0.2:8)")
+            .unwrap();
+        assert_eq!(e.substrate.backend, SubstrateBackend::Sharded { shards: 8 });
+        assert!(e.substrate.chaos.unwrap().straggler_frac > 0.0);
     }
 
     #[test]

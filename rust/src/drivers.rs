@@ -285,8 +285,10 @@ mod tests {
     use crate::util::prng::Rng;
 
     fn engine(workers: usize) -> Engine {
-        let mut cfg = EngineConfig::default();
-        cfg.scaling = crate::config::ScalingMode::Fixed(workers);
+        let cfg = EngineConfig {
+            scaling: crate::config::ScalingMode::Fixed(workers),
+            ..EngineConfig::default()
+        };
         Engine::new(cfg)
     }
 

@@ -21,6 +21,7 @@ use crate::lambdapack::interp::{count_nodes, Env};
 use crate::linalg::matrix::Matrix;
 use crate::metrics::{MetricsHub, Sample, TaskRecord};
 use crate::provisioner::{run_provisioner, WorkerPool};
+use crate::storage::chaos::{blob_put_with_retry, with_blob_retry, CLIENT_BLOB_RETRIES};
 use crate::storage::{BlobStore, KvState, Queue, StoreStats, Substrate};
 use crate::util::prng::Rng;
 use anyhow::{bail, Context, Result};
@@ -72,11 +73,12 @@ pub struct RunOutput {
 }
 
 impl RunOutput {
-    /// Fetch an output tile by location.
+    /// Fetch an output tile by location. The client has no lease to
+    /// fall back on, so transient (chaos-injected) faults get a deep
+    /// inline retry budget; a genuinely missing tile errors at once.
     pub fn tile(&self, matrix: &str, idx: &[i64]) -> Result<Arc<Matrix>> {
         let loc = Loc::new(matrix, idx.to_vec());
-        self.store
-            .get(CLIENT_ID, &loc.key())
+        with_blob_retry(CLIENT_BLOB_RETRIES, || self.store.get(CLIENT_ID, &loc.key()))
             .with_context(|| format!("output tile {loc} missing"))
     }
 }
@@ -122,8 +124,21 @@ impl Engine {
         let metrics = MetricsHub::new();
 
         // Client: seed input tiles, then enqueue the root tasks.
+        // Seeding retries transient chaos faults inline — there is no
+        // redelivery to recover a failed client put.
+        let chaos_on = self.cfg.substrate.chaos.is_some();
         for (loc, tile) in inputs {
-            store.put(CLIENT_ID, &loc.key(), tile)?;
+            if chaos_on {
+                blob_put_with_retry(
+                    store.as_ref(),
+                    CLIENT_BLOB_RETRIES,
+                    CLIENT_ID,
+                    &loc.key(),
+                    tile,
+                )?;
+            } else {
+                store.put(CLIENT_ID, &loc.key(), tile)?;
+            }
         }
         let roots = analyzer.roots()?;
         if roots.is_empty() {

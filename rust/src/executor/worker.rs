@@ -19,11 +19,25 @@ use crate::executor::{propagate, status_key, JobContext};
 use crate::lambdapack::analysis::ConcreteTask;
 use crate::lambdapack::interp::Node;
 use crate::linalg::matrix::Matrix;
+use crate::storage::chaos::{
+    blob_put_with_retry, is_transient, with_blob_retry, WORKER_BLOB_RETRIES,
+};
 use crate::storage::{status, BlobStore, KvState, Queue};
+use anyhow::Result;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Tile write with the worker's transient-fault retry budget. Without
+/// a chaos layer no transient failures exist — skip the retry
+/// machinery (and its per-attempt clone) on that hot path.
+fn put_with_retry(ctx: &JobContext, worker: usize, key: &str, tile: Matrix) -> Result<()> {
+    if ctx.cfg.substrate.chaos.is_none() {
+        return ctx.store.put(worker, key, tile);
+    }
+    blob_put_with_retry(ctx.store.as_ref(), WORKER_BLOB_RETRIES, worker, key, tile)
+}
 
 /// Why a worker exited.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -192,7 +206,8 @@ fn read_stage(
             let mut bytes = 0u64;
             let mut failed = None;
             for loc in &task.reads {
-                match ctx.store.get(params.id, &loc.key()) {
+                match with_blob_retry(WORKER_BLOB_RETRIES, || ctx.store.get(params.id, &loc.key()))
+                {
                     Ok(t) => {
                         bytes += (t.rows() * t.cols() * 8) as u64;
                         tiles.push(t);
@@ -204,10 +219,19 @@ fn read_stage(
                 }
             }
             if let Some(e) = failed {
+                ctx.metrics.task_finished(&node.id(), &task.fn_name, params.id, start, 0, 0, 0);
+                if is_transient(&e) {
+                    // Persistent injected faults: abandon the task —
+                    // drop the lease from the registry so renewal
+                    // stops, the visibility timeout expires, and the
+                    // queue redelivers (§4.1 recovery, same path as a
+                    // worker death).
+                    registry.remove(&node.id());
+                    continue;
+                }
                 // Dependency protocol guarantees presence; a miss is a
                 // protocol bug — surface it.
                 ctx.report_error(&node, &e);
-                ctx.metrics.task_finished(&node.id(), &task.fn_name, params.id, start, 0, 0, 0);
                 registry.remove(&node.id());
                 continue;
             }
@@ -298,11 +322,36 @@ fn write_stage(
         let mut bytes_written = 0u64;
         if !item.skip_write {
             debug_assert_eq!(item.outputs.len(), item.task.writes.len());
+            let mut failed = None;
             for (loc, out) in item.task.writes.iter().zip(item.outputs) {
-                bytes_written += (out.rows() * out.cols() * 8) as u64;
-                if let Err(e) = ctx.store.put(worker_id, &loc.key(), out) {
-                    ctx.report_error(&item.node, &e);
+                let bytes = (out.rows() * out.cols() * 8) as u64;
+                if let Err(e) = put_with_retry(ctx, worker_id, &loc.key(), out) {
+                    failed = Some(e);
+                    break;
                 }
+                bytes_written += bytes;
+            }
+            if let Some(e) = failed {
+                ctx.metrics.task_finished(
+                    &item.node.id(),
+                    &item.task.fn_name,
+                    worker_id,
+                    item.start,
+                    0,
+                    item.bytes_read,
+                    bytes_written,
+                );
+                if is_transient(&e) {
+                    // Abandon mid-write: already-written tiles are SSA
+                    // (identical on re-execution), so letting the lease
+                    // expire and the task redeliver is safe — no
+                    // completion CAS, no propagation, no delete here.
+                    registry.remove(&item.node.id());
+                    continue;
+                }
+                ctx.report_error(&item.node, &e);
+                registry.remove(&item.node.id());
+                continue;
             }
         }
         // Exactly one completer wins the CAS and owns the "completed"

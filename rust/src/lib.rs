@@ -16,8 +16,11 @@
 //!   Redis-like atomic [`storage::KvState`] — with two backend
 //!   families behind them: the sharded high-concurrency default
 //!   (N-way key-hash shards, work-stealing queue) and the single-lock
-//!   `strict` test backend (globally ordered, SSA-policing). Selected
-//!   by [`config::SubstrateConfig`] (`--substrate strict|sharded[:N]`).
+//!   `strict` test backend (globally ordered, SSA-policing), plus a
+//!   composable chaos decorator layer ([`storage::chaos`]) injecting
+//!   seeded transient faults, message drops/dups, shaped latency, and
+//!   stragglers. Selected by [`config::SubstrateConfig`]
+//!   (`--substrate strict|sharded[:N][+chaos(…)]`).
 //! * [`executor`] — the stateless worker: poll → read → compute → write
 //!   → runtime-state update → child enqueue, with lease renewal,
 //!   pipelining, and self-termination at the runtime limit. Workers
@@ -57,7 +60,6 @@ pub mod runtime;
 pub mod sim;
 pub mod storage;
 pub mod util;
-
 
 pub use config::EngineConfig;
 pub use engine::{Engine, EngineReport};

@@ -1,16 +1,35 @@
-//! Event-driven simulation of the numpywren execution model.
+//! Event-driven simulation of the numpywren execution model — running
+//! on the *real substrate*.
 //!
-//! Faithfully mirrors the real engine's semantics at task granularity:
-//! elastic workers with cold starts, runtime-limit recycling, the §4.2
-//! autoscaling policy and idle expiry, lease-based failure recovery,
-//! and the read/compute/write pipeline (pipeline width = concurrent
-//! tasks per worker; the core serializes compute while IO overlaps —
-//! exactly the worker implementation in `executor/worker.rs`).
+//! The simulator shares one queue/lease/state implementation with the
+//! engine instead of keeping a parallel one: tasks live in a
+//! [`Queue`](crate::storage::Queue) backend driven by a virtual
+//! [`TestClock`], dependency counters live in a
+//! [`KvState`](crate::storage::KvState) backend updated through the
+//! same lazy-init + edge-guarded-decrement protocol as
+//! `executor::propagate`, and failure recovery is *actual* lease
+//! expiry: a dead worker's leases stop being renewed, the visibility
+//! timeout passes in virtual time, and the queue redelivers. The
+//! [`SubstrateConfig`] in [`SimConfig`] picks the backend family and
+//! may stack a `+chaos(…)` decorator (message drops/dups — latency
+//! shaping is skipped; the cost model owns time).
+//!
+//! On top of that substrate the sim mirrors the engine at task
+//! granularity: elastic workers with cold starts, runtime-limit
+//! recycling, the §4.2 autoscaling policy and idle expiry, background
+//! lease renewal, and the read/compute/write pipeline (pipeline width
+//! = concurrent tasks per worker; the core serializes compute while IO
+//! overlaps — exactly the worker implementation in
+//! `executor/worker.rs`).
 
+use crate::config::SubstrateConfig;
 use crate::sim::cost::CostModel;
 use crate::sim::workload::Workload;
+use crate::storage::{KvState as _, Lease, Queue as _, Substrate, TestClock};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::sync::Arc;
+use std::time::Duration;
 
 /// Worker-pool policy.
 #[derive(Clone, Copy, Debug)]
@@ -40,6 +59,10 @@ pub struct SimConfig {
     pub limit_tasks: Option<usize>,
     /// Autoscaler control period.
     pub provision_period: f64,
+    /// Which substrate backend the sim's queue/state run on. Defaults
+    /// to `strict` (single global order → bit-reproducible runs); add
+    /// `+chaos(drop=…,dup=…)` for message-level fault injection.
+    pub substrate: SubstrateConfig,
 }
 
 impl Default for SimConfig {
@@ -51,6 +74,7 @@ impl Default for SimConfig {
             sample_dt: 1.0,
             limit_tasks: None,
             provision_period: 1.0,
+            substrate: SubstrateConfig::strict(),
         }
     }
 }
@@ -83,6 +107,9 @@ pub struct SimResult {
     /// Mean bytes read per worker spawned (Figure 7's per-machine
     /// network bytes).
     pub bytes_read_per_worker: f64,
+    /// Total queue deliveries — under faults this exceeds `tasks_done`
+    /// (at-least-once redelivery made visible).
+    pub deliveries: usize,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -90,11 +117,15 @@ enum Event {
     WorkerUp(usize),
     WorkerDeath(usize, u64),
     TaskDone { task: u32, worker: usize },
+    /// Background lease renewal (§4.1) for an in-flight task.
+    RenewLease { task: u32, worker: usize },
     IdleCheck(usize, u64),
     Provision,
     Kill,
     Sample,
-    Requeue(u32),
+    /// Re-poll the queue after a visibility timeout has passed
+    /// (redelivery of dead workers' or dropped deliveries' messages).
+    Wake,
 }
 
 #[derive(PartialEq)]
@@ -130,9 +161,17 @@ struct Worker {
     idle_since: f64,
     alive_secs: f64,
     bytes_read: f64,
-    /// Tasks in flight (for failure re-queue).
-    inflight: Vec<u32>,
+    /// Tasks in flight with their queue leases. A dead worker's
+    /// leases are simply dropped — expiry redelivers (§4.1).
+    inflight: Vec<(u32, Lease)>,
 }
+
+/// Virtual-time cap — a livelock safety net (tasks larger than the
+/// runtime limit redeliver forever; the paper's §4 answer is "choose
+/// task coarseness to fit the time interval", ours is to bail with
+/// partial progress).
+const TIME_CAP: f64 = 30.0 * 86_400.0;
+const EPS: f64 = 1e-6;
 
 /// The simulator.
 pub struct ServerlessSim<'a> {
@@ -156,14 +195,27 @@ impl<'a> ServerlessSim<'a> {
         let n = dag.num_nodes();
         let total_target = self.config.limit_tasks.unwrap_or(n).min(n);
         let pw = self.config.pipeline_width.max(1);
+        let lease_secs = self.model.lease.max(1e-3);
+        let renew_period = lease_secs * 2.0 / 3.0;
 
-        let mut parents_left: Vec<u32> = dag.num_parents.clone();
+        // The shared substrate, on a virtual clock the event loop
+        // advances. Chaos latency shaping is disabled (`build_sim`);
+        // drop/dup fault injection still applies.
+        let clock = Arc::new(TestClock::default());
+        let sub = Substrate::build_sim(
+            &self.config.substrate,
+            Duration::from_secs_f64(lease_secs),
+            clock.clone(),
+        );
+        let queue = sub.queue;
+        let state = sub.state;
+        let mut clock_at = Duration::ZERO;
+
         let mut completed = vec![false; n];
-        // Ready queue: (priority, task) — deeper program lines last
-        // (factorization pivots first), matching the engine.
-        let mut ready: BinaryHeap<(i64, std::cmp::Reverse<u32>)> = BinaryHeap::new();
+        // Seed the root tasks exactly as the engine does.
         for r in dag.roots() {
-            ready.push((task_priority(dag, r), std::cmp::Reverse(r)));
+            state.init_counter(&format!("deps:{r}"), 0);
+            queue.send(&r.to_string(), task_priority(dag, r));
         }
 
         let mut heap: BinaryHeap<Scheduled> = BinaryHeap::new();
@@ -217,13 +269,11 @@ impl<'a> ServerlessSim<'a> {
 
         let mut now = 0.0f64;
         let mut done_count = 0usize;
-        // Livelock guard: a task whose service time exceeds the
-        // runtime limit redelivers forever (the paper's §4: "choose
-        // the coarseness of tasks such that many tasks can be
-        // successfully completed in the allocated time interval").
-        // Cap total requeues and bail with partial progress.
-        let mut requeues = 0usize;
-        let requeue_budget = 50 * n + 10_000;
+        // At-least-once delivery budget: redelivery under faults is
+        // normal, unbounded redelivery is livelock — bail with partial
+        // progress.
+        let mut deliveries = 0usize;
+        let delivery_budget = 50 * n + 10_000;
         let mut flops_done = 0.0f64;
         let mut bytes_read = 0.0f64;
         let mut bytes_written = 0.0f64;
@@ -231,9 +281,12 @@ impl<'a> ServerlessSim<'a> {
         let mut running = 0usize;
         let mut samples = Vec::new();
         let mut peak_workers = 0usize;
+        // At most one pending Wake at a time.
+        let mut wake_until = 0.0f64;
 
-        // Assign ready tasks to free slots. Aggregate-bandwidth cap:
-        // effective per-worker bw shrinks when the fleet exceeds it.
+        // Lease deliveries from the shared queue onto free worker
+        // slots. Aggregate-bandwidth cap: effective per-worker bw
+        // shrinks when the fleet exceeds it.
         macro_rules! try_assign {
             () => {{
                 let live = workers.iter().filter(|w| w.up).count();
@@ -245,7 +298,10 @@ impl<'a> ServerlessSim<'a> {
                 } else {
                     1.0
                 };
-                'outer: while !ready.is_empty() {
+                'assign: loop {
+                    if deliveries > delivery_budget {
+                        break 'assign;
+                    }
                     // Pick the first up worker with a free slot,
                     // preferring the least-backlogged core.
                     let mut best: Option<usize> = None;
@@ -261,10 +317,27 @@ impl<'a> ServerlessSim<'a> {
                             };
                         }
                     }
-                    let Some(widx) = best else { break 'outer };
-                    let (_, std::cmp::Reverse(task)) = ready.pop().unwrap();
+                    let Some(widx) = best else { break 'assign };
+                    // A lease from the shared queue backend (chaos may
+                    // swallow the delivery — that is a recoverable lost
+                    // message, handled by the Wake path below).
+                    let Some((body, lease)) = queue.receive() else {
+                        break 'assign;
+                    };
+                    deliveries += 1;
+                    let task: u32 = match body.parse() {
+                        Ok(t) => t,
+                        Err(_) => {
+                            queue.delete(&lease);
+                            continue;
+                        }
+                    };
                     let ti = task as usize;
                     if completed[ti] {
+                        // Duplicate delivery of a finished task
+                        // (at-least-once): delete and move on, as the
+                        // engine's skip path does.
+                        queue.delete(&lease);
                         continue;
                     }
                     let c = &costs[ti];
@@ -281,7 +354,7 @@ impl<'a> ServerlessSim<'a> {
                     w.core_free_at = compute_end;
                     let finish = compute_end + write_t;
                     w.slots_free -= 1;
-                    w.inflight.push(task);
+                    w.inflight.push((task, lease));
                     w.bytes_read += c.bytes_in;
                     busy += compute_t;
                     bytes_read += c.bytes_in;
@@ -293,18 +366,41 @@ impl<'a> ServerlessSim<'a> {
                         finish,
                         Event::TaskDone { task, worker: widx },
                     );
+                    push(
+                        &mut heap,
+                        &mut seq,
+                        now + renew_period,
+                        Event::RenewLease { task, worker: widx },
+                    );
+                }
+                // Messages that exist but are invisible and unowned
+                // (dead workers' leases, chaos-dropped deliveries)
+                // resurface when their visibility timeout expires —
+                // poll again then.
+                let inflight_total: usize =
+                    workers.iter().map(|w| w.inflight.len()).sum();
+                if queue.len() > inflight_total && wake_until <= now {
+                    wake_until = now + lease_secs + EPS;
+                    push(&mut heap, &mut seq, wake_until, Event::Wake);
                 }
             }};
         }
 
         while done_count < total_target {
-            if requeues > requeue_budget {
-                break;
+            if deliveries > delivery_budget || now > TIME_CAP {
+                break; // livelock safety net
             }
             let Some(Scheduled(t, _, ev)) = heap.pop() else {
-                break; // deadlock — shouldn't happen
+                break; // no events left — deadlock, shouldn't happen
             };
             now = t;
+            // Advance the substrate's virtual clock to match event time
+            // (lease expiry happens *in here*, not in wall time).
+            let target = Duration::from_secs_f64(now.max(0.0));
+            if target > clock_at {
+                clock.advance(target - clock_at);
+                clock_at = target;
+            }
             match ev {
                 Event::WorkerUp(id) => {
                     booting = booting.saturating_sub(1);
@@ -329,7 +425,6 @@ impl<'a> ServerlessSim<'a> {
                     try_assign!();
                 }
                 Event::WorkerDeath(id, epoch) => {
-                    let requeue_at = now + self.model.lease;
                     let w = &mut workers[id];
                     if !w.up || w.epoch != epoch {
                         continue;
@@ -337,13 +432,16 @@ impl<'a> ServerlessSim<'a> {
                     w.up = false;
                     w.epoch += 1;
                     w.alive_secs += now - w.up_at;
-                    // In-flight tasks recover via lease expiry.
+                    // In-flight leases stop being renewed; the
+                    // visibility timeout expires and the shared queue
+                    // redelivers — §4.1 recovery, no side channel.
                     let inflight = std::mem::take(&mut w.inflight);
                     running -= inflight.len();
                     w.slots_free = pw;
                     w.core_free_at = 0.0;
-                    for task in inflight {
-                        push(&mut heap, &mut seq, requeue_at, Event::Requeue(task));
+                    if wake_until <= now {
+                        wake_until = now + lease_secs + EPS;
+                        push(&mut heap, &mut seq, wake_until, Event::Wake);
                     }
                     // Fixed pools keep their size: immediate re-invocation
                     // (the §4-step-3 "provisioner launches new workers").
@@ -354,12 +452,12 @@ impl<'a> ServerlessSim<'a> {
                 Event::TaskDone { task, worker } => {
                     let ti = task as usize;
                     let w = &mut workers[worker];
-                    // Stale completion from a killed worker: ignore (its
-                    // inflight list was already requeued).
-                    if !w.inflight.contains(&task) {
+                    // Stale completion from a killed worker: ignore
+                    // (its leases were dropped; the queue redelivers).
+                    let Some(pos) = w.inflight.iter().position(|(t, _)| *t == task) else {
                         continue;
-                    }
-                    w.inflight.retain(|&x| x != task);
+                    };
+                    let (_, lease) = w.inflight.swap_remove(pos);
                     w.slots_free += 1;
                     if w.slots_free == pw {
                         w.idle_since = now;
@@ -378,23 +476,42 @@ impl<'a> ServerlessSim<'a> {
                         completed[ti] = true;
                         done_count += 1;
                         flops_done += costs[ti].flops;
+                        // Child propagation through the shared KV
+                        // protocol: lazy counter init + edge-guarded
+                        // decrement, idempotent under redelivery —
+                        // the same steps as `executor::propagate`.
                         for &c in &dag.children[ti] {
-                            parents_left[c as usize] -= 1;
-                            if parents_left[c as usize] == 0 {
-                                ready.push((task_priority(dag, c), std::cmp::Reverse(c)));
+                            let dk = format!("deps:{c}");
+                            if !state.counter_exists(&dk) {
+                                state.init_counter(&dk, dag.num_parents[c as usize] as i64);
+                            }
+                            let remaining = state.edge_decr(&format!("edge:{ti}:{c}"), &dk);
+                            if remaining <= 0 && !completed[c as usize] {
+                                queue.send(&c.to_string(), task_priority(dag, c));
                             }
                         }
                     }
+                    // §4.1 invariant: delete only after effects are
+                    // durable. A stale lease (expired + redelivered)
+                    // no-ops here and the duplicate execution is
+                    // absorbed by the `completed` check on delivery.
+                    queue.delete(&lease);
                     try_assign!();
                 }
-                Event::Requeue(task) => {
-                    requeues += 1;
-                    if requeues > requeue_budget {
-                        break; // livelock: tasks larger than the runtime limit
+                Event::RenewLease { task, worker } => {
+                    let w = &workers[worker];
+                    if !w.up {
+                        continue;
                     }
-                    if !completed[task as usize] {
-                        ready.push((task_priority(dag, task), std::cmp::Reverse(task)));
-                        try_assign!();
+                    if let Some((_, lease)) = w.inflight.iter().find(|(t, _)| *t == task) {
+                        if queue.renew(lease) {
+                            push(
+                                &mut heap,
+                                &mut seq,
+                                now + renew_period,
+                                Event::RenewLease { task, worker },
+                            );
+                        }
                     }
                 }
                 Event::IdleCheck(id, epoch) => {
@@ -416,7 +533,7 @@ impl<'a> ServerlessSim<'a> {
                         sf, max_workers, ..
                     } = self.config.policy
                     {
-                        let pending = ready.len() + running;
+                        let pending = queue.visible_len() + running;
                         // Count booting workers too, or the cold-start
                         // window makes every tick respawn the same gap.
                         let live =
@@ -445,27 +562,32 @@ impl<'a> ServerlessSim<'a> {
                             .map(|(i, _)| i)
                             .collect();
                         let n_kill = (live_ids.len() as f64 * frac).round() as usize;
-                        let requeue_at = now + self.model.lease;
                         for &id in live_ids.iter().take(n_kill) {
                             let w = &mut workers[id];
                             w.up = false;
                             w.epoch += 1;
                             w.alive_secs += now - w.up_at;
+                            // Same recovery as WorkerDeath: leases
+                            // lapse, the queue redelivers.
                             let inflight = std::mem::take(&mut w.inflight);
                             running -= inflight.len();
                             w.slots_free = pw;
                             w.core_free_at = 0.0;
-                            for task in inflight {
-                                push(&mut heap, &mut seq, requeue_at, Event::Requeue(task));
-                            }
+                        }
+                        if n_kill > 0 && wake_until <= now {
+                            wake_until = now + lease_secs + EPS;
+                            push(&mut heap, &mut seq, wake_until, Event::Wake);
                         }
                     }
+                }
+                Event::Wake => {
+                    try_assign!();
                 }
                 Event::Sample => {
                     let live = workers.iter().filter(|w| w.up).count();
                     samples.push(SimSample {
                         t: now,
-                        pending: ready.len(),
+                        pending: queue.visible_len(),
                         running,
                         workers: live,
                         flops_done,
@@ -477,6 +599,10 @@ impl<'a> ServerlessSim<'a> {
                         now + self.config.sample_dt,
                         Event::Sample,
                     );
+                    // Virtual time passing makes expired leases
+                    // visible — pick them up on the sampling cadence
+                    // too, as the engine's pollers would.
+                    try_assign!();
                 }
             }
         }
@@ -507,6 +633,7 @@ impl<'a> ServerlessSim<'a> {
             peak_workers,
             workers_spawned: spawned,
             bytes_read_per_worker: bytes_per_worker,
+            deliveries,
         }
     }
 }
@@ -539,6 +666,35 @@ mod tests {
         assert!(r.completion_time > 0.0);
         assert!(r.core_secs_busy > 0.0);
         assert!(r.core_secs_billed >= r.core_secs_busy * 0.5);
+        assert!(r.deliveries >= r.tasks_done);
+    }
+
+    #[test]
+    fn completes_on_every_substrate_family() {
+        let w = chol_workload(8, 512);
+        for spec in ["strict", "sharded:4", "sharded:1+chaos(dup=0.1,seed=5)"] {
+            let cfg = SimConfig {
+                substrate: SubstrateConfig::parse(spec).unwrap(),
+                ..SimConfig::default()
+            };
+            let r = ServerlessSim::new(&w, CostModel::default(), cfg).run();
+            assert_eq!(r.tasks_done, w.num_tasks(), "[{spec}]");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_config() {
+        let w = chol_workload(10, 1024);
+        let cfg = SimConfig {
+            substrate: SubstrateConfig::parse("strict+chaos(drop=0.05,dup=0.05,seed=3)")
+                .unwrap(),
+            ..SimConfig::default()
+        };
+        let a = ServerlessSim::new(&w, CostModel::default(), cfg).run();
+        let b = ServerlessSim::new(&w, CostModel::default(), cfg).run();
+        assert_eq!(a.tasks_done, b.tasks_done);
+        assert_eq!(a.deliveries, b.deliveries);
+        assert!((a.completion_time - b.completion_time).abs() < 1e-9);
     }
 
     #[test]
@@ -546,8 +702,10 @@ mod tests {
         let w = chol_workload(16, 1024);
         let m = CostModel::default();
         let t = |k| {
-            let mut c = SimConfig::default();
-            c.policy = WorkerPolicy::Fixed(k);
+            let c = SimConfig {
+                policy: WorkerPolicy::Fixed(k),
+                ..SimConfig::default()
+            };
             ServerlessSim::new(&w, m, c).run().completion_time
         };
         let (t4, t32, t256) = (t(4), t(32), t(256));
@@ -559,8 +717,10 @@ mod tests {
     fn respects_lower_bound() {
         let w = chol_workload(8, 2048);
         let m = CostModel::default();
-        let mut c = SimConfig::default();
-        c.policy = WorkerPolicy::Fixed(64);
+        let c = SimConfig {
+            policy: WorkerPolicy::Fixed(64),
+            ..SimConfig::default()
+        };
         let r = ServerlessSim::new(&w, m, c).run();
         let lb = w.lower_bound(64, &m);
         assert!(
@@ -578,9 +738,11 @@ mod tests {
         let w = chol_workload(24, 2048);
         let m = CostModel::default();
         let run = |pw| {
-            let mut c = SimConfig::default();
-            c.policy = WorkerPolicy::Fixed(20);
-            c.pipeline_width = pw;
+            let c = SimConfig {
+                policy: WorkerPolicy::Fixed(20),
+                pipeline_width: pw,
+                ..SimConfig::default()
+            };
             ServerlessSim::new(&w, m, c).run()
         };
         let r1 = run(1);
@@ -597,11 +759,13 @@ mod tests {
     fn autoscaler_tracks_parallelism() {
         let w = chol_workload(12, 1024);
         let m = CostModel::default();
-        let mut c = SimConfig::default();
-        c.policy = WorkerPolicy::Auto {
-            sf: 1.0,
-            max_workers: 256,
-            t_timeout: 10.0,
+        let c = SimConfig {
+            policy: WorkerPolicy::Auto {
+                sf: 1.0,
+                max_workers: 256,
+                t_timeout: 10.0,
+            },
+            ..SimConfig::default()
         };
         let r = ServerlessSim::new(&w, m, c).run();
         assert_eq!(r.tasks_done, w.num_tasks());
@@ -615,23 +779,24 @@ mod tests {
     fn failure_injection_recovers_and_slows() {
         let w = chol_workload(12, 2048);
         let m = CostModel::default();
+        let auto = WorkerPolicy::Auto {
+            sf: 1.0,
+            max_workers: 128,
+            t_timeout: 10.0,
+        };
         let base = {
-            let mut c = SimConfig::default();
-            c.policy = WorkerPolicy::Auto {
-                sf: 1.0,
-                max_workers: 128,
-                t_timeout: 10.0,
+            let c = SimConfig {
+                policy: auto,
+                ..SimConfig::default()
             };
             ServerlessSim::new(&w, m, c).run()
         };
         let failed = {
-            let mut c = SimConfig::default();
-            c.policy = WorkerPolicy::Auto {
-                sf: 1.0,
-                max_workers: 128,
-                t_timeout: 10.0,
+            let c = SimConfig {
+                policy: auto,
+                failure: Some((base.completion_time * 0.4, 0.8)),
+                ..SimConfig::default()
             };
-            c.failure = Some((base.completion_time * 0.4, 0.8));
             ServerlessSim::new(&w, m, c).run()
         };
         assert_eq!(failed.tasks_done, w.num_tasks(), "must recover");
@@ -641,15 +806,57 @@ mod tests {
             failed.completion_time,
             base.completion_time
         );
+        assert!(
+            failed.deliveries > failed.tasks_done,
+            "lease expiry must have redelivered killed tasks"
+        );
+    }
+
+    #[test]
+    fn chaos_message_faults_recover_via_leases() {
+        // Dropped deliveries and duplicated enqueues through the chaos
+        // layer: at-least-once redelivery must still finish every task
+        // exactly once, at some cost in time and deliveries.
+        let w = chol_workload(10, 2048);
+        let m = CostModel::default();
+        let clean = SimConfig {
+            policy: WorkerPolicy::Fixed(16),
+            ..SimConfig::default()
+        };
+        let base = ServerlessSim::new(&w, m, clean).run();
+        let chaotic = SimConfig {
+            policy: WorkerPolicy::Fixed(16),
+            substrate: SubstrateConfig::parse("strict+chaos(drop=0.1,dup=0.1,seed=11)")
+                .unwrap(),
+            ..SimConfig::default()
+        };
+        let r = ServerlessSim::new(&w, m, chaotic).run();
+        assert_eq!(r.tasks_done, w.num_tasks(), "must complete under chaos");
+        assert!(
+            r.deliveries > base.deliveries,
+            "chaos must cost deliveries: {} vs {}",
+            r.deliveries,
+            base.deliveries
+        );
+        assert!(
+            r.completion_time >= base.completion_time,
+            "chaos cannot be faster: {} vs {}",
+            r.completion_time,
+            base.completion_time
+        );
     }
 
     #[test]
     fn runtime_limit_recycling_preserves_progress() {
         let w = chol_workload(10, 4096);
-        let mut m = CostModel::default();
-        m.runtime_limit = 60.0; // aggressive recycling
-        let mut c = SimConfig::default();
-        c.policy = WorkerPolicy::Fixed(32);
+        let m = CostModel {
+            runtime_limit: 60.0, // aggressive recycling
+            ..CostModel::default()
+        };
+        let c = SimConfig {
+            policy: WorkerPolicy::Fixed(32),
+            ..SimConfig::default()
+        };
         let r = ServerlessSim::new(&w, m, c).run();
         assert_eq!(r.tasks_done, w.num_tasks());
     }
@@ -657,8 +864,10 @@ mod tests {
     #[test]
     fn limit_tasks_stops_early() {
         let w = chol_workload(12, 1024);
-        let mut c = SimConfig::default();
-        c.limit_tasks = Some(50);
+        let c = SimConfig {
+            limit_tasks: Some(50),
+            ..SimConfig::default()
+        };
         let r = ServerlessSim::new(&w, CostModel::default(), c).run();
         assert_eq!(r.tasks_done, 50);
     }

@@ -1,0 +1,806 @@
+//! Chaos/shaping decorators over the substrate traits.
+//!
+//! The paper's fault-tolerance story (§4.1, Figure 9b) rests on the
+//! substrate being *unreliable*: SQS delivers at-least-once, S3 calls
+//! fail transiently, Lambdas straggle and die. The plain backends are
+//! perfectly reliable and zero-latency, so the recovery path would
+//! never be exercised end-to-end without this layer: generic wrappers
+//! that compose over **any** [`BlobStore`]/[`Queue`]/[`KvState`]
+//! backend and inject seeded, deterministic trouble.
+//!
+//! What each decorator injects (all off by default):
+//!
+//! * [`ChaosBlobStore`] — transient get/put failures with probability
+//!   `err` (marked with [`TRANSIENT_MARKER`]; see [`is_transient`]),
+//!   per-op latency sampled from `read_lat`/`write_lat`, and
+//!   per-worker straggler slowdowns (`straggle=FRAC:MULT` — a
+//!   deterministic `FRAC` of worker ids see `MULT`× the sampled
+//!   latency);
+//! * [`ChaosQueue`] — duplicated enqueues with probability `dup`
+//!   (at-least-once *send*) and dropped deliveries with probability
+//!   `drop`: a dropped delivery takes the lease but never reaches the
+//!   caller, so the message sits invisible until the visibility
+//!   timeout expires and redelivers it — exactly a delivery lost in
+//!   flight on real SQS. Receive latency comes from `recv_lat`;
+//! * [`ChaosKvState`] — per-op latency from `kv_lat` (the trait's
+//!   operations are infallible, so no error injection).
+//!
+//! Selection is part of the substrate grammar
+//! ([`SubstrateConfig::parse`](crate::config::SubstrateConfig::parse)):
+//!
+//! ```text
+//! --substrate 'sharded:16+chaos(err=0.01,lat=lognorm:5ms)'
+//! --substrate 'strict+chaos(drop=0.05,dup=0.05,seed=7)'
+//! --substrate 'sharded:8+chaos(lat=uniform:1ms:20ms,straggle=0.1:16)'
+//! ```
+//!
+//! Clause reference (comma-separated `key=value` inside `chaos(…)`):
+//!
+//! | key        | value                                  | injects            |
+//! |------------|----------------------------------------|--------------------|
+//! | `err`      | probability in [0,1]                   | blob op failures   |
+//! | `drop`     | probability in [0,1]                   | lost deliveries    |
+//! | `dup`      | probability in [0,1]                   | duplicate enqueues |
+//! | `lat`      | latency spec (sets read+write)         | blob latency       |
+//! | `read_lat` | latency spec                           | blob get latency   |
+//! | `write_lat`| latency spec                           | blob put latency   |
+//! | `recv_lat` | latency spec                           | queue recv latency |
+//! | `kv_lat`   | latency spec                           | KV op latency      |
+//! | `straggle` | `FRAC:MULT`                            | slow workers       |
+//! | `seed`     | u64                                    | the PRNG seed      |
+//!
+//! Latency specs: a bare duration (`5ms`, `250us`, `0.01s`, plain
+//! seconds) means fixed; `fixed:D`, `uniform:LO:HI`, and
+//! `lognorm:MEDIAN[:SIGMA]` (sigma defaults to 0.5) select the
+//! distribution. `straggle` multiplies the *shaped* blob latency, so
+//! it requires a `lat`/`read_lat`/`write_lat` clause (rejected at
+//! parse time otherwise — a stragglerless straggler experiment would
+//! silently measure nothing). Everything is drawn from one seeded xoshiro stream,
+//! so a given config replays the same fault/latency sequence for the
+//! same serialized operation order.
+//!
+//! Virtual-time callers (the discrete-event simulator) wrap with
+//! `sleep = false`: fault/drop/dup injection still applies, but
+//! latency shaping is skipped — the sim's cost model owns time.
+
+use crate::linalg::matrix::Matrix;
+use crate::storage::traits::{BlobStore, KvState, Lease, Queue, StoreStats};
+use crate::util::prng::Rng;
+use anyhow::{anyhow, bail, Context, Result};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Marker embedded in every injected error message. The executor
+/// treats marked failures as retryable (and, past the retry budget,
+/// abandons the task to lease-expiry recovery) instead of fatal.
+pub const TRANSIENT_MARKER: &str = "transient substrate fault";
+
+/// Is this error an injected transient fault (directly or anywhere in
+/// its context chain)? The vendored `anyhow` shim has no downcasting,
+/// so the marker string carries the classification.
+pub fn is_transient(err: &anyhow::Error) -> bool {
+    format!("{err:#}").contains(TRANSIENT_MARKER)
+}
+
+/// Inline retries a *worker* gives a transiently-failing blob op
+/// before abandoning the task to lease-expiry recovery (§4.1): with
+/// independent per-op faults, k retries drive the abandon probability
+/// to `err^(k+1)`, and the lease path covers the rest.
+pub const WORKER_BLOB_RETRIES: usize = 3;
+
+/// Inline retries for *client-side* blob ops (input seeding, output
+/// fetch). The client has no lease to fall back on, so its budget is
+/// deeper.
+pub const CLIENT_BLOB_RETRIES: usize = 8;
+
+/// Run a borrowing blob op with up to `retries` inline retries on
+/// transient faults (exponential backoff); non-transient errors
+/// propagate immediately.
+pub fn with_blob_retry<T>(retries: usize, mut op: impl FnMut() -> Result<T>) -> Result<T> {
+    let mut backoff = Duration::from_micros(200);
+    for _ in 0..retries {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) if is_transient(&e) => {
+                std::thread::sleep(backoff);
+                backoff *= 2;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    op()
+}
+
+/// `BlobStore::put` consumes its tile, so retries need a copy — clone
+/// on the retry attempts, move on the last. Callers on a hot path
+/// should skip this when no chaos layer is configured (no transient
+/// faults exist, and the first attempt clones).
+pub fn blob_put_with_retry(
+    store: &dyn BlobStore,
+    retries: usize,
+    worker: usize,
+    key: &str,
+    tile: Matrix,
+) -> Result<()> {
+    let mut backoff = Duration::from_micros(200);
+    let mut tile = Some(tile);
+    for attempt in 0.. {
+        let last = attempt >= retries;
+        let value = if last {
+            tile.take().expect("tile consumed before final attempt")
+        } else {
+            tile.as_ref().expect("tile present").clone()
+        };
+        match store.put(worker, key, value) {
+            Ok(()) => return Ok(()),
+            Err(e) if !last && is_transient(&e) => {
+                std::thread::sleep(backoff);
+                backoff *= 2;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    unreachable!("retry loop always returns")
+}
+
+/// A per-operation latency distribution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LatencyDist {
+    /// No shaping.
+    Off,
+    /// Constant per-op latency.
+    Fixed(Duration),
+    /// Uniform in `[lo, hi)`.
+    Uniform(Duration, Duration),
+    /// Log-normal: `median × exp(sigma · N(0,1))` — the classic
+    /// heavy-tailed storage-latency shape.
+    LogNormal { median: Duration, sigma: f64 },
+}
+
+impl LatencyDist {
+    pub fn is_off(&self) -> bool {
+        matches!(self, LatencyDist::Off)
+    }
+
+    /// Draw one latency.
+    pub fn sample(&self, rng: &mut Rng) -> Duration {
+        match *self {
+            LatencyDist::Off => Duration::ZERO,
+            LatencyDist::Fixed(d) => d,
+            LatencyDist::Uniform(lo, hi) => {
+                Duration::from_secs_f64(rng.range_f64(lo.as_secs_f64(), hi.as_secs_f64()))
+            }
+            LatencyDist::LogNormal { median, sigma } => {
+                Duration::from_secs_f64(median.as_secs_f64() * (sigma * rng.normal()).exp())
+            }
+        }
+    }
+
+    /// Parse `D` | `off` | `fixed:D` | `uniform:LO:HI` |
+    /// `lognorm:MEDIAN[:SIGMA]` where durations take `ms`/`us`/`s`
+    /// suffixes (bare numbers are seconds).
+    pub fn parse(spec: &str) -> Result<LatencyDist> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        match parts.as_slice() {
+            ["off"] => Ok(LatencyDist::Off),
+            [d] => Ok(LatencyDist::Fixed(parse_duration(d)?)),
+            ["fixed", d] => Ok(LatencyDist::Fixed(parse_duration(d)?)),
+            ["uniform", lo, hi] => {
+                let (lo, hi) = (parse_duration(lo)?, parse_duration(hi)?);
+                if hi < lo {
+                    bail!("uniform latency bounds out of order in `{spec}`");
+                }
+                Ok(LatencyDist::Uniform(lo, hi))
+            }
+            ["lognorm", med] => Ok(LatencyDist::LogNormal {
+                median: parse_duration(med)?,
+                sigma: 0.5,
+            }),
+            ["lognorm", med, sig] => {
+                let sigma: f64 = sig
+                    .parse()
+                    .map_err(|_| anyhow!("bad lognorm sigma `{sig}`"))?;
+                if !(0.0..=5.0).contains(&sigma) {
+                    bail!("lognorm sigma `{sig}` outside [0, 5]");
+                }
+                Ok(LatencyDist::LogNormal {
+                    median: parse_duration(med)?,
+                    sigma,
+                })
+            }
+            _ => bail!(
+                "bad latency spec `{spec}` (D | off | fixed:D | uniform:LO:HI | \
+                 lognorm:MEDIAN[:SIGMA])"
+            ),
+        }
+    }
+}
+
+/// Parse `5ms`, `250us`, `1.5s`, or plain (fractional) seconds.
+pub fn parse_duration(s: &str) -> Result<Duration> {
+    let (num, scale) = if let Some(v) = s.strip_suffix("ms") {
+        (v, 1e-3)
+    } else if let Some(v) = s.strip_suffix("us") {
+        (v, 1e-6)
+    } else if let Some(v) = s.strip_suffix('s') {
+        (v, 1.0)
+    } else {
+        (s, 1.0)
+    };
+    let x: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("bad duration `{s}`"))?;
+    if !x.is_finite() || x < 0.0 {
+        bail!("bad duration `{s}`");
+    }
+    Ok(Duration::from_secs_f64(x * scale))
+}
+
+/// The knob set for one chaos layer (see the module docs for the
+/// textual grammar).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChaosConfig {
+    /// Blob get/put transient-failure probability.
+    pub err: f64,
+    /// Queue delivery-drop probability (lease taken, delivery lost).
+    pub drop: f64,
+    /// Queue enqueue-duplication probability.
+    pub dup: f64,
+    pub read_lat: LatencyDist,
+    pub write_lat: LatencyDist,
+    pub recv_lat: LatencyDist,
+    pub kv_lat: LatencyDist,
+    /// Fraction of worker ids that are stragglers.
+    pub straggler_frac: f64,
+    /// Latency multiplier a straggler sees on blob ops.
+    pub straggler_mult: f64,
+    pub seed: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            err: 0.0,
+            drop: 0.0,
+            dup: 0.0,
+            read_lat: LatencyDist::Off,
+            write_lat: LatencyDist::Off,
+            recv_lat: LatencyDist::Off,
+            kv_lat: LatencyDist::Off,
+            straggler_frac: 0.0,
+            straggler_mult: 1.0,
+            seed: 0x0C1A05,
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// Parse the comma-separated `key=value` body of a `chaos(…)`
+    /// decorator clause.
+    pub fn parse(body: &str) -> Result<ChaosConfig> {
+        let prob = |v: &str| -> Result<f64> {
+            let p: f64 = v
+                .parse()
+                .map_err(|_| anyhow!("bad probability `{v}`"))?;
+            if !(0.0..=1.0).contains(&p) {
+                bail!("probability `{v}` outside [0, 1]");
+            }
+            Ok(p)
+        };
+        let mut c = ChaosConfig::default();
+        for kv in body.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (k, v) = kv
+                .split_once('=')
+                .with_context(|| format!("chaos clause `{kv}` is not key=value"))?;
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "err" => c.err = prob(v)?,
+                "drop" => c.drop = prob(v)?,
+                "dup" => c.dup = prob(v)?,
+                "lat" => {
+                    let d = LatencyDist::parse(v)?;
+                    c.read_lat = d;
+                    c.write_lat = d;
+                }
+                "read_lat" => c.read_lat = LatencyDist::parse(v)?,
+                "write_lat" => c.write_lat = LatencyDist::parse(v)?,
+                "recv_lat" => c.recv_lat = LatencyDist::parse(v)?,
+                "kv_lat" => c.kv_lat = LatencyDist::parse(v)?,
+                "straggle" => {
+                    let (f, m) = v.split_once(':').context("straggle is FRAC:MULT")?;
+                    c.straggler_frac = prob(f)?;
+                    c.straggler_mult = m
+                        .parse()
+                        .map_err(|_| anyhow!("bad straggle multiplier `{m}`"))?;
+                    if !(c.straggler_mult >= 1.0 && c.straggler_mult.is_finite()) {
+                        bail!("straggle multiplier `{m}` must be a finite value >= 1");
+                    }
+                }
+                "seed" => c.seed = v.parse().map_err(|_| anyhow!("bad seed `{v}`"))?,
+                other => bail!(
+                    "unknown chaos key `{other}` \
+                     (err|drop|dup|lat|read_lat|write_lat|recv_lat|kv_lat|straggle|seed)"
+                ),
+            }
+        }
+        // The straggler multiplier scales the *shaped* blob latency; with
+        // no latency clause it would be a silent no-op experiment.
+        if c.straggler_frac > 0.0 && c.read_lat.is_off() && c.write_lat.is_off() {
+            bail!("straggle requires a blob latency clause (lat=…, read_lat=…, or write_lat=…)");
+        }
+        Ok(c)
+    }
+
+    /// Deterministic straggler membership: the same `(seed, worker)`
+    /// always lands on the same side, so straggler experiments are
+    /// reproducible without coordination.
+    pub fn is_straggler(&self, worker: usize) -> bool {
+        if self.straggler_frac <= 0.0 {
+            return false;
+        }
+        let key = self.seed ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Rng::new(key).f64() < self.straggler_frac
+    }
+}
+
+/// One seeded draw source shared by a decorator's operations. The
+/// stream is deterministic for a fixed serialized op order (tests);
+/// under true concurrency the interleaving picks which op gets which
+/// draw, but the aggregate rates stay exact.
+struct Draws {
+    rng: Mutex<Rng>,
+}
+
+impl Draws {
+    fn new(seed: u64) -> Self {
+        Draws {
+            rng: Mutex::new(Rng::new(seed)),
+        }
+    }
+
+    fn chance(&self, p: f64) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        self.rng.lock().unwrap().chance(p)
+    }
+
+    fn latency(&self, dist: &LatencyDist) -> Duration {
+        if dist.is_off() {
+            return Duration::ZERO;
+        }
+        dist.sample(&mut self.rng.lock().unwrap())
+    }
+}
+
+fn maybe_sleep(d: Duration) {
+    if !d.is_zero() {
+        std::thread::sleep(d);
+    }
+}
+
+// ---------------------------------------------------------------- blob
+
+/// Fault/latency decorator over any [`BlobStore`].
+pub struct ChaosBlobStore {
+    inner: Arc<dyn BlobStore>,
+    cfg: ChaosConfig,
+    draws: Draws,
+    sleep: bool,
+}
+
+impl ChaosBlobStore {
+    pub fn new(inner: Arc<dyn BlobStore>, cfg: ChaosConfig, sleep: bool) -> Self {
+        ChaosBlobStore {
+            inner,
+            cfg,
+            draws: Draws::new(cfg.seed ^ 0xB10B),
+            sleep,
+        }
+    }
+
+    fn shape(&self, dist: &LatencyDist, worker: usize) {
+        if !self.sleep {
+            return;
+        }
+        let mut d = self.draws.latency(dist);
+        if !d.is_zero() && self.cfg.is_straggler(worker) {
+            d = d.mul_f64(self.cfg.straggler_mult);
+        }
+        maybe_sleep(d);
+    }
+}
+
+impl BlobStore for ChaosBlobStore {
+    fn put(&self, worker: usize, key: &str, value: Matrix) -> Result<()> {
+        self.shape(&self.cfg.write_lat, worker);
+        if self.draws.chance(self.cfg.err) {
+            return Err(anyhow!("{TRANSIENT_MARKER}: injected put failure for `{key}`"));
+        }
+        self.inner.put(worker, key, value)
+    }
+
+    fn get(&self, worker: usize, key: &str) -> Result<Arc<Matrix>> {
+        self.shape(&self.cfg.read_lat, worker);
+        if self.draws.chance(self.cfg.err) {
+            return Err(anyhow!("{TRANSIENT_MARKER}: injected get failure for `{key}`"));
+        }
+        self.inner.get(worker, key)
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.inner.contains(key)
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn stats(&self) -> StoreStats {
+        self.inner.stats()
+    }
+
+    fn worker_stats(&self, worker: usize) -> StoreStats {
+        self.inner.worker_stats(worker)
+    }
+
+    fn known_workers(&self) -> Vec<usize> {
+        self.inner.known_workers()
+    }
+}
+
+// --------------------------------------------------------------- queue
+
+/// Drop/duplicate/latency decorator over any [`Queue`].
+pub struct ChaosQueue {
+    inner: Arc<dyn Queue>,
+    cfg: ChaosConfig,
+    draws: Draws,
+    sleep: bool,
+}
+
+impl ChaosQueue {
+    pub fn new(inner: Arc<dyn Queue>, cfg: ChaosConfig, sleep: bool) -> Self {
+        ChaosQueue {
+            inner,
+            cfg,
+            draws: Draws::new(cfg.seed ^ 0x05E5),
+            sleep,
+        }
+    }
+
+    /// A delivery that never reaches the caller: the inner queue has
+    /// already taken the lease, so the message stays invisible until
+    /// the visibility timeout expires and redelivers it — the
+    /// at-least-once path §4.1 is built to survive.
+    fn filter(&self, got: Option<(String, Lease)>) -> Option<(String, Lease)> {
+        let got = got?;
+        if self.draws.chance(self.cfg.drop) {
+            return None;
+        }
+        Some(got)
+    }
+}
+
+impl Queue for ChaosQueue {
+    fn send(&self, body: &str, priority: i64) {
+        self.inner.send(body, priority);
+        if self.draws.chance(self.cfg.dup) {
+            // At-least-once enqueue made real: execution is idempotent,
+            // so a duplicated task costs time, never correctness.
+            self.inner.send(body, priority);
+        }
+    }
+
+    fn receive(&self) -> Option<(String, Lease)> {
+        if self.sleep {
+            maybe_sleep(self.draws.latency(&self.cfg.recv_lat));
+        }
+        self.filter(self.inner.receive())
+    }
+
+    fn receive_timeout(&self, timeout: Duration) -> Option<(String, Lease)> {
+        if self.sleep {
+            maybe_sleep(self.draws.latency(&self.cfg.recv_lat));
+        }
+        self.filter(self.inner.receive_timeout(timeout))
+    }
+
+    fn renew(&self, lease: &Lease) -> bool {
+        self.inner.renew(lease)
+    }
+
+    fn delete(&self, lease: &Lease) -> bool {
+        self.inner.delete(lease)
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn visible_len(&self) -> usize {
+        self.inner.visible_len()
+    }
+
+    fn delivery_count(&self, body: &str) -> u32 {
+        self.inner.delivery_count(body)
+    }
+}
+
+// ------------------------------------------------------------------ kv
+
+/// Latency decorator over any [`KvState`]. The trait's operations are
+/// infallible by design (the engine's control plane has no retry
+/// story for them), so only shaping applies.
+pub struct ChaosKvState {
+    inner: Arc<dyn KvState>,
+    cfg: ChaosConfig,
+    draws: Draws,
+    sleep: bool,
+}
+
+impl ChaosKvState {
+    pub fn new(inner: Arc<dyn KvState>, cfg: ChaosConfig, sleep: bool) -> Self {
+        ChaosKvState {
+            inner,
+            cfg,
+            draws: Draws::new(cfg.seed ^ 0x6B57),
+            sleep,
+        }
+    }
+
+    fn pause(&self) {
+        if self.sleep {
+            maybe_sleep(self.draws.latency(&self.cfg.kv_lat));
+        }
+    }
+}
+
+impl KvState for ChaosKvState {
+    fn get(&self, key: &str) -> Option<String> {
+        self.pause();
+        self.inner.get(key)
+    }
+
+    fn set(&self, key: &str, value: &str) {
+        self.pause();
+        self.inner.set(key, value);
+    }
+
+    fn set_nx(&self, key: &str, value: &str) -> bool {
+        self.pause();
+        self.inner.set_nx(key, value)
+    }
+
+    fn cas(&self, key: &str, expect: Option<&str>, value: &str) -> bool {
+        self.pause();
+        self.inner.cas(key, expect, value)
+    }
+
+    fn init_counter(&self, key: &str, value: i64) -> bool {
+        self.pause();
+        self.inner.init_counter(key, value)
+    }
+
+    fn incr(&self, key: &str, delta: i64) -> i64 {
+        self.pause();
+        self.inner.incr(key, delta)
+    }
+
+    fn counter(&self, key: &str) -> i64 {
+        self.pause();
+        self.inner.counter(key)
+    }
+
+    fn counter_exists(&self, key: &str) -> bool {
+        self.pause();
+        self.inner.counter_exists(key)
+    }
+
+    fn edge_decr(&self, edge_key: &str, counter_key: &str) -> i64 {
+        self.pause();
+        self.inner.edge_decr(edge_key, counter_key)
+    }
+
+    fn op_count(&self) -> u64 {
+        self.inner.op_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::clock::TestClock;
+    use crate::storage::{StrictBlobStore, StrictQueue};
+
+    #[test]
+    fn duration_grammar() {
+        assert_eq!(parse_duration("5ms").unwrap(), Duration::from_millis(5));
+        assert_eq!(parse_duration("250us").unwrap(), Duration::from_micros(250));
+        assert_eq!(parse_duration("1.5s").unwrap(), Duration::from_millis(1500));
+        assert_eq!(parse_duration("0.25").unwrap(), Duration::from_millis(250));
+        assert!(parse_duration("-1ms").is_err());
+        assert!(parse_duration("fast").is_err());
+    }
+
+    #[test]
+    fn latency_dist_grammar_and_samples() {
+        let mut rng = Rng::new(1);
+        assert_eq!(LatencyDist::parse("off").unwrap(), LatencyDist::Off);
+        let f = LatencyDist::parse("5ms").unwrap();
+        assert_eq!(f, LatencyDist::Fixed(Duration::from_millis(5)));
+        assert_eq!(f.sample(&mut rng), Duration::from_millis(5));
+        assert_eq!(
+            LatencyDist::parse("fixed:2ms").unwrap(),
+            LatencyDist::Fixed(Duration::from_millis(2))
+        );
+        let u = LatencyDist::parse("uniform:1ms:10ms").unwrap();
+        for _ in 0..100 {
+            let d = u.sample(&mut rng);
+            assert!(d >= Duration::from_millis(1) && d < Duration::from_millis(10));
+        }
+        let l = LatencyDist::parse("lognorm:5ms").unwrap();
+        for _ in 0..100 {
+            assert!(l.sample(&mut rng) > Duration::ZERO);
+        }
+        assert!(LatencyDist::parse("lognorm:5ms:0.9").is_ok());
+        assert!(LatencyDist::parse("uniform:10ms:1ms").is_err());
+        assert!(LatencyDist::parse("weibull:1ms").is_err());
+    }
+
+    #[test]
+    fn chaos_config_grammar() {
+        let c = ChaosConfig::parse(
+            "err=0.01, drop=0.05,dup=0.02,lat=lognorm:5ms,recv_lat=1ms,straggle=0.1:16,seed=9",
+        )
+        .unwrap();
+        assert_eq!(c.err, 0.01);
+        assert_eq!(c.drop, 0.05);
+        assert_eq!(c.dup, 0.02);
+        assert_eq!(
+            c.read_lat,
+            LatencyDist::LogNormal {
+                median: Duration::from_millis(5),
+                sigma: 0.5
+            }
+        );
+        assert_eq!(c.write_lat, c.read_lat);
+        assert_eq!(c.recv_lat, LatencyDist::Fixed(Duration::from_millis(1)));
+        assert_eq!(c.straggler_frac, 0.1);
+        assert_eq!(c.straggler_mult, 16.0);
+        assert_eq!(c.seed, 9);
+        // Empty body → all defaults (a no-op layer).
+        assert_eq!(ChaosConfig::parse("").unwrap(), ChaosConfig::default());
+        assert!(ChaosConfig::parse("err=2").is_err());
+        assert!(ChaosConfig::parse("nope=1").is_err());
+        assert!(ChaosConfig::parse("straggle=0.5:0.5,lat=1ms").is_err());
+        assert!(
+            ChaosConfig::parse("straggle=0.5:8").is_err(),
+            "straggle without a latency clause is a silent no-op — reject"
+        );
+        assert!(ChaosConfig::parse("err").is_err());
+    }
+
+    #[test]
+    fn blob_faults_are_transient_marked_and_deterministic() {
+        let cfg = ChaosConfig {
+            err: 0.4,
+            ..ChaosConfig::default()
+        };
+        let run = || -> Vec<bool> {
+            let blob = ChaosBlobStore::new(Arc::new(StrictBlobStore::new()), cfg, true);
+            (0..64)
+                .map(|i| blob.put(0, &format!("K[{i}]"), Matrix::zeros(1, 1)).is_err())
+                .collect()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b, "same seed, same op order => same fault sequence");
+        assert!(a.iter().any(|&x| x), "some ops must fail at err=0.4");
+        assert!(a.iter().any(|&x| !x), "some ops must succeed at err=0.4");
+
+        let blob = ChaosBlobStore::new(Arc::new(StrictBlobStore::new()), cfg, true);
+        let err = loop {
+            match blob.get(0, "missing-and-maybe-faulted") {
+                Err(e) if is_transient(&e) => break e,
+                Err(_) => continue, // the genuine not-found error
+                Ok(_) => unreachable!(),
+            }
+        };
+        // Context wrapping must not hide the marker.
+        let wrapped = anyhow::Error::msg(format!("{err:#}")).context("reading tile");
+        assert!(is_transient(&wrapped));
+    }
+
+    #[test]
+    fn real_missing_key_is_not_transient() {
+        let cfg = ChaosConfig::default();
+        let blob = ChaosBlobStore::new(Arc::new(StrictBlobStore::new()), cfg, true);
+        let err = blob.get(0, "nope").unwrap_err();
+        assert!(!is_transient(&err));
+    }
+
+    #[test]
+    fn queue_dup_duplicates_enqueue() {
+        let cfg = ChaosConfig {
+            dup: 1.0,
+            ..ChaosConfig::default()
+        };
+        let q = ChaosQueue::new(
+            Arc::new(StrictQueue::new(Duration::from_secs(10))),
+            cfg,
+            true,
+        );
+        q.send("t", 0);
+        assert_eq!(q.len(), 2, "dup=1 => every send enqueues twice");
+        let (b1, l1) = q.receive().unwrap();
+        let (b2, l2) = q.receive().unwrap();
+        assert_eq!((b1.as_str(), b2.as_str()), ("t", "t"));
+        assert!(q.delete(&l1) && q.delete(&l2));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn queue_drop_loses_delivery_but_lease_expiry_recovers() {
+        let clock = Arc::new(TestClock::default());
+        let lease = Duration::from_secs(10);
+        let inner = StrictQueue::with_clock(lease, clock.clone());
+        let cfg = ChaosConfig {
+            drop: 1.0,
+            ..ChaosConfig::default()
+        };
+        let q = ChaosQueue::new(Arc::new(inner), cfg, true);
+        q.send("t", 0);
+        // Delivery swallowed: lease taken, caller sees nothing.
+        assert!(q.receive().is_none());
+        assert_eq!(q.delivery_count("t"), 1);
+        assert_eq!(q.len(), 1, "the message is not lost");
+        assert_eq!(q.visible_len(), 0, "…but it is leased");
+        // Visibility timeout expires → redeliverable (at-least-once).
+        clock.advance(lease + Duration::from_secs(1));
+        assert_eq!(q.visible_len(), 1);
+        assert!(q.receive().is_none(), "drop=1 swallows again");
+        assert_eq!(q.delivery_count("t"), 2);
+    }
+
+    #[test]
+    fn straggler_membership_deterministic_and_proportional() {
+        let cfg = ChaosConfig {
+            straggler_frac: 0.25,
+            straggler_mult: 8.0,
+            seed: 42,
+            ..ChaosConfig::default()
+        };
+        let n = 1000;
+        let hits = (0..n).filter(|&w| cfg.is_straggler(w)).count();
+        assert!((150..=350).contains(&hits), "{hits}/1000 stragglers at frac=0.25");
+        for w in 0..64 {
+            assert_eq!(cfg.is_straggler(w), cfg.is_straggler(w), "stable membership");
+        }
+        let none = ChaosConfig::default();
+        assert!(!(0..64).any(|w| none.is_straggler(w)));
+    }
+
+    #[test]
+    fn zero_config_layer_is_transparent() {
+        let cfg = ChaosConfig::default();
+        let q = ChaosQueue::new(
+            Arc::new(StrictQueue::new(Duration::from_secs(10))),
+            cfg,
+            true,
+        );
+        q.send("a", 1);
+        q.send("b", 2);
+        assert_eq!(q.len(), 2);
+        let (body, lease) = q.receive().unwrap();
+        assert_eq!(body, "b");
+        assert!(q.renew(&lease));
+        assert!(q.delete(&lease));
+        let blob = ChaosBlobStore::new(Arc::new(StrictBlobStore::new()), cfg, true);
+        blob.put(3, "X", Matrix::zeros(2, 2)).unwrap();
+        assert_eq!(blob.get(3, "X").unwrap().rows(), 2);
+        assert_eq!(blob.stats().put_ops, 1);
+        assert_eq!(blob.worker_stats(3).get_ops, 1);
+        assert_eq!(blob.known_workers(), vec![3]);
+    }
+}

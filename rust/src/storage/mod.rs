@@ -16,6 +16,25 @@
 //!   globally linearizable, exactly-ordered, and able to police SSA
 //!   write discipline (`strict_ssa`) — the test and debugging backend.
 //!
+//! Either family can be wrapped in the **chaos decorator layer**
+//! ([`chaos`]) with a `+chaos(…)` suffix on the substrate spec:
+//!
+//! ```text
+//! substrate = sharded:16+chaos(err=0.01,lat=lognorm:5ms)
+//! substrate = strict+chaos(drop=0.05,dup=0.05,seed=7)
+//! substrate = sharded:8+chaos(lat=uniform:1ms:20ms,straggle=0.1:16)
+//! ```
+//!
+//! `err` injects transient blob-op failures, `drop`/`dup` make SQS's
+//! at-least-once semantics real (lost deliveries recovered by lease
+//! expiry, duplicated enqueues absorbed by idempotent execution),
+//! `lat`/`read_lat`/`write_lat`/`recv_lat`/`kv_lat` shape per-op
+//! latency (fixed / uniform / lognormal), and `straggle=FRAC:MULT`
+//! slows a deterministic fraction of workers for straggler
+//! experiments. Everything is seeded (`seed=N`) and reproducible.
+//! The chaos-wrapped backends pass the same conformance suite — the
+//! decorators perturb timing and delivery, never the contracts.
+//!
 //! Per-service semantics both families guarantee (and the conformance
 //! suite in `tests/substrate_conformance.rs` enforces):
 //!
@@ -34,6 +53,7 @@
 //! Time is injectable everywhere a visibility timeout matters — see
 //! [`Clock`], [`WallClock`], [`TestClock`].
 
+pub mod chaos;
 pub mod clock;
 pub mod object_store;
 pub mod queue;
@@ -42,6 +62,7 @@ pub mod sharded;
 pub mod state_store;
 pub mod traits;
 
+pub use chaos::{ChaosBlobStore, ChaosConfig, ChaosKvState, ChaosQueue, LatencyDist};
 pub use clock::{Clock, TestClock, WallClock};
 pub use object_store::StrictBlobStore;
 pub use queue::StrictQueue;
@@ -64,13 +85,40 @@ pub struct Substrate {
 }
 
 impl Substrate {
-    /// Build the backend family `cfg` selects, on the wall clock.
+    /// Build the backend family `cfg` selects, on the wall clock,
+    /// wrapped in the chaos layer if the config carries one.
     pub fn build(cfg: &SubstrateConfig, lease: Duration, store_latency: Duration) -> Substrate {
         Self::build_with_clock(cfg, lease, store_latency, Arc::new(WallClock::new()))
     }
 
     /// Build with an injected clock (deterministic lease-expiry tests).
     pub fn build_with_clock(
+        cfg: &SubstrateConfig,
+        lease: Duration,
+        store_latency: Duration,
+        clock: Arc<dyn Clock>,
+    ) -> Substrate {
+        let base = Self::build_base(cfg, lease, store_latency, clock);
+        match cfg.chaos {
+            Some(chaos) => base.with_chaos(&chaos, true),
+            None => base,
+        }
+    }
+
+    /// Virtual-time build for the discrete-event simulator: no
+    /// injected store latency and chaos latency shaping disabled (the
+    /// sim's cost model owns time); fault/drop/dup injection still
+    /// applies, so the sim exercises the same at-least-once recovery
+    /// machinery as the engine.
+    pub fn build_sim(cfg: &SubstrateConfig, lease: Duration, clock: Arc<dyn Clock>) -> Substrate {
+        let base = Self::build_base(cfg, lease, Duration::ZERO, clock);
+        match cfg.chaos {
+            Some(chaos) => base.with_chaos(&chaos, false),
+            None => base,
+        }
+    }
+
+    fn build_base(
         cfg: &SubstrateConfig,
         lease: Duration,
         store_latency: Duration,
@@ -89,6 +137,17 @@ impl Substrate {
             },
         }
     }
+
+    /// Wrap all three handles in the chaos decorators. `sleep` gates
+    /// latency shaping (wall-clock callers pass `true`; virtual-time
+    /// callers pass `false`) — fault/drop/dup injection always applies.
+    pub fn with_chaos(self, cfg: &chaos::ChaosConfig, sleep: bool) -> Substrate {
+        Substrate {
+            blob: Arc::new(ChaosBlobStore::new(self.blob, *cfg, sleep)),
+            queue: Arc::new(ChaosQueue::new(self.queue, *cfg, sleep)),
+            state: Arc::new(ChaosKvState::new(self.state, *cfg, sleep)),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -98,7 +157,13 @@ mod tests {
     #[test]
     fn build_selects_backend_family() {
         let lease = Duration::from_secs(1);
-        for spec in ["strict", "sharded", "sharded:4"] {
+        for spec in [
+            "strict",
+            "sharded",
+            "sharded:4",
+            "strict+chaos()",
+            "sharded:4+chaos(lat=fixed:0us,seed=3)",
+        ] {
             let cfg = SubstrateConfig::parse(spec).unwrap();
             let sub = Substrate::build(&cfg, lease, Duration::ZERO);
             // Smoke the three handles through their traits.

@@ -219,8 +219,7 @@ mod tests {
         // second worker's delete succeeds.
         let (q, clock) = queue_with_test_clock(Duration::from_secs(5));
         q.send("task", 0);
-        let (_, dead_lease) = q.receive().unwrap();
-        drop(dead_lease); // worker crashed without deleting
+        let (_, _dead_lease) = q.receive().unwrap(); // crashed: never deletes
         clock.advance(Duration::from_secs(6));
         let (_, lease) = q.receive().unwrap();
         assert!(q.delete(&lease));

@@ -5,8 +5,9 @@
 //! holds `Arc<dyn …>` handles to these traits, never concrete types,
 //! so backends are interchangeable: the single-lock `strict` family
 //! (linearizable, test-friendly, SSA-checking), the `sharded` family
-//! (N-way key-hash sharding for high worker counts), and — eventually —
-//! real S3/SQS/Redis clients or fault-injecting decorators.
+//! (N-way key-hash sharding for high worker counts), the composable
+//! fault/latency decorators in [`crate::storage::chaos`], and —
+//! eventually — real S3/SQS/Redis clients.
 //!
 //! Semantics every backend must provide (the conformance suite in
 //! `tests/substrate_conformance.rs` checks both shipped families):

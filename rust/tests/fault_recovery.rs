@@ -1,0 +1,159 @@
+//! Deterministic fault-recovery tests: the §4.1 protocol driven by a
+//! [`TestClock`], so lease expiry, redelivery, and exactly-once
+//! *completion* (under at-least-once *delivery*) are proven without
+//! wall-clock sleeps or timing luck.
+
+use numpywren::config::SubstrateConfig;
+use numpywren::linalg::matrix::Matrix;
+use numpywren::storage::{
+    chaos::is_transient, status, BlobStore as _, KvState as _, Queue as _, Substrate, TestClock,
+};
+use std::sync::Arc;
+use std::time::Duration;
+
+const LEASE: Duration = Duration::from_secs(10);
+
+fn substrate(spec: &str) -> (Substrate, Arc<TestClock>) {
+    let clock = Arc::new(TestClock::default());
+    let cfg = SubstrateConfig::parse(spec).unwrap();
+    let sub = Substrate::build_with_clock(&cfg, LEASE, Duration::ZERO, clock.clone());
+    (sub, clock)
+}
+
+/// The §4.1 completion protocol a worker runs after executing a task:
+/// durable effects first (tile write), then the status CAS (exactly
+/// one winner owns the completion accounting), then delete-by-lease.
+fn complete_task(
+    sub: &Substrate,
+    worker: usize,
+    task: &str,
+    lease: &numpywren::storage::Lease,
+) -> bool {
+    sub.blob
+        .put(worker, &format!("out:{task}"), Matrix::eye(2))
+        .unwrap();
+    let won = sub.state.cas(&format!("status:{task}"), None, status::COMPLETED);
+    if won {
+        sub.state.incr("completed_total", 1);
+    }
+    sub.queue.delete(lease);
+    won
+}
+
+#[test]
+fn dead_worker_mid_lease_task_reexecuted_exactly_once_to_completion() {
+    // The satellite acceptance test: a worker "dies" mid-lease; the
+    // task must be re-executed by a second worker and counted complete
+    // exactly once — on every backend family, chaos-wrapped included.
+    for spec in ["strict", "sharded:4", "sharded:4+chaos(seed=7)"] {
+        let (sub, clock) = substrate(spec);
+        sub.queue.send("chol@i=0", 0);
+
+        // Worker 1 takes the lease, does partial work, and dies: it
+        // never renews or deletes — the lease just lapses.
+        let (body, _lease1) = sub.queue.receive().unwrap();
+        assert_eq!(body, "chol@i=0", "[{spec}]");
+        assert!(sub.queue.receive().is_none(), "[{spec}] invisible while leased");
+
+        // Failure detection latency is the visibility timeout (§4.1):
+        // one tick before expiry the task is still invisible.
+        clock.advance(LEASE - Duration::from_millis(1));
+        assert!(
+            sub.queue.receive().is_none(),
+            "[{spec}] not yet redeliverable before the lease expires"
+        );
+        clock.advance(Duration::from_millis(1001));
+
+        // Worker 2 gets the redelivery and completes the protocol.
+        let (body, lease2) = sub.queue.receive().unwrap();
+        assert_eq!(body, "chol@i=0", "[{spec}]");
+        assert_eq!(sub.queue.delivery_count("chol@i=0"), 2, "[{spec}]");
+        assert!(complete_task(&sub, 2, &body, &lease2), "[{spec}] CAS winner");
+
+        // Exactly once to completion: the counter is 1, the queue is
+        // empty, and no amount of further waiting redelivers.
+        assert_eq!(sub.state.counter("completed_total"), 1, "[{spec}]");
+        assert!(sub.queue.is_empty(), "[{spec}]");
+        clock.advance(LEASE * 4);
+        assert!(sub.queue.receive().is_none(), "[{spec}] nothing left");
+    }
+}
+
+#[test]
+fn straggler_resurrection_after_completion_cannot_double_complete() {
+    // Worker 1 is *slow*, not dead: its lease expires, worker 2
+    // re-executes and completes, then worker 1 wakes back up and
+    // finishes its stale copy. The CAS and the stale lease make the
+    // resurrection a no-op.
+    let (sub, clock) = substrate("strict");
+    sub.queue.send("t", 0);
+    let (_, stale_lease) = sub.queue.receive().unwrap();
+    clock.advance(LEASE + Duration::from_secs(1));
+    let (body, fresh_lease) = sub.queue.receive().unwrap();
+    assert!(complete_task(&sub, 2, &body, &fresh_lease));
+
+    // The resurrected worker 1 replays the protocol with stale state.
+    assert!(
+        !complete_task(&sub, 1, "t", &stale_lease),
+        "stale completer must lose the CAS"
+    );
+    assert_eq!(sub.state.counter("completed_total"), 1, "counted once");
+    assert!(!sub.queue.renew(&stale_lease), "stale lease cannot renew");
+    assert!(sub.queue.is_empty());
+}
+
+#[test]
+fn renewal_defers_failure_detection_until_worker_actually_dies() {
+    // A healthy-then-dead worker: renewals hold the task invisible
+    // past several lease periods; death (no more renewals) surrenders
+    // it one visibility timeout later — that *is* failure detection.
+    let (sub, clock) = substrate("sharded:2");
+    sub.queue.send("t", 0);
+    let (_, lease) = sub.queue.receive().unwrap();
+    for _ in 0..5 {
+        clock.advance(LEASE / 2);
+        assert!(sub.queue.renew(&lease), "healthy worker keeps renewing");
+        assert!(sub.queue.receive().is_none(), "invisible while renewed");
+    }
+    // Death: renewals stop. Visible again exactly one lease later.
+    clock.advance(LEASE + Duration::from_secs(1));
+    assert_eq!(sub.queue.receive().unwrap().0, "t");
+    assert_eq!(sub.queue.delivery_count("t"), 2);
+}
+
+#[test]
+fn chaos_dropped_delivery_recovers_through_same_lease_path() {
+    // A chaos-dropped delivery is indistinguishable from a worker that
+    // died immediately after receive: lease taken, no effects, expiry
+    // redelivers.
+    let (sub, clock) = substrate("strict+chaos(drop=1.0,seed=5)");
+    sub.queue.send("t", 0);
+    assert!(sub.queue.receive().is_none(), "drop=1 swallows the delivery");
+    assert_eq!(sub.queue.len(), 1, "message not lost");
+    assert_eq!(sub.queue.visible_len(), 0, "…but leased");
+    clock.advance(LEASE + Duration::from_secs(1));
+    assert_eq!(sub.queue.visible_len(), 1, "expiry resurfaces it");
+    assert_eq!(sub.queue.delivery_count("t"), 1);
+}
+
+#[test]
+fn transient_blob_faults_do_not_corrupt_accounting() {
+    // Failed (injected) puts/gets must not register bytes or objects:
+    // the decorator rejects before the inner store sees the op.
+    let (sub, _) = substrate("strict+chaos(err=0.5,seed=12)");
+    let mut failures = 0usize;
+    let mut successes = 0usize;
+    for i in 0..64 {
+        match sub.blob.put(0, &format!("K[{i}]"), Matrix::eye(1)) {
+            Ok(()) => successes += 1,
+            Err(e) => {
+                assert!(is_transient(&e), "injected faults carry the marker");
+                failures += 1;
+            }
+        }
+    }
+    assert!(failures > 0 && successes > 0, "err=0.5 must split outcomes");
+    assert_eq!(sub.blob.len(), successes, "only successful puts stored");
+    assert_eq!(sub.blob.stats().put_ops, successes as u64);
+    assert_eq!(sub.blob.stats().bytes_written, successes as u64 * 8);
+}

@@ -17,9 +17,10 @@ fn spd(n: usize, seed: u64) -> Matrix {
 }
 
 fn base_cfg() -> EngineConfig {
-    let mut cfg = EngineConfig::default();
-    cfg.job_timeout = Duration::from_secs(120);
-    cfg
+    EngineConfig {
+        job_timeout: Duration::from_secs(120),
+        ..EngineConfig::default()
+    }
 }
 
 #[test]

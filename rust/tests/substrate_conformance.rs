@@ -20,17 +20,28 @@ use std::time::Duration;
 
 const LEASE: Duration = Duration::from_secs(10);
 
-/// All backend families, built on a deterministic test clock.
+/// All backend families, built on a deterministic test clock. The
+/// chaos-wrapped entries exercise the decorator layer with pure
+/// latency shaping (zero fault probabilities): the decorators must
+/// preserve every trait contract bit-for-bit — they perturb timing,
+/// never semantics.
 fn backends() -> Vec<(&'static str, Substrate, Arc<TestClock>)> {
-    ["strict", "sharded:1", "sharded:4", "sharded:16"]
-        .into_iter()
-        .map(|spec| {
-            let clock = Arc::new(TestClock::default());
-            let cfg = SubstrateConfig::parse(spec).unwrap();
-            let sub = Substrate::build_with_clock(&cfg, LEASE, Duration::ZERO, clock.clone());
-            (spec, sub, clock)
-        })
-        .collect()
+    [
+        "strict",
+        "sharded:1",
+        "sharded:4",
+        "sharded:16",
+        "strict+chaos(lat=fixed:20us,recv_lat=10us,kv_lat=5us,seed=3)",
+        "sharded:4+chaos(lat=uniform:5us:50us,straggle=0.25:4,seed=5)",
+    ]
+    .into_iter()
+    .map(|spec| {
+        let clock = Arc::new(TestClock::default());
+        let cfg = SubstrateConfig::parse(spec).unwrap();
+        let sub = Substrate::build_with_clock(&cfg, LEASE, Duration::ZERO, clock.clone());
+        (spec, sub, clock)
+    })
+    .collect()
 }
 
 /// The backends that guarantee *global* priority + FIFO ordering.
@@ -290,13 +301,23 @@ fn blob_read_after_write_and_accounting() {
 
 #[test]
 fn engine_cholesky_correct_on_every_backend() {
-    for spec in ["strict", "sharded:4"] {
+    // The chaos specs are the acceptance bar for the decorator layer:
+    // transient blob faults (`err>0`) recovered by worker retries and
+    // lease redelivery must still produce exact numerics.
+    for spec in [
+        "strict",
+        "sharded:4",
+        "sharded:4+chaos(err=0.02,lat=fixed:50us,seed=11)",
+        "strict+chaos(drop=0.05,dup=0.05,seed=13)",
+    ] {
         let mut rng = Rng::new(17);
         let a = Matrix::rand_spd(24, &mut rng);
-        let mut cfg = EngineConfig::default();
-        cfg.scaling = ScalingMode::Fixed(4);
-        cfg.job_timeout = Duration::from_secs(120);
-        cfg.substrate = SubstrateConfig::parse(spec).unwrap();
+        let cfg = EngineConfig {
+            scaling: ScalingMode::Fixed(4),
+            job_timeout: Duration::from_secs(120),
+            substrate: SubstrateConfig::parse(spec).unwrap(),
+            ..EngineConfig::default()
+        };
         let out = drivers::cholesky(&Engine::new(cfg), &a, 8).unwrap();
         assert!(
             out.result.matmul_nt(&out.result).max_abs_diff(&a) < 1e-8,
@@ -309,19 +330,64 @@ fn engine_cholesky_correct_on_every_backend() {
 }
 
 #[test]
+fn engine_recovers_from_heavy_chaos_faults() {
+    // err=0.3 defeats the inline retry budget often enough that some
+    // tasks are abandoned to lease-expiry recovery — the full §4.1
+    // path (stop renewing → visibility timeout → redelivery →
+    // idempotent re-execution) on the real engine.
+    let mut rng = Rng::new(19);
+    let a = Matrix::rand_spd(24, &mut rng);
+    let cfg = EngineConfig {
+        scaling: ScalingMode::Fixed(6),
+        lease: Duration::from_millis(80),
+        job_timeout: Duration::from_secs(120),
+        substrate: SubstrateConfig::parse("sharded:4+chaos(err=0.3,seed=23)").unwrap(),
+        ..EngineConfig::default()
+    };
+    let out = drivers::cholesky(&Engine::new(cfg), &a, 8).unwrap();
+    assert!(out.result.matmul_nt(&out.result).max_abs_diff(&a) < 1e-8);
+    let r = &out.run.report;
+    assert_eq!(r.completed, r.total_tasks);
+    assert!(r.error.is_none());
+}
+
+#[test]
 fn engine_short_lease_stragglers_safe_on_sharded() {
     // Redelivery + duplicate execution under the sharded backend:
     // idempotence must hold exactly as it does on strict.
     let mut rng = Rng::new(18);
     let a = Matrix::rand_spd(24, &mut rng);
-    let mut cfg = EngineConfig::default();
-    cfg.scaling = ScalingMode::Fixed(6);
-    cfg.lease = Duration::from_millis(20);
-    cfg.store_latency = Duration::from_millis(8);
-    cfg.job_timeout = Duration::from_secs(120);
-    cfg.substrate = SubstrateConfig::parse("sharded:8").unwrap();
+    let cfg = EngineConfig {
+        scaling: ScalingMode::Fixed(6),
+        lease: Duration::from_millis(20),
+        store_latency: Duration::from_millis(8),
+        job_timeout: Duration::from_secs(120),
+        substrate: SubstrateConfig::parse("sharded:8").unwrap(),
+        ..EngineConfig::default()
+    };
     let out = drivers::cholesky(&Engine::new(cfg), &a, 8).unwrap();
     assert!(out.result.matmul_nt(&out.result).max_abs_diff(&a) < 1e-8);
     let r = &out.run.report;
     assert_eq!(r.completed, r.total_tasks);
+}
+
+#[test]
+fn engine_chaos_stragglers_slow_but_exact() {
+    // Worker-visible blob-store slowdowns: a deterministic fraction of
+    // workers see multiplied store latency (the straggler experiment);
+    // the schedule degrades, the numerics must not.
+    let mut rng = Rng::new(21);
+    let a = Matrix::rand_spd(24, &mut rng);
+    let cfg = EngineConfig {
+        scaling: ScalingMode::Fixed(4),
+        job_timeout: Duration::from_secs(120),
+        substrate: SubstrateConfig::parse(
+            "sharded:4+chaos(lat=uniform:50us:200us,straggle=0.5:8,seed=29)",
+        )
+        .unwrap(),
+        ..EngineConfig::default()
+    };
+    let out = drivers::cholesky(&Engine::new(cfg), &a, 8).unwrap();
+    assert!(out.result.matmul_nt(&out.result).max_abs_diff(&a) < 1e-8);
+    assert_eq!(out.run.report.completed, out.run.report.total_tasks);
 }
