@@ -67,6 +67,57 @@ fn main() {
         per_count_cold / per_count_warm.max(1e-12)
     );
 
+    // --- memo contention at fleet-scale worker counts ---
+    // Every completing task hits the memo from its worker thread; the
+    // sharded memo (keyed like the substrate shards) must not convoy
+    // where the old single `Mutex<HashMap>` did. Baseline: the same
+    // warmed lookups through one mutex-wrapped map.
+    let nodes = std::sync::Arc::new(nodes);
+    let single: std::sync::Arc<std::sync::Mutex<std::collections::HashMap<String, i64>>> = {
+        let mut m = std::collections::HashMap::new();
+        for n in nodes.iter() {
+            m.insert(n.id(), fresh.parent_count(n).unwrap());
+        }
+        std::sync::Arc::new(std::sync::Mutex::new(m))
+    };
+    const PASSES: usize = 8;
+    for threads in [1usize, 16] {
+        let hammer = |use_sharded: bool| -> f64 {
+            let sw = Stopwatch::start();
+            let mut handles = Vec::new();
+            for _ in 0..threads {
+                let analyzer = fresh.clone(); // clones share the memo
+                let nodes = nodes.clone();
+                let single = single.clone();
+                handles.push(std::thread::spawn(move || {
+                    for _ in 0..PASSES {
+                        for n in nodes.iter() {
+                            if use_sharded {
+                                let _ = analyzer.parent_count(n).unwrap();
+                            } else {
+                                let id = n.id();
+                                let _ = *single.lock().unwrap().get(&id).unwrap();
+                            }
+                        }
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            (threads * PASSES * nodes.len()) as f64 / sw.secs().max(1e-9)
+        };
+        let sharded_ops = hammer(true);
+        let single_ops = hammer(false);
+        println!(
+            "parent_count memo @ {threads:>2} threads: sharded {:.2e} ops/s vs \
+             single-lock {:.2e} ops/s (×{:.2})",
+            sharded_ops,
+            single_ops,
+            sharded_ops / single_ops.max(1e-9)
+        );
+    }
+
     // --- end-to-end engine overhead with negligible kernels ---
     for workers in [1usize, 4, 8] {
         let mut rng = Rng::new(77);

@@ -1,0 +1,139 @@
+//! §Perf — multi-tenant job service throughput.
+//!
+//! One shared fleet (8 fixed workers, `sharded:auto` substrate) runs
+//! J ∈ {1, 2, 4, 8} identical small-tile Cholesky jobs concurrently.
+//! Tiles are tiny, so wall-clock is coordination: what this measures
+//! is how well the shared substrate + job registry + composite
+//! priorities multiplex, not kernel math.
+//!
+//! Per point:
+//! * **aggregate throughput** — total tasks completed across all jobs
+//!   divided by the fleet wall-clock (submission of the first job to
+//!   completion of the last);
+//! * **per-job latency** — each job's own submit-to-finish wall time
+//!   (mean and max across the J jobs).
+//!
+//! Emits `BENCH_multijob.json` (uploaded as a CI artifact by the
+//! bench-smoke job; `NUMPYWREN_BENCH_QUICK=1` trims the grid). The
+//! acceptance bar: aggregate throughput must not collapse as J grows —
+//! jobs share the fleet instead of serializing behind each other.
+
+use numpywren::config::{EngineConfig, ScalingMode};
+use numpywren::drivers::stage_cholesky;
+use numpywren::jobs::{JobManager, JobSpec};
+use numpywren::lambdapack::programs;
+use numpywren::linalg::matrix::Matrix;
+use numpywren::util::prng::Rng;
+use numpywren::util::timer::Stopwatch;
+use std::time::Duration;
+
+const JOBS_FULL: [usize; 4] = [1, 2, 4, 8];
+const JOBS_QUICK: [usize; 2] = [1, 2];
+const WORKERS: usize = 8;
+
+fn job_counts() -> &'static [usize] {
+    if std::env::var("NUMPYWREN_BENCH_QUICK").as_deref() == Ok("1") {
+        &JOBS_QUICK
+    } else {
+        &JOBS_FULL
+    }
+}
+
+struct Point {
+    jobs: usize,
+    fleet_wall_secs: f64,
+    total_tasks: u64,
+    agg_tasks_per_sec: f64,
+    mean_job_wall_secs: f64,
+    max_job_wall_secs: f64,
+}
+
+fn run_point(n_jobs: usize) -> Point {
+    let mut cfg = EngineConfig {
+        scaling: ScalingMode::Fixed(WORKERS),
+        sample_period: Duration::from_millis(50),
+        job_timeout: Duration::from_secs(300),
+        ..EngineConfig::default()
+    };
+    cfg.set("substrate", "sharded:auto").unwrap();
+    let mgr = JobManager::new(cfg);
+    let mut rng = Rng::new(0x3B1D ^ n_jobs as u64);
+    let mats: Vec<Matrix> = (0..n_jobs)
+        .map(|_| Matrix::rand_spd(64, &mut rng))
+        .collect();
+    let sw = Stopwatch::start();
+    let jobs: Vec<_> = mats
+        .iter()
+        .map(|a| {
+            let (env, inputs, _grid) = stage_cholesky(a, 8).unwrap();
+            mgr.submit(JobSpec::new(programs::cholesky_spec().program, env, inputs))
+                .unwrap()
+        })
+        .collect();
+    let mut total_tasks = 0u64;
+    let mut walls = Vec::new();
+    for job in jobs {
+        let r = mgr.wait(job).unwrap();
+        assert_eq!(r.completed, r.total_tasks, "job must complete exactly");
+        assert!(r.error.is_none());
+        total_tasks += r.total_tasks;
+        walls.push(r.wall_secs);
+    }
+    let fleet_wall_secs = sw.secs();
+    let _ = mgr.shutdown();
+    Point {
+        jobs: n_jobs,
+        fleet_wall_secs,
+        total_tasks,
+        agg_tasks_per_sec: total_tasks as f64 / fleet_wall_secs.max(1e-9),
+        mean_job_wall_secs: walls.iter().sum::<f64>() / walls.len() as f64,
+        max_job_wall_secs: walls.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+fn main() {
+    println!(
+        "# §Perf multi-tenant service — {WORKERS} shared workers, sharded:auto, {:?} concurrent jobs",
+        job_counts()
+    );
+    let mut points = Vec::new();
+    for &j in job_counts() {
+        let p = run_point(j);
+        println!(
+            "jobs={:<2} fleet-wall={:.3}s tasks={} agg={:.0} tasks/s \
+             job-wall mean={:.3}s max={:.3}s",
+            p.jobs,
+            p.fleet_wall_secs,
+            p.total_tasks,
+            p.agg_tasks_per_sec,
+            p.mean_job_wall_secs,
+            p.max_job_wall_secs
+        );
+        points.push(p);
+    }
+
+    // Hand-rolled JSON (no serde in the offline crate set).
+    let mut json = String::from("{\n  \"bench\": \"perf_multijob\",\n");
+    let counts: Vec<String> = job_counts().iter().map(|j| j.to_string()).collect();
+    json.push_str(&format!(
+        "  \"workers\": {WORKERS},\n  \"job_counts\": [{}],\n  \"results\": [\n",
+        counts.join(", ")
+    ));
+    for (i, p) in points.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"jobs\": {}, \"fleet_wall_secs\": {:.4}, \"total_tasks\": {}, \
+             \"agg_tasks_per_sec\": {:.1}, \"mean_job_wall_secs\": {:.4}, \
+             \"max_job_wall_secs\": {:.4}}}{}\n",
+            p.jobs,
+            p.fleet_wall_secs,
+            p.total_tasks,
+            p.agg_tasks_per_sec,
+            p.mean_job_wall_secs,
+            p.max_job_wall_secs,
+            if i + 1 == points.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_multijob.json", &json).expect("write BENCH_multijob.json");
+    println!("# wrote BENCH_multijob.json");
+}

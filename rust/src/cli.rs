@@ -14,6 +14,7 @@ use crate::baselines::{dask_run, machines_to_fit, scalapack_run, Algorithm};
 use crate::config::{EngineConfig, ScalingMode, SubstrateConfig};
 use crate::drivers;
 use crate::engine::Engine;
+use crate::jobs::{JobId, JobManager, JobSpec};
 use crate::kernels::KernelExecutor;
 use crate::lambdapack::dag::Dag;
 use crate::lambdapack::interp::Env;
@@ -79,16 +80,24 @@ COMMANDS:
             [--workers K | --sf F --max-workers K] [--pipeline W]
             [--substrate SPEC] [--artifacts DIR]
             [--set key=value]...
+  jobs      run several jobs concurrently on one multi-tenant service
+            (shared substrate + shared worker fleet)
+            --specs algo:N:BLOCK[:CLASS],...   (--jobs is an alias;
+            algo: cholesky|gemm; CLASS is the scheduling class — 0
+            normal, higher = more urgent, negative = background)
+            [--workers K | --sf F --max-workers K] [--pipeline W]
+            [--substrate SPEC] [--set key=value]...
   simulate  paper-scale discrete-event simulation (runs on the same
             substrate backends as the engine, virtual-time clock)
             --algo NAME --n DIM --block B --workers K [--sf F] [--pipeline W]
             [--substrate SPEC]
             [--compare-scalapack true] [--compare-dask true]
 
-            SPEC is strict | sharded[:N], optionally with a chaos
+            SPEC is strict | sharded[:N|auto], optionally with a chaos
             decorator: sharded:16+chaos(err=0.01,lat=lognorm:5ms).
+            sharded:auto sizes the shard count from the worker pool.
             Chaos clauses: err/drop/dup (probabilities),
-            lat|read_lat|write_lat|recv_lat|kv_lat (D | fixed:D |
+            lat|read_lat|write_lat|send_lat|recv_lat|kv_lat (D | fixed:D |
             uniform:LO:HI | lognorm:MED[:SIGMA]), straggle=FRAC:MULT,
             seed=N. Chaos specs contain commas — pass them via
             --substrate (not --set, which splits on commas).
@@ -104,6 +113,7 @@ pub fn run_cli(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.command.as_str() {
         "run" => cmd_run(&args),
+        "jobs" => cmd_jobs(&args),
         "simulate" => cmd_simulate(&args),
         "analyze" => cmd_analyze(&args),
         "program" => cmd_program(&args),
@@ -134,10 +144,9 @@ fn resolve_program(args: &Args) -> Result<crate::lambdapack::ast::Program> {
         .program)
 }
 
-fn cmd_run(args: &Args) -> Result<()> {
-    let algo = args.require("algo")?.to_string();
-    let n: usize = args.num("n", 256)?;
-    let block: usize = args.num("block", 64)?;
+/// Engine/service config shared by `run` and `jobs`: scaling,
+/// pipeline, substrate, and `--set` overrides.
+fn engine_cfg_from(args: &Args) -> Result<EngineConfig> {
     let mut cfg = EngineConfig::default();
     if let Some(sf) = args.get("sf") {
         cfg.scaling = ScalingMode::Auto {
@@ -157,6 +166,14 @@ fn cmd_run(args: &Args) -> Result<()> {
             cfg.set(k, v)?;
         }
     }
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let algo = args.require("algo")?.to_string();
+    let n: usize = args.num("n", 256)?;
+    let block: usize = args.num("block", 64)?;
+    let cfg = engine_cfg_from(args)?;
     let kernels: Option<Arc<dyn KernelExecutor>> = match args.get("artifacts") {
         Some(dir) => Some(Arc::new(PjrtKernels::new(std::path::Path::new(dir), 2)?)),
         None => None,
@@ -234,6 +251,110 @@ fn cmd_run(args: &Args) -> Result<()> {
     );
     if let Some(e) = report.error {
         bail!("job error: {e}");
+    }
+    Ok(())
+}
+
+/// What `cmd_jobs` needs to verify a finished job's numerics.
+enum JobCheck {
+    Cholesky {
+        a: Matrix,
+        block: usize,
+        grid: usize,
+    },
+    Gemm {
+        a: Matrix,
+        b: Matrix,
+        block: usize,
+        grid: usize,
+    },
+}
+
+/// The multi-tenant driver: parse `--specs algo:N:BLOCK[:CLASS],…`,
+/// submit every job to one shared `JobManager`, wait for all of them,
+/// verify per-job numerics, and print per-job + fleet reports.
+fn cmd_jobs(args: &Args) -> Result<()> {
+    let specs = match args.get("specs").or_else(|| args.get("jobs")) {
+        Some(s) => s.to_string(),
+        None => bail!("missing --specs (or --jobs) algo:N:BLOCK[:CLASS],..."),
+    };
+    let cfg = engine_cfg_from(args)?;
+    let mgr = JobManager::new(cfg);
+    let mut rng = Rng::new(args.num("seed", 42u64)?);
+    let mut submitted: Vec<(JobId, JobCheck)> = Vec::new();
+    for s in specs.split(',') {
+        let parts: Vec<&str> = s.split(':').collect();
+        let (algo, n, block, class) = match parts.as_slice() {
+            [algo, n, block] => (*algo, n.parse::<usize>()?, block.parse::<usize>()?, 0i64),
+            [algo, n, block, class] => (*algo, n.parse()?, block.parse()?, class.parse::<i64>()?),
+            _ => bail!("bad job spec `{s}` (algo:N:BLOCK[:CLASS])"),
+        };
+        match algo {
+            "cholesky" => {
+                let a = Matrix::rand_spd(n, &mut rng);
+                let (env, inputs, grid) = drivers::stage_cholesky(&a, block)?;
+                let job = mgr.submit(
+                    JobSpec::new(programs::cholesky_spec().program, env, inputs)
+                        .with_class(class),
+                )?;
+                submitted.push((job, JobCheck::Cholesky { a, block, grid }));
+            }
+            "gemm" => {
+                let a = Matrix::randn(n, n, &mut rng);
+                let b = Matrix::randn(n, n, &mut rng);
+                let (env, inputs, grid) = drivers::stage_gemm(&a, &b, block)?;
+                let job = mgr.submit(
+                    JobSpec::new(programs::gemm_spec().program, env, inputs)
+                        .with_class(class),
+                )?;
+                submitted.push((job, JobCheck::Gemm { a, b, block, grid }));
+            }
+            other => bail!("jobs driver supports cholesky|gemm, got `{other}`"),
+        }
+    }
+    let mut failed = false;
+    for (job, check) in &submitted {
+        let r = mgr.wait(*job)?;
+        if let Some(e) = &r.error {
+            failed = true;
+            println!(
+                "{job} {:<8} class={} tasks={}/{} wall={:.3}s ERROR: {e}",
+                r.label, r.priority_class, r.completed, r.total_tasks, r.wall_secs
+            );
+            continue;
+        }
+        let fetch = |m: &str, idx: &[i64]| mgr.tile(*job, m, idx);
+        let rel = match check {
+            JobCheck::Cholesky { a, block, grid } => {
+                let l = drivers::collect_cholesky(&fetch, a.rows(), *block, *grid)?;
+                l.matmul_nt(&l).max_abs_diff(a) / a.fro_norm()
+            }
+            JobCheck::Gemm { a, b, block, grid } => {
+                let c = drivers::collect_gemm(&fetch, a.rows(), b.cols(), *block, *grid)?;
+                c.max_abs_diff(&a.matmul(b)) / a.fro_norm()
+            }
+        };
+        println!(
+            "{job} {:<8} class={} tasks={}/{} wall={:.3}s flops={:.3e} rel-err={rel:.2e}",
+            r.label,
+            r.priority_class,
+            r.completed,
+            r.total_tasks,
+            r.wall_secs,
+            r.total_flops as f64
+        );
+    }
+    let fleet = mgr.shutdown();
+    println!(
+        "fleet: workers={} idle-exits={} billed-core-secs={:.3} read={}B written={}B",
+        fleet.workers_spawned,
+        fleet.exits_idle,
+        fleet.core_secs_billed,
+        fleet.store.bytes_read,
+        fleet.store.bytes_written
+    );
+    if failed {
+        bail!("one or more jobs failed");
     }
     Ok(())
 }
@@ -461,6 +582,28 @@ mod tests {
              --substrate sharded:4+chaos(err=oops)",
         ))
         .is_err());
+    }
+
+    #[test]
+    fn tiny_jobs_driver_runs_concurrent_jobs() {
+        // Two jobs (one urgent) on one shared fleet, via the CLI.
+        run_cli(&argv(
+            "jobs --specs cholesky:24:8,gemm:18:6:1 --workers 4",
+        ))
+        .unwrap();
+        // Bad specs are rejected.
+        assert!(run_cli(&argv("jobs --specs cholesky:24 --workers 2")).is_err());
+        assert!(run_cli(&argv("jobs --specs tsqr:24:8 --workers 2")).is_err());
+        assert!(run_cli(&argv("jobs --workers 2")).is_err(), "missing --specs");
+    }
+
+    #[test]
+    fn tiny_jobs_driver_on_auto_substrate() {
+        // Also exercises the `--jobs` alias for `--specs`.
+        run_cli(&argv(
+            "jobs --jobs cholesky:16:8,cholesky:16:8 --workers 3 --substrate sharded:auto",
+        ))
+        .unwrap();
     }
 
     #[test]

@@ -40,11 +40,24 @@ pub enum SubstrateBackend {
     /// N-way key-hash sharding with per-shard locks and a
     /// work-stealing queue — the high-concurrency default.
     Sharded { shards: usize },
+    /// `sharded:auto` — the shard count is sized from the configured
+    /// worker pool at build time (see [`shards_for_workers`]), so a
+    /// 64-worker fleet gets more shards than a 4-worker one instead of
+    /// both landing on [`DEFAULT_SHARDS`].
+    ShardedAuto,
 }
 
 /// Default shard count for the sharded family: comfortably above the
 /// core counts we run on, so same-shard collisions are the exception.
 pub const DEFAULT_SHARDS: usize = 16;
+
+/// Resolve `sharded:auto`: two shards per configured worker keeps
+/// same-shard collisions the exception even when every worker is in a
+/// substrate call, rounded to a power of two (cheap modulo, stable
+/// spread) and clamped to a sane band.
+pub fn shards_for_workers(workers: usize) -> usize {
+    (workers.max(1) * 2).next_power_of_two().clamp(8, 512)
+}
 
 /// Substrate selection, settable as `substrate=strict` or
 /// `substrate=sharded[:N]`, optionally decorated with a chaos layer:
@@ -83,8 +96,23 @@ impl SubstrateConfig {
         }
     }
 
-    /// Parse `strict` | `sharded` | `sharded:N`, each optionally
-    /// followed by `+chaos(key=value,…)`.
+    /// Resolve backends whose parameters depend on the deployment
+    /// (currently `sharded:auto`, sized from the worker pool) into a
+    /// concrete backend. Already-concrete configs pass through.
+    pub fn resolve(&self, worker_hint: usize) -> Self {
+        match self.backend {
+            SubstrateBackend::ShardedAuto => SubstrateConfig {
+                backend: SubstrateBackend::Sharded {
+                    shards: shards_for_workers(worker_hint),
+                },
+                chaos: self.chaos,
+            },
+            _ => *self,
+        }
+    }
+
+    /// Parse `strict` | `sharded` | `sharded:N` | `sharded:auto`, each
+    /// optionally followed by `+chaos(key=value,…)`.
     pub fn parse(spec: &str) -> Result<Self> {
         let (base, chaos) = match spec.split_once('+') {
             None => (spec, None),
@@ -102,7 +130,11 @@ impl SubstrateConfig {
             None => match base {
                 "strict" => Self::strict(),
                 "sharded" => Self::default(),
-                _ => bail!("bad substrate spec `{base}` (strict | sharded[:N][+chaos(…)])"),
+                _ => bail!("bad substrate spec `{base}` (strict | sharded[:N|auto][+chaos(…)])"),
+            },
+            Some(("sharded", "auto")) => SubstrateConfig {
+                backend: SubstrateBackend::ShardedAuto,
+                chaos: None,
             },
             Some(("sharded", n)) => {
                 let shards: usize = n
@@ -113,7 +145,7 @@ impl SubstrateConfig {
                 }
                 Self::sharded(shards)
             }
-            Some(_) => bail!("bad substrate spec `{base}` (strict | sharded[:N][+chaos(…)])"),
+            Some(_) => bail!("bad substrate spec `{base}` (strict | sharded[:N|auto][+chaos(…)])"),
         };
         cfg.chaos = chaos;
         Ok(cfg)
@@ -183,6 +215,15 @@ impl Default for EngineConfig {
 }
 
 impl EngineConfig {
+    /// How many workers this config can put in flight at once — the
+    /// sizing hint `sharded:auto` resolves its shard count from.
+    pub fn worker_hint(&self) -> usize {
+        match self.scaling {
+            ScalingMode::Fixed(n) => n,
+            ScalingMode::Auto { max_workers, .. } => max_workers,
+        }
+    }
+
     /// Apply a `key=value` override. Durations are given in
     /// (fractional) seconds; `scaling` is `fixed:N` or `auto:SF:MAX`;
     /// `substrate` is `strict` or `sharded[:N]`, optionally with a
@@ -307,6 +348,39 @@ mod tests {
         assert!(c.set("substrate", "sharded:0").is_err());
         assert!(c.set("substrate", "sharded:x").is_err());
         assert!(c.set("substrate", "redis").is_err());
+    }
+
+    #[test]
+    fn sharded_auto_resolves_from_worker_pool() {
+        let auto = SubstrateConfig::parse("sharded:auto").unwrap();
+        assert_eq!(auto.backend, SubstrateBackend::ShardedAuto);
+        // 2× workers, next power of two, clamped to [8, 512].
+        assert_eq!(shards_for_workers(1), 8);
+        assert_eq!(shards_for_workers(4), 8);
+        assert_eq!(shards_for_workers(16), 32);
+        assert_eq!(shards_for_workers(64), 128);
+        assert_eq!(shards_for_workers(10_000), 512);
+        assert_eq!(
+            auto.resolve(64).backend,
+            SubstrateBackend::Sharded { shards: 128 }
+        );
+        // Concrete configs pass through resolve untouched.
+        let fixed = SubstrateConfig::sharded(4);
+        assert_eq!(fixed.resolve(64), fixed);
+        // The chaos decorator survives resolution.
+        let chaotic = SubstrateConfig::parse("sharded:auto+chaos(err=0.1,seed=3)").unwrap();
+        let resolved = chaotic.resolve(4);
+        assert_eq!(resolved.backend, SubstrateBackend::Sharded { shards: 8 });
+        assert_eq!(resolved.chaos, chaotic.chaos);
+        // worker_hint tracks the scaling mode.
+        let mut e = EngineConfig::default();
+        e.scaling = ScalingMode::Fixed(6);
+        assert_eq!(e.worker_hint(), 6);
+        e.scaling = ScalingMode::Auto {
+            sf: 1.0,
+            max_workers: 48,
+        };
+        assert_eq!(e.worker_hint(), 48);
     }
 
     #[test]

@@ -12,6 +12,11 @@ use crate::lambdapack::programs;
 use crate::linalg::blocked::BlockedMatrix;
 use crate::linalg::matrix::Matrix;
 use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// How a collector fetches one output tile — `RunOutput::tile` for the
+/// single-job engine, `JobManager::tile` for multi-job submissions.
+pub type TileFetch<'a> = &'a dyn Fn(&str, &[i64]) -> Result<Arc<Matrix>>;
 
 fn grid_args(n_grid: usize) -> Env {
     [("N".to_string(), n_grid as i64)].into_iter().collect()
@@ -23,8 +28,11 @@ pub struct DriverOutput {
     pub run: RunOutput,
 }
 
-/// Blocked Cholesky: A (SPD) = L·Lᵀ. Returns dense L.
-pub fn cholesky(engine: &Engine, a: &Matrix, block: usize) -> Result<DriverOutput> {
+/// Stage a blocked Cholesky: grid args + lower-triangle seed tiles.
+/// Shared by the single-job [`cholesky`] driver and multi-job
+/// submissions through [`crate::jobs::JobManager`]. Returns
+/// `(args, inputs, grid_n)`.
+pub fn stage_cholesky(a: &Matrix, block: usize) -> Result<(Env, Vec<(Loc, Matrix)>, usize)> {
     if a.rows() != a.cols() {
         bail!("cholesky: matrix must be square");
     }
@@ -40,16 +48,21 @@ pub fn cholesky(engine: &Engine, a: &Matrix, block: usize) -> Result<DriverOutpu
             ));
         }
     }
-    let spec = programs::cholesky_spec();
-    let run = engine.run(&spec.program, &grid_args(n), inputs)?;
-    if let Some(e) = &run.report.error {
-        bail!("cholesky failed: {e}");
-    }
-    // Collect L from O[j, i], j ≥ i.
-    let mut out = BlockedMatrix::zeros(a.rows(), a.cols(), block);
-    for j in 0..n {
+    Ok((grid_args(n), inputs, n))
+}
+
+/// Reassemble dense L from a finished Cholesky job's output tiles
+/// (`O[j, i]`, j ≥ i).
+pub fn collect_cholesky(
+    fetch: TileFetch<'_>,
+    rows: usize,
+    block: usize,
+    n_grid: usize,
+) -> Result<Matrix> {
+    let mut out = BlockedMatrix::zeros(rows, rows, block);
+    for j in 0..n_grid {
         for i in 0..=j {
-            let tile = run.tile("O", &[j as i64, i as i64])?;
+            let tile = fetch("O", &[j as i64, i as i64])?;
             out.set_tile(j, i, (*tile).clone());
         }
     }
@@ -57,14 +70,36 @@ pub fn cholesky(engine: &Engine, a: &Matrix, block: usize) -> Result<DriverOutpu
     // Padded diagonal tiles factor the identity padding — the valid
     // region is untouched, but clear any padding leakage (none expected
     // for exact-multiple sizes).
-    if a.rows() % block != 0 {
-        result = result.window(0, 0, a.rows(), a.cols());
+    if rows % block != 0 {
+        result = result.window(0, 0, rows, rows);
     }
+    Ok(result)
+}
+
+/// Blocked Cholesky: A (SPD) = L·Lᵀ. Returns dense L.
+pub fn cholesky(engine: &Engine, a: &Matrix, block: usize) -> Result<DriverOutput> {
+    let (args, inputs, n) = stage_cholesky(a, block)?;
+    let spec = programs::cholesky_spec();
+    let run = engine.run(&spec.program, &args, inputs)?;
+    if let Some(e) = &run.report.error {
+        bail!("cholesky failed: {e}");
+    }
+    let result = collect_cholesky(
+        &|m: &str, idx: &[i64]| run.tile(m, idx),
+        a.rows(),
+        block,
+        n,
+    )?;
     Ok(DriverOutput { result, run })
 }
 
-/// Tiled GEMM: C = A·B (square, same size).
-pub fn gemm(engine: &Engine, a: &Matrix, b: &Matrix, block: usize) -> Result<DriverOutput> {
+/// Stage a tiled GEMM: grid args + masked A/B seed tiles. Returns
+/// `(args, inputs, grid_n)`.
+pub fn stage_gemm(
+    a: &Matrix,
+    b: &Matrix,
+    block: usize,
+) -> Result<(Env, Vec<(Loc, Matrix)>, usize)> {
     if a.cols() != b.rows() || a.rows() != a.cols() || b.rows() != b.cols() {
         bail!("gemm driver: square same-size matrices required");
     }
@@ -86,22 +121,44 @@ pub fn gemm(engine: &Engine, a: &Matrix, b: &Matrix, block: usize) -> Result<Dri
             ));
         }
     }
-    let spec = programs::gemm_spec();
-    let run = engine.run(&spec.program, &grid_args(n), inputs)?;
-    if let Some(e) = &run.report.error {
-        bail!("gemm failed: {e}");
-    }
-    let mut out = BlockedMatrix::zeros(a.rows(), b.cols(), block);
-    for i in 0..n {
-        for j in 0..n {
-            let tile = run.tile("Ctmp", &[i as i64, j as i64, n as i64 - 1])?;
+    Ok((grid_args(n), inputs, n))
+}
+
+/// Reassemble dense C from a finished GEMM job's final accumulator
+/// tiles (`Ctmp[i, j, N-1]`).
+pub fn collect_gemm(
+    fetch: TileFetch<'_>,
+    rows: usize,
+    cols: usize,
+    block: usize,
+    n_grid: usize,
+) -> Result<Matrix> {
+    let mut out = BlockedMatrix::zeros(rows, cols, block);
+    for i in 0..n_grid {
+        for j in 0..n_grid {
+            let tile = fetch("Ctmp", &[i as i64, j as i64, n_grid as i64 - 1])?;
             out.set_tile(i, j, (*tile).clone());
         }
     }
-    Ok(DriverOutput {
-        result: out.to_dense(),
-        run,
-    })
+    Ok(out.to_dense())
+}
+
+/// Tiled GEMM: C = A·B (square, same size).
+pub fn gemm(engine: &Engine, a: &Matrix, b: &Matrix, block: usize) -> Result<DriverOutput> {
+    let (args, inputs, n) = stage_gemm(a, b, block)?;
+    let spec = programs::gemm_spec();
+    let run = engine.run(&spec.program, &args, inputs)?;
+    if let Some(e) = &run.report.error {
+        bail!("gemm failed: {e}");
+    }
+    let result = collect_gemm(
+        &|m: &str, idx: &[i64]| run.tile(m, idx),
+        a.rows(),
+        b.cols(),
+        block,
+        n,
+    )?;
+    Ok(DriverOutput { result, run })
 }
 
 /// Zero out the padding region of a tile (including the unit diagonal

@@ -1,38 +1,30 @@
-//! The execution engine — Figure 6 wired together.
+//! The execution engine — Figure 6 wired together, single-job flavor.
 //!
-//! `Engine::run` takes a LAmbdaPACK program, its arguments, and the
-//! seeded input tiles, stands up the substrate (blob store, task
-//! queue, KV state — whichever backend family the config selects),
-//! enqueues the root tasks, manages the worker pool (fixed or
-//! auto-scaled), injects failures if asked, samples metrics, and waits
-//! for completion. Workers do all scheduling themselves
-//! (decentralized, §4); the engine only watches the completed-task
-//! counter. The engine holds the substrate purely through the
-//! `storage::traits` handles — it neither knows nor cares which
-//! backend is underneath.
+//! `Engine::run` is now a thin wrapper over the multi-tenant
+//! [`JobManager`](crate::jobs::JobManager): it stands up a one-job
+//! service (private substrate + worker fleet), submits the program,
+//! waits for it, tears the service down, and flattens the per-job
+//! [`JobReport`](crate::jobs::JobReport) + fleet-level
+//! [`FleetReport`](crate::jobs::FleetReport) pair back into the
+//! monolithic [`EngineReport`] the one-shot API (drivers, examples,
+//! benches) has always returned. Long-lived / concurrent callers
+//! should use the `JobManager` directly.
 
-use crate::config::{EngineConfig, ScalingMode};
-use crate::executor::worker::ExitReason;
-use crate::executor::{JobContext, KillSwitch};
+use crate::config::EngineConfig;
+use crate::jobs::{job_prefix, JobManager, JobSpec};
 use crate::kernels::{KernelExecutor, NativeKernels};
-use crate::lambdapack::analysis::{Analyzer, Loc};
+use crate::lambdapack::analysis::Loc;
 use crate::lambdapack::ast::Program;
-use crate::lambdapack::interp::{count_nodes, Env};
+use crate::lambdapack::interp::Env;
 use crate::linalg::matrix::Matrix;
-use crate::metrics::{MetricsHub, Sample, TaskRecord};
-use crate::provisioner::{run_provisioner, WorkerPool};
-use crate::storage::chaos::{blob_put_with_retry, with_blob_retry, CLIENT_BLOB_RETRIES};
-use crate::storage::{BlobStore, KvState, Queue, StoreStats, Substrate};
-use crate::util::prng::Rng;
-use anyhow::{bail, Context, Result};
-use std::sync::atomic::AtomicBool;
+use crate::metrics::{Sample, TaskRecord};
+use crate::storage::chaos::{with_blob_retry, CLIENT_BLOB_RETRIES};
+use crate::storage::{BlobStore, StoreStats};
+use anyhow::{Context, Result};
 use std::sync::Arc;
-use std::time::Duration;
-
-/// Client attribution id for seeded inputs (not a worker).
-pub const CLIENT_ID: usize = usize::MAX;
 
 pub use crate::config::EngineConfig as Config;
+pub use crate::jobs::CLIENT_ID;
 
 /// Everything a finished run reports.
 #[derive(Clone, Debug)]
@@ -70,6 +62,9 @@ impl EngineReport {
 pub struct RunOutput {
     pub report: EngineReport,
     pub store: Arc<dyn BlobStore>,
+    /// The job's key namespace inside the store (every multi-tenant
+    /// store is namespaced, even a single-job one).
+    pub prefix: String,
 }
 
 impl RunOutput {
@@ -78,7 +73,8 @@ impl RunOutput {
     /// inline retry budget; a genuinely missing tile errors at once.
     pub fn tile(&self, matrix: &str, idx: &[i64]) -> Result<Arc<Matrix>> {
         let loc = Loc::new(matrix, idx.to_vec());
-        with_blob_retry(CLIENT_BLOB_RETRIES, || self.store.get(CLIENT_ID, &loc.key()))
+        let key = loc.key_in(&self.prefix);
+        with_blob_retry(CLIENT_BLOB_RETRIES, || self.store.get(CLIENT_ID, &key))
             .with_context(|| format!("output tile {loc} missing"))
     }
 }
@@ -107,178 +103,43 @@ impl Engine {
         &self.cfg
     }
 
-    /// Run `program(args)` over `inputs` to completion.
+    /// Run `program(args)` over `inputs` to completion: a one-job
+    /// [`JobManager`] session.
     pub fn run(
         &self,
         program: &Program,
         args: &Env,
         inputs: Vec<(Loc, Matrix)>,
     ) -> Result<RunOutput> {
-        let analyzer = Arc::new(Analyzer::new(program, args));
-        let total = count_nodes(program, args)? as u64;
-        if total == 0 {
-            bail!("program `{}` has an empty iteration space", program.name);
-        }
-        let Substrate { blob: store, queue, state } =
-            Substrate::build(&self.cfg.substrate, self.cfg.lease, self.cfg.store_latency);
-        let metrics = MetricsHub::new();
-
-        // Client: seed input tiles, then enqueue the root tasks.
-        // Seeding retries transient chaos faults inline — there is no
-        // redelivery to recover a failed client put.
-        let chaos_on = self.cfg.substrate.chaos.is_some();
-        for (loc, tile) in inputs {
-            if chaos_on {
-                blob_put_with_retry(
-                    store.as_ref(),
-                    CLIENT_BLOB_RETRIES,
-                    CLIENT_ID,
-                    &loc.key(),
-                    tile,
-                )?;
-            } else {
-                store.put(CLIENT_ID, &loc.key(), tile)?;
-            }
-        }
-        let roots = analyzer.roots()?;
-        if roots.is_empty() {
-            bail!("program has no root tasks");
-        }
-        for root in &roots {
-            state.init_counter(&crate::executor::deps_key(root), 0);
-            queue.send(&root.id(), crate::executor::priority(root));
-        }
-
-        let ctx = Arc::new(JobContext {
-            queue: queue.clone(),
-            store: store.clone(),
-            state: state.clone(),
-            analyzer,
-            kernels: self.kernels.clone(),
-            metrics: metrics.clone(),
-            cfg: self.cfg.clone(),
-            kill: KillSwitch::default(),
-            done: AtomicBool::new(false),
-            total_tasks: total,
-        });
-
-        // Metrics sampler.
-        let sampler = {
-            let ctx = ctx.clone();
-            let period = self.cfg.sample_period;
-            std::thread::spawn(move || {
-                if period.is_zero() {
-                    return;
-                }
-                while !ctx.is_done() {
-                    ctx.metrics.sample(ctx.queue.len());
-                    std::thread::sleep(period);
-                }
-                ctx.metrics.sample(ctx.queue.len());
-            })
-        };
-
-        // Worker pool.
-        let pool = WorkerPool::default();
-        let provisioner = match self.cfg.scaling {
-            ScalingMode::Fixed(n) => {
-                for _ in 0..n {
-                    pool.spawn(ctx.clone(), false);
-                }
-                None
-            }
-            ScalingMode::Auto { sf, max_workers } => {
-                let ctx = ctx.clone();
-                let pool = pool.clone();
-                Some(std::thread::spawn(move || {
-                    run_provisioner(ctx, pool, sf, max_workers)
-                }))
-            }
-        };
-
-        // Failure injection (Figure 9b).
-        let failer = self.cfg.failure.map(|spec| {
-            let ctx = ctx.clone();
-            std::thread::spawn(move || {
-                std::thread::sleep(spec.at);
-                if ctx.is_done() {
-                    return 0usize;
-                }
-                let mut rng = Rng::new(0xFA11);
-                let mut ids = ctx.kill.registered();
-                rng.shuffle(&mut ids);
-                let live = ctx.metrics.live_workers();
-                let n_kill = ((live as f64) * spec.fraction).round() as usize;
-                let mut killed = 0;
-                for id in ids {
-                    if killed >= n_kill {
-                        break;
-                    }
-                    if ctx.kill.kill(id) {
-                        killed += 1;
-                    }
-                }
-                killed
-            })
-        });
-
-        // Wait for completion / error / timeout.
-        let sw = crate::util::timer::Stopwatch::start();
-        let mut error: Option<String> = None;
-        loop {
-            let completed = state.counter("completed_total") as u64;
-            if completed >= total {
-                break;
-            }
-            if let Some(e) = ctx.job_error() {
-                error = Some(e);
-                break;
-            }
-            if sw.elapsed() > self.cfg.job_timeout {
-                error = Some(format!(
-                    "job timeout after {:.1}s ({}/{} tasks done)",
-                    sw.secs(),
-                    completed,
-                    total
-                ));
-                break;
-            }
-            std::thread::sleep(Duration::from_millis(2));
-        }
-        ctx.set_done();
-        if error.is_some() {
-            ctx.kill.kill_all();
-        }
-        let wall_secs = sw.secs();
-
-        // Teardown.
-        if let Some(p) = provisioner {
-            let _ = p.join();
-        }
-        let exits = pool.join_all();
-        let _ = sampler.join();
-        if let Some(f) = failer {
-            let _ = f.join();
-        }
-
-        let samples = metrics.samples();
-        let core_secs_active = integrate_active(&samples);
+        let mgr = JobManager::with_kernels(self.cfg.clone(), self.kernels.clone());
+        let store = mgr.store();
+        // A rejected submit drops the manager, which shuts the fleet
+        // down cleanly.
+        let job = mgr.submit(JobSpec::new(program.clone(), args.clone(), inputs))?;
+        let jr = mgr.wait(job)?;
+        let prefix = job_prefix(job);
+        let fleet = mgr.shutdown();
+        let core_secs_active = integrate_active(&jr.samples);
         let report = EngineReport {
-            wall_secs,
-            total_tasks: total,
-            completed: state.counter("completed_total") as u64,
+            wall_secs: jr.wall_secs,
+            total_tasks: jr.total_tasks,
+            completed: jr.completed,
             core_secs_active,
-            core_secs_billed: metrics.billed_core_secs(),
-            total_flops: metrics.total_flops(),
-            store: store.stats(),
-            samples,
-            tasks: metrics.task_records(),
-            workers_spawned: pool.spawned_count(),
-            exits_idle: exits.iter().filter(|e| **e == ExitReason::Idle).count(),
-            exits_killed: exits.iter().filter(|e| **e == ExitReason::Killed).count(),
-            error,
+            core_secs_billed: fleet.core_secs_billed,
+            total_flops: jr.total_flops,
+            store: fleet.store,
+            samples: jr.samples,
+            tasks: jr.tasks,
+            workers_spawned: fleet.workers_spawned,
+            exits_idle: fleet.exits_idle,
+            exits_killed: fleet.exits_killed,
+            error: jr.error,
         };
-        Ok(RunOutput { report, store })
+        Ok(RunOutput {
+            report,
+            store,
+            prefix,
+        })
     }
 }
 

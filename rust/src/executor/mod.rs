@@ -1,4 +1,4 @@
-//! The stateless executor (§4 steps 3–4, §4.1, §4.2).
+//! The stateless executor (§4 steps 3–4, §4.1, §4.2) — multi-tenant.
 //!
 //! A worker is the analogue of one Lambda invocation: a single "core"
 //! that repeatedly leases a task from the queue, reads its input tiles
@@ -7,11 +7,23 @@
 //! enqueues any children whose dependencies are now met (decentralized
 //! scheduling — there is no driver holding the DAG).
 //!
+//! Workers are **job-agnostic**: the fleet serves every job the
+//! [`crate::jobs::JobManager`] has registered against one shared
+//! substrate. A queue message carries `job_id|node_id`; at receive
+//! time the worker resolves the per-job context (program analyzer, key
+//! namespace, per-job metrics) from the fleet registry instead of
+//! being born bound to one job. All of a job's blob and KV keys are
+//! prefixed with its namespace (`j3/…`), so concurrent jobs cannot
+//! collide in the shared stores.
+//!
 //! * [`worker`] — the worker loop, with the §4.2 read/compute/write
 //!   pipeline (pipeline width = tasks in flight per worker).
 //! * [`lease`] — background lease renewal; a dead worker stops renewing
 //!   and its task becomes visible again (§4.1 failure detection).
-//! * [`JobContext`] — everything a worker shares with the engine.
+//! * [`FleetContext`] — what every worker shares: the substrate
+//!   handles, fleet metrics, the kill switch, and the job registry.
+//! * [`JobContext`] — one job's slice: analyzer, key namespace,
+//!   scheduling class, per-job metrics.
 //! * [`propagate`] — the idempotent dependency-propagation protocol
 //!   (DESIGN.md §5): lazy counter init + per-edge guarded decrement.
 
@@ -19,43 +31,49 @@ pub mod lease;
 pub mod worker;
 
 use crate::config::EngineConfig;
+use crate::jobs::{job_prefix, JobId};
 use crate::kernels::KernelExecutor;
-use crate::lambdapack::analysis::Analyzer;
+use crate::lambdapack::analysis::{Analyzer, Loc};
 use crate::lambdapack::interp::Node;
 use crate::metrics::MetricsHub;
-use crate::storage::{BlobStore, KvState, Queue};
+use crate::storage::{BlobStore, KvState, Queue, Substrate};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::fmt::Write as _;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
 
-/// Status keys in the state store.
-pub fn status_key(node: &Node) -> String {
-    format!("status:{}", node.id())
-}
-
-/// Dependency-counter key.
-pub fn deps_key(node: &Node) -> String {
-    format!("deps:{}", node.id())
-}
-
-/// Per-edge decrement-guard key.
-pub fn edge_key(parent: &Node, child: &Node) -> String {
-    format!("edge:{}:{}", parent.id(), child.id())
-}
-
-/// Queue priority for a node: earlier program lines first (the
-/// factorization pivot chain — `chol` before `trsm` before `syrk` —
-/// sits on the critical path). Every task from the same program line
-/// shares this value; the queue backends break the tie FIFO by global
-/// enqueue sequence number (the `storage::traits::Queue` contract)
-/// instead of arbitrary heap order. That FIFO order is exact on the
-/// globally-ordered backends (`strict`, `sharded:1`); the sharded
-/// default keeps it per shard and is only best-effort across shards —
-/// correctness never depends on ordering, only schedule quality.
+/// Within-job queue priority for a node: earlier program lines first
+/// (the factorization pivot chain — `chol` before `trsm` before
+/// `syrk` — sits on the critical path). Every task from the same
+/// program line shares this value; the queue backends break the tie
+/// FIFO by global enqueue sequence number (the
+/// `storage::traits::Queue` contract) instead of arbitrary heap order.
+/// That FIFO order is exact on the globally-ordered backends
+/// (`strict`, `sharded:1`); the sharded default keeps it per shard and
+/// is only best-effort across shards — correctness never depends on
+/// ordering, only schedule quality.
 pub fn priority(node: &Node) -> i64 {
     -(node.line as i64)
+}
+
+/// Stride between job scheduling classes in the composite priority:
+/// far larger than any program's line count, so the class always
+/// dominates the line order.
+pub const CLASS_STRIDE: i64 = 1 << 32;
+
+/// The composite queue priority of the multi-tenant service: job
+/// scheduling class first (an urgent class jumps every lower class's
+/// backlog — how a small interactive job avoids starving behind a
+/// large batch job), then the within-job line order, then the queue's
+/// FIFO-by-enqueue tiebreak. Within one class, concurrent jobs
+/// interleave fairly by arrival: tasks enqueue as their dependencies
+/// complete, so no job can monopolize the fleet beyond its frontier.
+pub fn composite_priority(class: i64, node: &Node) -> i64 {
+    class
+        .saturating_mul(CLASS_STRIDE)
+        .saturating_add(priority(node))
 }
 
 /// Per-worker kill switches for failure injection (Figure 9b).
@@ -94,23 +112,155 @@ impl KillSwitch {
     }
 }
 
-/// Shared job state: the substrate handles plus control flags.
-pub struct JobContext {
+/// Everything the shared, job-agnostic worker fleet holds: the one
+/// substrate every job runs on, the fleet-level metrics hub, the kill
+/// switch, and the registry that resolves a queue message's job id to
+/// its per-job context.
+pub struct FleetContext {
     pub queue: Arc<dyn Queue>,
     pub store: Arc<dyn BlobStore>,
     pub state: Arc<dyn KvState>,
-    pub analyzer: Arc<Analyzer>,
     pub kernels: Arc<dyn KernelExecutor>,
+    /// Fleet-level hub: worker lifecycle (live count, billed seconds)
+    /// and the aggregate sample series.
     pub metrics: MetricsHub,
+    /// Fleet-level knobs (lease, pipeline width, runtime limit,
+    /// substrate, scaling). The substrate spec is stored already
+    /// resolved (`sharded:auto` → a concrete shard count sized from
+    /// the worker pool).
     pub cfg: EngineConfig,
     pub kill: KillSwitch,
-    /// Set by the engine when all tasks have completed (or the job
-    /// aborted); workers drain and exit.
-    pub done: AtomicBool,
+    shutdown: AtomicBool,
+    jobs: RwLock<HashMap<u64, Arc<JobContext>>>,
+}
+
+impl FleetContext {
+    /// Stand up one shared substrate for the whole fleet.
+    pub fn new(mut cfg: EngineConfig, kernels: Arc<dyn KernelExecutor>) -> FleetContext {
+        cfg.substrate = cfg.substrate.resolve(cfg.worker_hint());
+        let Substrate { blob, queue, state } =
+            Substrate::build(&cfg.substrate, cfg.lease, cfg.store_latency);
+        FleetContext {
+            queue,
+            store: blob,
+            state,
+            kernels,
+            metrics: MetricsHub::new(),
+            cfg,
+            kill: KillSwitch::default(),
+            shutdown: AtomicBool::new(false),
+            jobs: RwLock::new(HashMap::new()),
+        }
+    }
+
+    /// Make a job resolvable by the fleet.
+    pub fn register(&self, ctx: Arc<JobContext>) {
+        self.jobs.write().unwrap().insert(ctx.job.0, ctx);
+    }
+
+    /// Remove a finished/canceled job from the registry; its residual
+    /// queue messages drain as workers receive and drop them.
+    pub fn unregister(&self, job: JobId) -> Option<Arc<JobContext>> {
+        self.jobs.write().unwrap().remove(&job.0)
+    }
+
+    /// Resolve a message's job id to its context (`None` once the job
+    /// has finished and been unregistered).
+    pub fn job(&self, id: u64) -> Option<Arc<JobContext>> {
+        self.jobs.read().unwrap().get(&id).cloned()
+    }
+
+    /// Snapshot of the currently-registered jobs, in job-id order.
+    pub fn active_jobs(&self) -> Vec<Arc<JobContext>> {
+        let mut v: Vec<Arc<JobContext>> = self.jobs.read().unwrap().values().cloned().collect();
+        v.sort_by_key(|c| c.job.0);
+        v
+    }
+
+    pub fn active_job_count(&self) -> usize {
+        self.jobs.read().unwrap().len()
+    }
+
+    /// Fleet-wide shutdown flag: set by the manager once it is done;
+    /// workers drain and exit.
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    pub fn set_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+}
+
+/// One job's slice of the service: its analyzer, key namespace,
+/// scheduling class, per-job metrics, and control flags — plus clones
+/// of the shared substrate handles so `propagate` and client-side
+/// helpers need no back-pointer to the fleet.
+pub struct JobContext {
+    pub job: JobId,
+    pub label: String,
+    /// Key namespace, e.g. `"j3/"` — prepended to every blob tile key
+    /// and every KV key (status, deps, edges, counters) this job
+    /// touches, so concurrent jobs cannot collide in the shared
+    /// substrate.
+    pub prefix: String,
+    /// Scheduling class — the high-order component of the composite
+    /// queue priority. 0 = normal, higher = more urgent, negative =
+    /// background.
+    pub priority_class: i64,
+    pub analyzer: Arc<Analyzer>,
+    /// Per-job hub: this job's task records, flop counts, samples.
+    pub metrics: MetricsHub,
     pub total_tasks: u64,
+    /// When the job was submitted (its wall-clock origin and timeout
+    /// anchor).
+    pub submitted: Instant,
+    done: AtomicBool,
+    canceled: AtomicBool,
+    /// Approximate count of this job's messages in the shared queue
+    /// (sends minus deletes) — the per-job `pending` sample. Chaos
+    /// duplication happens below this layer, so the estimate can drift
+    /// transiently; it is clamped at zero and never used for
+    /// correctness.
+    in_queue: AtomicI64,
+    // Shared substrate handles (clones of the fleet's).
+    pub queue: Arc<dyn Queue>,
+    pub store: Arc<dyn BlobStore>,
+    pub state: Arc<dyn KvState>,
 }
 
 impl JobContext {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        job: JobId,
+        label: impl Into<String>,
+        priority_class: i64,
+        analyzer: Arc<Analyzer>,
+        total_tasks: u64,
+        queue: Arc<dyn Queue>,
+        store: Arc<dyn BlobStore>,
+        state: Arc<dyn KvState>,
+    ) -> JobContext {
+        JobContext {
+            job,
+            label: label.into(),
+            prefix: job_prefix(job),
+            priority_class,
+            analyzer,
+            metrics: MetricsHub::new(),
+            total_tasks,
+            submitted: Instant::now(),
+            done: AtomicBool::new(false),
+            canceled: AtomicBool::new(false),
+            in_queue: AtomicI64::new(0),
+            queue,
+            store,
+            state,
+        }
+    }
+
+    /// Set once the job has completed, failed, timed out, or been
+    /// canceled; workers drop (and delete) its remaining messages.
     pub fn is_done(&self) -> bool {
         self.done.load(Ordering::SeqCst)
     }
@@ -119,14 +269,93 @@ impl JobContext {
         self.done.store(true, Ordering::SeqCst);
     }
 
-    /// Record a fatal task error; the engine aborts the job.
+    pub fn is_canceled(&self) -> bool {
+        self.canceled.load(Ordering::SeqCst)
+    }
+
+    /// Cancel: mark done so the fleet drains this job's messages. The
+    /// manager's monitor turns this into a final canceled report.
+    pub fn cancel(&self) {
+        self.canceled.store(true, Ordering::SeqCst);
+        self.set_done();
+    }
+
+    // ---- key namespace ------------------------------------------------
+
+    /// Status key in the state store.
+    pub fn status_key(&self, node: &Node) -> String {
+        format!("{}status:{}", self.prefix, node.id())
+    }
+
+    /// Dependency-counter key.
+    pub fn deps_key(&self, node: &Node) -> String {
+        format!("{}deps:{}", self.prefix, node.id())
+    }
+
+    /// Per-edge decrement-guard key.
+    pub fn edge_key(&self, parent: &Node, child: &Node) -> String {
+        format!("{}edge:{}:{}", self.prefix, parent.id(), child.id())
+    }
+
+    /// The job's completed-task counter key.
+    pub fn completed_key(&self) -> String {
+        format!("{}completed_total", self.prefix)
+    }
+
+    /// The job's fatal-error key.
+    pub fn error_key(&self) -> String {
+        format!("{}job:error", self.prefix)
+    }
+
+    /// Namespaced object-store key for a tile location.
+    pub fn blob_key(&self, loc: &Loc) -> String {
+        loc.key_in(&self.prefix)
+    }
+
+    /// The queue-message body for a task: `job_id|node_id` — what lets
+    /// a job-agnostic worker route the message back to this context.
+    pub fn msg_body(&self, node: &Node) -> String {
+        format!("{}|{}", self.job.0, node.id())
+    }
+
+    // ---- queue ---------------------------------------------------------
+
+    /// This job's component of the shared queue's composite priority.
+    pub fn task_priority(&self, node: &Node) -> i64 {
+        composite_priority(self.priority_class, node)
+    }
+
+    /// Enqueue one of this job's tasks on the shared queue.
+    pub fn send_task(&self, node: &Node) {
+        self.in_queue.fetch_add(1, Ordering::Relaxed);
+        self.queue.send(&self.msg_body(node), self.task_priority(node));
+    }
+
+    /// Bookkeeping for a deleted message of this job.
+    pub fn task_deleted(&self) {
+        self.in_queue.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Approximate number of this job's messages in the shared queue.
+    pub fn queued_estimate(&self) -> usize {
+        self.in_queue.load(Ordering::Relaxed).max(0) as usize
+    }
+
+    /// Completed-task count from the state store.
+    pub fn completed(&self) -> u64 {
+        self.state.counter(&self.completed_key()).max(0) as u64
+    }
+
+    // ---- errors --------------------------------------------------------
+
+    /// Record a fatal task error; the manager's monitor aborts the job.
     pub fn report_error(&self, node: &Node, err: &anyhow::Error) {
         self.state
-            .set_nx("job:error", &format!("task {}: {err:#}", node.id()));
+            .set_nx(&self.error_key(), &format!("task {}: {err:#}", node.id()));
     }
 
     pub fn job_error(&self) -> Option<String> {
-        self.state.get("job:error")
+        self.state.get(&self.error_key())
     }
 }
 
@@ -144,35 +373,36 @@ pub fn propagate(ctx: &JobContext, node: &Node) -> Result<usize> {
     let children = ctx.analyzer.children(node)?;
     let mut enqueued = 0;
     // §Perf: this is the per-task hot path — node ids are built once,
-    // state-store keys are formatted into two reused buffers instead
-    // of fresh allocations per edge, and the child's parent count
-    // comes from the analyzer's memo (`Analyzer::parent_count`) so a
-    // k-parent child costs one reverse solve per job, not one per
-    // completing parent. perf_l3_overhead prints the measured
-    // cold-vs-memoized cost.
+    // state-store keys (job prefix included) are formatted into two
+    // reused buffers instead of fresh allocations per edge, and the
+    // child's parent count comes from the analyzer's sharded memo
+    // (`Analyzer::parent_count`) so a k-parent child costs one reverse
+    // solve per job, not one per completing parent. perf_l3_overhead
+    // prints the measured cold-vs-memoized cost and the memo's
+    // contention profile.
     let node_id = node.id();
-    let mut dk = String::with_capacity(48);
-    let mut ek = String::with_capacity(96);
+    let mut dk = String::with_capacity(64);
+    let mut ek = String::with_capacity(112);
     for child in &children {
         let child_id = child.id();
         dk.clear();
-        let _ = write!(dk, "deps:{child_id}");
+        let _ = write!(dk, "{}deps:{child_id}", ctx.prefix);
         if !ctx.state.counter_exists(&dk) {
             let total = ctx.analyzer.parent_count(child)?;
             ctx.state.init_counter(&dk, total);
         }
         ek.clear();
-        let _ = write!(ek, "edge:{node_id}:{child_id}");
+        let _ = write!(ek, "{}edge:{node_id}:{child_id}", ctx.prefix);
         let remaining = ctx.state.edge_decr(&ek, &dk);
         if remaining <= 0 {
             // Skip enqueue if the child already completed (safe
             // optimization: completion is durable before delete).
             ek.clear();
-            let _ = write!(ek, "status:{child_id}");
+            let _ = write!(ek, "{}status:{child_id}", ctx.prefix);
             let already_done =
                 ctx.state.get(&ek).as_deref() == Some(crate::storage::status::COMPLETED);
             if !already_done {
-                ctx.queue.send(&child_id, priority(child));
+                ctx.send_task(child);
                 enqueued += 1;
             }
         }
@@ -186,29 +416,33 @@ mod tests {
     use crate::config::SubstrateConfig;
     use crate::lambdapack::interp::Env;
     use crate::lambdapack::programs;
-    use crate::storage::Substrate;
     use std::time::Duration;
 
     fn ctx_for(n: i64) -> JobContext {
-        let program = programs::cholesky();
-        let args: Env = [("N".to_string(), n)].into_iter().collect();
-        let sub = Substrate::build(
+        ctx_with(JobId(1), 0, n, &strict_substrate())
+    }
+
+    fn strict_substrate() -> Substrate {
+        Substrate::build(
             &SubstrateConfig::strict(),
             Duration::from_secs(5),
             Duration::ZERO,
-        );
-        JobContext {
-            queue: sub.queue,
-            store: sub.blob,
-            state: sub.state,
-            analyzer: Arc::new(Analyzer::new(&program, &args)),
-            kernels: Arc::new(crate::kernels::NativeKernels),
-            metrics: MetricsHub::new(),
-            cfg: EngineConfig::default(),
-            kill: KillSwitch::default(),
-            done: AtomicBool::new(false),
-            total_tasks: 0,
-        }
+        )
+    }
+
+    fn ctx_with(job: JobId, class: i64, n: i64, sub: &Substrate) -> JobContext {
+        let program = programs::cholesky();
+        let args: Env = [("N".to_string(), n)].into_iter().collect();
+        JobContext::new(
+            job,
+            "test",
+            class,
+            Arc::new(Analyzer::new(&program, &args)),
+            0,
+            sub.queue.clone(),
+            sub.blob.clone(),
+            sub.state.clone(),
+        )
     }
 
     fn env(pairs: &[(&str, i64)]) -> Env {
@@ -224,6 +458,7 @@ mod tests {
         let enq = propagate(&ctx, &node).unwrap();
         assert_eq!(enq, 2);
         assert_eq!(ctx.queue.len(), 2);
+        assert_eq!(ctx.queued_estimate(), 2);
     }
 
     #[test]
@@ -240,13 +475,14 @@ mod tests {
         // After both trsms: syrk(0,1,1) [parent t01 only], syrk(0,2,1)
         // [both], syrk(0,2,2) [t02 only] all enqueued.
         assert!(after > before);
-        // syrk(0,2,1) must appear exactly once despite two parents.
+        // syrk(0,2,1) must appear exactly once despite two parents —
+        // bodies carry the job id of the enqueuing context.
         let mut seen = Vec::new();
         while let Some((body, lease)) = ctx.queue.receive() {
             seen.push(body.clone());
             ctx.queue.delete(&lease);
         }
-        let count = seen.iter().filter(|b| *b == "2@i=0,j=2,k=1").count();
+        let count = seen.iter().filter(|b| *b == "1|2@i=0,j=2,k=1").count();
         assert_eq!(count, 1, "queue contents: {seen:?}");
     }
 
@@ -269,7 +505,7 @@ mod tests {
         }
         for child in ctx.analyzer.children(&node).unwrap() {
             ctx.state
-                .set(&status_key(&child), crate::storage::status::COMPLETED);
+                .set(&ctx.status_key(&child), crate::storage::status::COMPLETED);
         }
         let second = propagate(&ctx, &node).unwrap();
         assert_eq!(first, 2);
@@ -285,14 +521,98 @@ mod tests {
         let node = Node::new(0, env(&[("i", 0)]));
         // Simulate the decrement-only half: init counters and mark edges.
         for child in ctx.analyzer.children(&node).unwrap() {
-            let dk = deps_key(&child);
+            let dk = ctx.deps_key(&child);
             ctx.state.init_counter(&dk, 1);
-            ctx.state.edge_decr(&edge_key(&node, &child), &dk);
+            ctx.state.edge_decr(&ctx.edge_key(&node, &child), &dk);
         }
         assert!(ctx.queue.is_empty());
         // Re-execution observes 0 and enqueues.
         let enq = propagate(&ctx, &node).unwrap();
         assert_eq!(enq, 2);
+    }
+
+    #[test]
+    fn namespaced_keys_isolate_jobs_on_one_substrate() {
+        // Two jobs with identical programs on one shared substrate:
+        // the same node's keys must never collide.
+        let sub = strict_substrate();
+        let j1 = ctx_with(JobId(1), 0, 3, &sub);
+        let j2 = ctx_with(JobId(2), 0, 3, &sub);
+        let node = Node::new(0, env(&[("i", 0)]));
+        assert_ne!(j1.status_key(&node), j2.status_key(&node));
+        assert_ne!(j1.deps_key(&node), j2.deps_key(&node));
+        assert_ne!(j1.completed_key(), j2.completed_key());
+        assert_ne!(j1.error_key(), j2.error_key());
+        let loc = Loc::new("S", vec![0, 1, 1]);
+        assert_ne!(j1.blob_key(&loc), j2.blob_key(&loc));
+        assert_eq!(j1.blob_key(&loc), "j1/S[0,1,1]");
+        // Completed counters stay per job.
+        j1.state.incr(&j1.completed_key(), 3);
+        assert_eq!(j1.completed(), 3);
+        assert_eq!(j2.completed(), 0);
+        // Error isolation.
+        j1.report_error(&node, &anyhow::anyhow!("boom"));
+        assert!(j1.job_error().is_some());
+        assert!(j2.job_error().is_none());
+    }
+
+    #[test]
+    fn composite_priority_ranks_class_then_line() {
+        let line0 = Node::new(0, env(&[("i", 0)]));
+        let line5 = Node::new(5, env(&[("i", 0)]));
+        // A higher class beats any line advantage.
+        assert!(composite_priority(1, &line5) > composite_priority(0, &line0));
+        // Within a class, earlier lines win (the original ordering).
+        assert!(composite_priority(0, &line0) > composite_priority(0, &line5));
+        // Background classes sort below normal.
+        assert!(composite_priority(-1, &line0) < composite_priority(0, &line5));
+    }
+
+    #[test]
+    fn urgent_job_tasks_jump_the_shared_queue() {
+        let sub = strict_substrate();
+        let batch = ctx_with(JobId(1), 0, 3, &sub);
+        let urgent = ctx_with(JobId(2), 1, 3, &sub);
+        // The batch job enqueues its best-priority task first…
+        batch.send_task(&Node::new(0, env(&[("i", 0)])));
+        // …then the urgent job enqueues a deep-line task.
+        urgent.send_task(&Node::new(2, env(&[("i", 0), ("j", 1), ("k", 1)])));
+        let (body, lease) = sub.queue.receive().unwrap();
+        assert!(
+            body.starts_with("2|"),
+            "urgent job must pop first, got {body}"
+        );
+        sub.queue.delete(&lease);
+        let (body, _) = sub.queue.receive().unwrap();
+        assert!(body.starts_with("1|"));
+    }
+
+    #[test]
+    fn fleet_registry_resolves_and_unregisters() {
+        let fleet = FleetContext::new(
+            EngineConfig {
+                scaling: crate::config::ScalingMode::Fixed(0),
+                ..EngineConfig::default()
+            },
+            Arc::new(crate::kernels::NativeKernels),
+        );
+        assert_eq!(fleet.active_job_count(), 0);
+        let sub = Substrate {
+            blob: fleet.store.clone(),
+            queue: fleet.queue.clone(),
+            state: fleet.state.clone(),
+        };
+        let ctx = Arc::new(ctx_with(JobId(7), 0, 3, &sub));
+        fleet.register(ctx.clone());
+        assert_eq!(fleet.active_job_count(), 1);
+        assert!(fleet.job(7).is_some());
+        assert!(fleet.job(8).is_none());
+        assert_eq!(fleet.active_jobs()[0].job, JobId(7));
+        assert!(fleet.unregister(JobId(7)).is_some());
+        assert!(fleet.job(7).is_none());
+        assert!(!fleet.is_shutdown());
+        fleet.set_shutdown();
+        assert!(fleet.is_shutdown());
     }
 
     #[test]

@@ -6,6 +6,14 @@
 //! a fresh cold start), no state carried between tasks beyond the
 //! in-flight pipeline.
 //!
+//! Workers are job-agnostic (the multi-tenant refactor): they poll the
+//! fleet's shared queue, and every received message (`job_id|node_id`)
+//! is routed to its job's context — analyzer, key namespace, per-job
+//! metrics — via the [`FleetContext`] registry. One worker's pipeline
+//! can hold tasks of several jobs at once. Messages of finished or
+//! canceled jobs (no registry entry, or context marked done) are
+//! deleted on receipt — that is how a canceled job's backlog drains.
+//!
 //! §4.2 pipelining: "every LAmbdaPACK instruction block has three
 //! execution phases: read, compute and write … we allow a worker to
 //! fetch multiple tasks and run them in parallel" — implemented as
@@ -15,14 +23,14 @@
 //! tasks overlap with it.
 
 use crate::executor::lease::{LeaseRegistry, LeaseRenewer};
-use crate::executor::{propagate, status_key, JobContext};
+use crate::executor::{propagate, FleetContext, JobContext};
 use crate::lambdapack::analysis::ConcreteTask;
 use crate::lambdapack::interp::Node;
 use crate::linalg::matrix::Matrix;
 use crate::storage::chaos::{
     blob_put_with_retry, is_transient, with_blob_retry, WORKER_BLOB_RETRIES,
 };
-use crate::storage::{status, BlobStore, KvState, Queue};
+use crate::storage::{status, BlobStore as _, KvState as _, Queue as _};
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender};
@@ -32,18 +40,18 @@ use std::time::{Duration, Instant};
 /// Tile write with the worker's transient-fault retry budget. Without
 /// a chaos layer no transient failures exist — skip the retry
 /// machinery (and its per-attempt clone) on that hot path.
-fn put_with_retry(ctx: &JobContext, worker: usize, key: &str, tile: Matrix) -> Result<()> {
-    if ctx.cfg.substrate.chaos.is_none() {
-        return ctx.store.put(worker, key, tile);
+fn put_with_retry(fleet: &FleetContext, worker: usize, key: &str, tile: Matrix) -> Result<()> {
+    if fleet.cfg.substrate.chaos.is_none() {
+        return fleet.store.put(worker, key, tile);
     }
-    blob_put_with_retry(ctx.store.as_ref(), WORKER_BLOB_RETRIES, worker, key, tile)
+    blob_put_with_retry(fleet.store.as_ref(), WORKER_BLOB_RETRIES, worker, key, tile)
 }
 
 /// Why a worker exited.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ExitReason {
-    /// Job completed (or aborted).
-    JobDone,
+    /// The fleet shut down (all jobs done or the service stopped).
+    FleetDone,
     /// Idle past `T_timeout` with `exit_on_idle` (auto-scaling down).
     Idle,
     /// Failure injection.
@@ -55,11 +63,15 @@ pub enum ExitReason {
 pub struct WorkerParams {
     pub id: usize,
     /// Auto-scaled workers exit when idle (scale-down §4.2); fixed-pool
-    /// workers poll until the job finishes.
+    /// workers poll until the fleet shuts down.
     pub exit_on_idle: bool,
 }
 
 struct WorkItem {
+    /// The task's job — resolved from the message at receive time.
+    ctx: Arc<JobContext>,
+    /// The raw queue-message body (`job|node`) — the lease-registry key.
+    body: String,
     node: Node,
     task: ConcreteTask,
     inputs: Vec<Arc<Matrix>>,
@@ -71,6 +83,8 @@ struct WorkItem {
 }
 
 struct DoneItem {
+    ctx: Arc<JobContext>,
+    body: String,
     node: Node,
     task: ConcreteTask,
     outputs: Vec<Matrix>,
@@ -82,25 +96,25 @@ struct DoneItem {
     bytes_read: u64,
 }
 
-/// Run a worker until the job ends (or it is killed / scaled down).
-/// Emulates successive function invocations: each invocation lasts at
-/// most `runtime_limit`, then the worker re-enters with a fresh cold
-/// start.
-pub fn run_worker(ctx: Arc<JobContext>, params: WorkerParams) -> ExitReason {
-    let kill = ctx.kill.register(params.id);
-    ctx.metrics.worker_started();
+/// Run a worker until the fleet shuts down (or it is killed / scaled
+/// down). Emulates successive function invocations: each invocation
+/// lasts at most `runtime_limit`, then the worker re-enters with a
+/// fresh cold start.
+pub fn run_worker(fleet: Arc<FleetContext>, params: WorkerParams) -> ExitReason {
+    let kill = fleet.kill.register(params.id);
+    fleet.metrics.worker_started();
     let worker_birth = Instant::now();
     let reason = loop {
         // One "invocation".
-        if !ctx.cfg.cold_start.is_zero() {
-            std::thread::sleep(ctx.cfg.cold_start);
+        if !fleet.cfg.cold_start.is_zero() {
+            std::thread::sleep(fleet.cfg.cold_start);
         }
-        match run_invocation(&ctx, &params, &kill) {
+        match run_invocation(&fleet, &params, &kill) {
             InvocationEnd::RuntimeLimit => continue, // re-invoked
             InvocationEnd::Exit(r) => break r,
         }
     };
-    ctx.metrics.worker_stopped(worker_birth.elapsed());
+    fleet.metrics.worker_stopped(worker_birth.elapsed());
     reason
 }
 
@@ -110,38 +124,34 @@ enum InvocationEnd {
 }
 
 fn run_invocation(
-    ctx: &Arc<JobContext>,
+    fleet: &Arc<FleetContext>,
     params: &WorkerParams,
     kill: &Arc<AtomicBool>,
 ) -> InvocationEnd {
-    let pw = ctx.cfg.pipeline_width.max(1);
+    let pw = fleet.cfg.pipeline_width.max(1);
     let registry = LeaseRegistry::default();
-    let renewer = LeaseRenewer::spawn(
-        ctx.queue.clone(),
-        registry.clone(),
-        ctx.cfg.lease / 3,
-    );
+    let renewer = LeaseRenewer::spawn(fleet.queue.clone(), registry.clone(), fleet.cfg.lease / 3);
     let (work_tx, work_rx) = std::sync::mpsc::sync_channel::<WorkItem>(pw);
     let (done_tx, done_rx) = std::sync::mpsc::sync_channel::<DoneItem>(pw);
 
     // --- compute stage (the "core") ---
     let compute = {
-        let ctx = ctx.clone();
+        let fleet = fleet.clone();
         let kill = kill.clone();
         let registry = registry.clone();
-        std::thread::spawn(move || compute_stage(&ctx, &kill, &registry, work_rx, done_tx))
+        std::thread::spawn(move || compute_stage(&fleet, &kill, &registry, work_rx, done_tx))
     };
     // --- write stage ---
     let write = {
-        let ctx = ctx.clone();
+        let fleet = fleet.clone();
         let kill = kill.clone();
         let registry = registry.clone();
         let id = params.id;
-        std::thread::spawn(move || write_stage(&ctx, &kill, &registry, id, done_rx))
+        std::thread::spawn(move || write_stage(&fleet, &kill, &registry, id, done_rx))
     };
 
     // --- fetch/read stage (this thread) ---
-    let end = read_stage(ctx, params, kill, &registry, work_tx);
+    let end = read_stage(fleet, params, kill, &registry, work_tx);
 
     // work_tx dropped → compute drains → done_tx dropped → write drains.
     let _ = compute.join();
@@ -150,8 +160,14 @@ fn run_invocation(
     end
 }
 
+/// Split a `job|node` message body. `None` on malformed bodies.
+fn split_message(body: &str) -> Option<(u64, &str)> {
+    let (job, node) = body.split_once('|')?;
+    Some((job.parse().ok()?, node))
+}
+
 fn read_stage(
-    ctx: &Arc<JobContext>,
+    fleet: &Arc<FleetContext>,
     params: &WorkerParams,
     kill: &Arc<AtomicBool>,
     registry: &LeaseRegistry,
@@ -159,45 +175,62 @@ fn read_stage(
 ) -> InvocationEnd {
     let invocation_birth = Instant::now();
     let mut last_work = Instant::now();
-    let poll = Duration::from_millis(5).min(ctx.cfg.idle_timeout.max(Duration::from_millis(1)));
+    let poll = Duration::from_millis(5).min(fleet.cfg.idle_timeout.max(Duration::from_millis(1)));
     loop {
         if kill.load(Ordering::SeqCst) {
             return InvocationEnd::Exit(ExitReason::Killed);
         }
-        if ctx.is_done() {
-            return InvocationEnd::Exit(ExitReason::JobDone);
+        if fleet.is_shutdown() {
+            return InvocationEnd::Exit(ExitReason::FleetDone);
         }
-        if invocation_birth.elapsed() >= ctx.cfg.runtime_limit {
+        if invocation_birth.elapsed() >= fleet.cfg.runtime_limit {
             // Self-terminate near the runtime limit (§4 step 3); the
             // in-flight pipeline drains gracefully.
             return InvocationEnd::RuntimeLimit;
         }
-        let Some((body, lease)) = ctx.queue.receive_timeout(poll) else {
-            if params.exit_on_idle && last_work.elapsed() >= ctx.cfg.idle_timeout {
+        let Some((body, lease)) = fleet.queue.receive_timeout(poll) else {
+            if params.exit_on_idle && last_work.elapsed() >= fleet.cfg.idle_timeout {
                 return InvocationEnd::Exit(ExitReason::Idle);
             }
             continue;
         };
         last_work = Instant::now();
-        let node = match Node::parse(&body) {
+        // Resolve the message's job: this worker was not born knowing
+        // any job — the context comes from the fleet registry.
+        let Some((job_id, node_str)) = split_message(&body) else {
+            // Poison message: drop it.
+            fleet.queue.delete(&lease);
+            continue;
+        };
+        let Some(ctx) = fleet.job(job_id) else {
+            // Finished, canceled, or unknown job: drain its residue.
+            fleet.queue.delete(&lease);
+            continue;
+        };
+        if ctx.is_done() {
+            ctx.task_deleted();
+            fleet.queue.delete(&lease);
+            continue;
+        }
+        let node = match Node::parse(node_str) {
             Ok(n) => n,
             Err(_) => {
-                // Poison message: drop it.
-                ctx.queue.delete(&lease);
+                ctx.task_deleted();
+                fleet.queue.delete(&lease);
                 continue;
             }
         };
-        registry.insert(&node.id(), lease);
+        registry.insert(&body, lease);
         let task = match ctx.analyzer.concretize(&node) {
             Ok(t) => t,
             Err(e) => {
                 ctx.report_error(&node, &e);
-                registry.remove(&node.id());
+                registry.remove(&body);
                 continue;
             }
         };
         let already_done =
-            ctx.state.get(&status_key(&node)).as_deref() == Some(status::COMPLETED);
+            ctx.state.get(&ctx.status_key(&node)).as_deref() == Some(status::COMPLETED);
         let start = ctx.metrics.task_started();
         let (inputs, bytes_read) = if already_done {
             (Vec::new(), 0)
@@ -206,8 +239,8 @@ fn read_stage(
             let mut bytes = 0u64;
             let mut failed = None;
             for loc in &task.reads {
-                match with_blob_retry(WORKER_BLOB_RETRIES, || ctx.store.get(params.id, &loc.key()))
-                {
+                let key = ctx.blob_key(loc);
+                match with_blob_retry(WORKER_BLOB_RETRIES, || fleet.store.get(params.id, &key)) {
                     Ok(t) => {
                         bytes += (t.rows() * t.cols() * 8) as u64;
                         tiles.push(t);
@@ -219,25 +252,28 @@ fn read_stage(
                 }
             }
             if let Some(e) = failed {
-                ctx.metrics.task_finished(&node.id(), &task.fn_name, params.id, start, 0, 0, 0);
+                ctx.metrics
+                    .task_finished(&node.id(), &task.fn_name, params.id, start, 0, 0, 0);
                 if is_transient(&e) {
                     // Persistent injected faults: abandon the task —
                     // drop the lease from the registry so renewal
                     // stops, the visibility timeout expires, and the
                     // queue redelivers (§4.1 recovery, same path as a
                     // worker death).
-                    registry.remove(&node.id());
+                    registry.remove(&body);
                     continue;
                 }
                 // Dependency protocol guarantees presence; a miss is a
                 // protocol bug — surface it.
                 ctx.report_error(&node, &e);
-                registry.remove(&node.id());
+                registry.remove(&body);
                 continue;
             }
             (tiles, bytes)
         };
         let item = WorkItem {
+            ctx,
+            body,
             node,
             task,
             inputs,
@@ -246,13 +282,13 @@ fn read_stage(
             bytes_read,
         };
         if work_tx.send(item).is_err() {
-            return InvocationEnd::Exit(ExitReason::JobDone);
+            return InvocationEnd::Exit(ExitReason::FleetDone);
         }
     }
 }
 
 fn compute_stage(
-    ctx: &Arc<JobContext>,
+    fleet: &Arc<FleetContext>,
     kill: &Arc<AtomicBool>,
     registry: &LeaseRegistry,
     work_rx: Receiver<WorkItem>,
@@ -261,6 +297,8 @@ fn compute_stage(
     for item in work_rx {
         let killed = kill.load(Ordering::SeqCst);
         let mut done = DoneItem {
+            ctx: item.ctx,
+            body: item.body,
             node: item.node,
             task: item.task,
             outputs: Vec::new(),
@@ -271,14 +309,14 @@ fn compute_stage(
             bytes_read: item.bytes_read,
         };
         if !killed && !item.skip {
-            match ctx.kernels.execute(&done.task.fn_name, &item.inputs, &done.task.scalars) {
+            match fleet.kernels.execute(&done.task.fn_name, &item.inputs, &done.task.scalars) {
                 Ok(outs) => {
-                    done.flops = ctx.kernels.flops(&done.task.fn_name, &item.inputs);
+                    done.flops = fleet.kernels.flops(&done.task.fn_name, &item.inputs);
                     done.outputs = outs;
                 }
                 Err(e) => {
-                    ctx.report_error(&done.node, &e);
-                    ctx.metrics.task_finished(
+                    done.ctx.report_error(&done.node, &e);
+                    done.ctx.metrics.task_finished(
                         &done.node.id(),
                         &done.task.fn_name,
                         0,
@@ -287,7 +325,7 @@ fn compute_stage(
                         done.bytes_read,
                         0,
                     );
-                    registry.remove(&done.node.id());
+                    registry.remove(&done.body);
                     continue;
                 }
             }
@@ -299,13 +337,14 @@ fn compute_stage(
 }
 
 fn write_stage(
-    ctx: &Arc<JobContext>,
+    fleet: &Arc<FleetContext>,
     kill: &Arc<AtomicBool>,
     registry: &LeaseRegistry,
     worker_id: usize,
     done_rx: Receiver<DoneItem>,
 ) {
     for item in done_rx {
+        let ctx = &item.ctx;
         if item.abandoned || kill.load(Ordering::SeqCst) {
             // Kill-drain: leave lease to expire; the task redelivers.
             ctx.metrics.task_finished(
@@ -325,7 +364,8 @@ fn write_stage(
             let mut failed = None;
             for (loc, out) in item.task.writes.iter().zip(item.outputs) {
                 let bytes = (out.rows() * out.cols() * 8) as u64;
-                if let Err(e) = put_with_retry(ctx, worker_id, &loc.key(), out) {
+                let key = ctx.blob_key(loc);
+                if let Err(e) = put_with_retry(fleet, worker_id, &key, out) {
                     failed = Some(e);
                     break;
                 }
@@ -346,11 +386,11 @@ fn write_stage(
                     // (identical on re-execution), so letting the lease
                     // expire and the task redeliver is safe — no
                     // completion CAS, no propagation, no delete here.
-                    registry.remove(&item.node.id());
+                    registry.remove(&item.body);
                     continue;
                 }
                 ctx.report_error(&item.node, &e);
-                registry.remove(&item.node.id());
+                registry.remove(&item.body);
                 continue;
             }
         }
@@ -359,13 +399,11 @@ fn write_stage(
         // a predecessor's crash between CAS and enqueue heals here.
         let won = ctx
             .state
-            .cas(&status_key(&item.node), None, status::COMPLETED);
-        if won {
-            ctx.state.incr("completed_total", 1);
-        }
-        if let Err(e) = propagate(ctx, &item.node) {
-            ctx.report_error(&item.node, &e);
-        }
+            .cas(&ctx.status_key(&item.node), None, status::COMPLETED);
+        // Metrics land *before* the completed-counter increment: the
+        // manager's monitor seals the job (snapshotting this hub) the
+        // instant the counter reaches the total, so the final task's
+        // record and flops must already be in.
         ctx.metrics.task_finished(
             &item.node.id(),
             &item.task.fn_name,
@@ -375,10 +413,17 @@ fn write_stage(
             item.bytes_read,
             bytes_written,
         );
+        if won {
+            ctx.state.incr(&ctx.completed_key(), 1);
+        }
+        if let Err(e) = propagate(ctx, &item.node) {
+            ctx.report_error(&item.node, &e);
+        }
         // §4.1 invariant: delete only after effects are durable (tiles
         // written, state updated, children propagated).
-        if let Some(lease) = registry.remove(&item.node.id()) {
-            ctx.queue.delete(&lease);
+        if let Some(lease) = registry.remove(&item.body) {
+            ctx.task_deleted();
+            fleet.queue.delete(&lease);
         }
     }
 }

@@ -1,0 +1,643 @@
+//! The multi-tenant job service.
+//!
+//! The paper's economic claim rests on a *generic* fleet of stateless
+//! workers serving any workload ("Occupy the Cloud"; numpywren §4
+//! builds its decentralized scheduler on that model). [`JobManager`]
+//! makes that real for this engine: one shared substrate and one
+//! shared, job-agnostic worker fleet running N concurrent LAmbdaPACK
+//! jobs behind a submit / status / wait / cancel lifecycle.
+//!
+//! * Queue messages carry a job id (`job|node`); workers resolve the
+//!   per-job context — program analyzer, key namespace, per-job
+//!   metrics — from the fleet registry at receive time.
+//! * Every blob and KV key a job touches is namespaced (`j3/…`), so
+//!   concurrent jobs cannot collide in the shared stores.
+//! * The queue priority is composite: job scheduling class first, then
+//!   the original program-line order, then the queue's FIFO tiebreak —
+//!   a small urgent job jumps a large batch job's backlog instead of
+//!   starving behind it (see
+//!   [`composite_priority`](crate::executor::composite_priority)).
+//! * One autoscaling provisioner sizes the fleet from the *aggregate*
+//!   queue depth; [`MetricsHub`](crate::metrics::MetricsHub)s split
+//!   into per-job hubs ([`JobReport`]) plus a fleet-level aggregate
+//!   ([`FleetReport`]).
+//!
+//! [`crate::engine::Engine::run`] survives as a thin single-job
+//! wrapper over this service, so the one-shot API (drivers, examples,
+//! benches) is unchanged.
+
+use crate::config::{EngineConfig, FailureSpec, ScalingMode};
+use crate::executor::worker::ExitReason;
+use crate::executor::{FleetContext, JobContext};
+use crate::kernels::{KernelExecutor, NativeKernels};
+use crate::lambdapack::analysis::{Analyzer, Loc};
+use crate::lambdapack::ast::Program;
+use crate::lambdapack::interp::{count_nodes, Env};
+use crate::linalg::matrix::Matrix;
+use crate::metrics::{Sample, TaskRecord};
+use crate::provisioner::{run_provisioner, WorkerPool};
+use crate::storage::chaos::{blob_put_with_retry, with_blob_retry, CLIENT_BLOB_RETRIES};
+use crate::storage::{BlobStore, KvState as _, Queue as _, StoreStats};
+use crate::util::prng::Rng;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Client attribution id for seeded inputs and fetched outputs (not a
+/// worker).
+pub const CLIENT_ID: usize = usize::MAX;
+
+/// Handle for one submitted job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl fmt::Display for JobId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "j{}", self.0)
+    }
+}
+
+/// The key namespace of a job: every blob/KV key it touches starts
+/// with this prefix.
+pub fn job_prefix(job: JobId) -> String {
+    format!("{job}/")
+}
+
+/// Everything needed to submit one LAmbdaPACK job.
+pub struct JobSpec {
+    pub program: Program,
+    pub args: Env,
+    /// Input tiles, in job-local (un-namespaced) locations.
+    pub inputs: Vec<(Loc, Matrix)>,
+    /// Scheduling class: 0 = normal, higher = more urgent, negative =
+    /// background. The high-order component of the composite queue
+    /// priority.
+    pub priority_class: i64,
+    pub label: String,
+}
+
+impl JobSpec {
+    pub fn new(program: Program, args: Env, inputs: Vec<(Loc, Matrix)>) -> JobSpec {
+        let label = program.name.clone();
+        JobSpec {
+            program,
+            args,
+            inputs,
+            priority_class: 0,
+            label,
+        }
+    }
+
+    pub fn with_class(mut self, class: i64) -> JobSpec {
+        self.priority_class = class;
+        self
+    }
+
+    pub fn with_label(mut self, label: impl Into<String>) -> JobSpec {
+        self.label = label.into();
+        self
+    }
+}
+
+/// Lifecycle state of a job, as seen by `status`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobStatus {
+    /// Not a job this manager knows.
+    Unknown,
+    Running { completed: u64, total: u64 },
+    Succeeded,
+    Failed(String),
+    Canceled,
+}
+
+/// One finished job's report — the per-job half of what used to be the
+/// monolithic `EngineReport`.
+#[derive(Clone, Debug)]
+pub struct JobReport {
+    pub job: JobId,
+    pub label: String,
+    pub priority_class: i64,
+    /// Submit-to-finish wall time.
+    pub wall_secs: f64,
+    pub total_tasks: u64,
+    pub completed: u64,
+    pub total_flops: u64,
+    /// Per-job sample series (this job's pending/running; `workers` is
+    /// the shared fleet's live count).
+    pub samples: Vec<Sample>,
+    pub tasks: Vec<TaskRecord>,
+    pub canceled: bool,
+    pub error: Option<String>,
+}
+
+/// The fleet-level aggregate — the shared-infrastructure half of what
+/// used to be the monolithic `EngineReport`.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub workers_spawned: usize,
+    pub exits_idle: usize,
+    pub exits_killed: usize,
+    /// Total worker lifetime (billed Lambda seconds) across all jobs.
+    pub core_secs_billed: f64,
+    /// Shared-store transfer totals across all jobs.
+    pub store: StoreStats,
+    /// Aggregate sample series (all-jobs running/completed/flops,
+    /// shared-queue depth).
+    pub samples: Vec<Sample>,
+}
+
+/// Finished-job reports + the condvar `wait` blocks on.
+struct Finished {
+    reports: Mutex<HashMap<u64, JobReport>>,
+    cv: Condvar,
+}
+
+/// The long-lived multi-tenant service: one substrate, one worker
+/// fleet, many concurrent jobs.
+///
+/// Known limit: a finished job's namespaced keys (tiles, status/deps/
+/// edge entries) stay in the shared substrate until the manager is
+/// dropped — outputs remain fetchable via [`JobManager::tile`], but a
+/// very long-lived service accumulates them. Reclamation needs delete
+/// operations on the storage traits (ROADMAP: substrate GC).
+pub struct JobManager {
+    fleet: Arc<FleetContext>,
+    pool: WorkerPool,
+    finished: Arc<Finished>,
+    next_job: AtomicU64,
+    provisioner: Option<JoinHandle<()>>,
+    monitor: Option<JoinHandle<()>>,
+    sampler: Option<JoinHandle<()>>,
+    failer: Option<JoinHandle<usize>>,
+}
+
+impl JobManager {
+    /// A service with the native f64 kernel backend.
+    pub fn new(cfg: EngineConfig) -> JobManager {
+        Self::with_kernels(cfg, Arc::new(NativeKernels))
+    }
+
+    /// A service with a custom kernel backend (e.g. the PJRT runtime).
+    pub fn with_kernels(cfg: EngineConfig, kernels: Arc<dyn KernelExecutor>) -> JobManager {
+        let fleet = Arc::new(FleetContext::new(cfg, kernels));
+        let finished = Arc::new(Finished {
+            reports: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+        });
+        let pool = WorkerPool::default();
+        // The shared fleet: fixed pools start now; auto mode hands the
+        // whole thing to one provisioner driven by aggregate queue
+        // depth.
+        let provisioner = match fleet.cfg.scaling {
+            ScalingMode::Fixed(n) => {
+                for _ in 0..n {
+                    pool.spawn(fleet.clone(), false);
+                }
+                None
+            }
+            ScalingMode::Auto { sf, max_workers } => {
+                let fleet = fleet.clone();
+                let pool = pool.clone();
+                Some(std::thread::spawn(move || {
+                    run_provisioner(fleet, pool, sf, max_workers)
+                }))
+            }
+        };
+        let monitor = Some(spawn_monitor(fleet.clone(), finished.clone()));
+        let sampler = Some(spawn_sampler(fleet.clone()));
+        let failer = fleet.cfg.failure.map(|spec| spawn_failer(fleet.clone(), spec));
+        JobManager {
+            fleet,
+            pool,
+            finished,
+            next_job: AtomicU64::new(1),
+            provisioner,
+            monitor,
+            sampler,
+            failer,
+        }
+    }
+
+    /// Submit a job: seed its input tiles under its key namespace,
+    /// register it with the fleet, and enqueue its root tasks on the
+    /// shared queue. Returns immediately with the job's handle.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobId> {
+        if self.fleet.is_shutdown() {
+            bail!("job manager is shut down");
+        }
+        let JobSpec {
+            program,
+            args,
+            inputs,
+            priority_class,
+            label,
+        } = spec;
+        let analyzer = Arc::new(Analyzer::new(&program, &args));
+        let total = count_nodes(&program, &args)? as u64;
+        if total == 0 {
+            bail!("program `{}` has an empty iteration space", program.name);
+        }
+        let roots = analyzer.roots()?;
+        if roots.is_empty() {
+            bail!("program has no root tasks");
+        }
+        let job = JobId(self.next_job.fetch_add(1, Ordering::SeqCst));
+        // Seed this job's input tiles under its namespace *before*
+        // creating the context, so the job clock (wall_secs, the
+        // job_timeout anchor) starts after the client upload — parity
+        // with the old engine, whose stopwatch started post-seeding.
+        // Seeding retries transient chaos faults inline — there is no
+        // redelivery to recover a failed client put.
+        let prefix = job_prefix(job);
+        let chaos_on = self.fleet.cfg.substrate.chaos.is_some();
+        for (loc, tile) in inputs {
+            let key = loc.key_in(&prefix);
+            if chaos_on {
+                blob_put_with_retry(
+                    self.fleet.store.as_ref(),
+                    CLIENT_BLOB_RETRIES,
+                    CLIENT_ID,
+                    &key,
+                    tile,
+                )?;
+            } else {
+                self.fleet.store.put(CLIENT_ID, &key, tile)?;
+            }
+        }
+        let ctx = Arc::new(JobContext::new(
+            job,
+            label,
+            priority_class,
+            analyzer,
+            total,
+            self.fleet.queue.clone(),
+            self.fleet.store.clone(),
+            self.fleet.state.clone(),
+        ));
+        // Register before the root sends so a fast worker can resolve
+        // the job the instant the first message lands.
+        self.fleet.register(ctx.clone());
+        for root in &roots {
+            ctx.state.init_counter(&ctx.deps_key(root), 0);
+            ctx.send_task(root);
+        }
+        Ok(job)
+    }
+
+    /// Current lifecycle state of a job.
+    pub fn status(&self, job: JobId) -> JobStatus {
+        // Hold the reports lock across the registry check: finish_job
+        // inserts the report before unregistering, so under the lock a
+        // job absent from both maps was truly never submitted — no
+        // transient `Unknown` for a job sealed between two lookups.
+        let reports = self.finished.reports.lock().unwrap();
+        if let Some(r) = reports.get(&job.0) {
+            return if r.canceled {
+                JobStatus::Canceled
+            } else if let Some(e) = &r.error {
+                JobStatus::Failed(e.clone())
+            } else {
+                JobStatus::Succeeded
+            };
+        }
+        match self.fleet.job(job.0) {
+            Some(ctx) => JobStatus::Running {
+                completed: ctx.completed(),
+                total: ctx.total_tasks,
+            },
+            None => JobStatus::Unknown,
+        }
+    }
+
+    /// Block until the job finishes (completes, fails, times out, or is
+    /// canceled) and return its report. Errors on an unknown job id.
+    pub fn wait(&self, job: JobId) -> Result<JobReport> {
+        let mut reports = self.finished.reports.lock().unwrap();
+        loop {
+            if let Some(r) = reports.get(&job.0) {
+                return Ok(r.clone());
+            }
+            if self.fleet.job(job.0).is_none() {
+                bail!("unknown job {job}");
+            }
+            let (guard, _) = self
+                .finished
+                .cv
+                .wait_timeout(reports, Duration::from_millis(50))
+                .unwrap();
+            reports = guard;
+        }
+    }
+
+    /// Cancel a running job: the fleet drains its remaining messages
+    /// (deleted on receipt) and the monitor records a canceled report.
+    /// Returns false if the job is not running.
+    pub fn cancel(&self, job: JobId) -> bool {
+        match self.fleet.job(job.0) {
+            Some(ctx) => {
+                ctx.cancel();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Fetch one of a job's output tiles from the shared store. The
+    /// client has no lease to fall back on, so transient
+    /// (chaos-injected) faults get a deep inline retry budget; a
+    /// genuinely missing tile errors at once.
+    pub fn tile(&self, job: JobId, matrix: &str, idx: &[i64]) -> Result<Arc<Matrix>> {
+        let loc = Loc::new(matrix, idx.to_vec());
+        let key = loc.key_in(&job_prefix(job));
+        with_blob_retry(CLIENT_BLOB_RETRIES, || self.fleet.store.get(CLIENT_ID, &key))
+            .with_context(|| format!("output tile {loc} of {job} missing"))
+    }
+
+    /// The shared blob store (all jobs' tiles, namespaced).
+    pub fn store(&self) -> Arc<dyn BlobStore> {
+        self.fleet.store.clone()
+    }
+
+    /// The fleet's resolved configuration (`sharded:auto` already
+    /// concretized).
+    pub fn fleet_config(&self) -> &EngineConfig {
+        &self.fleet.cfg
+    }
+
+    /// Number of jobs currently registered (submitted, not finished).
+    pub fn active_jobs(&self) -> usize {
+        self.fleet.active_job_count()
+    }
+
+    /// Stop the service: set the fleet-wide shutdown flag, join every
+    /// worker and service thread, and return the fleet-level aggregate
+    /// report. Jobs still running are left unfinished — cancel and
+    /// wait first if you need their reports.
+    pub fn shutdown(mut self) -> FleetReport {
+        self.shutdown_impl()
+    }
+
+    fn shutdown_impl(&mut self) -> FleetReport {
+        self.fleet.set_shutdown();
+        if let Some(h) = self.monitor.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.provisioner.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.failer.take() {
+            let _ = h.join();
+        }
+        let exits = self.pool.join_all();
+        if let Some(h) = self.sampler.take() {
+            let _ = h.join();
+        }
+        FleetReport {
+            workers_spawned: self.pool.spawned_count(),
+            exits_idle: exits.iter().filter(|e| **e == ExitReason::Idle).count(),
+            exits_killed: exits.iter().filter(|e| **e == ExitReason::Killed).count(),
+            core_secs_billed: self.fleet.metrics.billed_core_secs(),
+            store: self.fleet.store.stats(),
+            samples: self.fleet.metrics.samples(),
+        }
+    }
+}
+
+impl Drop for JobManager {
+    fn drop(&mut self) {
+        // A dropped-without-shutdown manager must not leak a live
+        // fleet (fixed-pool workers poll until shutdown).
+        if !self.fleet.is_shutdown() {
+            let _ = self.shutdown_impl();
+        }
+    }
+}
+
+/// The completion monitor: one thread watching every active job for
+/// completion, fatal error, per-job timeout, or cancellation — the
+/// multi-tenant descendant of `Engine::run`'s inline wait loop.
+fn spawn_monitor(fleet: Arc<FleetContext>, finished: Arc<Finished>) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        while !fleet.is_shutdown() {
+            for ctx in fleet.active_jobs() {
+                let completed = ctx.completed();
+                let outcome: Option<Option<String>> = if ctx.is_canceled() {
+                    Some(Some("job canceled".to_string()))
+                } else if completed >= ctx.total_tasks {
+                    Some(None)
+                } else if let Some(e) = ctx.job_error() {
+                    Some(Some(e))
+                } else if ctx.submitted.elapsed() > fleet.cfg.job_timeout {
+                    Some(Some(format!(
+                        "job timeout after {:.1}s ({}/{} tasks done)",
+                        ctx.submitted.elapsed().as_secs_f64(),
+                        completed,
+                        ctx.total_tasks,
+                    )))
+                } else {
+                    None
+                };
+                if let Some(error) = outcome {
+                    finish_job(&fleet, &finished, &ctx, error);
+                }
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    })
+}
+
+/// Seal a job: final sample, report, then unregister (report lands
+/// *before* the registry entry goes away so `wait`/`status` never see
+/// a gap).
+///
+/// On the success path the metrics snapshot is complete: every task's
+/// record lands in the hub before its completed-counter increment (see
+/// the write-stage ordering). On the error/timeout/cancel paths tasks
+/// of this job still in other workers' pipelines may record *after*
+/// the seal — the report's task log is best-effort there, as the doomed
+/// job's in-flight work is intentionally not waited for (the fleet
+/// keeps serving other jobs).
+fn finish_job(
+    fleet: &FleetContext,
+    finished: &Finished,
+    ctx: &Arc<JobContext>,
+    error: Option<String>,
+) {
+    ctx.set_done();
+    // One final sample so even sub-period jobs get a profile point.
+    ctx.metrics
+        .sample_with_workers(ctx.queued_estimate(), fleet.metrics.live_workers());
+    let report = JobReport {
+        job: ctx.job,
+        label: ctx.label.clone(),
+        priority_class: ctx.priority_class,
+        wall_secs: ctx.submitted.elapsed().as_secs_f64(),
+        total_tasks: ctx.total_tasks,
+        completed: ctx.completed().min(ctx.total_tasks),
+        total_flops: ctx.metrics.total_flops(),
+        samples: ctx.metrics.samples(),
+        tasks: ctx.metrics.task_records(),
+        canceled: ctx.is_canceled(),
+        error,
+    };
+    {
+        let mut reports = finished.reports.lock().unwrap();
+        reports.insert(ctx.job.0, report);
+        finished.cv.notify_all();
+    }
+    fleet.unregister(ctx.job);
+}
+
+/// The fleet sampler: per-job samples (per-job pending/running) plus
+/// the fleet aggregate (shared-queue depth, summed task activity).
+fn spawn_sampler(fleet: Arc<FleetContext>) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        let period = fleet.cfg.sample_period;
+        if period.is_zero() {
+            return;
+        }
+        loop {
+            sample_fleet(&fleet);
+            if fleet.is_shutdown() {
+                return;
+            }
+            std::thread::sleep(period);
+        }
+    })
+}
+
+fn sample_fleet(fleet: &FleetContext) {
+    let jobs = fleet.active_jobs();
+    let live = fleet.metrics.live_workers();
+    let mut running = 0usize;
+    let mut completed = 0u64;
+    let mut flops = 0u64;
+    for ctx in &jobs {
+        // Per-job hubs never see worker lifecycle (workers are the
+        // fleet's), so the sample carries the fleet's live count — the
+        // core-seconds integral needs min(running, workers).
+        ctx.metrics.sample_with_workers(ctx.queued_estimate(), live);
+        running += ctx.metrics.running();
+        completed += ctx.metrics.completed();
+        flops += ctx.metrics.total_flops();
+    }
+    fleet
+        .metrics
+        .sample_aggregate(fleet.queue.len(), running, completed, flops);
+}
+
+/// Failure injection (Figure 9b): at `spec.at` into the service's
+/// life, kill `spec.fraction` of the currently-live workers. The
+/// anchor is service start — for `Engine::run`, which constructs the
+/// service immediately before its single submit, that is earlier than
+/// the old engine's post-seeding stopwatch by the one submit's
+/// analyzer + seeding time (negligible at test scales; size `at`
+/// accordingly for large seeded inputs).
+fn spawn_failer(fleet: Arc<FleetContext>, spec: FailureSpec) -> JoinHandle<usize> {
+    std::thread::spawn(move || {
+        std::thread::sleep(spec.at);
+        if fleet.is_shutdown() {
+            return 0usize;
+        }
+        let mut rng = Rng::new(0xFA11);
+        let mut ids = fleet.kill.registered();
+        rng.shuffle(&mut ids);
+        let live = fleet.metrics.live_workers();
+        let n_kill = ((live as f64) * spec.fraction).round() as usize;
+        let mut killed = 0;
+        for id in ids {
+            if killed >= n_kill {
+                break;
+            }
+            if fleet.kill.kill(id) {
+                killed += 1;
+            }
+        }
+        killed
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lambdapack::programs;
+
+    fn fixed_cfg(workers: usize) -> EngineConfig {
+        EngineConfig {
+            scaling: ScalingMode::Fixed(workers),
+            job_timeout: Duration::from_secs(120),
+            ..EngineConfig::default()
+        }
+    }
+
+    fn tiny_cholesky_spec(n: usize, seed: u64) -> (JobSpec, Matrix) {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::rand_spd(n, &mut rng);
+        let (args, inputs, _grid) = crate::drivers::stage_cholesky(&a, 8).unwrap();
+        (
+            JobSpec::new(programs::cholesky_spec().program, args, inputs),
+            a,
+        )
+    }
+
+    #[test]
+    fn job_id_display_and_prefix() {
+        assert_eq!(JobId(3).to_string(), "j3");
+        assert_eq!(job_prefix(JobId(3)), "j3/");
+    }
+
+    #[test]
+    fn submit_wait_lifecycle_single_job() {
+        let mgr = JobManager::new(fixed_cfg(4));
+        let (spec, _a) = tiny_cholesky_spec(24, 5);
+        let job = mgr.submit(spec).unwrap();
+        let report = mgr.wait(job).unwrap();
+        assert_eq!(report.completed, report.total_tasks);
+        assert!(report.error.is_none());
+        assert!(!report.canceled);
+        assert_eq!(mgr.status(job), JobStatus::Succeeded);
+        assert_eq!(mgr.active_jobs(), 0);
+        // Output tiles are fetchable through the namespaced API.
+        let l00 = mgr.tile(job, "O", &[0, 0]).unwrap();
+        assert!(l00.rows() > 0);
+        let fleet = mgr.shutdown();
+        assert_eq!(fleet.workers_spawned, 4);
+    }
+
+    #[test]
+    fn wait_on_unknown_job_errors() {
+        let mgr = JobManager::new(fixed_cfg(1));
+        assert!(mgr.wait(JobId(99)).is_err());
+        assert_eq!(mgr.status(JobId(99)), JobStatus::Unknown);
+        assert!(!mgr.cancel(JobId(99)));
+    }
+
+    #[test]
+    fn submit_after_shutdown_rejected() {
+        let mgr = JobManager::new(fixed_cfg(1));
+        let fleet = mgr.fleet.clone();
+        let _ = JobManager::shutdown(mgr);
+        assert!(fleet.is_shutdown());
+        // A fresh manager still works (shutdown is per-manager).
+        let mgr = JobManager::new(fixed_cfg(1));
+        let (spec, _) = tiny_cholesky_spec(16, 7);
+        assert!(mgr.submit(spec).is_ok());
+    }
+
+    #[test]
+    fn empty_program_rejected_cleanly() {
+        let mgr = JobManager::new(fixed_cfg(1));
+        let program = programs::cholesky();
+        let args: Env = [("N".to_string(), 0i64)].into_iter().collect();
+        assert!(mgr.submit(JobSpec::new(program, args, Vec::new())).is_err());
+        // The manager survives a rejected submit.
+        let (spec, _) = tiny_cholesky_spec(16, 9);
+        let job = mgr.submit(spec).unwrap();
+        let r = mgr.wait(job).unwrap();
+        assert_eq!(r.completed, r.total_tasks);
+    }
+}

@@ -24,11 +24,20 @@
 //! * [`executor`] — the stateless worker: poll → read → compute → write
 //!   → runtime-state update → child enqueue, with lease renewal,
 //!   pipelining, and self-termination at the runtime limit. Workers
-//!   hold the substrate only through `Arc<dyn …>` trait handles.
+//!   hold the substrate only through `Arc<dyn …>` trait handles and
+//!   are job-agnostic: each queue message carries a job id that the
+//!   worker resolves to a per-job context at receive time.
+//! * [`jobs`] — the multi-tenant job service: a `JobManager` running N
+//!   concurrent LAmbdaPACK jobs over one shared substrate and one
+//!   shared worker fleet, with a submit/status/wait/cancel lifecycle,
+//!   per-job key namespaces, and composite (class, line, FIFO) queue
+//!   priorities.
 //! * [`provisioner`] — the auto-scaling policy (`sf` scale-up factor,
-//!   `T_timeout` idle scale-down).
-//! * [`engine`] — wires a LAmbdaPACK program, a blocked matrix, and the
-//!   substrate together and runs it to completion on a worker pool.
+//!   `T_timeout` idle scale-down), sized from the aggregate queue
+//!   depth across all jobs.
+//! * [`engine`] — the one-shot API: wires a LAmbdaPACK program, a
+//!   blocked matrix, and the substrate together and runs it to
+//!   completion as a single-job `JobManager` session.
 //! * [`runtime`] — the PJRT execution path: loads AOT-compiled HLO-text
 //!   artifacts (produced once by `python/compile/aot.py` from JAX +
 //!   Pallas kernels) and serves kernel calls from compiled executables.
@@ -51,6 +60,7 @@ pub mod config;
 pub mod drivers;
 pub mod engine;
 pub mod executor;
+pub mod jobs;
 pub mod kernels;
 pub mod lambdapack;
 pub mod linalg;
@@ -63,4 +73,5 @@ pub mod util;
 
 pub use config::EngineConfig;
 pub use engine::{Engine, EngineReport};
+pub use jobs::{FleetReport, JobId, JobManager, JobReport, JobSpec, JobStatus};
 pub use lambdapack::{analysis::Analyzer, ast::Program, programs};

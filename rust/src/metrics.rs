@@ -4,6 +4,12 @@
 //! profiles), Figure 9b (recovery), Figure 10b (workers vs. pending
 //! tasks), and the core-seconds accounting of Tables 1–2 ("how many
 //! cores were actively working on tasks at any given point in time").
+//!
+//! The multi-tenant service runs one [`MetricsHub`] **per job** (task
+//! records, flops, per-job samples — what a `JobReport` carries) plus
+//! one **fleet-level** hub (worker lifecycle: live count, billed
+//! seconds, and the aggregate sample series via
+//! [`MetricsHub::sample_aggregate`]).
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -134,17 +140,49 @@ impl MetricsHub {
         });
     }
 
-    /// Take a sample (called by the engine's sampler thread).
+    /// Take a sample (called by the service's sampler thread).
     pub fn sample(&self, pending: usize) {
-        let s = Sample {
+        self.sample_with_workers(pending, self.inner.workers.load(Ordering::Relaxed));
+    }
+
+    /// Take a sample attributing an externally-tracked worker count.
+    /// Per-job hubs do not see worker lifecycle events — workers belong
+    /// to the shared fleet — so the fleet sampler passes the fleet's
+    /// live count here (the `∫ min(running, workers) dt` core-seconds
+    /// integral needs it).
+    pub fn sample_with_workers(&self, pending: usize, workers: usize) {
+        self.push_sample(Sample {
             t: self.now(),
             pending,
-            workers: self.inner.workers.load(Ordering::Relaxed),
+            workers,
             running: self.inner.running.load(Ordering::Relaxed),
             completed: self.inner.completed.load(Ordering::Relaxed),
             flops: self.inner.flops.load(Ordering::Relaxed),
-        };
+        });
+    }
+
+    /// Take a sample with externally-aggregated task numbers. The
+    /// fleet-level hub tracks only worker lifecycle itself; its task
+    /// series (running/completed/flops) is the sum over the per-job
+    /// hubs, computed by the sampler and recorded here.
+    pub fn sample_aggregate(&self, pending: usize, running: usize, completed: u64, flops: u64) {
+        self.push_sample(Sample {
+            t: self.now(),
+            pending,
+            workers: self.inner.workers.load(Ordering::Relaxed),
+            running,
+            completed,
+            flops,
+        });
+    }
+
+    fn push_sample(&self, s: Sample) {
         self.inner.samples.lock().unwrap().push(s);
+    }
+
+    /// Tasks whose compute is currently in flight.
+    pub fn running(&self) -> usize {
+        self.inner.running.load(Ordering::Relaxed)
     }
 
     pub fn completed(&self) -> u64 {

@@ -1,4 +1,4 @@
-//! The provisioner — §4.2 auto-scaling.
+//! The provisioner — §4.2 auto-scaling, now fleet-wide.
 //!
 //! "For scaling up, numpywren's auto-scaling framework tracks the
 //! number of pending tasks and periodically increases the number of
@@ -8,14 +8,18 @@
 //! policy where each worker shuts down itself if no task has been
 //! found for the last T_timeout seconds."
 //!
-//! Scale-down is implemented *in the worker* (`exit_on_idle`); the
-//! provisioner only launches. At equilibrium the number of running
-//! workers is `sf × pending / pipeline_width`, exactly the paper's
-//! policy (including its worked example: sf = 0.5, 100 pending, 40
-//! running → launch 100·0.5 − 40 = 10).
+//! In the multi-tenant service there is **one** provisioner for the
+//! whole fleet: its "pending tasks" signal is the shared queue's
+//! aggregate depth across every concurrent job, so capacity follows
+//! total load rather than any single job. Scale-down is implemented
+//! *in the worker* (`exit_on_idle`); the provisioner only launches. At
+//! equilibrium the number of running workers is `sf × pending /
+//! pipeline_width`, exactly the paper's policy (including its worked
+//! example: sf = 0.5, 100 pending, 40 running → launch 100·0.5 − 40 =
+//! 10).
 
 use crate::executor::worker::{run_worker, ExitReason, WorkerParams};
-use crate::executor::JobContext;
+use crate::executor::FleetContext;
 use crate::storage::Queue as _;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -27,8 +31,8 @@ pub fn scale_target(sf: f64, pending: usize, pipeline_width: usize, max_workers:
     want.min(max_workers)
 }
 
-/// Shared registry of worker join handles (provisioner spawns, engine
-/// joins).
+/// Shared registry of worker join handles (provisioner spawns, the job
+/// manager joins).
 #[derive(Clone, Default)]
 pub struct WorkerPool {
     handles: Arc<Mutex<Vec<JoinHandle<ExitReason>>>>,
@@ -36,10 +40,10 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
-    pub fn spawn(&self, ctx: Arc<JobContext>, exit_on_idle: bool) -> usize {
+    pub fn spawn(&self, fleet: Arc<FleetContext>, exit_on_idle: bool) -> usize {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         let params = WorkerParams { id, exit_on_idle };
-        let handle = std::thread::spawn(move || run_worker(ctx, params));
+        let handle = std::thread::spawn(move || run_worker(fleet, params));
         self.handles.lock().unwrap().push(handle);
         id
     }
@@ -58,19 +62,20 @@ impl WorkerPool {
     }
 }
 
-/// Run the provisioning loop until the job completes. Launches workers
-/// to close the gap between the live count and the §4.2 target.
-pub fn run_provisioner(ctx: Arc<JobContext>, pool: WorkerPool, sf: f64, max_workers: usize) {
-    while !ctx.is_done() {
-        let pending = ctx.queue.len();
-        let live = ctx.metrics.live_workers();
-        let target = scale_target(sf, pending, ctx.cfg.pipeline_width, max_workers);
+/// Run the provisioning loop until the fleet shuts down. Launches
+/// workers to close the gap between the live count and the §4.2
+/// target computed from the aggregate (all-jobs) queue depth.
+pub fn run_provisioner(fleet: Arc<FleetContext>, pool: WorkerPool, sf: f64, max_workers: usize) {
+    while !fleet.is_shutdown() {
+        let pending = fleet.queue.len();
+        let live = fleet.metrics.live_workers();
+        let target = scale_target(sf, pending, fleet.cfg.pipeline_width, max_workers);
         if target > live {
             for _ in 0..(target - live) {
-                pool.spawn(ctx.clone(), true);
+                pool.spawn(fleet.clone(), true);
             }
         }
-        std::thread::sleep(ctx.cfg.provision_period);
+        std::thread::sleep(fleet.cfg.provision_period);
     }
 }
 

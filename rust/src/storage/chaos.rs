@@ -21,7 +21,10 @@
 //!   `drop`: a dropped delivery takes the lease but never reaches the
 //!   caller, so the message sits invisible until the visibility
 //!   timeout expires and redelivers it — exactly a delivery lost in
-//!   flight on real SQS. Receive latency comes from `recv_lat`;
+//!   flight on real SQS. Send latency comes from `send_lat` (the
+//!   enqueue round-trip the *sender* pays — child propagation and root
+//!   seeding slow down, not delivery), receive latency from
+//!   `recv_lat`;
 //! * [`ChaosKvState`] — per-op latency from `kv_lat` (the trait's
 //!   operations are infallible, so no error injection).
 //!
@@ -44,6 +47,7 @@
 //! | `lat`      | latency spec (sets read+write)         | blob latency       |
 //! | `read_lat` | latency spec                           | blob get latency   |
 //! | `write_lat`| latency spec                           | blob put latency   |
+//! | `send_lat` | latency spec                           | queue send latency |
 //! | `recv_lat` | latency spec                           | queue recv latency |
 //! | `kv_lat`   | latency spec                           | KV op latency      |
 //! | `straggle` | `FRAC:MULT`                            | slow workers       |
@@ -249,6 +253,7 @@ pub struct ChaosConfig {
     pub dup: f64,
     pub read_lat: LatencyDist,
     pub write_lat: LatencyDist,
+    pub send_lat: LatencyDist,
     pub recv_lat: LatencyDist,
     pub kv_lat: LatencyDist,
     /// Fraction of worker ids that are stragglers.
@@ -266,6 +271,7 @@ impl Default for ChaosConfig {
             dup: 0.0,
             read_lat: LatencyDist::Off,
             write_lat: LatencyDist::Off,
+            send_lat: LatencyDist::Off,
             recv_lat: LatencyDist::Off,
             kv_lat: LatencyDist::Off,
             straggler_frac: 0.0,
@@ -305,6 +311,7 @@ impl ChaosConfig {
                 }
                 "read_lat" => c.read_lat = LatencyDist::parse(v)?,
                 "write_lat" => c.write_lat = LatencyDist::parse(v)?,
+                "send_lat" => c.send_lat = LatencyDist::parse(v)?,
                 "recv_lat" => c.recv_lat = LatencyDist::parse(v)?,
                 "kv_lat" => c.kv_lat = LatencyDist::parse(v)?,
                 "straggle" => {
@@ -320,7 +327,7 @@ impl ChaosConfig {
                 "seed" => c.seed = v.parse().map_err(|_| anyhow!("bad seed `{v}`"))?,
                 other => bail!(
                     "unknown chaos key `{other}` \
-                     (err|drop|dup|lat|read_lat|write_lat|recv_lat|kv_lat|straggle|seed)"
+                     (err|drop|dup|lat|read_lat|write_lat|send_lat|recv_lat|kv_lat|straggle|seed)"
                 ),
             }
         }
@@ -485,6 +492,9 @@ impl ChaosQueue {
 
 impl Queue for ChaosQueue {
     fn send(&self, body: &str, priority: i64) {
+        if self.sleep {
+            maybe_sleep(self.draws.latency(&self.cfg.send_lat));
+        }
         self.inner.send(body, priority);
         if self.draws.chance(self.cfg.dup) {
             // At-least-once enqueue made real: execution is idempotent,
@@ -652,7 +662,8 @@ mod tests {
     #[test]
     fn chaos_config_grammar() {
         let c = ChaosConfig::parse(
-            "err=0.01, drop=0.05,dup=0.02,lat=lognorm:5ms,recv_lat=1ms,straggle=0.1:16,seed=9",
+            "err=0.01, drop=0.05,dup=0.02,lat=lognorm:5ms,send_lat=2ms,recv_lat=1ms,\
+             straggle=0.1:16,seed=9",
         )
         .unwrap();
         assert_eq!(c.err, 0.01);
@@ -666,6 +677,7 @@ mod tests {
             }
         );
         assert_eq!(c.write_lat, c.read_lat);
+        assert_eq!(c.send_lat, LatencyDist::Fixed(Duration::from_millis(2)));
         assert_eq!(c.recv_lat, LatencyDist::Fixed(Duration::from_millis(1)));
         assert_eq!(c.straggler_frac, 0.1);
         assert_eq!(c.straggler_mult, 16.0);
@@ -761,6 +773,38 @@ mod tests {
         assert_eq!(q.visible_len(), 1);
         assert!(q.receive().is_none(), "drop=1 swallows again");
         assert_eq!(q.delivery_count("t"), 2);
+    }
+
+    #[test]
+    fn queue_send_latency_shapes_the_sender() {
+        let cfg = ChaosConfig {
+            send_lat: LatencyDist::Fixed(Duration::from_millis(5)),
+            ..ChaosConfig::default()
+        };
+        let q = ChaosQueue::new(
+            Arc::new(StrictQueue::new(Duration::from_secs(10))),
+            cfg,
+            true,
+        );
+        let sw = std::time::Instant::now();
+        q.send("t", 0);
+        assert!(
+            sw.elapsed() >= Duration::from_millis(5),
+            "send must pay the shaped enqueue latency"
+        );
+        // Delivery itself is unshaped and intact.
+        let (body, lease) = q.receive().unwrap();
+        assert_eq!(body, "t");
+        assert!(q.delete(&lease));
+        // Virtual-time callers (sleep=false) skip the shaping entirely.
+        let q = ChaosQueue::new(
+            Arc::new(StrictQueue::new(Duration::from_secs(10))),
+            cfg,
+            false,
+        );
+        let sw = std::time::Instant::now();
+        q.send("t", 0);
+        assert!(sw.elapsed() < Duration::from_millis(5));
     }
 
     #[test]

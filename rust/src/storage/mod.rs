@@ -10,7 +10,12 @@
 //!   priority queue with work-stealing receive ([`ShardedQueue`]).
 //!   This is the high-concurrency family: the real S3/SQS/Redis shard
 //!   internally, and a single process mutex must not serialize what
-//!   the cloud would not.
+//!   the cloud would not. `sharded:auto` sizes the shard count from
+//!   the configured worker pool
+//!   ([`shards_for_workers`](crate::config::shards_for_workers)) — the
+//!   engine and job manager resolve it from their scaling mode; a
+//!   direct [`Substrate::build`] falls back to the machine's
+//!   parallelism.
 //! * **`strict`** — the original single-lock implementations
 //!   ([`StrictBlobStore`], [`StrictQueue`], [`StrictKvState`]):
 //!   globally linearizable, exactly-ordered, and able to police SSA
@@ -28,10 +33,11 @@
 //! `err` injects transient blob-op failures, `drop`/`dup` make SQS's
 //! at-least-once semantics real (lost deliveries recovered by lease
 //! expiry, duplicated enqueues absorbed by idempotent execution),
-//! `lat`/`read_lat`/`write_lat`/`recv_lat`/`kv_lat` shape per-op
-//! latency (fixed / uniform / lognormal), and `straggle=FRAC:MULT`
-//! slows a deterministic fraction of workers for straggler
-//! experiments. Everything is seeded (`seed=N`) and reproducible.
+//! `lat`/`read_lat`/`write_lat`/`send_lat`/`recv_lat`/`kv_lat` shape
+//! per-op latency (fixed / uniform / lognormal; `send_lat` delays the
+//! enqueue itself — the client/worker-side SQS round-trip), and
+//! `straggle=FRAC:MULT` slows a deterministic fraction of workers for
+//! straggler experiments. Everything is seeded (`seed=N`) and reproducible.
 //! The chaos-wrapped backends pass the same conformance suite — the
 //! decorators perturb timing and delivery, never the contracts.
 //!
@@ -135,6 +141,17 @@ impl Substrate {
                 queue: Arc::new(ShardedQueue::with_clock(shards, lease, clock)),
                 state: Arc::new(ShardedKvState::new(shards)),
             },
+            // Engine/JobManager resolve `auto` from their configured
+            // worker pool before building; reaching here means a direct
+            // build (conformance suite, ad-hoc tools) — size from the
+            // machine instead.
+            SubstrateBackend::ShardedAuto => {
+                let workers = std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(crate::config::DEFAULT_SHARDS);
+                let resolved = cfg.resolve(workers);
+                Self::build_base(&resolved, lease, store_latency, clock)
+            }
         }
     }
 
@@ -161,6 +178,7 @@ mod tests {
             "strict",
             "sharded",
             "sharded:4",
+            "sharded:auto",
             "strict+chaos()",
             "sharded:4+chaos(lat=fixed:0us,seed=3)",
         ] {

@@ -1,0 +1,260 @@
+//! Multi-tenant isolation tests: N concurrent LAmbdaPACK jobs on ONE
+//! shared substrate and ONE shared, job-agnostic worker fleet.
+//!
+//! What must hold (the tentpole's acceptance bar):
+//! * every job's numerics are exact — cross-job key collisions or
+//!   misrouted messages would corrupt them;
+//! * per-job completed-task counts are exact (the namespaced
+//!   completed counter counts only CAS winners);
+//! * no cross-job key collisions in the shared blob store — checked
+//!   by exact key-count accounting (each job's distinct keys = its
+//!   seed tiles + its SSA task writes; any collision shrinks the sum);
+//! * the composite (class, line, FIFO) priority lets a small urgent
+//!   job finish while a large batch job is still running;
+//! * cancel drains a job and frees the fleet for the next one.
+
+use numpywren::config::{EngineConfig, ScalingMode};
+use numpywren::drivers::{collect_cholesky, collect_gemm, stage_cholesky, stage_gemm};
+use numpywren::jobs::{JobId, JobManager, JobSpec, JobStatus};
+use numpywren::lambdapack::programs;
+use numpywren::linalg::matrix::Matrix;
+use numpywren::storage::BlobStore as _;
+use numpywren::util::prng::Rng;
+use std::time::Duration;
+
+fn base_cfg(workers: usize) -> EngineConfig {
+    EngineConfig {
+        scaling: ScalingMode::Fixed(workers),
+        job_timeout: Duration::from_secs(120),
+        ..EngineConfig::default()
+    }
+}
+
+/// Submit a Cholesky job; returns (id, grid_n, seed_tile_count).
+fn submit_cholesky(
+    mgr: &JobManager,
+    a: &Matrix,
+    block: usize,
+    class: i64,
+) -> (JobId, usize, usize) {
+    let (env, inputs, grid) = stage_cholesky(a, block).unwrap();
+    let seeds = inputs.len();
+    let job = mgr
+        .submit(JobSpec::new(programs::cholesky_spec().program, env, inputs).with_class(class))
+        .unwrap();
+    (job, grid, seeds)
+}
+
+/// Submit a GEMM job; returns (id, grid_n, seed_tile_count).
+fn submit_gemm(
+    mgr: &JobManager,
+    a: &Matrix,
+    b: &Matrix,
+    block: usize,
+    class: i64,
+) -> (JobId, usize, usize) {
+    let (env, inputs, grid) = stage_gemm(a, b, block).unwrap();
+    let seeds = inputs.len();
+    let job = mgr
+        .submit(JobSpec::new(programs::gemm_spec().program, env, inputs).with_class(class))
+        .unwrap();
+    (job, grid, seeds)
+}
+
+#[test]
+fn four_concurrent_jobs_isolated_and_exact() {
+    // Runs on the default substrate, so the CI matrix
+    // (NUMPYWREN_SUBSTRATE) exercises multi-tenancy on every backend
+    // family, chaos-wrapped included.
+    let mgr = JobManager::new(base_cfg(6));
+    let mut rng = Rng::new(0x30B5);
+    let a1 = Matrix::rand_spd(24, &mut rng);
+    let a2 = Matrix::rand_spd(32, &mut rng);
+    let ga = Matrix::randn(18, 18, &mut rng);
+    let gb = Matrix::randn(18, 18, &mut rng);
+    let gc = Matrix::randn(12, 12, &mut rng);
+    let gd = Matrix::randn(12, 12, &mut rng);
+
+    // Interleave submissions: 2 Cholesky + 2 GEMM, all in flight at
+    // once on one fleet.
+    let (c1, c1_grid, c1_seeds) = submit_cholesky(&mgr, &a1, 8, 0);
+    let (g1, g1_grid, g1_seeds) = submit_gemm(&mgr, &ga, &gb, 6, 0);
+    let (c2, c2_grid, c2_seeds) = submit_cholesky(&mgr, &a2, 8, 0);
+    let (g2, g2_grid, g2_seeds) = submit_gemm(&mgr, &gc, &gd, 6, 0);
+    assert_eq!(mgr.active_jobs(), 4);
+
+    // Await all four; every report must be exact and per-job.
+    let rc1 = mgr.wait(c1).unwrap();
+    let rg1 = mgr.wait(g1).unwrap();
+    let rc2 = mgr.wait(c2).unwrap();
+    let rg2 = mgr.wait(g2).unwrap();
+    for (r, label) in [
+        (&rc1, "cholesky"),
+        (&rg1, "gemm"),
+        (&rc2, "cholesky"),
+        (&rg2, "gemm"),
+    ] {
+        assert_eq!(r.completed, r.total_tasks, "[{}] exact task count", r.job);
+        assert!(r.error.is_none(), "[{}] {:?}", r.job, r.error);
+        assert!(!r.canceled);
+        assert_eq!(r.label, label);
+        assert!(!r.samples.is_empty(), "[{}] final sample recorded", r.job);
+        assert!(r.tasks.len() as u64 >= r.total_tasks, "[{}]", r.job);
+    }
+    assert_eq!(mgr.status(c1), JobStatus::Succeeded);
+
+    // Exact numerics per job, fetched through the namespaced API.
+    let f1 = |m: &str, idx: &[i64]| mgr.tile(c1, m, idx);
+    let l1 = collect_cholesky(&f1, a1.rows(), 8, c1_grid).unwrap();
+    assert!(l1.matmul_nt(&l1).max_abs_diff(&a1) < 1e-8, "job c1 LLᵀ ≠ A");
+    let f2 = |m: &str, idx: &[i64]| mgr.tile(c2, m, idx);
+    let l2 = collect_cholesky(&f2, a2.rows(), 8, c2_grid).unwrap();
+    assert!(l2.matmul_nt(&l2).max_abs_diff(&a2) < 1e-8, "job c2 LLᵀ ≠ A");
+    let f3 = |m: &str, idx: &[i64]| mgr.tile(g1, m, idx);
+    let p1 = collect_gemm(&f3, 18, 18, 6, g1_grid).unwrap();
+    assert!(p1.max_abs_diff(&ga.matmul(&gb)) < 1e-9, "job g1 C ≠ AB");
+    let f4 = |m: &str, idx: &[i64]| mgr.tile(g2, m, idx);
+    let p2 = collect_gemm(&f4, 12, 12, 6, g2_grid).unwrap();
+    assert!(p2.max_abs_diff(&gc.matmul(&gd)) < 1e-9, "job g2 C ≠ AB");
+
+    // No cross-job key collisions: every job contributes exactly its
+    // seed tiles plus one SSA write per task; a single collision
+    // anywhere would shrink the shared store's distinct-key count.
+    let expected: u64 = [
+        (c1_seeds as u64, rc1.total_tasks),
+        (g1_seeds as u64, rg1.total_tasks),
+        (c2_seeds as u64, rc2.total_tasks),
+        (g2_seeds as u64, rg2.total_tasks),
+    ]
+    .iter()
+    .map(|(seeds, tasks)| seeds + tasks)
+    .sum();
+    assert_eq!(mgr.store().len() as u64, expected, "cross-job key collision");
+
+    let fleet = mgr.shutdown();
+    assert_eq!(fleet.workers_spawned, 6, "one shared fixed fleet");
+    assert!(fleet.core_secs_billed > 0.0);
+    assert!(fleet.store.bytes_written > 0);
+}
+
+#[test]
+fn concurrent_jobs_exact_under_chaos_faults() {
+    // The chaos leg: transient blob faults + shaped latency on the
+    // shared substrate; both jobs must still be numerically exact with
+    // exact per-job completed counts.
+    let mut cfg = base_cfg(5);
+    cfg.set("substrate", "sharded:4+chaos(err=0.05,lat=fixed:50us,seed=31)")
+        .unwrap();
+    let mgr = JobManager::new(cfg);
+    let mut rng = Rng::new(0xC4A5);
+    let a = Matrix::rand_spd(24, &mut rng);
+    let ga = Matrix::randn(18, 18, &mut rng);
+    let gb = Matrix::randn(18, 18, &mut rng);
+    let (cj, c_grid, _) = submit_cholesky(&mgr, &a, 8, 0);
+    let (gj, g_grid, _) = submit_gemm(&mgr, &ga, &gb, 6, 0);
+    let rc = mgr.wait(cj).unwrap();
+    let rg = mgr.wait(gj).unwrap();
+    assert_eq!(rc.completed, rc.total_tasks);
+    assert_eq!(rg.completed, rg.total_tasks);
+    assert!(rc.error.is_none() && rg.error.is_none());
+    let fc = |m: &str, idx: &[i64]| mgr.tile(cj, m, idx);
+    let l = collect_cholesky(&fc, a.rows(), 8, c_grid).unwrap();
+    assert!(l.matmul_nt(&l).max_abs_diff(&a) < 1e-8);
+    let fg = |m: &str, idx: &[i64]| mgr.tile(gj, m, idx);
+    let c = collect_gemm(&fg, 18, 18, 6, g_grid).unwrap();
+    assert!(c.max_abs_diff(&ga.matmul(&gb)) < 1e-9);
+}
+
+#[test]
+fn urgent_small_job_finishes_while_batch_job_runs() {
+    // Fair-share / composite priority: a large class-0 batch job is
+    // mid-flight on a slow 2-worker fleet when a small class-1 job
+    // arrives; the urgent job's tasks jump the shared queue, so it
+    // finishes while the batch job is still running. Pinned to a
+    // chaos-free substrate: an env-injected `drop=` clause would put a
+    // ~500 ms lease-recovery stall on the timing this test asserts.
+    let mut cfg = base_cfg(2);
+    cfg.set("substrate", "sharded:8").unwrap();
+    cfg.store_latency = Duration::from_micros(200);
+    let mgr = JobManager::new(cfg);
+    let mut rng = Rng::new(0xFA1);
+    let big = Matrix::rand_spd(48, &mut rng); // grid 12 → hundreds of tasks
+    let small_a = Matrix::randn(8, 8, &mut rng);
+    let small_b = Matrix::randn(8, 8, &mut rng);
+    let (big_job, _, _) = submit_cholesky(&mgr, &big, 4, 0);
+    let (small_job, small_grid, _) = submit_gemm(&mgr, &small_a, &small_b, 4, 1);
+    let small_report = mgr.wait(small_job).unwrap();
+    assert_eq!(small_report.completed, small_report.total_tasks);
+    assert!(
+        matches!(mgr.status(big_job), JobStatus::Running { .. }),
+        "urgent job done while the batch job still runs"
+    );
+    let fetch = |m: &str, idx: &[i64]| mgr.tile(small_job, m, idx);
+    let c = collect_gemm(&fetch, 8, 8, 4, small_grid).unwrap();
+    assert!(c.max_abs_diff(&small_a.matmul(&small_b)) < 1e-9);
+    let big_report = mgr.wait(big_job).unwrap();
+    assert_eq!(big_report.completed, big_report.total_tasks);
+    assert!(
+        small_report.wall_secs < big_report.wall_secs,
+        "small urgent job must finish first ({:.3}s vs {:.3}s)",
+        small_report.wall_secs,
+        big_report.wall_secs
+    );
+}
+
+#[test]
+fn cancel_drains_job_and_frees_the_fleet() {
+    let mut cfg = base_cfg(2);
+    cfg.store_latency = Duration::from_micros(200);
+    let mgr = JobManager::new(cfg);
+    let mut rng = Rng::new(0xDEAD);
+    let big = Matrix::rand_spd(48, &mut rng);
+    let (big_job, _, _) = submit_cholesky(&mgr, &big, 4, 0);
+    assert!(mgr.cancel(big_job));
+    let r = mgr.wait(big_job).unwrap();
+    assert!(r.canceled);
+    assert!(r.error.is_some());
+    assert_eq!(mgr.status(big_job), JobStatus::Canceled);
+    // Canceling again is a no-op (job already sealed).
+    assert!(!mgr.cancel(big_job));
+    // The fleet keeps serving: a fresh job completes exactly.
+    let a = Matrix::rand_spd(16, &mut rng);
+    let (job, grid, _) = submit_cholesky(&mgr, &a, 8, 0);
+    let r = mgr.wait(job).unwrap();
+    assert_eq!(r.completed, r.total_tasks);
+    let fetch = |m: &str, idx: &[i64]| mgr.tile(job, m, idx);
+    let l = collect_cholesky(&fetch, a.rows(), 8, grid).unwrap();
+    assert!(l.matmul_nt(&l).max_abs_diff(&a) < 1e-8);
+}
+
+#[test]
+fn eight_jobs_on_autoscaled_fleet() {
+    // Heavier multiplexing: 8 small Cholesky jobs against one
+    // auto-scaled fleet (the provisioner sees aggregate queue depth).
+    let mut cfg = base_cfg(0);
+    cfg.scaling = ScalingMode::Auto {
+        sf: 1.0,
+        max_workers: 8,
+    };
+    cfg.idle_timeout = Duration::from_millis(60);
+    cfg.provision_period = Duration::from_millis(10);
+    let mgr = JobManager::new(cfg);
+    let mut rng = Rng::new(0x8085);
+    let mats: Vec<Matrix> = (0..8).map(|_| Matrix::rand_spd(16, &mut rng)).collect();
+    let jobs: Vec<(JobId, usize)> = mats
+        .iter()
+        .map(|a| {
+            let (job, grid, _) = submit_cholesky(&mgr, a, 8, 0);
+            (job, grid)
+        })
+        .collect();
+    for ((job, grid), a) in jobs.iter().zip(&mats) {
+        let r = mgr.wait(*job).unwrap();
+        assert_eq!(r.completed, r.total_tasks, "[{}]", r.job);
+        let fetch = |m: &str, idx: &[i64]| mgr.tile(*job, m, idx);
+        let l = collect_cholesky(&fetch, a.rows(), 8, *grid).unwrap();
+        assert!(l.matmul_nt(&l).max_abs_diff(a) < 1e-8, "[{job:?}]");
+    }
+    let fleet = mgr.shutdown();
+    assert!(fleet.workers_spawned >= 1);
+}

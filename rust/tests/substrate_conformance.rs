@@ -31,8 +31,13 @@ fn backends() -> Vec<(&'static str, Substrate, Arc<TestClock>)> {
         "sharded:1",
         "sharded:4",
         "sharded:16",
+        // `auto` resolves its shard count from the environment at
+        // build time; the contracts must hold at whatever count it
+        // picks.
+        "sharded:auto",
         "strict+chaos(lat=fixed:20us,recv_lat=10us,kv_lat=5us,seed=3)",
         "sharded:4+chaos(lat=uniform:5us:50us,straggle=0.25:4,seed=5)",
+        "sharded:4+chaos(send_lat=5us,seed=7)",
     ]
     .into_iter()
     .map(|spec| {
@@ -307,8 +312,10 @@ fn engine_cholesky_correct_on_every_backend() {
     for spec in [
         "strict",
         "sharded:4",
+        "sharded:auto",
         "sharded:4+chaos(err=0.02,lat=fixed:50us,seed=11)",
         "strict+chaos(drop=0.05,dup=0.05,seed=13)",
+        "sharded:4+chaos(send_lat=uniform:10us:100us,seed=17)",
     ] {
         let mut rng = Rng::new(17);
         let a = Matrix::rand_spd(24, &mut rng);
