@@ -1,0 +1,184 @@
+//! §Perf — substrate GC under job churn.
+//!
+//! A long-lived multi-tenant service cycles through CHURN short
+//! Cholesky jobs, sequentially, on one shared fleet. Two legs:
+//!
+//! * **keep** (`RetentionPolicy::KeepAll`) — the pre-GC behavior:
+//!   every finished job's `jN/` namespace stays resident, so blob/KV
+//!   key counts grow linearly with churn;
+//! * **gc** (`RetentionPolicy::DeleteAll`) — each namespace is
+//!   reclaimed at finish; steady-state resident keys return to the
+//!   baseline, at the cost of a (measured) submit→reclaim latency.
+//!
+//! Per leg the bench reports:
+//! * resident blob + KV keys after every job (peak and final);
+//! * mean/max submit→reclaim latency — submit to the moment the job's
+//!   namespace is fully gone (gc leg only; the keep leg reports the
+//!   leak growth instead).
+//!
+//! Emits `BENCH_gc.json` (uploaded as a CI artifact by the bench-smoke
+//! job; `NUMPYWREN_BENCH_QUICK=1` trims the churn).
+
+use numpywren::config::{EngineConfig, RetentionPolicy, ScalingMode};
+use numpywren::drivers::stage_cholesky;
+use numpywren::jobs::{JobManager, JobSpec};
+use numpywren::lambdapack::programs;
+use numpywren::linalg::matrix::Matrix;
+use numpywren::storage::{BlobStore as _, KvState as _};
+use numpywren::util::prng::Rng;
+use numpywren::util::timer::Stopwatch;
+use std::time::{Duration, Instant};
+
+const CHURN_FULL: usize = 16;
+const CHURN_QUICK: usize = 4;
+const WORKERS: usize = 4;
+const N: usize = 32;
+const BLOCK: usize = 8;
+
+fn churn() -> usize {
+    if std::env::var("NUMPYWREN_BENCH_QUICK").as_deref() == Ok("1") {
+        CHURN_QUICK
+    } else {
+        CHURN_FULL
+    }
+}
+
+struct Leg {
+    label: &'static str,
+    resident_after: Vec<usize>,
+    peak_resident: usize,
+    final_resident: usize,
+    mean_reclaim_secs: f64,
+    max_reclaim_secs: f64,
+    wall_secs: f64,
+}
+
+fn resident(mgr: &JobManager) -> usize {
+    mgr.store().len() + mgr.state().scan_prefix("").len() + mgr.queue_len()
+}
+
+fn run_leg(retention: RetentionPolicy, label: &'static str) -> Leg {
+    let cfg = EngineConfig {
+        scaling: ScalingMode::Fixed(WORKERS),
+        job_timeout: Duration::from_secs(120),
+        ..EngineConfig::default()
+    };
+    let mgr = JobManager::new(cfg);
+    let mut rng = Rng::new(0x6C ^ retention as u64);
+    let sw = Stopwatch::start();
+    let mut resident_after = Vec::new();
+    let mut reclaims = Vec::new();
+    for _ in 0..churn() {
+        let a = Matrix::rand_spd(N, &mut rng);
+        let (env, inputs, _grid) = stage_cholesky(&a, BLOCK).unwrap();
+        let submit_at = Instant::now();
+        let job = mgr
+            .submit(
+                JobSpec::new(programs::cholesky_spec().program, env, inputs)
+                    .with_retention(retention)
+                    .with_outputs(["O"]),
+            )
+            .unwrap();
+        let r = mgr.wait(job).unwrap();
+        assert_eq!(r.completed, r.total_tasks);
+        assert!(r.error.is_none());
+        if retention == RetentionPolicy::DeleteAll {
+            // Submit→reclaim latency: poll until the namespace is gone
+            // (GC defers past the last in-flight pipeline task).
+            let prefix = format!("{job}/");
+            let deadline = Instant::now() + Duration::from_secs(30);
+            while Instant::now() < deadline {
+                if mgr.store().scan_prefix(&prefix).is_empty()
+                    && mgr.state().scan_prefix(&prefix).is_empty()
+                {
+                    break;
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            reclaims.push(submit_at.elapsed().as_secs_f64());
+        }
+        resident_after.push(resident(&mgr));
+    }
+    let wall_secs = sw.secs();
+    let peak = resident_after.iter().copied().max().unwrap_or(0);
+    let fin = resident_after.last().copied().unwrap_or(0);
+    let (mean_r, max_r) = if reclaims.is_empty() {
+        (0.0, 0.0)
+    } else {
+        (
+            reclaims.iter().sum::<f64>() / reclaims.len() as f64,
+            reclaims.iter().cloned().fold(0.0, f64::max),
+        )
+    };
+    let _ = mgr.shutdown();
+    Leg {
+        label,
+        resident_after,
+        peak_resident: peak,
+        final_resident: fin,
+        mean_reclaim_secs: mean_r,
+        max_reclaim_secs: max_r,
+        wall_secs,
+    }
+}
+
+fn main() {
+    println!(
+        "# §Perf substrate GC — {} sequential cholesky:{N}:{BLOCK} jobs, {WORKERS} workers",
+        churn()
+    );
+    let keep = run_leg(RetentionPolicy::KeepAll, "keep");
+    let gc = run_leg(RetentionPolicy::DeleteAll, "gc");
+    for leg in [&keep, &gc] {
+        println!(
+            "{:<4} wall={:.3}s peak-resident={} final-resident={} \
+             reclaim mean={:.4}s max={:.4}s",
+            leg.label,
+            leg.wall_secs,
+            leg.peak_resident,
+            leg.final_resident,
+            leg.mean_reclaim_secs,
+            leg.max_reclaim_secs
+        );
+    }
+    // The acceptance bar: with GC the service is steady-state — the
+    // keep leg's residency grows with churn, the gc leg's does not.
+    assert!(
+        gc.final_resident < keep.final_resident,
+        "GC must bound steady-state residency ({} !< {})",
+        gc.final_resident,
+        keep.final_resident
+    );
+
+    // Hand-rolled JSON (no serde in the offline crate set).
+    let series = |leg: &Leg| {
+        leg.resident_after
+            .iter()
+            .map(|r| r.to_string())
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
+    let mut json = String::from("{\n  \"bench\": \"perf_gc\",\n");
+    json.push_str(&format!(
+        "  \"churn\": {}, \"workers\": {WORKERS}, \"n\": {N}, \"block\": {BLOCK},\n  \"legs\": [\n",
+        churn()
+    ));
+    for (i, leg) in [&keep, &gc].iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"label\": \"{}\", \"wall_secs\": {:.4}, \"peak_resident\": {}, \
+             \"final_resident\": {}, \"mean_reclaim_secs\": {:.5}, \
+             \"max_reclaim_secs\": {:.5}, \"resident_after\": [{}]}}{}\n",
+            leg.label,
+            leg.wall_secs,
+            leg.peak_resident,
+            leg.final_resident,
+            leg.mean_reclaim_secs,
+            leg.max_reclaim_secs,
+            series(leg),
+            if i == 1 { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_gc.json", &json).expect("write BENCH_gc.json");
+    println!("# wrote BENCH_gc.json");
+}

@@ -11,7 +11,7 @@
 //! flag parser with the same ergonomics.)
 
 use crate::baselines::{dask_run, machines_to_fit, scalapack_run, Algorithm};
-use crate::config::{EngineConfig, ScalingMode, SubstrateConfig};
+use crate::config::{EngineConfig, RetentionPolicy, ScalingMode, SubstrateConfig};
 use crate::drivers;
 use crate::engine::Engine;
 use crate::jobs::{JobId, JobManager, JobSpec};
@@ -82,11 +82,19 @@ COMMANDS:
             [--set key=value]...
   jobs      run several jobs concurrently on one multi-tenant service
             (shared substrate + shared worker fleet)
-            --specs algo:N:BLOCK[:CLASS],...   (--jobs is an alias;
-            algo: cholesky|gemm; CLASS is the scheduling class — 0
-            normal, higher = more urgent, negative = background)
+            --specs algo:N:BLOCK[:CLASS][@DEP],...   (--jobs is an
+            alias; algo: cholesky|gemm; CLASS is the scheduling class —
+            0 normal, higher = more urgent, negative = background;
+            @DEP chains the job onto the DEP-th spec (1-based): a gemm
+            after a cholesky computes L·B, after a gemm computes P·B,
+            reading the upstream outputs through its input namespace
+            without copying)
             [--workers K | --sf F --max-workers K] [--pipeline W]
-            [--substrate SPEC] [--set key=value]...
+            [--retention keep|outputs|delete] [--substrate SPEC]
+            [--set key=value]...
+            (--retention delete reclaims each job's substrate
+            namespace at finish — outputs are not refetched for
+            verification; the residual key counts are printed instead)
   simulate  paper-scale discrete-event simulation (runs on the same
             substrate backends as the engine, virtual-time clock)
             --algo NAME --n DIM --block B --workers K [--sf F] [--pipeline W]
@@ -160,6 +168,9 @@ fn engine_cfg_from(args: &Args) -> Result<EngineConfig> {
     if let Some(spec) = args.get("substrate") {
         cfg.set("substrate", spec)?;
     }
+    if let Some(policy) = args.get("retention") {
+        cfg.set("retention", policy)?;
+    }
     if let Some(extra) = args.get("set") {
         for kv in extra.split(',') {
             let (k, v) = kv.split_once('=').context("--set key=value[,k=v]")?;
@@ -174,6 +185,15 @@ fn cmd_run(args: &Args) -> Result<()> {
     let n: usize = args.num("n", 256)?;
     let block: usize = args.num("block", 64)?;
     let cfg = engine_cfg_from(args)?;
+    if cfg.retention == RetentionPolicy::DeleteAll {
+        // The one-shot drivers refetch output tiles after the run;
+        // DeleteAll reclaims them during engine shutdown, so every
+        // collect would fail with a confusing missing-tile error.
+        bail!(
+            "`run` fetches outputs after completion — --retention delete would reclaim \
+             them first; use keep|outputs here, or the `jobs` command for delete"
+        );
+    }
     let kernels: Option<Arc<dyn KernelExecutor>> = match args.get("artifacts") {
         Some(dir) => Some(Arc::new(PjrtKernels::new(std::path::Path::new(dir), 2)?)),
         None => None,
@@ -255,7 +275,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// What `cmd_jobs` needs to verify a finished job's numerics.
+/// What `cmd_jobs` needs to verify a finished job's numerics. Chained
+/// jobs carry their expected dense result (the upstream factor times
+/// this job's B operand), so verification stays exact through a chain.
 enum JobCheck {
     Cholesky {
         a: Matrix,
@@ -268,58 +290,175 @@ enum JobCheck {
         block: usize,
         grid: usize,
     },
+    Chained {
+        expected: Matrix,
+        block: usize,
+        grid: usize,
+    },
 }
 
-/// The multi-tenant driver: parse `--specs algo:N:BLOCK[:CLASS],…`,
-/// submit every job to one shared `JobManager`, wait for all of them,
-/// verify per-job numerics, and print per-job + fleet reports.
+impl JobCheck {
+    /// The dense matrix this job's output should equal (chains
+    /// multiply it by their own B operand downstream).
+    fn expected(&self) -> Result<Matrix> {
+        Ok(match self {
+            JobCheck::Cholesky { a, .. } => crate::linalg::factor::cholesky(a)?,
+            JobCheck::Gemm { a, b, .. } => a.matmul(b),
+            JobCheck::Chained { expected, .. } => expected.clone(),
+        })
+    }
+
+    fn grid(&self) -> usize {
+        match self {
+            JobCheck::Cholesky { grid, .. }
+            | JobCheck::Gemm { grid, .. }
+            | JobCheck::Chained { grid, .. } => *grid,
+        }
+    }
+
+    fn block(&self) -> usize {
+        match self {
+            JobCheck::Cholesky { block, .. }
+            | JobCheck::Gemm { block, .. }
+            | JobCheck::Chained { block, .. } => *block,
+        }
+    }
+}
+
+/// The multi-tenant driver: parse
+/// `--specs algo:N:BLOCK[:CLASS][@DEP],…`, submit every job (chained
+/// via `submit_after` when `@DEP` names an earlier spec) to one shared
+/// `JobManager`, wait for all of them, verify per-job numerics, and
+/// print per-job + fleet reports.
 fn cmd_jobs(args: &Args) -> Result<()> {
     let specs = match args.get("specs").or_else(|| args.get("jobs")) {
         Some(s) => s.to_string(),
-        None => bail!("missing --specs (or --jobs) algo:N:BLOCK[:CLASS],..."),
+        None => bail!("missing --specs (or --jobs) algo:N:BLOCK[:CLASS][@DEP],..."),
     };
     let cfg = engine_cfg_from(args)?;
+    let retention = cfg.retention;
     let mgr = JobManager::new(cfg);
     let mut rng = Rng::new(args.num("seed", 42u64)?);
     let mut submitted: Vec<(JobId, JobCheck)> = Vec::new();
+    // Specs consumed as chain upstreams: under KeepOutputs their
+    // namespaces are reclaimed once the consumer finishes, so their
+    // outputs cannot be refetched for verification.
+    let mut consumed: std::collections::HashSet<usize> = std::collections::HashSet::new();
     for s in specs.split(',') {
-        let parts: Vec<&str> = s.split(':').collect();
+        let (core, dep) = match s.split_once('@') {
+            Some((core, d)) => {
+                let idx: usize = d
+                    .parse()
+                    .map_err(|_| anyhow!("bad chain reference `@{d}` in `{s}`"))?;
+                if idx == 0 || idx > submitted.len() {
+                    bail!("chain reference @{idx} in `{s}` must name an earlier spec (1-based)");
+                }
+                (core, Some(idx - 1))
+            }
+            None => (s, None),
+        };
+        let parts: Vec<&str> = core.split(':').collect();
         let (algo, n, block, class) = match parts.as_slice() {
             [algo, n, block] => (*algo, n.parse::<usize>()?, block.parse::<usize>()?, 0i64),
             [algo, n, block, class] => (*algo, n.parse()?, block.parse()?, class.parse::<i64>()?),
-            _ => bail!("bad job spec `{s}` (algo:N:BLOCK[:CLASS])"),
+            _ => bail!("bad job spec `{s}` (algo:N:BLOCK[:CLASS][@DEP])"),
         };
-        match algo {
-            "cholesky" => {
+        match (algo, dep) {
+            ("cholesky", None) => {
                 let a = Matrix::rand_spd(n, &mut rng);
                 let (env, inputs, grid) = drivers::stage_cholesky(&a, block)?;
                 let job = mgr.submit(
                     JobSpec::new(programs::cholesky_spec().program, env, inputs)
-                        .with_class(class),
+                        .with_class(class)
+                        .with_outputs(["O"]),
                 )?;
                 submitted.push((job, JobCheck::Cholesky { a, block, grid }));
             }
-            "gemm" => {
+            ("gemm", None) => {
                 let a = Matrix::randn(n, n, &mut rng);
                 let b = Matrix::randn(n, n, &mut rng);
                 let (env, inputs, grid) = drivers::stage_gemm(&a, &b, block)?;
                 let job = mgr.submit(
                     JobSpec::new(programs::gemm_spec().program, env, inputs)
-                        .with_class(class),
+                        .with_class(class)
+                        .with_outputs(["Ctmp"]),
                 )?;
                 submitted.push((job, JobCheck::Gemm { a, b, block, grid }));
             }
-            other => bail!("jobs driver supports cholesky|gemm, got `{other}`"),
+            ("gemm", Some(up_idx)) => {
+                let (up_job, up_check) = &submitted[up_idx];
+                if block != up_check.block() || n.div_ceil(block) != up_check.grid() {
+                    bail!(
+                        "chained spec `{s}` must match the upstream grid \
+                         ({}×{} blocks of {})",
+                        up_check.grid(),
+                        up_check.grid(),
+                        up_check.block()
+                    );
+                }
+                let b = Matrix::randn(n, n, &mut rng);
+                let (env, inputs, imports, grid) = match up_check {
+                    JobCheck::Cholesky { .. } => {
+                        drivers::stage_gemm_after_cholesky(*up_job, &b, block)?
+                    }
+                    JobCheck::Gemm { .. } | JobCheck::Chained { .. } => {
+                        drivers::stage_gemm_after_gemm(*up_job, up_check.grid(), &b, block)?
+                    }
+                };
+                let expected = up_check.expected()?.matmul(&b);
+                let job = mgr.submit_after(
+                    JobSpec::new(programs::gemm_spec().program, env, inputs)
+                        .with_class(class)
+                        .with_outputs(["Ctmp"])
+                        .with_imports(imports),
+                    &[*up_job],
+                )?;
+                consumed.insert(up_idx);
+                submitted.push((job, JobCheck::Chained { expected, block, grid }));
+            }
+            ("cholesky", Some(_)) => {
+                bail!("chain consumers must be gemm (`{s}` chains a cholesky)")
+            }
+            (other, _) => bail!("jobs driver supports cholesky|gemm, got `{other}`"),
         }
     }
+    let verify = retention != RetentionPolicy::DeleteAll;
     let mut failed = false;
-    for (job, check) in &submitted {
+    for (i, (job, check)) in submitted.iter().enumerate() {
         let r = mgr.wait(*job)?;
         if let Some(e) = &r.error {
             failed = true;
             println!(
                 "{job} {:<8} class={} tasks={}/{} wall={:.3}s ERROR: {e}",
                 r.label, r.priority_class, r.completed, r.total_tasks, r.wall_secs
+            );
+            continue;
+        }
+        if retention == RetentionPolicy::KeepOutputs && consumed.contains(&i) {
+            // The consumer's verification covers this job's numerics
+            // transitively; its own outputs are gone by design.
+            println!(
+                "{job} {:<8} class={} tasks={}/{} wall={:.3}s flops={:.3e} (outputs consumed)",
+                r.label,
+                r.priority_class,
+                r.completed,
+                r.total_tasks,
+                r.wall_secs,
+                r.total_flops as f64
+            );
+            continue;
+        }
+        if !verify {
+            // DeleteAll: outputs may already be reclaimed — report
+            // completion only; the residual print below shows the GC.
+            println!(
+                "{job} {:<8} class={} tasks={}/{} wall={:.3}s flops={:.3e} (outputs reclaimed)",
+                r.label,
+                r.priority_class,
+                r.completed,
+                r.total_tasks,
+                r.wall_secs,
+                r.total_flops as f64
             );
             continue;
         }
@@ -333,6 +472,14 @@ fn cmd_jobs(args: &Args) -> Result<()> {
                 let c = drivers::collect_gemm(&fetch, a.rows(), b.cols(), *block, *grid)?;
                 c.max_abs_diff(&a.matmul(b)) / a.fro_norm()
             }
+            JobCheck::Chained {
+                expected,
+                block,
+                grid,
+            } => {
+                let c = drivers::collect_gemm(&fetch, expected.rows(), expected.cols(), *block, *grid)?;
+                c.max_abs_diff(expected) / expected.fro_norm().max(1e-300)
+            }
         };
         println!(
             "{job} {:<8} class={} tasks={}/{} wall={:.3}s flops={:.3e} rel-err={rel:.2e}",
@@ -342,6 +489,25 @@ fn cmd_jobs(args: &Args) -> Result<()> {
             r.total_tasks,
             r.wall_secs,
             r.total_flops as f64
+        );
+    }
+    if retention != RetentionPolicy::KeepAll {
+        // Give the asynchronous GC a bounded window to drain, then
+        // report what is left resident in the shared substrate.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while std::time::Instant::now() < deadline {
+            if mgr.queue_len() == 0
+                && (retention != RetentionPolicy::DeleteAll || mgr.store().len() == 0)
+            {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        println!(
+            "substrate residual: blobs={} kv={} queue={}",
+            mgr.store().len(),
+            mgr.state().scan_prefix("").len(),
+            mgr.queue_len()
         );
     }
     let fleet = mgr.shutdown();
@@ -595,6 +761,48 @@ mod tests {
         assert!(run_cli(&argv("jobs --specs cholesky:24 --workers 2")).is_err());
         assert!(run_cli(&argv("jobs --specs tsqr:24:8 --workers 2")).is_err());
         assert!(run_cli(&argv("jobs --workers 2")).is_err(), "missing --specs");
+    }
+
+    #[test]
+    fn tiny_jobs_driver_runs_dependency_chain() {
+        // cholesky → gemm(L·B) → gemm((L·B)·D), verified against the
+        // locally-computed expected matrices (exact numerics through
+        // the read-through imports).
+        run_cli(&argv(
+            "jobs --specs cholesky:16:8,gemm:16:8@1,gemm:16:8@2 --workers 3",
+        ))
+        .unwrap();
+        // A consumed KeepOutputs upstream is reclaimed, not refetched.
+        run_cli(&argv(
+            "jobs --specs cholesky:16:8,gemm:16:8@1 --workers 3 --retention outputs",
+        ))
+        .unwrap();
+        // Forward references and cholesky-as-consumer are rejected.
+        assert!(run_cli(&argv("jobs --specs gemm:16:8@1 --workers 2")).is_err());
+        assert!(run_cli(&argv("jobs --specs cholesky:16:8,cholesky:16:8@1 --workers 2")).is_err());
+        assert!(run_cli(&argv("jobs --specs cholesky:16:8,gemm:24:8@1 --workers 2")).is_err());
+    }
+
+    #[test]
+    fn tiny_jobs_driver_reclaims_under_delete_retention() {
+        run_cli(&argv(
+            "jobs --specs cholesky:16:8,gemm:12:6 --workers 3 --retention delete",
+        ))
+        .unwrap();
+        assert!(run_cli(&argv(
+            "jobs --specs cholesky:16:8 --workers 2 --retention shred"
+        ))
+        .is_err());
+        // `run` refetches outputs, so delete retention is rejected up
+        // front instead of failing with a missing-tile error.
+        assert!(run_cli(&argv(
+            "run --algo cholesky --n 24 --block 8 --workers 2 --retention delete"
+        ))
+        .is_err());
+        run_cli(&argv(
+            "run --algo cholesky --n 24 --block 8 --workers 2 --retention outputs",
+        ))
+        .unwrap();
     }
 
     #[test]

@@ -30,6 +30,41 @@ pub struct FailureSpec {
     pub fraction: f64,
 }
 
+/// What happens to a job's substrate namespace (`jN/` blob tiles +
+/// status/deps/edge KV entries + queue residue) once the job reaches a
+/// terminal state. The paper's intermediate-state discussion (§4): for
+/// long pipelines the object store fills with dead tiles unless the
+/// runtime reclaims them.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RetentionPolicy {
+    /// Keep everything until the manager is dropped (the historical
+    /// behavior; what `Engine::run` needs so clients can fetch outputs
+    /// after the run).
+    #[default]
+    KeepAll,
+    /// Reclaim control state and intermediate tiles at finish; keep the
+    /// declared output tiles (`JobSpec::output_matrices`) fetchable.
+    /// Once downstream jobs have consumed the outputs (the pin count
+    /// drops to zero), the outputs are reclaimed too.
+    KeepOutputs,
+    /// Reclaim the whole namespace at finish (deferred while any
+    /// downstream job still pins the outputs).
+    DeleteAll,
+}
+
+impl RetentionPolicy {
+    /// Parse `keep`/`keep_all` | `outputs`/`keep_outputs` |
+    /// `delete`/`delete_all`.
+    pub fn parse(s: &str) -> Result<RetentionPolicy> {
+        match s {
+            "keep" | "keep_all" => Ok(RetentionPolicy::KeepAll),
+            "outputs" | "keep_outputs" => Ok(RetentionPolicy::KeepOutputs),
+            "delete" | "delete_all" => Ok(RetentionPolicy::DeleteAll),
+            other => bail!("bad retention policy `{other}` (keep | outputs | delete)"),
+        }
+    }
+}
+
 /// Which substrate backend family a job runs on (see
 /// [`crate::storage`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -193,6 +228,12 @@ pub struct EngineConfig {
     pub job_timeout: Duration,
     /// Which substrate backend family to run on.
     pub substrate: SubstrateConfig,
+    /// Fleet-default namespace retention for jobs that do not set one
+    /// on their `JobSpec`. `Engine::run` inherits this, so a
+    /// `DeleteAll` default reclaims the namespace during engine
+    /// shutdown — output tiles are gone before `RunOutput::tile`; only
+    /// opt in on the wrapper path when outputs are not fetched.
+    pub retention: RetentionPolicy,
 }
 
 impl Default for EngineConfig {
@@ -210,6 +251,7 @@ impl Default for EngineConfig {
             sample_period: Duration::from_millis(20),
             job_timeout: Duration::from_secs(600),
             substrate: SubstrateConfig::from_env_or_default(),
+            retention: RetentionPolicy::KeepAll,
         }
     }
 }
@@ -256,6 +298,7 @@ impl EngineConfig {
             "sample_period" => self.sample_period = secs(value)?,
             "job_timeout" => self.job_timeout = secs(value)?,
             "substrate" => self.substrate = SubstrateConfig::parse(value)?,
+            "retention" => self.retention = RetentionPolicy::parse(value)?,
             "failure" => {
                 let (at, frac) = value
                     .split_once(':')
@@ -320,6 +363,24 @@ mod tests {
     #[test]
     fn unknown_key_rejected() {
         assert!(EngineConfig::default().set("nope", "1").is_err());
+    }
+
+    #[test]
+    fn retention_policy_parses() {
+        assert_eq!(RetentionPolicy::default(), RetentionPolicy::KeepAll);
+        let mut c = EngineConfig::default();
+        assert_eq!(c.retention, RetentionPolicy::KeepAll);
+        c.set("retention", "delete").unwrap();
+        assert_eq!(c.retention, RetentionPolicy::DeleteAll);
+        c.set("retention", "keep_outputs").unwrap();
+        assert_eq!(c.retention, RetentionPolicy::KeepOutputs);
+        c.set("retention", "outputs").unwrap();
+        assert_eq!(c.retention, RetentionPolicy::KeepOutputs);
+        c.set("retention", "keep").unwrap();
+        assert_eq!(c.retention, RetentionPolicy::KeepAll);
+        c.set("retention", "delete_all").unwrap();
+        assert_eq!(c.retention, RetentionPolicy::DeleteAll);
+        assert!(c.set("retention", "shred").is_err());
     }
 
     #[test]

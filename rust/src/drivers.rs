@@ -6,6 +6,7 @@
 //! use; everything below it (engine, analyzer, substrate) is generic.
 
 use crate::engine::{Engine, RunOutput};
+use crate::jobs::JobId;
 use crate::lambdapack::analysis::Loc;
 use crate::lambdapack::interp::Env;
 use crate::lambdapack::programs;
@@ -141,6 +142,97 @@ pub fn collect_gemm(
         }
     }
     Ok(out.to_dense())
+}
+
+/// What a chained-GEMM staging produces: the job args, the locally
+/// seeded input tiles, the read-through import list for
+/// [`crate::jobs::JobSpec::with_imports`], and the grid size.
+pub type ChainStaging = (Env, Vec<(Loc, Matrix)>, Vec<(Loc, JobId, Loc)>, usize);
+
+/// The read-through import list plus locally-seeded tiles for a GEMM
+/// job chained onto a finished/running upstream job
+/// ([`crate::jobs::JobManager::submit_after`]): the child's `A[i,k]`
+/// input locations alias upstream output tiles (no copy), `B` is
+/// seeded densely from `b`. Returns `(args, inputs, imports, grid_n)`.
+///
+/// `upstream_output(i, k)` names the upstream tile the child's
+/// `A[i,k]` resolves to, or `None` to seed a zero tile instead (e.g. a
+/// Cholesky upstream only materializes the lower triangle).
+pub fn stage_gemm_from(
+    upstream: JobId,
+    upstream_output: &dyn Fn(usize, usize) -> Option<Loc>,
+    b: &Matrix,
+    block: usize,
+) -> Result<ChainStaging> {
+    if b.rows() != b.cols() {
+        bail!("gemm chain driver: square B required");
+    }
+    if b.rows() % block != 0 {
+        // Upstream tiles are exact block×block; a padded B would
+        // misalign against them.
+        bail!("gemm chain driver: B size must be a multiple of the block");
+    }
+    let bb = BlockedMatrix::from_dense(b, block);
+    let n = bb.grid_rows();
+    let mut inputs = Vec::new();
+    let mut imports = Vec::new();
+    for i in 0..n {
+        for k in 0..n {
+            let a_loc = Loc::new("A", vec![i as i64, k as i64]);
+            match upstream_output(i, k) {
+                Some(up) => imports.push((a_loc, upstream, up)),
+                None => inputs.push((a_loc, Matrix::zeros(block, block))),
+            }
+            inputs.push((
+                Loc::new("B", vec![i as i64, k as i64]),
+                masked_tile(&bb, i, k),
+            ));
+        }
+    }
+    Ok((grid_args(n), inputs, imports, n))
+}
+
+/// Chain staging: C = L·B where L is an upstream Cholesky job's output
+/// (`O[i,k]`, k ≤ i; the strict upper triangle is seeded as zeros).
+pub fn stage_gemm_after_cholesky(
+    upstream: JobId,
+    b: &Matrix,
+    block: usize,
+) -> Result<ChainStaging> {
+    stage_gemm_from(
+        upstream,
+        &|i, k| (k <= i).then(|| Loc::new("O", vec![i as i64, k as i64])),
+        b,
+        block,
+    )
+}
+
+/// Chain staging: C = P·B where P is an upstream GEMM job's product
+/// (final accumulator tiles `Ctmp[i,k,grid-1]`).
+pub fn stage_gemm_after_gemm(
+    upstream: JobId,
+    upstream_grid: usize,
+    b: &Matrix,
+    block: usize,
+) -> Result<ChainStaging> {
+    let staged = stage_gemm_from(
+        upstream,
+        &|i, k| {
+            Some(Loc::new(
+                "Ctmp",
+                vec![i as i64, k as i64, upstream_grid as i64 - 1],
+            ))
+        },
+        b,
+        block,
+    )?;
+    if staged.3 != upstream_grid {
+        bail!(
+            "gemm chain driver: grid mismatch (upstream {upstream_grid}, downstream {})",
+            staged.3
+        );
+    }
+    Ok(staged)
 }
 
 /// Tiled GEMM: C = A·B (square, same size).

@@ -30,7 +30,7 @@
 pub mod lease;
 pub mod worker;
 
-use crate::config::EngineConfig;
+use crate::config::{EngineConfig, RetentionPolicy};
 use crate::jobs::{job_prefix, JobId};
 use crate::kernels::KernelExecutor;
 use crate::lambdapack::analysis::{Analyzer, Loc};
@@ -223,6 +223,31 @@ pub struct JobContext {
     /// transiently; it is clamped at zero and never used for
     /// correctness.
     in_queue: AtomicI64,
+    /// Fleet-wide count of this job's claimed-but-unfinished tasks
+    /// (worker pipeline occupancy). Doubles as the per-job in-flight
+    /// quota gate ([`JobContext::claim_slot`]) and as the GC barrier:
+    /// namespace reclamation waits until this drains to zero so no
+    /// in-pipeline task can read or write a reclaimed key.
+    inflight: AtomicI64,
+    /// Per-job in-flight task quota (ROADMAP "per-job resource
+    /// quotas"): workers skip claiming this job's messages while
+    /// `inflight` is at the cap, so a capped batch job cannot starve
+    /// the shared fleet. `None` = unlimited.
+    pub max_inflight: Option<usize>,
+    /// What happens to the `jN/` namespace at terminal state.
+    pub retention: RetentionPolicy,
+    /// Matrix names of the job's declared outputs (`O`, `Ctmp`, …) —
+    /// what `KeepOutputs` retains. Empty = unknown → keep every tile.
+    pub output_matrices: Vec<String>,
+    /// Read-through imports: this job's input blob keys that resolve
+    /// to an *upstream job's* output keys (dependency chains — no tile
+    /// copy). Maps full child key (`j5/A[0,0]`) → upstream key
+    /// (`j3/O[0,0]`). Input locations are SSA-read-only, so writes
+    /// never hit the alias table.
+    pub aliases: HashMap<String, String>,
+    /// Upstream jobs this one was gated on (`submit_after`) — their
+    /// pin counts drop when this job reaches a terminal state.
+    pub deps: Vec<u64>,
     // Shared substrate handles (clones of the fleet's).
     pub queue: Arc<dyn Queue>,
     pub store: Arc<dyn BlobStore>,
@@ -253,6 +278,12 @@ impl JobContext {
             done: AtomicBool::new(false),
             canceled: AtomicBool::new(false),
             in_queue: AtomicI64::new(0),
+            inflight: AtomicI64::new(0),
+            max_inflight: None,
+            retention: RetentionPolicy::KeepAll,
+            output_matrices: Vec::new(),
+            aliases: HashMap::new(),
+            deps: Vec::new(),
             queue,
             store,
             state,
@@ -307,9 +338,18 @@ impl JobContext {
         format!("{}job:error", self.prefix)
     }
 
-    /// Namespaced object-store key for a tile location.
+    /// Namespaced object-store key for a tile location. Imported input
+    /// locations (dependency chains) resolve *through* the alias table
+    /// into the upstream job's namespace — a read-through, not a copy.
     pub fn blob_key(&self, loc: &Loc) -> String {
-        loc.key_in(&self.prefix)
+        let key = loc.key_in(&self.prefix);
+        if self.aliases.is_empty() {
+            return key;
+        }
+        match self.aliases.get(&key) {
+            Some(upstream) => upstream.clone(),
+            None => key,
+        }
     }
 
     /// The queue-message body for a task: `job_id|node_id` — what lets
@@ -339,6 +379,45 @@ impl JobContext {
     /// Approximate number of this job's messages in the shared queue.
     pub fn queued_estimate(&self) -> usize {
         self.in_queue.load(Ordering::Relaxed).max(0) as usize
+    }
+
+    // ---- in-flight accounting / quota ---------------------------------
+
+    /// Claim one fleet-wide in-flight slot for this job. Returns false
+    /// when the job is at its `max_inflight` quota — the worker then
+    /// leaves the delivery's lease untouched (it expires and the
+    /// message redelivers) and serves other jobs instead. Every
+    /// successful claim must be paired with [`JobContext::release_slot`].
+    pub fn claim_slot(&self) -> bool {
+        match self.max_inflight {
+            None => {
+                self.inflight.fetch_add(1, Ordering::SeqCst);
+                true
+            }
+            Some(quota) => loop {
+                let cur = self.inflight.load(Ordering::SeqCst);
+                if cur >= quota as i64 {
+                    return false;
+                }
+                if self
+                    .inflight
+                    .compare_exchange(cur, cur + 1, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+                {
+                    return true;
+                }
+            },
+        }
+    }
+
+    pub fn release_slot(&self) {
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Claimed-but-unfinished tasks across the whole fleet — the GC
+    /// barrier (reclamation waits for zero).
+    pub fn inflight(&self) -> i64 {
+        self.inflight.load(Ordering::SeqCst)
     }
 
     /// Completed-task count from the state store.
@@ -554,6 +633,38 @@ mod tests {
         j1.report_error(&node, &anyhow::anyhow!("boom"));
         assert!(j1.job_error().is_some());
         assert!(j2.job_error().is_none());
+    }
+
+    #[test]
+    fn blob_key_resolves_imports_through_alias_table() {
+        let sub = strict_substrate();
+        let mut ctx = ctx_with(JobId(5), 0, 3, &sub);
+        ctx.aliases.insert("j5/A[0,0]".into(), "j3/O[0,0]".into());
+        // Imported input reads through to the upstream namespace…
+        assert_eq!(ctx.blob_key(&Loc::new("A", vec![0, 0])), "j3/O[0,0]");
+        // …while unaliased keys (including this job's writes) stay home.
+        assert_eq!(ctx.blob_key(&Loc::new("A", vec![0, 1])), "j5/A[0,1]");
+        assert_eq!(ctx.blob_key(&Loc::new("Ctmp", vec![0, 0, 0])), "j5/Ctmp[0,0,0]");
+    }
+
+    #[test]
+    fn claim_slot_enforces_quota_and_releases() {
+        let sub = strict_substrate();
+        let mut ctx = ctx_with(JobId(1), 0, 3, &sub);
+        ctx.max_inflight = Some(2);
+        assert!(ctx.claim_slot());
+        assert!(ctx.claim_slot());
+        assert!(!ctx.claim_slot(), "at quota");
+        assert_eq!(ctx.inflight(), 2);
+        ctx.release_slot();
+        assert!(ctx.claim_slot(), "freed slot reclaimable");
+        // Unlimited jobs always claim (and still count, for the GC
+        // drain barrier).
+        let unlimited = ctx_with(JobId(2), 0, 3, &sub);
+        for _ in 0..8 {
+            assert!(unlimited.claim_slot());
+        }
+        assert_eq!(unlimited.inflight(), 8);
     }
 
     #[test]

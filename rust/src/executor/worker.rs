@@ -12,7 +12,15 @@
 //! metrics — via the [`FleetContext`] registry. One worker's pipeline
 //! can hold tasks of several jobs at once. Messages of finished or
 //! canceled jobs (no registry entry, or context marked done) are
-//! deleted on receipt — that is how a canceled job's backlog drains.
+//! deleted on receipt — that is how a canceled job's backlog drains
+//! (the GC's [`purge_prefix`](crate::storage::Queue::purge_prefix)
+//! sweep removes whatever is left in bulk). Claiming a task takes one
+//! of the job's fleet-wide in-flight
+//! slots ([`JobContext::claim_slot`]): jobs at their `max_inflight`
+//! quota are skipped (the untouched lease expires and redelivers), and
+//! the slot count doubles as the GC barrier — a sealed job's namespace
+//! is reclaimed only after its last claimed task leaves the pipeline,
+//! so no stage ever touches a reclaimed key.
 //!
 //! §4.2 pipelining: "every LAmbdaPACK instruction block has three
 //! execution phases: read, compute and write … we allow a worker to
@@ -220,12 +228,39 @@ fn read_stage(
                 continue;
             }
         };
+        // Per-job in-flight quota (fleet-wide): a job at quota gives up
+        // this delivery — the untouched lease expires and the message
+        // redelivers later, so this worker serves other jobs instead of
+        // letting one capped job occupy every slot. The lease-park is
+        // deliberate: re-sending the message instead would leave a
+        // high-class capped job's messages permanently visible at the
+        // top of the priority queue, hot-spinning every idle worker
+        // and starving lower classes — the very thing the quota
+        // exists to prevent. The cost is that a capped job's
+        // throughput under contention is bounded by the lease period;
+        // size `lease` accordingly when using tight quotas.
+        if !ctx.claim_slot() {
+            continue;
+        }
+        // Re-check after the claim: the job may have sealed between the
+        // first is_done check and the slot claim. The claim is what
+        // blocks the GC sweep (it waits for in-flight == 0), so a claim
+        // the sweep did not observe necessarily happened after seal —
+        // this re-check then sees done=true and bails before touching
+        // any key the sweep may be about to reclaim.
+        if ctx.is_done() {
+            ctx.task_deleted();
+            fleet.queue.delete(&lease);
+            ctx.release_slot();
+            continue;
+        }
         registry.insert(&body, lease);
         let task = match ctx.analyzer.concretize(&node) {
             Ok(t) => t,
             Err(e) => {
                 ctx.report_error(&node, &e);
                 registry.remove(&body);
+                ctx.release_slot();
                 continue;
             }
         };
@@ -261,12 +296,14 @@ fn read_stage(
                     // queue redelivers (§4.1 recovery, same path as a
                     // worker death).
                     registry.remove(&body);
+                    ctx.release_slot();
                     continue;
                 }
                 // Dependency protocol guarantees presence; a miss is a
                 // protocol bug — surface it.
                 ctx.report_error(&node, &e);
                 registry.remove(&body);
+                ctx.release_slot();
                 continue;
             }
             (tiles, bytes)
@@ -281,7 +318,8 @@ fn read_stage(
             start,
             bytes_read,
         };
-        if work_tx.send(item).is_err() {
+        if let Err(send_err) = work_tx.send(item) {
+            send_err.0.ctx.release_slot();
             return InvocationEnd::Exit(ExitReason::FleetDone);
         }
     }
@@ -326,11 +364,13 @@ fn compute_stage(
                         0,
                     );
                     registry.remove(&done.body);
+                    done.ctx.release_slot();
                     continue;
                 }
             }
         }
-        if done_tx.send(done).is_err() {
+        if let Err(send_err) = done_tx.send(done) {
+            send_err.0.ctx.release_slot();
             return;
         }
     }
@@ -356,6 +396,29 @@ fn write_stage(
                 item.bytes_read,
                 0,
             );
+            ctx.release_slot();
+            continue;
+        }
+        if ctx.is_done() {
+            // The job sealed (completed / failed / canceled) while this
+            // task sat in the pipeline. Its effects are either redundant
+            // (every task already completed) or unwanted (canceled), and
+            // GC may be waiting to reclaim the namespace — so drop the
+            // write/CAS/propagate entirely and just drain the message.
+            ctx.metrics.task_finished(
+                &item.node.id(),
+                &item.task.fn_name,
+                worker_id,
+                item.start,
+                0,
+                item.bytes_read,
+                0,
+            );
+            if let Some(lease) = registry.remove(&item.body) {
+                ctx.task_deleted();
+                fleet.queue.delete(&lease);
+            }
+            ctx.release_slot();
             continue;
         }
         let mut bytes_written = 0u64;
@@ -387,10 +450,12 @@ fn write_stage(
                     // expire and the task redeliver is safe — no
                     // completion CAS, no propagation, no delete here.
                     registry.remove(&item.body);
+                    ctx.release_slot();
                     continue;
                 }
                 ctx.report_error(&item.node, &e);
                 registry.remove(&item.body);
+                ctx.release_slot();
                 continue;
             }
         }
@@ -425,5 +490,6 @@ fn write_stage(
             ctx.task_deleted();
             fleet.queue.delete(&lease);
         }
+        ctx.release_slot();
     }
 }

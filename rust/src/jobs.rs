@@ -25,8 +25,23 @@
 //! [`crate::engine::Engine::run`] survives as a thin single-job
 //! wrapper over this service, so the one-shot API (drivers, examples,
 //! benches) is unchanged.
+//!
+//! **Lifecycle (this PR's tentpole):** a long-lived service must not
+//! leak every finished job's `jN/` namespace (the paper's §4
+//! intermediate-state burden). Each job carries a
+//! [`RetentionPolicy`]; when it reaches a terminal state a GC pass
+//! purges its queue residue ([`Queue::purge_prefix`]), deletes its
+//! status/deps/edge KV entries, and reclaims its blob tiles —
+//! deferred until the worker pipeline drains the job's in-flight
+//! tasks and until no downstream job pins the outputs. Dependency
+//! chains ([`JobManager::submit_after`]) gate a child job on upstream
+//! terminal states and map upstream output tiles into the child's
+//! input namespace as read-through aliases (no copy); each chain edge
+//! pins the upstream namespace until the child is terminal, and a
+//! `KeepOutputs` parent is fully reclaimed once its last consumer
+//! finishes.
 
-use crate::config::{EngineConfig, FailureSpec, ScalingMode};
+use crate::config::{EngineConfig, FailureSpec, RetentionPolicy, ScalingMode};
 use crate::executor::worker::ExitReason;
 use crate::executor::{FleetContext, JobContext};
 use crate::kernels::{KernelExecutor, NativeKernels};
@@ -37,15 +52,15 @@ use crate::linalg::matrix::Matrix;
 use crate::metrics::{Sample, TaskRecord};
 use crate::provisioner::{run_provisioner, WorkerPool};
 use crate::storage::chaos::{blob_put_with_retry, with_blob_retry, CLIENT_BLOB_RETRIES};
-use crate::storage::{BlobStore, KvState as _, Queue as _, StoreStats};
+use crate::storage::{BlobStore, KvState, Queue, StoreStats};
 use crate::util::prng::Rng;
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Client attribution id for seeded inputs and fetched outputs (not a
 /// worker).
@@ -73,11 +88,28 @@ pub struct JobSpec {
     pub args: Env,
     /// Input tiles, in job-local (un-namespaced) locations.
     pub inputs: Vec<(Loc, Matrix)>,
+    /// Read-through imports from upstream jobs (dependency chains):
+    /// `(child-local input location, upstream job, upstream location)`.
+    /// Every referenced job must be a declared dependency of
+    /// [`JobManager::submit_after`]. No tiles are copied — the child's
+    /// reads resolve into the upstream namespace.
+    pub imports: Vec<(Loc, JobId, Loc)>,
     /// Scheduling class: 0 = normal, higher = more urgent, negative =
     /// background. The high-order component of the composite queue
     /// priority.
     pub priority_class: i64,
     pub label: String,
+    /// Namespace retention at terminal state; `None` inherits the
+    /// fleet default ([`EngineConfig::retention`]).
+    pub retention: Option<RetentionPolicy>,
+    /// Matrix names of the job's declared outputs — what
+    /// [`RetentionPolicy::KeepOutputs`] retains. Empty = unknown →
+    /// every tile is conservatively kept.
+    pub output_matrices: Vec<String>,
+    /// Per-job in-flight task quota: at most this many of the job's
+    /// tasks claimed by the fleet at once (`None` = unlimited), so a
+    /// capped batch job cannot starve the shared fleet.
+    pub max_inflight: Option<usize>,
 }
 
 impl JobSpec {
@@ -87,8 +119,12 @@ impl JobSpec {
             program,
             args,
             inputs,
+            imports: Vec::new(),
             priority_class: 0,
             label,
+            retention: None,
+            output_matrices: Vec::new(),
+            max_inflight: None,
         }
     }
 
@@ -101,6 +137,29 @@ impl JobSpec {
         self.label = label.into();
         self
     }
+
+    pub fn with_retention(mut self, retention: RetentionPolicy) -> JobSpec {
+        self.retention = Some(retention);
+        self
+    }
+
+    pub fn with_outputs<S: Into<String>>(
+        mut self,
+        outputs: impl IntoIterator<Item = S>,
+    ) -> JobSpec {
+        self.output_matrices = outputs.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn with_max_inflight(mut self, quota: usize) -> JobSpec {
+        self.max_inflight = Some(quota);
+        self
+    }
+
+    pub fn with_imports(mut self, imports: Vec<(Loc, JobId, Loc)>) -> JobSpec {
+        self.imports = imports;
+        self
+    }
 }
 
 /// Lifecycle state of a job, as seen by `status`.
@@ -108,6 +167,9 @@ impl JobSpec {
 pub enum JobStatus {
     /// Not a job this manager knows.
     Unknown,
+    /// Dependency-gated (`submit_after`): scheduling waits for the
+    /// upstream jobs to reach terminal states.
+    Waiting,
     Running { completed: u64, total: u64 },
     Succeeded,
     Failed(String),
@@ -156,18 +218,151 @@ struct Finished {
     cv: Condvar,
 }
 
+/// A job accepted by `submit_after` whose upstream dependencies have
+/// not all reached terminal states yet: nothing is seeded or enqueued
+/// until activation (its wall clock and job timeout anchor at
+/// activation, like a plain submit's anchor at seeding).
+struct PendingJob {
+    job: JobId,
+    program: Program,
+    args: Env,
+    inputs: Vec<(Loc, Matrix)>,
+    imports: Vec<(Loc, JobId, Loc)>,
+    priority_class: i64,
+    label: String,
+    retention: RetentionPolicy,
+    output_matrices: Vec<String>,
+    max_inflight: Option<usize>,
+    deps: Vec<u64>,
+    total: u64,
+    submitted: Instant,
+}
+
+/// Pin bookkeeping for one upstream job.
+#[derive(Default)]
+struct PinEntry {
+    /// Downstream jobs referencing this one that are not yet terminal.
+    pins: usize,
+    /// Whether anything ever pinned it — a consumed `KeepOutputs`
+    /// namespace is fully reclaimed once its last consumer finishes; a
+    /// never-consumed one keeps its outputs fetchable.
+    ever_pinned: bool,
+}
+
+#[derive(Default)]
+struct PinTable {
+    entries: HashMap<u64, PinEntry>,
+    /// Jobs whose tile namespace is fully gone (`DeleteAll` GC, or a
+    /// consumed `KeepOutputs`) — imports from them are rejected. The
+    /// mark is set under this lock in the same critical section as the
+    /// pins==0 check, so a concurrent `submit_after` can never pin a
+    /// namespace that is about to vanish.
+    reclaimed: HashSet<u64>,
+}
+
+/// Ticket for a finished job's pin-gated blob reclamation.
+struct GcTicket {
+    prefix: String,
+    retention: RetentionPolicy,
+    /// Declared output matrices (the KeepOutputs survivors).
+    outputs: Vec<String>,
+    /// KeepOutputs only: whether the non-output tiles have been
+    /// trimmed. The trim waits until no downstream pin remains — a
+    /// pinned child may import (declared-output) tiles, and trimming
+    /// under it would race its reads of anything else.
+    trimmed: bool,
+}
+
+/// Dependency-chain + garbage-collection state shared between the
+/// manager and its monitor thread.
+#[derive(Default)]
+struct Lifecycle {
+    /// Dependency-gated jobs not yet activated.
+    pending: Mutex<Vec<PendingJob>>,
+    /// Gated jobs whose activation (seeding, registration) is running
+    /// on a background thread right now — still "known" to
+    /// wait/status, no longer in `pending`. (Lock order: `pending` may
+    /// be held when this is taken, never the reverse.)
+    activating: Mutex<HashSet<u64>>,
+    /// Pin table (downstream references per upstream job).
+    pins: Mutex<PinTable>,
+    /// Finished non-`KeepAll` jobs whose in-flight worker-pipeline
+    /// tasks have not drained yet — the GC barrier: no key is deleted
+    /// while a claimed task of the job could still read or write it.
+    deferred: Mutex<Vec<Arc<JobContext>>>,
+    /// Stage-1-swept jobs awaiting (or permanently parked before)
+    /// final blob reclamation.
+    awaiting: Mutex<HashMap<u64, GcTicket>>,
+    /// Join handles of spawned activation threads — joined at shutdown
+    /// (after the monitor, so no new ones appear) so activation can
+    /// never race past the final GC sweep.
+    activations: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Lifecycle {
+    fn is_pending(&self, job: JobId) -> bool {
+        self.pending.lock().unwrap().iter().any(|p| p.job == job)
+            || self.activating.lock().unwrap().contains(&job.0)
+    }
+
+    fn take_pending(&self, job: JobId) -> Option<PendingJob> {
+        let mut pending = self.pending.lock().unwrap();
+        let i = pending.iter().position(|p| p.job == job)?;
+        Some(pending.swap_remove(i))
+    }
+
+    /// A downstream job reached a terminal state: release its pins on
+    /// every upstream dependency (the GC sweep reclaims newly
+    /// unpinned namespaces on its next pass).
+    fn on_terminal(&self, deps: &[u64]) {
+        if deps.is_empty() {
+            return;
+        }
+        let mut pins = self.pins.lock().unwrap();
+        for d in deps {
+            if let Some(e) = pins.entries.get_mut(d) {
+                e.pins = e.pins.saturating_sub(1);
+            }
+        }
+    }
+
+    /// A downstream job is actually starting to consume its imports:
+    /// mark each imported-from upstream as consumed. This is what lets
+    /// a `KeepOutputs` namespace be fully reclaimed later — a consumer
+    /// that was canceled before it ever activated must NOT count, so
+    /// the mark happens at activation, not at submit.
+    fn mark_consumed(&self, import_deps: &[u64]) {
+        if import_deps.is_empty() {
+            return;
+        }
+        let mut pins = self.pins.lock().unwrap();
+        for d in import_deps {
+            pins.entries.entry(*d).or_default().ever_pinned = true;
+        }
+    }
+}
+
+impl PendingJob {
+    /// Upstream jobs this one actually imports tiles from (deduped) —
+    /// the set `mark_consumed` flips at activation.
+    fn import_deps(&self) -> Vec<u64> {
+        let set: HashSet<u64> = self.imports.iter().map(|(_, d, _)| d.0).collect();
+        set.into_iter().collect()
+    }
+}
+
 /// The long-lived multi-tenant service: one substrate, one worker
 /// fleet, many concurrent jobs.
 ///
-/// Known limit: a finished job's namespaced keys (tiles, status/deps/
-/// edge entries) stay in the shared substrate until the manager is
-/// dropped — outputs remain fetchable via [`JobManager::tile`], but a
-/// very long-lived service accumulates them. Reclamation needs delete
-/// operations on the storage traits (ROADMAP: substrate GC).
+/// Namespace lifecycle: each job's [`RetentionPolicy`] decides what
+/// survives its terminal state. Under `KeepAll` (the default) nothing
+/// is reclaimed until the manager drops; `KeepOutputs` and
+/// `DeleteAll` trigger the GC pass described in the module docs.
 pub struct JobManager {
     fleet: Arc<FleetContext>,
     pool: WorkerPool,
     finished: Arc<Finished>,
+    lifecycle: Arc<Lifecycle>,
     next_job: AtomicU64,
     provisioner: Option<JoinHandle<()>>,
     monitor: Option<JoinHandle<()>>,
@@ -188,6 +383,7 @@ impl JobManager {
             reports: Mutex::new(HashMap::new()),
             cv: Condvar::new(),
         });
+        let lifecycle = Arc::new(Lifecycle::default());
         let pool = WorkerPool::default();
         // The shared fleet: fixed pools start now; auto mode hands the
         // whole thing to one provisioner driven by aggregate queue
@@ -207,13 +403,18 @@ impl JobManager {
                 }))
             }
         };
-        let monitor = Some(spawn_monitor(fleet.clone(), finished.clone()));
+        let monitor = Some(spawn_monitor(
+            fleet.clone(),
+            finished.clone(),
+            lifecycle.clone(),
+        ));
         let sampler = Some(spawn_sampler(fleet.clone()));
         let failer = fleet.cfg.failure.map(|spec| spawn_failer(fleet.clone(), spec));
         JobManager {
             fleet,
             pool,
             finished,
+            lifecycle,
             next_job: AtomicU64::new(1),
             provisioner,
             monitor,
@@ -226,66 +427,161 @@ impl JobManager {
     /// register it with the fleet, and enqueue its root tasks on the
     /// shared queue. Returns immediately with the job's handle.
     pub fn submit(&self, spec: JobSpec) -> Result<JobId> {
+        self.submit_after(spec, &[])
+    }
+
+    /// Submit a job gated on upstream jobs reaching terminal states.
+    /// The child activates (seeds, enqueues roots) only once every
+    /// dependency has *succeeded*; if any dependency fails or is
+    /// canceled, the child is sealed as failed without running. Each
+    /// dependency edge pins the upstream namespace — its GC defers
+    /// until this job is terminal — and `spec.imports` lets the child
+    /// read upstream output tiles through its own input locations
+    /// without copying them.
+    pub fn submit_after(&self, spec: JobSpec, deps: &[JobId]) -> Result<JobId> {
         if self.fleet.is_shutdown() {
             bail!("job manager is shut down");
         }
+        let total = count_nodes(&spec.program, &spec.args)? as u64;
+        if total == 0 {
+            bail!("program `{}` has an empty iteration space", spec.program.name);
+        }
+        for (_, dep, dep_loc) in &spec.imports {
+            if !deps.contains(dep) {
+                bail!("import references {dep}, which is not a declared dependency");
+            }
+            // A KeepOutputs upstream only guarantees its *declared*
+            // output tiles survive GC — importing anything else would
+            // read a key the stage-1 sweep deletes. Enforced while the
+            // upstream is still resolvable; by the time it is sealed
+            // the non-output tiles are already gone and the read fails
+            // with a missing-key error instead.
+            if let Some(dep_ctx) = self.fleet.job(dep.0) {
+                if dep_ctx.retention == RetentionPolicy::KeepOutputs
+                    && !dep_ctx.output_matrices.is_empty()
+                    && !dep_ctx.output_matrices.contains(&dep_loc.matrix)
+                {
+                    bail!(
+                        "import of {dep_loc} from {dep}: a KeepOutputs upstream only \
+                         retains its declared outputs ({:?})",
+                        dep_ctx.output_matrices
+                    );
+                }
+            }
+        }
+        // Classify every upstream's state up front.
+        let mut waiting = false;
+        let mut failed_dep: Option<(JobId, String)> = None;
+        for d in deps {
+            match self.dep_state(*d) {
+                DepState::Succeeded => {}
+                DepState::Waiting => waiting = true,
+                DepState::Failed(why) => {
+                    failed_dep = Some((*d, why));
+                    break;
+                }
+                DepState::Unknown => bail!("unknown dependency {d}"),
+            }
+        }
+        // Pin the dependencies before anything can reclaim them. The
+        // reclaimed-set check happens in the same critical section as
+        // the pin, so an import can never race the GC sweep.
+        {
+            let mut pins = self.lifecycle.pins.lock().unwrap();
+            for (_, dep, _) in &spec.imports {
+                if pins.reclaimed.contains(&dep.0) {
+                    bail!("cannot import from {dep}: its namespace was already reclaimed");
+                }
+            }
+            for d in deps {
+                // Pin only — consumption (`ever_pinned`) is marked at
+                // the child's activation, so a child canceled while
+                // still gated never causes a KeepOutputs upstream's
+                // outputs to be reclaimed.
+                pins.entries.entry(d.0).or_default().pins += 1;
+            }
+        }
+        let job = JobId(self.next_job.fetch_add(1, Ordering::SeqCst));
         let JobSpec {
             program,
             args,
             inputs,
+            imports,
             priority_class,
             label,
+            retention,
+            output_matrices,
+            max_inflight,
         } = spec;
-        let analyzer = Arc::new(Analyzer::new(&program, &args));
-        let total = count_nodes(&program, &args)? as u64;
-        if total == 0 {
-            bail!("program `{}` has an empty iteration space", program.name);
+        let pending = PendingJob {
+            job,
+            program,
+            args,
+            inputs,
+            imports,
+            priority_class,
+            label,
+            retention: retention.unwrap_or(self.fleet.cfg.retention),
+            output_matrices,
+            max_inflight,
+            deps: deps.iter().map(|d| d.0).collect(),
+            total,
+            submitted: Instant::now(),
+        };
+        if let Some((d, why)) = failed_dep {
+            // Upstream already terminally failed: the child never runs.
+            // Seal a failed report so wait/status stay uniform, and
+            // release the pins just taken.
+            seal_unstarted(
+                &self.finished,
+                &self.lifecycle,
+                pending.identity(),
+                false,
+                format!("upstream {d} {why}"),
+            );
+            return Ok(job);
         }
-        let roots = analyzer.roots()?;
-        if roots.is_empty() {
-            bail!("program has no root tasks");
+        if waiting {
+            self.lifecycle.pending.lock().unwrap().push(pending);
+            return Ok(job);
         }
-        let job = JobId(self.next_job.fetch_add(1, Ordering::SeqCst));
-        // Seed this job's input tiles under its namespace *before*
-        // creating the context, so the job clock (wall_secs, the
-        // job_timeout anchor) starts after the client upload — parity
-        // with the old engine, whose stopwatch started post-seeding.
-        // Seeding retries transient chaos faults inline — there is no
-        // redelivery to recover a failed client put.
-        let prefix = job_prefix(job);
-        let chaos_on = self.fleet.cfg.substrate.chaos.is_some();
-        for (loc, tile) in inputs {
-            let key = loc.key_in(&prefix);
-            if chaos_on {
-                blob_put_with_retry(
-                    self.fleet.store.as_ref(),
-                    CLIENT_BLOB_RETRIES,
-                    CLIENT_ID,
-                    &key,
-                    tile,
-                )?;
-            } else {
-                self.fleet.store.put(CLIENT_ID, &key, tile)?;
+        // All dependencies satisfied (or none): activate immediately on
+        // the caller's thread, exactly like a plain submit.
+        let dep_ids = pending.deps.clone();
+        let import_deps = pending.import_deps();
+        match activate_job(&self.fleet, pending) {
+            Ok(()) => {
+                // Only a successfully-activated child counts as a
+                // consumer of its upstreams' outputs.
+                self.lifecycle.mark_consumed(&import_deps);
+                Ok(job)
+            }
+            Err(e) => {
+                self.lifecycle.on_terminal(&dep_ids);
+                Err(e)
             }
         }
-        let ctx = Arc::new(JobContext::new(
-            job,
-            label,
-            priority_class,
-            analyzer,
-            total,
-            self.fleet.queue.clone(),
-            self.fleet.store.clone(),
-            self.fleet.state.clone(),
-        ));
-        // Register before the root sends so a fast worker can resolve
-        // the job the instant the first message lands.
-        self.fleet.register(ctx.clone());
-        for root in &roots {
-            ctx.state.init_counter(&ctx.deps_key(root), 0);
-            ctx.send_task(root);
+    }
+
+    /// Terminal-or-not classification of one upstream dependency.
+    fn dep_state(&self, d: JobId) -> DepState {
+        {
+            let reports = self.finished.reports.lock().unwrap();
+            if let Some(r) = reports.get(&d.0) {
+                return DepState::from_report(r);
+            }
         }
-        Ok(job)
+        if self.fleet.job(d.0).is_some() || self.lifecycle.is_pending(d) {
+            return DepState::Waiting;
+        }
+        // Seal ordering: the report lands before the registry entry is
+        // removed — a job missing from both just now may have sealed
+        // between the two checks, so look at the reports once more.
+        let reports = self.finished.reports.lock().unwrap();
+        match reports.get(&d.0) {
+            Some(r) => DepState::from_report(r),
+            None => DepState::Unknown,
+        }
     }
 
     /// Current lifecycle state of a job.
@@ -304,25 +600,36 @@ impl JobManager {
                 JobStatus::Succeeded
             };
         }
-        match self.fleet.job(job.0) {
-            Some(ctx) => JobStatus::Running {
+        if let Some(ctx) = self.fleet.job(job.0) {
+            return JobStatus::Running {
                 completed: ctx.completed(),
                 total: ctx.total_tasks,
-            },
-            None => JobStatus::Unknown,
+            };
         }
+        if self.lifecycle.is_pending(job) {
+            return JobStatus::Waiting;
+        }
+        JobStatus::Unknown
     }
 
-    /// Block until the job finishes (completes, fails, times out, or is
-    /// canceled) and return its report. Errors on an unknown job id.
+    /// Block until the job finishes (completes, fails, times out, or
+    /// is canceled) and return its report — the uniform terminal-state
+    /// contract: any job `status` knows (running, waiting, or sealed,
+    /// canceled included) resolves here with a report; only a truly
+    /// unknown id errors. A manager shutdown unblocks the wait with an
+    /// error instead of hanging forever on a job that can no longer
+    /// seal.
     pub fn wait(&self, job: JobId) -> Result<JobReport> {
         let mut reports = self.finished.reports.lock().unwrap();
         loop {
             if let Some(r) = reports.get(&job.0) {
                 return Ok(r.clone());
             }
-            if self.fleet.job(job.0).is_none() {
+            if self.fleet.job(job.0).is_none() && !self.lifecycle.is_pending(job) {
                 bail!("unknown job {job}");
+            }
+            if self.fleet.is_shutdown() {
+                bail!("job manager shut down while {job} was still unfinished");
             }
             let (guard, _) = self
                 .finished
@@ -333,17 +640,28 @@ impl JobManager {
         }
     }
 
-    /// Cancel a running job: the fleet drains its remaining messages
-    /// (deleted on receipt) and the monitor records a canceled report.
-    /// Returns false if the job is not running.
+    /// Cancel a job. A running job drains (messages deleted on
+    /// receipt, monitor records a canceled report); a dependency-gated
+    /// job is sealed canceled without ever starting. Returns false if
+    /// the job is already terminal, unknown, or in the brief window
+    /// where its activation thread is seeding (retry once it is
+    /// running).
     pub fn cancel(&self, job: JobId) -> bool {
-        match self.fleet.job(job.0) {
-            Some(ctx) => {
-                ctx.cancel();
-                true
-            }
-            None => false,
+        if let Some(ctx) = self.fleet.job(job.0) {
+            ctx.cancel();
+            return true;
         }
+        if let Some(p) = self.lifecycle.take_pending(job) {
+            seal_unstarted(
+                &self.finished,
+                &self.lifecycle,
+                p.identity(),
+                true,
+                "job canceled".to_string(),
+            );
+            return true;
+        }
+        false
     }
 
     /// Fetch one of a job's output tiles from the shared store. The
@@ -360,6 +678,24 @@ impl JobManager {
     /// The shared blob store (all jobs' tiles, namespaced).
     pub fn store(&self) -> Arc<dyn BlobStore> {
         self.fleet.store.clone()
+    }
+
+    /// The shared runtime state store (all jobs' control state,
+    /// namespaced) — leak checks scan it with
+    /// [`KvState::scan_prefix`].
+    pub fn state(&self) -> Arc<dyn KvState> {
+        self.fleet.state.clone()
+    }
+
+    /// Messages currently in the shared queue (all jobs, visible +
+    /// leased) — zero once every namespace has drained.
+    pub fn queue_len(&self) -> usize {
+        self.fleet.queue.len()
+    }
+
+    /// Number of dependency-gated jobs not yet activated.
+    pub fn waiting_jobs(&self) -> usize {
+        self.lifecycle.pending.lock().unwrap().len()
     }
 
     /// The fleet's resolved configuration (`sharded:auto` already
@@ -386,6 +722,15 @@ impl JobManager {
         if let Some(h) = self.monitor.take() {
             let _ = h.join();
         }
+        // The monitor is gone, so no new activation threads can be
+        // spawned; join the outstanding ones before the workers and
+        // the final sweep so a late activation cannot seed or enqueue
+        // past the reclamation pass.
+        let activations: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.lifecycle.activations.lock().unwrap());
+        for h in activations {
+            let _ = h.join();
+        }
         if let Some(h) = self.provisioner.take() {
             let _ = h.join();
         }
@@ -396,6 +741,11 @@ impl JobManager {
         if let Some(h) = self.sampler.take() {
             let _ = h.join();
         }
+        // Workers are joined, so every in-flight count has settled: run
+        // the reclamation the monitor did not get to (e.g. a job that
+        // sealed on the monitor's last tick). Jobs still pinned by
+        // never-finishing children are left in place.
+        sweep_gc(&self.fleet, &self.lifecycle);
         FleetReport {
             workers_spawned: self.pool.spawned_count(),
             exits_idle: exits.iter().filter(|e| **e == ExitReason::Idle).count(),
@@ -417,10 +767,406 @@ impl Drop for JobManager {
     }
 }
 
+/// Non-waiting classification of one upstream dependency.
+enum DepState {
+    Succeeded,
+    Waiting,
+    Failed(String),
+    Unknown,
+}
+
+impl DepState {
+    fn from_report(r: &JobReport) -> DepState {
+        if r.canceled {
+            DepState::Failed("was canceled".to_string())
+        } else if let Some(e) = &r.error {
+            DepState::Failed(format!("failed: {e}"))
+        } else {
+            DepState::Succeeded
+        }
+    }
+}
+
+/// Activate a job on the fleet: seed its input tiles under its
+/// namespace, build the per-job context (aliases, retention, quota),
+/// register it, and enqueue its root tasks. Shared by the immediate
+/// submit path and the monitor's dependency-gate resolution.
+fn activate_job(fleet: &Arc<FleetContext>, pending: PendingJob) -> Result<()> {
+    let PendingJob {
+        job,
+        program,
+        args,
+        inputs,
+        imports,
+        priority_class,
+        label,
+        retention,
+        output_matrices,
+        max_inflight,
+        deps,
+        total,
+        submitted: _,
+    } = pending;
+    let analyzer = Arc::new(Analyzer::new(&program, &args));
+    let roots = analyzer.roots()?;
+    if roots.is_empty() {
+        bail!("program has no root tasks");
+    }
+    // Seed this job's input tiles under its namespace *before*
+    // creating the context, so the job clock (wall_secs, the
+    // job_timeout anchor) starts after the client upload — parity
+    // with the old engine, whose stopwatch started post-seeding.
+    // Seeding retries transient chaos faults inline — there is no
+    // redelivery to recover a failed client put.
+    let prefix = job_prefix(job);
+    let chaos_on = fleet.cfg.substrate.chaos.is_some();
+    for (loc, tile) in inputs {
+        let key = loc.key_in(&prefix);
+        let put = if chaos_on {
+            blob_put_with_retry(fleet.store.as_ref(), CLIENT_BLOB_RETRIES, CLIENT_ID, &key, tile)
+        } else {
+            fleet.store.put(CLIENT_ID, &key, tile)
+        };
+        if let Err(e) = put {
+            // No JobContext exists yet, so no GC pass will ever cover
+            // this namespace — reclaim the partially-seeded tiles here
+            // or they strand forever in the long-lived store.
+            fleet.store.delete_prefix(&prefix);
+            return Err(e);
+        }
+    }
+    let mut ctx = JobContext::new(
+        job,
+        label,
+        priority_class,
+        analyzer,
+        total,
+        fleet.queue.clone(),
+        fleet.store.clone(),
+        fleet.state.clone(),
+    );
+    ctx.retention = retention;
+    ctx.output_matrices = output_matrices;
+    ctx.max_inflight = max_inflight;
+    ctx.deps = deps;
+    for (loc, upstream, upstream_loc) in &imports {
+        ctx.aliases.insert(
+            loc.key_in(&prefix),
+            upstream_loc.key_in(&job_prefix(*upstream)),
+        );
+    }
+    let ctx = Arc::new(ctx);
+    // Register before the root sends so a fast worker can resolve
+    // the job the instant the first message lands.
+    fleet.register(ctx.clone());
+    for root in &roots {
+        ctx.state.init_counter(&ctx.deps_key(root), 0);
+        ctx.send_task(root);
+    }
+    Ok(())
+}
+
+/// The identity of a never-activated job — enough to seal a report.
+struct UnstartedJob {
+    job: JobId,
+    label: String,
+    priority_class: i64,
+    total: u64,
+    deps: Vec<u64>,
+    submitted: Instant,
+}
+
+impl PendingJob {
+    fn identity(&self) -> UnstartedJob {
+        UnstartedJob {
+            job: self.job,
+            label: self.label.clone(),
+            priority_class: self.priority_class,
+            total: self.total,
+            deps: self.deps.clone(),
+            submitted: self.submitted,
+        }
+    }
+}
+
+/// Seal a job that never activated (canceled while gated, upstream
+/// failure, or activation error): report inserted, pins released.
+fn seal_unstarted(
+    finished: &Finished,
+    lifecycle: &Lifecycle,
+    id: UnstartedJob,
+    canceled: bool,
+    error: String,
+) {
+    let report = JobReport {
+        job: id.job,
+        label: id.label,
+        priority_class: id.priority_class,
+        wall_secs: id.submitted.elapsed().as_secs_f64(),
+        total_tasks: id.total,
+        completed: 0,
+        total_flops: 0,
+        samples: Vec::new(),
+        tasks: Vec::new(),
+        canceled,
+        error: Some(error),
+    };
+    {
+        let mut reports = finished.reports.lock().unwrap();
+        reports.insert(id.job.0, report);
+        finished.cv.notify_all();
+    }
+    lifecycle.on_terminal(&id.deps);
+}
+
+/// Resolve dependency gates: activate pending jobs whose upstreams all
+/// succeeded; seal (failed) those with a terminally-failed upstream.
+///
+/// Activation (input seeding — store latency and chaos retries apply)
+/// runs on a spawned thread, not the monitor thread, so a large gated
+/// job's upload cannot stall completion detection, timeout
+/// enforcement, or the GC sweep for every other tenant. While an
+/// activation is in flight the job sits in `Lifecycle::activating`, so
+/// `wait`/`status` still know it.
+fn resolve_pending(fleet: &Arc<FleetContext>, finished: &Arc<Finished>, lifecycle: &Arc<Lifecycle>) {
+    // Reap exited activation threads each tick — a long-lived service
+    // churning gated jobs must not accumulate one zombie thread (stack
+    // and TCB held until joined) per activation.
+    {
+        let mut acts = lifecycle.activations.lock().unwrap();
+        let mut i = 0;
+        while i < acts.len() {
+            if acts[i].is_finished() {
+                let _ = acts.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
+        }
+    }
+    let dep_ids: HashSet<u64> = {
+        let pending = lifecycle.pending.lock().unwrap();
+        if pending.is_empty() {
+            return;
+        }
+        pending.iter().flat_map(|p| p.deps.iter().copied()).collect()
+    };
+    // Terminal snapshot: dep id → None (succeeded) | Some(why).
+    let terminal: HashMap<u64, Option<String>> = {
+        let reports = finished.reports.lock().unwrap();
+        dep_ids
+            .iter()
+            .filter_map(|d| {
+                reports.get(d).map(|r| {
+                    let why = match DepState::from_report(r) {
+                        DepState::Failed(w) => Some(w),
+                        _ => None,
+                    };
+                    (*d, why)
+                })
+            })
+            .collect()
+    };
+    let mut ready = Vec::new();
+    let mut doomed = Vec::new();
+    {
+        let mut pending = lifecycle.pending.lock().unwrap();
+        let mut i = 0;
+        while i < pending.len() {
+            let p = &pending[i];
+            let failed = p.deps.iter().find_map(|d| {
+                terminal
+                    .get(d)
+                    .and_then(|why| why.as_ref().map(|w| (JobId(*d), w.clone())))
+            });
+            if let Some(fd) = failed {
+                doomed.push((pending.swap_remove(i), fd));
+            } else if p.deps.iter().all(|d| terminal.contains_key(d)) {
+                // Move pending → activating under the pending lock so
+                // there is no instant where wait/status see the job as
+                // unknown.
+                lifecycle.activating.lock().unwrap().insert(p.job.0);
+                ready.push(pending.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+    }
+    for (p, (d, why)) in doomed {
+        let id = p.identity();
+        seal_unstarted(finished, lifecycle, id, false, format!("upstream {d} {why}"));
+    }
+    for p in ready {
+        let id = p.identity();
+        let job = p.job.0;
+        let fleet = fleet.clone();
+        let finished = finished.clone();
+        let lifecycle_for_thread = lifecycle.clone();
+        let handle = std::thread::spawn(move || {
+            let lifecycle = lifecycle_for_thread;
+            let outcome = if fleet.is_shutdown() {
+                Some("job manager shut down before activation".to_string())
+            } else {
+                let import_deps = p.import_deps();
+                match activate_job(&fleet, p) {
+                    Ok(()) => {
+                        // Consumption is marked only once activation
+                        // actually succeeded — a child that failed to
+                        // seed never consumed its upstream, so it must
+                        // not make a KeepOutputs parent reclaimable.
+                        lifecycle.mark_consumed(&import_deps);
+                        None
+                    }
+                    Err(e) => Some(format!("activation failed: {e:#}")),
+                }
+            };
+            if let Some(error) = outcome {
+                seal_unstarted(&finished, &lifecycle, id, false, error);
+            }
+            // Only after the context is registered (or the failure
+            // sealed) does the job leave the activating set — no
+            // wait/status gap.
+            lifecycle.activating.lock().unwrap().remove(&job);
+        });
+        lifecycle.activations.lock().unwrap().push(handle);
+    }
+}
+
+/// The two-stage namespace reclamation pass (monitor tick + shutdown):
+///
+/// 1. **Pipeline drain** — a sealed job's queue residue is purged and
+///    its KV control state deleted once no claimed task of it remains
+///    in any worker pipeline (the in-flight barrier; nothing may read
+///    or write a key while it is being reclaimed).
+/// 2. **Pin gate** — all blob reclamation waits until no downstream
+///    job pins the namespace (a pinned child may still read imported
+///    tiles). Once unpinned: `DeleteAll` loses the whole prefix; a
+///    *consumed* `KeepOutputs` job (a consumer activated and has
+///    finished) loses the whole prefix too; an unconsumed
+///    `KeepOutputs` job is trimmed to its declared output tiles,
+///    which stay fetchable for the life of the service.
+///
+/// Reclamation decisions are made under the pin-table lock (so a
+/// concurrent `submit_after` can never import from a namespace about
+/// to vanish), but the blob I/O itself — which pays shaped chaos
+/// latency per op — runs after the locks are released. It still
+/// occupies the monitor thread; a dedicated background GC thread is
+/// the recorded next step if sweep volume ever warrants it.
+fn sweep_gc(fleet: &FleetContext, lifecycle: &Lifecycle) {
+    let drained: Vec<Arc<JobContext>> = {
+        let mut deferred = lifecycle.deferred.lock().unwrap();
+        let mut drained = Vec::new();
+        let mut i = 0;
+        while i < deferred.len() {
+            if deferred[i].inflight() == 0 {
+                drained.push(deferred.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        drained
+    };
+    for ctx in drained {
+        // Queue first: no residual message can hand the job back to a
+        // worker once the registry entry is gone, but purging makes the
+        // backlog vanish now instead of one receive-and-drop at a time.
+        fleet.queue.purge_prefix(&format!("{}|", ctx.job.0));
+        ctx.state.delete_prefix(&ctx.prefix);
+        lifecycle.awaiting.lock().unwrap().insert(
+            ctx.job.0,
+            GcTicket {
+                prefix: ctx.prefix.clone(),
+                retention: ctx.retention,
+                outputs: ctx.output_matrices.clone(),
+                trimmed: false,
+            },
+        );
+    }
+    // Stage 2: decide under the locks, do the blob I/O after releasing
+    // them — a shaped (chaos-latency) bulk delete must not hold the pin
+    // table against concurrent submit_after calls.
+    enum BlobAction {
+        /// Delete the whole namespace.
+        Reclaim(String),
+        /// Delete the non-output tiles, keep the declared outputs.
+        Trim(String, Vec<String>),
+    }
+    let actions: Vec<BlobAction> = {
+        let mut pins = lifecycle.pins.lock().unwrap();
+        let mut awaiting = lifecycle.awaiting.lock().unwrap();
+        let mut actions = Vec::new();
+        awaiting.retain(|job, ticket| {
+            let (live_pins, ever) = match pins.entries.get(job) {
+                Some(e) => (e.pins, e.ever_pinned),
+                None => (0, false),
+            };
+            if live_pins > 0 {
+                // Pinned: nothing of the namespace may go yet (the
+                // downstream may still read any imported tile).
+                return true;
+            }
+            let reclaim = match ticket.retention {
+                RetentionPolicy::DeleteAll => true,
+                RetentionPolicy::KeepOutputs => ever,
+                RetentionPolicy::KeepAll => false,
+            };
+            if reclaim {
+                // Marked reclaimed *before* the delete runs: a
+                // concurrent submit_after sees the mark under this
+                // lock and rejects new imports, so nothing can pin a
+                // namespace that is about to vanish.
+                pins.reclaimed.insert(*job);
+                pins.entries.remove(job);
+                actions.push(BlobAction::Reclaim(ticket.prefix.clone()));
+                false
+            } else {
+                if ticket.retention == RetentionPolicy::KeepOutputs
+                    && !ticket.trimmed
+                    && !ticket.outputs.is_empty()
+                {
+                    ticket.trimmed = true;
+                    actions.push(BlobAction::Trim(
+                        ticket.prefix.clone(),
+                        ticket.outputs.clone(),
+                    ));
+                }
+                true
+            }
+        });
+        actions
+    };
+    for action in actions {
+        match action {
+            BlobAction::Reclaim(prefix) => {
+                fleet.store.delete_prefix(&prefix);
+            }
+            BlobAction::Trim(prefix, outputs) => {
+                for key in fleet.store.scan_prefix(&prefix) {
+                    let suffix = &key[prefix.len()..];
+                    let is_output = outputs.iter().any(|m| {
+                        suffix
+                            .strip_prefix(m.as_str())
+                            .is_some_and(|rest| rest.starts_with('['))
+                    });
+                    if !is_output {
+                        // Best-effort with the client retry budget:
+                        // chaos may fault individual deletes.
+                        let _ = with_blob_retry(CLIENT_BLOB_RETRIES, || fleet.store.delete(&key));
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// The completion monitor: one thread watching every active job for
 /// completion, fatal error, per-job timeout, or cancellation — the
-/// multi-tenant descendant of `Engine::run`'s inline wait loop.
-fn spawn_monitor(fleet: Arc<FleetContext>, finished: Arc<Finished>) -> JoinHandle<()> {
+/// multi-tenant descendant of `Engine::run`'s inline wait loop — plus
+/// the dependency-gate resolver and the GC sweep.
+fn spawn_monitor(
+    fleet: Arc<FleetContext>,
+    finished: Arc<Finished>,
+    lifecycle: Arc<Lifecycle>,
+) -> JoinHandle<()> {
     std::thread::spawn(move || {
         while !fleet.is_shutdown() {
             for ctx in fleet.active_jobs() {
@@ -442,9 +1188,11 @@ fn spawn_monitor(fleet: Arc<FleetContext>, finished: Arc<Finished>) -> JoinHandl
                     None
                 };
                 if let Some(error) = outcome {
-                    finish_job(&fleet, &finished, &ctx, error);
+                    finish_job(&fleet, &finished, &lifecycle, &ctx, error);
                 }
             }
+            resolve_pending(&fleet, &finished, &lifecycle);
+            sweep_gc(&fleet, &lifecycle);
             std::thread::sleep(Duration::from_millis(2));
         }
     })
@@ -464,6 +1212,7 @@ fn spawn_monitor(fleet: Arc<FleetContext>, finished: Arc<Finished>) -> JoinHandl
 fn finish_job(
     fleet: &FleetContext,
     finished: &Finished,
+    lifecycle: &Lifecycle,
     ctx: &Arc<JobContext>,
     error: Option<String>,
 ) {
@@ -490,6 +1239,13 @@ fn finish_job(
         finished.cv.notify_all();
     }
     fleet.unregister(ctx.job);
+    // Release this job's pins on its upstreams, and queue its own
+    // namespace for reclamation (the sweep waits for the worker
+    // pipeline to drain its in-flight tasks first).
+    lifecycle.on_terminal(&ctx.deps);
+    if ctx.retention != RetentionPolicy::KeepAll {
+        lifecycle.deferred.lock().unwrap().push(ctx.clone());
+    }
 }
 
 /// The fleet sampler: per-job samples (per-job pending/running) plus
@@ -626,6 +1382,144 @@ mod tests {
         let mgr = JobManager::new(fixed_cfg(1));
         let (spec, _) = tiny_cholesky_spec(16, 7);
         assert!(mgr.submit(spec).is_ok());
+    }
+
+    #[test]
+    fn wait_terminal_contract_uniform_with_status() {
+        // The canceled path: wait must return the canceled report (not
+        // block or error) and agree with status, immediately and
+        // forever after.
+        let mut cfg = fixed_cfg(2);
+        cfg.store_latency = Duration::from_micros(200);
+        let mgr = JobManager::new(cfg);
+        let (spec, _) = tiny_cholesky_spec(48, 3);
+        let job = mgr.submit(spec).unwrap();
+        assert!(mgr.cancel(job));
+        let r = mgr.wait(job).unwrap();
+        assert!(r.canceled);
+        assert!(r.error.is_some());
+        assert_eq!(mgr.status(job), JobStatus::Canceled);
+        // Re-waiting a sealed job returns the same report.
+        let r2 = mgr.wait(job).unwrap();
+        assert!(r2.canceled);
+        // A canceled *gated* job resolves the same way.
+        let (child, _) = tiny_cholesky_spec(16, 4);
+        let running_parent = {
+            let (p, _) = tiny_cholesky_spec(48, 5);
+            mgr.submit(p).unwrap()
+        };
+        let gated = mgr.submit_after(child, &[running_parent]).unwrap();
+        assert_eq!(mgr.status(gated), JobStatus::Waiting);
+        assert!(mgr.cancel(gated));
+        let rg = mgr.wait(gated).unwrap();
+        assert!(rg.canceled);
+        assert_eq!(rg.completed, 0);
+        assert_eq!(mgr.status(gated), JobStatus::Canceled);
+        let _ = mgr.wait(running_parent).unwrap();
+    }
+
+    #[test]
+    fn wait_errors_after_shutdown_instead_of_hanging() {
+        let mgr = JobManager::new(fixed_cfg(2));
+        let (spec, _) = tiny_cholesky_spec(16, 6);
+        let job = mgr.submit(spec).unwrap();
+        let _ = mgr.wait(job).unwrap();
+        // Park a gated job that can never activate, then flip the
+        // fleet-wide shutdown flag: wait() must unblock with an error,
+        // not spin forever on a job that can no longer seal.
+        let (gated_spec, _) = tiny_cholesky_spec(16, 7);
+        let (parent_spec, _) = tiny_cholesky_spec(48, 8);
+        let parent = mgr.submit(parent_spec).unwrap();
+        let gated = mgr.submit_after(gated_spec, &[parent]).unwrap();
+        mgr.fleet.set_shutdown();
+        let err = mgr.wait(gated).unwrap_err();
+        assert!(format!("{err:#}").contains("shut down"), "{err:#}");
+        // A sealed job's report still resolves after shutdown.
+        assert!(mgr.wait(job).is_ok());
+    }
+
+    #[test]
+    fn submit_after_rejects_bad_dependencies() {
+        let mgr = JobManager::new(fixed_cfg(1));
+        // Unknown upstream id.
+        let (spec, _) = tiny_cholesky_spec(16, 11);
+        assert!(mgr.submit_after(spec, &[JobId(404)]).is_err());
+        // Import referencing an undeclared dependency.
+        let (done, _) = tiny_cholesky_spec(16, 12);
+        let parent = mgr.submit(done).unwrap();
+        let _ = mgr.wait(parent).unwrap();
+        let (spec, _) = tiny_cholesky_spec(16, 13);
+        let spec = spec.with_imports(vec![(
+            Loc::new("S", vec![0, 0, 0]),
+            JobId(777),
+            Loc::new("O", vec![0, 0]),
+        )]);
+        assert!(mgr.submit_after(spec, &[parent]).is_err());
+    }
+
+    #[test]
+    fn child_of_failed_upstream_is_sealed_failed() {
+        let mut cfg = fixed_cfg(2);
+        cfg.store_latency = Duration::from_micros(200);
+        let mgr = JobManager::new(cfg);
+        let (parent_spec, _) = tiny_cholesky_spec(48, 21);
+        let parent = mgr.submit(parent_spec).unwrap();
+        // Gate a child, then cancel the parent: the gate must resolve
+        // the child to Failed (upstream canceled), not leave it parked.
+        let (child_spec, _) = tiny_cholesky_spec(16, 22);
+        let child = mgr.submit_after(child_spec, &[parent]).unwrap();
+        assert!(mgr.cancel(parent));
+        let rc = mgr.wait(child).unwrap();
+        assert!(!rc.canceled);
+        let err = rc.error.expect("child must fail");
+        assert!(err.contains("upstream"), "{err}");
+        assert_eq!(rc.completed, 0);
+        // And a child submitted against the already-terminal parent
+        // seals immediately.
+        let (late_spec, _) = tiny_cholesky_spec(16, 23);
+        let late = mgr.submit_after(late_spec, &[parent]).unwrap();
+        let rl = mgr.wait(late).unwrap();
+        assert!(rl.error.unwrap().contains("upstream"));
+    }
+
+    #[test]
+    fn canceled_pending_child_does_not_consume_parent_outputs() {
+        // A KeepOutputs parent whose would-be consumer is canceled
+        // while still gated: the child never activated, so the parent
+        // must NOT count as consumed — its outputs stay fetchable.
+        let mut cfg = fixed_cfg(2);
+        cfg.store_latency = Duration::from_micros(200);
+        let mgr = JobManager::new(cfg);
+        let mut rng = Rng::new(0x9E);
+        let a = Matrix::rand_spd(48, &mut rng);
+        let (env, inputs, _grid) = crate::drivers::stage_cholesky(&a, 8).unwrap();
+        let parent = mgr
+            .submit(
+                JobSpec::new(programs::cholesky_spec().program, env, inputs)
+                    .with_retention(crate::config::RetentionPolicy::KeepOutputs)
+                    .with_outputs(["O"]),
+            )
+            .unwrap();
+        let b = Matrix::randn(48, 48, &mut rng);
+        let (genv, ginputs, imports, _g) =
+            crate::drivers::stage_gemm_after_cholesky(parent, &b, 8).unwrap();
+        let child = mgr
+            .submit_after(
+                JobSpec::new(programs::gemm_spec().program, genv, ginputs).with_imports(imports),
+                &[parent],
+            )
+            .unwrap();
+        assert_eq!(mgr.status(child), JobStatus::Waiting);
+        assert!(mgr.cancel(child), "cancel while gated");
+        let rp = mgr.wait(parent).unwrap();
+        assert_eq!(rp.completed, rp.total_tasks);
+        // Give the GC sweep ample time to (wrongly) reclaim, then
+        // prove the outputs survived the never-activated consumer.
+        std::thread::sleep(Duration::from_millis(100));
+        assert!(
+            mgr.tile(parent, "O", &[0, 0]).is_ok(),
+            "KeepOutputs outputs must survive an unconsummated chain edge"
+        );
     }
 
     #[test]

@@ -20,7 +20,9 @@
 //!   composable chaos decorator layer ([`storage::chaos`]) injecting
 //!   seeded transient faults, message drops/dups, shaped latency, and
 //!   stragglers. Selected by [`config::SubstrateConfig`]
-//!   (`--substrate strict|sharded[:N][+chaos(…)]`).
+//!   (`--substrate strict|sharded[:N][+chaos(…)]`). All three traits
+//!   carry lifecycle ops (delete / prefix scan / prefix sweep / queue
+//!   purge) so the runtime can reclaim dead namespaces.
 //! * [`executor`] — the stateless worker: poll → read → compute → write
 //!   → runtime-state update → child enqueue, with lease renewal,
 //!   pipelining, and self-termination at the runtime limit. Workers
@@ -30,8 +32,11 @@
 //! * [`jobs`] — the multi-tenant job service: a `JobManager` running N
 //!   concurrent LAmbdaPACK jobs over one shared substrate and one
 //!   shared worker fleet, with a submit/status/wait/cancel lifecycle,
-//!   per-job key namespaces, and composite (class, line, FIFO) queue
-//!   priorities.
+//!   per-job key namespaces, composite (class, line, FIFO) queue
+//!   priorities, per-job in-flight quotas, dependency chains
+//!   (`submit_after` + read-through tile imports), and retention-policy
+//!   namespace GC (a finished job's tiles, control state, and queue
+//!   residue are reclaimed through the substrate's lifecycle ops).
 //! * [`provisioner`] — the auto-scaling policy (`sf` scale-up factor,
 //!   `T_timeout` idle scale-down), sized from the aggregate queue
 //!   depth across all jobs.

@@ -110,6 +110,14 @@ pub struct SimResult {
     /// Total queue deliveries — under faults this exceeds `tasks_done`
     /// (at-least-once redelivery made visible).
     pub deliveries: usize,
+    /// KV entries (deps counters + edge guards) reclaimed by the
+    /// end-of-run lifecycle sweep — the sim leg of the substrate-GC
+    /// surface, exercising `KvState::delete_prefix` on the same
+    /// virtual-clock backends (chaos-wrapped included) the run used.
+    pub kv_reclaimed: usize,
+    /// Queue residue purged by the sweep (nonzero only when the run
+    /// stopped early — `limit_tasks` or the livelock cap).
+    pub queue_purged: usize,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -622,6 +630,12 @@ impl<'a> ServerlessSim<'a> {
         } else {
             0.0
         };
+        // Lifecycle sweep: the run is over, so its control state (deps
+        // counters, edge guards) and any queue residue are dead —
+        // reclaim them through the same trait ops the engine's GC
+        // uses, on the virtual-clock (possibly chaos-wrapped) backends.
+        let kv_reclaimed = state.delete_prefix("");
+        let queue_purged = queue.purge_prefix("");
         SimResult {
             completion_time: now,
             core_secs_billed: billed,
@@ -634,6 +648,8 @@ impl<'a> ServerlessSim<'a> {
             workers_spawned: spawned,
             bytes_read_per_worker: bytes_per_worker,
             deliveries,
+            kv_reclaimed,
+            queue_purged,
         }
     }
 }
@@ -667,6 +683,10 @@ mod tests {
         assert!(r.core_secs_busy > 0.0);
         assert!(r.core_secs_billed >= r.core_secs_busy * 0.5);
         assert!(r.deliveries >= r.tasks_done);
+        // Lifecycle sweep: every non-root task's deps counter + edge
+        // guards were live KV state and must have been reclaimed.
+        assert!(r.kv_reclaimed > 0, "control state reclaimed");
+        assert_eq!(r.queue_purged, 0, "a completed run leaves no residue");
     }
 
     #[test]
@@ -870,5 +890,8 @@ mod tests {
         };
         let r = ServerlessSim::new(&w, CostModel::default(), c).run();
         assert_eq!(r.tasks_done, 50);
+        // An early stop leaves enqueued-but-unfinished work behind —
+        // the sweep purges it instead of leaking it.
+        assert!(r.queue_purged > 0, "residue purged on early stop");
     }
 }

@@ -10,12 +10,15 @@
 //!
 //! What each decorator injects (all off by default):
 //!
-//! * [`ChaosBlobStore`] — transient get/put failures with probability
-//!   `err` (marked with [`TRANSIENT_MARKER`]; see [`is_transient`]),
-//!   per-op latency sampled from `read_lat`/`write_lat`, and
-//!   per-worker straggler slowdowns (`straggle=FRAC:MULT` — a
-//!   deterministic `FRAC` of worker ids see `MULT`× the sampled
-//!   latency);
+//! * [`ChaosBlobStore`] — transient get/put/delete failures with
+//!   probability `err` (marked with [`TRANSIENT_MARKER`]; see
+//!   [`is_transient`]), per-op latency sampled from
+//!   `read_lat`/`write_lat` (a `scan_prefix` pays one `read_lat` draw,
+//!   a `delete`/`delete_prefix` one `write_lat` draw — bulk ops are
+//!   one round-trip, like an S3 lifecycle sweep), and per-worker
+//!   straggler slowdowns (`straggle=FRAC:MULT` — a deterministic
+//!   `FRAC` of worker ids see `MULT`× the sampled latency; lifecycle
+//!   ops carry no worker id and are never straggled);
 //! * [`ChaosQueue`] — duplicated enqueues with probability `dup`
 //!   (at-least-once *send*) and dropped deliveries with probability
 //!   `drop`: a dropped delivery takes the lease but never reaches the
@@ -25,8 +28,11 @@
 //!   enqueue round-trip the *sender* pays — child propagation and root
 //!   seeding slow down, not delivery), receive latency from
 //!   `recv_lat`;
-//! * [`ChaosKvState`] — per-op latency from `kv_lat` (the trait's
-//!   operations are infallible, so no error injection).
+//! * [`ChaosKvState`] — per-op latency from `kv_lat`, covering the
+//!   lifecycle ops (`delete`, `scan_prefix`, `delete_prefix`) as well
+//!   as the RMW primitives (the trait's operations are infallible, so
+//!   no error injection). [`Queue::purge_prefix`] is a control-plane
+//!   drain and passes through unshaped.
 //!
 //! Selection is part of the substrate grammar
 //! ([`SubstrateConfig::parse`](crate::config::SubstrateConfig::parse)):
@@ -39,19 +45,19 @@
 //!
 //! Clause reference (comma-separated `key=value` inside `chaos(…)`):
 //!
-//! | key        | value                                  | injects            |
-//! |------------|----------------------------------------|--------------------|
-//! | `err`      | probability in [0,1]                   | blob op failures   |
-//! | `drop`     | probability in [0,1]                   | lost deliveries    |
-//! | `dup`      | probability in [0,1]                   | duplicate enqueues |
-//! | `lat`      | latency spec (sets read+write)         | blob latency       |
-//! | `read_lat` | latency spec                           | blob get latency   |
-//! | `write_lat`| latency spec                           | blob put latency   |
-//! | `send_lat` | latency spec                           | queue send latency |
-//! | `recv_lat` | latency spec                           | queue recv latency |
-//! | `kv_lat`   | latency spec                           | KV op latency      |
-//! | `straggle` | `FRAC:MULT`                            | slow workers       |
-//! | `seed`     | u64                                    | the PRNG seed      |
+//! | key        | value                                  | injects                      |
+//! |------------|----------------------------------------|------------------------------|
+//! | `err`      | probability in [0,1]                   | blob get/put/delete failures |
+//! | `drop`     | probability in [0,1]                   | lost deliveries              |
+//! | `dup`      | probability in [0,1]                   | duplicate enqueues           |
+//! | `lat`      | latency spec (sets read+write)         | blob latency                 |
+//! | `read_lat` | latency spec                           | blob get/scan latency        |
+//! | `write_lat`| latency spec                           | blob put/delete latency      |
+//! | `send_lat` | latency spec                           | queue send latency           |
+//! | `recv_lat` | latency spec                           | queue recv latency           |
+//! | `kv_lat`   | latency spec                           | KV op latency (incl. delete/scan/delete_prefix) |
+//! | `straggle` | `FRAC:MULT`                            | slow workers                 |
+//! | `seed`     | u64                                    | the PRNG seed                |
 //!
 //! Latency specs: a bare duration (`5ms`, `250us`, `0.01s`, plain
 //! seconds) means fixed; `fixed:D`, `uniform:LO:HI`, and
@@ -440,6 +446,37 @@ impl BlobStore for ChaosBlobStore {
         self.inner.contains(key)
     }
 
+    fn delete(&self, key: &str) -> Result<bool> {
+        // Worker-less op: shaped by write_lat (no straggler multiplier),
+        // and err-eligible like put — GC callers retry like workers do.
+        if self.sleep {
+            maybe_sleep(self.draws.latency(&self.cfg.write_lat));
+        }
+        if self.draws.chance(self.cfg.err) {
+            return Err(anyhow!(
+                "{TRANSIENT_MARKER}: injected delete failure for `{key}`"
+            ));
+        }
+        self.inner.delete(key)
+    }
+
+    fn scan_prefix(&self, prefix: &str) -> Vec<String> {
+        // One listing round-trip's worth of read latency; infallible.
+        if self.sleep {
+            maybe_sleep(self.draws.latency(&self.cfg.read_lat));
+        }
+        self.inner.scan_prefix(prefix)
+    }
+
+    fn delete_prefix(&self, prefix: &str) -> usize {
+        // One bulk-delete round-trip's worth of write latency; the
+        // lifecycle-sweep analogue is infallible by contract.
+        if self.sleep {
+            maybe_sleep(self.draws.latency(&self.cfg.write_lat));
+        }
+        self.inner.delete_prefix(prefix)
+    }
+
     fn len(&self) -> usize {
         self.inner.len()
     }
@@ -536,6 +573,11 @@ impl Queue for ChaosQueue {
     fn delivery_count(&self, body: &str) -> u32 {
         self.inner.delivery_count(body)
     }
+
+    fn purge_prefix(&self, body_prefix: &str) -> usize {
+        // Control-plane drain — passes through unshaped, like len().
+        self.inner.purge_prefix(body_prefix)
+    }
 }
 
 // ------------------------------------------------------------------ kv
@@ -606,6 +648,21 @@ impl KvState for ChaosKvState {
     fn counter_exists(&self, key: &str) -> bool {
         self.pause();
         self.inner.counter_exists(key)
+    }
+
+    fn delete(&self, key: &str) -> bool {
+        self.pause();
+        self.inner.delete(key)
+    }
+
+    fn scan_prefix(&self, prefix: &str) -> Vec<String> {
+        self.pause();
+        self.inner.scan_prefix(prefix)
+    }
+
+    fn delete_prefix(&self, prefix: &str) -> usize {
+        self.pause();
+        self.inner.delete_prefix(prefix)
     }
 
     fn edge_decr(&self, edge_key: &str, counter_key: &str) -> i64 {
@@ -722,6 +779,72 @@ mod tests {
         // Context wrapping must not hide the marker.
         let wrapped = anyhow::Error::msg(format!("{err:#}")).context("reading tile");
         assert!(is_transient(&wrapped));
+    }
+
+    #[test]
+    fn blob_delete_faults_are_transient_and_retryable() {
+        let cfg = ChaosConfig {
+            err: 0.5,
+            ..ChaosConfig::default()
+        };
+        let blob = ChaosBlobStore::new(Arc::new(StrictBlobStore::new()), cfg, true);
+        for i in 0..32 {
+            // Seed through the retry helper (puts fault too at err=0.5).
+            blob_put_with_retry(&blob, 16, 0, &format!("K[{i}]"), Matrix::zeros(1, 1)).unwrap();
+        }
+        let mut failures = 0;
+        for i in 0..32 {
+            match blob.delete(&format!("K[{i}]")) {
+                Ok(existed) => assert!(existed, "seeded key must exist"),
+                Err(e) => {
+                    assert!(is_transient(&e), "injected delete fault is transient");
+                    failures += 1;
+                    // The GC path: retry like a worker would.
+                    let existed =
+                        with_blob_retry(16, || blob.delete(&format!("K[{i}]"))).unwrap();
+                    assert!(existed);
+                }
+            }
+        }
+        assert!(failures > 0, "err=0.5 must fault some deletes");
+        assert!(blob.is_empty());
+        // Prefix ops are infallible even under err.
+        blob_put_with_retry(&blob, 16, 0, "j1/A", Matrix::zeros(1, 1)).unwrap();
+        assert_eq!(blob.scan_prefix("j1/"), vec!["j1/A".to_string()]);
+        assert_eq!(blob.delete_prefix("j1/"), 1);
+    }
+
+    #[test]
+    fn kv_lifecycle_ops_pass_through_chaos() {
+        let cfg = ChaosConfig {
+            kv_lat: LatencyDist::Fixed(Duration::from_micros(10)),
+            ..ChaosConfig::default()
+        };
+        let kv = ChaosKvState::new(Arc::new(crate::storage::StrictKvState::new()), cfg, true);
+        kv.set("j1/status:a", "completed");
+        kv.init_counter("j1/deps:b", 1);
+        assert_eq!(kv.scan_prefix("j1/").len(), 2);
+        assert!(kv.delete("j1/status:a"));
+        assert_eq!(kv.delete_prefix("j1/"), 1);
+        assert_eq!(kv.scan_prefix("j1/").len(), 0);
+    }
+
+    #[test]
+    fn queue_purge_passes_through_chaos() {
+        let cfg = ChaosConfig {
+            dup: 1.0,
+            ..ChaosConfig::default()
+        };
+        let q = ChaosQueue::new(
+            Arc::new(StrictQueue::new(Duration::from_secs(10))),
+            cfg,
+            true,
+        );
+        q.send("1|t", 0); // dup=1 → two copies
+        q.send("2|t", 0);
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.purge_prefix("1|"), 2, "both duplicated copies purged");
+        assert_eq!(q.len(), 2);
     }
 
     #[test]

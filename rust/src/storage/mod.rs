@@ -30,16 +30,30 @@
 //! substrate = sharded:8+chaos(lat=uniform:1ms:20ms,straggle=0.1:16)
 //! ```
 //!
-//! `err` injects transient blob-op failures, `drop`/`dup` make SQS's
-//! at-least-once semantics real (lost deliveries recovered by lease
-//! expiry, duplicated enqueues absorbed by idempotent execution),
+//! `err` injects transient blob-op failures (get, put, *and* the
+//! lifecycle `delete` — GC callers retry exactly as workers do),
+//! `drop`/`dup` make SQS's at-least-once semantics real (lost
+//! deliveries recovered by lease expiry, duplicated enqueues absorbed
+//! by idempotent execution),
 //! `lat`/`read_lat`/`write_lat`/`send_lat`/`recv_lat`/`kv_lat` shape
 //! per-op latency (fixed / uniform / lognormal; `send_lat` delays the
-//! enqueue itself — the client/worker-side SQS round-trip), and
-//! `straggle=FRAC:MULT` slows a deterministic fraction of workers for
-//! straggler experiments. Everything is seeded (`seed=N`) and reproducible.
-//! The chaos-wrapped backends pass the same conformance suite — the
-//! decorators perturb timing and delivery, never the contracts.
+//! enqueue itself — the client/worker-side SQS round-trip; `kv_lat`
+//! covers the KV lifecycle ops `delete`/`scan_prefix`/`delete_prefix`
+//! alongside the RMW primitives; blob `scan_prefix` pays one
+//! `read_lat` draw and blob `delete`/`delete_prefix` one `write_lat`
+//! draw), and `straggle=FRAC:MULT` slows a deterministic fraction of
+//! workers for straggler experiments. Everything is seeded (`seed=N`)
+//! and reproducible. The chaos-wrapped backends pass the same
+//! conformance suite — the decorators perturb timing and delivery,
+//! never the contracts.
+//!
+//! **Lifecycle ops** (substrate GC): all three traits expose
+//! reclamation — `BlobStore::{delete, scan_prefix, delete_prefix}`,
+//! `KvState::{delete, scan_prefix, delete_prefix}`, and
+//! [`Queue::purge_prefix`] — so a finished job's `jN/` namespace
+//! (tiles, status/deps/edge entries, queue residue) can be swept
+//! instead of leaking for the life of the service. See
+//! [`crate::jobs`] for the retention policies built on top.
 //!
 //! Per-service semantics both families guarantee (and the conformance
 //! suite in `tests/substrate_conformance.rs` enforces):

@@ -120,6 +120,28 @@ impl BlobStore for StrictBlobStore {
         self.inner.map.read().unwrap().contains_key(key)
     }
 
+    fn delete(&self, key: &str) -> Result<bool> {
+        Ok(self.inner.map.write().unwrap().remove(key).is_some())
+    }
+
+    fn scan_prefix(&self, prefix: &str) -> Vec<String> {
+        let map = self.inner.map.read().unwrap();
+        let mut keys: Vec<String> = map
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect();
+        keys.sort_unstable();
+        keys
+    }
+
+    fn delete_prefix(&self, prefix: &str) -> usize {
+        let mut map = self.inner.map.write().unwrap();
+        let before = map.len();
+        map.retain(|k, _| !k.starts_with(prefix));
+        before - map.len()
+    }
+
     fn len(&self) -> usize {
         self.inner.map.read().unwrap().len()
     }
@@ -207,6 +229,25 @@ mod tests {
         let s = StrictBlobStore::strict_ssa();
         s.put(0, "A[0]", Matrix::zeros(2, 2)).unwrap();
         s.put(0, "A[0]", Matrix::eye(2)).unwrap();
+    }
+
+    #[test]
+    fn delete_and_prefix_sweep() {
+        let s = StrictBlobStore::new();
+        for (j, k) in [(1, 0), (1, 1), (2, 0)] {
+            s.put(0, &format!("j{j}/T[{k}]"), Matrix::zeros(1, 1)).unwrap();
+        }
+        assert_eq!(
+            s.scan_prefix("j1/"),
+            vec!["j1/T[0]".to_string(), "j1/T[1]".to_string()]
+        );
+        assert!(s.delete("j1/T[0]").unwrap());
+        assert!(!s.delete("j1/T[0]").unwrap(), "second delete is a no-op");
+        assert!(!s.contains("j1/T[0]"));
+        assert_eq!(s.delete_prefix("j1/"), 1);
+        assert_eq!(s.delete_prefix("j1/"), 0, "idempotent");
+        assert_eq!(s.len(), 1, "other namespaces untouched");
+        assert!(s.contains("j2/T[0]"));
     }
 
     #[test]

@@ -135,6 +135,10 @@ impl Queue for StrictQueue {
             .delivery_count(body)
             .unwrap_or(0)
     }
+
+    fn purge_prefix(&self, body_prefix: &str) -> usize {
+        self.inner.0.lock().unwrap().core.purge_prefix(body_prefix)
+    }
 }
 
 #[cfg(test)]
@@ -284,6 +288,25 @@ mod tests {
         assert_eq!(a, "a");
         q.delete(&lease_a);
         assert!(q.receive().is_none());
+    }
+
+    #[test]
+    fn purge_prefix_drains_visible_and_leased() {
+        let q = StrictQueue::new(Duration::from_secs(10));
+        q.send("1|a", 5);
+        q.send("1|b", 0);
+        q.send("2|a", 0);
+        // Lease the highest-priority message of the doomed job.
+        let (body, lease) = q.receive().unwrap();
+        assert_eq!(body, "1|a");
+        assert_eq!(q.purge_prefix("1|"), 2, "leased + visible both purged");
+        assert_eq!(q.len(), 1);
+        assert!(!q.delete(&lease), "lease on a purged message is stale");
+        assert!(!q.renew(&lease));
+        let (body, lease) = q.receive().unwrap();
+        assert_eq!(body, "2|a", "other namespaces untouched");
+        assert!(q.delete(&lease));
+        assert_eq!(q.purge_prefix("1|"), 0, "idempotent");
     }
 
     #[test]

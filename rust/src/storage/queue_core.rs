@@ -134,6 +134,16 @@ impl QueueCore {
             .count()
     }
 
+    /// Remove every message whose body starts with `prefix`, visible
+    /// or leased; returns the count. Held leases on purged messages go
+    /// stale (their renew/delete find no message); stale heap entries
+    /// are already skipped by `try_receive`'s validation pop.
+    pub(crate) fn purge_prefix(&mut self, prefix: &str) -> usize {
+        let before = self.messages.len();
+        self.messages.retain(|_, m| !m.body.starts_with(prefix));
+        before - self.messages.len()
+    }
+
     pub(crate) fn delivery_count(&self, body: &str) -> Option<u32> {
         self.messages
             .values()

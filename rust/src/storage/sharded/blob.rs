@@ -87,6 +87,39 @@ impl BlobStore for ShardedBlobStore {
         self.shard(key).read().unwrap().contains_key(key)
     }
 
+    fn delete(&self, key: &str) -> Result<bool> {
+        Ok(self.shard(key).write().unwrap().remove(key).is_some())
+    }
+
+    fn scan_prefix(&self, prefix: &str) -> Vec<String> {
+        // Per-shard sweep in shard-index order (one read lock at a
+        // time — prefix ops need no cross-shard atomicity).
+        let mut keys = Vec::new();
+        for shard in &self.inner.shards {
+            keys.extend(
+                shard
+                    .read()
+                    .unwrap()
+                    .keys()
+                    .filter(|k| k.starts_with(prefix))
+                    .cloned(),
+            );
+        }
+        keys.sort_unstable();
+        keys
+    }
+
+    fn delete_prefix(&self, prefix: &str) -> usize {
+        let mut removed = 0;
+        for shard in &self.inner.shards {
+            let mut map = shard.write().unwrap();
+            let before = map.len();
+            map.retain(|k, _| !k.starts_with(prefix));
+            removed += before - map.len();
+        }
+        removed
+    }
+
     fn len(&self) -> usize {
         self.inner
             .shards
@@ -150,6 +183,27 @@ mod tests {
         }
         assert_eq!(s.len(), 16 * 20);
         assert_eq!(s.known_workers().len(), 16);
+    }
+
+    #[test]
+    fn delete_and_prefix_sweep_across_shards() {
+        for n in [1usize, 4, 16] {
+            let s = ShardedBlobStore::new(n);
+            for j in 1..=2 {
+                for k in 0..8 {
+                    s.put(0, &format!("j{j}/T[{k}]"), Matrix::zeros(1, 1)).unwrap();
+                }
+            }
+            let j1 = s.scan_prefix("j1/");
+            assert_eq!(j1.len(), 8, "[{n} shards]");
+            assert!(j1.windows(2).all(|w| w[0] < w[1]), "sorted [{n} shards]");
+            assert!(s.delete("j1/T[0]").unwrap());
+            assert!(!s.delete("j1/T[0]").unwrap());
+            assert_eq!(s.delete_prefix("j1/"), 7, "[{n} shards]");
+            assert_eq!(s.len(), 8, "[{n} shards] j2 untouched");
+            assert_eq!(s.delete_prefix(""), 8, "[{n} shards] full sweep");
+            assert!(s.is_empty());
+        }
     }
 
     #[test]

@@ -147,6 +147,62 @@ impl KvState for ShardedKvState {
         self.counter_shard(key).lock().unwrap().contains_key(key)
     }
 
+    fn delete(&self, key: &str) -> bool {
+        self.bump();
+        // Two independent per-key locks, taken one at a time — no pair
+        // atomicity needed (delete is not racing edge_decr on a live
+        // namespace; GC sweeps only quiescent prefixes).
+        let in_kv = self.kv_shard(key).lock().unwrap().remove(key).is_some();
+        let in_counters = self
+            .counter_shard(key)
+            .lock()
+            .unwrap()
+            .remove(key)
+            .is_some();
+        in_kv || in_counters
+    }
+
+    fn scan_prefix(&self, prefix: &str) -> Vec<String> {
+        // Per-shard sweeps in shard-index order, one lock at a time —
+        // the same total order every other path uses.
+        let mut keys = Vec::new();
+        for shard in &self.inner.kv {
+            keys.extend(
+                shard
+                    .lock()
+                    .unwrap()
+                    .keys()
+                    .filter(|k| k.starts_with(prefix))
+                    .cloned(),
+            );
+        }
+        for shard in &self.inner.counters {
+            keys.extend(
+                shard
+                    .lock()
+                    .unwrap()
+                    .keys()
+                    .filter(|k| k.starts_with(prefix))
+                    .cloned(),
+            );
+        }
+        keys.sort_unstable();
+        keys.dedup();
+        keys
+    }
+
+    fn delete_prefix(&self, prefix: &str) -> usize {
+        self.bump();
+        let mut removed = 0;
+        for shard in self.inner.kv.iter().chain(self.inner.counters.iter()) {
+            let mut map = shard.lock().unwrap();
+            let before = map.len();
+            map.retain(|k, _| !k.starts_with(prefix));
+            removed += before - map.len();
+        }
+        removed
+    }
+
     fn edge_decr(&self, edge_key: &str, counter_key: &str) -> i64 {
         self.bump();
         let n = self.inner.counters.len();
@@ -223,6 +279,25 @@ mod tests {
                 }
                 assert_eq!(s.counter(&ck), 0);
             }
+        }
+    }
+
+    #[test]
+    fn delete_and_prefix_sweep_across_shards() {
+        for n in [1usize, 2, 16] {
+            let s = ShardedKvState::new(n);
+            for j in 1..=2 {
+                s.set(&format!("j{j}/status:a"), "completed");
+                s.init_counter(&format!("j{j}/deps:b"), 2);
+                s.edge_decr(&format!("j{j}/edge:a:b"), &format!("j{j}/deps:b"));
+            }
+            assert_eq!(s.scan_prefix("j1/").len(), 3, "[{n} shards]");
+            assert!(s.delete("j1/status:a"), "[{n} shards]");
+            assert!(!s.delete("j1/status:a"), "[{n} shards]");
+            assert_eq!(s.delete_prefix("j1/"), 2, "[{n} shards] deps + edge");
+            assert_eq!(s.delete_prefix("j1/"), 0, "[{n} shards]");
+            assert!(s.counter_exists("j2/deps:b"), "[{n} shards]");
+            assert_eq!(s.counter("j2/deps:b"), 1, "[{n} shards]");
         }
     }
 

@@ -179,6 +179,16 @@ impl Queue for ShardedQueue {
             .find_map(|s| s.lock().unwrap().delivery_count(body))
             .unwrap_or(0)
     }
+
+    fn purge_prefix(&self, body_prefix: &str) -> usize {
+        // Per-shard sweep, one lock at a time (messages of one body
+        // prefix are spread round-robin across every shard).
+        self.inner
+            .shards
+            .iter()
+            .map(|s| s.lock().unwrap().purge_prefix(body_prefix))
+            .sum()
+    }
 }
 
 #[cfg(test)]
@@ -254,6 +264,25 @@ mod tests {
         all.dedup();
         assert_eq!(all.len(), 128, "each message delivered exactly once here");
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn purge_prefix_sweeps_every_shard() {
+        for n in [1usize, 3, 8] {
+            let q = ShardedQueue::new(n, Duration::from_secs(10));
+            for i in 0..12 {
+                q.send(&format!("1|t{i}"), 0);
+                q.send(&format!("2|t{i}"), 0);
+            }
+            let (_, lease) = q.receive().unwrap();
+            assert_eq!(q.purge_prefix("1|"), 12, "[{n} shards]");
+            assert_eq!(q.len(), 12, "[{n} shards]");
+            // Whichever message was leased, its lease is now either
+            // stale (job-1 purged) or still valid (job 2).
+            let _ = q.delete(&lease);
+            assert_eq!(q.purge_prefix("2|"), q.len(), "[{n} shards]");
+            assert!(q.is_empty(), "[{n} shards]");
+        }
     }
 
     #[test]

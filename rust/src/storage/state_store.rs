@@ -114,6 +114,53 @@ impl KvState for StrictKvState {
         self.counters.lock().unwrap().contains_key(key)
     }
 
+    fn delete(&self, key: &str) -> bool {
+        self.bump();
+        let in_kv = self.kv.lock().unwrap().remove(key).is_some();
+        let in_counters = self.counters.lock().unwrap().remove(key).is_some();
+        in_kv || in_counters
+    }
+
+    fn scan_prefix(&self, prefix: &str) -> Vec<String> {
+        let mut keys: Vec<String> = self
+            .kv
+            .lock()
+            .unwrap()
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect();
+        keys.extend(
+            self.counters
+                .lock()
+                .unwrap()
+                .keys()
+                .filter(|k| k.starts_with(prefix))
+                .cloned(),
+        );
+        keys.sort_unstable();
+        keys.dedup();
+        keys
+    }
+
+    fn delete_prefix(&self, prefix: &str) -> usize {
+        self.bump();
+        let mut removed = 0;
+        {
+            let mut kv = self.kv.lock().unwrap();
+            let before = kv.len();
+            kv.retain(|k, _| !k.starts_with(prefix));
+            removed += before - kv.len();
+        }
+        {
+            let mut c = self.counters.lock().unwrap();
+            let before = c.len();
+            c.retain(|k, _| !k.starts_with(prefix));
+            removed += before - c.len();
+        }
+        removed
+    }
+
     fn edge_decr(&self, edge_key: &str, counter_key: &str) -> i64 {
         self.bump();
         let mut c = self.counters.lock().unwrap();
@@ -230,6 +277,30 @@ mod tests {
             .sum();
         assert!(zeros >= 1);
         assert_eq!(s.counter("deps"), 0);
+    }
+
+    #[test]
+    fn delete_and_prefix_sweep_cover_both_spaces() {
+        let s = StrictKvState::new();
+        s.set("j1/status:a", status::COMPLETED);
+        s.init_counter("j1/deps:b", 2);
+        s.edge_decr("j1/edge:a:b", "j1/deps:b");
+        s.set("j2/status:a", status::PENDING);
+        assert_eq!(
+            s.scan_prefix("j1/"),
+            vec![
+                "j1/deps:b".to_string(),
+                "j1/edge:a:b".to_string(),
+                "j1/status:a".to_string()
+            ]
+        );
+        // delete spans the string KV and the counter space.
+        assert!(s.delete("j1/deps:b"));
+        assert!(!s.delete("j1/deps:b"));
+        assert!(!s.counter_exists("j1/deps:b"));
+        assert_eq!(s.delete_prefix("j1/"), 2, "status + edge guard");
+        assert_eq!(s.delete_prefix("j1/"), 0);
+        assert_eq!(s.get("j2/status:a").as_deref(), Some(status::PENDING));
     }
 
     #[test]

@@ -24,6 +24,17 @@
 //! * [`KvState`] — Redis: per-key linearizable RMW (`cas`, `set_nx`,
 //!   counters) plus the two-key [`KvState::edge_decr`] dependency
 //!   primitive, atomic across both keys.
+//!
+//! **Lifecycle ops** (the substrate-GC surface): every backend also
+//! provides `delete` / `scan_prefix` / `delete_prefix` on the blob and
+//! KV stores and [`Queue::purge_prefix`] on the queue, so the runtime
+//! can reclaim a finished job's `jN/` namespace — dead intermediate
+//! tiles, status/deps/edge entries, and queue residue — instead of
+//! leaking it for the life of the service (§4's intermediate-state
+//! burden). The prefix ops return counts so callers can assert exact
+//! reclamation. `scan_prefix` returns sorted keys (deterministic
+//! across backends); prefix sweeps need no cross-key atomicity — the
+//! caller guarantees the namespace is quiescent before sweeping.
 
 use crate::linalg::matrix::Matrix;
 use anyhow::Result;
@@ -62,6 +73,21 @@ pub trait BlobStore: Send + Sync {
 
     /// Does `key` exist? (No latency or accounting — control-plane op.)
     fn contains(&self, key: &str) -> bool;
+
+    /// Delete the tile at `key`; returns whether it existed. Fallible
+    /// like `put`/`get` — the chaos layer injects transient faults
+    /// here too, so GC callers retry exactly as workers do.
+    fn delete(&self, key: &str) -> Result<bool>;
+
+    /// Keys starting with `prefix`, sorted. Control-plane op (no
+    /// accounting) — the runtime's namespace-listing primitive, like
+    /// S3 `ListObjectsV2` with a prefix.
+    fn scan_prefix(&self, prefix: &str) -> Vec<String>;
+
+    /// Bulk-delete every key under `prefix`; returns the number of
+    /// objects removed (callers assert reclamation against it). The
+    /// analogue of an S3 lifecycle sweep: infallible and idempotent.
+    fn delete_prefix(&self, prefix: &str) -> usize;
 
     /// Number of stored objects.
     fn len(&self) -> usize;
@@ -117,6 +143,14 @@ pub trait Queue: Send + Sync {
     /// How many times the message body has been delivered (testing
     /// aid; at-least-once shows up as counts > 1).
     fn delivery_count(&self, body: &str) -> u32;
+
+    /// Remove every message whose body starts with `body_prefix`,
+    /// leased or not; returns the number purged. Held leases on purged
+    /// messages become stale (renew/delete return false). The
+    /// runtime's queue-residue drain: a finished job's messages are
+    /// `jobid|…`, so one prefix purge empties its backlog without
+    /// waiting for workers to receive-and-drop each one.
+    fn purge_prefix(&self, body_prefix: &str) -> usize;
 }
 
 /// Redis-like runtime state store: per-key linearizable RMW — all the
@@ -151,6 +185,20 @@ pub trait KvState: Send + Sync {
 
     /// Does the counter exist (distinct from == 0)?
     fn counter_exists(&self, key: &str) -> bool;
+
+    /// Delete `key` from the string KV *and* the counter space;
+    /// returns whether anything existed under it.
+    fn delete(&self, key: &str) -> bool;
+
+    /// Keys starting with `prefix` across both the string KV and the
+    /// counter space (status, deps, edge guards, counters), sorted and
+    /// deduplicated.
+    fn scan_prefix(&self, prefix: &str) -> Vec<String>;
+
+    /// Bulk-delete every entry (string or counter) under `prefix`;
+    /// returns the number of entries removed. A key present in both
+    /// spaces counts twice — job namespaces keep the two disjoint.
+    fn delete_prefix(&self, prefix: &str) -> usize;
 
     /// The dependency-propagation primitive: atomically, if `edge_key`
     /// has not been marked, mark it and decrement `counter_key`.

@@ -13,14 +13,17 @@
 //!   job finish while a large batch job is still running;
 //! * cancel drains a job and frees the fleet for the next one.
 
-use numpywren::config::{EngineConfig, ScalingMode};
-use numpywren::drivers::{collect_cholesky, collect_gemm, stage_cholesky, stage_gemm};
+use numpywren::config::{EngineConfig, RetentionPolicy, ScalingMode};
+use numpywren::drivers::{
+    collect_cholesky, collect_gemm, stage_cholesky, stage_gemm, stage_gemm_after_cholesky,
+    stage_gemm_after_gemm,
+};
 use numpywren::jobs::{JobId, JobManager, JobSpec, JobStatus};
 use numpywren::lambdapack::programs;
-use numpywren::linalg::matrix::Matrix;
-use numpywren::storage::BlobStore as _;
+use numpywren::linalg::{factor, matrix::Matrix};
+use numpywren::storage::{BlobStore as _, KvState as _};
 use numpywren::util::prng::Rng;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn base_cfg(workers: usize) -> EngineConfig {
     EngineConfig {
@@ -225,6 +228,230 @@ fn cancel_drains_job_and_frees_the_fleet() {
     let fetch = |m: &str, idx: &[i64]| mgr.tile(job, m, idx);
     let l = collect_cholesky(&fetch, a.rows(), 8, grid).unwrap();
     assert!(l.matmul_nt(&l).max_abs_diff(&a) < 1e-8);
+}
+
+/// GC is asynchronous (deferred past the last in-flight pipeline task
+/// of the sealed job): poll the condition with a generous deadline.
+fn wait_for(deadline: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let end = Instant::now() + deadline;
+    while Instant::now() < end {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    cond()
+}
+
+#[test]
+fn delete_all_churn_returns_substrate_to_baseline() {
+    // The leak-check acceptance bar: a churn of short jobs under
+    // RetentionPolicy::DeleteAll must leave blob keys, KV keys, and
+    // queue residue at the pre-submit baseline. On the pre-GC head
+    // every one of these jobs leaked its whole namespace forever.
+    let mgr = JobManager::new(base_cfg(4));
+    let base_blob = mgr.store().len();
+    let base_kv = mgr.state().scan_prefix("").len();
+    assert_eq!((base_blob, base_kv), (0, 0), "fresh substrate");
+    let mut rng = Rng::new(0x6C6B);
+    for round in 0..6 {
+        let a = Matrix::rand_spd(16, &mut rng);
+        let (env, inputs, grid) = stage_cholesky(&a, 8).unwrap();
+        let job = mgr
+            .submit(
+                JobSpec::new(programs::cholesky_spec().program, env, inputs)
+                    .with_retention(RetentionPolicy::DeleteAll)
+                    .with_outputs(["O"]),
+            )
+            .unwrap();
+        let r = mgr.wait(job).unwrap();
+        assert_eq!(r.completed, r.total_tasks, "[round {round}]");
+        assert!(r.error.is_none(), "[round {round}]");
+        let _ = grid;
+    }
+    assert!(
+        wait_for(Duration::from_secs(30), || {
+            mgr.store().len() == base_blob
+                && mgr.state().scan_prefix("").len() == base_kv
+                && mgr.queue_len() == 0
+        }),
+        "substrate must return to baseline: blobs={} kv={} queue={}",
+        mgr.store().len(),
+        mgr.state().scan_prefix("").len(),
+        mgr.queue_len()
+    );
+    // The store *did* carry traffic — GC reclaimed keys, not history.
+    let fleet = mgr.shutdown();
+    assert!(fleet.store.bytes_written > 0);
+}
+
+#[test]
+fn keep_outputs_retains_outputs_and_reclaims_control_state() {
+    let mgr = JobManager::new(base_cfg(4));
+    let mut rng = Rng::new(0x0A11);
+    let a = Matrix::rand_spd(24, &mut rng);
+    let (env, inputs, grid) = stage_cholesky(&a, 8).unwrap();
+    let seeds = inputs.len();
+    let job = mgr
+        .submit(
+            JobSpec::new(programs::cholesky_spec().program, env, inputs)
+                .with_retention(RetentionPolicy::KeepOutputs)
+                .with_outputs(["O"]),
+        )
+        .unwrap();
+    let r = mgr.wait(job).unwrap();
+    assert_eq!(r.completed, r.total_tasks);
+    // Control state + intermediate tiles go; the O[j,i] outputs stay.
+    let n_outputs = grid * (grid + 1) / 2;
+    assert!(
+        wait_for(Duration::from_secs(30), || {
+            mgr.state().scan_prefix("").is_empty() && mgr.store().len() == n_outputs
+        }),
+        "blobs={} (want {n_outputs} outputs of {} total) kv={}",
+        mgr.store().len(),
+        seeds as u64 + r.total_tasks,
+        mgr.state().scan_prefix("").len()
+    );
+    // Outputs are still fetchable and exact.
+    let fetch = |m: &str, idx: &[i64]| mgr.tile(job, m, idx);
+    let l = collect_cholesky(&fetch, a.rows(), 8, grid).unwrap();
+    assert!(l.matmul_nt(&l).max_abs_diff(&a) < 1e-8);
+}
+
+#[test]
+fn dependency_chain_exact_numerics_and_pinned_reclamation() {
+    // The chain acceptance bar: cholesky → gemm(L·B) → gemm((L·B)·D)
+    // via submit_after read-through imports, with exact numerics at
+    // every hop; the KeepOutputs parent's namespace survives while its
+    // child consumes it and is reclaimed only after the child is done.
+    let mgr = JobManager::new(base_cfg(4));
+    let mut rng = Rng::new(0xC4A1);
+    let n = 24;
+    let block = 8;
+    let a = Matrix::rand_spd(n, &mut rng);
+    let b = Matrix::randn(n, n, &mut rng);
+    let d = Matrix::randn(n, n, &mut rng);
+
+    let (env, inputs, grid) = stage_cholesky(&a, block).unwrap();
+    let parent = mgr
+        .submit(
+            JobSpec::new(programs::cholesky_spec().program, env, inputs)
+                .with_retention(RetentionPolicy::KeepOutputs)
+                .with_outputs(["O"]),
+        )
+        .unwrap();
+
+    let (env, inputs, imports, g2) = stage_gemm_after_cholesky(parent, &b, block).unwrap();
+    assert_eq!(g2, grid);
+    assert!(!imports.is_empty());
+    // The child keeps the default KeepAll so its tiles stay fetchable
+    // for the numeric check regardless of when the grandchild lands.
+    let child = mgr
+        .submit_after(
+            JobSpec::new(programs::gemm_spec().program, env, inputs)
+                .with_outputs(["Ctmp"])
+                .with_imports(imports),
+            &[parent],
+        )
+        .unwrap();
+
+    let (env, inputs, imports, g3) = stage_gemm_after_gemm(child, g2, &d, block).unwrap();
+    let grandchild = mgr
+        .submit_after(
+            JobSpec::new(programs::gemm_spec().program, env, inputs)
+                .with_outputs(["Ctmp"])
+                .with_imports(imports),
+            &[child],
+        )
+        .unwrap();
+
+    // Parent finishes first; while its outputs are pinned by the
+    // still-waiting child they must remain resident (the child cannot
+    // even have activated yet when this wait returns).
+    let rp = mgr.wait(parent).unwrap();
+    assert_eq!(rp.completed, rp.total_tasks);
+    assert!(
+        !mgr.store().scan_prefix(&format!("{parent}/")).is_empty(),
+        "pinned parent outputs must survive its own finish"
+    );
+
+    let rc = mgr.wait(child).unwrap();
+    assert_eq!(rc.completed, rc.total_tasks, "{:?}", rc.error);
+    let rg = mgr.wait(grandchild).unwrap();
+    assert_eq!(rg.completed, rg.total_tasks, "{:?}", rg.error);
+
+    // Exact numerics at both chained hops.
+    let l_ref = factor::cholesky(&a).unwrap();
+    let fetch_c = |m: &str, idx: &[i64]| mgr.tile(child, m, idx);
+    let lb = collect_gemm(&fetch_c, n, n, block, g2).unwrap();
+    assert!(
+        lb.max_abs_diff(&l_ref.matmul(&b)) < 1e-9,
+        "child must compute exactly L·B"
+    );
+    let fetch_g = |m: &str, idx: &[i64]| mgr.tile(grandchild, m, idx);
+    let lbd = collect_gemm(&fetch_g, n, n, block, g3).unwrap();
+    assert!(
+        lbd.max_abs_diff(&l_ref.matmul(&b).matmul(&d)) < 1e-8,
+        "grandchild must compute exactly (L·B)·D"
+    );
+
+    // The consumed KeepOutputs parent is reclaimed once its last (and
+    // only) consumer finished; the KeepAll child and grandchild keep
+    // their namespaces.
+    assert!(
+        wait_for(Duration::from_secs(30), || {
+            mgr.store().scan_prefix(&format!("{parent}/")).is_empty()
+        }),
+        "consumed parent must be reclaimed: {} keys left",
+        mgr.store().scan_prefix(&format!("{parent}/")).len(),
+    );
+    assert!(!mgr.store().scan_prefix(&format!("{child}/")).is_empty());
+    assert!(!mgr.store().scan_prefix(&format!("{grandchild}/")).is_empty());
+}
+
+#[test]
+fn max_inflight_quota_prevents_fleet_starvation() {
+    // A big *urgent* job capped at 1 in-flight task: its class-1
+    // messages outrank everything, so without the quota it would own
+    // all 3 workers. With the quota, the class-0 job runs alongside it
+    // and finishes while the capped job is still grinding.
+    let mut cfg = base_cfg(3);
+    cfg.lease = Duration::from_millis(100);
+    cfg.store_latency = Duration::from_micros(200);
+    let mgr = JobManager::new(cfg);
+    let mut rng = Rng::new(0x0F07);
+    let big = Matrix::rand_spd(20, &mut rng); // grid 5 → 35 tasks, serialized by the quota
+    let (env, inputs, _grid) = stage_cholesky(&big, 4).unwrap();
+    let capped = mgr
+        .submit(
+            JobSpec::new(programs::cholesky_spec().program, env, inputs)
+                .with_class(1)
+                .with_max_inflight(1),
+        )
+        .unwrap();
+    let sa = Matrix::randn(8, 8, &mut rng);
+    let sb = Matrix::randn(8, 8, &mut rng);
+    let (env, inputs, sgrid) = stage_gemm(&sa, &sb, 4).unwrap();
+    let small = mgr
+        .submit(JobSpec::new(programs::gemm_spec().program, env, inputs))
+        .unwrap();
+    let rs = mgr.wait(small).unwrap();
+    assert_eq!(rs.completed, rs.total_tasks);
+    assert!(
+        matches!(mgr.status(capped), JobStatus::Running { .. }),
+        "quota must keep the urgent batch job from starving the fleet"
+    );
+    let rb = mgr.wait(capped).unwrap();
+    assert_eq!(rb.completed, rb.total_tasks, "capped job still completes");
+    assert!(
+        rs.wall_secs < rb.wall_secs,
+        "uncapped small job finishes first ({:.3}s vs {:.3}s)",
+        rs.wall_secs,
+        rb.wall_secs
+    );
+    let fetch = |m: &str, idx: &[i64]| mgr.tile(small, m, idx);
+    let c = collect_gemm(&fetch, 8, 8, 4, sgrid).unwrap();
+    assert!(c.max_abs_diff(&sa.matmul(&sb)) < 1e-9);
 }
 
 #[test]

@@ -302,6 +302,106 @@ fn blob_read_after_write_and_accounting() {
     }
 }
 
+// ---------- Lifecycle ops (delete / scan / prefix sweeps) ----------
+
+#[test]
+fn blob_delete_scan_delete_prefix_contract() {
+    for (spec, sub, _) in backends() {
+        let blob = sub.blob;
+        for (ns, k) in [("j1", 0), ("j1", 1), ("j1", 2), ("j2", 0)] {
+            blob.put(0, &format!("{ns}/T[{k}]"), Matrix::zeros(1, 1)).unwrap();
+        }
+        blob.put(0, "j1/O[0]", Matrix::eye(2)).unwrap();
+        // scan: sorted, prefix-scoped, empty on a miss.
+        let j1 = blob.scan_prefix("j1/");
+        assert_eq!(j1.len(), 4, "[{spec}]");
+        assert!(j1.windows(2).all(|w| w[0] < w[1]), "[{spec}] sorted");
+        assert!(j1.iter().all(|k| k.starts_with("j1/")), "[{spec}]");
+        assert_eq!(blob.scan_prefix("j9/").len(), 0, "[{spec}]");
+        assert_eq!(blob.scan_prefix("").len(), 5, "[{spec}] empty prefix = all");
+        // single-key delete: true once, then a no-op.
+        assert!(blob.delete("j1/T[0]").unwrap(), "[{spec}]");
+        assert!(!blob.delete("j1/T[0]").unwrap(), "[{spec}]");
+        assert!(!blob.contains("j1/T[0]"), "[{spec}]");
+        assert!(blob.get(0, "j1/T[0]").is_err(), "[{spec}] read-after-delete");
+        // prefix sweep returns the exact reclamation count.
+        assert_eq!(blob.delete_prefix("j1/"), 3, "[{spec}]");
+        assert_eq!(blob.delete_prefix("j1/"), 0, "[{spec}] idempotent");
+        assert_eq!(blob.len(), 1, "[{spec}] other namespaces intact");
+        assert!(blob.contains("j2/T[0]"), "[{spec}]");
+    }
+}
+
+#[test]
+fn kv_delete_scan_delete_prefix_contract() {
+    for (spec, sub, _) in backends() {
+        let state = sub.state;
+        // One job's worth of control state: status (string KV), deps
+        // counter, edge guards (counter space), plus a neighbor job.
+        state.set("j1/status:a", "completed");
+        state.init_counter("j1/deps:b", 2);
+        state.edge_decr("j1/edge:a:b", "j1/deps:b");
+        state.incr("j1/completed_total", 1);
+        state.set("j2/status:a", "pending");
+        state.init_counter("j2/deps:b", 1);
+        let j1 = state.scan_prefix("j1/");
+        assert_eq!(j1.len(), 4, "[{spec}] {j1:?}");
+        assert!(j1.windows(2).all(|w| w[0] < w[1]), "[{spec}] sorted");
+        // delete spans both the string KV and the counter space.
+        assert!(state.delete("j1/status:a"), "[{spec}]");
+        assert!(!state.delete("j1/status:a"), "[{spec}]");
+        assert!(state.delete("j1/deps:b"), "[{spec}] counter deleted");
+        assert!(!state.counter_exists("j1/deps:b"), "[{spec}]");
+        assert_eq!(
+            state.delete_prefix("j1/"),
+            2,
+            "[{spec}] edge guard + completed counter"
+        );
+        assert_eq!(state.delete_prefix("j1/"), 0, "[{spec}] idempotent");
+        // The neighbor job is untouched.
+        assert_eq!(state.get("j2/status:a").as_deref(), Some("pending"), "[{spec}]");
+        assert_eq!(state.counter("j2/deps:b"), 1, "[{spec}]");
+        // Deleted counters re-initialize from scratch (no ghost state).
+        assert!(state.init_counter("j1/deps:b", 7), "[{spec}]");
+        assert_eq!(state.counter("j1/deps:b"), 7, "[{spec}]");
+    }
+}
+
+#[test]
+fn queue_purge_prefix_contract() {
+    for (spec, sub, _) in backends() {
+        let q = sub.queue;
+        for i in 0..8 {
+            q.send(&format!("1|t{i}"), 0);
+            q.send(&format!("2|t{i}"), 0);
+        }
+        // Lease one job-1 message (priority boost pins which one on the
+        // ordered backends; on sharded it may be any — both fine).
+        q.send("1|urgent", 100);
+        let (got, lease) = q.receive().unwrap();
+        assert_eq!(q.len(), 17, "[{spec}]");
+        let purged = q.purge_prefix("1|");
+        assert_eq!(purged, 9, "[{spec}] visible + leased all purged");
+        assert_eq!(q.len(), 8, "[{spec}]");
+        if got.starts_with("1|") {
+            assert!(!q.delete(&lease), "[{spec}] purged lease is stale");
+            assert!(!q.renew(&lease), "[{spec}]");
+        } else {
+            assert!(q.delete(&lease), "[{spec}] untouched lease stays valid");
+        }
+        // Remaining messages all belong to job 2 and still flow.
+        let mut drained = 0;
+        while let Some((body, l)) = q.receive() {
+            assert!(body.starts_with("2|"), "[{spec}] got {body}");
+            assert!(q.delete(&l), "[{spec}]");
+            drained += 1;
+        }
+        assert!(drained >= 7, "[{spec}] {drained}");
+        assert_eq!(q.purge_prefix("2|"), 0, "[{spec}] nothing left");
+        assert!(q.is_empty(), "[{spec}]");
+    }
+}
+
 // ---------- End-to-end ----------
 
 #[test]
