@@ -1,0 +1,128 @@
+//! §Perf — daemon mode: submit→accept latency over the file-spool
+//! wire, and TTL-sweep reclaim throughput under churn.
+//!
+//! One `numpywren serve` loop runs on its own thread with a short
+//! namespace TTL; a client churns CHURN small Cholesky jobs through
+//! the spool directory, exactly as a second shell would. Measured:
+//!
+//! * **submit→accept latency** — client request file written to
+//!   submit response read back, per job (the wire + spool + staging
+//!   overhead a caller pays before the job even queues);
+//! * **sweep reclaim throughput** — after the last job finishes, the
+//!   time for the TTL sweeper to return the substrate to zero
+//!   residency, and the keys-per-second that implies. `resident_peak`
+//!   is sampled after every job — under TTL churn it must plateau
+//!   instead of growing linearly (the `perf_gc` keep-leg signature).
+//!
+//! Emits `BENCH_daemon.json` (uploaded as a CI artifact by the
+//! bench-smoke job; `NUMPYWREN_BENCH_QUICK=1` trims the churn).
+
+use numpywren::config::{EngineConfig, ScalingMode};
+use numpywren::daemon::{Daemon, DaemonClient};
+use numpywren::util::timer::Stopwatch;
+use std::time::{Duration, Instant};
+
+const CHURN_FULL: usize = 12;
+const CHURN_QUICK: usize = 4;
+const WORKERS: usize = 4;
+const N: usize = 24;
+const BLOCK: usize = 8;
+const TTL: Duration = Duration::from_millis(250);
+const RPC: Duration = Duration::from_secs(30);
+
+fn churn() -> usize {
+    if std::env::var("NUMPYWREN_BENCH_QUICK").as_deref() == Ok("1") {
+        CHURN_QUICK
+    } else {
+        CHURN_FULL
+    }
+}
+
+fn main() {
+    let churn = churn();
+    println!(
+        "# §Perf daemon — {churn} cholesky:{N}:{BLOCK} jobs over the spool wire, \
+         {WORKERS} workers, gc-ttl {:.2}s",
+        TTL.as_secs_f64()
+    );
+    let dir = std::env::temp_dir().join(format!("npw_perf_daemon_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = EngineConfig {
+        scaling: ScalingMode::Fixed(WORKERS),
+        job_timeout: Duration::from_secs(120),
+        ..EngineConfig::default()
+    };
+    cfg.gc.ttl = Some(TTL);
+    cfg.gc.sweep_interval = Duration::from_millis(5);
+    let daemon = Daemon::new(cfg, &dir).expect("daemon spool");
+    let server = std::thread::spawn(move || daemon.run());
+    let client = DaemonClient::new(&dir);
+
+    let sw = Stopwatch::start();
+    let mut accept_ms: Vec<f64> = Vec::new();
+    let mut resident_after: Vec<usize> = Vec::new();
+    let mut peak_resident = 0usize;
+    for i in 0..churn {
+        let t0 = Instant::now();
+        let jobs = client
+            .submit(&format!("cholesky:{N}:{BLOCK}"), 0x6D + i as u64, None, None, RPC)
+            .expect("submit");
+        accept_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        let st = client.wait_terminal(jobs[0], Duration::from_secs(120)).expect("terminal");
+        assert_eq!(st.state, "succeeded", "{:?}", st.error);
+        let stats = client.stats(RPC).expect("stats");
+        peak_resident = peak_resident.max(stats.resident());
+        resident_after.push(stats.resident());
+    }
+    // Reclaim throughput: from last completion to zero residency. The
+    // window necessarily includes one TTL of idle age — report it so
+    // the sweep cost can be separated from the policy delay.
+    let keys_at_finish = client.stats(RPC).expect("stats").resident();
+    let t0 = Instant::now();
+    let deadline = t0 + Duration::from_secs(60);
+    loop {
+        if client.stats(RPC).expect("stats").resident() == 0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "TTL sweeper failed to reach baseline within 60s"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let drain_secs = t0.elapsed().as_secs_f64();
+    let wall_secs = sw.secs();
+    client.shutdown(RPC).expect("shutdown");
+    let fleet = server.join().unwrap().expect("daemon run");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mean_accept = accept_ms.iter().sum::<f64>() / accept_ms.len() as f64;
+    let max_accept = accept_ms.iter().cloned().fold(0.0, f64::max);
+    let keys_per_sec = keys_at_finish as f64 / drain_secs.max(1e-9);
+    println!(
+        "accept mean={mean_accept:.2}ms max={max_accept:.2}ms  sweep: {keys_at_finish} keys \
+         in {drain_secs:.3}s ({keys_per_sec:.0}/s incl. {:.2}s TTL delay)  peak-resident={peak_resident}  \
+         wall={wall_secs:.3}s workers={}",
+        TTL.as_secs_f64(),
+        fleet.workers_spawned
+    );
+
+    // Hand-rolled JSON (no serde in the offline crate set).
+    fn fmt_series(xs: &[f64]) -> String {
+        xs.iter().map(|x| format!("{x:.3}")).collect::<Vec<_>>().join(", ")
+    }
+    let resident_series =
+        resident_after.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(", ");
+    let json = format!(
+        "{{\n  \"bench\": \"perf_daemon\",\n  \"churn\": {churn}, \"workers\": {WORKERS}, \
+         \"n\": {N}, \"block\": {BLOCK}, \"ttl_secs\": {:.3},\n  \"accept_ms\": \
+         {{\"mean\": {mean_accept:.3}, \"max\": {max_accept:.3}, \"series\": [{}]}},\n  \
+         \"sweep\": {{\"keys_reclaimed\": {keys_at_finish}, \"drain_secs\": {drain_secs:.4}, \
+         \"keys_per_sec\": {keys_per_sec:.1}, \"peak_resident\": {peak_resident}, \
+         \"resident_after\": [{resident_series}]}},\n  \"wall_secs\": {wall_secs:.4}\n}}\n",
+        TTL.as_secs_f64(),
+        fmt_series(&accept_ms),
+    );
+    std::fs::write("BENCH_daemon.json", &json).expect("write BENCH_daemon.json");
+    println!("# wrote BENCH_daemon.json");
+}

@@ -12,6 +12,7 @@
 
 use crate::baselines::{dask_run, machines_to_fit, scalapack_run, Algorithm};
 use crate::config::{EngineConfig, RetentionPolicy, ScalingMode, SubstrateConfig};
+use crate::daemon::{self, Daemon, DaemonClient};
 use crate::drivers;
 use crate::engine::Engine;
 use crate::jobs::{JobId, JobManager, JobSpec};
@@ -26,6 +27,7 @@ use crate::util::prng::Rng;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Parsed flags: `--key value` pairs plus the subcommand.
 pub struct Args {
@@ -95,6 +97,24 @@ COMMANDS:
             (--retention delete reclaims each job's substrate
             namespace at finish — outputs are not refetched for
             verification; the residual key counts are printed instead)
+  serve     long-lived daemon mode: stand up one shared fleet and
+            serve submissions from a durable file-based command spool
+            (many shells, one fleet, unbounded uptime)
+            --daemon-dir DIR [--workers K | --sf F --max-workers K]
+            [--substrate SPEC] [--retention keep|outputs|delete]
+            [--gc-ttl SECS] [--gc-interval SECS] [--set key=value]...
+            (--gc-ttl arms the TTL sweeper: kept/orphaned job
+            namespaces expire once write-idle longer than SECS, like
+            an S3 lifecycle rule; --gc-interval sets the GC thread's
+            sweep period)
+  submit    submit jobs to a running daemon; chains reference the
+            same request (@K, 1-based) or existing daemon jobs (@jN)
+            --daemon-dir DIR --specs algo:N:BLOCK[:CLASS][@DEP],...
+            [--seed N] [--retention R] [--max-inflight Q]
+            [--wait true] [--wait-timeout SECS] [--timeout SECS]
+  status    poll one daemon job:  --daemon-dir DIR --job jN
+  cancel    cancel one daemon job: --daemon-dir DIR --job jN
+  shutdown  stop the daemon and its fleet: --daemon-dir DIR
   simulate  paper-scale discrete-event simulation (runs on the same
             substrate backends as the engine, virtual-time clock)
             --algo NAME --n DIM --block B --workers K [--sf F] [--pipeline W]
@@ -122,6 +142,11 @@ pub fn run_cli(argv: &[String]) -> Result<()> {
     match args.command.as_str() {
         "run" => cmd_run(&args),
         "jobs" => cmd_jobs(&args),
+        "serve" => cmd_serve(&args),
+        "submit" => cmd_submit(&args),
+        "status" => cmd_status(&args),
+        "cancel" => cmd_cancel(&args),
+        "shutdown" | "stop" => cmd_shutdown(&args),
         "simulate" => cmd_simulate(&args),
         "analyze" => cmd_analyze(&args),
         "program" => cmd_program(&args),
@@ -170,6 +195,12 @@ fn engine_cfg_from(args: &Args) -> Result<EngineConfig> {
     }
     if let Some(policy) = args.get("retention") {
         cfg.set("retention", policy)?;
+    }
+    if let Some(ttl) = args.get("gc-ttl") {
+        cfg.set("gc_ttl", ttl)?;
+    }
+    if let Some(period) = args.get("gc-interval") {
+        cfg.set("gc_interval", period)?;
     }
     if let Some(extra) = args.get("set") {
         for kv in extra.split(',') {
@@ -344,25 +375,21 @@ fn cmd_jobs(args: &Args) -> Result<()> {
     // namespaces are reclaimed once the consumer finishes, so their
     // outputs cannot be refetched for verification.
     let mut consumed: std::collections::HashSet<usize> = std::collections::HashSet::new();
-    for s in specs.split(',') {
-        let (core, dep) = match s.split_once('@') {
-            Some((core, d)) => {
-                let idx: usize = d
-                    .parse()
-                    .map_err(|_| anyhow!("bad chain reference `@{d}` in `{s}`"))?;
-                if idx == 0 || idx > submitted.len() {
-                    bail!("chain reference @{idx} in `{s}` must name an earlier spec (1-based)");
-                }
-                (core, Some(idx - 1))
-            }
-            None => (s, None),
+    // The spec grammar is shared with the daemon's wire format
+    // (`numpywren submit`); only `@jN` daemon-job references are
+    // rejected here — the one-shot driver verifies numerics locally,
+    // which needs the upstream staged in this process.
+    for e in daemon::parse_specs(&specs)? {
+        let dep = match e.chain {
+            None => None,
+            Some(daemon::ChainRef::Index(k)) => Some(k - 1),
+            Some(daemon::ChainRef::Job(j)) => bail!(
+                "chain reference @{j} names a daemon job — `jobs` chains by spec \
+                 index (@K); use `numpywren submit` against a daemon for @jN"
+            ),
         };
-        let parts: Vec<&str> = core.split(':').collect();
-        let (algo, n, block, class) = match parts.as_slice() {
-            [algo, n, block] => (*algo, n.parse::<usize>()?, block.parse::<usize>()?, 0i64),
-            [algo, n, block, class] => (*algo, n.parse()?, block.parse()?, class.parse::<i64>()?),
-            _ => bail!("bad job spec `{s}` (algo:N:BLOCK[:CLASS][@DEP])"),
-        };
+        let s = format!("{}:{}:{}", e.algo, e.n, e.block);
+        let (algo, n, block, class) = (e.algo.as_str(), e.n, e.block, e.class);
         match (algo, dep) {
             ("cholesky", None) => {
                 let a = Matrix::rand_spd(n, &mut rng);
@@ -522,6 +549,125 @@ fn cmd_jobs(args: &Args) -> Result<()> {
     if failed {
         bail!("one or more jobs failed");
     }
+    Ok(())
+}
+
+/// `numpywren serve`: stand up the shared fleet and drain the spool
+/// until a shutdown command arrives.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args.require("daemon-dir")?.to_string();
+    let cfg = engine_cfg_from(args)?;
+    let gc = cfg.gc;
+    let mut d = Daemon::new(cfg, &dir)?;
+    d.log = true;
+    let ttl = match gc.ttl {
+        Some(t) => format!("{:.1}s", t.as_secs_f64()),
+        None => "off".to_string(),
+    };
+    println!(
+        "numpywren daemon: serving {dir} (pid {}, gc-ttl {ttl}); stop with \
+         `numpywren shutdown --daemon-dir {dir}`",
+        std::process::id()
+    );
+    let fleet = d.run()?;
+    println!(
+        "fleet: workers={} idle-exits={} billed-core-secs={:.3} read={}B written={}B",
+        fleet.workers_spawned,
+        fleet.exits_idle,
+        fleet.core_secs_billed,
+        fleet.store.bytes_read,
+        fleet.store.bytes_written
+    );
+    Ok(())
+}
+
+/// Per-request client timeout (`--timeout SECS`).
+fn client_timeout(args: &Args) -> Result<Duration> {
+    Ok(Duration::from_secs_f64(args.num("timeout", 30.0)?))
+}
+
+/// `numpywren submit`: feed specs to a running daemon; `--wait true`
+/// polls every submitted job to a terminal state.
+fn cmd_submit(args: &Args) -> Result<()> {
+    let client = DaemonClient::new(args.require("daemon-dir")?);
+    let specs = match args.get("specs").or_else(|| args.get("jobs")) {
+        Some(s) => s.to_string(),
+        None => bail!("missing --specs (or --jobs) algo:N:BLOCK[:CLASS][@DEP],..."),
+    };
+    let timeout = client_timeout(args)?;
+    let retention = args.get("retention").map(RetentionPolicy::parse).transpose()?;
+    let max_inflight = match args.get("max-inflight") {
+        Some(v) => {
+            let q: usize = v.parse().map_err(|_| anyhow!("bad --max-inflight `{v}`"))?;
+            if q == 0 {
+                bail!("--max-inflight must be >= 1 (0 would park the job forever)");
+            }
+            Some(q)
+        }
+        None => None,
+    };
+    let seed = args.num("seed", 42u64)?;
+    let jobs = client.submit(&specs, seed, retention, max_inflight, timeout)?;
+    println!(
+        "submitted: {}",
+        jobs.iter().map(|j| j.to_string()).collect::<Vec<_>>().join(" ")
+    );
+    let wait = args.get("wait").is_some_and(|v| v != "false" && v != "0" && v != "no");
+    if wait {
+        let wait_timeout = Duration::from_secs_f64(args.num("wait-timeout", 600.0)?);
+        let mut failed = false;
+        for job in &jobs {
+            let st = client.wait_terminal(*job, wait_timeout)?;
+            match st.state.as_str() {
+                "succeeded" => println!("{job} succeeded"),
+                other => {
+                    failed = true;
+                    let why = st.error.map(|e| format!(": {e}")).unwrap_or_default();
+                    println!("{job} {other}{why}");
+                }
+            }
+        }
+        if failed {
+            bail!("one or more daemon jobs failed");
+        }
+    }
+    Ok(())
+}
+
+/// `numpywren status --job jN`.
+fn cmd_status(args: &Args) -> Result<()> {
+    let client = DaemonClient::new(args.require("daemon-dir")?);
+    let job = daemon::parse_job_token(args.require("job")?)?;
+    let st = client.status(job, client_timeout(args)?)?;
+    match st.state.as_str() {
+        "running" => println!("{job} running {}/{} tasks", st.completed, st.total),
+        "failed" => println!(
+            "{job} failed{}",
+            st.error.map(|e| format!(": {e}")).unwrap_or_default()
+        ),
+        other => println!("{job} {other}"),
+    }
+    Ok(())
+}
+
+/// `numpywren cancel --job jN`.
+fn cmd_cancel(args: &Args) -> Result<()> {
+    let client = DaemonClient::new(args.require("daemon-dir")?);
+    let job = daemon::parse_job_token(args.require("job")?)?;
+    if client.cancel(job, client_timeout(args)?)? {
+        println!("{job} canceled");
+    } else {
+        println!("{job} not cancelable (already terminal, unknown, or mid-activation)");
+    }
+    Ok(())
+}
+
+/// `numpywren shutdown`: stop the daemon (its fleet drains and the
+/// serve process exits).
+fn cmd_shutdown(args: &Args) -> Result<()> {
+    let client = DaemonClient::new(args.require("daemon-dir")?);
+    client.shutdown(client_timeout(args)?)?;
+    println!("daemon shutdown requested");
     Ok(())
 }
 
@@ -803,6 +949,28 @@ mod tests {
             "run --algo cholesky --n 24 --block 8 --workers 2 --retention outputs",
         ))
         .unwrap();
+    }
+
+    #[test]
+    fn jobs_rejects_daemon_job_chain_refs() {
+        // `@jN` is daemon-wire-only; the one-shot driver chains by
+        // spec index so it can verify numerics locally.
+        assert!(run_cli(&argv(
+            "jobs --specs cholesky:16:8,gemm:16:8@j1 --workers 2"
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn daemon_client_commands_time_out_without_a_daemon() {
+        let dir = std::env::temp_dir().join(format!("npw_cli_nodaemon_{}", std::process::id()));
+        let spec = format!("status --daemon-dir {} --job j1 --timeout 0.2", dir.display());
+        let err = run_cli(&argv(&spec)).unwrap_err();
+        assert!(format!("{err:#}").contains("no response"), "{err:#}");
+        // Missing required flags are rejected before any spooling.
+        assert!(run_cli(&argv("serve")).is_err(), "missing --daemon-dir");
+        assert!(run_cli(&argv("submit --daemon-dir /tmp/x")).is_err(), "missing --specs");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

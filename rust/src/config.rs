@@ -65,6 +65,42 @@ impl RetentionPolicy {
     }
 }
 
+/// Knobs for the dedicated background GC thread (the ROADMAP's
+/// "TTL-based background sweeper"). The thread owns *all* namespace
+/// reclamation I/O — the retention-policy two-stage sweep runs there
+/// every `sweep_interval` (off the job monitor thread, so a shaped
+/// chaos-latency bulk delete can never stall completion detection),
+/// and, when `ttl` is set, a TTL pass reclaims namespaces the
+/// retention sweep never touches: terminal-but-`KeepAll` jobs, parked
+/// `KeepOutputs` outputs, and orphaned `jN/` residue whose newest blob
+/// write is older than `ttl`. Pinned namespaces (a downstream chain
+/// consumer is not yet terminal) are immune until the pins release —
+/// the cloud analogue is an S3 lifecycle expiration rule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GcConfig {
+    /// Reclaim kept/orphaned namespaces once their write-idle age
+    /// exceeds this; `None` disables the TTL pass (retention-driven GC
+    /// still runs). Size it well above a job's output-fetch window —
+    /// an expired namespace's tiles are gone for good. The TTL pass is
+    /// a full-store scan, so it runs rate-limited to roughly a tenth
+    /// of the TTL (clamped to `[sweep_interval, 60s]`), not on every
+    /// sweep tick.
+    pub ttl: Option<Duration>,
+    /// Period of the GC thread's sweep loop (the cheap retention
+    /// sweep; shutdown interrupts the sleep, so a long interval never
+    /// stalls teardown).
+    pub sweep_interval: Duration,
+}
+
+impl Default for GcConfig {
+    fn default() -> Self {
+        GcConfig {
+            ttl: None,
+            sweep_interval: Duration::from_millis(5),
+        }
+    }
+}
+
 /// Which substrate backend family a job runs on (see
 /// [`crate::storage`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -234,6 +270,8 @@ pub struct EngineConfig {
     /// shutdown — output tiles are gone before `RunOutput::tile`; only
     /// opt in on the wrapper path when outputs are not fetched.
     pub retention: RetentionPolicy,
+    /// Background GC thread: sweep period + optional namespace TTL.
+    pub gc: GcConfig,
 }
 
 impl Default for EngineConfig {
@@ -252,6 +290,7 @@ impl Default for EngineConfig {
             job_timeout: Duration::from_secs(600),
             substrate: SubstrateConfig::from_env_or_default(),
             retention: RetentionPolicy::KeepAll,
+            gc: GcConfig::default(),
         }
     }
 }
@@ -299,6 +338,28 @@ impl EngineConfig {
             "job_timeout" => self.job_timeout = secs(value)?,
             "substrate" => self.substrate = SubstrateConfig::parse(value)?,
             "retention" => self.retention = RetentionPolicy::parse(value)?,
+            // `off`/`none`/`0` disable the TTL pass; anything else is
+            // an age in (fractional) seconds.
+            "gc_ttl" => {
+                self.gc.ttl = match value {
+                    "off" | "none" => None,
+                    v => {
+                        let d = secs(v)?;
+                        if d.is_zero() {
+                            None
+                        } else {
+                            Some(d)
+                        }
+                    }
+                };
+            }
+            "gc_interval" => {
+                let d = secs(value)?;
+                if d.is_zero() {
+                    bail!("gc_interval must be > 0 (the GC thread's sweep period)");
+                }
+                self.gc.sweep_interval = d;
+            }
             "failure" => {
                 let (at, frac) = value
                     .split_once(':')
@@ -381,6 +442,26 @@ mod tests {
         c.set("retention", "delete_all").unwrap();
         assert_eq!(c.retention, RetentionPolicy::DeleteAll);
         assert!(c.set("retention", "shred").is_err());
+    }
+
+    #[test]
+    fn gc_config_parses() {
+        let mut c = EngineConfig::default();
+        assert_eq!(c.gc, GcConfig::default());
+        assert_eq!(c.gc.ttl, None, "TTL pass is off by default");
+        c.set("gc_ttl", "2.5").unwrap();
+        assert_eq!(c.gc.ttl, Some(Duration::from_millis(2500)));
+        c.set("gc_ttl", "off").unwrap();
+        assert_eq!(c.gc.ttl, None);
+        c.set("gc_ttl", "1").unwrap();
+        c.set("gc_ttl", "0").unwrap();
+        assert_eq!(c.gc.ttl, None, "0 disables like off");
+        c.set("gc_ttl", "none").unwrap();
+        assert_eq!(c.gc.ttl, None);
+        c.set("gc_interval", "0.05").unwrap();
+        assert_eq!(c.gc.sweep_interval, Duration::from_millis(50));
+        assert!(c.set("gc_interval", "0").is_err());
+        assert!(c.set("gc_ttl", "soon").is_err());
     }
 
     #[test]

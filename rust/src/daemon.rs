@@ -1,0 +1,1277 @@
+//! Long-lived daemon mode: `numpywren serve`.
+//!
+//! The paper's pitch is a *persistent, elastic service* — users submit
+//! linear-algebra jobs and the system provisions, executes, and cleans
+//! up (numpywren §3; "Occupy the Cloud" argues the always-available
+//! model). [`crate::jobs::JobManager`] is that service in-process;
+//! this module gives it unbounded uptime and multiple clients:
+//!
+//! * [`Daemon`] owns one `JobManager` (one substrate, one shared
+//!   worker fleet) and serves submissions over a **durable file-based
+//!   command queue** — a spool directory of JSON command files. Any
+//!   number of shells can feed the same fleet; commands spooled while
+//!   the daemon is down are executed when it comes up (that is the
+//!   durability: the spool *is* the queue).
+//! * [`DaemonClient`] is the other half: it writes a command file
+//!   atomically (`.tmp` + rename), then polls for the matching
+//!   response file. `numpywren submit/status/cancel/shutdown
+//!   --daemon-dir …` are thin CLI wrappers over it.
+//!
+//! ## Spool layout
+//!
+//! ```text
+//! <daemon-dir>/
+//!   daemon.json        # liveness marker: {"pid": …, "workers": …}
+//!   cmd/<id>.json      # requests, processed in name order, deleted after
+//!   rsp/<id>.json      # one response per request, deleted by the client
+//! ```
+//!
+//! ## Wire format
+//!
+//! One JSON object per file (hand-rolled codec — the offline crate set
+//! has no serde). Requests:
+//!
+//! ```text
+//! {"op":"submit","specs":"cholesky:256:32,gemm:256:32:1@1","seed":42,
+//!  "retention":"outputs","max_inflight":8}
+//! {"op":"status","job":"j3"}   {"op":"cancel","job":"j3"}
+//! {"op":"stats"}               {"op":"shutdown"}
+//! ```
+//!
+//! Responses always carry `"ok"`; failures carry `"error"`:
+//!
+//! ```text
+//! {"ok":true,"jobs":["j1","j2"]}
+//! {"ok":true,"job":"j3","state":"running","completed":5,"total":12}
+//! {"ok":false,"error":"bad job spec `…`"}
+//! ```
+//!
+//! The submit op reaches the whole [`crate::jobs::JobSpec`] surface:
+//! spec grammar `algo:N:BLOCK[:CLASS][@DEP]` (the same grammar as
+//! `numpywren jobs`), scheduling classes, retention policies, per-job
+//! in-flight quotas, and dependency chains — `@K` names the K-th spec
+//! of the *same* request (1-based), `@jN` chains onto any job this
+//! daemon already submitted, even from another client's request. Input
+//! matrices are generated daemon-side from the request's `seed`, so a
+//! submission is a few hundred bytes regardless of problem size.
+//!
+//! Pair the daemon with the TTL sweeper (`--gc-ttl`, see
+//! [`crate::config::GcConfig`]) and the service holds steady-state
+//! substrate residency forever: finished jobs' namespaces expire like
+//! objects under an S3 lifecycle rule.
+
+use crate::config::{EngineConfig, RetentionPolicy};
+use crate::drivers;
+use crate::jobs::{JobId, JobManager, JobSpec, JobStatus};
+use crate::lambdapack::programs;
+use crate::linalg::matrix::Matrix;
+use crate::storage::{BlobStore as _, KvState as _};
+use crate::util::prng::Rng;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Liveness/metadata marker file at the spool root.
+pub const MARKER: &str = "daemon.json";
+
+/// How often the daemon polls the command spool between batches.
+const DAEMON_POLL: Duration = Duration::from_millis(2);
+
+/// How often a client polls for its response file.
+const CLIENT_POLL: Duration = Duration::from_millis(1);
+
+// ===================================================================
+// Minimal JSON — the offline crate set has no serde, and the wire
+// format needs only flat objects, strings, numbers, bools, and string
+// arrays. The codec is still a complete little JSON subset (escapes,
+// nesting, \uXXXX) so foreign clients can speak it from any language.
+// ===================================================================
+
+/// A parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object field lookup (first match).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= u64::MAX as f64 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Serialize (compact, no trailing newline).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                // Integral values print without a fraction so ids and
+                // counts round-trip textually.
+                if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            out.push_str(&format!("\\u{:04x}", c as u32));
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).render_into(out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse one JSON document (trailing whitespace allowed, trailing
+    /// garbage rejected).
+    pub fn parse(src: &str) -> Result<Json> {
+        let mut p = JsonParser {
+            b: src.as_bytes(),
+            i: 0,
+        };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            bail!("trailing garbage at byte {} of JSON document", p.i);
+        }
+        Ok(v)
+    }
+}
+
+struct JsonParser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl JsonParser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            bail!("expected `{}` at byte {}", c as char, self.i)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => bail!("unexpected JSON at byte {}", self.i),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at byte {}", self.i)
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while self
+            .peek()
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let n: f64 = text
+            .parse()
+            .map_err(|_| anyhow!("bad JSON number `{text}`"))?;
+        Ok(Json::Num(n))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let rest = std::str::from_utf8(&self.b[self.i..])
+                .map_err(|_| anyhow!("invalid UTF-8 in JSON string"))?;
+            let Some(c) = rest.chars().next() else {
+                bail!("unterminated JSON string");
+            };
+            self.i += c.len_utf8();
+            match c {
+                '"' => return Ok(s),
+                '\\' => {
+                    let Some(e) = self.peek() else {
+                        bail!("unterminated escape");
+                    };
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                bail!("truncated \\u escape");
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .map_err(|_| anyhow!("bad \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| anyhow!("bad \\u escape `{hex}`"))?;
+                            self.i += 4;
+                            s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        }
+                        other => bail!("bad escape `\\{}`", other as char),
+                    }
+                }
+                c => s.push(c),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => bail!("expected `,` or `]` at byte {}", self.i),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => bail!("expected `,` or `}}` at byte {}", self.i),
+            }
+        }
+    }
+}
+
+// ===================================================================
+// Job-spec grammar — shared by `numpywren jobs` and the daemon wire.
+// ===================================================================
+
+/// A chain reference in a spec list.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChainRef {
+    /// `@K`: the K-th spec of the same list, 1-based (must be earlier).
+    Index(usize),
+    /// `@jN`: a job the daemon already submitted (any request).
+    Job(JobId),
+}
+
+/// One parsed `algo:N:BLOCK[:CLASS][@DEP]` entry.
+#[derive(Clone, Debug)]
+pub struct SpecEntry {
+    pub algo: String,
+    pub n: usize,
+    pub block: usize,
+    pub class: i64,
+    pub chain: Option<ChainRef>,
+}
+
+/// Parse a comma-separated spec list. `@K` index references are
+/// validated against list position (must name an earlier entry);
+/// `@jN` references are resolved by the caller (the daemon knows its
+/// submitted jobs, the one-shot `jobs` command rejects them).
+pub fn parse_specs(specs: &str) -> Result<Vec<SpecEntry>> {
+    let mut out: Vec<SpecEntry> = Vec::new();
+    for s in specs.split(',') {
+        let (core, chain) = match s.split_once('@') {
+            None => (s, None),
+            Some((core, d)) => {
+                let r = if let Some(job) = d.strip_prefix('j') {
+                    let id: u64 = job
+                        .parse()
+                        .map_err(|_| anyhow!("bad chain reference `@{d}` in `{s}`"))?;
+                    ChainRef::Job(JobId(id))
+                } else {
+                    let idx: usize = d
+                        .parse()
+                        .map_err(|_| anyhow!("bad chain reference `@{d}` in `{s}`"))?;
+                    if idx == 0 || idx > out.len() {
+                        bail!(
+                            "chain reference @{idx} in `{s}` must name an earlier spec (1-based)"
+                        );
+                    }
+                    ChainRef::Index(idx)
+                };
+                (core, Some(r))
+            }
+        };
+        let parts: Vec<&str> = core.split(':').collect();
+        let (algo, n, block, class) = match parts.as_slice() {
+            [algo, n, block] => (*algo, n.parse::<usize>()?, block.parse::<usize>()?, 0i64),
+            [algo, n, block, class] => (*algo, n.parse()?, block.parse()?, class.parse::<i64>()?),
+            _ => bail!("bad job spec `{s}` (algo:N:BLOCK[:CLASS][@DEP])"),
+        };
+        out.push(SpecEntry {
+            algo: algo.to_string(),
+            n,
+            block,
+            class,
+            chain,
+        });
+    }
+    Ok(out)
+}
+
+/// Parse a job handle: `j3` or bare `3`.
+pub fn parse_job_token(s: &str) -> Result<JobId> {
+    let digits = s.strip_prefix('j').unwrap_or(s);
+    let id: u64 = digits
+        .parse()
+        .map_err(|_| anyhow!("bad job id `{s}` (expected jN)"))?;
+    Ok(JobId(id))
+}
+
+// ===================================================================
+// Requests
+// ===================================================================
+
+/// One daemon command, as carried by a spool file.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Submit a spec list; jobs chain within the request (`@K`) or
+    /// onto existing daemon jobs (`@jN`).
+    Submit {
+        specs: String,
+        seed: u64,
+        retention: Option<RetentionPolicy>,
+        max_inflight: Option<usize>,
+    },
+    Status { job: JobId },
+    Cancel { job: JobId },
+    /// Substrate residency + fleet occupancy — what a leak check needs.
+    Stats,
+    Shutdown,
+}
+
+impl Request {
+    pub fn encode(&self) -> String {
+        let obj = match self {
+            Request::Submit {
+                specs,
+                seed,
+                retention,
+                max_inflight,
+            } => {
+                let mut fields = vec![
+                    ("op".to_string(), Json::Str("submit".into())),
+                    ("specs".to_string(), Json::Str(specs.clone())),
+                    ("seed".to_string(), Json::Num(*seed as f64)),
+                ];
+                if let Some(r) = retention {
+                    let name = match r {
+                        RetentionPolicy::KeepAll => "keep",
+                        RetentionPolicy::KeepOutputs => "outputs",
+                        RetentionPolicy::DeleteAll => "delete",
+                    };
+                    fields.push(("retention".to_string(), Json::Str(name.into())));
+                }
+                if let Some(q) = max_inflight {
+                    fields.push(("max_inflight".to_string(), Json::Num(*q as f64)));
+                }
+                Json::Obj(fields)
+            }
+            Request::Status { job } => Json::Obj(vec![
+                ("op".to_string(), Json::Str("status".into())),
+                ("job".to_string(), Json::Str(job.to_string())),
+            ]),
+            Request::Cancel { job } => Json::Obj(vec![
+                ("op".to_string(), Json::Str("cancel".into())),
+                ("job".to_string(), Json::Str(job.to_string())),
+            ]),
+            Request::Stats => Json::Obj(vec![("op".to_string(), Json::Str("stats".into()))]),
+            Request::Shutdown => Json::Obj(vec![("op".to_string(), Json::Str("shutdown".into()))]),
+        };
+        obj.render()
+    }
+
+    pub fn decode(src: &str) -> Result<Request> {
+        let v = Json::parse(src)?;
+        let op = v.get("op").and_then(Json::as_str).context("request is missing `op`")?;
+        let job = |v: &Json| -> Result<JobId> {
+            parse_job_token(
+                v.get("job")
+                    .and_then(Json::as_str)
+                    .context("request is missing `job`")?,
+            )
+        };
+        match op {
+            "submit" => {
+                let max_inflight =
+                    v.get("max_inflight").and_then(Json::as_u64).map(|q| q as usize);
+                if max_inflight == Some(0) {
+                    // Quota 0 is a deliberate *library* state (a paused
+                    // job); over the wire it would just stall until the
+                    // job timeout — reject it where the user can see.
+                    bail!("max_inflight must be >= 1 (0 parks the job forever)");
+                }
+                Ok(Request::Submit {
+                    specs: v
+                        .get("specs")
+                        .and_then(Json::as_str)
+                        .context("submit is missing `specs`")?
+                        .to_string(),
+                    seed: v.get("seed").and_then(Json::as_u64).unwrap_or(42),
+                    retention: match v.get("retention").and_then(Json::as_str) {
+                        Some(r) => Some(RetentionPolicy::parse(r)?),
+                        None => None,
+                    },
+                    max_inflight,
+                })
+            }
+            "status" => Ok(Request::Status { job: job(&v)? }),
+            "cancel" => Ok(Request::Cancel { job: job(&v)? }),
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown),
+            other => bail!("unknown op `{other}` (submit|status|cancel|stats|shutdown)"),
+        }
+    }
+}
+
+// ===================================================================
+// Spool plumbing
+// ===================================================================
+
+fn cmd_dir(dir: &Path) -> PathBuf {
+    dir.join("cmd")
+}
+
+fn rsp_dir(dir: &Path) -> PathBuf {
+    dir.join("rsp")
+}
+
+/// Write-then-rename so readers only ever see complete files (the
+/// filter on `.json` makes the `.tmp` stage invisible).
+fn write_atomic(path: &Path, contents: &str) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, contents).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("publishing {}", path.display()))?;
+    Ok(())
+}
+
+// ===================================================================
+// Client
+// ===================================================================
+
+/// Decoded `status` response.
+#[derive(Clone, Debug)]
+pub struct StatusReply {
+    pub job: JobId,
+    /// `waiting | running | succeeded | failed | canceled | unknown`.
+    pub state: String,
+    pub completed: u64,
+    pub total: u64,
+    pub error: Option<String>,
+}
+
+impl StatusReply {
+    /// Terminal = the daemon will never change this job's state again.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self.state.as_str(), "succeeded" | "failed" | "canceled")
+    }
+}
+
+/// Decoded `stats` response: substrate residency + fleet occupancy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StatsReply {
+    pub blobs: usize,
+    pub kv: usize,
+    pub queue: usize,
+    pub active: usize,
+    pub waiting: usize,
+}
+
+impl StatsReply {
+    /// Total resident substrate entries — zero means the namespaces
+    /// have been swept back to baseline.
+    pub fn resident(&self) -> usize {
+        self.blobs + self.kv + self.queue
+    }
+}
+
+/// The client half of the spool protocol: one instance per process is
+/// enough (request ids are `pid-seq`). Creating a client does not
+/// require a running daemon — requests spool durably and are served
+/// when `numpywren serve` comes up, or time out on the client side.
+pub struct DaemonClient {
+    dir: PathBuf,
+    seq: AtomicU64,
+}
+
+impl DaemonClient {
+    pub fn new(dir: impl Into<PathBuf>) -> DaemonClient {
+        DaemonClient {
+            dir: dir.into(),
+            seq: AtomicU64::new(0),
+        }
+    }
+
+    /// Send one request and block for its response (or `timeout`).
+    /// Protocol-level failures (`"ok": false`) come back as errors
+    /// carrying the daemon's message.
+    pub fn request(&self, req: &Request, timeout: Duration) -> Result<Json> {
+        std::fs::create_dir_all(cmd_dir(&self.dir))?;
+        std::fs::create_dir_all(rsp_dir(&self.dir))?;
+        let id = format!(
+            "{:010}-{:06}",
+            std::process::id(),
+            self.seq.fetch_add(1, Ordering::SeqCst)
+        );
+        let cmd = cmd_dir(&self.dir).join(format!("{id}.json"));
+        let rsp = rsp_dir(&self.dir).join(format!("{id}.json"));
+        // Ids are `pid-seq`, so after OS pid reuse a fresh process can
+        // mint an id a crashed predecessor already used. Clear any
+        // stale response under this id before publishing the request,
+        // or the loop below would return the predecessor's answer.
+        let _ = std::fs::remove_file(&rsp);
+        write_atomic(&cmd, &req.encode())?;
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Ok(body) = std::fs::read_to_string(&rsp) {
+                let _ = std::fs::remove_file(&rsp);
+                let v = Json::parse(&body)
+                    .with_context(|| format!("malformed daemon response `{body}`"))?;
+                if v.get("ok").and_then(Json::as_bool) == Some(true) {
+                    return Ok(v);
+                }
+                let msg = v
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .unwrap_or("daemon reported an unspecified error")
+                    .to_string();
+                bail!("{msg}");
+            }
+            if Instant::now() >= deadline {
+                // Withdraw the unanswered command so a daemon starting
+                // later does not execute a request nobody waits on.
+                let _ = std::fs::remove_file(&cmd);
+                bail!(
+                    "no response from daemon within {:.1}s (is `numpywren serve \
+                     --daemon-dir {}` running?)",
+                    timeout.as_secs_f64(),
+                    self.dir.display()
+                );
+            }
+            std::thread::sleep(CLIENT_POLL);
+        }
+    }
+
+    /// Submit a spec list; returns the new job handles in spec order.
+    pub fn submit(
+        &self,
+        specs: &str,
+        seed: u64,
+        retention: Option<RetentionPolicy>,
+        max_inflight: Option<usize>,
+        timeout: Duration,
+    ) -> Result<Vec<JobId>> {
+        let rsp = self.request(
+            &Request::Submit {
+                specs: specs.to_string(),
+                seed,
+                retention,
+                max_inflight,
+            },
+            timeout,
+        )?;
+        let Some(Json::Arr(items)) = rsp.get("jobs") else {
+            bail!("submit response is missing `jobs`");
+        };
+        items
+            .iter()
+            .map(|j| parse_job_token(j.as_str().context("non-string job id")?))
+            .collect()
+    }
+
+    pub fn status(&self, job: JobId, timeout: Duration) -> Result<StatusReply> {
+        let rsp = self.request(&Request::Status { job }, timeout)?;
+        Ok(StatusReply {
+            job,
+            state: rsp
+                .get("state")
+                .and_then(Json::as_str)
+                .context("status response is missing `state`")?
+                .to_string(),
+            completed: rsp.get("completed").and_then(Json::as_u64).unwrap_or(0),
+            total: rsp.get("total").and_then(Json::as_u64).unwrap_or(0),
+            error: rsp.get("error").and_then(Json::as_str).map(|s| s.to_string()),
+        })
+    }
+
+    /// Poll `status` until the job is terminal (succeeded / failed /
+    /// canceled) or `timeout` elapses. An `unknown` job errors at once.
+    pub fn wait_terminal(&self, job: JobId, timeout: Duration) -> Result<StatusReply> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                bail!("{job} still not terminal after {:.1}s", timeout.as_secs_f64());
+            }
+            let st = self.status(job, remaining)?;
+            if st.state == "unknown" {
+                bail!("daemon does not know {job}");
+            }
+            if st.is_terminal() {
+                return Ok(st);
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    pub fn cancel(&self, job: JobId, timeout: Duration) -> Result<bool> {
+        let rsp = self.request(&Request::Cancel { job }, timeout)?;
+        Ok(rsp.get("canceled").and_then(Json::as_bool).unwrap_or(false))
+    }
+
+    pub fn stats(&self, timeout: Duration) -> Result<StatsReply> {
+        let rsp = self.request(&Request::Stats, timeout)?;
+        let field = |k: &str| rsp.get(k).and_then(Json::as_u64).unwrap_or(0) as usize;
+        Ok(StatsReply {
+            blobs: field("blobs"),
+            kv: field("kv"),
+            queue: field("queue"),
+            active: field("active"),
+            waiting: field("waiting"),
+        })
+    }
+
+    pub fn shutdown(&self, timeout: Duration) -> Result<()> {
+        self.request(&Request::Shutdown, timeout).map(|_| ())
+    }
+}
+
+// ===================================================================
+// Daemon
+// ===================================================================
+
+/// What `@jN` chain references resolve against: enough shape to stage
+/// a downstream GEMM onto an already-submitted job.
+#[derive(Clone, Copy, Debug)]
+enum UpstreamKind {
+    Cholesky,
+    Gemm,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct UpstreamInfo {
+    kind: UpstreamKind,
+    grid: usize,
+    block: usize,
+}
+
+/// The serve loop: owns one [`JobManager`] and drains the command
+/// spool until a `shutdown` request arrives. Construct with the same
+/// [`EngineConfig`] the one-shot commands use — substrate, scaling,
+/// retention default, and [`GcConfig`](crate::config::GcConfig) (the
+/// TTL sweeper is what keeps an unbounded-uptime daemon at
+/// steady-state residency).
+pub struct Daemon {
+    mgr: JobManager,
+    dir: PathBuf,
+    /// Shape of every job ever submitted (what `@jN` chains resolve
+    /// against). Grows with jobs served, but at ~3 words per job —
+    /// unlike job *reports*, which the manager slims (see
+    /// [`crate::jobs::JobReport`]), this is negligible at any
+    /// realistic churn.
+    submitted: HashMap<u64, UpstreamInfo>,
+    /// Last orphaned-response reap (see [`Daemon::poll_once`]).
+    last_reap: Instant,
+    /// Echo one line per processed command (the CLI sets this; tests
+    /// keep it quiet).
+    pub log: bool,
+}
+
+/// How often the daemon looks for orphaned response files, and how
+/// stale one must be before it is reaped. A client that times out
+/// after its command was consumed leaves an `rsp/` file nobody reads;
+/// an unbounded-uptime daemon must not accumulate them forever.
+const REAP_PERIOD: Duration = Duration::from_secs(60);
+const REAP_AGE: Duration = Duration::from_secs(600);
+
+impl Daemon {
+    /// Stand up the fleet and claim the spool directory (creates
+    /// `cmd/`/`rsp/`, writes the `daemon.json` marker). One daemon per
+    /// directory — a marker naming a still-live pid is refused, since
+    /// two daemons polling one spool would double-execute commands and
+    /// clobber each other's responses (the liveness probe is
+    /// `/proc/<pid>`, best-effort off Linux; delete `daemon.json` by
+    /// hand if it is genuinely stale). Commands already spooled are
+    /// served on the first poll — that is the durability story, not an
+    /// error.
+    pub fn new(cfg: EngineConfig, dir: impl Into<PathBuf>) -> Result<Daemon> {
+        let dir = dir.into();
+        std::fs::create_dir_all(cmd_dir(&dir))
+            .with_context(|| format!("creating spool dir {}", dir.display()))?;
+        std::fs::create_dir_all(rsp_dir(&dir))?;
+        if let Ok(body) = std::fs::read_to_string(dir.join(MARKER)) {
+            let pid = Json::parse(&body).ok().and_then(|v| v.get("pid").and_then(Json::as_u64));
+            if let Some(pid) = pid {
+                // A marker naming any live pid (this process included —
+                // embedders and tests can run a daemon in-process)
+                // means the spool is taken.
+                let alive =
+                    Path::new("/proc").exists() && Path::new(&format!("/proc/{pid}")).exists();
+                if alive {
+                    bail!(
+                        "daemon already serving {} (pid {pid}); shut it down, pick another \
+                         --daemon-dir, or delete {MARKER} if that pid is not a daemon",
+                        dir.display()
+                    );
+                }
+            }
+        }
+        let mgr = JobManager::new(cfg);
+        let workers = mgr.fleet_config().worker_hint();
+        let marker = Json::Obj(vec![
+            ("pid".to_string(), Json::Num(std::process::id() as f64)),
+            ("workers".to_string(), Json::Num(workers as f64)),
+        ]);
+        write_atomic(&dir.join(MARKER), &marker.render())?;
+        Ok(Daemon {
+            mgr,
+            dir,
+            submitted: HashMap::new(),
+            last_reap: Instant::now(),
+            log: false,
+        })
+    }
+
+    /// Serve until a `shutdown` command, then stop the fleet and
+    /// return its aggregate report.
+    pub fn run(mut self) -> Result<crate::jobs::FleetReport> {
+        let outcome = loop {
+            match self.poll_once() {
+                Ok(true) => break Ok(()),
+                Ok(false) => std::thread::sleep(DAEMON_POLL),
+                Err(e) => break Err(e),
+            }
+        };
+        let _ = std::fs::remove_file(self.dir.join(MARKER));
+        let fleet = self.mgr.shutdown();
+        outcome.map(|()| fleet)
+    }
+
+    /// Drain the commands currently spooled (in file-name order).
+    /// Returns whether a `shutdown` command was among them. Exposed so
+    /// tests and embedders can drive the loop themselves.
+    pub fn poll_once(&mut self) -> Result<bool> {
+        let cmds = cmd_dir(&self.dir);
+        let mut batch: Vec<PathBuf> = std::fs::read_dir(&cmds)
+            .with_context(|| format!("reading spool {}", cmds.display()))?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|x| x == "json"))
+            .collect();
+        batch.sort();
+        let mut shutdown = false;
+        for cmd in batch {
+            // Claim the file first: even if handling dies midway the
+            // command is consumed, not replayed forever. A file that
+            // vanished between the listing and here is a client that
+            // timed out and withdrew its request — skip it, never kill
+            // the service over one impatient caller.
+            let Ok(body) = std::fs::read_to_string(&cmd) else {
+                continue;
+            };
+            let _ = std::fs::remove_file(&cmd);
+            let (response, stop) = match Request::decode(&body) {
+                Ok(req) => {
+                    if self.log {
+                        println!("daemon: {req:?}");
+                    }
+                    self.handle(req)
+                }
+                Err(e) => (err_response(&format!("bad request: {e:#}")), false),
+            };
+            let name = cmd.file_name().expect("spool files are named");
+            write_atomic(&rsp_dir(&self.dir).join(name), &response.render())?;
+            if stop {
+                // Stop processing the batch right here: a submit sorted
+                // after the shutdown must not be accepted into a fleet
+                // about to be torn down — unprocessed commands stay
+                // durably spooled for the next daemon on this dir.
+                shutdown = true;
+                break;
+            }
+        }
+        if self.last_reap.elapsed() >= REAP_PERIOD {
+            self.last_reap = Instant::now();
+            self.reap_orphan_responses();
+        }
+        Ok(shutdown)
+    }
+
+    /// Delete response files no client ever collected (a timed-out
+    /// caller withdraws its *command*, but a response already written
+    /// is orphaned). Age comes from the file's mtime; anything a
+    /// client still wants is read and deleted within its timeout,
+    /// which is far shorter than [`REAP_AGE`].
+    fn reap_orphan_responses(&self) {
+        let Ok(entries) = std::fs::read_dir(rsp_dir(&self.dir)) else {
+            return;
+        };
+        for entry in entries.filter_map(|e| e.ok()) {
+            let stale = entry
+                .metadata()
+                .and_then(|m| m.modified())
+                .ok()
+                .and_then(|t| t.elapsed().ok())
+                .is_some_and(|age| age >= REAP_AGE);
+            if stale {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    }
+
+    /// Execute one request; returns `(response, shutdown?)`.
+    fn handle(&mut self, req: Request) -> (Json, bool) {
+        match req {
+            Request::Submit {
+                specs,
+                seed,
+                retention,
+                max_inflight,
+            } => {
+                let rsp = match self.stage_and_submit(&specs, seed, retention, max_inflight) {
+                    Ok(jobs) => ok_response(vec![(
+                        "jobs".to_string(),
+                        Json::Arr(jobs.iter().map(|j| Json::Str(j.to_string())).collect()),
+                    )]),
+                    Err(e) => err_response(&format!("{e:#}")),
+                };
+                (rsp, false)
+            }
+            Request::Status { job } => {
+                let mut fields: Vec<(String, Json)> =
+                    vec![("job".to_string(), Json::Str(job.to_string()))];
+                let state = match self.mgr.status(job) {
+                    JobStatus::Unknown => "unknown",
+                    JobStatus::Waiting => "waiting",
+                    JobStatus::Running { completed, total } => {
+                        fields.push(("completed".to_string(), Json::Num(completed as f64)));
+                        fields.push(("total".to_string(), Json::Num(total as f64)));
+                        "running"
+                    }
+                    JobStatus::Succeeded => "succeeded",
+                    JobStatus::Failed(e) => {
+                        fields.push(("error".to_string(), Json::Str(e)));
+                        "failed"
+                    }
+                    JobStatus::Canceled => "canceled",
+                };
+                fields.insert(1, ("state".to_string(), Json::Str(state.into())));
+                (ok_response(fields), false)
+            }
+            Request::Cancel { job } => {
+                let canceled = Json::Bool(self.mgr.cancel(job));
+                (ok_response(vec![("canceled".to_string(), canceled)]), false)
+            }
+            Request::Stats => {
+                let kv = self.mgr.state().scan_prefix("").len();
+                let fields = vec![
+                    ("blobs".to_string(), Json::Num(self.mgr.store().len() as f64)),
+                    ("kv".to_string(), Json::Num(kv as f64)),
+                    ("queue".to_string(), Json::Num(self.mgr.queue_len() as f64)),
+                    ("active".to_string(), Json::Num(self.mgr.active_jobs() as f64)),
+                    ("waiting".to_string(), Json::Num(self.mgr.waiting_jobs() as f64)),
+                ];
+                (ok_response(fields), false)
+            }
+            Request::Shutdown => (ok_response(Vec::new()), true),
+        }
+    }
+
+    /// The staging half of a submit: generate the request's input
+    /// matrices from its seed, resolve chain references, and hand
+    /// everything to the shared fleet. Mirrors `numpywren jobs`
+    /// staging, minus client-side verification (outputs live in the
+    /// daemon's substrate until retention or TTL reclaims them).
+    ///
+    /// All-or-nothing at the validation layer: the whole request is
+    /// checked (algos, chain targets, grid/block compatibility)
+    /// *before* the first job reaches the fleet, so a bad trailing
+    /// spec cannot leave earlier jobs running under ids the client
+    /// never received. Fleet-level submit errors past that point are
+    /// rare (activation failures); their message lists the ids already
+    /// running so the client can still manage them.
+    fn stage_and_submit(
+        &mut self,
+        specs: &str,
+        seed: u64,
+        retention: Option<RetentionPolicy>,
+        max_inflight: Option<usize>,
+    ) -> Result<Vec<JobId>> {
+        let entries = parse_specs(specs)?;
+        if entries.is_empty() {
+            bail!("empty spec list");
+        }
+        // Phase 1: validate everything; nothing is submitted yet. The
+        // plan records each entry's resulting shape so later entries
+        // (and later requests, via `submitted`) can chain onto it.
+        let mut plan: Vec<UpstreamInfo> = Vec::new();
+        for e in &entries {
+            let kind = match e.algo.as_str() {
+                "cholesky" => UpstreamKind::Cholesky,
+                "gemm" => UpstreamKind::Gemm,
+                other => bail!("daemon supports cholesky|gemm, got `{other}`"),
+            };
+            let up: Option<UpstreamInfo> = match e.chain {
+                None => None,
+                Some(ChainRef::Index(k)) => Some(plan[k - 1]), // bounds checked by parse_specs
+                Some(ChainRef::Job(job)) => Some(
+                    self.submitted
+                        .get(&job.0)
+                        .copied()
+                        .with_context(|| format!("chain reference @{job}: no such daemon job"))?,
+                ),
+            };
+            if let Some(up) = up {
+                if matches!(kind, UpstreamKind::Cholesky) {
+                    bail!("chain consumers must be gemm (`{}` cannot consume an upstream)", e.algo);
+                }
+                if e.n % e.block != 0 {
+                    bail!(
+                        "chained spec `{}:{}:{}`: N must be a multiple of BLOCK \
+                         (upstream tiles are exact block×block)",
+                        e.algo,
+                        e.n,
+                        e.block
+                    );
+                }
+                if e.block != up.block || e.n.div_ceil(e.block) != up.grid {
+                    bail!(
+                        "chained spec `{}:{}:{}` must match its upstream \
+                         ({}×{} blocks of {})",
+                        e.algo,
+                        e.n,
+                        e.block,
+                        up.grid,
+                        up.grid,
+                        up.block
+                    );
+                }
+            }
+            plan.push(UpstreamInfo { kind, grid: e.n.div_ceil(e.block), block: e.block });
+        }
+        // Phase 2: stage and submit, in request order.
+        let mut rng = Rng::new(seed);
+        let mut out: Vec<JobId> = Vec::new();
+        for (e, info) in entries.iter().zip(&plan) {
+            let apply = |mut spec: JobSpec| -> JobSpec {
+                spec = spec.with_class(e.class);
+                if let Some(r) = retention {
+                    spec = spec.with_retention(r);
+                }
+                if let Some(q) = max_inflight {
+                    spec = spec.with_max_inflight(q);
+                }
+                spec
+            };
+            let upstream_job: Option<JobId> = match e.chain {
+                None => None,
+                Some(ChainRef::Index(k)) => Some(out[k - 1]),
+                Some(ChainRef::Job(job)) => Some(job),
+            };
+            let submitted = match (info.kind, upstream_job) {
+                (UpstreamKind::Cholesky, None) => {
+                    let a = Matrix::rand_spd(e.n, &mut rng);
+                    let (env, inputs, _grid) = drivers::stage_cholesky(&a, e.block)?;
+                    self.mgr.submit(apply(
+                        JobSpec::new(programs::cholesky_spec().program, env, inputs)
+                            .with_outputs(["O"]),
+                    ))
+                }
+                (UpstreamKind::Gemm, None) => {
+                    let a = Matrix::randn(e.n, e.n, &mut rng);
+                    let b = Matrix::randn(e.n, e.n, &mut rng);
+                    let (env, inputs, _grid) = drivers::stage_gemm(&a, &b, e.block)?;
+                    self.mgr.submit(apply(
+                        JobSpec::new(programs::gemm_spec().program, env, inputs)
+                            .with_outputs(["Ctmp"]),
+                    ))
+                }
+                (UpstreamKind::Gemm, Some(up_job)) => {
+                    // The upstream's kind decides which output tiles
+                    // the child's A inputs alias.
+                    let up_kind = self.submitted.get(&up_job.0).map(|u| u.kind);
+                    let up_kind = match (e.chain, up_kind) {
+                        (Some(ChainRef::Index(k)), _) => plan[k - 1].kind,
+                        (_, Some(kind)) => kind,
+                        // Validated in phase 1; unreachable in practice.
+                        _ => bail!("chain upstream {up_job} vanished mid-request"),
+                    };
+                    let b = Matrix::randn(e.n, e.n, &mut rng);
+                    let (env, inputs, imports, _grid) = match up_kind {
+                        UpstreamKind::Cholesky => {
+                            drivers::stage_gemm_after_cholesky(up_job, &b, e.block)?
+                        }
+                        UpstreamKind::Gemm => {
+                            drivers::stage_gemm_after_gemm(up_job, info.grid, &b, e.block)?
+                        }
+                    };
+                    self.mgr.submit_after(
+                        apply(
+                            JobSpec::new(programs::gemm_spec().program, env, inputs)
+                                .with_outputs(["Ctmp"])
+                                .with_imports(imports),
+                        ),
+                        &[up_job],
+                    )
+                }
+                // Phase 1 rejects cholesky consumers.
+                (UpstreamKind::Cholesky, Some(up_job)) => {
+                    bail!("chain upstream {up_job}: cholesky cannot consume an upstream")
+                }
+            };
+            let job = submitted.map_err(|err| {
+                if out.is_empty() {
+                    err
+                } else {
+                    let ids = out.iter().map(|j| j.to_string()).collect::<Vec<_>>().join(" ");
+                    err.context(format!(
+                        "request partially submitted — jobs already running: {ids}"
+                    ))
+                }
+            })?;
+            self.submitted.insert(job.0, *info);
+            out.push(job);
+        }
+        Ok(out)
+    }
+}
+
+fn ok_response(mut fields: Vec<(String, Json)>) -> Json {
+    fields.insert(0, ("ok".to_string(), Json::Bool(true)));
+    Json::Obj(fields)
+}
+
+fn err_response(msg: &str) -> Json {
+    Json::Obj(vec![
+        ("ok".to_string(), Json::Bool(false)),
+        ("error".to_string(), Json::Str(msg.to_string())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let v = Json::Obj(vec![
+            ("op".to_string(), Json::Str("submit".into())),
+            ("specs".to_string(), Json::Str("a\"b\\c\nd".into())),
+            ("seed".to_string(), Json::Num(42.0)),
+            ("neg".to_string(), Json::Num(-1.5)),
+            ("ok".to_string(), Json::Bool(true)),
+            ("nil".to_string(), Json::Null),
+            (
+                "jobs".to_string(),
+                Json::Arr(vec![Json::Str("j1".into()), Json::Str("j2".into())]),
+            ),
+        ]);
+        let text = v.render();
+        assert_eq!(Json::parse(&text).unwrap(), v);
+        // Integral numbers render without a fraction.
+        assert!(text.contains("\"seed\":42"), "{text}");
+        assert!(text.contains("-1.5"), "{text}");
+    }
+
+    #[test]
+    fn json_parser_rejects_garbage() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("{}extra").is_err());
+        assert!(Json::parse("{\"a\" 1}").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+        assert!(Json::parse("{\"a\": tru}").is_err());
+        // Whitespace and \u escapes are fine.
+        let v = Json::parse(" { \"k\" : \"\\u0041\\n\" } ").unwrap();
+        assert_eq!(v.get("k").unwrap().as_str(), Some("A\n"));
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let reqs = [
+            Request::Submit {
+                specs: "cholesky:32:8,gemm:32:8:1@1".into(),
+                seed: 7,
+                retention: Some(RetentionPolicy::KeepOutputs),
+                max_inflight: Some(4),
+            },
+            Request::Submit {
+                specs: "gemm:16:8".into(),
+                seed: 42,
+                retention: None,
+                max_inflight: None,
+            },
+            Request::Status { job: JobId(3) },
+            Request::Cancel { job: JobId(12) },
+            Request::Stats,
+            Request::Shutdown,
+        ];
+        for r in reqs {
+            assert_eq!(Request::decode(&r.encode()).unwrap(), r);
+        }
+        assert!(Request::decode("{\"op\":\"fry\"}").is_err());
+        assert!(Request::decode("{\"op\":\"status\"}").is_err(), "missing job");
+    }
+
+    #[test]
+    fn spec_grammar_parses_chains() {
+        let specs = parse_specs("cholesky:64:16,gemm:64:16:2@1,gemm:64:16@j9").unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0].algo, "cholesky");
+        assert_eq!((specs[0].n, specs[0].block, specs[0].class), (64, 16, 0));
+        assert_eq!(specs[0].chain, None);
+        assert_eq!(specs[1].class, 2);
+        assert_eq!(specs[1].chain, Some(ChainRef::Index(1)));
+        assert_eq!(specs[2].chain, Some(ChainRef::Job(JobId(9))));
+        // Forward/self references and malformed entries are rejected.
+        assert!(parse_specs("gemm:16:8@1").is_err(), "forward reference");
+        assert!(parse_specs("cholesky:16:8,gemm:16:8@3").is_err());
+        assert!(parse_specs("cholesky:16").is_err());
+        assert!(parse_specs("cholesky:16:8@x").is_err());
+        assert!(parse_specs("cholesky:16:8@j").is_err());
+    }
+
+    #[test]
+    fn job_token_parses() {
+        assert_eq!(parse_job_token("j3").unwrap(), JobId(3));
+        assert_eq!(parse_job_token("17").unwrap(), JobId(17));
+        assert!(parse_job_token("job3").is_err());
+        assert!(parse_job_token("").is_err());
+    }
+}

@@ -26,6 +26,23 @@
 //!   scheduling class, per-job metrics.
 //! * [`propagate`] — the idempotent dependency-propagation protocol
 //!   (DESIGN.md §5): lazy counter init + per-edge guarded decrement.
+//!
+//! **The in-flight slot contract (quota + GC barrier).** Every claimed
+//! task holds one of its job's fleet-wide in-flight slots
+//! ([`JobContext::claim_slot`] / [`JobContext::release_slot`]) from
+//! the moment the worker commits to the delivery until the task leaves
+//! the write stage — on every exit path: success, error, transient
+//! abandon, kill-drain, and the sealed-job drop. That single counter
+//! serves two masters. As the *quota* gate, a job at
+//! [`JobContext::max_inflight`] is skipped (the untouched lease
+//! expires and redelivers), so a capped batch job cannot occupy every
+//! pipeline slot. As the *GC barrier*, the job manager's reclamation
+//! sweep waits for the count to drain to zero before deleting any of
+//! the job's keys — combined with the worker's post-claim `is_done`
+//! re-check and the write stage's sealed-job drop, no pipeline stage
+//! can ever read or write a key the GC thread is reclaiming. A missed
+//! `release_slot` would therefore not leak a mere counter: it would
+//! park the namespace's reclamation forever.
 
 pub mod lease;
 pub mod worker;

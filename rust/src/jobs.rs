@@ -26,20 +26,39 @@
 //! wrapper over this service, so the one-shot API (drivers, examples,
 //! benches) is unchanged.
 //!
-//! **Lifecycle (this PR's tentpole):** a long-lived service must not
-//! leak every finished job's `jN/` namespace (the paper's §4
-//! intermediate-state burden). Each job carries a
-//! [`RetentionPolicy`]; when it reaches a terminal state a GC pass
-//! purges its queue residue ([`Queue::purge_prefix`]), deletes its
-//! status/deps/edge KV entries, and reclaims its blob tiles —
-//! deferred until the worker pipeline drains the job's in-flight
-//! tasks and until no downstream job pins the outputs. Dependency
-//! chains ([`JobManager::submit_after`]) gate a child job on upstream
+//! **Lifecycle:** a long-lived service must not leak every finished
+//! job's `jN/` namespace (the paper's §4 intermediate-state burden).
+//! Each job carries a [`RetentionPolicy`]; when it reaches a terminal
+//! state a GC pass purges its queue residue
+//! ([`Queue::purge_prefix`]), deletes its status/deps/edge KV
+//! entries, and reclaims its blob tiles — deferred until the worker
+//! pipeline drains the job's in-flight tasks and until no downstream
+//! job pins the outputs. Dependency chains
+//! ([`JobManager::submit_after`]) gate a child job on upstream
 //! terminal states and map upstream output tiles into the child's
 //! input namespace as read-through aliases (no copy); each chain edge
 //! pins the upstream namespace until the child is terminal, and a
 //! `KeepOutputs` parent is fully reclaimed once its last consumer
 //! finishes.
+//!
+//! **The GC thread + TTL sweeper:** all reclamation I/O runs on one
+//! dedicated background thread (period
+//! [`GcConfig::sweep_interval`](crate::config::GcConfig)), never on
+//! the monitor thread — a shaped (chaos-latency) bulk delete cannot
+//! stall completion detection, timeout enforcement, or dependency-gate
+//! resolution for the other tenants. Reclamation *decisions* stay
+//! lock-scoped (pin table + ticket map); only the substrate I/O
+//! happens lock-free on the GC thread. When
+//! [`GcConfig::ttl`](crate::config::GcConfig) is set, the same thread
+//! also runs the TTL pass: any `jN/` namespace that is not live
+//! (registered, gated, activating, or awaiting its pipeline drain),
+//! not pinned by a downstream consumer, and whose newest blob write
+//! ([`BlobStore::prefix_age`]) is older than the TTL is reclaimed
+//! outright — terminal-but-`KeepAll` jobs, parked `KeepOutputs`
+//! outputs, and orphaned residue alike. That is the in-process
+//! analogue of an S3 lifecycle expiration rule, and what keeps an
+//! unbounded-uptime daemon ([`crate::daemon`]) at steady-state
+//! residency.
 
 use crate::config::{EngineConfig, FailureSpec, RetentionPolicy, ScalingMode};
 use crate::executor::worker::ExitReason;
@@ -55,7 +74,7 @@ use crate::storage::chaos::{blob_put_with_retry, with_blob_retry, CLIENT_BLOB_RE
 use crate::storage::{BlobStore, KvState, Queue, StoreStats};
 use crate::util::prng::Rng;
 use anyhow::{bail, Context, Result};
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeSet, HashMap, HashSet};
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -108,7 +127,10 @@ pub struct JobSpec {
     pub output_matrices: Vec<String>,
     /// Per-job in-flight task quota: at most this many of the job's
     /// tasks claimed by the fleet at once (`None` = unlimited), so a
-    /// capped batch job cannot starve the shared fleet.
+    /// capped batch job cannot starve the shared fleet. A quota of 0
+    /// deliberately parks the job — no task is ever claimed — which is
+    /// a library-level tool (tests use it as a controllable blocker);
+    /// the daemon wire and CLI reject it.
     pub max_inflight: Option<usize>,
 }
 
@@ -178,6 +200,13 @@ pub enum JobStatus {
 
 /// One finished job's report — the per-job half of what used to be the
 /// monolithic `EngineReport`.
+///
+/// Retention: the scalars (status, counts, wall time, error) are kept
+/// for the life of the service, but the bulky profiling vectors
+/// (`samples`, `tasks`) are dropped once the job falls out of the most
+/// recent ~256 sealed jobs — a long-lived daemon must not grow heap
+/// linearly with jobs served. Fetch the report promptly (`wait`
+/// returns it in full) if the profile matters.
 #[derive(Clone, Debug)]
 pub struct JobReport {
     pub job: JobId,
@@ -216,6 +245,39 @@ pub struct FleetReport {
 struct Finished {
     reports: Mutex<HashMap<u64, JobReport>>,
     cv: Condvar,
+    /// Every report with a job id below this has been slimmed (see
+    /// [`REPORT_KEEP_FULL`]). Guarded by the `reports` mutex.
+    slim_below: AtomicU64,
+}
+
+/// How many of the most recent jobs keep their *full* report (sample
+/// series + per-task records). An unbounded-uptime service must not
+/// grow heap linearly with jobs served, so older reports are slimmed
+/// down to their scalars — status, counts, wall time, and error all
+/// survive (`status`/`wait` semantics are unchanged), only the bulky
+/// profiling vectors are dropped. Job ids are monotonic, so "oldest"
+/// is simply "smallest id".
+const REPORT_KEEP_FULL: u64 = 256;
+
+/// Insert a sealed job's report and slim reports that have aged past
+/// the full-fidelity window. The watermark makes this amortized O(1):
+/// each report is slimmed at most once.
+fn seal_report(finished: &Finished, report: JobReport) {
+    let id = report.job.0;
+    let mut reports = finished.reports.lock().unwrap();
+    reports.insert(id, report);
+    let threshold = id.saturating_sub(REPORT_KEEP_FULL);
+    let from = finished.slim_below.load(Ordering::Relaxed);
+    if threshold > from {
+        for old in from..threshold {
+            if let Some(r) = reports.get_mut(&old) {
+                r.samples = Vec::new();
+                r.tasks = Vec::new();
+            }
+        }
+        finished.slim_below.store(threshold, Ordering::Relaxed);
+    }
+    finished.cv.notify_all();
 }
 
 /// A job accepted by `submit_after` whose upstream dependencies have
@@ -366,6 +428,7 @@ pub struct JobManager {
     next_job: AtomicU64,
     provisioner: Option<JoinHandle<()>>,
     monitor: Option<JoinHandle<()>>,
+    gc: Option<JoinHandle<()>>,
     sampler: Option<JoinHandle<()>>,
     failer: Option<JoinHandle<usize>>,
 }
@@ -382,6 +445,7 @@ impl JobManager {
         let finished = Arc::new(Finished {
             reports: Mutex::new(HashMap::new()),
             cv: Condvar::new(),
+            slim_below: AtomicU64::new(0),
         });
         let lifecycle = Arc::new(Lifecycle::default());
         let pool = WorkerPool::default();
@@ -408,6 +472,7 @@ impl JobManager {
             finished.clone(),
             lifecycle.clone(),
         ));
+        let gc = Some(spawn_gc(fleet.clone(), lifecycle.clone()));
         let sampler = Some(spawn_sampler(fleet.clone()));
         let failer = fleet.cfg.failure.map(|spec| spawn_failer(fleet.clone(), spec));
         JobManager {
@@ -418,6 +483,7 @@ impl JobManager {
             next_job: AtomicU64::new(1),
             provisioner,
             monitor,
+            gc,
             sampler,
             failer,
         }
@@ -546,10 +612,17 @@ impl JobManager {
             return Ok(job);
         }
         // All dependencies satisfied (or none): activate immediately on
-        // the caller's thread, exactly like a plain submit.
+        // the caller's thread, exactly like a plain submit. The job
+        // sits in the activating set for the duration — seeding writes
+        // land in the store before the context registers, and the TTL
+        // sweeper must not mistake that half-seeded namespace for
+        // expired orphan residue.
         let dep_ids = pending.deps.clone();
         let import_deps = pending.import_deps();
-        match activate_job(&self.fleet, pending) {
+        self.lifecycle.activating.lock().unwrap().insert(job.0);
+        let activated = activate_job(&self.fleet, pending);
+        self.lifecycle.activating.lock().unwrap().remove(&job.0);
+        match activated {
             Ok(()) => {
                 // Only a successfully-activated child counts as a
                 // consumer of its upstreams' outputs.
@@ -729,6 +802,11 @@ impl JobManager {
         let activations: Vec<JoinHandle<()>> =
             std::mem::take(&mut *self.lifecycle.activations.lock().unwrap());
         for h in activations {
+            let _ = h.join();
+        }
+        // The GC thread exits on the shutdown flag; join it before the
+        // final sweep below so two sweeps never run concurrently.
+        if let Some(h) = self.gc.take() {
             let _ = h.join();
         }
         if let Some(h) = self.provisioner.take() {
@@ -911,11 +989,7 @@ fn seal_unstarted(
         canceled,
         error: Some(error),
     };
-    {
-        let mut reports = finished.reports.lock().unwrap();
-        reports.insert(id.job.0, report);
-        finished.cv.notify_all();
-    }
+    seal_report(finished, report);
     lifecycle.on_terminal(&id.deps);
 }
 
@@ -1047,10 +1121,10 @@ fn resolve_pending(fleet: &Arc<FleetContext>, finished: &Arc<Finished>, lifecycl
 ///
 /// Reclamation decisions are made under the pin-table lock (so a
 /// concurrent `submit_after` can never import from a namespace about
-/// to vanish), but the blob I/O itself — which pays shaped chaos
-/// latency per op — runs after the locks are released. It still
-/// occupies the monitor thread; a dedicated background GC thread is
-/// the recorded next step if sweep volume ever warrants it.
+/// to vanish), but the substrate I/O itself — which pays shaped chaos
+/// latency per op — runs after the locks are released, on the
+/// dedicated GC thread ([`spawn_gc`]): the monitor thread never
+/// touches a blob.
 fn sweep_gc(fleet: &FleetContext, lifecycle: &Lifecycle) {
     let drained: Vec<Arc<JobContext>> = {
         let mut deferred = lifecycle.deferred.lock().unwrap();
@@ -1158,10 +1232,162 @@ fn sweep_gc(fleet: &FleetContext, lifecycle: &Lifecycle) {
     }
 }
 
+/// Strip a namespaced key (`j12/S[0,0]`) or a bare namespace prefix
+/// down to its job id; `None` for anything not `j<digits>/…`-shaped.
+fn parse_namespace(key: &str) -> Option<u64> {
+    let digits = key.strip_prefix('j')?;
+    let end = digits.find('/')?;
+    digits[..end].parse().ok()
+}
+
+/// The TTL pass (ROADMAP "TTL-based background sweeper"): reclaim
+/// namespaces the retention sweep never touches — terminal `KeepAll`
+/// jobs, parked `KeepOutputs` outputs, and orphaned `jN/` residue —
+/// once their write-idle age ([`BlobStore::prefix_age`]) exceeds
+/// [`GcConfig::ttl`](crate::config::GcConfig). Live namespaces
+/// (registered, gated, activating, or awaiting their pipeline drain)
+/// and pinned namespaces (an unfinished chain consumer may still read
+/// the tiles) are immune. Runs only on the GC thread.
+///
+/// Eventual-consistency note: a `KeepAll` job sealed moments ago has
+/// no pipeline-drain barrier here (only retention GC tracks deferred
+/// contexts), so with a TTL shorter than a task's pipeline residence a
+/// straggling claimed task can transiently recreate a key after the
+/// sweep. That is benign — workers drop all effects of done jobs at
+/// the next check, recreated keys restart the namespace's age clock,
+/// and the following pass collects them. Size the TTL well above task
+/// latency (seconds-to-hours in practice; the config default is off).
+fn ttl_sweep(fleet: &FleetContext, lifecycle: &Lifecycle) {
+    let Some(ttl) = fleet.cfg.gc.ttl else { return };
+    // Candidates: every namespace with blob or KV residue, with blob
+    // ages collected in ONE store walk ([`BlobStore::prefix_ages`]) —
+    // not one `prefix_age` scan per namespace. (A sealed job's queue
+    // residue cannot outlive its KV/blob state — workers
+    // drop-and-delete unregistered jobs' messages, and the retention
+    // sweep bulk-purges.)
+    let mut ages: HashMap<u64, Duration> = HashMap::new();
+    for (prefix, age) in fleet.store.prefix_ages('/') {
+        if let Some(ns) = parse_namespace(&prefix) {
+            ages.insert(ns, age);
+        }
+    }
+    let mut namespaces: BTreeSet<u64> = ages.keys().copied().collect();
+    for key in fleet.state.scan_prefix("j") {
+        if let Some(ns) = parse_namespace(&key) {
+            namespaces.insert(ns);
+        }
+    }
+    // One snapshot of the drain-deferred set for the whole pass (a
+    // per-candidate re-lock would be no more consistent and costs a
+    // mutex round-trip per namespace).
+    let deferred: HashSet<u64> = {
+        let d = lifecycle.deferred.lock().unwrap();
+        d.iter().map(|c| c.job.0).collect()
+    };
+    let mut expired: Vec<u64> = Vec::new();
+    for ns in namespaces {
+        let job = JobId(ns);
+        // Live jobs are immune: registered (running), gated, or
+        // mid-activation (seeding writes precede registration, so a
+        // half-seeded namespace would otherwise look orphaned). Every
+        // submit path inserts into `activating` *before* the first
+        // seeding put, so this check cannot race a fresh activation.
+        if fleet.job(ns).is_some() || lifecycle.is_pending(job) {
+            continue;
+        }
+        if deferred.contains(&ns) {
+            continue;
+        }
+        // Age gate: time since the newest blob write. A terminal job
+        // stops writing, so this is its time-since-finish. A namespace
+        // with KV residue but no blobs at all has already lost its
+        // tiles — nothing left to age, reclaim the residue outright.
+        if let Some(age) = ages.get(&ns) {
+            if *age < ttl {
+                continue;
+            }
+        }
+        expired.push(ns);
+    }
+    if expired.is_empty() {
+        return;
+    }
+    // Decide under the pin-table lock (same discipline as stage 2): a
+    // pinned namespace waits for its last consumer, and the reclaimed
+    // mark lands before any delete so a concurrent `submit_after` can
+    // never pin a namespace that is about to vanish.
+    let reclaim: Vec<(u64, String)> = {
+        let mut pins = lifecycle.pins.lock().unwrap();
+        let mut awaiting = lifecycle.awaiting.lock().unwrap();
+        expired.retain(|ns| pins.entries.get(ns).is_none_or(|e| e.pins == 0));
+        expired
+            .iter()
+            .map(|ns| {
+                pins.reclaimed.insert(*ns);
+                pins.entries.remove(ns);
+                awaiting.remove(ns);
+                (*ns, job_prefix(JobId(*ns)))
+            })
+            .collect()
+    };
+    // The substrate I/O runs outside every lock.
+    for (ns, prefix) in reclaim {
+        fleet.queue.purge_prefix(&format!("{ns}|"));
+        fleet.state.delete_prefix(&prefix);
+        fleet.store.delete_prefix(&prefix);
+    }
+}
+
+/// The TTL pass is a full-store scan, so it runs on its own (longer)
+/// cadence than the cheap retention sweep: a tenth of the TTL keeps
+/// reclamation latency well under the policy delay while bounding the
+/// scan cost, clamped to the sweep tick below and one minute above.
+fn ttl_pass_period(gc: &crate::config::GcConfig) -> Option<Duration> {
+    let lo = gc.sweep_interval;
+    let hi = Duration::from_secs(60).max(lo);
+    gc.ttl.map(|ttl| (ttl / 10).clamp(lo, hi))
+}
+
+/// The dedicated GC thread: every
+/// [`GcConfig::sweep_interval`](crate::config::GcConfig) tick it runs
+/// the two-stage retention sweep, plus the TTL pass on its
+/// rate-limited cadence ([`ttl_pass_period`]). All namespace
+/// reclamation I/O lives here — the monitor thread only makes
+/// seal/gate decisions, so a shaped (chaos-latency) bulk delete can
+/// never delay completion detection for other tenants.
+fn spawn_gc(fleet: Arc<FleetContext>, lifecycle: Arc<Lifecycle>) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        let period = fleet.cfg.gc.sweep_interval;
+        let ttl_period = ttl_pass_period(&fleet.cfg.gc);
+        let mut last_ttl = Instant::now();
+        while !fleet.is_shutdown() {
+            sweep_gc(&fleet, &lifecycle);
+            if let Some(tp) = ttl_period {
+                if last_ttl.elapsed() >= tp {
+                    last_ttl = Instant::now();
+                    ttl_sweep(&fleet, &lifecycle);
+                }
+            }
+            // Sliced sleep: shutdown must never stall behind a long
+            // sweep interval (`--gc-interval 60` would otherwise hang
+            // every shutdown join for a minute).
+            let deadline = Instant::now() + period;
+            while !fleet.is_shutdown() {
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                std::thread::sleep(left.min(Duration::from_millis(20)));
+            }
+        }
+    })
+}
+
 /// The completion monitor: one thread watching every active job for
 /// completion, fatal error, per-job timeout, or cancellation — the
 /// multi-tenant descendant of `Engine::run`'s inline wait loop — plus
-/// the dependency-gate resolver and the GC sweep.
+/// the dependency-gate resolver. (Namespace reclamation lives on the
+/// dedicated GC thread — see [`spawn_gc`].)
 fn spawn_monitor(
     fleet: Arc<FleetContext>,
     finished: Arc<Finished>,
@@ -1192,7 +1418,6 @@ fn spawn_monitor(
                 }
             }
             resolve_pending(&fleet, &finished, &lifecycle);
-            sweep_gc(&fleet, &lifecycle);
             std::thread::sleep(Duration::from_millis(2));
         }
     })
@@ -1233,11 +1458,7 @@ fn finish_job(
         canceled: ctx.is_canceled(),
         error,
     };
-    {
-        let mut reports = finished.reports.lock().unwrap();
-        reports.insert(ctx.job.0, report);
-        finished.cv.notify_all();
-    }
+    seal_report(finished, report);
     fleet.unregister(ctx.job);
     // Release this job's pins on its upstreams, and queue its own
     // namespace for reclamation (the sweep waits for the worker
@@ -1344,6 +1565,92 @@ mod tests {
     fn job_id_display_and_prefix() {
         assert_eq!(JobId(3).to_string(), "j3");
         assert_eq!(job_prefix(JobId(3)), "j3/");
+    }
+
+    #[test]
+    fn seal_report_slims_reports_past_the_window() {
+        let finished = Finished {
+            reports: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+            slim_below: AtomicU64::new(0),
+        };
+        let mk = |id: u64| JobReport {
+            job: JobId(id),
+            label: "t".into(),
+            priority_class: 0,
+            wall_secs: 0.5,
+            total_tasks: 1,
+            completed: 1,
+            total_flops: 7,
+            samples: vec![Sample {
+                t: 0.0,
+                pending: 0,
+                workers: 1,
+                running: 1,
+                completed: 0,
+                flops: 0,
+            }],
+            tasks: Vec::new(),
+            canceled: false,
+            error: None,
+        };
+        let newest = REPORT_KEEP_FULL + 10;
+        for id in 1..=newest {
+            seal_report(&finished, mk(id));
+        }
+        let reports = finished.reports.lock().unwrap();
+        // Past the window: profiling vectors dropped, scalars intact.
+        assert!(reports[&1].samples.is_empty(), "old report slimmed");
+        assert_eq!(reports[&1].completed, 1);
+        assert_eq!(reports[&1].total_flops, 7);
+        // Window boundary and newest stay full-fidelity.
+        assert!(!reports[&(newest - REPORT_KEEP_FULL)].samples.is_empty());
+        assert!(!reports[&newest].samples.is_empty());
+    }
+
+    #[test]
+    fn namespace_parse_roundtrip() {
+        assert_eq!(parse_namespace("j3/S[0,0,0]"), Some(3));
+        assert_eq!(parse_namespace("j12/"), Some(12));
+        assert_eq!(parse_namespace("j12/deps:1@i=0"), Some(12));
+        assert_eq!(parse_namespace("J3/S"), None);
+        assert_eq!(parse_namespace("j3"), None, "no slash, no namespace");
+        assert_eq!(parse_namespace("jx/S"), None);
+        assert_eq!(parse_namespace("other/key"), None);
+    }
+
+    #[test]
+    fn ttl_sweep_reclaims_expired_keepall_namespace() {
+        // A finished KeepAll job's namespace must expire once its
+        // write-idle age passes the TTL — the retention sweep alone
+        // would keep it forever.
+        let mut cfg = fixed_cfg(2);
+        cfg.gc.ttl = Some(Duration::from_millis(150));
+        cfg.gc.sweep_interval = Duration::from_millis(5);
+        let mgr = JobManager::new(cfg);
+        let (spec, _a) = tiny_cholesky_spec(16, 31);
+        let job = mgr.submit(spec).unwrap();
+        let r = mgr.wait(job).unwrap();
+        assert_eq!(r.completed, r.total_tasks);
+        assert!(mgr.tile(job, "O", &[0, 0]).is_ok(), "fresh outputs live");
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while Instant::now() < deadline {
+            if mgr.store().scan_prefix("j1/").is_empty()
+                && mgr.state().scan_prefix("j1/").is_empty()
+            {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(mgr.store().scan_prefix("j1/").is_empty(), "blobs expired");
+        assert!(mgr.state().scan_prefix("j1/").is_empty(), "kv expired");
+        // The report survives the namespace: status stays terminal.
+        assert_eq!(mgr.status(job), JobStatus::Succeeded);
+        assert!(mgr.tile(job, "O", &[0, 0]).is_err(), "tiles are gone");
+        // New jobs still run on the swept substrate.
+        let (spec2, _) = tiny_cholesky_spec(16, 32);
+        let job2 = mgr.submit(spec2).unwrap();
+        assert!(mgr.wait(job2).unwrap().error.is_none());
     }
 
     #[test]

@@ -36,7 +36,15 @@
 //!   priorities, per-job in-flight quotas, dependency chains
 //!   (`submit_after` + read-through tile imports), and retention-policy
 //!   namespace GC (a finished job's tiles, control state, and queue
-//!   residue are reclaimed through the substrate's lifecycle ops).
+//!   residue are reclaimed through the substrate's lifecycle ops) run
+//!   on a dedicated GC thread, alongside the TTL sweeper that expires
+//!   kept/orphaned namespaces by write-idle age
+//!   ([`config::GcConfig`]).
+//! * [`daemon`] — long-lived service mode (`numpywren serve`): one
+//!   `JobManager` serving many clients over a durable file-based
+//!   command queue (spool directory of JSON requests), with a client
+//!   half (`numpywren submit/status/cancel/shutdown --daemon-dir …`)
+//!   so several shells feed one shared fleet.
 //! * [`provisioner`] — the auto-scaling policy (`sf` scale-up factor,
 //!   `T_timeout` idle scale-down), sized from the aggregate queue
 //!   depth across all jobs.
@@ -62,6 +70,7 @@
 pub mod baselines;
 pub mod cli;
 pub mod config;
+pub mod daemon;
 pub mod drivers;
 pub mod engine;
 pub mod executor;
@@ -77,6 +86,7 @@ pub mod storage;
 pub mod util;
 
 pub use config::EngineConfig;
+pub use daemon::{Daemon, DaemonClient};
 pub use engine::{Engine, EngineReport};
 pub use jobs::{FleetReport, JobId, JobManager, JobReport, JobSpec, JobStatus};
 pub use lambdapack::{analysis::Analyzer, ast::Program, programs};

@@ -477,6 +477,16 @@ impl BlobStore for ChaosBlobStore {
         self.inner.delete_prefix(prefix)
     }
 
+    fn prefix_age(&self, prefix: &str) -> Option<Duration> {
+        // Control-plane metadata reads (like `len`): pass through
+        // unshaped and unfaulted — the TTL sweeper's polling surface.
+        self.inner.prefix_age(prefix)
+    }
+
+    fn prefix_ages(&self, delimiter: char) -> Vec<(String, Duration)> {
+        self.inner.prefix_ages(delimiter)
+    }
+
     fn len(&self) -> usize {
         self.inner.len()
     }

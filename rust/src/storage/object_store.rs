@@ -17,11 +17,11 @@
 //!   family became the default.
 
 use crate::linalg::matrix::Matrix;
-use crate::storage::traits::{BlobStore, StoreStats, TransferAccounting};
+use crate::storage::traits::{BlobStore, PrefixAges, StoreStats, Stored, TransferAccounting};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// The store. Cheap to clone (Arc-shared).
 #[derive(Clone)]
@@ -30,7 +30,7 @@ pub struct StrictBlobStore {
 }
 
 struct Inner {
-    map: RwLock<HashMap<String, Arc<Matrix>>>,
+    map: RwLock<HashMap<String, Stored>>,
     accounting: TransferAccounting,
     /// Injected latency per operation (simulates S3's ~10 ms).
     latency: Duration,
@@ -91,11 +91,11 @@ impl BlobStore for StrictBlobStore {
             if let Some(old) = map.get(key) {
                 // SSA: a rewrite must be byte-identical (idempotent
                 // re-execution) — enforced in strict mode.
-                if self.inner.strict_ssa && old.as_ref() != &value {
+                if self.inner.strict_ssa && old.tile.as_ref() != &value {
                     panic!("SSA violation: key `{key}` rewritten with different contents");
                 }
             }
-            map.insert(key.to_string(), Arc::new(value));
+            map.insert(key.to_string(), Stored::new(value));
         }
         self.inner.accounting.record_put(worker, bytes);
         Ok(())
@@ -109,7 +109,7 @@ impl BlobStore for StrictBlobStore {
             .read()
             .unwrap()
             .get(key)
-            .cloned()
+            .map(|s| s.tile.clone())
             .with_context(|| format!("object-store key `{key}` not found"))?;
         let bytes = (v.rows() * v.cols() * 8) as u64;
         self.inner.accounting.record_get(worker, bytes);
@@ -140,6 +140,26 @@ impl BlobStore for StrictBlobStore {
         let before = map.len();
         map.retain(|k, _| !k.starts_with(prefix));
         before - map.len()
+    }
+
+    fn prefix_age(&self, prefix: &str) -> Option<Duration> {
+        let now = Instant::now();
+        self.inner
+            .map
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(_, s)| now.saturating_duration_since(s.written))
+            .min()
+    }
+
+    fn prefix_ages(&self, delimiter: char) -> Vec<(String, Duration)> {
+        let mut acc = PrefixAges::new(delimiter);
+        for (k, s) in self.inner.map.read().unwrap().iter() {
+            acc.observe(k, s.written);
+        }
+        acc.finish()
     }
 
     fn len(&self) -> usize {
@@ -248,6 +268,30 @@ mod tests {
         assert_eq!(s.delete_prefix("j1/"), 0, "idempotent");
         assert_eq!(s.len(), 1, "other namespaces untouched");
         assert!(s.contains("j2/T[0]"));
+    }
+
+    #[test]
+    fn prefix_age_tracks_newest_write_only() {
+        let s = StrictBlobStore::new();
+        assert_eq!(s.prefix_age("j1/"), None, "no keys, no age");
+        s.put(0, "j1/T[0]", Matrix::zeros(1, 1)).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        let aged = s.prefix_age("j1/").unwrap();
+        assert!(aged >= Duration::from_millis(10));
+        // A read must not refresh the namespace.
+        s.get(0, "j1/T[0]").unwrap();
+        assert!(s.prefix_age("j1/").unwrap() >= Duration::from_millis(10));
+        // A new write resets the age to the newest object.
+        s.put(0, "j1/T[1]", Matrix::zeros(1, 1)).unwrap();
+        assert!(s.prefix_age("j1/").unwrap() < aged);
+        assert_eq!(s.prefix_age("j2/"), None);
+        // Bulk form: one scan, grouped by delimiter, delimiter-less
+        // keys skipped.
+        s.put(0, "j2/T[0]", Matrix::zeros(1, 1)).unwrap();
+        s.put(0, "loose-key", Matrix::zeros(1, 1)).unwrap();
+        let ages = s.prefix_ages('/');
+        let names: Vec<&str> = ages.iter().map(|(p, _)| p.as_str()).collect();
+        assert_eq!(names, vec!["j1/", "j2/"]);
     }
 
     #[test]

@@ -18,9 +18,9 @@
 //!
 //! Time is injectable (a [`Clock`]) so fault-tolerance tests can expire
 //! leases deterministically and the simulator can reuse the semantics.
-//! The message/heap mechanics live in
-//! [`QueueCore`](crate::storage::queue_core::QueueCore), shared with
-//! the sharded backend.
+//! The message/heap mechanics live in `QueueCore`
+//! (`storage::queue_core`, crate-private), shared with the sharded
+//! backend.
 
 use crate::storage::clock::{Clock, WallClock};
 use crate::storage::queue_core::QueueCore;

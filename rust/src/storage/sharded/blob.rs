@@ -8,13 +8,13 @@
 
 use crate::linalg::matrix::Matrix;
 use crate::storage::sharded::shard_of;
-use crate::storage::traits::{BlobStore, StoreStats, TransferAccounting};
+use crate::storage::traits::{BlobStore, PrefixAges, StoreStats, Stored, TransferAccounting};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-type Shard = RwLock<HashMap<String, Arc<Matrix>>>;
+type Shard = RwLock<HashMap<String, Stored>>;
 
 /// The store. Cheap to clone (Arc-shared).
 #[derive(Clone)]
@@ -61,10 +61,7 @@ impl BlobStore for ShardedBlobStore {
     fn put(&self, worker: usize, key: &str, value: Matrix) -> Result<()> {
         self.latency();
         let bytes = (value.rows() * value.cols() * 8) as u64;
-        self.shard(key)
-            .write()
-            .unwrap()
-            .insert(key.to_string(), Arc::new(value));
+        self.shard(key).write().unwrap().insert(key.to_string(), Stored::new(value));
         self.inner.accounting.record_put(worker, bytes);
         Ok(())
     }
@@ -76,7 +73,7 @@ impl BlobStore for ShardedBlobStore {
             .read()
             .unwrap()
             .get(key)
-            .cloned()
+            .map(|s| s.tile.clone())
             .with_context(|| format!("object-store key `{key}` not found"))?;
         let bytes = (v.rows() * v.cols() * 8) as u64;
         self.inner.accounting.record_get(worker, bytes);
@@ -118,6 +115,36 @@ impl BlobStore for ShardedBlobStore {
             removed += before - map.len();
         }
         removed
+    }
+
+    fn prefix_age(&self, prefix: &str) -> Option<Duration> {
+        // Per-shard sweep, min over the per-key ages = time since the
+        // newest write anywhere under the prefix.
+        let now = Instant::now();
+        let mut age: Option<Duration> = None;
+        for shard in &self.inner.shards {
+            for (k, s) in shard.read().unwrap().iter() {
+                if k.starts_with(prefix) {
+                    let a = now.saturating_duration_since(s.written);
+                    if age.is_none_or(|cur| a < cur) {
+                        age = Some(a);
+                    }
+                }
+            }
+        }
+        age
+    }
+
+    fn prefix_ages(&self, delimiter: char) -> Vec<(String, Duration)> {
+        // One pass over every shard, merging per-namespace minima
+        // (keys of one namespace hash across all shards).
+        let mut acc = PrefixAges::new(delimiter);
+        for shard in &self.inner.shards {
+            for (k, s) in shard.read().unwrap().iter() {
+                acc.observe(k, s.written);
+            }
+        }
+        acc.finish()
     }
 
     fn len(&self) -> usize {
@@ -203,6 +230,30 @@ mod tests {
             assert_eq!(s.len(), 8, "[{n} shards] j2 untouched");
             assert_eq!(s.delete_prefix(""), 8, "[{n} shards] full sweep");
             assert!(s.is_empty());
+        }
+    }
+
+    #[test]
+    fn prefix_age_spans_shards() {
+        for n in [1usize, 4, 16] {
+            let s = ShardedBlobStore::new(n);
+            assert_eq!(s.prefix_age("j1/"), None, "[{n} shards]");
+            for k in 0..6 {
+                s.put(0, &format!("j1/T[{k}]"), Matrix::zeros(1, 1)).unwrap();
+            }
+            std::thread::sleep(Duration::from_millis(8));
+            let aged = s.prefix_age("j1/").unwrap();
+            assert!(aged >= Duration::from_millis(8), "[{n} shards]");
+            // Refreshing any one key rejuvenates the whole namespace.
+            s.put(0, "j1/T[3]", Matrix::zeros(1, 1)).unwrap();
+            assert!(s.prefix_age("j1/").unwrap() < aged, "[{n} shards]");
+            // Bulk form merges per-shard minima into one sorted list.
+            s.put(0, "j2/T[0]", Matrix::zeros(1, 1)).unwrap();
+            let ages = s.prefix_ages('/');
+            let names: Vec<&str> = ages.iter().map(|(p, _)| p.as_str()).collect();
+            assert_eq!(names, vec!["j1/", "j2/"], "[{n} shards]");
+            let diff = s.prefix_age("j1/").unwrap().abs_diff(ages[0].1);
+            assert!(diff < Duration::from_millis(50), "[{n} shards] {diff:?}");
         }
     }
 

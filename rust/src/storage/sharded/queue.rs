@@ -15,7 +15,7 @@
 //! globally exact (that configuration is what the ordering conformance
 //! tests pin down). At-least-once, visibility timeouts, and lease
 //! staleness behave identically to the strict backend — the per-shard
-//! mechanics are the shared [`QueueCore`].
+//! mechanics are the shared crate-private `QueueCore`.
 //!
 //! Blocking receives park on an epoch counter + condvar: `send` bumps
 //! an atomic epoch, and a receiver only sleeps if the epoch has not

@@ -31,17 +31,48 @@
 //! can reclaim a finished job's `jN/` namespace — dead intermediate
 //! tiles, status/deps/edge entries, and queue residue — instead of
 //! leaking it for the life of the service (§4's intermediate-state
-//! burden). The prefix ops return counts so callers can assert exact
-//! reclamation. `scan_prefix` returns sorted keys (deterministic
-//! across backends); prefix sweeps need no cross-key atomicity — the
-//! caller guarantees the namespace is quiescent before sweeping.
+//! burden).
+//!
+//! The lifecycle contracts, precisely (the conformance suite pins each
+//! one):
+//!
+//! * **Prefix-op counts.** `delete_prefix` returns the number of
+//!   entries it actually removed — objects for [`BlobStore`], entries
+//!   for [`KvState`] (a key present in both the string-KV and counter
+//!   spaces counts *twice*; job namespaces keep the two disjoint so in
+//!   practice counts equal keys), messages for
+//!   [`Queue::purge_prefix`]. Callers assert exact reclamation
+//!   against these counts (the leak checks in `tests/multi_job.rs` and
+//!   the `perf_gc` bench), so a backend must not over- or
+//!   under-report. Repeating a sweep returns 0 — the ops are
+//!   idempotent and infallible (the chaos layer shapes their latency
+//!   but never faults them; an S3 lifecycle rule has no error path
+//!   either).
+//! * **Lease-goes-stale purge semantics.** [`Queue::purge_prefix`]
+//!   removes matching messages *whether or not they are currently
+//!   leased*. A lease held on a purged message goes stale: subsequent
+//!   [`Queue::renew`]/[`Queue::delete`] on it return `false`, exactly
+//!   as if the message had been redelivered to someone else. Workers
+//!   already tolerate stale leases (the §4.1 at-least-once protocol),
+//!   so the GC can drain a sealed job's backlog in one call without
+//!   coordinating with the fleet.
+//! * **Scan determinism.** `scan_prefix` returns sorted keys on every
+//!   backend, so sweeps and leak checks are deterministic regardless
+//!   of shard layout. Prefix sweeps need no cross-key atomicity — the
+//!   caller guarantees the namespace is quiescent (the job manager's
+//!   in-flight barrier) before sweeping.
+//! * **Namespace age.** [`BlobStore::prefix_age`] reports the time
+//!   since the newest `put` under a prefix (reads never refresh it) —
+//!   S3's per-object `LastModified` reduced to a max-over-prefix.
+//!   This is the TTL sweeper's idle signal: a terminal job stops
+//!   writing, so write-idle age ≈ time since it finished.
 
 use crate::linalg::matrix::Matrix;
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Aggregate transfer statistics.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -88,6 +119,24 @@ pub trait BlobStore: Send + Sync {
     /// objects removed (callers assert reclamation against it). The
     /// analogue of an S3 lifecycle sweep: infallible and idempotent.
     fn delete_prefix(&self, prefix: &str) -> usize;
+
+    /// Time since the most recent `put` under `prefix` (the
+    /// namespace's write-idle age), or `None` when no key matches.
+    /// Only writes refresh the timestamp — reads leave it untouched,
+    /// mirroring S3 `LastModified`. Control-plane op (no latency or
+    /// accounting).
+    fn prefix_age(&self, prefix: &str) -> Option<Duration>;
+
+    /// Every namespace's write-idle age from **one** scan: keys are
+    /// grouped by their prefix up to and including the first
+    /// `delimiter` (keys without it are skipped), and each group
+    /// reports the same quantity as [`BlobStore::prefix_age`] — time
+    /// since its newest write. Sorted by prefix. The S3 analogue is
+    /// `ListObjectsV2` with a delimiter, reading `LastModified` across
+    /// each common prefix; the TTL sweeper uses this instead of one
+    /// `prefix_age` call per namespace so a sweep pass costs one store
+    /// walk, not one per resident namespace. Control-plane op.
+    fn prefix_ages(&self, delimiter: char) -> Vec<(String, Duration)>;
 
     /// Number of stored objects.
     fn len(&self) -> usize;
@@ -213,6 +262,62 @@ pub trait KvState: Send + Sync {
 
     /// Total operations served (control-plane load metric).
     fn op_count(&self) -> u64;
+}
+
+/// One stored object of the in-process blob backends: the tile plus
+/// its last-write time — the `LastModified` analogue behind
+/// [`BlobStore::prefix_age`]/[`BlobStore::prefix_ages`]. Shared so the
+/// strict and sharded backends cannot drift on age semantics.
+pub(crate) struct Stored {
+    pub(crate) tile: Arc<Matrix>,
+    pub(crate) written: Instant,
+}
+
+impl Stored {
+    pub(crate) fn new(tile: Matrix) -> Stored {
+        Stored {
+            tile: Arc::new(tile),
+            written: Instant::now(),
+        }
+    }
+}
+
+/// The shared [`BlobStore::prefix_ages`] kernel: fold `(key, written)`
+/// observations into per-namespace write-idle minima. Keys are grouped
+/// by their prefix up to and including the first `delimiter`; keys
+/// without it are skipped. `finish` returns the groups sorted.
+pub(crate) struct PrefixAges {
+    now: Instant,
+    delimiter: char,
+    ages: BTreeMap<String, Duration>,
+}
+
+impl PrefixAges {
+    pub(crate) fn new(delimiter: char) -> PrefixAges {
+        PrefixAges {
+            now: Instant::now(),
+            delimiter,
+            ages: BTreeMap::new(),
+        }
+    }
+
+    pub(crate) fn observe(&mut self, key: &str, written: Instant) {
+        let Some(end) = key.find(self.delimiter) else {
+            return;
+        };
+        let age = self.now.saturating_duration_since(written);
+        let ns = &key[..end + self.delimiter.len_utf8()];
+        match self.ages.get_mut(ns) {
+            Some(cur) => *cur = (*cur).min(age),
+            None => {
+                self.ages.insert(ns.to_string(), age);
+            }
+        }
+    }
+
+    pub(crate) fn finish(self) -> Vec<(String, Duration)> {
+        self.ages.into_iter().collect()
+    }
 }
 
 /// Byte/op counters shared by the blob-store backends.

@@ -333,6 +333,49 @@ fn blob_delete_scan_delete_prefix_contract() {
 }
 
 #[test]
+fn blob_prefix_age_contract() {
+    // The TTL sweeper's age signal: `None` for an empty namespace,
+    // monotone-growing while write-idle, refreshed only by writes
+    // (reads must not rejuvenate), scoped to the prefix.
+    for (spec, sub, _) in backends() {
+        let blob = sub.blob;
+        assert_eq!(blob.prefix_age("j1/"), None, "[{spec}] empty = ageless");
+        blob.put(0, "j1/T[0]", Matrix::zeros(1, 1)).unwrap();
+        blob.put(0, "j2/T[0]", Matrix::zeros(1, 1)).unwrap();
+        std::thread::sleep(Duration::from_millis(15));
+        let aged = blob.prefix_age("j1/").unwrap();
+        assert!(aged >= Duration::from_millis(15), "[{spec}] {aged:?}");
+        blob.get(0, "j1/T[0]").unwrap();
+        assert!(
+            blob.prefix_age("j1/").unwrap() >= Duration::from_millis(15),
+            "[{spec}] a read must not refresh the age"
+        );
+        // A write anywhere under the prefix rejuvenates it; the
+        // neighbor namespace keeps its own clock.
+        blob.put(0, "j1/T[1]", Matrix::zeros(1, 1)).unwrap();
+        assert!(blob.prefix_age("j1/").unwrap() < aged, "[{spec}]");
+        assert!(
+            blob.prefix_age("j2/").unwrap() >= Duration::from_millis(15),
+            "[{spec}] neighbor unaffected"
+        );
+        // The one-scan bulk form agrees with per-prefix queries:
+        // sorted, grouped by the delimiter, same ages.
+        let ages = blob.prefix_ages('/');
+        let names: Vec<&str> = ages.iter().map(|(p, _)| p.as_str()).collect();
+        assert_eq!(names, vec!["j1/", "j2/"], "[{spec}]");
+        for (prefix, age) in &ages {
+            let single = blob.prefix_age(prefix).unwrap();
+            let diff = single.abs_diff(*age);
+            assert!(diff < Duration::from_millis(50), "[{spec}] {prefix}: {single:?} vs {age:?}");
+        }
+        // Deleting the namespace forgets its age entirely.
+        blob.delete_prefix("j1/");
+        assert_eq!(blob.prefix_age("j1/"), None, "[{spec}]");
+        assert_eq!(blob.prefix_ages('/').len(), 1, "[{spec}] j2 remains");
+    }
+}
+
+#[test]
 fn kv_delete_scan_delete_prefix_contract() {
     for (spec, sub, _) in backends() {
         let state = sub.state;
