@@ -1,0 +1,180 @@
+//! §Perf — locality layer: worker-local tile cache + affinity claiming.
+//!
+//! The paper's §6 negative result is that stateless workers re-read
+//! every parent tile from S3, moving 6–15× the bytes ScaLAPACK would.
+//! This bench measures how much of that traffic the locality layer
+//! (`+cache(…)`: per-worker LRU tile cache, chain-import prefetch,
+//! hinted claiming) removes on the real engine.
+//!
+//! Grid: {cholesky, gemm} × two block sizes, cache-on vs cache-off on
+//! the same sharded substrate and worker pool. Per point:
+//!
+//! * **bytes-from-substrate per task** — `store.bytes_read` (the cache
+//!   delegates its accounting, so this is post-cache traffic) divided
+//!   by the task count;
+//! * **cache hit rate** — from the engine report's cache counters;
+//! * **wall-clock** — the in-process stores are too fast for wall-clock
+//!   to move much, but the delta is reported for completeness.
+//!
+//! Emits `BENCH_locality.json`. The acceptance bar: cache-on must read
+//! fewer bytes per task than cache-off on cholesky, with hit rate > 0.
+
+use numpywren::config::{EngineConfig, ScalingMode, SubstrateConfig};
+use numpywren::drivers;
+use numpywren::engine::{Engine, EngineReport};
+use numpywren::linalg::matrix::Matrix;
+use numpywren::util::prng::Rng;
+use std::time::Duration;
+
+const CACHE_ON: &str = "sharded:16+cache(bytes=33554432)";
+const CACHE_OFF: &str = "sharded:16";
+const WORKERS: usize = 4;
+
+/// (algo, n, block) points — two block sizes per algorithm, so the
+/// locality win is visible across task granularities.
+fn grid() -> Vec<(&'static str, usize, usize)> {
+    if std::env::var("NUMPYWREN_BENCH_QUICK").as_deref() == Ok("1") {
+        vec![("cholesky", 96, 16), ("cholesky", 96, 32), ("gemm", 64, 16), ("gemm", 64, 32)]
+    } else {
+        vec![
+            ("cholesky", 192, 16),
+            ("cholesky", 192, 32),
+            ("gemm", 128, 16),
+            ("gemm", 128, 32),
+        ]
+    }
+}
+
+fn run(algo: &str, n: usize, block: usize, spec: &str) -> EngineReport {
+    let mut rng = Rng::new(0xCACE);
+    let cfg = EngineConfig {
+        scaling: ScalingMode::Fixed(WORKERS),
+        substrate: SubstrateConfig::parse(spec).unwrap(),
+        job_timeout: Duration::from_secs(300),
+        ..EngineConfig::default()
+    };
+    let engine = Engine::new(cfg);
+    match algo {
+        "cholesky" => {
+            let a = Matrix::rand_spd(n, &mut rng);
+            drivers::cholesky(&engine, &a, block).unwrap().run.report
+        }
+        "gemm" => {
+            let a = Matrix::randn(n, n, &mut rng);
+            let b = Matrix::randn(n, n, &mut rng);
+            drivers::gemm(&engine, &a, &b, block).unwrap().run.report
+        }
+        other => panic!("unknown algo {other}"),
+    }
+}
+
+struct Point {
+    algo: &'static str,
+    n: usize,
+    block: usize,
+    cache: bool,
+    wall_secs: f64,
+    total_tasks: u64,
+    bytes_read: u64,
+    bytes_per_task: f64,
+    hits: u64,
+    misses: u64,
+    hit_rate: f64,
+}
+
+fn measure(algo: &'static str, n: usize, block: usize, spec: &str, cache: bool) -> Point {
+    let r = run(algo, n, block, spec);
+    assert_eq!(r.completed, r.total_tasks, "{algo} n={n} b={block} [{spec}]");
+    assert!(r.error.is_none(), "{algo} n={n} b={block} [{spec}]");
+    let (hits, misses, hit_rate) = match &r.cache {
+        Some(c) => (c.hits, c.misses, c.hit_rate()),
+        None => (0, 0, 0.0),
+    };
+    Point {
+        algo,
+        n,
+        block,
+        cache,
+        wall_secs: r.wall_secs,
+        total_tasks: r.total_tasks,
+        bytes_read: r.store.bytes_read,
+        bytes_per_task: r.store.bytes_read as f64 / r.total_tasks.max(1) as f64,
+        hits,
+        misses,
+        hit_rate,
+    }
+}
+
+fn main() {
+    println!("# §Perf locality — bytes-from-substrate per task, cache-on vs cache-off");
+    let mut points: Vec<Point> = Vec::new();
+    for (algo, n, block) in grid() {
+        let off = measure(algo, n, block, CACHE_OFF, false);
+        let on = measure(algo, n, block, CACHE_ON, true);
+        println!(
+            "{algo:>8} n={n:<4} b={block:<3} off: {:>9.0} B/task ({:.3}s)   \
+             on: {:>9.0} B/task ({:.3}s)  hit-rate={:.1}%  bytes ×{:.2}",
+            off.bytes_per_task,
+            off.wall_secs,
+            on.bytes_per_task,
+            on.wall_secs,
+            100.0 * on.hit_rate,
+            off.bytes_per_task / on.bytes_per_task.max(1.0),
+        );
+        points.push(off);
+        points.push(on);
+    }
+
+    // The acceptance bar, printed explicitly so CI logs show it.
+    for (algo, n, block) in grid() {
+        let find = |cache: bool| {
+            points
+                .iter()
+                .find(|p| p.algo == algo && p.n == n && p.block == block && p.cache == cache)
+                .unwrap()
+        };
+        let (off, on) = (find(false), find(true));
+        let pass = on.bytes_read < off.bytes_read && on.hit_rate > 0.0;
+        println!(
+            "# {algo} n={n} b={block}: cache saves {:.1}% of substrate reads — {}",
+            100.0 * (1.0 - on.bytes_read as f64 / off.bytes_read.max(1) as f64),
+            if pass { "PASS" } else { "FAIL" }
+        );
+        assert!(
+            pass,
+            "{algo} n={n} b={block}: cache-on must cut bytes-from-substrate \
+             (off {} B, on {} B, hit-rate {:.3})",
+            off.bytes_read, on.bytes_read, on.hit_rate
+        );
+    }
+
+    // Hand-rolled JSON (no serde in the offline crate set).
+    let mut json = String::from("{\n  \"bench\": \"perf_locality\",\n");
+    json.push_str(&format!(
+        "  \"workers\": {WORKERS},\n  \"substrate_on\": \"{CACHE_ON}\",\n  \
+         \"substrate_off\": \"{CACHE_OFF}\",\n  \"results\": [\n"
+    ));
+    for (i, p) in points.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"algo\": \"{}\", \"n\": {}, \"block\": {}, \"cache\": {}, \
+             \"wall_secs\": {:.4}, \"total_tasks\": {}, \"bytes_read\": {}, \
+             \"bytes_per_task\": {:.1}, \"cache_hits\": {}, \"cache_misses\": {}, \
+             \"hit_rate\": {:.4}}}{}\n",
+            p.algo,
+            p.n,
+            p.block,
+            p.cache,
+            p.wall_secs,
+            p.total_tasks,
+            p.bytes_read,
+            p.bytes_per_task,
+            p.hits,
+            p.misses,
+            p.hit_rate,
+            if i + 1 == points.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_locality.json", &json).expect("write BENCH_locality.json");
+    println!("# wrote BENCH_locality.json");
+}

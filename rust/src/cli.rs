@@ -121,13 +121,18 @@ COMMANDS:
             [--substrate SPEC]
             [--compare-scalapack true] [--compare-dask true]
 
-            SPEC is strict | sharded[:N|auto], optionally with a chaos
-            decorator: sharded:16+chaos(err=0.01,lat=lognorm:5ms).
+            SPEC is strict | sharded[:N|auto], optionally with chaos
+            and/or cache decorators:
+            sharded:16+chaos(err=0.01,lat=lognorm:5ms),
+            sharded:auto+cache(bytes=32m).
             sharded:auto sizes the shard count from the worker pool.
             Chaos clauses: err/drop/dup (probabilities),
             lat|read_lat|write_lat|send_lat|recv_lat|kv_lat (D | fixed:D |
             uniform:LO:HI | lognorm:MED[:SIGMA]), straggle=FRAC:MULT,
-            seed=N. Chaos specs contain commas — pass them via
+            seed=N. cache(bytes=B[k|m|g]) layers a worker-local LRU
+            tile cache over the blob store (and turns on
+            locality-aware task claiming); bytes=0 disables it.
+            Decorator specs contain commas — pass them via
             --substrate (not --set, which splits on commas).
   analyze   DAG statistics via the LAmbdaPACK analyzer
             (--algo NAME | --program FILE.lp) --grid N
@@ -300,6 +305,15 @@ fn cmd_run(args: &Args) -> Result<()> {
         report.store.bytes_written,
         report.workers_spawned,
     );
+    if let Some(c) = &report.cache {
+        println!(
+            "cache: hits={} misses={} evictions={} hit-rate={:.1}%",
+            c.hits,
+            c.misses,
+            c.evictions,
+            100.0 * c.hit_rate()
+        );
+    }
     if let Some(e) = report.error {
         bail!("job error: {e}");
     }
@@ -546,6 +560,15 @@ fn cmd_jobs(args: &Args) -> Result<()> {
         fleet.store.bytes_read,
         fleet.store.bytes_written
     );
+    if let Some(c) = &fleet.cache {
+        println!(
+            "cache: hits={} misses={} evictions={} hit-rate={:.1}%",
+            c.hits,
+            c.misses,
+            c.evictions,
+            100.0 * c.hit_rate()
+        );
+    }
     if failed {
         bail!("one or more jobs failed");
     }
@@ -876,6 +899,22 @@ mod tests {
         .unwrap();
         assert!(run_cli(&argv(
             "run --algo cholesky --n 24 --block 8 --workers 2 --substrate bogus",
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn tiny_run_executes_with_tile_cache() {
+        // The cache decorator end-to-end from the CLI: locality hints,
+        // chain-import prefetch, and the report's cache line.
+        run_cli(&argv(
+            "run --algo cholesky --n 24 --block 8 --workers 2 \
+             --substrate sharded:4+cache(bytes=8m)",
+        ))
+        .unwrap();
+        assert!(run_cli(&argv(
+            "run --algo cholesky --n 24 --block 8 --workers 2 \
+             --substrate sharded:4+cache(bytes=lots)",
         ))
         .is_err());
     }

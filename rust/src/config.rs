@@ -2,6 +2,7 @@
 //! `key=value` overrides (config files and CLI flags share the same
 //! parser — the launcher's config system).
 
+use crate::storage::cache::CacheConfig;
 use crate::storage::chaos::ChaosConfig;
 use anyhow::{bail, Context, Result};
 use std::time::Duration;
@@ -131,14 +132,20 @@ pub fn shards_for_workers(workers: usize) -> usize {
 }
 
 /// Substrate selection, settable as `substrate=strict` or
-/// `substrate=sharded[:N]`, optionally decorated with a chaos layer:
-/// `substrate=sharded:16+chaos(err=0.01,lat=lognorm:5ms)` (see
-/// [`crate::storage::chaos`] for the clause grammar).
+/// `substrate=sharded[:N]`, optionally decorated with a chaos layer
+/// and/or a worker-local tile cache:
+/// `substrate=sharded:16+chaos(err=0.01,lat=lognorm:5ms)`,
+/// `substrate=sharded:auto+cache(bytes=33554432)` (see
+/// [`crate::storage::chaos`] and [`crate::storage::cache`] for the
+/// clause grammars).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SubstrateConfig {
     pub backend: SubstrateBackend,
     /// Optional fault/latency decorator layer over the backend family.
     pub chaos: Option<ChaosConfig>,
+    /// Optional worker-local LRU tile cache over the blob store
+    /// (applied outermost, above any chaos layer).
+    pub cache: Option<CacheConfig>,
 }
 
 impl Default for SubstrateConfig {
@@ -148,6 +155,7 @@ impl Default for SubstrateConfig {
                 shards: DEFAULT_SHARDS,
             },
             chaos: None,
+            cache: None,
         }
     }
 }
@@ -156,56 +164,52 @@ impl SubstrateConfig {
     pub fn strict() -> Self {
         SubstrateConfig {
             backend: SubstrateBackend::Strict,
-            chaos: None,
+            ..Self::default()
         }
     }
 
     pub fn sharded(shards: usize) -> Self {
         SubstrateConfig {
             backend: SubstrateBackend::Sharded { shards },
-            chaos: None,
+            ..Self::default()
         }
     }
 
     /// Resolve backends whose parameters depend on the deployment
     /// (currently `sharded:auto`, sized from the worker pool) into a
-    /// concrete backend. Already-concrete configs pass through.
+    /// concrete backend. Already-concrete configs pass through;
+    /// decorator layers (chaos, cache) are preserved.
     pub fn resolve(&self, worker_hint: usize) -> Self {
         match self.backend {
             SubstrateBackend::ShardedAuto => SubstrateConfig {
                 backend: SubstrateBackend::Sharded {
                     shards: shards_for_workers(worker_hint),
                 },
-                chaos: self.chaos,
+                ..*self
             },
             _ => *self,
         }
     }
 
     /// Parse `strict` | `sharded` | `sharded:N` | `sharded:auto`, each
-    /// optionally followed by `+chaos(key=value,…)`.
+    /// optionally followed by decorator clauses `+chaos(key=value,…)`
+    /// and/or `+cache(key=value,…)`, in either order, at most once
+    /// each.
     pub fn parse(spec: &str) -> Result<Self> {
-        let (base, chaos) = match spec.split_once('+') {
-            None => (spec, None),
-            Some((base, decorator)) => {
-                let body = decorator
-                    .strip_prefix("chaos(")
-                    .and_then(|r| r.strip_suffix(')'))
-                    .with_context(|| {
-                        format!("bad substrate decorator `{decorator}` (chaos(k=v,…))")
-                    })?;
-                (base, Some(ChaosConfig::parse(body)?))
-            }
-        };
+        let mut parts = spec.split('+');
+        let base = parts.next().unwrap_or("");
         let mut cfg = match base.split_once(':') {
             None => match base {
                 "strict" => Self::strict(),
                 "sharded" => Self::default(),
-                _ => bail!("bad substrate spec `{base}` (strict | sharded[:N|auto][+chaos(…)])"),
+                _ => bail!(
+                    "bad substrate spec `{base}` \
+                     (strict | sharded[:N|auto][+chaos(…)][+cache(…)])"
+                ),
             },
             Some(("sharded", "auto")) => SubstrateConfig {
                 backend: SubstrateBackend::ShardedAuto,
-                chaos: None,
+                ..Self::default()
             },
             Some(("sharded", n)) => {
                 let shards: usize = n
@@ -216,9 +220,32 @@ impl SubstrateConfig {
                 }
                 Self::sharded(shards)
             }
-            Some(_) => bail!("bad substrate spec `{base}` (strict | sharded[:N|auto][+chaos(…)])"),
+            Some(_) => bail!(
+                "bad substrate spec `{base}` \
+                 (strict | sharded[:N|auto][+chaos(…)][+cache(…)])"
+            ),
         };
-        cfg.chaos = chaos;
+        for decorator in parts {
+            if let Some(body) = decorator
+                .strip_prefix("chaos(")
+                .and_then(|r| r.strip_suffix(')'))
+            {
+                if cfg.chaos.is_some() {
+                    bail!("duplicate substrate decorator `chaos(…)`");
+                }
+                cfg.chaos = Some(ChaosConfig::parse(body)?);
+            } else if let Some(body) = decorator
+                .strip_prefix("cache(")
+                .and_then(|r| r.strip_suffix(')'))
+            {
+                if cfg.cache.is_some() {
+                    bail!("duplicate substrate decorator `cache(…)`");
+                }
+                cfg.cache = Some(CacheConfig::parse(body)?);
+            } else {
+                bail!("bad substrate decorator `{decorator}` (chaos(k=v,…) | cache(k=v,…))");
+            }
+        }
         Ok(cfg)
     }
 
@@ -307,8 +334,8 @@ impl EngineConfig {
 
     /// Apply a `key=value` override. Durations are given in
     /// (fractional) seconds; `scaling` is `fixed:N` or `auto:SF:MAX`;
-    /// `substrate` is `strict` or `sharded[:N]`, optionally with a
-    /// `+chaos(…)` decorator clause.
+    /// `substrate` is `strict` or `sharded[:N]`, optionally with
+    /// `+chaos(…)` / `+cache(…)` decorator clauses.
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
         let secs = |v: &str| -> Result<Duration> {
             Ok(Duration::from_secs_f64(
@@ -509,11 +536,13 @@ mod tests {
         // Concrete configs pass through resolve untouched.
         let fixed = SubstrateConfig::sharded(4);
         assert_eq!(fixed.resolve(64), fixed);
-        // The chaos decorator survives resolution.
-        let chaotic = SubstrateConfig::parse("sharded:auto+chaos(err=0.1,seed=3)").unwrap();
+        // The decorator layers survive resolution.
+        let chaotic =
+            SubstrateConfig::parse("sharded:auto+chaos(err=0.1,seed=3)+cache(bytes=1m)").unwrap();
         let resolved = chaotic.resolve(4);
         assert_eq!(resolved.backend, SubstrateBackend::Sharded { shards: 8 });
         assert_eq!(resolved.chaos, chaotic.chaos);
+        assert_eq!(resolved.cache, chaotic.cache);
         // worker_hint tracks the scaling mode.
         let mut e = EngineConfig::default();
         e.scaling = ScalingMode::Fixed(6);
@@ -548,6 +577,39 @@ mod tests {
             .unwrap();
         assert_eq!(e.substrate.backend, SubstrateBackend::Sharded { shards: 8 });
         assert!(e.substrate.chaos.unwrap().straggler_frac > 0.0);
+    }
+
+    #[test]
+    fn substrate_cache_decorator_parses() {
+        let c = SubstrateConfig::parse("sharded:4+cache(bytes=33554432)").unwrap();
+        assert_eq!(c.backend, SubstrateBackend::Sharded { shards: 4 });
+        assert_eq!(c.cache.expect("cache layer").bytes, 32 << 20);
+        assert!(c.chaos.is_none());
+        // Empty clause body → defaults; suffixes accepted.
+        let c = SubstrateConfig::parse("strict+cache()").unwrap();
+        assert_eq!(c.cache, Some(CacheConfig::default()));
+        let c = SubstrateConfig::parse("sharded+cache(bytes=8m)").unwrap();
+        assert_eq!(c.cache.unwrap().bytes, 8 << 20);
+        // Both decorators, either order; duplicates rejected.
+        for spec in [
+            "sharded:8+cache(bytes=1m)+chaos(err=0.01,seed=7)",
+            "sharded:8+chaos(err=0.01,seed=7)+cache(bytes=1m)",
+        ] {
+            let c = SubstrateConfig::parse(spec).unwrap();
+            assert_eq!(c.backend, SubstrateBackend::Sharded { shards: 8 });
+            assert_eq!(c.cache.unwrap().bytes, 1 << 20);
+            assert_eq!(c.chaos.unwrap().err, 0.01);
+        }
+        assert!(SubstrateConfig::parse("strict+cache()+cache()").is_err());
+        assert!(SubstrateConfig::parse("strict+chaos()+chaos()").is_err());
+        assert!(SubstrateConfig::parse("strict+cache(bytes=soon)").is_err());
+        assert!(SubstrateConfig::parse("strict+cache(bytes=1m").is_err());
+        assert!(SubstrateConfig::parse("strict+cache(pages=1)").is_err());
+        // Via the EngineConfig override path, as a config file would.
+        let mut e = EngineConfig::default();
+        e.set("substrate", "sharded:auto+cache(bytes=2k)").unwrap();
+        assert_eq!(e.substrate.backend, SubstrateBackend::ShardedAuto);
+        assert_eq!(e.substrate.cache.unwrap().bytes, 2048);
     }
 
     #[test]

@@ -19,7 +19,7 @@ use crate::lambdapack::interp::Env;
 use crate::linalg::matrix::Matrix;
 use crate::metrics::{Sample, TaskRecord};
 use crate::storage::chaos::{with_blob_retry, CLIENT_BLOB_RETRIES};
-use crate::storage::{BlobStore, StoreStats};
+use crate::storage::{BlobStore, CacheStats, StoreStats};
 use anyhow::{Context, Result};
 use std::sync::Arc;
 
@@ -39,6 +39,11 @@ pub struct EngineReport {
     pub core_secs_billed: f64,
     pub total_flops: u64,
     pub store: StoreStats,
+    /// Worker-local tile-cache counters, when the substrate spec
+    /// layered a `+cache(…)` decorator (`None` otherwise). `store`
+    /// counts only post-cache traffic, so `store.bytes_read` is the
+    /// bytes actually pulled from the substrate.
+    pub cache: Option<CacheStats>,
     pub samples: Vec<Sample>,
     pub tasks: Vec<TaskRecord>,
     pub workers_spawned: usize,
@@ -128,6 +133,7 @@ impl Engine {
             core_secs_billed: fleet.core_secs_billed,
             total_flops: jr.total_flops,
             store: fleet.store,
+            cache: fleet.cache,
             samples: jr.samples,
             tasks: jr.tasks,
             workers_spawned: fleet.workers_spawned,

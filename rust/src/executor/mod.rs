@@ -53,7 +53,7 @@ use crate::kernels::KernelExecutor;
 use crate::lambdapack::analysis::{Analyzer, Loc};
 use crate::lambdapack::interp::Node;
 use crate::metrics::MetricsHub;
-use crate::storage::{BlobStore, KvState, Queue, Substrate};
+use crate::storage::{BlobStore, CachedBlobStore, KvState, Queue, Substrate};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::fmt::Write as _;
@@ -137,6 +137,11 @@ pub struct FleetContext {
     pub queue: Arc<dyn Queue>,
     pub store: Arc<dyn BlobStore>,
     pub state: Arc<dyn KvState>,
+    /// The substrate's cache layer when the spec carries `+cache(…)`
+    /// (then [`FleetContext::store`] *is* this store). Gates the
+    /// locality machinery — prefetch, hint writes, hinted claiming —
+    /// and surfaces hit/miss counters into the fleet report.
+    pub cache: Option<Arc<CachedBlobStore>>,
     pub kernels: Arc<dyn KernelExecutor>,
     /// Fleet-level hub: worker lifecycle (live count, billed seconds)
     /// and the aggregate sample series.
@@ -155,12 +160,17 @@ impl FleetContext {
     /// Stand up one shared substrate for the whole fleet.
     pub fn new(mut cfg: EngineConfig, kernels: Arc<dyn KernelExecutor>) -> FleetContext {
         cfg.substrate = cfg.substrate.resolve(cfg.worker_hint());
-        let Substrate { blob, queue, state } =
-            Substrate::build(&cfg.substrate, cfg.lease, cfg.store_latency);
+        let Substrate {
+            blob,
+            queue,
+            state,
+            cache,
+        } = Substrate::build(&cfg.substrate, cfg.lease, cfg.store_latency);
         FleetContext {
             queue,
             store: blob,
             state,
+            cache,
             kernels,
             metrics: MetricsHub::new(),
             cfg,
@@ -265,6 +275,13 @@ pub struct JobContext {
     /// Upstream jobs this one was gated on (`submit_after`) — their
     /// pin counts drop when this job reaches a terminal state.
     pub deps: Vec<u64>,
+    /// Produce locality hints for this job's tasks: completing workers
+    /// record a hint key (`{prefix}hint:{node}`) naming themselves,
+    /// and `propagate` stamps children with the parent's hint so the
+    /// queue can steer them to the worker whose cache holds the parent
+    /// tiles. Enabled by the job manager when the fleet substrate
+    /// carries a cache layer; pointless (and off) otherwise.
+    pub locality_hints: bool,
     // Shared substrate handles (clones of the fleet's).
     pub queue: Arc<dyn Queue>,
     pub store: Arc<dyn BlobStore>,
@@ -301,6 +318,7 @@ impl JobContext {
             output_matrices: Vec::new(),
             aliases: HashMap::new(),
             deps: Vec::new(),
+            locality_hints: false,
             queue,
             store,
             state,
@@ -375,6 +393,20 @@ impl JobContext {
         format!("{}|{}", self.job.0, node.id())
     }
 
+    /// KV key recording which worker wrote `node`'s output tiles (the
+    /// locality hint). Lives inside the job namespace, so retention
+    /// sweeps reclaim hints with everything else.
+    pub fn hint_key(&self, node: &Node) -> String {
+        format!("{}hint:{}", self.prefix, node.id())
+    }
+
+    /// The worker recorded as holding `node`'s output tiles, if any.
+    /// Purely advisory: a missing, unparsable, or out-of-date hint
+    /// degrades to unhinted scheduling, never to an error.
+    pub fn output_hint(&self, node: &Node) -> Option<u64> {
+        self.state.get(&self.hint_key(node))?.parse().ok()
+    }
+
     // ---- queue ---------------------------------------------------------
 
     /// This job's component of the shared queue's composite priority.
@@ -384,8 +416,16 @@ impl JobContext {
 
     /// Enqueue one of this job's tasks on the shared queue.
     pub fn send_task(&self, node: &Node) {
+        self.send_task_hinted(node, None);
+    }
+
+    /// [`JobContext::send_task`] carrying a soft locality hint — the
+    /// worker whose cache likely holds the task's input tiles (see
+    /// [`crate::storage::Queue::send_hinted`]).
+    pub fn send_task_hinted(&self, node: &Node, hint: Option<u64>) {
         self.in_queue.fetch_add(1, Ordering::Relaxed);
-        self.queue.send(&self.msg_body(node), self.task_priority(node));
+        self.queue
+            .send_hinted(&self.msg_body(node), self.task_priority(node), hint);
     }
 
     /// Bookkeeping for a deleted message of this job.
@@ -468,6 +508,14 @@ impl JobContext {
 pub fn propagate(ctx: &JobContext, node: &Node) -> Result<usize> {
     let children = ctx.analyzer.children(node)?;
     let mut enqueued = 0;
+    // Locality: children read this node's output tiles, so steer them
+    // toward the worker recorded as holding those tiles in its cache.
+    // One KV read per completing task, only when the fleet has a cache.
+    let hint = if ctx.locality_hints {
+        ctx.output_hint(node)
+    } else {
+        None
+    };
     // §Perf: this is the per-task hot path — node ids are built once,
     // state-store keys (job prefix included) are formatted into two
     // reused buffers instead of fresh allocations per edge, and the
@@ -498,7 +546,7 @@ pub fn propagate(ctx: &JobContext, node: &Node) -> Result<usize> {
             let already_done =
                 ctx.state.get(&ek).as_deref() == Some(crate::storage::status::COMPLETED);
             if !already_done {
-                ctx.send_task(child);
+                ctx.send_task_hinted(child, hint);
                 enqueued += 1;
             }
         }
@@ -716,6 +764,42 @@ mod tests {
     }
 
     #[test]
+    fn propagate_stamps_children_with_parent_output_hint() {
+        use crate::storage::TestClock;
+        // Hint-aware backend (sharded) on a frozen clock so the hint
+        // staleness window cannot expire mid-test.
+        let sub = Substrate::build_with_clock(
+            &SubstrateConfig::parse("sharded:1").unwrap(),
+            Duration::from_secs(5),
+            Duration::ZERO,
+            Arc::new(TestClock::default()),
+        );
+        let mut ctx = ctx_with(JobId(1), 0, 3, &sub);
+        ctx.locality_hints = true;
+        let node = Node::new(0, env(&[("i", 0)]));
+        // Worker 4 recorded itself as the holder of chol(0)'s output.
+        ctx.state.set(&ctx.hint_key(&node), "4");
+        assert_eq!(ctx.output_hint(&node), Some(4));
+        assert_eq!(propagate(&ctx, &node).unwrap(), 2);
+        // Unhinted decoy at the same priority (same program line,
+        // distinct index) so steering — not priority — decides.
+        ctx.send_task(&Node::new(1, env(&[("i", 0), ("j", 5)])));
+        // A different worker is steered past the two hinted children
+        // onto the unhinted task; worker 4 claims its own.
+        let (body, _) = sub.queue.receive_for(9).unwrap();
+        assert_eq!(body, "1|1@i=0,j=5");
+        let (body, _) = sub.queue.receive_for(4).unwrap();
+        assert!(body.starts_with("1|1@"), "hinted child to worker 4: {body}");
+        // Hints are advisory: with nothing else left, worker 9 still
+        // gets the remaining hinted child (no starvation).
+        assert!(sub.queue.receive_for(9).is_some());
+        // A job without the flag reads no hints.
+        let plain = ctx_with(JobId(2), 0, 3, &sub);
+        assert!(!plain.locality_hints);
+        assert_eq!(plain.output_hint(&node), None);
+    }
+
+    #[test]
     fn fleet_registry_resolves_and_unregisters() {
         let fleet = FleetContext::new(
             EngineConfig {
@@ -729,6 +813,7 @@ mod tests {
             blob: fleet.store.clone(),
             queue: fleet.queue.clone(),
             state: fleet.state.clone(),
+            cache: None,
         };
         let ctx = Arc::new(ctx_with(JobId(7), 0, 3, &sub));
         fleet.register(ctx.clone());

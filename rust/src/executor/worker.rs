@@ -55,6 +55,13 @@ fn put_with_retry(fleet: &FleetContext, worker: usize, key: &str, tile: Matrix) 
     blob_put_with_retry(fleet.store.as_ref(), WORKER_BLOB_RETRIES, worker, key, tile)
 }
 
+/// Tile read with the worker's transient-fault retry budget — the one
+/// place worker-side tile reads go through, so the substrate's cache
+/// layer (when configured) observes every read on one code path.
+fn read_tile(fleet: &FleetContext, worker: usize, key: &str) -> Result<Arc<Matrix>> {
+    with_blob_retry(WORKER_BLOB_RETRIES, || fleet.store.get(worker, key))
+}
+
 /// Why a worker exited.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ExitReason {
@@ -196,7 +203,10 @@ fn read_stage(
             // in-flight pipeline drains gracefully.
             return InvocationEnd::RuntimeLimit;
         }
-        let Some((body, lease)) = fleet.queue.receive_timeout(poll) else {
+        // Identify the claimer so hint-aware queue backends can steer
+        // tasks toward the worker whose cache holds their input tiles
+        // (a no-op on backends without affinity support).
+        let Some((body, lease)) = fleet.queue.receive_timeout_for(params.id as u64, poll) else {
             if params.exit_on_idle && last_work.elapsed() >= fleet.cfg.idle_timeout {
                 return InvocationEnd::Exit(ExitReason::Idle);
             }
@@ -270,12 +280,37 @@ fn read_stage(
         let (inputs, bytes_read) = if already_done {
             (Vec::new(), 0)
         } else {
+            // Chain-import prefetch: warm this worker's tile cache for
+            // the task's imports-mapped parent tiles (keys the alias
+            // table resolves into an *upstream* job's namespace) in
+            // parallel before the serial read loop. Each warmer is one
+            // single-attempt get — a failure is benign, the loop below
+            // re-reads through the normal retry budget — so k upstream
+            // fetches cost ~max(latency) instead of their sum. Only
+            // worth a thread apiece when there are several.
+            if fleet.cache.is_some() {
+                let imports: Vec<String> = task
+                    .reads
+                    .iter()
+                    .map(|loc| ctx.blob_key(loc))
+                    .filter(|key| !key.starts_with(&ctx.prefix))
+                    .collect();
+                if imports.len() > 1 {
+                    std::thread::scope(|scope| {
+                        for key in &imports {
+                            scope.spawn(move || {
+                                let _ = fleet.store.get(params.id, key);
+                            });
+                        }
+                    });
+                }
+            }
             let mut tiles = Vec::with_capacity(task.reads.len());
             let mut bytes = 0u64;
             let mut failed = None;
             for loc in &task.reads {
                 let key = ctx.blob_key(loc);
-                match with_blob_retry(WORKER_BLOB_RETRIES, || fleet.store.get(params.id, &key)) {
+                match read_tile(fleet, params.id, &key) {
                     Ok(t) => {
                         bytes += (t.rows() * t.cols() * 8) as u64;
                         tiles.push(t);
@@ -458,6 +493,16 @@ fn write_stage(
                 ctx.release_slot();
                 continue;
             }
+        }
+        // Locality hint: this worker just wrote (write-through cached)
+        // the task's output tiles — record it so `propagate` can steer
+        // the children here. Skipped-task re-executions write nothing,
+        // so they leave the original writer's hint in place. A plain
+        // overwrite (not CAS) is correct: under at-least-once delivery
+        // the latest writer is exactly the worker whose cache is warm.
+        if ctx.locality_hints && !item.skip_write {
+            ctx.state
+                .set(&ctx.hint_key(&item.node), &worker_id.to_string());
         }
         // Exactly one completer wins the CAS and owns the "completed"
         // accounting; propagation runs unconditionally (idempotent) so

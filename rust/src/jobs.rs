@@ -71,7 +71,7 @@ use crate::linalg::matrix::Matrix;
 use crate::metrics::{Sample, TaskRecord};
 use crate::provisioner::{run_provisioner, WorkerPool};
 use crate::storage::chaos::{blob_put_with_retry, with_blob_retry, CLIENT_BLOB_RETRIES};
-use crate::storage::{BlobStore, KvState, Queue, StoreStats};
+use crate::storage::{BlobStore, CacheStats, KvState, Queue, StoreStats};
 use crate::util::prng::Rng;
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeSet, HashMap, HashSet};
@@ -234,8 +234,13 @@ pub struct FleetReport {
     pub exits_killed: usize,
     /// Total worker lifetime (billed Lambda seconds) across all jobs.
     pub core_secs_billed: f64,
-    /// Shared-store transfer totals across all jobs.
+    /// Shared-store transfer totals across all jobs. When a cache
+    /// layer is configured these count post-cache traffic only — the
+    /// actual bytes-from-substrate (hits never reach the inner store).
     pub store: StoreStats,
+    /// Tile-cache hit/miss/evict counters when the substrate carries a
+    /// `+cache(…)` layer; `None` otherwise.
+    pub cache: Option<CacheStats>,
     /// Aggregate sample series (all-jobs running/completed/flops,
     /// shared-queue depth).
     pub samples: Vec<Sample>,
@@ -830,6 +835,7 @@ impl JobManager {
             exits_killed: exits.iter().filter(|e| **e == ExitReason::Killed).count(),
             core_secs_billed: self.fleet.metrics.billed_core_secs(),
             store: self.fleet.store.stats(),
+            cache: self.fleet.cache.as_ref().map(|c| c.cache_stats()),
             samples: self.fleet.metrics.samples(),
         }
     }
@@ -927,6 +933,10 @@ fn activate_job(fleet: &Arc<FleetContext>, pending: PendingJob) -> Result<()> {
     ctx.output_matrices = output_matrices;
     ctx.max_inflight = max_inflight;
     ctx.deps = deps;
+    // Locality hints only pay off when a worker-local cache exists to
+    // keep the hinted tiles warm; without one the hint writes would be
+    // pure KV overhead.
+    ctx.locality_hints = fleet.cache.is_some();
     for (loc, upstream, upstream_loc) in &imports {
         ctx.aliases.insert(
             loc.key_in(&prefix),

@@ -1,0 +1,587 @@
+//! Worker-local LRU tile cache — the locality layer's storage half.
+//!
+//! The paper's headline negative result (§6) is that stateless
+//! serverless workers cannot exploit locality: every tile read goes
+//! back to S3, so numpywren moves 6–15× the bytes ScaLAPACK would.
+//! Because this runtime owns the whole stack, it can give each worker
+//! a memory of the tiles it already holds: [`CachedBlobStore`] is a
+//! read-through decorator over any [`BlobStore`] that keeps one
+//! byte-budgeted LRU cache *per logical worker* (keyed by the
+//! `worker` id every `put`/`get` already carries). Combined with the
+//! sharded queue's affinity hints (see
+//! [`crate::storage::sharded::queue`]), a child task steered to the
+//! worker that produced its parent tiles reads them from local memory
+//! instead of the substrate.
+//!
+//! Selection is part of the substrate grammar
+//! ([`SubstrateConfig::parse`](crate::config::SubstrateConfig::parse)):
+//!
+//! ```text
+//! substrate = sharded:16+cache(bytes=33554432)
+//! substrate = sharded:8+cache(bytes=32m)+chaos(err=0.01,seed=3)
+//! ```
+//!
+//! The cache composes *outermost* regardless of decorator order in the
+//! spec: local memory cannot fault, so misses traverse the chaos layer
+//! (and are retried by the existing worker retry budget) while hits
+//! bypass it entirely — exactly what a real worker-resident cache over
+//! a flaky S3 would do.
+//!
+//! Invariants (pinned by the conformance suite):
+//!
+//! * **Write-through.** `put` reaches the inner store *first*; the
+//!   tile enters the cache only after the inner put succeeds, so a
+//!   chaos-faulted put can never leave a cached tile the substrate
+//!   does not hold.
+//! * **Invalidate-on-lifecycle-op.** `delete` and `delete_prefix`
+//!   purge matching entries from **every** worker's cache after the
+//!   inner op, so GC / retention / TTL sweeps (which all run through
+//!   the decorated handle) can never leave a stale tile behind. An
+//!   epoch counter closes the read race: a `get` that fetched from the
+//!   inner store concurrently with an invalidation skips its cache
+//!   insert, so a tile observed just before its deletion cannot
+//!   resurrect as a cache entry afterwards.
+//! * **Accounting stays honest.** `stats`/`worker_stats` delegate to
+//!   the inner store, and hits never touch it — the existing
+//!   bytes-from-substrate counters (Figure 7, `EngineReport::store`)
+//!   automatically measure post-cache traffic. Hit/miss/evict counts
+//!   are reported separately via [`CachedBlobStore::cache_stats`].
+//!
+//! Staleness beyond lifecycle deletes cannot occur: tile writes are
+//! SSA (a re-executed task writes byte-identical tiles), so a cached
+//! tile only ever goes stale by being deleted — which invalidates it.
+
+use crate::linalg::matrix::Matrix;
+use crate::storage::traits::{BlobStore, StoreStats};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+/// Default per-worker cache budget when `cache()` gives no `bytes=`:
+/// 64 MiB — a few hundred of the 4096×4096 tiles the paper runs are
+/// out of reach in-process, but the test/bench tile sizes fit easily.
+pub const DEFAULT_CACHE_BYTES: u64 = 64 * 1024 * 1024;
+
+/// The knob set for one cache layer, parsed from the `cache(…)`
+/// decorator clause of the substrate grammar.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheConfig {
+    /// Per-worker byte budget. Tiles are evicted LRU once a worker's
+    /// cache exceeds it; a tile larger than the whole budget is never
+    /// cached. `0` disables caching while keeping the decorator (and
+    /// its counters) in place.
+    pub bytes: u64,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            bytes: DEFAULT_CACHE_BYTES,
+        }
+    }
+}
+
+impl CacheConfig {
+    /// Parse the comma-separated `key=value` body of a `cache(…)`
+    /// decorator clause. Currently one key: `bytes=N` with optional
+    /// binary suffix (`k`, `m`, `g`), e.g. `bytes=33554432` or
+    /// `bytes=32m`. An empty body selects the defaults.
+    pub fn parse(body: &str) -> Result<CacheConfig> {
+        let mut c = CacheConfig::default();
+        for kv in body.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (k, v) = kv
+                .split_once('=')
+                .with_context(|| format!("cache clause `{kv}` is not key=value"))?;
+            match (k.trim(), v.trim()) {
+                ("bytes", v) => c.bytes = parse_bytes(v)?,
+                (other, _) => bail!("unknown cache key `{other}` (bytes)"),
+            }
+        }
+        Ok(c)
+    }
+}
+
+/// Parse a byte count: a plain integer, optionally suffixed `k`/`m`/`g`
+/// (binary: ×1024 each).
+fn parse_bytes(s: &str) -> Result<u64> {
+    let (num, scale) = match s.strip_suffix(['k', 'K']) {
+        Some(v) => (v, 1u64 << 10),
+        None => match s.strip_suffix(['m', 'M']) {
+            Some(v) => (v, 1u64 << 20),
+            None => match s.strip_suffix(['g', 'G']) {
+                Some(v) => (v, 1u64 << 30),
+                None => (s, 1),
+            },
+        },
+    };
+    let n: u64 = num
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("bad byte count `{s}`"))?;
+    n.checked_mul(scale)
+        .ok_or_else(|| anyhow!("byte count `{s}` overflows"))
+}
+
+/// Hit/miss/evict counters of one cache layer, aggregated across all
+/// worker caches. Surfaced on `EngineReport`/`FleetReport` next to the
+/// substrate transfer stats.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// `get`s served from a worker's local cache (no inner-store op).
+    pub hits: u64,
+    /// `get`s that went through to the inner store.
+    pub misses: u64,
+    /// Entries evicted to stay under the per-worker byte budget.
+    pub evictions: u64,
+    /// Entries removed by lifecycle invalidation (`delete` /
+    /// `delete_prefix`).
+    pub invalidations: u64,
+}
+
+impl CacheStats {
+    /// Fraction of reads served locally; 0 when no reads happened.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+fn tile_bytes(tile: &Matrix) -> u64 {
+    (tile.rows() * tile.cols() * 8) as u64
+}
+
+struct CacheEntry {
+    tile: Arc<Matrix>,
+    bytes: u64,
+    /// This entry's key in the LRU order map.
+    tick: u64,
+}
+
+/// One worker's LRU state: entries by key plus a recency order map
+/// (`tick → key`, oldest first). Not thread-safe — the store wraps
+/// each one in a mutex, so workers never contend with each other.
+struct WorkerCache {
+    entries: HashMap<String, CacheEntry>,
+    lru: BTreeMap<u64, String>,
+    used: u64,
+    tick: u64,
+}
+
+impl WorkerCache {
+    fn new() -> WorkerCache {
+        WorkerCache {
+            entries: HashMap::new(),
+            lru: BTreeMap::new(),
+            used: 0,
+            tick: 0,
+        }
+    }
+
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    fn get(&mut self, key: &str) -> Option<Arc<Matrix>> {
+        let tick = self.next_tick();
+        let entry = self.entries.get_mut(key)?;
+        self.lru.remove(&entry.tick);
+        entry.tick = tick;
+        self.lru.insert(tick, key.to_string());
+        Some(entry.tile.clone())
+    }
+
+    /// Insert (or refresh) `key`; returns how many entries were
+    /// evicted to fit the budget.
+    fn insert(&mut self, budget: u64, key: &str, tile: Arc<Matrix>) -> u64 {
+        let bytes = tile_bytes(&tile);
+        if bytes > budget {
+            // Oversized tile: caching it would evict everything and
+            // still not fit. Drop any entry it replaces, cache nothing.
+            self.remove(key);
+            return 0;
+        }
+        self.remove(key);
+        let mut evicted = 0;
+        while self.used + bytes > budget {
+            let Some((_, victim)) = self.lru.pop_first() else {
+                break;
+            };
+            if let Some(e) = self.entries.remove(&victim) {
+                self.used -= e.bytes;
+                evicted += 1;
+            }
+        }
+        let tick = self.next_tick();
+        self.lru.insert(tick, key.to_string());
+        self.entries.insert(key.to_string(), CacheEntry { tile, bytes, tick });
+        self.used += bytes;
+        evicted
+    }
+
+    fn remove(&mut self, key: &str) -> bool {
+        match self.entries.remove(key) {
+            Some(e) => {
+                self.lru.remove(&e.tick);
+                self.used -= e.bytes;
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn remove_prefix(&mut self, prefix: &str) -> u64 {
+        let victims: Vec<String> = self
+            .entries
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect();
+        let mut removed = 0;
+        for k in victims {
+            if self.remove(&k) {
+                removed += 1;
+            }
+        }
+        removed
+    }
+}
+
+/// Read-through, write-through LRU cache decorator over any
+/// [`BlobStore`] (see the module docs for the invariants). One
+/// instance serves the whole fleet: it holds an independent
+/// byte-budgeted LRU per logical worker id, so "per-worker cache"
+/// needs no per-worker plumbing — the `worker` argument every blob op
+/// already carries selects the cache.
+pub struct CachedBlobStore {
+    inner: Arc<dyn BlobStore>,
+    cfg: CacheConfig,
+    /// Per-worker caches; the outer lock is write-taken only on a
+    /// worker's first operation (same shape as the blob backends'
+    /// per-worker accounting).
+    workers: RwLock<HashMap<usize, Arc<Mutex<WorkerCache>>>>,
+    /// Bumped (before the cache sweep) by every invalidation; a `get`
+    /// records it before the inner fetch and skips its cache insert if
+    /// it moved — the fetched tile may be the one just deleted.
+    epoch: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    invalidations: AtomicU64,
+}
+
+impl CachedBlobStore {
+    pub fn new(inner: Arc<dyn BlobStore>, cfg: CacheConfig) -> CachedBlobStore {
+        CachedBlobStore {
+            inner,
+            cfg,
+            workers: RwLock::new(HashMap::new()),
+            epoch: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            invalidations: AtomicU64::new(0),
+        }
+    }
+
+    /// The configured per-worker byte budget.
+    pub fn config(&self) -> CacheConfig {
+        self.cfg
+    }
+
+    /// Aggregate hit/miss/evict/invalidation counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            invalidations: self.invalidations.load(Ordering::Relaxed),
+        }
+    }
+
+    fn worker_cache(&self, worker: usize) -> Arc<Mutex<WorkerCache>> {
+        if let Some(c) = self.workers.read().unwrap().get(&worker) {
+            return c.clone();
+        }
+        let mut w = self.workers.write().unwrap();
+        w.entry(worker)
+            .or_insert_with(|| Arc::new(Mutex::new(WorkerCache::new())))
+            .clone()
+    }
+
+    /// Remove `key` from every worker's cache. Called *after* the
+    /// inner op, with the epoch bumped first (see `epoch`).
+    fn invalidate_key(&self, key: &str) {
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        let caches: Vec<Arc<Mutex<WorkerCache>>> =
+            self.workers.read().unwrap().values().cloned().collect();
+        for c in caches {
+            if c.lock().unwrap().remove(key) {
+                self.invalidations.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Remove every key under `prefix` from every worker's cache.
+    fn invalidate_prefix(&self, prefix: &str) {
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        let caches: Vec<Arc<Mutex<WorkerCache>>> =
+            self.workers.read().unwrap().values().cloned().collect();
+        for c in caches {
+            let removed = c.lock().unwrap().remove_prefix(prefix);
+            self.invalidations.fetch_add(removed, Ordering::Relaxed);
+        }
+    }
+}
+
+impl BlobStore for CachedBlobStore {
+    fn put(&self, worker: usize, key: &str, value: Matrix) -> Result<()> {
+        if self.cfg.bytes == 0 {
+            return self.inner.put(worker, key, value);
+        }
+        // Write-through with write-allocate: the inner put must succeed
+        // before the tile enters the cache (a chaos-faulted put leaves
+        // no cache entry), and the worker keeps its own output — the
+        // tiles its children read when affinity steering lands them
+        // here. The keep-copy clone is the price of write-allocate;
+        // `cache(bytes=0)` turns it off.
+        let keep = value.clone();
+        let epoch = self.epoch.load(Ordering::SeqCst);
+        self.inner.put(worker, key, value)?;
+        let cache = self.worker_cache(worker);
+        let mut cache = cache.lock().unwrap();
+        if self.epoch.load(Ordering::SeqCst) == epoch {
+            let evicted = cache.insert(self.cfg.bytes, key, Arc::new(keep));
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    fn get(&self, worker: usize, key: &str) -> Result<Arc<Matrix>> {
+        if self.cfg.bytes == 0 {
+            return self.inner.get(worker, key);
+        }
+        let cache = self.worker_cache(worker);
+        if let Some(tile) = cache.lock().unwrap().get(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(tile);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let epoch = self.epoch.load(Ordering::SeqCst);
+        let tile = self.inner.get(worker, key)?;
+        let mut cache = cache.lock().unwrap();
+        // Skip the insert if an invalidation raced the inner fetch —
+        // the tile may be the one a GC sweep just deleted.
+        if self.epoch.load(Ordering::SeqCst) == epoch {
+            let evicted = cache.insert(self.cfg.bytes, key, tile.clone());
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+        Ok(tile)
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.inner.contains(key)
+    }
+
+    fn delete(&self, key: &str) -> Result<bool> {
+        // Inner first: an injected delete fault leaves the substrate
+        // unchanged, so the cache must stay intact too (the GC caller
+        // retries). Invalidation runs only once the delete stuck.
+        let existed = self.inner.delete(key)?;
+        self.invalidate_key(key);
+        Ok(existed)
+    }
+
+    fn scan_prefix(&self, prefix: &str) -> Vec<String> {
+        self.inner.scan_prefix(prefix)
+    }
+
+    fn delete_prefix(&self, prefix: &str) -> usize {
+        let removed = self.inner.delete_prefix(prefix);
+        self.invalidate_prefix(prefix);
+        removed
+    }
+
+    fn prefix_age(&self, prefix: &str) -> Option<Duration> {
+        self.inner.prefix_age(prefix)
+    }
+
+    fn prefix_ages(&self, delimiter: char) -> Vec<(String, Duration)> {
+        self.inner.prefix_ages(delimiter)
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn stats(&self) -> StoreStats {
+        self.inner.stats()
+    }
+
+    fn worker_stats(&self, worker: usize) -> StoreStats {
+        self.inner.worker_stats(worker)
+    }
+
+    fn known_workers(&self) -> Vec<usize> {
+        self.inner.known_workers()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::StrictBlobStore;
+
+    fn cached(bytes: u64) -> CachedBlobStore {
+        CachedBlobStore::new(Arc::new(StrictBlobStore::new()), CacheConfig { bytes })
+    }
+
+    fn tile(rows: usize) -> Matrix {
+        Matrix::zeros(rows, 1)
+    }
+
+    #[test]
+    fn cache_config_grammar() {
+        assert_eq!(CacheConfig::parse("").unwrap(), CacheConfig::default());
+        assert_eq!(CacheConfig::parse("bytes=4096").unwrap().bytes, 4096);
+        assert_eq!(CacheConfig::parse("bytes=32m").unwrap().bytes, 32 << 20);
+        assert_eq!(CacheConfig::parse("bytes=2k").unwrap().bytes, 2048);
+        assert_eq!(CacheConfig::parse("bytes=1G").unwrap().bytes, 1 << 30);
+        assert_eq!(CacheConfig::parse(" bytes = 8 ").unwrap().bytes, 8);
+        assert!(CacheConfig::parse("bytes=soon").is_err());
+        assert!(CacheConfig::parse("nope=1").is_err());
+        assert!(CacheConfig::parse("bytes").is_err());
+    }
+
+    #[test]
+    fn read_through_hit_skips_inner_store() {
+        let c = cached(1 << 20);
+        c.put(1, "j1/A[0,0]", tile(4)).unwrap();
+        // Write-allocate: the worker's own put primes its cache.
+        assert_eq!(c.get(1, "j1/A[0,0]").unwrap().rows(), 4);
+        let stats = c.cache_stats();
+        assert_eq!((stats.hits, stats.misses), (1, 0));
+        // Hits never touch the inner store's read accounting.
+        assert_eq!(c.stats().get_ops, 0);
+        assert_eq!(c.stats().bytes_read, 0);
+        // A different worker misses, then hits its own cache.
+        assert_eq!(c.get(2, "j1/A[0,0]").unwrap().rows(), 4);
+        assert_eq!(c.get(2, "j1/A[0,0]").unwrap().rows(), 4);
+        let stats = c.cache_stats();
+        assert_eq!((stats.hits, stats.misses), (2, 1));
+        assert_eq!(c.stats().get_ops, 1, "one miss, one inner get");
+    }
+
+    #[test]
+    fn lru_evicts_by_byte_budget_in_recency_order() {
+        // Budget fits exactly two 80-byte tiles (10×1 f64).
+        let c = cached(160);
+        c.put(0, "a", tile(10)).unwrap();
+        c.put(0, "b", tile(10)).unwrap();
+        // Touch `a` so `b` is now the least recent.
+        c.get(0, "a").unwrap();
+        c.put(0, "c", tile(10)).unwrap();
+        assert_eq!(c.cache_stats().evictions, 1);
+        assert_eq!(c.cache_stats().hits, 1);
+        // `b` was evicted → inner get; `a` and `c` still hit.
+        let before = c.cache_stats().misses;
+        c.get(0, "a").unwrap();
+        c.get(0, "c").unwrap();
+        assert_eq!(c.cache_stats().misses, before);
+        c.get(0, "b").unwrap();
+        assert_eq!(c.cache_stats().misses, before + 1);
+    }
+
+    #[test]
+    fn oversized_tile_is_stored_but_never_cached() {
+        let c = cached(64);
+        c.put(0, "big", tile(100)).unwrap();
+        assert_eq!(c.get(0, "big").unwrap().rows(), 100);
+        assert_eq!(c.cache_stats().hits, 0);
+        assert_eq!(c.cache_stats().misses, 1);
+    }
+
+    #[test]
+    fn zero_budget_disables_caching_transparently() {
+        let c = cached(0);
+        c.put(0, "a", tile(4)).unwrap();
+        c.get(0, "a").unwrap();
+        c.get(0, "a").unwrap();
+        let stats = c.cache_stats();
+        assert_eq!((stats.hits, stats.misses), (0, 0));
+        assert_eq!(c.stats().get_ops, 2, "every read reaches the inner store");
+    }
+
+    #[test]
+    fn delete_invalidates_every_worker_cache() {
+        let c = cached(1 << 20);
+        c.put(1, "j1/A[0,0]", tile(4)).unwrap();
+        c.get(2, "j1/A[0,0]").unwrap(); // cached for worker 2 as well
+        assert!(c.delete("j1/A[0,0]").unwrap());
+        assert!(c.cache_stats().invalidations >= 2);
+        // Neither worker may serve the deleted tile.
+        assert!(c.get(1, "j1/A[0,0]").is_err());
+        assert!(c.get(2, "j1/A[0,0]").is_err());
+    }
+
+    #[test]
+    fn delete_prefix_sweep_never_serves_stale_tiles() {
+        let c = cached(1 << 20);
+        for i in 0..4 {
+            c.put(1, &format!("j1/S[{i}]"), tile(4)).unwrap();
+            c.put(1, &format!("j2/S[{i}]"), tile(4)).unwrap();
+        }
+        c.get(2, "j1/S[0]").unwrap();
+        // The GC sweep: exact count from the inner store, caches purged.
+        assert_eq!(c.delete_prefix("j1/"), 4);
+        assert_eq!(c.delete_prefix("j1/"), 0, "idempotent");
+        for i in 0..4 {
+            assert!(c.get(1, &format!("j1/S[{i}]")).is_err(), "stale j1/S[{i}]");
+        }
+        assert!(c.get(2, "j1/S[0]").is_err(), "cross-worker stale entry");
+        // The other namespace is untouched and still cached.
+        let hits = c.cache_stats().hits;
+        c.get(1, "j2/S[0]").unwrap();
+        assert_eq!(c.cache_stats().hits, hits + 1);
+    }
+
+    #[test]
+    fn reput_after_delete_serves_the_new_tile() {
+        let c = cached(1 << 20);
+        c.put(0, "k", tile(4)).unwrap();
+        assert!(c.delete("k").unwrap());
+        c.put(0, "k", tile(8)).unwrap();
+        assert_eq!(c.get(0, "k").unwrap().rows(), 8);
+    }
+
+    #[test]
+    fn stats_and_lifecycle_delegate_to_inner() {
+        let c = cached(1 << 20);
+        c.put(3, "j1/A[0]", tile(4)).unwrap();
+        assert!(c.contains("j1/A[0]"));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.scan_prefix("j1/"), vec!["j1/A[0]".to_string()]);
+        assert!(c.prefix_age("j1/").is_some());
+        assert_eq!(c.prefix_ages('/').len(), 1);
+        assert_eq!(c.stats().put_ops, 1);
+        assert_eq!(c.worker_stats(3).put_ops, 1);
+        assert_eq!(c.known_workers(), vec![3]);
+    }
+
+    #[test]
+    fn hit_rate_reports_fraction() {
+        let s = CacheStats {
+            hits: 3,
+            misses: 1,
+            ..CacheStats::default()
+        };
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+}

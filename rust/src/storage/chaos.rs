@@ -550,6 +550,19 @@ impl Queue for ChaosQueue {
         }
     }
 
+    fn send_hinted(&self, body: &str, priority: i64, hint: Option<u64>) {
+        // Explicit forward: the trait default would route through
+        // `self.send` and silently drop the locality hint. Same
+        // shaping as `send` — a duplicated enqueue keeps its hint.
+        if self.sleep {
+            maybe_sleep(self.draws.latency(&self.cfg.send_lat));
+        }
+        self.inner.send_hinted(body, priority, hint);
+        if self.draws.chance(self.cfg.dup) {
+            self.inner.send_hinted(body, priority, hint);
+        }
+    }
+
     fn receive(&self) -> Option<(String, Lease)> {
         if self.sleep {
             maybe_sleep(self.draws.latency(&self.cfg.recv_lat));
@@ -557,11 +570,27 @@ impl Queue for ChaosQueue {
         self.filter(self.inner.receive())
     }
 
+    fn receive_for(&self, worker: u64) -> Option<(String, Lease)> {
+        // Explicit forward so the inner backend sees the claimer id
+        // (the default falls back to hint-agnostic `receive`).
+        if self.sleep {
+            maybe_sleep(self.draws.latency(&self.cfg.recv_lat));
+        }
+        self.filter(self.inner.receive_for(worker))
+    }
+
     fn receive_timeout(&self, timeout: Duration) -> Option<(String, Lease)> {
         if self.sleep {
             maybe_sleep(self.draws.latency(&self.cfg.recv_lat));
         }
         self.filter(self.inner.receive_timeout(timeout))
+    }
+
+    fn receive_timeout_for(&self, worker: u64, timeout: Duration) -> Option<(String, Lease)> {
+        if self.sleep {
+            maybe_sleep(self.draws.latency(&self.cfg.recv_lat));
+        }
+        self.filter(self.inner.receive_timeout_for(worker, timeout))
     }
 
     fn renew(&self, lease: &Lease) -> bool {
@@ -883,6 +912,24 @@ mod tests {
         assert_eq!((b1.as_str(), b2.as_str()), ("t", "t"));
         assert!(q.delete(&l1) && q.delete(&l2));
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn queue_forwards_locality_hints_and_claimer_ids() {
+        // Frozen clock keeps the hint fresh; hint-aware inner backend.
+        let clock = Arc::new(TestClock::default());
+        let inner = crate::storage::ShardedQueue::with_clock(1, Duration::from_secs(10), clock);
+        let q = ChaosQueue::new(Arc::new(inner), ChaosConfig::default(), true);
+        q.send_hinted("for-7", 0, Some(7));
+        q.send("anyone", 0);
+        // Both the send-side hint and the receive-side claimer id must
+        // survive the decorator: worker 9 is steered off the hinted
+        // task, worker 7 claims it (also via the blocking variant).
+        assert_eq!(q.receive_for(9).unwrap().0, "anyone");
+        let (body, _) = q
+            .receive_timeout_for(7, Duration::from_millis(50))
+            .unwrap();
+        assert_eq!(body, "for-7");
     }
 
     #[test]

@@ -22,13 +22,22 @@
 //!   write discipline (`strict_ssa`) — the test and debugging backend.
 //!
 //! Either family can be wrapped in the **chaos decorator layer**
-//! ([`chaos`]) with a `+chaos(…)` suffix on the substrate spec:
+//! ([`chaos`]) with a `+chaos(…)` suffix on the substrate spec, and/or
+//! in the **worker-local tile cache** ([`cache`]) with `+cache(…)`:
 //!
 //! ```text
 //! substrate = sharded:16+chaos(err=0.01,lat=lognorm:5ms)
 //! substrate = strict+chaos(drop=0.05,dup=0.05,seed=7)
 //! substrate = sharded:8+chaos(lat=uniform:1ms:20ms,straggle=0.1:16)
+//! substrate = sharded:auto+cache(bytes=33554432)
+//! substrate = sharded:8+cache(bytes=32m)+chaos(err=0.02,seed=7)
 //! ```
+//!
+//! The cache always composes **outermost** regardless of its position
+//! in the spec: hits are served from worker-local memory (which cannot
+//! fault), misses traverse the chaos layer and are retried by the
+//! normal worker retry budget. See [`cache`] for the write-through /
+//! invalidate-on-lifecycle-op invariants.
 //!
 //! `err` injects transient blob-op failures (get, put, *and* the
 //! lifecycle `delete` — GC callers retry exactly as workers do),
@@ -73,6 +82,7 @@
 //! Time is injectable everywhere a visibility timeout matters — see
 //! [`Clock`], [`WallClock`], [`TestClock`].
 
+pub mod cache;
 pub mod chaos;
 pub mod clock;
 pub mod object_store;
@@ -82,6 +92,7 @@ pub mod sharded;
 pub mod state_store;
 pub mod traits;
 
+pub use cache::{CacheConfig, CacheStats, CachedBlobStore};
 pub use chaos::{ChaosBlobStore, ChaosConfig, ChaosKvState, ChaosQueue, LatencyDist};
 pub use clock::{Clock, TestClock, WallClock};
 pub use object_store::StrictBlobStore;
@@ -102,11 +113,17 @@ pub struct Substrate {
     pub blob: Arc<dyn BlobStore>,
     pub queue: Arc<dyn Queue>,
     pub state: Arc<dyn KvState>,
+    /// The cache layer's concrete handle when the spec carries a
+    /// `+cache(…)` decorator (in that case [`Substrate::blob`] *is*
+    /// this store, viewed through the trait). Kept alongside so the
+    /// executor can read hit/miss counters and gate the affinity
+    /// machinery without downcasting.
+    pub cache: Option<Arc<CachedBlobStore>>,
 }
 
 impl Substrate {
     /// Build the backend family `cfg` selects, on the wall clock,
-    /// wrapped in the chaos layer if the config carries one.
+    /// wrapped in the chaos and cache layers the config carries.
     pub fn build(cfg: &SubstrateConfig, lease: Duration, store_latency: Duration) -> Substrate {
         Self::build_with_clock(cfg, lease, store_latency, Arc::new(WallClock::new()))
     }
@@ -119,9 +136,14 @@ impl Substrate {
         clock: Arc<dyn Clock>,
     ) -> Substrate {
         let base = Self::build_base(cfg, lease, store_latency, clock);
-        match cfg.chaos {
+        let shaped = match cfg.chaos {
             Some(chaos) => base.with_chaos(&chaos, true),
             None => base,
+        };
+        match cfg.cache {
+            // Cache outermost: hits bypass chaos, misses traverse it.
+            Some(cache) => shaped.with_cache(&cache),
+            None => shaped,
         }
     }
 
@@ -132,9 +154,13 @@ impl Substrate {
     /// machinery as the engine.
     pub fn build_sim(cfg: &SubstrateConfig, lease: Duration, clock: Arc<dyn Clock>) -> Substrate {
         let base = Self::build_base(cfg, lease, Duration::ZERO, clock);
-        match cfg.chaos {
+        let shaped = match cfg.chaos {
             Some(chaos) => base.with_chaos(&chaos, false),
             None => base,
+        };
+        match cfg.cache {
+            Some(cache) => shaped.with_cache(&cache),
+            None => shaped,
         }
     }
 
@@ -149,11 +175,13 @@ impl Substrate {
                 blob: Arc::new(StrictBlobStore::with_latency(store_latency)),
                 queue: Arc::new(StrictQueue::with_clock(lease, clock)),
                 state: Arc::new(StrictKvState::new()),
+                cache: None,
             },
             SubstrateBackend::Sharded { shards } => Substrate {
                 blob: Arc::new(ShardedBlobStore::with_latency(shards, store_latency)),
                 queue: Arc::new(ShardedQueue::with_clock(shards, lease, clock)),
                 state: Arc::new(ShardedKvState::new(shards)),
+                cache: None,
             },
             // Engine/JobManager resolve `auto` from their configured
             // worker pool before building; reaching here means a direct
@@ -177,6 +205,26 @@ impl Substrate {
             blob: Arc::new(ChaosBlobStore::new(self.blob, *cfg, sleep)),
             queue: Arc::new(ChaosQueue::new(self.queue, *cfg, sleep)),
             state: Arc::new(ChaosKvState::new(self.state, *cfg, sleep)),
+            cache: self.cache,
+        }
+    }
+
+    /// Wrap the blob handle in the worker-local tile cache (see
+    /// [`cache`]). Applied outermost by the builders — after any chaos
+    /// layer — so cache hits are immune to fault/latency injection.
+    pub fn with_cache(self, cfg: &CacheConfig) -> Substrate {
+        let Substrate {
+            blob,
+            queue,
+            state,
+            cache: _,
+        } = self;
+        let cached = Arc::new(CachedBlobStore::new(blob, *cfg));
+        Substrate {
+            blob: cached.clone(),
+            queue,
+            state,
+            cache: Some(cached),
         }
     }
 }
@@ -195,6 +243,10 @@ mod tests {
             "sharded:auto",
             "strict+chaos()",
             "sharded:4+chaos(lat=fixed:0us,seed=3)",
+            "sharded:4+cache(bytes=1048576)",
+            "strict+cache()",
+            "sharded:4+cache(bytes=2m)+chaos(lat=fixed:0us,seed=3)",
+            "sharded:4+chaos(lat=fixed:0us,seed=3)+cache(bytes=2m)",
         ] {
             let cfg = SubstrateConfig::parse(spec).unwrap();
             let sub = Substrate::build(&cfg, lease, Duration::ZERO);
@@ -204,6 +256,28 @@ mod tests {
             assert!(sub.state.set_nx("k", "v"));
             assert!(!sub.state.set_nx("k", "v"));
             assert!(sub.blob.is_empty());
+            assert_eq!(sub.cache.is_some(), spec.contains("+cache"));
         }
+    }
+
+    #[test]
+    fn cache_layer_composes_outermost_over_chaos() {
+        use crate::linalg::matrix::Matrix;
+        // Order in the spec must not matter: blob is the cache either way.
+        for spec in [
+            "strict+cache(bytes=1m)+chaos(lat=fixed:0us,seed=1)",
+            "strict+chaos(lat=fixed:0us,seed=1)+cache(bytes=1m)",
+        ] {
+            let cfg = SubstrateConfig::parse(spec).unwrap();
+            let sub = Substrate::build(&cfg, lease_secs(1), Duration::ZERO);
+            let cache = sub.cache.as_ref().expect("cache layer present");
+            sub.blob.put(0, "k", Matrix::zeros(2, 2)).unwrap();
+            sub.blob.get(0, "k").unwrap();
+            assert_eq!(cache.cache_stats().hits, 1, "[{spec}]");
+        }
+    }
+
+    fn lease_secs(s: u64) -> Duration {
+        Duration::from_secs(s)
     }
 }

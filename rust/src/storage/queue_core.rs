@@ -28,6 +28,13 @@ struct Message {
     /// cannot delete/renew.
     receipt: u64,
     delivery_count: u32,
+    /// Soft locality hint: the worker believed to hold this task's
+    /// input tiles locally. Advisory only — see `try_receive_for`.
+    hint: Option<u64>,
+    /// When the hint was recorded (queue-clock time); hints age out
+    /// after the caller's staleness bound so a dead hinted worker
+    /// never pins a message.
+    hinted_at: Duration,
 }
 
 /// The mechanics of one (shard of a) queue. Not thread-safe — callers
@@ -44,6 +51,19 @@ pub(crate) struct QueueCore {
 impl QueueCore {
     /// Insert a message under a caller-assigned unique id.
     pub(crate) fn insert(&mut self, id: u64, body: &str, priority: i64) {
+        self.insert_hinted(id, body, priority, None, Duration::ZERO);
+    }
+
+    /// [`QueueCore::insert`] with an optional locality hint, stamped
+    /// with the enqueue time `now` so receives can age the hint out.
+    pub(crate) fn insert_hinted(
+        &mut self,
+        id: u64,
+        body: &str,
+        priority: i64,
+        hint: Option<u64>,
+        now: Duration,
+    ) {
         self.messages.insert(
             id,
             Message {
@@ -52,6 +72,8 @@ impl QueueCore {
                 invisible_until: Duration::ZERO,
                 receipt: 0,
                 delivery_count: 0,
+                hint,
+                hinted_at: now,
             },
         );
         self.visible.push((priority, Reverse(id)));
@@ -82,23 +104,101 @@ impl QueueCore {
                     self.visible.pop()?
                 }
             };
-            let Some(m) = self.messages.get_mut(&id) else {
+            let Some(m) = self.messages.get(&id) else {
                 continue; // deleted since pushed — stale entry
             };
             if m.invisible_until > now && m.invisible_until != Duration::ZERO {
                 continue; // leased since pushed — stale entry
             }
-            m.invisible_until = now + lease_len;
-            m.receipt += 1;
-            m.delivery_count += 1;
-            return Some((
-                m.body.clone(),
-                Lease {
-                    msg_id: id,
-                    receipt: m.receipt,
-                },
-            ));
+            return Some(self.lease(id, now, lease_len));
         }
+    }
+
+    /// [`QueueCore::try_receive`] with affinity steering for `claimer`.
+    ///
+    /// Within the **equal-top-priority group** only, a message hinted
+    /// at a *different* worker (and whose hint is younger than
+    /// `staleness`) is deferred in favor of the next candidate without
+    /// such a hint. If the entire group is hinted elsewhere, the
+    /// FIFO-best deferred message is delivered anyway — a receive
+    /// never comes back empty while a visible message exists, so
+    /// steering delays a message by at most the staleness window and
+    /// can never starve it. A lower-priority message is never taken
+    /// ahead of a deferred higher-priority one: steering bends FIFO
+    /// within one priority, nothing more.
+    pub(crate) fn try_receive_for(
+        &mut self,
+        now: Duration,
+        lease_len: Duration,
+        claimer: u64,
+        staleness: Duration,
+    ) -> Option<(String, Lease)> {
+        let mut deferred: Vec<(i64, Reverse<u64>)> = Vec::new();
+        let mut chosen: Option<u64> = None;
+        loop {
+            let (prio, Reverse(id)) = match self.visible.pop() {
+                Some(x) => x,
+                None => {
+                    // Heap dry: maybe leases expired — refresh once.
+                    self.refresh_expired(now);
+                    match self.visible.pop() {
+                        Some(x) => x,
+                        None => break,
+                    }
+                }
+            };
+            let Some(m) = self.messages.get(&id) else {
+                continue; // deleted since pushed — stale entry
+            };
+            if m.invisible_until > now && m.invisible_until != Duration::ZERO {
+                continue; // leased since pushed — stale entry
+            }
+            if let Some(&(group, _)) = deferred.first() {
+                if prio < group {
+                    // The equal-priority group is exhausted; taking
+                    // this one would invert priority. Restore it and
+                    // fall back to the best deferred message.
+                    self.visible.push((prio, Reverse(id)));
+                    break;
+                }
+            }
+            let steered_away = match m.hint {
+                Some(h) => h != claimer && now.saturating_sub(m.hinted_at) < staleness,
+                None => false,
+            };
+            if !steered_away {
+                chosen = Some(id);
+                break;
+            }
+            deferred.push((prio, Reverse(id)));
+        }
+        let mut deferred = deferred.into_iter();
+        let id = match chosen {
+            Some(id) => id,
+            // Whole group steered elsewhere → take the FIFO-best
+            // anyway (no starvation); `None` only when nothing is
+            // visible at all.
+            None => deferred.next()?.1 .0,
+        };
+        for entry in deferred {
+            self.visible.push(entry);
+        }
+        Some(self.lease(id, now, lease_len))
+    }
+
+    /// Take the lease on a validated visible candidate.
+    fn lease(&mut self, id: u64, now: Duration, lease_len: Duration) -> (String, Lease) {
+        let m = self.messages.get_mut(&id).expect("validated candidate");
+        m.invisible_until = now + lease_len;
+        m.receipt += 1;
+        m.delivery_count += 1;
+        (
+            m.body.clone(),
+            Lease {
+                msg_id: id,
+                receipt: m.receipt,
+            },
+        )
     }
 
     /// Extend the lease to `now + lease_len` iff it is current.

@@ -17,6 +17,16 @@
 //! staleness behave identically to the strict backend — the per-shard
 //! mechanics are the shared crate-private `QueueCore`.
 //!
+//! Affinity: `send_hinted` stamps a message with a soft locality hint
+//! (the worker holding its input tiles in the local tile cache — see
+//! [`crate::storage::cache`]), and `receive_for` steers hinted
+//! messages toward that worker *within the equal-top-priority group of
+//! one shard only*. The hint ages out after a bounded staleness window
+//! ([`DEFAULT_HINT_STALENESS`]), and a receive falls back to the
+//! FIFO-best steered message rather than come back empty — so priority
+//! order is never inverted, no worker idles while work is visible, and
+//! a dead hinted worker delays a message by at most the window.
+//!
 //! Blocking receives park on an epoch counter + condvar: `send` bumps
 //! an atomic epoch, and a receiver only sleeps if the epoch has not
 //! moved since it scanned the shards — no lost wakeups (the receiver
@@ -34,12 +44,21 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+/// How long a locality hint may steer a message away from
+/// non-preferred workers before it is considered stale (see
+/// [`Queue::receive_for`]): comfortably above the 10 ms receive-park
+/// cap, so a hinted worker that is merely mid-poll gets a claim
+/// window, yet small enough that a slow or dead hinted worker delays
+/// a message imperceptibly.
+pub const DEFAULT_HINT_STALENESS: Duration = Duration::from_millis(30);
+
 /// The queue. Clone-shared.
 #[derive(Clone)]
 pub struct ShardedQueue {
     inner: Arc<Inner>,
     clock: Arc<dyn Clock>,
     default_lease: Duration,
+    hint_staleness: Duration,
 }
 
 struct Inner {
@@ -76,48 +95,48 @@ impl ShardedQueue {
             }),
             clock,
             default_lease,
+            hint_staleness: DEFAULT_HINT_STALENESS,
         }
+    }
+
+    /// Override the hint staleness bound (tests use a `TestClock`-sized
+    /// window; [`DEFAULT_HINT_STALENESS`] otherwise).
+    pub fn with_hint_staleness(mut self, staleness: Duration) -> Self {
+        self.hint_staleness = staleness;
+        self
     }
 
     fn shard_for_id(&self, id: u64) -> &Mutex<QueueCore> {
         let n = self.inner.shards.len();
         &self.inner.shards[(id % n as u64) as usize]
     }
-}
 
-impl Queue for ShardedQueue {
-    fn send(&self, body: &str, priority: i64) {
-        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
-        self.shard_for_id(id).lock().unwrap().insert(id, body, priority);
-        self.inner.epoch.fetch_add(1, Ordering::SeqCst);
-        // Fast path: nobody parked → no global lock on the send path.
-        if self.inner.waiters.load(Ordering::SeqCst) > 0 {
-            // Lock the park mutex so the notify cannot slip between a
-            // parked receiver's epoch re-check and its wait.
-            let _guard = self.inner.park.lock().unwrap();
-            // One new message → one receiver is enough to wake.
-            self.inner.cv.notify_one();
-        }
-    }
-
-    fn receive(&self) -> Option<(String, Lease)> {
+    /// One work-stealing pass over the shards; with a claimer, each
+    /// shard applies affinity steering.
+    fn scan(&self, claimer: Option<u64>) -> Option<(String, Lease)> {
         let now = self.clock.now();
         let n = self.inner.shards.len();
         let start = self.inner.rr.fetch_add(1, Ordering::Relaxed) % n;
         for k in 0..n {
-            let shard = &self.inner.shards[(start + k) % n];
-            if let Some(x) = shard.lock().unwrap().try_receive(now, self.default_lease) {
-                return Some(x);
+            let mut shard = self.inner.shards[(start + k) % n].lock().unwrap();
+            let got = match claimer {
+                Some(w) => shard.try_receive_for(now, self.default_lease, w, self.hint_staleness),
+                None => shard.try_receive(now, self.default_lease),
+            };
+            if got.is_some() {
+                return got;
             }
         }
         None
     }
 
-    fn receive_timeout(&self, timeout: Duration) -> Option<(String, Lease)> {
+    /// The epoch-parked blocking receive behind both
+    /// [`Queue::receive_timeout`] and [`Queue::receive_timeout_for`].
+    fn scan_timeout(&self, claimer: Option<u64>, timeout: Duration) -> Option<(String, Lease)> {
         let deadline = Instant::now() + timeout;
         loop {
             let seen = self.inner.epoch.load(Ordering::SeqCst);
-            if let Some(x) = self.receive() {
+            if let Some(x) = self.scan(claimer) {
                 return Some(x);
             }
             let Some(remaining) = deadline.checked_duration_since(Instant::now()) else {
@@ -141,6 +160,45 @@ impl Queue for ShardedQueue {
             }
             self.inner.waiters.fetch_sub(1, Ordering::SeqCst);
         }
+    }
+}
+
+impl Queue for ShardedQueue {
+    fn send(&self, body: &str, priority: i64) {
+        self.send_hinted(body, priority, None);
+    }
+
+    fn send_hinted(&self, body: &str, priority: i64, hint: Option<u64>) {
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        self.shard_for_id(id)
+            .lock()
+            .unwrap()
+            .insert_hinted(id, body, priority, hint, self.clock.now());
+        self.inner.epoch.fetch_add(1, Ordering::SeqCst);
+        // Fast path: nobody parked → no global lock on the send path.
+        if self.inner.waiters.load(Ordering::SeqCst) > 0 {
+            // Lock the park mutex so the notify cannot slip between a
+            // parked receiver's epoch re-check and its wait.
+            let _guard = self.inner.park.lock().unwrap();
+            // One new message → one receiver is enough to wake.
+            self.inner.cv.notify_one();
+        }
+    }
+
+    fn receive(&self) -> Option<(String, Lease)> {
+        self.scan(None)
+    }
+
+    fn receive_for(&self, worker: u64) -> Option<(String, Lease)> {
+        self.scan(Some(worker))
+    }
+
+    fn receive_timeout(&self, timeout: Duration) -> Option<(String, Lease)> {
+        self.scan_timeout(None, timeout)
+    }
+
+    fn receive_timeout_for(&self, worker: u64, timeout: Duration) -> Option<(String, Lease)> {
+        self.scan_timeout(Some(worker), timeout)
     }
 
     fn renew(&self, lease: &Lease) -> bool {
@@ -283,6 +341,80 @@ mod tests {
             assert_eq!(q.purge_prefix("2|"), q.len(), "[{n} shards]");
             assert!(q.is_empty(), "[{n} shards]");
         }
+    }
+
+    #[test]
+    fn hinted_messages_steer_toward_their_worker_among_equal_priority() {
+        // Frozen clock: hints stay fresh regardless of test-host pace.
+        let clock = Arc::new(TestClock::default());
+        let q = ShardedQueue::with_clock(1, Duration::from_secs(10), clock);
+        q.send_hinted("for-7", 0, Some(7));
+        q.send("anyone", 0);
+        // Worker 9 skips the fresh hint and takes the unhinted task,
+        // even though FIFO order would give it "for-7".
+        assert_eq!(q.receive_for(9).unwrap().0, "anyone");
+        // The hinted worker claims its own task.
+        assert_eq!(q.receive_for(7).unwrap().0, "for-7");
+    }
+
+    #[test]
+    fn steering_never_inverts_priority() {
+        let clock = Arc::new(TestClock::default());
+        let q = ShardedQueue::with_clock(1, Duration::from_secs(10), clock);
+        q.send_hinted("high-for-7", 5, Some(7));
+        q.send("low", 1);
+        // Worker 9 must take the higher-priority task (fallback to the
+        // steered message), never the lower-priority unhinted one.
+        assert_eq!(q.receive_for(9).unwrap().0, "high-for-7");
+        assert_eq!(q.receive_for(9).unwrap().0, "low");
+    }
+
+    #[test]
+    fn all_hinted_elsewhere_falls_back_fifo_without_starving() {
+        let clock = Arc::new(TestClock::default());
+        let q = ShardedQueue::with_clock(1, Duration::from_secs(10), clock);
+        q.send_hinted("first", 0, Some(7));
+        q.send_hinted("second", 0, Some(7));
+        // No unhinted candidate exists: worker 9 still gets work, in
+        // FIFO order — a hint is a preference, never a reservation.
+        assert_eq!(q.receive_for(9).unwrap().0, "first");
+        assert_eq!(q.receive_for(9).unwrap().0, "second");
+        assert!(q.receive_for(9).is_none());
+    }
+
+    #[test]
+    fn hints_age_out_after_the_staleness_bound() {
+        let clock = Arc::new(TestClock::default());
+        let q = ShardedQueue::with_clock(1, Duration::from_secs(10), clock.clone())
+            .with_hint_staleness(Duration::from_secs(1));
+        q.send_hinted("for-7", 0, Some(7));
+        q.send("anyone", 0);
+        assert_eq!(q.receive_for(9).unwrap().0, "anyone", "fresh hint steers");
+        clock.advance(Duration::from_secs(2));
+        // Hint is past the staleness bound — worker 9 claims it.
+        assert_eq!(q.receive_for(9).unwrap().0, "for-7");
+    }
+
+    #[test]
+    fn plain_receive_ignores_hints() {
+        let q = ShardedQueue::new(1, Duration::from_secs(10));
+        q.send_hinted("for-7", 0, Some(7));
+        q.send("anyone", 0);
+        assert_eq!(q.receive().unwrap().0, "for-7", "FIFO, hint-agnostic");
+    }
+
+    #[test]
+    fn steered_receive_honors_leases_and_redelivery() {
+        let clock = Arc::new(TestClock::default());
+        let q = ShardedQueue::with_clock(1, Duration::from_secs(10), clock.clone());
+        q.send_hinted("t", 0, Some(7));
+        let (_, lease) = q.receive_for(7).unwrap();
+        assert!(q.receive_for(7).is_none(), "invisible while leased");
+        clock.advance(Duration::from_secs(11));
+        let (_, lease2) = q.receive_for(9).unwrap();
+        assert!(!q.delete(&lease), "stale lease rejected");
+        assert!(q.delete(&lease2));
+        assert!(q.is_empty());
     }
 
     #[test]

@@ -163,12 +163,46 @@ pub trait Queue: Send + Sync {
     /// Enqueue a message.
     fn send(&self, body: &str, priority: i64);
 
+    /// Enqueue a message carrying a **soft locality hint**: the id of
+    /// the worker believed to hold this task's input tiles in its
+    /// local cache (see `crate::storage::cache`). Hints never change
+    /// delivery guarantees — only *which equally-eligible receiver* a
+    /// hint-aware backend prefers, and only within a bounded staleness
+    /// window so a slow or dead hinted worker never starves the
+    /// message. Backends without affinity support (the default) drop
+    /// the hint and deliver normally.
+    fn send_hinted(&self, body: &str, priority: i64, hint: Option<u64>) {
+        let _ = hint;
+        self.send(body, priority);
+    }
+
     /// Try to receive the best visible message; takes a lease for the
     /// queue's default lease duration. Non-blocking.
     fn receive(&self) -> Option<(String, Lease)>;
 
+    /// [`Queue::receive`] identifying the claiming worker, so a
+    /// hint-aware backend can steer hinted messages toward their
+    /// preferred worker among candidates of **equal** priority.
+    /// Priority order and FIFO-within-priority for unhinted messages
+    /// are never violated, and a message whose hint names another
+    /// worker is still delivered here once its hint ages past the
+    /// staleness bound or no better candidate exists. Defaults to
+    /// plain [`Queue::receive`] (hints ignored).
+    fn receive_for(&self, worker: u64) -> Option<(String, Lease)> {
+        let _ = worker;
+        self.receive()
+    }
+
     /// Blocking receive with timeout. Returns `None` on timeout.
     fn receive_timeout(&self, timeout: Duration) -> Option<(String, Lease)>;
+
+    /// Blocking [`Queue::receive_for`] with timeout; same affinity
+    /// semantics, same `None`-on-timeout contract as
+    /// [`Queue::receive_timeout`], which is also the default.
+    fn receive_timeout_for(&self, worker: u64, timeout: Duration) -> Option<(String, Lease)> {
+        let _ = worker;
+        self.receive_timeout(timeout)
+    }
 
     /// Renew the lease for another lease period from now. Fails if the
     /// lease is stale (message redelivered or deleted).

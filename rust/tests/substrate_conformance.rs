@@ -24,7 +24,10 @@ const LEASE: Duration = Duration::from_secs(10);
 /// chaos-wrapped entries exercise the decorator layer with pure
 /// latency shaping (zero fault probabilities): the decorators must
 /// preserve every trait contract bit-for-bit — they perturb timing,
-/// never semantics.
+/// never semantics. The cache-wrapped entries pin the same bar for
+/// the worker-local tile cache (read results and lifecycle semantics
+/// unchanged; only the read *accounting* legitimately differs — see
+/// `blob_read_after_write_and_accounting`).
 fn backends() -> Vec<(&'static str, Substrate, Arc<TestClock>)> {
     [
         "strict",
@@ -38,6 +41,8 @@ fn backends() -> Vec<(&'static str, Substrate, Arc<TestClock>)> {
         "strict+chaos(lat=fixed:20us,recv_lat=10us,kv_lat=5us,seed=3)",
         "sharded:4+chaos(lat=uniform:5us:50us,straggle=0.25:4,seed=5)",
         "sharded:4+chaos(send_lat=5us,seed=7)",
+        "sharded:4+cache(bytes=1048576)",
+        "sharded:4+cache(bytes=2m)+chaos(lat=fixed:10us,seed=9)",
     ]
     .into_iter()
     .map(|spec| {
@@ -291,11 +296,20 @@ fn blob_read_after_write_and_accounting() {
         assert!(!blob.contains("T[9,9]"), "[{spec}]");
         assert!(blob.get(0, "T[9,9]").is_err(), "[{spec}]");
         let stats = blob.stats();
-        // 1×2 f64 tiles = 16 bytes each way per op.
+        // 1×2 f64 tiles = 16 bytes each way per op. Writes always
+        // reach the substrate (write-through); reads only do on a
+        // cache miss, and write-allocate makes every read-back after
+        // a same-worker put a local hit — the whole point of the
+        // locality layer is that `bytes_read` drops to zero here.
         assert_eq!(stats.put_ops, 8 * 16, "[{spec}]");
-        assert_eq!(stats.get_ops, 8 * 16, "[{spec}]");
         assert_eq!(stats.bytes_written, 8 * 16 * 16, "[{spec}]");
-        assert_eq!(stats.bytes_read, 8 * 16 * 16, "[{spec}]");
+        if spec.contains("+cache") {
+            assert_eq!(stats.get_ops, 0, "[{spec}] all reads served locally");
+            assert_eq!(stats.bytes_read, 0, "[{spec}]");
+        } else {
+            assert_eq!(stats.get_ops, 8 * 16, "[{spec}]");
+            assert_eq!(stats.bytes_read, 8 * 16 * 16, "[{spec}]");
+        }
         assert_eq!(blob.known_workers().len(), 8, "[{spec}]");
         assert_eq!(blob.worker_stats(3).put_ops, 16, "[{spec}]");
         assert_eq!(blob.worker_stats(99).put_ops, 0, "[{spec}]");
@@ -373,6 +387,46 @@ fn blob_prefix_age_contract() {
         assert_eq!(blob.prefix_age("j1/"), None, "[{spec}]");
         assert_eq!(blob.prefix_ages('/').len(), 1, "[{spec}] j2 remains");
     }
+}
+
+#[test]
+fn cache_invalidation_tracks_gc_sweeps() {
+    // Retention / TTL sweeps reclaim whole namespaces through the same
+    // decorated `Arc<dyn BlobStore>` handle the workers read through;
+    // a worker cache surviving the sweep would resurrect deleted
+    // tiles. Pin invalidate-on-lifecycle-op end-to-end.
+    let cfg = SubstrateConfig::parse("sharded:4+cache(bytes=4m)").unwrap();
+    let sub = Substrate::build_with_clock(
+        &cfg,
+        LEASE,
+        Duration::ZERO,
+        Arc::new(TestClock::default()),
+    );
+    let blob = sub.blob.clone();
+    let cache = sub.cache.clone().expect("+cache spec populates the handle");
+    blob.put(0, "j1/T[0]", Matrix::from_vec(1, 1, vec![1.0])).unwrap();
+    blob.put(0, "j1/T[1]", Matrix::from_vec(1, 1, vec![2.0])).unwrap();
+    blob.put(1, "j2/T[0]", Matrix::from_vec(1, 1, vec![3.0])).unwrap();
+    // Warm worker 0's cache, then sweep j1 the way job GC does.
+    assert_eq!(blob.get(0, "j1/T[0]").unwrap()[(0, 0)], 1.0);
+    assert_eq!(cache.cache_stats().hits, 1, "write-allocate primes the cache");
+    assert_eq!(blob.delete_prefix("j1/"), 2);
+    assert!(blob.get(0, "j1/T[0]").is_err(), "swept tile served from cache");
+    assert!(blob.get(0, "j1/T[1]").is_err());
+    // The neighbor namespace's cached tile is untouched.
+    assert_eq!(blob.get(1, "j2/T[0]").unwrap()[(0, 0)], 3.0);
+    // Single-key delete invalidates every worker's cache, not just the
+    // writer's.
+    blob.put(0, "j1/T[0]", Matrix::from_vec(1, 1, vec![4.0])).unwrap();
+    assert_eq!(blob.get(1, "j1/T[0]").unwrap()[(0, 0)], 4.0);
+    assert!(blob.delete("j1/T[0]").unwrap());
+    assert!(blob.get(1, "j1/T[0]").is_err(), "cross-worker invalidation");
+    // Re-put after the delete serves the new tile, never the ghost.
+    blob.put(2, "j1/T[0]", Matrix::from_vec(1, 1, vec![5.0])).unwrap();
+    assert_eq!(blob.get(0, "j1/T[0]").unwrap()[(0, 0)], 5.0);
+    assert_eq!(blob.get(1, "j1/T[0]").unwrap()[(0, 0)], 5.0);
+    let stats = cache.cache_stats();
+    assert!(stats.invalidations >= 3, "{stats:?}");
 }
 
 #[test]
@@ -459,6 +513,10 @@ fn engine_cholesky_correct_on_every_backend() {
         "sharded:4+chaos(err=0.02,lat=fixed:50us,seed=11)",
         "strict+chaos(drop=0.05,dup=0.05,seed=13)",
         "sharded:4+chaos(send_lat=uniform:10us:100us,seed=17)",
+        // The locality layer in full: LRU tile cache + chain-import
+        // prefetch + hinted claiming, with and without chaos under it.
+        "sharded:4+cache(bytes=8m)",
+        "sharded:4+cache(bytes=8388608)+chaos(err=0.02,lat=fixed:50us,seed=11)",
     ] {
         let mut rng = Rng::new(17);
         let a = Matrix::rand_spd(24, &mut rng);
@@ -484,21 +542,33 @@ fn engine_recovers_from_heavy_chaos_faults() {
     // err=0.3 defeats the inline retry budget often enough that some
     // tasks are abandoned to lease-expiry recovery — the full §4.1
     // path (stop renewing → visibility timeout → redelivery →
-    // idempotent re-execution) on the real engine.
-    let mut rng = Rng::new(19);
-    let a = Matrix::rand_spd(24, &mut rng);
-    let cfg = EngineConfig {
-        scaling: ScalingMode::Fixed(6),
-        lease: Duration::from_millis(80),
-        job_timeout: Duration::from_secs(120),
-        substrate: SubstrateConfig::parse("sharded:4+chaos(err=0.3,seed=23)").unwrap(),
-        ..EngineConfig::default()
-    };
-    let out = drivers::cholesky(&Engine::new(cfg), &a, 8).unwrap();
-    assert!(out.result.matmul_nt(&out.result).max_abs_diff(&a) < 1e-8);
-    let r = &out.run.report;
-    assert_eq!(r.completed, r.total_tasks);
-    assert!(r.error.is_none());
+    // idempotent re-execution) on the real engine. The cache leg pins
+    // that redelivered tasks re-reading through warm worker caches
+    // still land on exact numerics: invalidation-on-delete plus SSA
+    // writes mean a cached tile is never stale.
+    for spec in [
+        "sharded:4+chaos(err=0.3,seed=23)",
+        "sharded:4+cache(bytes=8m)+chaos(err=0.3,seed=23)",
+    ] {
+        let mut rng = Rng::new(19);
+        let a = Matrix::rand_spd(24, &mut rng);
+        let cfg = EngineConfig {
+            scaling: ScalingMode::Fixed(6),
+            lease: Duration::from_millis(80),
+            job_timeout: Duration::from_secs(120),
+            substrate: SubstrateConfig::parse(spec).unwrap(),
+            ..EngineConfig::default()
+        };
+        let out = drivers::cholesky(&Engine::new(cfg), &a, 8).unwrap();
+        assert!(
+            out.result.matmul_nt(&out.result).max_abs_diff(&a) < 1e-8,
+            "[{spec}] LLᵀ ≠ A"
+        );
+        let r = &out.run.report;
+        assert_eq!(r.completed, r.total_tasks, "[{spec}]");
+        assert!(r.error.is_none(), "[{spec}]");
+        assert_eq!(r.cache.is_some(), spec.contains("+cache"), "[{spec}]");
+    }
 }
 
 #[test]
