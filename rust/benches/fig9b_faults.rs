@@ -46,7 +46,7 @@ fn sim_leg() {
         ..SimConfig::default()
     };
     // Baseline (no kill) to locate t≈150s equivalent (40% in).
-    let base = ServerlessSim::new(&w, CostModel::default(), cfg).run();
+    let base = ServerlessSim::new(&w, CostModel::default(), cfg.clone()).run();
     let kill_at = base.completion_time * 0.4;
     let cfg_f = SimConfig {
         failure: Some((kill_at, 0.8)),

@@ -1,0 +1,226 @@
+//! §Perf — the durable file substrate family (`file:<dir>[:N]`).
+//!
+//! Three questions, answered with numbers:
+//!
+//! * what does durability cost? — tile put/get and queue round-trip
+//!   throughput on `file:` vs the in-memory `sharded:4` baseline;
+//! * what does *crash-consistent* durability cost? — the same file
+//!   legs with `NUMPYWREN_FILE_FSYNC=1` (every staged write synced
+//!   before its rename);
+//! * how fast does a daemon come back? — recovery-scan latency:
+//!   re-open a populated directory and walk every `jN/manifest` the
+//!   way `Daemon::recover` does.
+//!
+//! Emits `BENCH_file.json` (uploaded as a CI artifact by the
+//! bench-smoke job; `NUMPYWREN_BENCH_QUICK=1` trims the sizes).
+
+use numpywren::config::SubstrateConfig;
+use numpywren::linalg::matrix::Matrix;
+use numpywren::storage::Substrate;
+use numpywren::util::prng::Rng;
+use numpywren::util::timer::Stopwatch;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+const BLOCK: usize = 16;
+const LEASE: Duration = Duration::from_secs(30);
+
+fn quick() -> bool {
+    std::env::var("NUMPYWREN_BENCH_QUICK").as_deref() == Ok("1")
+}
+
+fn tiles() -> usize {
+    if quick() {
+        64
+    } else {
+        512
+    }
+}
+
+fn msgs() -> usize {
+    if quick() {
+        256
+    } else {
+        2048
+    }
+}
+
+fn namespaces() -> usize {
+    if quick() {
+        8
+    } else {
+        32
+    }
+}
+
+fn keys_per_ns() -> usize {
+    if quick() {
+        32
+    } else {
+        128
+    }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("npw_perf_file_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn file_substrate(dir: &Path) -> Substrate {
+    let cfg = SubstrateConfig::parse(&format!("file:{}", dir.display())).unwrap();
+    Substrate::build(&cfg, LEASE, Duration::ZERO)
+}
+
+struct Leg {
+    label: &'static str,
+    put_per_sec: f64,
+    get_per_sec: f64,
+    queue_per_sec: f64,
+}
+
+/// Throughput of the three trait surfaces on one substrate. Every leg
+/// pays the same tile-clone cost, so the comparison isolates the
+/// backend.
+fn bench_substrate(label: &'static str, sub: &Substrate) -> Leg {
+    let mut rng = Rng::new(0xF11E);
+    let tile = Matrix::randn(BLOCK, BLOCK, &mut rng);
+
+    let sw = Stopwatch::start();
+    for i in 0..tiles() {
+        sub.blob.put(0, &format!("bench/T[{i}]"), tile.clone()).unwrap();
+    }
+    let put_secs = sw.secs();
+
+    let sw = Stopwatch::start();
+    for i in 0..tiles() {
+        let got = sub.blob.get(0, &format!("bench/T[{i}]")).unwrap();
+        assert_eq!(got.rows(), BLOCK);
+    }
+    let get_secs = sw.secs();
+
+    let sw = Stopwatch::start();
+    for i in 0..msgs() {
+        sub.queue.send(&format!("m{i}"), 0);
+    }
+    let mut drained = 0usize;
+    while let Some((_, lease)) = sub.queue.receive() {
+        assert!(sub.queue.delete(&lease));
+        drained += 1;
+    }
+    let queue_secs = sw.secs();
+    assert_eq!(drained, msgs(), "[{label}] queue did not drain");
+
+    Leg {
+        label,
+        put_per_sec: tiles() as f64 / put_secs.max(1e-9),
+        get_per_sec: tiles() as f64 / get_secs.max(1e-9),
+        queue_per_sec: msgs() as f64 / queue_secs.max(1e-9),
+    }
+}
+
+/// Populate a directory the way finished jobs leave it, then time a
+/// cold re-open plus the manifest walk `Daemon::recover` performs.
+fn bench_recovery(dir: &Path) -> (f64, usize) {
+    let seeded = file_substrate(dir);
+    let mut rng = Rng::new(0xDEAD);
+    let tile = Matrix::randn(BLOCK, BLOCK, &mut rng);
+    for j in 1..=namespaces() {
+        seeded.state.set(&format!("j{j}/manifest"), "{\"algo\": \"cholesky\"}");
+        for k in 0..keys_per_ns() {
+            seeded.state.set(&format!("j{j}/status:{k}"), "done");
+            seeded.blob.put(0, &format!("j{j}/T[{k}]"), tile.clone()).unwrap();
+        }
+    }
+    drop(seeded);
+
+    let sw = Stopwatch::start();
+    let reopened = file_substrate(dir);
+    let manifests: Vec<String> = reopened
+        .state
+        .scan_prefix("j")
+        .into_iter()
+        .filter(|k| k.ends_with("/manifest"))
+        .collect();
+    let mut bodies = 0usize;
+    for key in &manifests {
+        if reopened.state.get(key).is_some() {
+            bodies += 1;
+        }
+    }
+    (sw.secs(), bodies)
+}
+
+fn main() {
+    println!(
+        "# §Perf file substrate — {} tiles of {BLOCK}x{BLOCK}, {} queue round-trips",
+        tiles(),
+        msgs()
+    );
+    // The file legs must not inherit a stray fsync toggle.
+    std::env::remove_var("NUMPYWREN_FILE_FSYNC");
+
+    let cfg = SubstrateConfig::parse("sharded:4").unwrap();
+    let mem = Substrate::build(&cfg, LEASE, Duration::ZERO);
+    let sharded = bench_substrate("sharded:4", &mem);
+
+    let plain_dir = tmpdir("plain");
+    let plain = bench_substrate("file", &file_substrate(&plain_dir));
+
+    // The fsync policy is read once at open, so set it just for this
+    // leg's build.
+    let fsync_dir = tmpdir("fsync");
+    std::env::set_var("NUMPYWREN_FILE_FSYNC", "1");
+    let fsync_sub = file_substrate(&fsync_dir);
+    std::env::remove_var("NUMPYWREN_FILE_FSYNC");
+    let fsync = bench_substrate("file+fsync", &fsync_sub);
+
+    let recovery_dir = tmpdir("recovery");
+    let (recovery_secs, recovered) = bench_recovery(&recovery_dir);
+    assert_eq!(recovered, namespaces(), "recovery scan lost manifests");
+
+    for leg in [&sharded, &plain, &fsync] {
+        println!(
+            "{:<10} put/s={:.0} get/s={:.0} queue-rt/s={:.0}",
+            leg.label, leg.put_per_sec, leg.get_per_sec, leg.queue_per_sec
+        );
+    }
+    println!(
+        "recovery: {} namespaces x {} keys re-attached in {recovery_secs:.4}s",
+        namespaces(),
+        keys_per_ns()
+    );
+
+    // Hand-rolled JSON (no serde in the offline crate set).
+    let mut json = String::from("{\n  \"bench\": \"perf_file\",\n");
+    json.push_str(&format!(
+        "  \"tiles\": {}, \"block\": {BLOCK}, \"msgs\": {},\n  \"legs\": [\n",
+        tiles(),
+        msgs()
+    ));
+    let legs = [&sharded, &plain, &fsync];
+    for (i, leg) in legs.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"label\": \"{}\", \"put_per_sec\": {:.1}, \"get_per_sec\": {:.1}, \
+             \"queue_per_sec\": {:.1}}}{}\n",
+            leg.label,
+            leg.put_per_sec,
+            leg.get_per_sec,
+            leg.queue_per_sec,
+            if i + 1 == legs.len() { "" } else { "," }
+        ));
+    }
+    json.push_str(&format!(
+        "  ],\n  \"recovery\": {{\"namespaces\": {}, \"keys_per_ns\": {}, \
+         \"reopen_scan_secs\": {recovery_secs:.5}}}\n}}\n",
+        namespaces(),
+        keys_per_ns()
+    ));
+    std::fs::write("BENCH_file.json", &json).expect("write BENCH_file.json");
+    println!("# wrote BENCH_file.json");
+
+    for d in [&plain_dir, &fsync_dir, &recovery_dir] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}

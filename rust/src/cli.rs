@@ -11,12 +11,14 @@
 //! flag parser with the same ergonomics.)
 
 use crate::baselines::{dask_run, machines_to_fit, scalapack_run, Algorithm};
-use crate::config::{EngineConfig, RetentionPolicy, ScalingMode, SubstrateConfig};
+use crate::config::{EngineConfig, RetentionPolicy, ScalingMode, SubstrateBackend, SubstrateConfig};
 use crate::daemon::{self, Daemon, DaemonClient};
 use crate::drivers;
 use crate::engine::Engine;
+use crate::executor::worker::{run_worker, ExitReason, WorkerParams};
+use crate::executor::FleetContext;
 use crate::jobs::{JobId, JobManager, JobSpec};
-use crate::kernels::KernelExecutor;
+use crate::kernels::{KernelExecutor, NativeKernels};
 use crate::lambdapack::dag::Dag;
 use crate::lambdapack::interp::Env;
 use crate::lambdapack::{compiled, programs};
@@ -112,6 +114,16 @@ COMMANDS:
             --daemon-dir DIR --specs algo:N:BLOCK[:CLASS][@DEP],...
             [--seed N] [--retention R] [--max-inflight Q]
             [--wait true] [--wait-timeout SECS] [--timeout SECS]
+  worker    join an external multi-process fleet over a shared durable
+            substrate: watch for job manifests other processes submit
+            (a daemon on the same directory), register each, and serve
+            the shared queue — horizontal scale-out for `serve`
+            --substrate file:DIR[:N] [--workers K] [--pipeline W]
+            [--idle-exit SECS]
+            (--idle-exit detaches once no task arrives for SECS;
+            without it the process serves until killed. Leases on the
+            file substrate expire by wall clock, so tasks in flight on
+            a killed worker redeliver to the survivors)
   status    poll one daemon job:  --daemon-dir DIR --job jN
   cancel    cancel one daemon job: --daemon-dir DIR --job jN
   shutdown  stop the daemon and its fleet: --daemon-dir DIR
@@ -148,6 +160,7 @@ pub fn run_cli(argv: &[String]) -> Result<()> {
         "run" => cmd_run(&args),
         "jobs" => cmd_jobs(&args),
         "serve" => cmd_serve(&args),
+        "worker" => cmd_worker(&args),
         "submit" => cmd_submit(&args),
         "status" => cmd_status(&args),
         "cancel" => cmd_cancel(&args),
@@ -604,6 +617,105 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `numpywren worker`: attach this process's workers to a shared
+/// durable substrate as one member of an external multi-process fleet.
+/// Nothing is staged here — a daemon (or any submitting process) on
+/// the same `file:<dir>` owns submissions, sealing, and GC; this
+/// process watches the substrate for job manifests, registers each as
+/// it appears, and serves the shared queue until `--idle-exit SECS` of
+/// quiet (or until killed — its leased tasks then expire by wall clock
+/// and redeliver to the surviving processes).
+fn cmd_worker(args: &Args) -> Result<()> {
+    let mut cfg = engine_cfg_from(args)?;
+    let dir = match &cfg.substrate.backend {
+        SubstrateBackend::File { dir, .. } if dir != "auto" => dir.clone(),
+        SubstrateBackend::File { .. } => bail!(
+            "`worker --substrate file:auto` would attach to a fresh private directory; \
+             name the submitting daemon's file:<dir>"
+        ),
+        _ => bail!(
+            "`worker` joins an external fleet over a shared durable substrate — \
+             use --substrate file:<dir>[:N] (chaos/cache decorators compose)"
+        ),
+    };
+    let workers: usize = args.num("workers", 2)?;
+    if workers == 0 {
+        bail!("--workers must be >= 1");
+    }
+    let exit_on_idle = match args.get("idle-exit") {
+        Some(v) => {
+            let secs: f64 = v
+                .parse()
+                .map_err(|_| anyhow!("bad value for --idle-exit: `{v}`"))?;
+            if !secs.is_finite() || secs <= 0.0 {
+                bail!("--idle-exit must be a positive number of seconds");
+            }
+            cfg.idle_timeout = Duration::from_secs_f64(secs);
+            true
+        }
+        None => false,
+    };
+    let fleet = Arc::new(FleetContext::new(cfg, Arc::new(NativeKernels)));
+    fleet.set_external();
+    println!(
+        "numpywren worker: {workers} worker(s) joining the fleet on {dir} (pid {})",
+        std::process::id()
+    );
+    let registrar = {
+        let fleet = fleet.clone();
+        std::thread::spawn(move || {
+            let mut watcher = daemon::ManifestWatcher::new();
+            while !fleet.is_shutdown() {
+                let (fresh, gone) = watcher.poll(&fleet);
+                for ctx in fresh {
+                    println!(
+                        "worker: attached {} ({}, {} tasks)",
+                        ctx.job, ctx.label, ctx.total_tasks
+                    );
+                    fleet.register(ctx);
+                }
+                for id in gone {
+                    // The recipe was retired (retention/TTL): cancel so
+                    // in-pipeline tasks drop instead of writing into a
+                    // namespace its owner is reclaiming.
+                    if let Some(ctx) = fleet.unregister(JobId(id)) {
+                        ctx.cancel();
+                        println!("worker: detached j{id} (recipe retired)");
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        })
+    };
+    let mut handles = Vec::new();
+    for id in 0..workers {
+        let fleet = fleet.clone();
+        handles.push(std::thread::spawn(move || {
+            run_worker(fleet, WorkerParams { id, exit_on_idle })
+        }));
+    }
+    let mut idle_exits = 0usize;
+    let mut panicked = false;
+    for h in handles {
+        match h.join() {
+            Ok(ExitReason::Idle) => idle_exits += 1,
+            Ok(_) => {}
+            Err(_) => panicked = true,
+        }
+    }
+    fleet.set_shutdown();
+    registrar.join().ok();
+    if panicked {
+        bail!("a worker thread panicked");
+    }
+    println!(
+        "numpywren worker: detached from {dir} ({idle_exits}/{workers} idle exits, \
+         billed-core-secs={:.3})",
+        fleet.metrics.billed_core_secs()
+    );
+    Ok(())
+}
+
 /// Per-request client timeout (`--timeout SECS`).
 fn client_timeout(args: &Args) -> Result<Duration> {
     Ok(Duration::from_secs_f64(args.num("timeout", 30.0)?))
@@ -1010,6 +1122,35 @@ mod tests {
         assert!(run_cli(&argv("serve")).is_err(), "missing --daemon-dir");
         assert!(run_cli(&argv("submit --daemon-dir /tmp/x")).is_err(), "missing --specs");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn worker_requires_a_shared_file_substrate() {
+        // No substrate (defaults to sharded) and non-file substrates
+        // are rejected: an external fleet needs durable shared state.
+        assert!(run_cli(&argv("worker")).is_err());
+        assert!(run_cli(&argv("worker --substrate sharded:4")).is_err());
+        // `file:auto` would materialize a private fresh directory —
+        // nothing to share — so it is rejected up front.
+        assert!(run_cli(&argv("worker --substrate file:auto")).is_err());
+        // Flag validation happens before any directory is touched.
+        assert!(run_cli(&argv("worker --substrate file:/tmp/x --workers 0")).is_err());
+        assert!(run_cli(&argv("worker --substrate file:/tmp/x --idle-exit nope")).is_err());
+        assert!(run_cli(&argv("worker --substrate file:/tmp/x --idle-exit -1")).is_err());
+    }
+
+    #[test]
+    fn worker_attaches_and_idles_out_on_an_empty_substrate() {
+        // End-to-end through the CLI: stand up the file substrate,
+        // find no manifests, and detach after the idle window.
+        let dir = std::env::temp_dir().join(format!("npw_worker_idle_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        run_cli(&argv(&format!(
+            "worker --substrate file:{} --workers 1 --idle-exit 0.2",
+            dir.display()
+        )))
+        .unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

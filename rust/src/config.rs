@@ -104,7 +104,7 @@ impl Default for GcConfig {
 
 /// Which substrate backend family a job runs on (see
 /// [`crate::storage`]).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum SubstrateBackend {
     /// The single-lock, globally-ordered, SSA-policing family — the
     /// test/debug backend.
@@ -117,6 +117,14 @@ pub enum SubstrateBackend {
     /// 64-worker fleet gets more shards than a 4-worker one instead of
     /// both landing on [`DEFAULT_SHARDS`].
     ShardedAuto,
+    /// `file:<dir>[:N]` — the durable on-disk family (see
+    /// [`crate::storage::file`]): state survives process death,
+    /// several processes can share one substrate directory, and the
+    /// daemon recovers in-flight chains after a crash. `dir` is the
+    /// substrate root (`auto` materializes a fresh temp directory per
+    /// build — per-test isolation); `shards` is the fan-out of each
+    /// on-disk key space.
+    File { dir: String, shards: usize },
 }
 
 /// Default shard count for the sharded family: comfortably above the
@@ -131,14 +139,15 @@ pub fn shards_for_workers(workers: usize) -> usize {
     (workers.max(1) * 2).next_power_of_two().clamp(8, 512)
 }
 
-/// Substrate selection, settable as `substrate=strict` or
-/// `substrate=sharded[:N]`, optionally decorated with a chaos layer
-/// and/or a worker-local tile cache:
+/// Substrate selection, settable as `substrate=strict`,
+/// `substrate=sharded[:N]`, or `substrate=file:<dir>[:N]`, optionally
+/// decorated with a chaos layer and/or a worker-local tile cache:
 /// `substrate=sharded:16+chaos(err=0.01,lat=lognorm:5ms)`,
-/// `substrate=sharded:auto+cache(bytes=33554432)` (see
+/// `substrate=sharded:auto+cache(bytes=33554432)`,
+/// `substrate=file:/var/lib/npw:8+chaos(err=0.02)` (see
 /// [`crate::storage::chaos`] and [`crate::storage::cache`] for the
 /// clause grammars).
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SubstrateConfig {
     pub backend: SubstrateBackend,
     /// Optional fault/latency decorator layer over the backend family.
@@ -175,6 +184,18 @@ impl SubstrateConfig {
         }
     }
 
+    /// The durable on-disk family rooted at `dir` (see
+    /// [`crate::storage::file`]).
+    pub fn file(dir: impl Into<String>, shards: usize) -> Self {
+        SubstrateConfig {
+            backend: SubstrateBackend::File {
+                dir: dir.into(),
+                shards,
+            },
+            ..Self::default()
+        }
+    }
+
     /// Resolve backends whose parameters depend on the deployment
     /// (currently `sharded:auto`, sized from the worker pool) into a
     /// concrete backend. Already-concrete configs pass through;
@@ -185,26 +206,48 @@ impl SubstrateConfig {
                 backend: SubstrateBackend::Sharded {
                     shards: shards_for_workers(worker_hint),
                 },
-                ..*self
+                ..self.clone()
             },
-            _ => *self,
+            _ => self.clone(),
         }
     }
 
-    /// Parse `strict` | `sharded` | `sharded:N` | `sharded:auto`, each
-    /// optionally followed by decorator clauses `+chaos(key=value,…)`
-    /// and/or `+cache(key=value,…)`, in either order, at most once
-    /// each.
+    /// Parse `strict` | `sharded` | `sharded:N` | `sharded:auto` |
+    /// `file:<dir>[:N]`, each optionally followed by decorator clauses
+    /// `+chaos(key=value,…)` and/or `+cache(key=value,…)`, in either
+    /// order, at most once each.
     pub fn parse(spec: &str) -> Result<Self> {
         let mut parts = spec.split('+');
         let base = parts.next().unwrap_or("");
+        if let Some(rest) = base.strip_prefix("file:") {
+            // `file:<dir>[:N]` — a trailing all-digit segment is the
+            // shard count; anything else (including `C:\…`-style
+            // colons) belongs to the directory. The directory cannot
+            // contain `+` (it is the decorator separator).
+            let is_count = |n: &str| !n.is_empty() && n.bytes().all(|b| b.is_ascii_digit());
+            let (dir, shards) = match rest.rsplit_once(':') {
+                Some((d, n)) if !d.is_empty() && is_count(n) => {
+                    (d, n.parse::<usize>().with_context(|| format!("bad shard count `{n}`"))?)
+                }
+                _ => (rest, DEFAULT_SHARDS),
+            };
+            if dir.is_empty() {
+                bail!("bad substrate spec `{base}`: file:<dir>[:N] needs a directory");
+            }
+            if shards == 0 {
+                bail!("substrate shard count must be >= 1");
+            }
+            let mut cfg = Self::file(dir, shards);
+            Self::apply_decorators(&mut cfg, parts)?;
+            return Ok(cfg);
+        }
         let mut cfg = match base.split_once(':') {
             None => match base {
                 "strict" => Self::strict(),
                 "sharded" => Self::default(),
                 _ => bail!(
                     "bad substrate spec `{base}` \
-                     (strict | sharded[:N|auto][+chaos(…)][+cache(…)])"
+                     (strict | sharded[:N|auto] | file:<dir>[:N][+chaos(…)][+cache(…)])"
                 ),
             },
             Some(("sharded", "auto")) => SubstrateConfig {
@@ -222,10 +265,20 @@ impl SubstrateConfig {
             }
             Some(_) => bail!(
                 "bad substrate spec `{base}` \
-                 (strict | sharded[:N|auto][+chaos(…)][+cache(…)])"
+                 (strict | sharded[:N|auto] | file:<dir>[:N][+chaos(…)][+cache(…)])"
             ),
         };
-        for decorator in parts {
+        Self::apply_decorators(&mut cfg, parts)?;
+        Ok(cfg)
+    }
+
+    /// Fold the `+chaos(…)` / `+cache(…)` decorator clauses of a spec
+    /// into `cfg` (either order, at most once each).
+    fn apply_decorators<'a>(
+        cfg: &mut SubstrateConfig,
+        decorators: impl Iterator<Item = &'a str>,
+    ) -> Result<()> {
+        for decorator in decorators {
             if let Some(body) = decorator
                 .strip_prefix("chaos(")
                 .and_then(|r| r.strip_suffix(')'))
@@ -246,7 +299,7 @@ impl SubstrateConfig {
                 bail!("bad substrate decorator `{decorator}` (chaos(k=v,…) | cache(k=v,…))");
             }
         }
-        Ok(cfg)
+        Ok(())
     }
 
     /// CI/test hook: `NUMPYWREN_SUBSTRATE` overrides the default
@@ -334,8 +387,8 @@ impl EngineConfig {
 
     /// Apply a `key=value` override. Durations are given in
     /// (fractional) seconds; `scaling` is `fixed:N` or `auto:SF:MAX`;
-    /// `substrate` is `strict` or `sharded[:N]`, optionally with
-    /// `+chaos(…)` / `+cache(…)` decorator clauses.
+    /// `substrate` is `strict`, `sharded[:N]`, or `file:<dir>[:N]`,
+    /// optionally with `+chaos(…)` / `+cache(…)` decorator clauses.
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
         let secs = |v: &str| -> Result<Duration> {
             Ok(Duration::from_secs_f64(
@@ -552,6 +605,68 @@ mod tests {
             max_workers: 48,
         };
         assert_eq!(e.worker_hint(), 48);
+    }
+
+    #[test]
+    fn file_substrate_specs_parse() {
+        let c = SubstrateConfig::parse("file:/tmp/npw").unwrap();
+        assert_eq!(
+            c.backend,
+            SubstrateBackend::File {
+                dir: "/tmp/npw".into(),
+                shards: DEFAULT_SHARDS
+            }
+        );
+        let c = SubstrateConfig::parse("file:/tmp/npw:8").unwrap();
+        assert_eq!(
+            c.backend,
+            SubstrateBackend::File {
+                dir: "/tmp/npw".into(),
+                shards: 8
+            }
+        );
+        // Colons without an all-digit tail belong to the directory.
+        let c = SubstrateConfig::parse("file:C:\\npw\\sub:4").unwrap();
+        assert_eq!(
+            c.backend,
+            SubstrateBackend::File {
+                dir: "C:\\npw\\sub".into(),
+                shards: 4
+            }
+        );
+        // `auto` materializes a fresh temp dir at build time.
+        let c = SubstrateConfig::parse("file:auto").unwrap();
+        assert_eq!(
+            c.backend,
+            SubstrateBackend::File {
+                dir: "auto".into(),
+                shards: DEFAULT_SHARDS
+            }
+        );
+        // Decorators compose like on every other family.
+        let c = SubstrateConfig::parse("file:auto:4+chaos(err=0.1,seed=2)+cache(bytes=1m)")
+            .unwrap();
+        assert!(matches!(
+            c.backend,
+            SubstrateBackend::File { ref dir, shards: 4 } if dir == "auto"
+        ));
+        assert!(c.chaos.is_some());
+        assert_eq!(c.cache.unwrap().bytes, 1 << 20);
+        assert!(SubstrateConfig::parse("file:").is_err());
+        assert!(SubstrateConfig::parse("file:/tmp/x:0").is_err());
+        // resolve passes the file family through untouched.
+        let f = SubstrateConfig::file("/tmp/npw", 4);
+        assert_eq!(f.resolve(64), f);
+        // The EngineConfig override path accepts it too.
+        let mut e = EngineConfig::default();
+        e.set("substrate", "file:/tmp/npw:2").unwrap();
+        assert_eq!(
+            e.substrate.backend,
+            SubstrateBackend::File {
+                dir: "/tmp/npw".into(),
+                shards: 2
+            }
+        );
     }
 
     #[test]

@@ -62,15 +62,19 @@
 
 use crate::config::{EngineConfig, RetentionPolicy};
 use crate::drivers;
-use crate::jobs::{JobId, JobManager, JobSpec, JobStatus};
+use crate::executor::{FleetContext, JobContext};
+use crate::jobs::{job_prefix, JobId, JobManager, JobSpec, JobStatus};
+use crate::lambdapack::analysis::{Analyzer, Loc};
+use crate::lambdapack::interp::{count_nodes, Env};
 use crate::lambdapack::programs;
 use crate::linalg::matrix::Matrix;
 use crate::storage::{BlobStore as _, KvState as _};
 use crate::util::prng::Rng;
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Liveness/metadata marker file at the spool root.
@@ -564,6 +568,27 @@ impl Request {
 // Spool plumbing
 // ===================================================================
 
+/// Best-effort pid liveness probe. `Some(alive)` on Linux, where
+/// `/proc/<pid>` exists iff the process does; `None` where no such
+/// probe exists (macOS, Windows, or a Linux without procfs mounted).
+/// Callers must treat `None` as "possibly alive": the daemon only
+/// refuses a spool on `Some(true)`, and the client only declares a
+/// daemon dead on `Some(false)` — an unknown verdict never steals a
+/// spool or fails a request.
+fn pid_alive(pid: u64) -> Option<bool> {
+    if cfg!(target_os = "linux") && Path::new("/proc").exists() {
+        Some(Path::new(&format!("/proc/{pid}")).exists())
+    } else {
+        None
+    }
+}
+
+/// The pid recorded in a spool directory's liveness marker, if any.
+fn marker_pid(dir: &Path) -> Option<u64> {
+    let body = std::fs::read_to_string(dir.join(MARKER)).ok()?;
+    Json::parse(&body).ok()?.get("pid").and_then(Json::as_u64)
+}
+
 fn cmd_dir(dir: &Path) -> PathBuf {
     dir.join("cmd")
 }
@@ -658,6 +683,7 @@ impl DaemonClient {
         let _ = std::fs::remove_file(&rsp);
         write_atomic(&cmd, &req.encode())?;
         let deadline = Instant::now() + timeout;
+        let mut last_liveness = Instant::now();
         loop {
             if let Ok(body) = std::fs::read_to_string(&rsp) {
                 let _ = std::fs::remove_file(&rsp);
@@ -672,6 +698,31 @@ impl DaemonClient {
                     .unwrap_or("daemon reported an unspecified error")
                     .to_string();
                 bail!("{msg}");
+            }
+            // A daemon that died mid-request leaves its marker behind
+            // and will never answer — polling until the timeout just
+            // hides the outage. A *missing* marker is not a failure
+            // (spooling ahead of `serve` is the durability story), and
+            // an unknown liveness verdict (off Linux) never fails a
+            // request; only a provably dead pid does.
+            if last_liveness.elapsed() >= Duration::from_millis(100) {
+                last_liveness = Instant::now();
+                if let Some(pid) = marker_pid(&self.dir) {
+                    if pid_alive(pid) == Some(false) {
+                        // Withdraw the command: nobody is waiting on it,
+                        // and the restarted daemon must not execute it
+                        // behind the caller's back.
+                        let _ = std::fs::remove_file(&cmd);
+                        bail!(
+                            "daemon for {dir} (pid {pid}) is dead but left its liveness \
+                             marker; restart `numpywren serve --daemon-dir {dir}` (it will \
+                             recover the spool) or delete {marker} if that daemon is gone \
+                             for good",
+                            dir = self.dir.display(),
+                            marker = self.dir.join(MARKER).display(),
+                        );
+                    }
+                }
             }
             if Instant::now() >= deadline {
                 // Withdraw the unanswered command so a daemon starting
@@ -791,6 +842,275 @@ struct UpstreamInfo {
     block: usize,
 }
 
+/// Per-spec staging seed: entry `k` of a request with base seed `s`
+/// gets a decorrelated stream of its own, so any single job can later
+/// be re-staged bit-exactly from its manifest alone — no replaying
+/// the rest of the request through one shared generator.
+fn derive_seed(s: u64, k: usize) -> u64 {
+    s ^ (k as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// One job's durable re-staging recipe, written to the KV substrate
+/// at `jN/manifest` the moment the job is submitted. On a durable
+/// backend (`file:<dir>`) the manifest is what lets a restarted
+/// daemon rebuild its submission table: everything needed to
+/// regenerate the job's inputs (the *derived* seed), re-apply its
+/// knobs, and re-chain it onto its upstream is here. The key lives
+/// inside the job's own namespace, so retention/TTL sweeps retire the
+/// recipe together with the data it describes.
+#[derive(Clone, Debug, PartialEq)]
+struct Manifest {
+    algo: String,
+    n: usize,
+    block: usize,
+    class: i64,
+    /// Derived per-spec seed (see [`derive_seed`]) — `Rng::new(seed)`
+    /// regenerates this job's input matrices exactly.
+    seed: u64,
+    retention: Option<RetentionPolicy>,
+    max_inflight: Option<usize>,
+    /// Upstream job id for a chained spec (`@K`/`@jN`, resolved).
+    upstream: Option<u64>,
+}
+
+impl Manifest {
+    fn key(job: u64) -> String {
+        format!("j{job}/manifest")
+    }
+
+    /// `jN/manifest` → `N`, for recovery scans over the KV keyspace.
+    fn job_of_key(key: &str) -> Option<u64> {
+        let rest = key.strip_prefix('j')?;
+        let (digits, tail) = rest.split_once('/')?;
+        if tail != "manifest" || digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+            return None;
+        }
+        digits.parse().ok()
+    }
+
+    fn kind(&self) -> Result<UpstreamKind> {
+        match self.algo.as_str() {
+            "cholesky" => Ok(UpstreamKind::Cholesky),
+            "gemm" => Ok(UpstreamKind::Gemm),
+            other => bail!("manifest names unsupported algo `{other}`"),
+        }
+    }
+
+    fn info(&self) -> Result<UpstreamInfo> {
+        Ok(UpstreamInfo {
+            kind: self.kind()?,
+            grid: self.n.div_ceil(self.block),
+            block: self.block,
+        })
+    }
+
+    fn render(&self) -> String {
+        let mut fields = vec![
+            ("v".to_string(), Json::Num(1.0)),
+            ("algo".to_string(), Json::Str(self.algo.clone())),
+            ("n".to_string(), Json::Num(self.n as f64)),
+            ("block".to_string(), Json::Num(self.block as f64)),
+            ("class".to_string(), Json::Num(self.class as f64)),
+            // Seeds use the full u64 range; a JSON number would round
+            // past 2^53, so the seed rides as a decimal string.
+            ("seed".to_string(), Json::Str(self.seed.to_string())),
+        ];
+        if let Some(r) = self.retention {
+            let name = match r {
+                RetentionPolicy::KeepAll => "keep",
+                RetentionPolicy::KeepOutputs => "outputs",
+                RetentionPolicy::DeleteAll => "delete",
+            };
+            fields.push(("retention".to_string(), Json::Str(name.into())));
+        }
+        if let Some(q) = self.max_inflight {
+            fields.push(("max_inflight".to_string(), Json::Num(q as f64)));
+        }
+        if let Some(up) = self.upstream {
+            fields.push(("upstream".to_string(), Json::Num(up as f64)));
+        }
+        Json::Obj(fields).render()
+    }
+
+    fn parse(src: &str) -> Result<Manifest> {
+        let v = Json::parse(src).context("malformed job manifest")?;
+        let num = |k: &str| -> Result<u64> {
+            v.get(k)
+                .and_then(Json::as_u64)
+                .with_context(|| format!("manifest is missing `{k}`"))
+        };
+        let class = match v.get("class") {
+            Some(Json::Num(n)) if n.fract() == 0.0 => *n as i64,
+            _ => bail!("manifest is missing `class`"),
+        };
+        Ok(Manifest {
+            algo: v
+                .get("algo")
+                .and_then(Json::as_str)
+                .context("manifest is missing `algo`")?
+                .to_string(),
+            n: num("n")? as usize,
+            block: num("block")? as usize,
+            class,
+            seed: v
+                .get("seed")
+                .and_then(Json::as_str)
+                .and_then(|s| s.parse().ok())
+                .context("manifest is missing `seed`")?,
+            retention: match v.get("retention").and_then(Json::as_str) {
+                Some(r) => Some(RetentionPolicy::parse(r)?),
+                None => None,
+            },
+            max_inflight: v.get("max_inflight").and_then(Json::as_u64).map(|q| q as usize),
+            upstream: v.get("upstream").and_then(Json::as_u64),
+        })
+    }
+}
+
+// ===================================================================
+// External-fleet attach (`numpywren worker`)
+// ===================================================================
+
+/// Incremental manifest watcher for an external worker process
+/// (`numpywren worker`): tracks which `jN/manifest` recipes on the
+/// shared substrate this process has turned into fleet-registered
+/// contexts, and which have since been retired.
+///
+/// An attached fleet stages nothing — the submitting daemon owns input
+/// seeding, root enqueues, sealing, and GC. All an external worker
+/// needs is to *resolve* queue messages: a job's analyzer, scheduling
+/// class, in-flight quota, and (for chained jobs) the read-through
+/// alias table into the upstream namespace. The manifest carries
+/// exactly that.
+pub(crate) struct ManifestWatcher {
+    /// Shape of every attached job, what chained children resolve
+    /// their upstream kind/grid against — the external mirror of
+    /// [`Daemon::submitted`].
+    known: HashMap<u64, UpstreamInfo>,
+    /// Ids whose attach failed terminally (warn once, not every poll).
+    skipped: HashSet<u64>,
+}
+
+impl ManifestWatcher {
+    pub(crate) fn new() -> ManifestWatcher {
+        ManifestWatcher {
+            known: HashMap::new(),
+            skipped: HashSet::new(),
+        }
+    }
+
+    /// One poll over the substrate: returns contexts for
+    /// newly-appeared manifests (register them with the fleet) and the
+    /// ids of attached jobs whose manifests vanished (retention/TTL
+    /// retired the namespace — cancel and unregister them so no
+    /// in-pipeline task writes into a reclaimed keyspace). Ids are
+    /// processed in order; a manifest is written only after its
+    /// upstream's, so an upstream's shape is always in `known` before
+    /// its chained consumers attach.
+    pub(crate) fn poll(&mut self, fleet: &FleetContext) -> (Vec<Arc<JobContext>>, Vec<u64>) {
+        let mut present: Vec<u64> = fleet
+            .state
+            .scan_prefix("j")
+            .iter()
+            .filter_map(|k| Manifest::job_of_key(k))
+            .collect();
+        present.sort_unstable();
+        let mut fresh = Vec::new();
+        for id in &present {
+            if self.known.contains_key(id) {
+                continue;
+            }
+            let Some(body) = fleet.state.get(&Manifest::key(*id)) else {
+                continue;
+            };
+            let attached = Manifest::parse(&body).and_then(|m| {
+                let ctx = attach_context(fleet, *id, &m, &self.known)?;
+                self.known.insert(*id, m.info()?);
+                Ok(ctx)
+            });
+            match attached {
+                Ok(ctx) => {
+                    self.skipped.remove(id);
+                    fresh.push(ctx);
+                }
+                Err(e) => {
+                    if self.skipped.insert(*id) {
+                        eprintln!("worker: cannot attach j{id}: {e:#}");
+                    }
+                }
+            }
+        }
+        let gone: Vec<u64> = self
+            .known
+            .keys()
+            .copied()
+            .filter(|id| present.binary_search(id).is_err())
+            .collect();
+        for id in &gone {
+            self.known.remove(id);
+        }
+        (fresh, gone)
+    }
+}
+
+/// Build the worker-side [`JobContext`] for one manifest some *other*
+/// process staged. Mirrors the registration half of the job manager's
+/// activation — analyzer, class, quota, locality flag, and the chain
+/// alias table `drivers::stage_gemm_after_*` produced (`A[i,k]` reads
+/// through to the upstream's output tiles; a Cholesky upstream's
+/// strict upper triangle was zero-seeded locally, so it carries no
+/// alias) — without seeding a tile or enqueuing a root.
+fn attach_context(
+    fleet: &FleetContext,
+    id: u64,
+    m: &Manifest,
+    known: &HashMap<u64, UpstreamInfo>,
+) -> Result<Arc<JobContext>> {
+    if m.block == 0 || m.n == 0 {
+        bail!("manifest has an empty shape ({}x{} blocks of {})", m.n, m.n, m.block);
+    }
+    let info = m.info()?;
+    let (program, label) = match info.kind {
+        UpstreamKind::Cholesky => (programs::cholesky_spec().program, "cholesky"),
+        UpstreamKind::Gemm => (programs::gemm_spec().program, "gemm"),
+    };
+    let env: Env = [("N".to_string(), info.grid as i64)].into_iter().collect();
+    let total = count_nodes(&program, &env)? as u64;
+    let mut ctx = JobContext::new(
+        JobId(id),
+        label,
+        m.class,
+        Arc::new(Analyzer::new(&program, &env)),
+        total,
+        fleet.queue.clone(),
+        fleet.store.clone(),
+        fleet.state.clone(),
+    );
+    ctx.max_inflight = m.max_inflight;
+    ctx.locality_hints = fleet.cache.is_some();
+    if let Some(up) = m.upstream {
+        let up_info = known.get(&up).copied().with_context(|| {
+            format!("upstream j{up}'s recipe is gone (namespace already retired?)")
+        })?;
+        let prefix = job_prefix(JobId(id));
+        let up_prefix = job_prefix(JobId(up));
+        for i in 0..info.grid as i64 {
+            for k in 0..info.grid as i64 {
+                let target = match up_info.kind {
+                    UpstreamKind::Cholesky if k > i => continue,
+                    UpstreamKind::Cholesky => Loc::new("O", vec![i, k]),
+                    UpstreamKind::Gemm => {
+                        Loc::new("Ctmp", vec![i, k, up_info.grid as i64 - 1])
+                    }
+                };
+                ctx.aliases
+                    .insert(Loc::new("A", vec![i, k]).key_in(&prefix), target.key_in(&up_prefix));
+            }
+        }
+    }
+    Ok(Arc::new(ctx))
+}
+
 /// The serve loop: owns one [`JobManager`] and drains the command
 /// spool until a `shutdown` request arrives. Construct with the same
 /// [`EngineConfig`] the one-shot commands use — substrate, scaling,
@@ -835,21 +1155,17 @@ impl Daemon {
         std::fs::create_dir_all(cmd_dir(&dir))
             .with_context(|| format!("creating spool dir {}", dir.display()))?;
         std::fs::create_dir_all(rsp_dir(&dir))?;
-        if let Ok(body) = std::fs::read_to_string(dir.join(MARKER)) {
-            let pid = Json::parse(&body).ok().and_then(|v| v.get("pid").and_then(Json::as_u64));
-            if let Some(pid) = pid {
-                // A marker naming any live pid (this process included —
-                // embedders and tests can run a daemon in-process)
-                // means the spool is taken.
-                let alive =
-                    Path::new("/proc").exists() && Path::new(&format!("/proc/{pid}")).exists();
-                if alive {
-                    bail!(
-                        "daemon already serving {} (pid {pid}); shut it down, pick another \
-                         --daemon-dir, or delete {MARKER} if that pid is not a daemon",
-                        dir.display()
-                    );
-                }
+        if let Some(pid) = marker_pid(&dir) {
+            // A marker naming any live pid (this process included —
+            // embedders and tests can run a daemon in-process) means
+            // the spool is taken. An unknown verdict (off Linux) must
+            // not steal a possibly-live daemon's spool either.
+            if pid_alive(pid) != Some(false) {
+                bail!(
+                    "daemon already serving {} (pid {pid}); shut it down, pick another \
+                     --daemon-dir, or delete {MARKER} if that pid is not a daemon",
+                    dir.display()
+                );
             }
         }
         let mgr = JobManager::new(cfg);
@@ -858,14 +1174,65 @@ impl Daemon {
             ("pid".to_string(), Json::Num(std::process::id() as f64)),
             ("workers".to_string(), Json::Num(workers as f64)),
         ]);
+        // Claim the spool *before* recovery: re-staging can take real
+        // time, and a client probing liveness mid-recovery must see
+        // this pid, not a crashed predecessor's.
         write_atomic(&dir.join(MARKER), &marker.render())?;
-        Ok(Daemon {
+        let mut daemon = Daemon {
             mgr,
             dir,
             submitted: HashMap::new(),
             last_reap: Instant::now(),
             log: false,
-        })
+        };
+        daemon.recover();
+        Ok(daemon)
+    }
+
+    /// Crash-restart recovery: against a durable substrate
+    /// (`file:<dir>`), jobs the previous daemon submitted left their
+    /// `jN/manifest` recipes behind. Re-stage each one under its
+    /// *original* id, in id order so upstreams precede their chained
+    /// consumers. Execution state is all in the substrate — status
+    /// CAS marks, `@jN` dependency counters with their idempotent
+    /// edge guards, the completed counter, and leased queue messages
+    /// that expire by wall clock — so a resubmitted job re-runs only
+    /// what never finished and seals with the exact numerics of an
+    /// uninterrupted run (inputs regenerate from the manifest's
+    /// derived seed). A chained job whose upstream manifest was
+    /// already retired (retention/TTL) is skipped with a warning; its
+    /// residue stays subject to the usual sweeps. In-memory backends
+    /// scan empty and recovery is a no-op.
+    fn recover(&mut self) {
+        let mut ids: Vec<u64> = self
+            .mgr
+            .state()
+            .scan_prefix("j")
+            .iter()
+            .filter_map(|k| Manifest::job_of_key(k))
+            .collect();
+        ids.sort_unstable();
+        let mut recovered = 0usize;
+        for id in ids {
+            let Some(body) = self.mgr.state().get(&Manifest::key(id)) else {
+                continue;
+            };
+            let staged = Manifest::parse(&body).and_then(|m| {
+                let job = self.stage_one(&m, Some(JobId(id)))?;
+                self.submitted.insert(job.0, m.info()?);
+                Ok(())
+            });
+            match staged {
+                Ok(()) => recovered += 1,
+                Err(e) => eprintln!("daemon: skipping recovery of j{id}: {e:#}"),
+            }
+        }
+        if recovered > 0 {
+            println!(
+                "daemon: recovered {recovered} job(s) from {} after restart",
+                self.dir.display()
+            );
+        }
     }
 
     /// Serve until a `shutdown` command, then stop the fleet and
@@ -1085,77 +1452,27 @@ impl Daemon {
             }
             plan.push(UpstreamInfo { kind, grid: e.n.div_ceil(e.block), block: e.block });
         }
-        // Phase 2: stage and submit, in request order.
-        let mut rng = Rng::new(seed);
+        // Phase 2: stage and submit, in request order. Each entry gets
+        // its own derived seed and is staged through the same recipe
+        // (`stage_one`) recovery replays, so a job and its restarted
+        // re-submission are bit-identical by construction.
         let mut out: Vec<JobId> = Vec::new();
-        for (e, info) in entries.iter().zip(&plan) {
-            let apply = |mut spec: JobSpec| -> JobSpec {
-                spec = spec.with_class(e.class);
-                if let Some(r) = retention {
-                    spec = spec.with_retention(r);
-                }
-                if let Some(q) = max_inflight {
-                    spec = spec.with_max_inflight(q);
-                }
-                spec
+        for (k, e) in entries.iter().enumerate() {
+            let manifest = Manifest {
+                algo: e.algo.clone(),
+                n: e.n,
+                block: e.block,
+                class: e.class,
+                seed: derive_seed(seed, k),
+                retention,
+                max_inflight,
+                upstream: match e.chain {
+                    None => None,
+                    Some(ChainRef::Index(i)) => Some(out[i - 1].0),
+                    Some(ChainRef::Job(job)) => Some(job.0),
+                },
             };
-            let upstream_job: Option<JobId> = match e.chain {
-                None => None,
-                Some(ChainRef::Index(k)) => Some(out[k - 1]),
-                Some(ChainRef::Job(job)) => Some(job),
-            };
-            let submitted = match (info.kind, upstream_job) {
-                (UpstreamKind::Cholesky, None) => {
-                    let a = Matrix::rand_spd(e.n, &mut rng);
-                    let (env, inputs, _grid) = drivers::stage_cholesky(&a, e.block)?;
-                    self.mgr.submit(apply(
-                        JobSpec::new(programs::cholesky_spec().program, env, inputs)
-                            .with_outputs(["O"]),
-                    ))
-                }
-                (UpstreamKind::Gemm, None) => {
-                    let a = Matrix::randn(e.n, e.n, &mut rng);
-                    let b = Matrix::randn(e.n, e.n, &mut rng);
-                    let (env, inputs, _grid) = drivers::stage_gemm(&a, &b, e.block)?;
-                    self.mgr.submit(apply(
-                        JobSpec::new(programs::gemm_spec().program, env, inputs)
-                            .with_outputs(["Ctmp"]),
-                    ))
-                }
-                (UpstreamKind::Gemm, Some(up_job)) => {
-                    // The upstream's kind decides which output tiles
-                    // the child's A inputs alias.
-                    let up_kind = self.submitted.get(&up_job.0).map(|u| u.kind);
-                    let up_kind = match (e.chain, up_kind) {
-                        (Some(ChainRef::Index(k)), _) => plan[k - 1].kind,
-                        (_, Some(kind)) => kind,
-                        // Validated in phase 1; unreachable in practice.
-                        _ => bail!("chain upstream {up_job} vanished mid-request"),
-                    };
-                    let b = Matrix::randn(e.n, e.n, &mut rng);
-                    let (env, inputs, imports, _grid) = match up_kind {
-                        UpstreamKind::Cholesky => {
-                            drivers::stage_gemm_after_cholesky(up_job, &b, e.block)?
-                        }
-                        UpstreamKind::Gemm => {
-                            drivers::stage_gemm_after_gemm(up_job, info.grid, &b, e.block)?
-                        }
-                    };
-                    self.mgr.submit_after(
-                        apply(
-                            JobSpec::new(programs::gemm_spec().program, env, inputs)
-                                .with_outputs(["Ctmp"])
-                                .with_imports(imports),
-                        ),
-                        &[up_job],
-                    )
-                }
-                // Phase 1 rejects cholesky consumers.
-                (UpstreamKind::Cholesky, Some(up_job)) => {
-                    bail!("chain upstream {up_job}: cholesky cannot consume an upstream")
-                }
-            };
-            let job = submitted.map_err(|err| {
+            let job = self.stage_one(&manifest, None).map_err(|err| {
                 if out.is_empty() {
                     err
                 } else {
@@ -1165,10 +1482,101 @@ impl Daemon {
                     ))
                 }
             })?;
-            self.submitted.insert(job.0, *info);
+            // The manifest lands right after the submit: a crash in
+            // the gap loses only this job's recoverability, never its
+            // correctness (the namespace is residue the sweeps own).
+            self.mgr.state().set(&Manifest::key(job.0), &manifest.render());
+            self.submitted.insert(job.0, manifest.info()?);
             out.push(job);
         }
         Ok(out)
+    }
+
+    /// Stage one job from its manifest and hand it to the fleet —
+    /// the single staging path shared by fresh submissions and crash
+    /// recovery (`forced` carries the original id to re-occupy).
+    fn stage_one(&self, m: &Manifest, forced: Option<JobId>) -> Result<JobId> {
+        let kind = m.kind()?;
+        if m.block == 0 || m.n == 0 {
+            bail!("manifest has an empty shape ({}x{} blocks of {})", m.n, m.n, m.block);
+        }
+        let apply = |mut spec: JobSpec| -> JobSpec {
+            spec = spec.with_class(m.class);
+            if let Some(r) = m.retention {
+                spec = spec.with_retention(r);
+            }
+            if let Some(q) = m.max_inflight {
+                spec = spec.with_max_inflight(q);
+            }
+            spec
+        };
+        let submit = |spec: JobSpec, deps: &[JobId]| match forced {
+            Some(id) => self.mgr.resubmit_after(id, spec, deps),
+            None => self.mgr.submit_after(spec, deps),
+        };
+        let mut rng = Rng::new(m.seed);
+        match (kind, m.upstream) {
+            (UpstreamKind::Cholesky, None) => {
+                let a = Matrix::rand_spd(m.n, &mut rng);
+                let (env, inputs, _grid) = drivers::stage_cholesky(&a, m.block)?;
+                submit(
+                    apply(
+                        JobSpec::new(programs::cholesky_spec().program, env, inputs)
+                            .with_outputs(["O"]),
+                    ),
+                    &[],
+                )
+            }
+            (UpstreamKind::Gemm, None) => {
+                let a = Matrix::randn(m.n, m.n, &mut rng);
+                let b = Matrix::randn(m.n, m.n, &mut rng);
+                let (env, inputs, _grid) = drivers::stage_gemm(&a, &b, m.block)?;
+                submit(
+                    apply(
+                        JobSpec::new(programs::gemm_spec().program, env, inputs)
+                            .with_outputs(["Ctmp"]),
+                    ),
+                    &[],
+                )
+            }
+            (UpstreamKind::Gemm, Some(up)) => {
+                let up_job = JobId(up);
+                // The upstream's kind decides which output tiles the
+                // child's A inputs alias. Fresh submissions recorded it
+                // under `submitted` before reaching this entry; during
+                // recovery the upstream's manifest (processed first, in
+                // id order) did the same — a missing entry means the
+                // upstream's namespace was already retired.
+                let up_kind = self
+                    .submitted
+                    .get(&up)
+                    .map(|u| u.kind)
+                    .with_context(|| format!("chain reference @{up_job}: no such daemon job"))?;
+                let grid = m.n.div_ceil(m.block);
+                let b = Matrix::randn(m.n, m.n, &mut rng);
+                let (env, inputs, imports, _grid) = match up_kind {
+                    UpstreamKind::Cholesky => {
+                        drivers::stage_gemm_after_cholesky(up_job, &b, m.block)?
+                    }
+                    UpstreamKind::Gemm => {
+                        drivers::stage_gemm_after_gemm(up_job, grid, &b, m.block)?
+                    }
+                };
+                submit(
+                    apply(
+                        JobSpec::new(programs::gemm_spec().program, env, inputs)
+                            .with_outputs(["Ctmp"])
+                            .with_imports(imports),
+                    ),
+                    &[up_job],
+                )
+            }
+            // Phase-1 validation rejects cholesky consumers; a
+            // hand-edited manifest lands here.
+            (UpstreamKind::Cholesky, Some(up)) => {
+                bail!("chain upstream j{up}: cholesky cannot consume an upstream")
+            }
+        }
     }
 }
 
@@ -1265,6 +1673,133 @@ mod tests {
         assert!(parse_specs("cholesky:16").is_err());
         assert!(parse_specs("cholesky:16:8@x").is_err());
         assert!(parse_specs("cholesky:16:8@j").is_err());
+    }
+
+    #[test]
+    fn manifest_roundtrips_and_scans() {
+        let full = Manifest {
+            algo: "gemm".into(),
+            n: 256,
+            block: 32,
+            class: -2,
+            // Past 2^53: a float-typed seed would round.
+            seed: 0xDEAD_BEEF_CAFE_F00D,
+            retention: Some(RetentionPolicy::KeepOutputs),
+            max_inflight: Some(8),
+            upstream: Some(3),
+        };
+        assert_eq!(Manifest::parse(&full.render()).unwrap(), full);
+        let bare = Manifest {
+            algo: "cholesky".into(),
+            n: 64,
+            block: 16,
+            class: 0,
+            seed: 7,
+            retention: None,
+            max_inflight: None,
+            upstream: None,
+        };
+        assert_eq!(Manifest::parse(&bare.render()).unwrap(), bare);
+        let info = full.info().unwrap();
+        assert_eq!((info.grid, info.block), (8, 32));
+        assert!(matches!(info.kind, UpstreamKind::Gemm));
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+        // Key shape drives the recovery scan.
+        assert_eq!(Manifest::key(12), "j12/manifest");
+        assert_eq!(Manifest::job_of_key("j12/manifest"), Some(12));
+        assert_eq!(Manifest::job_of_key("j12/status:X[0]"), None);
+        assert_eq!(Manifest::job_of_key("jx/manifest"), None);
+        assert_eq!(Manifest::job_of_key("j/manifest"), None);
+        assert_eq!(Manifest::job_of_key("other"), None);
+    }
+
+    #[test]
+    fn derived_seeds_are_per_entry_and_stable() {
+        assert_eq!(derive_seed(42, 0), derive_seed(42, 0));
+        assert_ne!(derive_seed(42, 0), derive_seed(42, 1));
+        assert_ne!(derive_seed(42, 0), 42, "entry 0 must not alias the base seed");
+    }
+
+    #[test]
+    fn manifest_watcher_attaches_and_detaches_external_contexts() {
+        let dir = std::env::temp_dir().join(format!("npw_watch_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = EngineConfig {
+            scaling: crate::config::ScalingMode::Fixed(0),
+            ..EngineConfig::default()
+        };
+        cfg.set("substrate", &format!("file:{}", dir.display())).unwrap();
+        let fleet = FleetContext::new(cfg, Arc::new(crate::kernels::NativeKernels));
+        let chol = Manifest {
+            algo: "cholesky".into(),
+            n: 16,
+            block: 8,
+            class: 0,
+            seed: 7,
+            retention: None,
+            max_inflight: None,
+            upstream: None,
+        };
+        let gemm = Manifest {
+            algo: "gemm".into(),
+            class: 1,
+            seed: 9,
+            max_inflight: Some(3),
+            upstream: Some(1),
+            ..chol.clone()
+        };
+        fleet.state.set(&Manifest::key(1), &chol.render());
+        fleet.state.set(&Manifest::key(2), &gemm.render());
+        let mut w = ManifestWatcher::new();
+        let (fresh, gone) = w.poll(&fleet);
+        assert!(gone.is_empty());
+        assert_eq!(fresh.len(), 2);
+        assert_eq!(fresh[0].job, JobId(1));
+        assert_eq!(fresh[0].label, "cholesky");
+        assert!(fresh[0].aliases.is_empty());
+        assert!(fresh[0].total_tasks > 0);
+        let child = &fresh[1];
+        assert_eq!(child.job, JobId(2));
+        assert_eq!(child.priority_class, 1);
+        assert_eq!(child.max_inflight, Some(3));
+        // The lower triangle reads through to j1's Cholesky outputs;
+        // the zero-seeded strict upper triangle (and the local B
+        // operand) stays home.
+        assert_eq!(child.blob_key(&Loc::new("A", vec![1, 0])), "j1/O[1,0]");
+        assert_eq!(child.blob_key(&Loc::new("A", vec![0, 1])), "j2/A[0,1]");
+        assert_eq!(child.blob_key(&Loc::new("B", vec![0, 0])), "j2/B[0,0]");
+        // Re-poll: steady state, nothing new.
+        let (fresh, gone) = w.poll(&fleet);
+        assert!(fresh.is_empty() && gone.is_empty());
+        // Retire j2's recipe: the watcher reports it for detach.
+        fleet.state.delete(&Manifest::key(2));
+        let (fresh, gone) = w.poll(&fleet);
+        assert!(fresh.is_empty());
+        assert_eq!(gone, vec![2]);
+        // A chained job whose upstream recipe is already gone cannot
+        // attach (warned once, skipped thereafter).
+        fleet.state.delete(&Manifest::key(1));
+        fleet.state.set(&Manifest::key(4), &gemm.render());
+        let mut w2 = ManifestWatcher::new();
+        let (fresh, _) = w2.poll(&fleet);
+        assert!(fresh.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pid_liveness_probe_is_platform_gated() {
+        match pid_alive(std::process::id() as u64) {
+            Some(alive) => {
+                // A probing platform must see this very process, and
+                // must rule out a pid far past any real pid space.
+                assert!(alive);
+                assert_eq!(pid_alive(u64::from(u32::MAX) - 1), Some(false));
+            }
+            // No probe: the daemon never steals a spool and the client
+            // never declares a daemon dead on this platform.
+            None => assert!(!cfg!(target_os = "linux")),
+        }
     }
 
     #[test]

@@ -153,6 +153,12 @@ pub struct FleetContext {
     pub cfg: EngineConfig,
     pub kill: KillSwitch,
     shutdown: AtomicBool,
+    /// External-fleet mode (`numpywren worker`): this process is one
+    /// of several sharing a durable substrate, so a queue message for
+    /// a job missing from the local registry may belong to a job this
+    /// process simply hasn't imported yet — workers must leave it on
+    /// the queue instead of deleting it as a stale orphan.
+    external: AtomicBool,
     jobs: RwLock<HashMap<u64, Arc<JobContext>>>,
 }
 
@@ -176,6 +182,7 @@ impl FleetContext {
             cfg,
             kill: KillSwitch::default(),
             shutdown: AtomicBool::new(false),
+            external: AtomicBool::new(false),
             jobs: RwLock::new(HashMap::new()),
         }
     }
@@ -216,6 +223,16 @@ impl FleetContext {
 
     pub fn set_shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Is this fleet one process among several on a shared substrate?
+    pub fn is_external(&self) -> bool {
+        self.external.load(Ordering::SeqCst)
+    }
+
+    /// Flag the fleet as externally attached (see [`Self::is_external`]).
+    pub fn set_external(&self) {
+        self.external.store(true, Ordering::SeqCst);
     }
 }
 

@@ -221,6 +221,17 @@ fn read_stage(
             continue;
         };
         let Some(ctx) = fleet.job(job_id) else {
+            // External fleet: this process's registry lags the shared
+            // substrate — another process may have enqueued this job's
+            // roots microseconds ago, before even its durable manifest
+            // landed — so an unknown job here is *not* evidence of
+            // residue. Park the delivery (the lease expires and the
+            // message redelivers to a process that knows the job);
+            // genuine residue is drained by the submitting process's
+            // own in-process fleet, which does know its jobs.
+            if fleet.is_external() {
+                continue;
+            }
             // Finished, canceled, or unknown job: drain its residue.
             fleet.queue.delete(&lease);
             continue;

@@ -510,6 +510,26 @@ impl JobManager {
     /// read upstream output tiles through its own input locations
     /// without copying them.
     pub fn submit_after(&self, spec: JobSpec, deps: &[JobId]) -> Result<JobId> {
+        self.submit_inner(spec, deps, None)
+    }
+
+    /// Re-submit a job under its *original* id — the daemon's
+    /// crash-recovery path. Durable job manifests let a restarted
+    /// daemon rebuild its submission table, and `@jN` dependency
+    /// references in spooled requests must keep resolving to the same
+    /// jobs they named before the crash, so the id is forced rather
+    /// than freshly allocated. Rejected if the id is already live or
+    /// sealed in this manager (recovery must not collide with new
+    /// work); the internal allocator is bumped past the forced id so
+    /// later fresh submissions never reuse it.
+    pub fn resubmit_after(&self, job: JobId, spec: JobSpec, deps: &[JobId]) -> Result<JobId> {
+        if self.status(job) != JobStatus::Unknown {
+            bail!("cannot resubmit {job}: the id is already in use");
+        }
+        self.submit_inner(spec, deps, Some(job))
+    }
+
+    fn submit_inner(&self, spec: JobSpec, deps: &[JobId], forced: Option<JobId>) -> Result<JobId> {
         if self.fleet.is_shutdown() {
             bail!("job manager is shut down");
         }
@@ -572,7 +592,15 @@ impl JobManager {
                 pins.entries.entry(d.0).or_default().pins += 1;
             }
         }
-        let job = JobId(self.next_job.fetch_add(1, Ordering::SeqCst));
+        let job = match forced {
+            Some(id) => {
+                // Keep the allocator strictly ahead of every recovered
+                // id so fresh submissions never collide with one.
+                self.next_job.fetch_max(id.0 + 1, Ordering::SeqCst);
+                id
+            }
+            None => JobId(self.next_job.fetch_add(1, Ordering::SeqCst)),
+        };
         let JobSpec {
             program,
             args,
@@ -1687,6 +1715,27 @@ mod tests {
         assert!(mgr.wait(JobId(99)).is_err());
         assert_eq!(mgr.status(JobId(99)), JobStatus::Unknown);
         assert!(!mgr.cancel(JobId(99)));
+    }
+
+    #[test]
+    fn resubmit_forces_ids_and_rejects_collisions() {
+        let mgr = JobManager::new(fixed_cfg(2));
+        // Recovery path: force an id well past the allocator.
+        let (spec, _) = tiny_cholesky_spec(16, 11);
+        let job = mgr.resubmit_after(JobId(7), spec, &[]).unwrap();
+        assert_eq!(job, JobId(7));
+        assert!(mgr.wait(job).unwrap().error.is_none());
+        // A live or sealed id cannot be resubmitted over.
+        let (spec, _) = tiny_cholesky_spec(16, 12);
+        assert!(mgr.resubmit_after(JobId(7), spec, &[]).is_err());
+        // Fresh submissions allocate strictly past every forced id.
+        let (spec, _) = tiny_cholesky_spec(16, 13);
+        let fresh = mgr.submit(spec).unwrap();
+        assert_eq!(fresh, JobId(8));
+        // Forced ids resolve as `@jN` dependencies like any other.
+        let (dep_spec, _) = tiny_cholesky_spec(16, 14);
+        let gated = mgr.submit_after(dep_spec, &[JobId(7)]).unwrap();
+        assert!(mgr.wait(gated).unwrap().error.is_none());
     }
 
     #[test]

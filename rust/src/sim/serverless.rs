@@ -46,7 +46,7 @@ pub enum WorkerPolicy {
 }
 
 /// Simulation parameters.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct SimConfig {
     pub policy: WorkerPolicy,
     pub pipeline_width: usize,
@@ -710,7 +710,7 @@ mod tests {
                 .unwrap(),
             ..SimConfig::default()
         };
-        let a = ServerlessSim::new(&w, CostModel::default(), cfg).run();
+        let a = ServerlessSim::new(&w, CostModel::default(), cfg.clone()).run();
         let b = ServerlessSim::new(&w, CostModel::default(), cfg).run();
         assert_eq!(a.tasks_done, b.tasks_done);
         assert_eq!(a.deliveries, b.deliveries);

@@ -18,7 +18,11 @@
 //!   one round-trip, like an S3 lifecycle sweep), and per-worker
 //!   straggler slowdowns (`straggle=FRAC:MULT` — a deterministic
 //!   `FRAC` of worker ids see `MULT`× the sampled latency; lifecycle
-//!   ops carry no worker id and are never straggled);
+//!   ops carry no worker id and are never straggled). A
+//!   `partition=FRAC:DUR` clause adds whole-backend unreachability:
+//!   with probability `FRAC` an op opens a `DUR`-long window during
+//!   which get/put/delete fail transiently without reaching the
+//!   backend at all;
 //! * [`ChaosQueue`] — duplicated enqueues with probability `dup`
 //!   (at-least-once *send*) and dropped deliveries with probability
 //!   `drop`: a dropped delivery takes the lease but never reaches the
@@ -27,12 +31,19 @@
 //!   flight on real SQS. Send latency comes from `send_lat` (the
 //!   enqueue round-trip the *sender* pays — child propagation and root
 //!   seeding slow down, not delivery), receive latency from
-//!   `recv_lat`;
+//!   `recv_lat`. During a `partition` window receives return empty
+//!   *before* any lease is taken — an unreachable endpoint, not a
+//!   lost delivery (contrast `drop`, which leases first);
 //! * [`ChaosKvState`] — per-op latency from `kv_lat`, covering the
 //!   lifecycle ops (`delete`, `scan_prefix`, `delete_prefix`) as well
-//!   as the RMW primitives (the trait's operations are infallible, so
-//!   no error injection). [`Queue::purge_prefix`] is a control-plane
-//!   drain and passes through unshaped.
+//!   as the RMW primitives. The trait surface is infallible by design
+//!   (the engine's control plane has no retry story for it), so
+//!   `kv_err=P` injects *internal* attempt failures instead: each op
+//!   fails-and-retries with probability `P` inside the decorator,
+//!   absorbed by a bounded loop (≤ 4 attempts, each paying one
+//!   `kv_lat` draw) — the DynamoDB-style conditional-write retry made
+//!   visible as latency rather than as an error. [`Queue::purge_prefix`]
+//!   is a control-plane drain and passes through unshaped.
 //!
 //! Selection is part of the substrate grammar
 //! ([`SubstrateConfig::parse`](crate::config::SubstrateConfig::parse)):
@@ -57,6 +68,8 @@
 //! | `recv_lat` | latency spec                           | queue recv latency           |
 //! | `kv_lat`   | latency spec                           | KV op latency (incl. delete/scan/delete_prefix) |
 //! | `straggle` | `FRAC:MULT`                            | slow workers                 |
+//! | `partition`| `FRAC:DUR`                             | unreachability windows       |
+//! | `kv_err`   | probability in [0,1]                   | internal KV attempt failures |
 //! | `seed`     | u64                                    | the PRNG seed                |
 //!
 //! Latency specs: a bare duration (`5ms`, `250us`, `0.01s`, plain
@@ -78,7 +91,7 @@ use crate::storage::traits::{BlobStore, KvState, Lease, Queue, StoreStats};
 use crate::util::prng::Rng;
 use anyhow::{anyhow, bail, Context, Result};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Marker embedded in every injected error message. The executor
 /// treats marked failures as retryable (and, past the retry budget,
@@ -266,6 +279,14 @@ pub struct ChaosConfig {
     pub straggler_frac: f64,
     /// Latency multiplier a straggler sees on blob ops.
     pub straggler_mult: f64,
+    /// Probability that an op opens an unreachability window
+    /// (`partition=FRAC:DUR`).
+    pub partition_frac: f64,
+    /// Wall-clock length of one unreachability window.
+    pub partition_dur: Duration,
+    /// Per-attempt internal KV failure probability (`kv_err=P`),
+    /// absorbed by bounded in-decorator retries.
+    pub kv_err: f64,
     pub seed: u64,
 }
 
@@ -282,6 +303,9 @@ impl Default for ChaosConfig {
             kv_lat: LatencyDist::Off,
             straggler_frac: 0.0,
             straggler_mult: 1.0,
+            partition_frac: 0.0,
+            partition_dur: Duration::ZERO,
+            kv_err: 0.0,
             seed: 0x0C1A05,
         }
     }
@@ -330,10 +354,17 @@ impl ChaosConfig {
                         bail!("straggle multiplier `{m}` must be a finite value >= 1");
                     }
                 }
+                "partition" => {
+                    let (f, d) = v.split_once(':').context("partition is FRAC:DUR")?;
+                    c.partition_frac = prob(f)?;
+                    c.partition_dur = parse_duration(d)?;
+                }
+                "kv_err" => c.kv_err = prob(v)?,
                 "seed" => c.seed = v.parse().map_err(|_| anyhow!("bad seed `{v}`"))?,
                 other => bail!(
                     "unknown chaos key `{other}` \
-                     (err|drop|dup|lat|read_lat|write_lat|send_lat|recv_lat|kv_lat|straggle|seed)"
+                     (err|drop|dup|lat|read_lat|write_lat|send_lat|recv_lat|kv_lat|straggle|\
+                      partition|kv_err|seed)"
                 ),
             }
         }
@@ -393,6 +424,50 @@ fn maybe_sleep(d: Duration) {
     }
 }
 
+/// One decorator's unreachability window (`partition=FRAC:DUR`).
+/// An op that draws the trigger opens a wall-clock window; every op
+/// landing inside it (including the trigger itself) is blocked before
+/// reaching the inner backend. Fault injection, not latency shaping —
+/// it applies even to virtual-time callers (`sleep = false`), exactly
+/// like `err`/`drop`.
+struct Partition {
+    frac: f64,
+    dur: Duration,
+    window: Mutex<Option<Instant>>,
+}
+
+impl Partition {
+    fn new(cfg: &ChaosConfig) -> Self {
+        Partition {
+            frac: cfg.partition_frac,
+            dur: cfg.partition_dur,
+            window: Mutex::new(None),
+        }
+    }
+
+    /// Is the backend unreachable for this op? Returns the remaining
+    /// window length when blocked (so blocking callers can wait it
+    /// out instead of spinning).
+    fn blocked(&self, draws: &Draws) -> Option<Duration> {
+        if self.frac <= 0.0 {
+            return None;
+        }
+        let mut window = self.window.lock().unwrap();
+        let now = Instant::now();
+        if let Some(until) = *window {
+            if now < until {
+                return Some(until - now);
+            }
+            *window = None;
+        }
+        if draws.chance(self.frac) {
+            *window = Some(now + self.dur);
+            return Some(self.dur);
+        }
+        None
+    }
+}
+
 // ---------------------------------------------------------------- blob
 
 /// Fault/latency decorator over any [`BlobStore`].
@@ -400,6 +475,7 @@ pub struct ChaosBlobStore {
     inner: Arc<dyn BlobStore>,
     cfg: ChaosConfig,
     draws: Draws,
+    partition: Partition,
     sleep: bool,
 }
 
@@ -407,6 +483,7 @@ impl ChaosBlobStore {
     pub fn new(inner: Arc<dyn BlobStore>, cfg: ChaosConfig, sleep: bool) -> Self {
         ChaosBlobStore {
             inner,
+            partition: Partition::new(&cfg),
             cfg,
             draws: Draws::new(cfg.seed ^ 0xB10B),
             sleep,
@@ -427,6 +504,9 @@ impl ChaosBlobStore {
 
 impl BlobStore for ChaosBlobStore {
     fn put(&self, worker: usize, key: &str, value: Matrix) -> Result<()> {
+        if self.partition.blocked(&self.draws).is_some() {
+            return Err(anyhow!("{TRANSIENT_MARKER}: backend partitioned, put `{key}`"));
+        }
         self.shape(&self.cfg.write_lat, worker);
         if self.draws.chance(self.cfg.err) {
             return Err(anyhow!("{TRANSIENT_MARKER}: injected put failure for `{key}`"));
@@ -435,6 +515,9 @@ impl BlobStore for ChaosBlobStore {
     }
 
     fn get(&self, worker: usize, key: &str) -> Result<Arc<Matrix>> {
+        if self.partition.blocked(&self.draws).is_some() {
+            return Err(anyhow!("{TRANSIENT_MARKER}: backend partitioned, get `{key}`"));
+        }
         self.shape(&self.cfg.read_lat, worker);
         if self.draws.chance(self.cfg.err) {
             return Err(anyhow!("{TRANSIENT_MARKER}: injected get failure for `{key}`"));
@@ -449,6 +532,11 @@ impl BlobStore for ChaosBlobStore {
     fn delete(&self, key: &str) -> Result<bool> {
         // Worker-less op: shaped by write_lat (no straggler multiplier),
         // and err-eligible like put — GC callers retry like workers do.
+        if self.partition.blocked(&self.draws).is_some() {
+            return Err(anyhow!(
+                "{TRANSIENT_MARKER}: backend partitioned, delete `{key}`"
+            ));
+        }
         if self.sleep {
             maybe_sleep(self.draws.latency(&self.cfg.write_lat));
         }
@@ -511,6 +599,7 @@ pub struct ChaosQueue {
     inner: Arc<dyn Queue>,
     cfg: ChaosConfig,
     draws: Draws,
+    partition: Partition,
     sleep: bool,
 }
 
@@ -518,9 +607,27 @@ impl ChaosQueue {
     pub fn new(inner: Arc<dyn Queue>, cfg: ChaosConfig, sleep: bool) -> Self {
         ChaosQueue {
             inner,
+            partition: Partition::new(&cfg),
             cfg,
             draws: Draws::new(cfg.seed ^ 0x05E5),
             sleep,
+        }
+    }
+
+    /// An unreachable endpoint: the receive returns empty *before*
+    /// the inner queue is touched, so no lease is taken (contrast
+    /// `drop`, which leases first and loses the delivery). Blocking
+    /// callers wait out the shorter of the window and their timeout
+    /// instead of spinning.
+    fn partitioned(&self, budget: Duration) -> bool {
+        match self.partition.blocked(&self.draws) {
+            None => false,
+            Some(remaining) => {
+                if self.sleep {
+                    maybe_sleep(remaining.min(budget));
+                }
+                true
+            }
         }
     }
 
@@ -564,6 +671,9 @@ impl Queue for ChaosQueue {
     }
 
     fn receive(&self) -> Option<(String, Lease)> {
+        if self.partitioned(Duration::ZERO) {
+            return None;
+        }
         if self.sleep {
             maybe_sleep(self.draws.latency(&self.cfg.recv_lat));
         }
@@ -573,6 +683,9 @@ impl Queue for ChaosQueue {
     fn receive_for(&self, worker: u64) -> Option<(String, Lease)> {
         // Explicit forward so the inner backend sees the claimer id
         // (the default falls back to hint-agnostic `receive`).
+        if self.partitioned(Duration::ZERO) {
+            return None;
+        }
         if self.sleep {
             maybe_sleep(self.draws.latency(&self.cfg.recv_lat));
         }
@@ -580,6 +693,9 @@ impl Queue for ChaosQueue {
     }
 
     fn receive_timeout(&self, timeout: Duration) -> Option<(String, Lease)> {
+        if self.partitioned(timeout) {
+            return None;
+        }
         if self.sleep {
             maybe_sleep(self.draws.latency(&self.cfg.recv_lat));
         }
@@ -587,6 +703,9 @@ impl Queue for ChaosQueue {
     }
 
     fn receive_timeout_for(&self, worker: u64, timeout: Duration) -> Option<(String, Lease)> {
+        if self.partitioned(timeout) {
+            return None;
+        }
         if self.sleep {
             maybe_sleep(self.draws.latency(&self.cfg.recv_lat));
         }
@@ -621,9 +740,11 @@ impl Queue for ChaosQueue {
 
 // ------------------------------------------------------------------ kv
 
-/// Latency decorator over any [`KvState`]. The trait's operations are
-/// infallible by design (the engine's control plane has no retry
-/// story for them), so only shaping applies.
+/// Latency/retry decorator over any [`KvState`]. The trait's
+/// operations are infallible by design (the engine's control plane
+/// has no retry story for them), so `kv_err` failures are injected as
+/// *internal* attempts and absorbed by a bounded retry loop — the
+/// caller only ever sees the extra latency.
 pub struct ChaosKvState {
     inner: Arc<dyn KvState>,
     cfg: ChaosConfig,
@@ -641,7 +762,20 @@ impl ChaosKvState {
         }
     }
 
+    /// The single shaping point every KV op passes through: each
+    /// internal attempt pays one `kv_lat` draw, and with probability
+    /// `kv_err` the attempt fails and is retried. The loop is bounded
+    /// (≤ 4 attempts) and the final attempt always succeeds, keeping
+    /// the trait surface infallible.
     fn pause(&self) {
+        for _ in 0..3 {
+            if self.sleep {
+                maybe_sleep(self.draws.latency(&self.cfg.kv_lat));
+            }
+            if !self.draws.chance(self.cfg.kv_err) {
+                return;
+            }
+        }
         if self.sleep {
             maybe_sleep(self.draws.latency(&self.cfg.kv_lat));
         }
@@ -759,7 +893,7 @@ mod tests {
     fn chaos_config_grammar() {
         let c = ChaosConfig::parse(
             "err=0.01, drop=0.05,dup=0.02,lat=lognorm:5ms,send_lat=2ms,recv_lat=1ms,\
-             straggle=0.1:16,seed=9",
+             straggle=0.1:16,partition=0.02:50ms,kv_err=0.1,seed=9",
         )
         .unwrap();
         assert_eq!(c.err, 0.01);
@@ -777,6 +911,9 @@ mod tests {
         assert_eq!(c.recv_lat, LatencyDist::Fixed(Duration::from_millis(1)));
         assert_eq!(c.straggler_frac, 0.1);
         assert_eq!(c.straggler_mult, 16.0);
+        assert_eq!(c.partition_frac, 0.02);
+        assert_eq!(c.partition_dur, Duration::from_millis(50));
+        assert_eq!(c.kv_err, 0.1);
         assert_eq!(c.seed, 9);
         // Empty body → all defaults (a no-op layer).
         assert_eq!(ChaosConfig::parse("").unwrap(), ChaosConfig::default());
@@ -788,6 +925,10 @@ mod tests {
             "straggle without a latency clause is a silent no-op — reject"
         );
         assert!(ChaosConfig::parse("err").is_err());
+        assert!(ChaosConfig::parse("partition=0.5").is_err(), "FRAC:DUR required");
+        assert!(ChaosConfig::parse("partition=1.5:10ms").is_err());
+        assert!(ChaosConfig::parse("partition=0.5:nope").is_err());
+        assert!(ChaosConfig::parse("kv_err=2").is_err());
     }
 
     #[test]
@@ -884,6 +1025,76 @@ mod tests {
         assert_eq!(q.len(), 4);
         assert_eq!(q.purge_prefix("1|"), 2, "both duplicated copies purged");
         assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn partition_blocks_blob_ops_before_the_backend() {
+        let cfg = ChaosConfig {
+            partition_frac: 1.0,
+            partition_dur: Duration::from_millis(5),
+            ..ChaosConfig::default()
+        };
+        let blob = ChaosBlobStore::new(Arc::new(StrictBlobStore::new()), cfg, true);
+        let err = blob.put(0, "K", Matrix::zeros(1, 1)).unwrap_err();
+        assert!(is_transient(&err), "partition faults are retryable");
+        assert_eq!(blob.len(), 0, "a partitioned put never reaches the backend");
+        assert!(blob.delete("K").is_err());
+        // Windows heal: at frac<1 a worker-style retry loop gets
+        // through once the window lapses.
+        let cfg = ChaosConfig {
+            partition_frac: 0.5,
+            partition_dur: Duration::from_micros(200),
+            seed: 7,
+            ..ChaosConfig::default()
+        };
+        let blob = ChaosBlobStore::new(Arc::new(StrictBlobStore::new()), cfg, true);
+        blob_put_with_retry(&blob, 64, 0, "K", Matrix::zeros(1, 1)).unwrap();
+        assert_eq!(with_blob_retry(64, || blob.get(0, "K")).unwrap().rows(), 1);
+    }
+
+    #[test]
+    fn partition_starves_receives_without_taking_a_lease() {
+        let cfg = ChaosConfig {
+            partition_frac: 1.0,
+            partition_dur: Duration::from_millis(1),
+            ..ChaosConfig::default()
+        };
+        let q = ChaosQueue::new(
+            Arc::new(StrictQueue::new(Duration::from_secs(10))),
+            cfg,
+            true,
+        );
+        q.send("t", 0); // sends are unaffected — only receives starve
+        assert_eq!(q.len(), 1);
+        assert!(q.receive().is_none());
+        assert!(q.receive_timeout(Duration::from_millis(5)).is_none());
+        // The decisive contrast with drop=: nothing was leased, so the
+        // message is still visible and was never counted as delivered.
+        assert_eq!(q.visible_len(), 1, "no lease taken while partitioned");
+        assert_eq!(q.delivery_count("t"), 0);
+    }
+
+    #[test]
+    fn kv_err_is_absorbed_by_bounded_internal_retries() {
+        let cfg = ChaosConfig {
+            kv_err: 1.0,
+            kv_lat: LatencyDist::Fixed(Duration::from_millis(2)),
+            ..ChaosConfig::default()
+        };
+        let kv = ChaosKvState::new(Arc::new(crate::storage::StrictKvState::new()), cfg, true);
+        let sw = std::time::Instant::now();
+        assert_eq!(kv.incr("c", 1), 1);
+        assert!(
+            sw.elapsed() >= Duration::from_millis(8),
+            "kv_err=1 must pay all 4 internal attempts (4 × kv_lat)"
+        );
+        // Even at kv_err=1 the surface stays infallible and exact.
+        for _ in 0..9 {
+            kv.incr("c", 1);
+        }
+        assert_eq!(kv.counter("c"), 10);
+        assert!(kv.cas("k", None, "v"));
+        assert_eq!(kv.get("k").as_deref(), Some("v"));
     }
 
     #[test]

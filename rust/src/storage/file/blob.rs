@@ -1,0 +1,302 @@
+//! Durable tile store: one file per tile, mtimes as `LastModified`.
+//!
+//! Writes stage in `tmp/` and `rename` into place, so a reader never
+//! observes a torn tile and no lock is needed anywhere — last writer
+//! wins per key, exactly the S3 model. Ages come from file mtimes
+//! (rename preserves the staged file's write time), so
+//! `prefix_age`/`prefix_ages` report time-since-newest-put across
+//! *processes*, which the in-memory families cannot.
+//!
+//! Tile format: 16-byte header (`rows: u64 LE`, `cols: u64 LE`)
+//! followed by the row-major `f64` LE payload. Accounting counts
+//! payload bytes (`rows*cols*8`), matching the in-memory families.
+
+use crate::linalg::matrix::Matrix;
+use crate::storage::file::Layout;
+use crate::storage::traits::{BlobStore, StoreStats, TransferAccounting};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The store. Cheap to clone (Arc-shared).
+#[derive(Clone)]
+pub struct FileBlobStore {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    layout: Layout,
+    /// In-process transfer accounting (Figure 7's per-worker bytes are
+    /// a per-handle metric, not durable state).
+    accounting: TransferAccounting,
+    /// Injected latency per operation (simulates S3's ~10 ms).
+    latency: Duration,
+}
+
+impl FileBlobStore {
+    pub fn open(dir: &Path, shards: usize) -> Result<FileBlobStore> {
+        Self::open_with_latency(dir, shards, Duration::ZERO)
+    }
+
+    /// A store that sleeps `latency` on every get/put.
+    pub fn open_with_latency(
+        dir: &Path,
+        shards: usize,
+        latency: Duration,
+    ) -> Result<FileBlobStore> {
+        let layout = Layout::open(dir, shards)
+            .with_context(|| format!("file blob store: cannot open `{}`", dir.display()))?;
+        Ok(FileBlobStore {
+            inner: Arc::new(Inner {
+                layout,
+                accounting: TransferAccounting::default(),
+                latency,
+            }),
+        })
+    }
+
+    fn latency(&self) {
+        if !self.inner.latency.is_zero() {
+            std::thread::sleep(self.inner.latency);
+        }
+    }
+
+    fn path(&self, key: &str) -> std::path::PathBuf {
+        self.inner.layout.key_path("blob", key)
+    }
+}
+
+fn serialize(m: &Matrix) -> Vec<u8> {
+    let (rows, cols) = (m.rows(), m.cols());
+    let mut out = Vec::with_capacity(16 + rows * cols * 8);
+    out.extend_from_slice(&(rows as u64).to_le_bytes());
+    out.extend_from_slice(&(cols as u64).to_le_bytes());
+    for v in m.data() {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn deserialize(bytes: &[u8], key: &str) -> Result<Matrix> {
+    if bytes.len() < 16 {
+        bail!("corrupt tile `{key}`: {} bytes, header needs 16", bytes.len());
+    }
+    let rows = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
+    let cols = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    let want = 16 + rows.saturating_mul(cols).saturating_mul(8);
+    if bytes.len() != want {
+        bail!(
+            "corrupt tile `{key}`: {rows}x{cols} header but {} of {want} bytes",
+            bytes.len()
+        );
+    }
+    let data = bytes[16..]
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+impl BlobStore for FileBlobStore {
+    fn put(&self, worker: usize, key: &str, value: Matrix) -> Result<()> {
+        self.latency();
+        let bytes = (value.rows() * value.cols() * 8) as u64;
+        self.inner
+            .layout
+            .write_atomic(&self.path(key), &serialize(&value))
+            .with_context(|| format!("file blob store: put `{key}`"))?;
+        self.inner.accounting.record_put(worker, bytes);
+        Ok(())
+    }
+
+    fn get(&self, worker: usize, key: &str) -> Result<Arc<Matrix>> {
+        self.latency();
+        let raw = std::fs::read(self.path(key))
+            .with_context(|| format!("object-store key `{key}` not found"))?;
+        let m = deserialize(&raw, key)?;
+        let bytes = (m.rows() * m.cols() * 8) as u64;
+        self.inner.accounting.record_get(worker, bytes);
+        Ok(Arc::new(m))
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.path(key).exists()
+    }
+
+    fn delete(&self, key: &str) -> Result<bool> {
+        match std::fs::remove_file(self.path(key)) {
+            Ok(()) => Ok(true),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
+            Err(e) => Err(e).with_context(|| format!("file blob store: delete `{key}`")),
+        }
+    }
+
+    fn scan_prefix(&self, prefix: &str) -> Vec<String> {
+        let mut keys: Vec<String> = self
+            .inner
+            .layout
+            .scan_space("blob")
+            .into_iter()
+            .filter_map(|(k, _)| k.starts_with(prefix).then_some(k))
+            .collect();
+        keys.sort_unstable();
+        keys
+    }
+
+    fn delete_prefix(&self, prefix: &str) -> usize {
+        let mut removed = 0;
+        for (key, path) in self.inner.layout.scan_space("blob") {
+            if key.starts_with(prefix) && std::fs::remove_file(path).is_ok() {
+                removed += 1;
+            }
+        }
+        removed
+    }
+
+    fn prefix_age(&self, prefix: &str) -> Option<Duration> {
+        // Min over per-key mtime ages = time since the newest write
+        // anywhere under the prefix.
+        self.inner
+            .layout
+            .scan_space("blob")
+            .into_iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .filter_map(|(_, p)| super::mtime_age(&p))
+            .min()
+    }
+
+    fn prefix_ages(&self, delimiter: char) -> Vec<(String, Duration)> {
+        // One walk, merging per-namespace minima — the mtime analogue
+        // of `traits::PrefixAges` (which is `Instant`-based and so
+        // cannot span processes).
+        let mut ages: BTreeMap<String, Duration> = BTreeMap::new();
+        for (key, path) in self.inner.layout.scan_space("blob") {
+            let Some(end) = key.find(delimiter) else {
+                continue;
+            };
+            let Some(age) = super::mtime_age(&path) else {
+                continue;
+            };
+            let ns = key[..end + delimiter.len_utf8()].to_string();
+            ages.entry(ns)
+                .and_modify(|cur| *cur = (*cur).min(age))
+                .or_insert(age);
+        }
+        ages.into_iter().collect()
+    }
+
+    fn len(&self) -> usize {
+        self.inner.layout.scan_space("blob").len()
+    }
+
+    fn stats(&self) -> StoreStats {
+        self.inner.accounting.stats()
+    }
+
+    fn worker_stats(&self, worker: usize) -> StoreStats {
+        self.inner.accounting.worker_stats(worker)
+    }
+
+    fn known_workers(&self) -> Vec<usize> {
+        self.inner.accounting.known_workers()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "npw_fblob_{tag}_{}_{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_exact_bits_and_missing_key_errors() {
+        let dir = tmpdir("rt");
+        let s = FileBlobStore::open(&dir, 4).unwrap();
+        let mut rng = Rng::new(7);
+        for i in 0..16 {
+            let m = Matrix::randn(3, 2, &mut rng);
+            let key = format!("j1/T[{i},{}]", i % 5);
+            s.put(0, &key, m.clone()).unwrap();
+            assert_eq!(*s.get(0, &key).unwrap(), m, "exact f64 bits");
+            assert!(s.contains(&key));
+        }
+        assert_eq!(s.len(), 16);
+        assert!(s.get(0, "missing").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn two_handles_share_one_directory() {
+        let dir = tmpdir("share");
+        let a = FileBlobStore::open(&dir, 4).unwrap();
+        let b = FileBlobStore::open(&dir, 4).unwrap();
+        a.put(0, "j1/X", Matrix::from_vec(1, 2, vec![1.5, -2.5]))
+            .unwrap();
+        assert_eq!(b.get(1, "j1/X").unwrap().data(), &[1.5, -2.5]);
+        assert!(b.delete("j1/X").unwrap());
+        assert!(!a.contains("j1/X"));
+        // Accounting is per-handle, not shared state.
+        assert_eq!(a.stats().put_ops, 1);
+        assert_eq!(b.stats().put_ops, 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn lifecycle_ops_sweep_namespaces() {
+        let dir = tmpdir("gc");
+        let s = FileBlobStore::open(&dir, 4).unwrap();
+        for j in 1..=2 {
+            for k in 0..8 {
+                s.put(0, &format!("j{j}/T[{k}]"), Matrix::zeros(1, 1)).unwrap();
+            }
+        }
+        let j1 = s.scan_prefix("j1/");
+        assert_eq!(j1.len(), 8);
+        assert!(j1.windows(2).all(|w| w[0] < w[1]), "sorted");
+        assert!(s.delete("j1/T[0]").unwrap());
+        assert!(!s.delete("j1/T[0]").unwrap());
+        assert_eq!(s.delete_prefix("j1/"), 7);
+        assert_eq!(s.len(), 8, "j2 untouched");
+        assert_eq!(s.delete_prefix(""), 8);
+        assert!(s.is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prefix_ages_come_from_mtimes() {
+        let dir = tmpdir("age");
+        let s = FileBlobStore::open(&dir, 4).unwrap();
+        assert_eq!(s.prefix_age("j1/"), None);
+        for k in 0..4 {
+            s.put(0, &format!("j1/T[{k}]"), Matrix::zeros(1, 1)).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(12));
+        let aged = s.prefix_age("j1/").unwrap();
+        assert!(aged >= Duration::from_millis(12));
+        // A read must not refresh the age; a write must.
+        s.get(0, "j1/T[1]").unwrap();
+        assert!(s.prefix_age("j1/").unwrap() >= aged);
+        s.put(0, "j1/T[3]", Matrix::zeros(1, 1)).unwrap();
+        assert!(s.prefix_age("j1/").unwrap() < aged);
+        s.put(0, "j2/T[0]", Matrix::zeros(1, 1)).unwrap();
+        let ages = s.prefix_ages('/');
+        let names: Vec<&str> = ages.iter().map(|(p, _)| p.as_str()).collect();
+        assert_eq!(names, vec!["j1/", "j2/"]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

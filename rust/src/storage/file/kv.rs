@@ -1,0 +1,304 @@
+//! Durable runtime state: string KV and counter spaces on disk.
+//!
+//! Two spaces mirror the in-memory `StrictKvState`: `kv/` holds raw
+//! string values, `kvc/` holds counters *and* `edge_decr`'s edge
+//! guards as decimal text (job namespaces keep the two disjoint, same
+//! as the in-memory families). All mutations — including the two-key
+//! `edge_decr` — run under one cross-process [`DirLock`], which is
+//! what makes RMW linearizable across an external worker fleet. Reads
+//! are lock-free: every write is an atomic rename, so a reader sees
+//! either the old or the new value, never a torn one. (A lock-free
+//! read can interleave with a concurrent RMW — per-key linearizable
+//! reads, exactly the Redis contract, not a snapshot.)
+//!
+//! This is the store the daemon's crash-restart recovery scans: job
+//! manifests, `status:*`, `deps:*`, and `@jN` counters all live here
+//! and survive process death.
+
+use crate::storage::file::lock::DirLock;
+use crate::storage::file::Layout;
+use crate::storage::traits::KvState;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// The store. Cheap to clone (Arc-shared).
+#[derive(Clone)]
+pub struct FileKvState {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    layout: Layout,
+    lock: DirLock,
+    /// In-process op counter (control-plane load metric, per handle).
+    ops: AtomicU64,
+}
+
+impl FileKvState {
+    pub fn open(dir: &Path, shards: usize) -> anyhow::Result<FileKvState> {
+        let layout = Layout::open(dir, shards).map_err(|e| {
+            anyhow::anyhow!("file kv state: cannot open `{}`: {e}", dir.display())
+        })?;
+        let lock = DirLock::new(layout.lock_path("kv.lock"));
+        Ok(FileKvState {
+            inner: Arc::new(Inner {
+                layout,
+                lock,
+                ops: AtomicU64::new(0),
+            }),
+        })
+    }
+
+    fn bump(&self) {
+        self.inner.ops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn kv_path(&self, key: &str) -> PathBuf {
+        self.inner.layout.key_path("kv", key)
+    }
+
+    fn ctr_path(&self, key: &str) -> PathBuf {
+        self.inner.layout.key_path("kvc", key)
+    }
+
+    fn read_counter(&self, key: &str) -> Option<i64> {
+        std::fs::read_to_string(self.ctr_path(key))
+            .ok()
+            .and_then(|s| s.trim().parse().ok())
+    }
+
+    fn write_counter(&self, key: &str, value: i64) {
+        self.inner
+            .layout
+            .write_atomic(&self.ctr_path(key), value.to_string().as_bytes())
+            .expect("file kv state: counter write failed");
+    }
+}
+
+impl KvState for FileKvState {
+    fn get(&self, key: &str) -> Option<String> {
+        self.bump();
+        std::fs::read_to_string(self.kv_path(key)).ok()
+    }
+
+    fn set(&self, key: &str, value: &str) {
+        self.bump();
+        let path = self.kv_path(key);
+        self.inner.lock.with(|| {
+            self.inner
+                .layout
+                .write_atomic(&path, value.as_bytes())
+                .expect("file kv state: set failed");
+        });
+    }
+
+    fn set_nx(&self, key: &str, value: &str) -> bool {
+        self.bump();
+        let path = self.kv_path(key);
+        self.inner.lock.with(|| {
+            if path.exists() {
+                return false;
+            }
+            self.inner
+                .layout
+                .write_atomic(&path, value.as_bytes())
+                .expect("file kv state: set_nx failed");
+            true
+        })
+    }
+
+    fn cas(&self, key: &str, expect: Option<&str>, value: &str) -> bool {
+        self.bump();
+        let path = self.kv_path(key);
+        self.inner.lock.with(|| {
+            let current = std::fs::read_to_string(&path).ok();
+            if current.as_deref() != expect {
+                return false;
+            }
+            self.inner
+                .layout
+                .write_atomic(&path, value.as_bytes())
+                .expect("file kv state: cas failed");
+            true
+        })
+    }
+
+    fn init_counter(&self, key: &str, value: i64) -> bool {
+        self.bump();
+        self.inner.lock.with(|| {
+            if self.ctr_path(key).exists() {
+                return false;
+            }
+            self.write_counter(key, value);
+            true
+        })
+    }
+
+    fn incr(&self, key: &str, delta: i64) -> i64 {
+        self.bump();
+        self.inner.lock.with(|| {
+            let v = self.read_counter(key).unwrap_or(0) + delta;
+            self.write_counter(key, v);
+            v
+        })
+    }
+
+    fn counter(&self, key: &str) -> i64 {
+        self.bump();
+        self.read_counter(key).unwrap_or(0)
+    }
+
+    fn counter_exists(&self, key: &str) -> bool {
+        self.ctr_path(key).exists()
+    }
+
+    fn delete(&self, key: &str) -> bool {
+        self.bump();
+        let (kv, ctr) = (self.kv_path(key), self.ctr_path(key));
+        self.inner.lock.with(|| {
+            let a = std::fs::remove_file(kv).is_ok();
+            let b = std::fs::remove_file(ctr).is_ok();
+            a || b
+        })
+    }
+
+    fn scan_prefix(&self, prefix: &str) -> Vec<String> {
+        let mut keys: Vec<String> = self
+            .inner
+            .layout
+            .scan_space("kv")
+            .into_iter()
+            .chain(self.inner.layout.scan_space("kvc"))
+            .filter_map(|(k, _)| k.starts_with(prefix).then_some(k))
+            .collect();
+        keys.sort_unstable();
+        keys.dedup();
+        keys
+    }
+
+    fn delete_prefix(&self, prefix: &str) -> usize {
+        self.bump();
+        self.inner.lock.with(|| {
+            let mut removed = 0;
+            for (key, path) in self
+                .inner
+                .layout
+                .scan_space("kv")
+                .into_iter()
+                .chain(self.inner.layout.scan_space("kvc"))
+            {
+                if key.starts_with(prefix) && std::fs::remove_file(path).is_ok() {
+                    removed += 1;
+                }
+            }
+            removed
+        })
+    }
+
+    fn edge_decr(&self, edge_key: &str, counter_key: &str) -> i64 {
+        self.bump();
+        self.inner.lock.with(|| {
+            if self.ctr_path(edge_key).exists() {
+                // Edge already marked (a re-executed parent): observe
+                // the counter without double-decrementing.
+                return self.read_counter(counter_key).unwrap_or(0);
+            }
+            self.write_counter(edge_key, 1);
+            let v = self.read_counter(counter_key).unwrap_or(0) - 1;
+            self.write_counter(counter_key, v);
+            v
+        })
+    }
+
+    fn op_count(&self) -> u64 {
+        self.inner.ops.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+
+    fn open(tag: &str) -> (PathBuf, FileKvState) {
+        let d = std::env::temp_dir().join(format!(
+            "npw_fkv_{tag}_{}_{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        let s = FileKvState::open(&d, 4).unwrap();
+        (d, s)
+    }
+
+    #[test]
+    fn rmw_primitives_match_strict_semantics() {
+        let (dir, s) = open("rmw");
+        assert!(s.set_nx("k", "a"));
+        assert!(!s.set_nx("k", "b"));
+        assert_eq!(s.get("k").as_deref(), Some("a"));
+        assert!(!s.cas("k", Some("b"), "c"));
+        assert!(s.cas("k", Some("a"), "c"));
+        assert!(s.cas("new", None, "v"));
+        assert!(s.init_counter("n", 5));
+        assert!(!s.init_counter("n", 9));
+        assert_eq!(s.incr("n", 2), 7);
+        assert_eq!(s.decr("fresh"), -1, "incr creates at 0");
+        assert_eq!(s.counter("absent"), 0);
+        assert!(!s.counter_exists("absent"));
+        assert!(s.counter_exists("n"));
+        assert!(s.delete("k"));
+        assert!(!s.delete("k"));
+        assert!(s.op_count() > 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn edge_decr_is_idempotent_per_edge_and_durable() {
+        let (dir, s) = open("edge");
+        s.init_counter("deps:5", 2);
+        assert_eq!(s.edge_decr("edge:a->5", "deps:5"), 1);
+        assert_eq!(s.edge_decr("edge:a->5", "deps:5"), 1, "re-observed");
+        // A second handle on the same dir (≈ another process) sees the
+        // mark and the counter.
+        let t = FileKvState::open(dir.as_path(), 4).unwrap();
+        assert_eq!(t.edge_decr("edge:a->5", "deps:5"), 1);
+        assert_eq!(t.edge_decr("edge:b->5", "deps:5"), 0);
+        assert_eq!(s.counter("deps:5"), 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn scan_and_delete_span_both_spaces() {
+        let (dir, s) = open("scan");
+        s.set("j1/status:0", "done");
+        s.set("j2/status:0", "done");
+        s.init_counter("j1/deps:1", 3);
+        assert_eq!(s.scan_prefix("j1/"), vec!["j1/deps:1", "j1/status:0"]);
+        assert_eq!(s.delete_prefix("j1/"), 2);
+        assert_eq!(s.delete_prefix("j1/"), 0, "idempotent");
+        assert_eq!(s.scan_prefix(""), vec!["j2/status:0"]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn concurrent_incrs_do_not_lose_updates() {
+        let (dir, s) = open("conc");
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..25 {
+                    s.incr("hot", 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.counter("hot"), 200);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,297 @@
+//! The durable file-backed substrate family — `file:<dir>[:N]`.
+//!
+//! The paper's architecture survives worker *and* control-plane death
+//! because all state lives in durable services (S3/SQS/Redis, §3).
+//! The in-memory families forget everything when the process exits;
+//! this family keeps the whole substrate on disk, so:
+//!
+//! * several **processes** can share one substrate (`numpywren worker
+//!   --substrate file:<dir>` joins an external fleet),
+//! * the daemon can be **killed mid-chain and restarted** against the
+//!   same directory — surviving `jN/` namespaces, leases, and `@jN`
+//!   dependency counters are re-attached on boot (see
+//!   [`crate::daemon`]),
+//! * queue **leases survive process death** and expire by wall-clock,
+//!   so a dead worker's task is redelivered to a live one exactly as
+//!   SQS would.
+//!
+//! On-disk layout under `<dir>/`:
+//!
+//! ```text
+//! meta                    shard count, pinned by the first open
+//! tmp/                    staging for atomic tmp+rename writes
+//! locks/kv.lock           cross-process KV mutation lock
+//! locks/queue.lock        cross-process queue lock
+//! blob/<shard>/<enc-key>  tiles: 16-byte LE header (rows, cols) + f64 LE payload
+//! kv/<shard>/<enc-key>    string KV entries (raw value bytes)
+//! kvc/<shard>/<enc-key>   counters and edge guards (decimal text)
+//! queue/msgs/m-<id>       priority, hint, hint stamp, body
+//! queue/leases/l-<id>     receipt, wall-clock deadline, delivery count
+//! queue/ids               monotone message-id allocator
+//! ```
+//!
+//! Invariants:
+//!
+//! * **Every write is atomic** — staged in `tmp/` then `rename`d, the
+//!   same idiom as the daemon spool — so readers never observe a torn
+//!   file and blob/KV reads need no lock.
+//! * **Namespace ages are mtimes.** `prefix_age`/`prefix_ages` reduce
+//!   file mtimes exactly as the in-memory families reduce their
+//!   `written` instants (reads never refresh an mtime).
+//! * **Shard routing is process-stable.** Keys route by the same
+//!   FNV-1a hash as the sharded family ([`crate::storage::sharded`]),
+//!   never by `RandomState`, so two processes agree on placement. The
+//!   shard count itself is pinned in `meta` by the first open; later
+//!   opens adopt it regardless of their spec.
+//! * **fsync is opt-in.** `NUMPYWREN_FILE_FSYNC=1` (read at open)
+//!   syncs every staged file before its rename — crash-consistent at
+//!   a large throughput cost; the default trades power-loss safety
+//!   (not process-death safety, which rename alone provides) for
+//!   speed. `perf_file` measures both.
+//!
+//! Trait-level error policy: fallible ops (`put`/`get`/`delete`)
+//! surface IO errors to the caller's retry budget; infallible ops
+//! (KV mutations, queue sends) panic on IO failure — a full disk is a
+//! deployment error, not a recoverable fault. The chaos decorators
+//! compose over this family unchanged (`file:…+chaos(…)+cache(…)`).
+
+mod blob;
+mod kv;
+mod lock;
+mod queue;
+
+pub use blob::FileBlobStore;
+pub use kv::FileKvState;
+pub use queue::FileQueue;
+
+use std::io::{self, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, SystemTime};
+
+// Same FNV-1a routing as the sharded family — deterministic across
+// processes, unlike `RandomState`.
+pub(crate) use crate::storage::sharded::shard_of;
+
+/// The shared on-disk layout handle: root directory, pinned shard
+/// count, and the fsync policy. One per backend handle; all handles on
+/// one directory agree via `meta`.
+pub(crate) struct Layout {
+    root: PathBuf,
+    shards: usize,
+    fsync: bool,
+}
+
+/// Process-unique suffix for staged tmp files.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+impl Layout {
+    /// Open (creating if needed) the layout rooted at `dir`. The first
+    /// open of a directory pins its shard count into `meta`; later
+    /// opens adopt the pinned count so cross-process handles agree on
+    /// key placement even when their specs differ.
+    pub(crate) fn open(dir: &Path, shards: usize) -> io::Result<Layout> {
+        let root = dir.to_path_buf();
+        std::fs::create_dir_all(root.join("tmp"))?;
+        std::fs::create_dir_all(root.join("locks"))?;
+        let fsync = std::env::var("NUMPYWREN_FILE_FSYNC").as_deref() == Ok("1");
+        let mut layout = Layout {
+            root,
+            shards: shards.max(1),
+            fsync,
+        };
+        let meta = layout.root.join("meta");
+        match std::fs::read_to_string(&meta)
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+        {
+            Some(n) if n > 0 => layout.shards = n,
+            _ => layout.write_atomic(&meta, layout.shards.to_string().as_bytes())?,
+        }
+        for space in ["blob", "kv", "kvc"] {
+            for s in 0..layout.shards {
+                std::fs::create_dir_all(layout.root.join(space).join(s.to_string()))?;
+            }
+        }
+        std::fs::create_dir_all(layout.root.join("queue").join("msgs"))?;
+        std::fs::create_dir_all(layout.root.join("queue").join("leases"))?;
+        Ok(layout)
+    }
+
+    pub(crate) fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub(crate) fn lock_path(&self, name: &str) -> PathBuf {
+        self.root.join("locks").join(name)
+    }
+
+    /// Path of `key` inside `space` (`blob`/`kv`/`kvc`).
+    pub(crate) fn key_path(&self, space: &str, key: &str) -> PathBuf {
+        let shard = shard_of(key, self.shards);
+        self.root
+            .join(space)
+            .join(shard.to_string())
+            .join(encode_key(key))
+    }
+
+    /// Stage-then-rename write; readers never see a torn file. The tmp
+    /// name is process- and call-unique so concurrent writers (even
+    /// across processes) never collide in `tmp/`.
+    pub(crate) fn write_atomic(&self, dest: &Path, bytes: &[u8]) -> io::Result<()> {
+        let tmp = self.root.join("tmp").join(format!(
+            "{}-{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(bytes)?;
+            if self.fsync {
+                f.sync_all()?;
+            }
+        }
+        let renamed = std::fs::rename(&tmp, dest);
+        if renamed.is_err() {
+            let _ = std::fs::remove_file(&tmp);
+        }
+        renamed
+    }
+
+    /// Every `(decoded key, path)` in `space`, unsorted. Walks every
+    /// numbered shard directory actually present (robust even if a
+    /// foreign handle pinned a different count before `meta` existed);
+    /// undecodable or foreign filenames are skipped.
+    pub(crate) fn scan_space(&self, space: &str) -> Vec<(String, PathBuf)> {
+        let mut out = Vec::new();
+        let Ok(shards) = std::fs::read_dir(self.root.join(space)) else {
+            return out;
+        };
+        for shard in shards.flatten() {
+            let Ok(files) = std::fs::read_dir(shard.path()) else {
+                continue;
+            };
+            for f in files.flatten() {
+                if let Some(key) = f.file_name().to_str().and_then(decode_key) {
+                    out.push((key, f.path()));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Percent-encode a substrate key into a filesystem-safe filename.
+/// `[A-Za-z0-9._-]` pass through (except a *leading* `.`, so no key
+/// can encode to `.` or `..`); everything else — including `/`, the
+/// namespace delimiter — becomes `%XX`.
+pub(crate) fn encode_key(key: &str) -> String {
+    let mut out = String::with_capacity(key.len());
+    for b in key.bytes() {
+        let safe = matches!(b, b'A'..=b'Z' | b'a'..=b'z' | b'0'..=b'9' | b'_' | b'-')
+            || (b == b'.' && !out.is_empty());
+        if safe {
+            out.push(b as char);
+        } else {
+            out.push_str(&format!("%{b:02X}"));
+        }
+    }
+    out
+}
+
+/// Inverse of [`encode_key`]; `None` for names this module never
+/// produced (stray files are ignored, not misread).
+pub(crate) fn decode_key(name: &str) -> Option<String> {
+    let bytes = name.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'%' {
+            let hex = name.get(i + 1..i + 3)?;
+            out.push(u8::from_str_radix(hex, 16).ok()?);
+            i += 3;
+        } else {
+            out.push(bytes[i]);
+            i += 1;
+        }
+    }
+    String::from_utf8(out).ok()
+}
+
+/// A file's write-idle age: `now - mtime`, saturating at zero (clock
+/// skew must never produce a negative age).
+pub(crate) fn mtime_age(path: &Path) -> Option<Duration> {
+    let mtime = std::fs::metadata(path).ok()?.modified().ok()?;
+    Some(
+        SystemTime::now()
+            .duration_since(mtime)
+            .unwrap_or(Duration::ZERO),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "npw_file_test_{tag}_{}_{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn key_encoding_roundtrips_and_is_fs_safe() {
+        for key in [
+            "j1/T[0,3]",
+            "deps:2@i=0,j=1",
+            "S[0,3,1]",
+            ".",
+            "..",
+            "a/b/c%d e\tf",
+            "",
+            "plain-key_1.0",
+        ] {
+            let enc = encode_key(key);
+            assert!(!enc.contains('/'), "{enc}");
+            assert_ne!(enc, ".");
+            assert_ne!(enc, "..");
+            assert_eq!(decode_key(&enc).as_deref(), Some(key), "{enc}");
+        }
+        assert_eq!(decode_key("%zz"), None);
+        assert_eq!(decode_key("%4"), None);
+    }
+
+    #[test]
+    fn layout_pins_shard_count_in_meta() {
+        let dir = tmpdir("meta");
+        let a = Layout::open(&dir, 4).unwrap();
+        assert_eq!(a.shards, 4);
+        // A second open with a different spec adopts the pinned count,
+        // so both handles agree on key→shard placement.
+        let b = Layout::open(&dir, 16).unwrap();
+        assert_eq!(b.shards, 4);
+        assert_eq!(
+            a.key_path("blob", "j1/T[0]"),
+            b.key_path("blob", "j1/T[0]")
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn write_atomic_then_scan_space_decodes_keys() {
+        let dir = tmpdir("scan");
+        let l = Layout::open(&dir, 3).unwrap();
+        for key in ["j1/a", "j1/b", "j2/c"] {
+            l.write_atomic(&l.key_path("kv", key), b"v").unwrap();
+        }
+        let mut keys: Vec<String> = l.scan_space("kv").into_iter().map(|(k, _)| k).collect();
+        keys.sort_unstable();
+        assert_eq!(keys, ["j1/a", "j1/b", "j2/c"]);
+        assert!(l.scan_space("blob").is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,540 @@
+//! Durable task queue: message files plus wall-clock lease files.
+//!
+//! Each message is one file under `queue/msgs/` (priority, locality
+//! hint, hint stamp, body); its lease state is a sibling file under
+//! `queue/leases/` holding the receipt counter, an **absolute
+//! wall-clock deadline**, and the delivery count. Because the deadline
+//! is wall-clock (not an in-process `Instant`), a lease taken by a
+//! worker that is then `kill -9`ed simply expires on schedule and the
+//! message redelivers to any surviving process — the SQS
+//! visibility-timeout contract, §4.1's entire fault story, across
+//! process boundaries.
+//!
+//! All queue ops run under one cross-process [`DirLock`]; message ids
+//! come from a persistent `queue/ids` allocator, so FIFO-within-
+//! priority is global across every process sharing the directory
+//! (this family qualifies as an *ordered* backend in the conformance
+//! suite's sense, like `strict` and `sharded:1`).
+//!
+//! Time: deadlines mix an injected [`Clock`] with a wall anchor
+//! captured at open — `virtual now = wall-at-open + (clock.now() -
+//! clock-at-open)`. Under [`WallClock`](crate::storage::WallClock)
+//! that *is* wall time, so independent processes agree on expiry;
+//! under a `TestClock` a single process can step lease expiry
+//! deterministically, exactly like the in-memory queues.
+//!
+//! Hint steering mirrors `queue_core::try_receive_for`: within the
+//! equal-top-priority group only, a message freshly hinted at another
+//! worker is deferred; if the whole group is hinted elsewhere the
+//! FIFO-best deferred message is delivered anyway, so steering never
+//! starves and never inverts priority.
+
+use crate::storage::clock::Clock;
+use crate::storage::file::lock::DirLock;
+use crate::storage::file::Layout;
+use crate::storage::traits::{Lease, Queue};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant, SystemTime};
+
+/// Default hint staleness — matches the sharded family's bound.
+const DEFAULT_HINT_STALENESS: Duration = Duration::from_millis(30);
+
+/// The queue. Cheap to clone (Arc-shared).
+#[derive(Clone)]
+pub struct FileQueue {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    layout: Layout,
+    lock: DirLock,
+    clock: Arc<dyn Clock>,
+    default_lease: Duration,
+    /// Hint staleness bound, in ms (atomic so the builder can adjust
+    /// it on a shared handle).
+    hint_staleness_ms: std::sync::atomic::AtomicU64,
+    /// `clock.now()` at open — paired with `unix_anchor` to turn the
+    /// injected clock into absolute wall milliseconds.
+    clock_anchor: Duration,
+    /// Wall time (since `UNIX_EPOCH`) at open.
+    unix_anchor: Duration,
+}
+
+struct Msg {
+    id: u64,
+    priority: i64,
+    hint: Option<u64>,
+    hinted_at_ms: u64,
+    body: String,
+}
+
+struct LeaseFile {
+    receipt: u64,
+    deadline_ms: u64,
+    count: u32,
+}
+
+impl FileQueue {
+    pub fn open(
+        dir: &Path,
+        shards: usize,
+        default_lease: Duration,
+        clock: Arc<dyn Clock>,
+    ) -> Result<FileQueue> {
+        let layout = Layout::open(dir, shards)
+            .with_context(|| format!("file queue: cannot open `{}`", dir.display()))?;
+        let lock = DirLock::new(layout.lock_path("queue.lock"));
+        let clock_anchor = clock.now();
+        let unix_anchor = SystemTime::now()
+            .duration_since(SystemTime::UNIX_EPOCH)
+            .unwrap_or(Duration::ZERO);
+        Ok(FileQueue {
+            inner: Arc::new(Inner {
+                layout,
+                lock,
+                clock,
+                default_lease,
+                hint_staleness_ms: std::sync::atomic::AtomicU64::new(
+                    DEFAULT_HINT_STALENESS.as_millis() as u64,
+                ),
+                clock_anchor,
+                unix_anchor,
+            }),
+        })
+    }
+
+    /// Override the hint staleness bound (tests use a `TestClock`-sized
+    /// window; `DEFAULT_HINT_STALENESS` otherwise).
+    pub fn with_hint_staleness(self, staleness: Duration) -> FileQueue {
+        self.inner.hint_staleness_ms.store(
+            staleness.as_millis() as u64,
+            std::sync::atomic::Ordering::Relaxed,
+        );
+        self
+    }
+
+    /// Absolute virtual wall time, in ms since the epoch.
+    fn now_ms(&self) -> u64 {
+        let since_open = self.inner.clock.now().saturating_sub(self.inner.clock_anchor);
+        (self.inner.unix_anchor + since_open).as_millis() as u64
+    }
+
+    fn msgs_dir(&self) -> PathBuf {
+        self.inner.layout.root().join("queue").join("msgs")
+    }
+
+    fn msg_path(&self, id: u64) -> PathBuf {
+        self.msgs_dir().join(format!("m-{id:020}"))
+    }
+
+    fn lease_path(&self, id: u64) -> PathBuf {
+        self.inner
+            .layout
+            .root()
+            .join("queue")
+            .join("leases")
+            .join(format!("l-{id:020}"))
+    }
+
+    /// Allocate the next global message id (caller holds the lock).
+    fn alloc_id(&self) -> u64 {
+        let ids = self.inner.layout.root().join("queue").join("ids");
+        let next = std::fs::read_to_string(&ids)
+            .ok()
+            .and_then(|s| s.trim().parse::<u64>().ok())
+            .unwrap_or(1);
+        self.inner
+            .layout
+            .write_atomic(&ids, (next + 1).to_string().as_bytes())
+            .expect("file queue: id allocator write failed");
+        next
+    }
+
+    fn read_lease(&self, id: u64) -> Option<LeaseFile> {
+        let raw = std::fs::read_to_string(self.lease_path(id)).ok()?;
+        let mut lines = raw.lines();
+        Some(LeaseFile {
+            receipt: lines.next()?.trim().parse().ok()?,
+            deadline_ms: lines.next()?.trim().parse().ok()?,
+            count: lines.next()?.trim().parse().ok()?,
+        })
+    }
+
+    fn write_lease(&self, id: u64, lease: &LeaseFile) {
+        let body = format!("{}\n{}\n{}\n", lease.receipt, lease.deadline_ms, lease.count);
+        self.inner
+            .layout
+            .write_atomic(&self.lease_path(id), body.as_bytes())
+            .expect("file queue: lease write failed");
+    }
+
+    fn read_msg(&self, id: u64, path: &Path) -> Option<Msg> {
+        let raw = std::fs::read_to_string(path).ok()?;
+        let mut parts = raw.splitn(4, '\n');
+        let priority = parts.next()?.trim().parse().ok()?;
+        let hint = match parts.next()? {
+            "-" => None,
+            h => Some(h.trim().parse().ok()?),
+        };
+        let hinted_at_ms = parts.next()?.trim().parse().ok()?;
+        let body = parts.next()?.to_string();
+        Some(Msg {
+            id,
+            priority,
+            hint,
+            hinted_at_ms,
+            body,
+        })
+    }
+
+    /// Every message, sorted by id (global FIFO order).
+    fn list_msgs(&self) -> Vec<Msg> {
+        let mut out = Vec::new();
+        let Ok(entries) = std::fs::read_dir(self.msgs_dir()) else {
+            return out;
+        };
+        for e in entries.flatten() {
+            let name = e.file_name();
+            let Some(id) = name
+                .to_str()
+                .and_then(|n| n.strip_prefix("m-"))
+                .and_then(|n| n.parse::<u64>().ok())
+            else {
+                continue;
+            };
+            if let Some(m) = self.read_msg(id, &e.path()) {
+                out.push(m);
+            }
+        }
+        out.sort_by_key(|m| m.id);
+        out
+    }
+
+    fn visible(&self, id: u64, now_ms: u64) -> bool {
+        match self.read_lease(id) {
+            None => true,
+            Some(l) => l.deadline_ms <= now_ms,
+        }
+    }
+
+    /// One receive attempt, mirroring `queue_core::try_receive_for`.
+    fn try_receive(&self, claimer: Option<u64>) -> Option<(String, Lease)> {
+        self.inner.lock.with(|| {
+            let now = self.now_ms();
+            let mut msgs = self.list_msgs();
+            msgs.retain(|m| self.visible(m.id, now));
+            // Priority desc, then FIFO (id asc) — the heap order of the
+            // in-memory cores.
+            msgs.sort_by(|a, b| b.priority.cmp(&a.priority).then(a.id.cmp(&b.id)));
+            let staleness_ms = self
+                .inner
+                .hint_staleness_ms
+                .load(std::sync::atomic::Ordering::Relaxed);
+            let mut deferred: Option<&Msg> = None;
+            let mut chosen: Option<&Msg> = None;
+            for m in &msgs {
+                if let Some(d) = deferred {
+                    if m.priority < d.priority {
+                        // Equal-priority group exhausted; taking this
+                        // one would invert priority — fall back to the
+                        // FIFO-best deferred message.
+                        break;
+                    }
+                }
+                let steered_away = match (claimer, m.hint) {
+                    (Some(w), Some(h)) => {
+                        h != w && now.saturating_sub(m.hinted_at_ms) < staleness_ms
+                    }
+                    _ => false,
+                };
+                if !steered_away {
+                    chosen = Some(m);
+                    break;
+                }
+                deferred = deferred.or(Some(m));
+            }
+            let m = chosen.or(deferred)?;
+            let prev = self.read_lease(m.id);
+            let receipt = prev.as_ref().map_or(0, |l| l.receipt) + 1;
+            let count = prev.as_ref().map_or(0, |l| l.count) + 1;
+            self.write_lease(
+                m.id,
+                &LeaseFile {
+                    receipt,
+                    deadline_ms: now + self.inner.default_lease.as_millis() as u64,
+                    count,
+                },
+            );
+            Some((
+                m.body.clone(),
+                Lease {
+                    msg_id: m.id,
+                    receipt,
+                },
+            ))
+        })
+    }
+
+    fn receive_loop(&self, claimer: Option<u64>, timeout: Duration) -> Option<(String, Lease)> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(got) = self.try_receive(claimer) {
+                return Some(got);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            std::thread::sleep((deadline - now).min(Duration::from_millis(1)));
+        }
+    }
+}
+
+impl Queue for FileQueue {
+    fn send(&self, body: &str, priority: i64) {
+        self.send_hinted(body, priority, None);
+    }
+
+    fn send_hinted(&self, body: &str, priority: i64, hint: Option<u64>) {
+        self.inner.lock.with(|| {
+            let id = self.alloc_id();
+            let hint_field = match hint {
+                Some(h) => h.to_string(),
+                None => "-".to_string(),
+            };
+            let contents = format!("{priority}\n{hint_field}\n{}\n{body}", self.now_ms());
+            self.inner
+                .layout
+                .write_atomic(&self.msg_path(id), contents.as_bytes())
+                .expect("file queue: send failed");
+        });
+    }
+
+    fn receive(&self) -> Option<(String, Lease)> {
+        self.try_receive(None)
+    }
+
+    fn receive_for(&self, worker: u64) -> Option<(String, Lease)> {
+        self.try_receive(Some(worker))
+    }
+
+    fn receive_timeout(&self, timeout: Duration) -> Option<(String, Lease)> {
+        self.receive_loop(None, timeout)
+    }
+
+    fn receive_timeout_for(&self, worker: u64, timeout: Duration) -> Option<(String, Lease)> {
+        self.receive_loop(Some(worker), timeout)
+    }
+
+    fn renew(&self, lease: &Lease) -> bool {
+        self.inner.lock.with(|| {
+            if !self.msg_path(lease.msg_id).exists() {
+                return false;
+            }
+            match self.read_lease(lease.msg_id) {
+                // Same rule as the in-memory cores: the receipt must be
+                // current — an expired-but-not-redelivered lease still
+                // renews.
+                Some(l) if l.receipt == lease.receipt => {
+                    self.write_lease(
+                        lease.msg_id,
+                        &LeaseFile {
+                            receipt: l.receipt,
+                            deadline_ms: self.now_ms()
+                                + self.inner.default_lease.as_millis() as u64,
+                            count: l.count,
+                        },
+                    );
+                    true
+                }
+                _ => false,
+            }
+        })
+    }
+
+    fn delete(&self, lease: &Lease) -> bool {
+        self.inner.lock.with(|| {
+            if !self.msg_path(lease.msg_id).exists() {
+                return false;
+            }
+            match self.read_lease(lease.msg_id) {
+                Some(l) if l.receipt == lease.receipt => {
+                    let _ = std::fs::remove_file(self.msg_path(lease.msg_id));
+                    let _ = std::fs::remove_file(self.lease_path(lease.msg_id));
+                    true
+                }
+                _ => false,
+            }
+        })
+    }
+
+    fn len(&self) -> usize {
+        self.list_msgs().len()
+    }
+
+    fn visible_len(&self) -> usize {
+        let now = self.now_ms();
+        self.list_msgs()
+            .iter()
+            .filter(|m| self.visible(m.id, now))
+            .count()
+    }
+
+    fn delivery_count(&self, body: &str) -> u32 {
+        self.list_msgs()
+            .iter()
+            .find(|m| m.body == body)
+            .map(|m| self.read_lease(m.id).map_or(0, |l| l.count))
+            .unwrap_or(0)
+    }
+
+    fn purge_prefix(&self, body_prefix: &str) -> usize {
+        self.inner.lock.with(|| {
+            let mut purged = 0;
+            for m in self.list_msgs() {
+                if m.body.starts_with(body_prefix) {
+                    let _ = std::fs::remove_file(self.msg_path(m.id));
+                    let _ = std::fs::remove_file(self.lease_path(m.id));
+                    purged += 1;
+                }
+            }
+            purged
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::clock::{TestClock, WallClock};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "npw_fq_{tag}_{}_{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn open(dir: &Path, clock: Arc<dyn Clock>) -> FileQueue {
+        FileQueue::open(dir, 2, Duration::from_secs(10), clock).unwrap()
+    }
+
+    #[test]
+    fn fifo_within_priority_and_priority_order() {
+        let dir = tmpdir("fifo");
+        let q = open(&dir, Arc::new(WallClock::new()));
+        q.send("low-1", 0);
+        q.send("hi-1", 5);
+        q.send("low-2", 0);
+        q.send("hi-2", 5);
+        let order: Vec<String> = std::iter::from_fn(|| {
+            q.receive().map(|(b, l)| {
+                assert!(q.delete(&l));
+                b
+            })
+        })
+        .collect();
+        assert_eq!(order, ["hi-1", "hi-2", "low-1", "low-2"]);
+        assert!(q.is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn lease_expiry_redelivers_with_test_clock() {
+        let dir = tmpdir("lease");
+        let clock = Arc::new(TestClock::new());
+        let q = open(&dir, clock.clone());
+        q.send("task", 0);
+        let (_, lease) = q.receive().unwrap();
+        assert_eq!(q.visible_len(), 0, "leased");
+        assert!(q.receive().is_none());
+        clock.advance(Duration::from_secs(11));
+        let (_, lease2) = q.receive().expect("redelivered after expiry");
+        assert_eq!(q.delivery_count("task"), 2);
+        // The first lease is stale; renewing it cannot resurrect it.
+        assert!(!q.renew(&lease));
+        assert!(!q.delete(&lease));
+        assert!(q.renew(&lease2));
+        assert!(q.delete(&lease2));
+        assert!(q.is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn expired_but_not_redelivered_lease_still_renews() {
+        let dir = tmpdir("exp");
+        let clock = Arc::new(TestClock::new());
+        let q = open(&dir, clock.clone());
+        q.send("t", 0);
+        let (_, lease) = q.receive().unwrap();
+        clock.advance(Duration::from_secs(11));
+        // Nobody re-received it, so the receipt is still current — the
+        // in-memory cores accept this renew, and so must we.
+        assert!(q.renew(&lease));
+        assert_eq!(q.visible_len(), 0, "renewed back to invisible");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn leases_and_messages_survive_handle_drop() {
+        let dir = tmpdir("durable");
+        {
+            let q = open(&dir, Arc::new(WallClock::new()));
+            q.send("persisted", 3);
+            let _ = q.receive().unwrap();
+            // Handle (≈ process) dies holding the lease.
+        }
+        let q2 = open(&dir, Arc::new(WallClock::new()));
+        assert_eq!(q2.len(), 1, "message survived");
+        assert_eq!(q2.visible_len(), 0, "still leased by the dead owner");
+        assert_eq!(q2.delivery_count("persisted"), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn purge_prefix_stales_held_leases() {
+        let dir = tmpdir("purge");
+        let q = open(&dir, Arc::new(WallClock::new()));
+        q.send("j1|a", 0);
+        q.send("j1|b", 0);
+        q.send("j2|c", 0);
+        let (_, lease) = q.receive().unwrap();
+        assert_eq!(q.purge_prefix("j1|"), 2);
+        assert!(!q.renew(&lease), "lease on purged message is stale");
+        assert!(!q.delete(&lease));
+        assert_eq!(q.len(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn hints_steer_within_priority_but_never_starve() {
+        let dir = tmpdir("hint");
+        let q = FileQueue::open(
+            &dir,
+            2,
+            Duration::from_secs(10),
+            Arc::new(WallClock::new()),
+        )
+        .unwrap()
+        .with_hint_staleness(Duration::from_secs(5));
+        q.send_hinted("for-7", 0, Some(7));
+        q.send("unhinted", 0);
+        // Worker 9 skips the fresh foreign hint, takes the unhinted one.
+        let (body, l) = q.receive_for(9).unwrap();
+        assert_eq!(body, "unhinted");
+        assert!(q.delete(&l));
+        // Whole group hinted elsewhere → FIFO-best delivered anyway.
+        let (body, l) = q.receive_for(9).unwrap();
+        assert_eq!(body, "for-7");
+        assert!(q.delete(&l));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -20,8 +20,20 @@
 //!   ([`StrictBlobStore`], [`StrictQueue`], [`StrictKvState`]):
 //!   globally linearizable, exactly-ordered, and able to police SSA
 //!   write discipline (`strict_ssa`) — the test and debugging backend.
+//! * **`file:<dir>[:N]`** — the durable on-disk family
+//!   ([`FileBlobStore`], [`FileQueue`], [`FileKvState`]): every tile,
+//!   KV entry, message, and lease is a file under `<dir>`, written
+//!   atomically (tmp+rename) and sharded across `N` subdirectories by
+//!   the same deterministic hash as the sharded family. State
+//!   survives process death: external worker processes
+//!   (`numpywren worker --substrate file:<dir>`) share one substrate,
+//!   queue leases expire by wall-clock so a killed worker's task
+//!   redelivers to a live process, and the daemon recovers in-flight
+//!   job chains after a crash-restart (see [`file`] and
+//!   [`crate::daemon`]). `file:auto` materializes a fresh temp
+//!   directory per build — the CI matrix's per-test isolation.
 //!
-//! Either family can be wrapped in the **chaos decorator layer**
+//! Any family can be wrapped in the **chaos decorator layer**
 //! ([`chaos`]) with a `+chaos(…)` suffix on the substrate spec, and/or
 //! in the **worker-local tile cache** ([`cache`]) with `+cache(…)`:
 //!
@@ -31,6 +43,8 @@
 //! substrate = sharded:8+chaos(lat=uniform:1ms:20ms,straggle=0.1:16)
 //! substrate = sharded:auto+cache(bytes=33554432)
 //! substrate = sharded:8+cache(bytes=32m)+chaos(err=0.02,seed=7)
+//! substrate = file:/var/lib/npw:8+chaos(err=0.02,partition=0.01:50,seed=9)
+//! substrate = file:auto+chaos(kv_err=0.05)+cache(bytes=16m)
 //! ```
 //!
 //! The cache always composes **outermost** regardless of its position
@@ -50,11 +64,19 @@
 //! covers the KV lifecycle ops `delete`/`scan_prefix`/`delete_prefix`
 //! alongside the RMW primitives; blob `scan_prefix` pays one
 //! `read_lat` draw and blob `delete`/`delete_prefix` one `write_lat`
-//! draw), and `straggle=FRAC:MULT` slows a deterministic fraction of
-//! workers for straggler experiments. Everything is seeded (`seed=N`)
-//! and reproducible. The chaos-wrapped backends pass the same
-//! conformance suite — the decorators perturb timing and delivery,
-//! never the contracts.
+//! draw), `straggle=FRAC:MULT` slows a deterministic fraction of
+//! workers for straggler experiments, `partition=FRAC:MS` makes the
+//! backend *temporarily unreachable* — with probability FRAC an op
+//! opens an MS-millisecond window in which blob get/put/delete fail
+//! transiently and queue receives see an empty queue (no lease is
+//! taken, so nothing is lost — the S3/SQS brown-out shape), and
+//! `kv_err=P` makes each KV RMW internally fail-and-retry with
+//! probability P (absorbed by a bounded in-decorator retry loop, so
+//! the infallible [`KvState`] contract is preserved while the
+//! control plane pays realistic retry latency). Everything is seeded
+//! (`seed=N`) and reproducible. The chaos-wrapped backends pass the
+//! same conformance suite — the decorators perturb timing and
+//! delivery, never the contracts.
 //!
 //! **Lifecycle ops** (substrate GC): all three traits expose
 //! reclamation — `BlobStore::{delete, scan_prefix, delete_prefix}`,
@@ -85,6 +107,7 @@
 pub mod cache;
 pub mod chaos;
 pub mod clock;
+pub mod file;
 pub mod object_store;
 pub mod queue;
 pub(crate) mod queue_core;
@@ -95,6 +118,7 @@ pub mod traits;
 pub use cache::{CacheConfig, CacheStats, CachedBlobStore};
 pub use chaos::{ChaosBlobStore, ChaosConfig, ChaosKvState, ChaosQueue, LatencyDist};
 pub use clock::{Clock, TestClock, WallClock};
+pub use file::{FileBlobStore, FileKvState, FileQueue};
 pub use object_store::StrictBlobStore;
 pub use queue::StrictQueue;
 pub use sharded::{ShardedBlobStore, ShardedKvState, ShardedQueue};
@@ -102,6 +126,8 @@ pub use state_store::{status, StrictKvState};
 pub use traits::{BlobStore, KvState, Lease, Queue, StoreStats};
 
 use crate::config::{SubstrateBackend, SubstrateConfig};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -170,7 +196,7 @@ impl Substrate {
         store_latency: Duration,
         clock: Arc<dyn Clock>,
     ) -> Substrate {
-        match cfg.backend {
+        match &cfg.backend {
             SubstrateBackend::Strict => Substrate {
                 blob: Arc::new(StrictBlobStore::with_latency(store_latency)),
                 queue: Arc::new(StrictQueue::with_clock(lease, clock)),
@@ -178,9 +204,9 @@ impl Substrate {
                 cache: None,
             },
             SubstrateBackend::Sharded { shards } => Substrate {
-                blob: Arc::new(ShardedBlobStore::with_latency(shards, store_latency)),
-                queue: Arc::new(ShardedQueue::with_clock(shards, lease, clock)),
-                state: Arc::new(ShardedKvState::new(shards)),
+                blob: Arc::new(ShardedBlobStore::with_latency(*shards, store_latency)),
+                queue: Arc::new(ShardedQueue::with_clock(*shards, lease, clock)),
+                state: Arc::new(ShardedKvState::new(*shards)),
                 cache: None,
             },
             // Engine/JobManager resolve `auto` from their configured
@@ -193,6 +219,29 @@ impl Substrate {
                     .unwrap_or(crate::config::DEFAULT_SHARDS);
                 let resolved = cfg.resolve(workers);
                 Self::build_base(&resolved, lease, store_latency, clock)
+            }
+            // The durable on-disk family. A bad directory is a
+            // deployment error, so the infallible builder panics with
+            // the path instead of limping on.
+            SubstrateBackend::File { dir, shards } => {
+                let root = resolve_file_dir(dir);
+                let fail = |e: anyhow::Error| -> ! {
+                    panic!("file substrate `{}`: {e:#}", root.display())
+                };
+                Substrate {
+                    blob: Arc::new(
+                        FileBlobStore::open_with_latency(&root, *shards, store_latency)
+                            .unwrap_or_else(|e| fail(e)),
+                    ),
+                    queue: Arc::new(
+                        FileQueue::open(&root, *shards, lease, clock)
+                            .unwrap_or_else(|e| fail(e)),
+                    ),
+                    state: Arc::new(
+                        FileKvState::open(&root, *shards).unwrap_or_else(|e| fail(e)),
+                    ),
+                    cache: None,
+                }
             }
         }
     }
@@ -229,6 +278,23 @@ impl Substrate {
     }
 }
 
+/// Turn a `file:` spec directory into a concrete path. The sentinel
+/// `auto` materializes a fresh process-unique temp directory per build
+/// — per-test isolation for the CI substrate matrix (ephemeral by
+/// design; point at a real directory for durability).
+fn resolve_file_dir(dir: &str) -> PathBuf {
+    static AUTO_SEQ: AtomicU64 = AtomicU64::new(0);
+    if dir == "auto" {
+        std::env::temp_dir().join(format!(
+            "npw_file_auto_{}_{}",
+            std::process::id(),
+            AUTO_SEQ.fetch_add(1, Ordering::Relaxed)
+        ))
+    } else {
+        PathBuf::from(dir)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -247,6 +313,10 @@ mod tests {
             "strict+cache()",
             "sharded:4+cache(bytes=2m)+chaos(lat=fixed:0us,seed=3)",
             "sharded:4+chaos(lat=fixed:0us,seed=3)+cache(bytes=2m)",
+            "file:auto",
+            "file:auto:4+chaos(lat=fixed:0us,seed=3)",
+            "file:auto+cache(bytes=2m)",
+            "file:auto:2+chaos(lat=fixed:0us,seed=3)+cache(bytes=2m)",
         ] {
             let cfg = SubstrateConfig::parse(spec).unwrap();
             let sub = Substrate::build(&cfg, lease, Duration::ZERO);
@@ -267,6 +337,7 @@ mod tests {
         for spec in [
             "strict+cache(bytes=1m)+chaos(lat=fixed:0us,seed=1)",
             "strict+chaos(lat=fixed:0us,seed=1)+cache(bytes=1m)",
+            "file:auto+chaos(lat=fixed:0us,seed=1)+cache(bytes=1m)",
         ] {
             let cfg = SubstrateConfig::parse(spec).unwrap();
             let sub = Substrate::build(&cfg, lease_secs(1), Duration::ZERO);

@@ -43,6 +43,14 @@ fn backends() -> Vec<(&'static str, Substrate, Arc<TestClock>)> {
         "sharded:4+chaos(send_lat=5us,seed=7)",
         "sharded:4+cache(bytes=1048576)",
         "sharded:4+cache(bytes=2m)+chaos(lat=fixed:10us,seed=9)",
+        // The durable on-disk family. `auto` materializes a fresh
+        // temp directory per build (per-test isolation); the same
+        // contracts must hold with state living in files, and the
+        // decorators must compose over it unchanged.
+        "file:auto",
+        "file:auto:4",
+        "file:auto+chaos(lat=fixed:20us,kv_lat=5us,seed=31)",
+        "file:auto+cache(bytes=1048576)",
     ]
     .into_iter()
     .map(|spec| {
@@ -58,7 +66,11 @@ fn backends() -> Vec<(&'static str, Substrate, Arc<TestClock>)> {
 fn ordered_backends() -> Vec<(&'static str, Substrate, Arc<TestClock>)> {
     backends()
         .into_iter()
-        .filter(|(spec, _, _)| *spec == "strict" || *spec == "sharded:1")
+        .filter(|(spec, _, _)| {
+            *spec == "strict"
+                || *spec == "sharded:1"
+                || (spec.starts_with("file:") && !spec.contains('+'))
+        })
         .collect()
 }
 
@@ -517,6 +529,12 @@ fn engine_cholesky_correct_on_every_backend() {
         // prefetch + hinted claiming, with and without chaos under it.
         "sharded:4+cache(bytes=8m)",
         "sharded:4+cache(bytes=8388608)+chaos(err=0.02,lat=fixed:50us,seed=11)",
+        // The file family end-to-end: every tile, counter, and lease
+        // on disk, bare and under each decorator (the ISSUE acceptance
+        // triple: file, file+chaos, file+cache).
+        "file:auto",
+        "file:auto+chaos(err=0.02,lat=fixed:50us,seed=11)",
+        "file:auto+cache(bytes=8m)",
     ] {
         let mut rng = Rng::new(17);
         let a = Matrix::rand_spd(24, &mut rng);
@@ -549,6 +567,7 @@ fn engine_recovers_from_heavy_chaos_faults() {
     for spec in [
         "sharded:4+chaos(err=0.3,seed=23)",
         "sharded:4+cache(bytes=8m)+chaos(err=0.3,seed=23)",
+        "file:auto+chaos(err=0.3,seed=23)",
     ] {
         let mut rng = Rng::new(19);
         let a = Matrix::rand_spd(24, &mut rng);
