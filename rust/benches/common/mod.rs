@@ -48,6 +48,29 @@ pub fn sim_auto(w: &Workload, sf: f64, max_workers: usize, pipeline: usize) -> S
     ServerlessSim::new(w, CostModel::default(), c).run()
 }
 
+/// Auto-scaled sim run with `lookahead=K` frontier forecasting layered
+/// on the reactive §4.2 policy (the predictive provisioner's sim
+/// counterpart).
+pub fn sim_auto_lookahead(
+    w: &Workload,
+    sf: f64,
+    max_workers: usize,
+    pipeline: usize,
+    k: usize,
+) -> SimResult {
+    let c = SimConfig {
+        policy: WorkerPolicy::Auto {
+            sf,
+            max_workers,
+            t_timeout: 10.0,
+        },
+        pipeline_width: pipeline,
+        lookahead: Some((k, sf)),
+        ..SimConfig::default()
+    };
+    ServerlessSim::new(w, CostModel::default(), c).run()
+}
+
 /// Pretty seconds.
 pub fn s(t: f64) -> String {
     if t >= 100.0 {

@@ -1,0 +1,223 @@
+//! §Perf — predictive autoscaling + speculation vs the paper's
+//! reactive policy, on the real engine under deterministic chaos.
+//!
+//! The paper's §4.2 provisioner is purely reactive: it scales to the
+//! *current* queue depth, so every DAG parallelism wave is met with a
+//! cold ramp, and a single straggling Lambda (§6 lists stragglers as
+//! a dominant tail risk) holds the critical path for its full slow
+//! execution. This bench A/Bs the two policies on a straggled
+//! Cholesky:
+//!
+//! * **reactive** — `ProvisionPolicy::Reactive`, `spec_max = 0`: the
+//!   paper's policy, bit-for-bit;
+//! * **predictive** — `lookahead=K` frontier forecasting plus a
+//!   bounded speculative re-execution budget (`spec_max`).
+//!
+//! Chaos: `straggle=0.1:16` over a fixed per-op blob latency, seeded
+//! so that exactly one member of the initial worker pool (worker 2,
+//! seed 98) is a straggler — deterministic membership, so the A/B
+//! races the same slow worker in both legs. Per leg:
+//!
+//! * **completion time** — `JobReport::wall_secs`;
+//! * **idle core-seconds** — fleet billed core-secs minus the sum of
+//!   task busy time (every attempt, speculative duplicates included);
+//! * **p99 task wait** — enqueue→claim, from the wait accounting;
+//! * **speculative duplicates** — must stay within `spec_max`, and be
+//!   exactly 0 in the reactive leg.
+//!
+//! Emits `BENCH_autoscale.json`. Acceptance (asserted): predictive
+//! strictly reduces completion time AND idle core-seconds, and both
+//! legs' factors match an unchaosed reference run bit-for-bit
+//! (`max_abs_diff == 0.0` — speculation may never change numerics).
+
+use numpywren::config::{EngineConfig, ProvisionPolicy, ScalingMode, SubstrateConfig};
+use numpywren::drivers::{collect_cholesky, stage_cholesky};
+use numpywren::jobs::{JobManager, JobSpec};
+use numpywren::lambdapack::programs;
+use numpywren::linalg::matrix::Matrix;
+use numpywren::util::prng::Rng;
+use std::time::Duration;
+
+/// One straggler (worker 2) in the initial pool at seed 98; worker 0
+/// — which claims the root task — is fast, so the early duration
+/// samples calibrate the straggler threshold before the slow worker
+/// joins the wave.
+const CHAOS: &str = "sharded:8+chaos(lat=fixed:3ms,straggle=0.1:16,seed=98)";
+const MAX_WORKERS: usize = 6;
+const SPEC_MAX: usize = 8;
+const LOOKAHEAD: usize = 6;
+const BLOCK: usize = 16;
+
+fn grid() -> Vec<usize> {
+    if std::env::var("NUMPYWREN_BENCH_QUICK").as_deref() == Ok("1") {
+        vec![96]
+    } else {
+        vec![96, 144]
+    }
+}
+
+fn leg_cfg(predictive: bool) -> EngineConfig {
+    EngineConfig {
+        scaling: ScalingMode::Auto {
+            sf: 1.0,
+            max_workers: MAX_WORKERS,
+        },
+        substrate: SubstrateConfig::parse(CHAOS).unwrap(),
+        // Short idle scale-down caps the billed cost of any frontier
+        // over-forecast, keeping the idle comparison honest.
+        idle_timeout: Duration::from_millis(100),
+        // Leases far above the straggler threshold: redelivery can
+        // never masquerade as speculation.
+        lease: Duration::from_secs(5),
+        provision: if predictive {
+            ProvisionPolicy::Lookahead {
+                k: LOOKAHEAD,
+                sf: 1.0,
+            }
+        } else {
+            ProvisionPolicy::Reactive
+        },
+        spec_max: if predictive { SPEC_MAX } else { 0 },
+        job_timeout: Duration::from_secs(300),
+        ..EngineConfig::default()
+    }
+}
+
+struct Leg {
+    n: usize,
+    predictive: bool,
+    wall_secs: f64,
+    billed_core_secs: f64,
+    idle_core_secs: f64,
+    p99_wait_secs: f64,
+    spec_enqueued: u64,
+    total_tasks: u64,
+}
+
+fn run_leg(a: &Matrix, predictive: bool) -> (Leg, Matrix) {
+    let mgr = JobManager::new(leg_cfg(predictive));
+    let (env, inputs, grid_n) = stage_cholesky(a, BLOCK).unwrap();
+    let job = mgr
+        .submit(JobSpec::new(programs::cholesky_spec().program, env, inputs))
+        .unwrap();
+    let r = mgr.wait(job).unwrap();
+    assert!(r.error.is_none(), "n={} predictive={predictive}: {:?}", a.rows(), r.error);
+    assert_eq!(r.completed, r.total_tasks);
+    // Busy time counts every attempt — a speculative duplicate's
+    // execution is real billed work, not idle.
+    let busy: f64 = r.tasks.iter().map(|t| t.end - t.start).sum();
+    let fetch = |m: &str, idx: &[i64]| mgr.tile(job, m, idx);
+    let l = collect_cholesky(&fetch, a.rows(), BLOCK, grid_n).unwrap();
+    let fleet = mgr.shutdown();
+    (
+        Leg {
+            n: a.rows(),
+            predictive,
+            wall_secs: r.wall_secs,
+            billed_core_secs: fleet.core_secs_billed,
+            idle_core_secs: (fleet.core_secs_billed - busy).max(0.0),
+            p99_wait_secs: r.p99_wait_secs,
+            spec_enqueued: r.spec_enqueued,
+            total_tasks: r.total_tasks,
+        },
+        l,
+    )
+}
+
+/// Unchaosed, unspeculated reference factor for the bit-exactness bar.
+fn reference(a: &Matrix) -> Matrix {
+    let cfg = EngineConfig {
+        scaling: ScalingMode::Fixed(4),
+        substrate: SubstrateConfig::parse("sharded:8").unwrap(),
+        job_timeout: Duration::from_secs(300),
+        ..EngineConfig::default()
+    };
+    let mgr = JobManager::new(cfg);
+    let (env, inputs, grid_n) = stage_cholesky(a, BLOCK).unwrap();
+    let job = mgr
+        .submit(JobSpec::new(programs::cholesky_spec().program, env, inputs))
+        .unwrap();
+    mgr.wait(job).unwrap();
+    let fetch = |m: &str, idx: &[i64]| mgr.tile(job, m, idx);
+    let l = collect_cholesky(&fetch, a.rows(), BLOCK, grid_n).unwrap();
+    mgr.shutdown();
+    l
+}
+
+fn main() {
+    println!("# §Perf autoscale — reactive vs predictive (lookahead={LOOKAHEAD}, spec_max={SPEC_MAX}) on {CHAOS}");
+    let mut legs: Vec<Leg> = Vec::new();
+    for n in grid() {
+        let mut rng = Rng::new(0xA5CA + n as u64);
+        let a = Matrix::rand_spd(n, &mut rng);
+        let l_ref = reference(&a);
+
+        let (react, l_react) = run_leg(&a, false);
+        let (pred, l_pred) = run_leg(&a, true);
+
+        // Exact numerics on every leg: chaos latency and speculative
+        // duplicates shift scheduling, never bytes.
+        assert_eq!(l_react.max_abs_diff(&l_ref), 0.0, "n={n} reactive leg diverged");
+        assert_eq!(l_pred.max_abs_diff(&l_ref), 0.0, "n={n} predictive leg diverged");
+        // Speculation accounting: off means zero, on means bounded.
+        assert_eq!(react.spec_enqueued, 0, "n={n}: speculated with spec_max=0");
+        assert!(
+            pred.spec_enqueued >= 1 && pred.spec_enqueued <= SPEC_MAX as u64,
+            "n={n}: spec_enqueued {} outside [1, {SPEC_MAX}]",
+            pred.spec_enqueued
+        );
+
+        println!(
+            "n={n:<4} reactive:   wall {:>7.3}s  idle {:>7.3} c·s  p99-wait {:>7.3}s  ({} tasks)",
+            react.wall_secs, react.idle_core_secs, react.p99_wait_secs, react.total_tasks
+        );
+        println!(
+            "n={n:<4} predictive: wall {:>7.3}s  idle {:>7.3} c·s  p99-wait {:>7.3}s  ({} duplicates)",
+            pred.wall_secs, pred.idle_core_secs, pred.p99_wait_secs, pred.spec_enqueued
+        );
+
+        // The acceptance bar, printed explicitly so CI logs show it.
+        let pass = pred.wall_secs < react.wall_secs && pred.idle_core_secs < react.idle_core_secs;
+        println!(
+            "# n={n}: wall ×{:.2}, idle ×{:.2} — {}",
+            react.wall_secs / pred.wall_secs.max(1e-9),
+            react.idle_core_secs / pred.idle_core_secs.max(1e-9),
+            if pass { "PASS" } else { "FAIL" }
+        );
+        assert!(
+            pass,
+            "n={n}: predictive must strictly cut wall ({:.3} vs {:.3}) and idle \
+             ({:.3} vs {:.3})",
+            pred.wall_secs, react.wall_secs, pred.idle_core_secs, react.idle_core_secs
+        );
+        legs.push(react);
+        legs.push(pred);
+    }
+
+    // Hand-rolled JSON (no serde in the offline crate set).
+    let mut json = String::from("{\n  \"bench\": \"perf_autoscale\",\n");
+    json.push_str(&format!(
+        "  \"chaos\": \"{CHAOS}\",\n  \"max_workers\": {MAX_WORKERS},\n  \
+         \"lookahead\": {LOOKAHEAD},\n  \"spec_max\": {SPEC_MAX},\n  \"results\": [\n"
+    ));
+    for (i, l) in legs.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"n\": {}, \"block\": {BLOCK}, \"policy\": \"{}\", \
+             \"wall_secs\": {:.4}, \"billed_core_secs\": {:.4}, \
+             \"idle_core_secs\": {:.4}, \"p99_wait_secs\": {:.4}, \
+             \"spec_enqueued\": {}, \"total_tasks\": {}}}{}\n",
+            l.n,
+            if l.predictive { "predictive" } else { "reactive" },
+            l.wall_secs,
+            l.billed_core_secs,
+            l.idle_core_secs,
+            l.p99_wait_secs,
+            l.spec_enqueued,
+            l.total_tasks,
+            if i + 1 == legs.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_autoscale.json", &json).expect("write BENCH_autoscale.json");
+    println!("# wrote BENCH_autoscale.json");
+}

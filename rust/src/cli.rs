@@ -83,7 +83,16 @@ COMMANDS:
             --algo {cholesky|gemm|tsqr|lu|qr|bdfac} --n DIM --block B
             [--workers K | --sf F --max-workers K] [--pipeline W]
             [--substrate SPEC] [--artifacts DIR]
+            [--provision reactive|lookahead=K[,sf=F]] [--spec-max N]
             [--set key=value]...
+            (--provision lookahead=K scales the auto-provisioner to
+            the DAG's forecast ready frontier within the next K task
+            completions, warming workers before each parallelism wave;
+            reactive — the default — is the paper's §4.2 policy.
+            --spec-max N arms speculative straggler re-execution: up
+            to N duplicate enqueues per job for tasks whose lease age
+            blows past a p90-based threshold; SSA writes + the
+            completion CAS make duplicates safe)
   jobs      run several jobs concurrently on one multi-tenant service
             (shared substrate + shared worker fleet)
             --specs algo:N:BLOCK[:CLASS][@DEP],...   (--jobs is an
@@ -95,6 +104,7 @@ COMMANDS:
             without copying)
             [--workers K | --sf F --max-workers K] [--pipeline W]
             [--retention keep|outputs|delete] [--substrate SPEC]
+            [--provision reactive|lookahead=K[,sf=F]] [--spec-max N]
             [--set key=value]...
             (--retention delete reclaims each job's substrate
             namespace at finish — outputs are not refetched for
@@ -130,7 +140,7 @@ COMMANDS:
   simulate  paper-scale discrete-event simulation (runs on the same
             substrate backends as the engine, virtual-time clock)
             --algo NAME --n DIM --block B --workers K [--sf F] [--pipeline W]
-            [--substrate SPEC]
+            [--substrate SPEC] [--provision reactive|lookahead=K[,sf=F]]
             [--compare-scalapack true] [--compare-dask true]
 
             SPEC is strict | sharded[:N|auto], optionally with chaos
@@ -210,6 +220,12 @@ fn engine_cfg_from(args: &Args) -> Result<EngineConfig> {
     cfg.pipeline_width = args.num("pipeline", 1)?;
     if let Some(spec) = args.get("substrate") {
         cfg.set("substrate", spec)?;
+    }
+    if let Some(policy) = args.get("provision") {
+        cfg.set("provision", policy)?;
+    }
+    if let Some(n) = args.get("spec-max") {
+        cfg.set("spec_max", n)?;
     }
     if let Some(policy) = args.get("retention") {
         cfg.set("retention", policy)?;
@@ -827,10 +843,18 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         Some(spec) => SubstrateConfig::parse(spec)?,
         None => SubstrateConfig::strict(),
     };
+    let lookahead = match args.get("provision") {
+        Some(spec) => match crate::config::ProvisionPolicy::parse(spec)? {
+            crate::config::ProvisionPolicy::Lookahead { k, sf } => Some((k, sf)),
+            crate::config::ProvisionPolicy::Reactive => None,
+        },
+        None => None,
+    };
     let sc = SimConfig {
         policy,
         pipeline_width: args.num("pipeline", 1)?,
         substrate,
+        lookahead,
         ..SimConfig::default()
     };
     let r = ServerlessSim::new(&w, model, sc).run();
@@ -1154,6 +1178,26 @@ mod tests {
     }
 
     #[test]
+    fn tiny_run_with_predictive_scheduling() {
+        // Predictive provisioning + speculation end-to-end from the
+        // CLI — exact numerics are asserted by the driver itself.
+        run_cli(&argv(
+            "run --algo cholesky --n 24 --block 8 --sf 1.0 --max-workers 4 \
+             --provision lookahead=4,sf=1.0 --spec-max 2",
+        ))
+        .unwrap();
+        // Malformed policies are rejected up front.
+        assert!(run_cli(&argv(
+            "run --algo cholesky --n 24 --block 8 --workers 2 --provision lookahead=0"
+        ))
+        .is_err());
+        assert!(run_cli(&argv(
+            "run --algo cholesky --n 24 --block 8 --workers 2 --spec-max nope"
+        ))
+        .is_err());
+    }
+
+    #[test]
     fn tiny_jobs_driver_on_auto_substrate() {
         // Also exercises the `--jobs` alias for `--specs`.
         run_cli(&argv(
@@ -1167,6 +1211,15 @@ mod tests {
         run_cli(&argv(
             "simulate --algo cholesky --n 8192 --block 1024 --workers 16 \
              --compare-scalapack true --compare-dask true",
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn tiny_simulate_with_lookahead_provisioning() {
+        run_cli(&argv(
+            "simulate --algo cholesky --n 8192 --block 1024 --workers 64 --sf 1.0 \
+             --provision lookahead=8,sf=1.0",
         ))
         .unwrap();
     }

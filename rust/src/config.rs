@@ -23,6 +23,58 @@ pub enum ScalingMode {
     },
 }
 
+/// How the provisioner computes its scale-up target.
+///
+/// `Reactive` is the paper's §4.2 policy verbatim (the historical
+/// behavior, bit-for-bit): the target follows the *observed* aggregate
+/// queue depth, so every parallelism wave in a DAG is met with a cold
+/// ramp. `Lookahead` adds frontier forecasting on top: each job's
+/// LAmbdaPACK DAG yields a [`FrontierProfile`](crate::lambdapack::frontier::FrontierProfile)
+/// at activation, the provisioner forecasts the ready-task frontier
+/// over the next `k` completions per job, and scales to
+/// `max(reactive_target, ceil(sf × predicted_frontier /
+/// pipeline_width))` — workers are warm *before* the wave lands.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ProvisionPolicy {
+    /// Scale to the observed queue depth only (the default).
+    Reactive,
+    /// Additionally scale to the DAG-forecast frontier over the next
+    /// `k` completions, weighted by `sf` (the predictive scaling
+    /// factor, independent of the reactive `sf` in [`ScalingMode`]).
+    Lookahead { k: usize, sf: f64 },
+}
+
+impl ProvisionPolicy {
+    /// Parse `reactive` | `lookahead=K[,sf=F]` (K ≥ 1; sf defaults 1.0).
+    pub fn parse(s: &str) -> Result<ProvisionPolicy> {
+        if s == "reactive" {
+            return Ok(ProvisionPolicy::Reactive);
+        }
+        let Some(body) = s.strip_prefix("lookahead=") else {
+            bail!("bad provision policy `{s}` (reactive | lookahead=K[,sf=F])");
+        };
+        let (k_str, sf) = match body.split_once(',') {
+            None => (body, 1.0),
+            Some((k, rest)) => {
+                let f = rest
+                    .strip_prefix("sf=")
+                    .with_context(|| format!("bad provision option `{rest}` (sf=F)"))?;
+                (k, f.parse::<f64>().with_context(|| format!("bad sf `{f}`"))?)
+            }
+        };
+        let k: usize = k_str
+            .parse()
+            .with_context(|| format!("bad lookahead depth `{k_str}`"))?;
+        if k == 0 {
+            bail!("lookahead depth must be >= 1");
+        }
+        if !(sf > 0.0) {
+            bail!("predictive sf must be > 0");
+        }
+        Ok(ProvisionPolicy::Lookahead { k, sf })
+    }
+}
+
 /// Failure injection (Figure 9b): at `at` seconds into the job, kill
 /// `fraction` of the currently-running workers.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -336,6 +388,17 @@ pub struct EngineConfig {
     pub cold_start: Duration,
     /// Provisioner control period.
     pub provision_period: Duration,
+    /// How the provisioner computes its scale-up target (reactive
+    /// queue depth vs. DAG-lookahead frontier forecasting).
+    pub provision: ProvisionPolicy,
+    /// Speculative straggler re-execution budget: the maximum number
+    /// of duplicate task enqueues the job manager's monitor may issue
+    /// per job for tasks whose lease age exceeds the straggler
+    /// threshold. `0` (the default) disables speculation entirely.
+    /// Duplicates are safe: SSA single-writer semantics make re-puts
+    /// bit-identical, and the completion CAS lets exactly one finisher
+    /// win.
+    pub spec_max: usize,
     /// Optional failure injection.
     pub failure: Option<FailureSpec>,
     /// Metrics sampling period (0 = disabled).
@@ -365,6 +428,8 @@ impl Default for EngineConfig {
             store_latency: Duration::ZERO,
             cold_start: Duration::ZERO,
             provision_period: Duration::from_millis(50),
+            provision: ProvisionPolicy::Reactive,
+            spec_max: 0,
             failure: None,
             sample_period: Duration::from_millis(20),
             job_timeout: Duration::from_secs(600),
@@ -414,6 +479,8 @@ impl EngineConfig {
             "store_latency" => self.store_latency = secs(value)?,
             "cold_start" => self.cold_start = secs(value)?,
             "provision_period" => self.provision_period = secs(value)?,
+            "provision" => self.provision = ProvisionPolicy::parse(value)?,
+            "spec_max" => self.spec_max = value.parse()?,
             "sample_period" => self.sample_period = secs(value)?,
             "job_timeout" => self.job_timeout = secs(value)?,
             "substrate" => self.substrate = SubstrateConfig::parse(value)?,
@@ -499,6 +566,27 @@ mod tests {
                 fraction: 0.8
             })
         );
+    }
+
+    #[test]
+    fn provision_policy_parses() {
+        let mut c = EngineConfig::default();
+        assert_eq!(c.provision, ProvisionPolicy::Reactive, "reactive default");
+        assert_eq!(c.spec_max, 0, "speculation off by default");
+        c.set("provision", "lookahead=8").unwrap();
+        assert_eq!(c.provision, ProvisionPolicy::Lookahead { k: 8, sf: 1.0 });
+        c.set("provision", "lookahead=4,sf=0.5").unwrap();
+        assert_eq!(c.provision, ProvisionPolicy::Lookahead { k: 4, sf: 0.5 });
+        c.set("provision", "reactive").unwrap();
+        assert_eq!(c.provision, ProvisionPolicy::Reactive);
+        c.set("spec_max", "3").unwrap();
+        assert_eq!(c.spec_max, 3);
+        assert!(c.set("provision", "lookahead=0").is_err());
+        assert!(c.set("provision", "lookahead=x").is_err());
+        assert!(c.set("provision", "lookahead=4,sf=0").is_err());
+        assert!(c.set("provision", "lookahead=4,max=2").is_err());
+        assert!(c.set("provision", "psychic").is_err());
+        assert!(c.set("spec_max", "-1").is_err());
     }
 
     #[test]

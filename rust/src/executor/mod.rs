@@ -51,15 +51,18 @@ use crate::config::{EngineConfig, RetentionPolicy};
 use crate::jobs::{job_prefix, JobId};
 use crate::kernels::KernelExecutor;
 use crate::lambdapack::analysis::{Analyzer, Loc};
+use crate::lambdapack::frontier::FrontierProfile;
 use crate::lambdapack::interp::Node;
 use crate::metrics::MetricsHub;
-use crate::storage::{BlobStore, CachedBlobStore, KvState, Queue, Substrate};
+use crate::storage::{
+    BlobStore, CachedBlobStore, ClaimWeights, Clock, KvState, Queue, Substrate, WallClock,
+};
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::fmt::Write as _;
-use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 /// Within-job queue priority for a node: earlier program lines first
 /// (the factorization pivot chain — `chol` before `trsm` before
@@ -152,7 +155,21 @@ pub struct FleetContext {
     /// the worker pool).
     pub cfg: EngineConfig,
     pub kill: KillSwitch,
+    /// The fleet's time source — wall clock in production,
+    /// [`TestClock`](crate::storage::TestClock) in deterministic
+    /// straggler tests. Shared with the substrate (lease expiry) and
+    /// the per-job wait/straggler tracking so all three agree on "now".
+    pub clock: Arc<dyn Clock>,
+    /// Shared per-job fair-share weights, attached to the queue at
+    /// build time; the job manager's monitor keeps each active job's
+    /// weight at its pending-to-inflight ratio.
+    pub claim_weights: Arc<ClaimWeights>,
     shutdown: AtomicBool,
+    /// Condvar mirror of the shutdown flag so periodic service threads
+    /// (provisioner) can sleep interruptibly instead of stalling
+    /// teardown by up to one full period.
+    shutdown_gate: Mutex<bool>,
+    shutdown_cv: Condvar,
     /// External-fleet mode (`numpywren worker`): this process is one
     /// of several sharing a durable substrate, so a queue message for
     /// a job missing from the local registry may belong to a job this
@@ -164,14 +181,27 @@ pub struct FleetContext {
 
 impl FleetContext {
     /// Stand up one shared substrate for the whole fleet.
-    pub fn new(mut cfg: EngineConfig, kernels: Arc<dyn KernelExecutor>) -> FleetContext {
+    pub fn new(cfg: EngineConfig, kernels: Arc<dyn KernelExecutor>) -> FleetContext {
+        Self::with_clock(cfg, kernels, Arc::new(WallClock::new()))
+    }
+
+    /// [`FleetContext::new`] on an injected clock — deterministic
+    /// lease-expiry and straggler-speculation tests drive a
+    /// [`TestClock`](crate::storage::TestClock) here.
+    pub fn with_clock(
+        mut cfg: EngineConfig,
+        kernels: Arc<dyn KernelExecutor>,
+        clock: Arc<dyn Clock>,
+    ) -> FleetContext {
         cfg.substrate = cfg.substrate.resolve(cfg.worker_hint());
         let Substrate {
             blob,
             queue,
             state,
             cache,
-        } = Substrate::build(&cfg.substrate, cfg.lease, cfg.store_latency);
+        } = Substrate::build_with_clock(&cfg.substrate, cfg.lease, cfg.store_latency, clock.clone());
+        let claim_weights = Arc::new(ClaimWeights::default());
+        queue.set_claim_weights(claim_weights.clone());
         FleetContext {
             queue,
             store: blob,
@@ -181,20 +211,34 @@ impl FleetContext {
             metrics: MetricsHub::new(),
             cfg,
             kill: KillSwitch::default(),
+            clock,
+            claim_weights,
             shutdown: AtomicBool::new(false),
+            shutdown_gate: Mutex::new(false),
+            shutdown_cv: Condvar::new(),
             external: AtomicBool::new(false),
             jobs: RwLock::new(HashMap::new()),
         }
     }
 
-    /// Make a job resolvable by the fleet.
+    /// Seconds on the fleet clock — the shared timeline for task-wait
+    /// and straggler-age measurements.
+    pub fn now_secs(&self) -> f64 {
+        self.clock.now().as_secs_f64()
+    }
+
+    /// Make a job resolvable by the fleet. Seeds the job's claim
+    /// weight at the neutral 1.0; the manager's monitor keeps it at
+    /// the live pending-to-inflight ratio from then on.
     pub fn register(&self, ctx: Arc<JobContext>) {
+        self.claim_weights.set(ctx.job.0, 1.0);
         self.jobs.write().unwrap().insert(ctx.job.0, ctx);
     }
 
     /// Remove a finished/canceled job from the registry; its residual
     /// queue messages drain as workers receive and drop them.
     pub fn unregister(&self, job: JobId) -> Option<Arc<JobContext>> {
+        self.claim_weights.clear(job.0);
         self.jobs.write().unwrap().remove(&job.0)
     }
 
@@ -223,6 +267,28 @@ impl FleetContext {
 
     pub fn set_shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
+        // Flip the condvar mirror under its lock so a service thread
+        // cannot re-check the flag and park after we notified.
+        *self.shutdown_gate.lock().unwrap() = true;
+        self.shutdown_cv.notify_all();
+    }
+
+    /// Sleep up to `period`, returning early (with `true`) the moment
+    /// shutdown is signaled — the interruptible wait behind the
+    /// provisioner's control loop, so teardown never stalls a full
+    /// period.
+    pub fn wait_shutdown(&self, period: Duration) -> bool {
+        let deadline = Instant::now() + period;
+        let mut down = self.shutdown_gate.lock().unwrap();
+        loop {
+            if *down {
+                return true;
+            }
+            let Some(left) = deadline.checked_duration_since(Instant::now()) else {
+                return false;
+            };
+            down = self.shutdown_cv.wait_timeout(down, left).unwrap().0;
+        }
     }
 
     /// Is this fleet one process among several on a shared substrate?
@@ -299,10 +365,80 @@ pub struct JobContext {
     /// tiles. Enabled by the job manager when the fleet substrate
     /// carries a cache layer; pointless (and off) otherwise.
     pub locality_hints: bool,
+    /// The fleet clock (wall clock by default; the job manager injects
+    /// its own) — the timeline for task-wait and straggler-age
+    /// measurements.
+    pub clock: Arc<dyn Clock>,
+    /// DAG frontier forecast table for predictive provisioning. Built
+    /// at activation only under a `Lookahead` provision policy — the
+    /// default reactive path never pays the DAG expansion.
+    pub frontier: Option<Arc<FrontierProfile>>,
+    /// Speculative straggler re-execution state (`Some` iff the fleet
+    /// runs with `spec_max > 0`).
+    pub spec: Option<Mutex<SpecState>>,
+    /// Enqueue timestamps by node id — claimed tasks move their delta
+    /// into `waits` (the p99-task-wait report metric).
+    enqueued_at: Mutex<HashMap<String, f64>>,
+    /// Observed enqueue-to-claim waits, in seconds.
+    waits: Mutex<Vec<f64>>,
+    /// Speculative duplicate enqueues issued for this job (bounded by
+    /// the fleet's `spec_max`).
+    spec_enqueued: AtomicU64,
     // Shared substrate handles (clones of the fleet's).
     pub queue: Arc<dyn Queue>,
     pub store: Arc<dyn BlobStore>,
     pub state: Arc<dyn KvState>,
+}
+
+/// The straggler threshold's late multiplier: a claim older than
+/// `SPEC_LATE_MULT ×` the p90 completed-task duration is speculated.
+pub const SPEC_LATE_MULT: f64 = 4.0;
+/// Below this many completed-duration samples the percentile is
+/// meaningless; fall back to [`SPEC_COLD_THRESHOLD_SECS`].
+const SPEC_MIN_SAMPLES: usize = 4;
+/// Cold-start straggler threshold (seconds) while samples accumulate.
+const SPEC_COLD_THRESHOLD_SECS: f64 = 0.5;
+/// Warm-threshold floor: sub-10ms kernels must not trip speculation on
+/// scheduler jitter.
+const SPEC_FLOOR_SECS: f64 = 0.010;
+
+/// Per-job speculative re-execution state (§4.1 turned proactive): the
+/// monitor compares every in-flight claim's age against a
+/// percentile-based threshold over completed-task durations, and
+/// re-enqueues a bounded number of suspected stragglers. Safety comes
+/// for free from the execution protocol — SSA makes a duplicate's tile
+/// writes bit-identical re-puts, the completion CAS lets exactly one
+/// finisher win, and `propagate` is idempotent — so a duplicate costs
+/// at most one wasted worker-slice, never correctness.
+#[derive(Default)]
+pub struct SpecState {
+    /// Node id → (node, claim time) for in-flight claims.
+    claims: HashMap<String, (Node, f64)>,
+    /// Recent completed-task durations (seconds) — the straggler
+    /// baseline, bounded so long jobs track the *current* regime.
+    durations: Vec<f64>,
+    /// Nodes already speculated — at most one duplicate per node, ever.
+    speculated: HashSet<String>,
+}
+
+impl SpecState {
+    /// The current straggler age threshold, in seconds.
+    fn threshold(&self) -> f64 {
+        if self.durations.len() < SPEC_MIN_SAMPLES {
+            return SPEC_COLD_THRESHOLD_SECS;
+        }
+        let mut d = self.durations.clone();
+        d.sort_by(f64::total_cmp);
+        let p90 = d[((d.len() - 1) as f64 * 0.9) as usize];
+        (p90 * SPEC_LATE_MULT).max(SPEC_FLOOR_SECS)
+    }
+
+    fn push_duration(&mut self, secs: f64) {
+        if self.durations.len() >= 512 {
+            self.durations.drain(..256);
+        }
+        self.durations.push(secs);
+    }
 }
 
 impl JobContext {
@@ -336,6 +472,12 @@ impl JobContext {
             aliases: HashMap::new(),
             deps: Vec::new(),
             locality_hints: false,
+            clock: Arc::new(WallClock::new()),
+            frontier: None,
+            spec: None,
+            enqueued_at: Mutex::new(HashMap::new()),
+            waits: Mutex::new(Vec::new()),
+            spec_enqueued: AtomicU64::new(0),
             queue,
             store,
             state,
@@ -441,6 +583,10 @@ impl JobContext {
     /// [`crate::storage::Queue::send_hinted`]).
     pub fn send_task_hinted(&self, node: &Node, hint: Option<u64>) {
         self.in_queue.fetch_add(1, Ordering::Relaxed);
+        self.enqueued_at
+            .lock()
+            .unwrap()
+            .insert(node.id(), self.clock.now().as_secs_f64());
         self.queue
             .send_hinted(&self.msg_body(node), self.task_priority(node), hint);
     }
@@ -497,6 +643,113 @@ impl JobContext {
     /// Completed-task count from the state store.
     pub fn completed(&self) -> u64 {
         self.state.counter(&self.completed_key()).max(0) as u64
+    }
+
+    // ---- wait tracking + straggler speculation ------------------------
+
+    /// A worker committed to a delivery of `node` at fleet time `now`:
+    /// record the enqueue-to-claim wait and open a straggler-watch
+    /// entry. A redelivered (or duplicated) claim simply restarts the
+    /// watch.
+    pub fn note_claimed(&self, node: &Node, now: f64) {
+        let id = node.id();
+        if let Some(sent) = self.enqueued_at.lock().unwrap().remove(&id) {
+            self.waits.lock().unwrap().push((now - sent).max(0.0));
+        }
+        if let Some(spec) = &self.spec {
+            spec.lock().unwrap().claims.insert(id, (node.clone(), now));
+        }
+    }
+
+    /// `node`'s task completed at fleet time `now`: close its
+    /// straggler watch and feed the duration baseline.
+    pub fn note_finished(&self, node: &Node, now: f64) {
+        if let Some(spec) = &self.spec {
+            let mut s = spec.lock().unwrap();
+            if let Some((_, started)) = s.claims.remove(&node.id()) {
+                s.push_duration((now - started).max(0.0));
+            }
+        }
+    }
+
+    /// `node`'s claim ended without completing here (error, transient
+    /// abandon, kill-drain, sealed-job drop): close the watch without
+    /// polluting the duration baseline.
+    pub fn note_dropped(&self, node: &Node) {
+        if let Some(spec) = &self.spec {
+            spec.lock().unwrap().claims.remove(&node.id());
+        }
+    }
+
+    /// Speculative duplicates enqueued so far.
+    pub fn spec_count(&self) -> u64 {
+        self.spec_enqueued.load(Ordering::Relaxed)
+    }
+
+    /// The p99 enqueue-to-claim wait observed so far, in seconds.
+    pub fn p99_wait_secs(&self) -> f64 {
+        let mut w = self.waits.lock().unwrap().clone();
+        if w.is_empty() {
+            return 0.0;
+        }
+        w.sort_by(f64::total_cmp);
+        w[((w.len() - 1) as f64 * 0.99) as usize]
+    }
+
+    /// Predicted ready-frontier width within the next `k` completions
+    /// (0 without a frontier table — the reactive default).
+    pub fn forecast(&self, k: u64) -> u64 {
+        match &self.frontier {
+            Some(f) => f.forecast(self.completed(), k),
+            None => 0,
+        }
+    }
+
+    /// One monitor pass of straggler detection: re-enqueue a duplicate
+    /// for every in-flight claim older than the percentile threshold,
+    /// bounded by the job's remaining `spec_max` budget and by
+    /// once-per-node. Returns how many duplicates were enqueued.
+    pub fn check_stragglers(&self, now: f64, spec_max: u64) -> usize {
+        let Some(spec) = &self.spec else { return 0 };
+        if spec_max == 0 || self.spec_enqueued.load(Ordering::Relaxed) >= spec_max {
+            return 0;
+        }
+        let mut resend: Vec<Node> = Vec::new();
+        {
+            let mut s = spec.lock().unwrap();
+            let threshold = s.threshold();
+            let mut late: Vec<(String, Node)> = s
+                .claims
+                .iter()
+                .filter(|(id, (_, started))| {
+                    now - *started > threshold && !s.speculated.contains(*id)
+                })
+                .map(|(id, (node, _))| (id.clone(), node.clone()))
+                .collect();
+            late.sort_by(|a, b| a.0.cmp(&b.0));
+            for (id, node) in late {
+                if self.spec_enqueued.load(Ordering::Relaxed) >= spec_max {
+                    break;
+                }
+                // A finished task can linger in `claims` briefly (the
+                // finisher's bookkeeping races the monitor): consult
+                // durable status before duplicating completed work.
+                if self.state.get(&self.status_key(&node)).as_deref()
+                    == Some(crate::storage::status::COMPLETED)
+                {
+                    s.claims.remove(&id);
+                    continue;
+                }
+                s.speculated.insert(id);
+                self.spec_enqueued.fetch_add(1, Ordering::Relaxed);
+                resend.push(node);
+            }
+        }
+        // Enqueue outside the spec lock — sends take queue locks.
+        for node in &resend {
+            self.send_task(node);
+        }
+        resend.len()
     }
 
     // ---- errors --------------------------------------------------------

@@ -276,10 +276,15 @@ fn read_stage(
             continue;
         }
         registry.insert(&body, lease);
+        // Wait/straggler accounting: the claim timestamp both closes the
+        // queue-wait interval and opens the lease-age window the
+        // manager's speculation monitor watches.
+        ctx.note_claimed(&node, fleet.now_secs());
         let task = match ctx.analyzer.concretize(&node) {
             Ok(t) => t,
             Err(e) => {
                 ctx.report_error(&node, &e);
+                ctx.note_dropped(&node);
                 registry.remove(&body);
                 ctx.release_slot();
                 continue;
@@ -335,6 +340,7 @@ fn read_stage(
             if let Some(e) = failed {
                 ctx.metrics
                     .task_finished(&node.id(), &task.fn_name, params.id, start, 0, 0, 0);
+                ctx.note_dropped(&node);
                 if is_transient(&e) {
                     // Persistent injected faults: abandon the task —
                     // drop the lease from the registry so renewal
@@ -400,6 +406,7 @@ fn compute_stage(
                 }
                 Err(e) => {
                     done.ctx.report_error(&done.node, &e);
+                    done.ctx.note_dropped(&done.node);
                     done.ctx.metrics.task_finished(
                         &done.node.id(),
                         &done.task.fn_name,
@@ -433,6 +440,7 @@ fn write_stage(
         let ctx = &item.ctx;
         if item.abandoned || kill.load(Ordering::SeqCst) {
             // Kill-drain: leave lease to expire; the task redelivers.
+            ctx.note_dropped(&item.node);
             ctx.metrics.task_finished(
                 &item.node.id(),
                 &item.task.fn_name,
@@ -451,6 +459,7 @@ fn write_stage(
             // (every task already completed) or unwanted (canceled), and
             // GC may be waiting to reclaim the namespace — so drop the
             // write/CAS/propagate entirely and just drain the message.
+            ctx.note_dropped(&item.node);
             ctx.metrics.task_finished(
                 &item.node.id(),
                 &item.task.fn_name,
@@ -481,6 +490,7 @@ fn write_stage(
                 bytes_written += bytes;
             }
             if let Some(e) = failed {
+                ctx.note_dropped(&item.node);
                 ctx.metrics.task_finished(
                     &item.node.id(),
                     &item.task.fn_name,
@@ -521,6 +531,11 @@ fn write_stage(
         let won = ctx
             .state
             .cas(&ctx.status_key(&item.node), None, status::COMPLETED);
+        // Close the straggler-watch claim and record the attempt's
+        // duration (feeds the speculation percentile threshold). Runs
+        // for CAS losers too: a speculative duplicate that finishes
+        // second is still a valid duration sample.
+        ctx.note_finished(&item.node, fleet.now_secs());
         // Metrics land *before* the completed-counter increment: the
         // manager's monitor seals the job (snapshotting this hub) the
         // instant the counter reaches the total, so the final task's

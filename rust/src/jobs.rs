@@ -60,18 +60,20 @@
 //! unbounded-uptime daemon ([`crate::daemon`]) at steady-state
 //! residency.
 
-use crate::config::{EngineConfig, FailureSpec, RetentionPolicy, ScalingMode};
+use crate::config::{EngineConfig, FailureSpec, ProvisionPolicy, RetentionPolicy, ScalingMode};
 use crate::executor::worker::ExitReason;
-use crate::executor::{FleetContext, JobContext};
+use crate::executor::{FleetContext, JobContext, SpecState};
 use crate::kernels::{KernelExecutor, NativeKernels};
 use crate::lambdapack::analysis::{Analyzer, Loc};
 use crate::lambdapack::ast::Program;
+use crate::lambdapack::dag::Dag;
+use crate::lambdapack::frontier::FrontierProfile;
 use crate::lambdapack::interp::{count_nodes, Env};
 use crate::linalg::matrix::Matrix;
 use crate::metrics::{Sample, TaskRecord};
 use crate::provisioner::{run_provisioner, WorkerPool};
 use crate::storage::chaos::{blob_put_with_retry, with_blob_retry, CLIENT_BLOB_RETRIES};
-use crate::storage::{BlobStore, CacheStats, KvState, Queue, StoreStats};
+use crate::storage::{BlobStore, CacheStats, Clock, KvState, Queue, StoreStats, WallClock};
 use crate::util::prng::Rng;
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeSet, HashMap, HashSet};
@@ -221,6 +223,12 @@ pub struct JobReport {
     /// the shared fleet's live count).
     pub samples: Vec<Sample>,
     pub tasks: Vec<TaskRecord>,
+    /// p99 of the job's task queue-wait times (enqueue → claim),
+    /// seconds. 0.0 when no task was ever claimed.
+    pub p99_wait_secs: f64,
+    /// Speculative straggler duplicates enqueued for this job — always
+    /// ≤ the fleet's `spec_max`, and 0 when speculation is off.
+    pub spec_enqueued: u64,
     pub canceled: bool,
     pub error: Option<String>,
 }
@@ -446,7 +454,18 @@ impl JobManager {
 
     /// A service with a custom kernel backend (e.g. the PJRT runtime).
     pub fn with_kernels(cfg: EngineConfig, kernels: Arc<dyn KernelExecutor>) -> JobManager {
-        let fleet = Arc::new(FleetContext::new(cfg, kernels));
+        Self::with_kernels_and_clock(cfg, kernels, Arc::new(WallClock::default()))
+    }
+
+    /// A service with an injected clock — deterministic tests drive
+    /// lease ages and straggler thresholds with a
+    /// [`TestClock`](crate::storage::TestClock) instead of wall time.
+    pub fn with_kernels_and_clock(
+        cfg: EngineConfig,
+        kernels: Arc<dyn KernelExecutor>,
+        clock: Arc<dyn Clock>,
+    ) -> JobManager {
+        let fleet = Arc::new(FleetContext::with_clock(cfg, kernels, clock));
         let finished = Arc::new(Finished {
             reports: Mutex::new(HashMap::new()),
             cv: Condvar::new(),
@@ -924,6 +943,16 @@ fn activate_job(fleet: &Arc<FleetContext>, pending: PendingJob) -> Result<()> {
     if roots.is_empty() {
         bail!("program has no root tasks");
     }
+    // Predictive provisioning needs the job's frontier profile — one
+    // DAG expansion at activation, amortized over every provisioner
+    // tick. Reactive fleets skip the expansion entirely (the default
+    // path stays bit-for-bit the paper's policy).
+    let frontier = match fleet.cfg.provision {
+        ProvisionPolicy::Lookahead { .. } => Dag::expand(&program, &args)
+            .ok()
+            .map(|dag| Arc::new(FrontierProfile::from_dag(&dag))),
+        ProvisionPolicy::Reactive => None,
+    };
     // Seed this job's input tiles under its namespace *before*
     // creating the context, so the job clock (wall_secs, the
     // job_timeout anchor) starts after the client upload — parity
@@ -961,6 +990,13 @@ fn activate_job(fleet: &Arc<FleetContext>, pending: PendingJob) -> Result<()> {
     ctx.output_matrices = output_matrices;
     ctx.max_inflight = max_inflight;
     ctx.deps = deps;
+    // Share the fleet clock so queue-wait stamps, straggler lease ages,
+    // and speculation thresholds all read one (injectable) time source.
+    ctx.clock = fleet.clock.clone();
+    ctx.frontier = frontier;
+    if fleet.cfg.spec_max > 0 {
+        ctx.spec = Some(Mutex::new(SpecState::default()));
+    }
     // Locality hints only pay off when a worker-local cache exists to
     // keep the hinted tiles warm; without one the hint writes would be
     // pure KV overhead.
@@ -1024,6 +1060,8 @@ fn seal_unstarted(
         total_flops: 0,
         samples: Vec::new(),
         tasks: Vec::new(),
+        p99_wait_secs: 0.0,
+        spec_enqueued: 0,
         canceled,
         error: Some(error),
     };
@@ -1453,6 +1491,24 @@ fn spawn_monitor(
                 };
                 if let Some(error) = outcome {
                     finish_job(&fleet, &finished, &lifecycle, &ctx, error);
+                    continue;
+                }
+                // Dynamic fair share: among equal-priority jobs the
+                // queues weight claims by pending-to-inflight ratio, so
+                // a starved job (deep backlog, few running tasks) pulls
+                // ahead of a saturated one without ever crossing class
+                // or line-order boundaries. Inert with a single active
+                // job (the weight map only engages at two or more).
+                fleet.claim_weights.set(
+                    ctx.job.0,
+                    ctx.queued_estimate() as f64 / (1.0 + ctx.inflight() as f64),
+                );
+                // Speculative straggler re-execution: duplicate claims
+                // whose age has blown past the percentile threshold.
+                // SSA tile writes and the status CAS make duplicates
+                // safe; `spec_max` bounds the extra load.
+                if fleet.cfg.spec_max > 0 {
+                    ctx.check_stragglers(fleet.now_secs(), fleet.cfg.spec_max as u64);
                 }
             }
             resolve_pending(&fleet, &finished, &lifecycle);
@@ -1493,6 +1549,8 @@ fn finish_job(
         total_flops: ctx.metrics.total_flops(),
         samples: ctx.metrics.samples(),
         tasks: ctx.metrics.task_records(),
+        p99_wait_secs: ctx.p99_wait_secs(),
+        spec_enqueued: ctx.spec_count(),
         canceled: ctx.is_canceled(),
         error,
     };
@@ -1629,6 +1687,8 @@ mod tests {
                 flops: 0,
             }],
             tasks: Vec::new(),
+            p99_wait_secs: 0.0,
+            spec_enqueued: 0,
             canceled: false,
             error: None,
         };

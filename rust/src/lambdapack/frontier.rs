@@ -1,0 +1,147 @@
+//! Ready-frontier forecasting from the LAmbdaPACK task DAG — the
+//! static-analysis half of predictive autoscaling (ROADMAP item 3;
+//! paper §4's parallelism analysis put to provisioning use).
+//!
+//! The reactive §4.2 policy scales to the *observed* queue depth, so
+//! every parallelism wave in a Cholesky or TSQR DAG is met with a cold
+//! ramp: the front of the wave waits for workers to launch, the back
+//! idles them. But the DAG is known at submission — [`Dag::levels`]
+//! gives every task's longest-path depth, and the level widths
+//! ([`Dag::parallelism_profile`]) bound how many tasks *can* be ready
+//! once the preceding levels drain. A [`FrontierProfile`] compresses
+//! that into a cumulative-tasks-per-level table so the provisioner can
+//! ask, each tick and per job: "given this job's live completion
+//! counter, how wide can its ready frontier be within the next K
+//! completions?" — and have workers warm before the wave lands.
+//!
+//! The forecast is a *bound*, not a simulation: level `d` of the DAG
+//! can start only after all `cum[d]` tasks of levels `0..d` complete,
+//! so with `c` tasks complete and a horizon of `k` more completions,
+//! every task in a level with `cum[d] ≤ min(c + k, total)` may be
+//! runnable. Longest-path levels make this conservative in the right
+//! direction for provisioning (it never under-forecasts a wave that
+//! level-synchronized execution could reach), and the table is built
+//! once per job at activation — the per-tick cost is one
+//! `partition_point` over a vector of level counts.
+
+use crate::lambdapack::dag::Dag;
+
+/// Per-job frontier forecast table: `cum[d]` is the number of tasks in
+/// levels strictly below `d` (so `cum[0] == 0` and `cum[depth]` is the
+/// job's total task count).
+#[derive(Clone, Debug)]
+pub struct FrontierProfile {
+    cum: Vec<u64>,
+}
+
+impl FrontierProfile {
+    /// Build from an expanded task DAG.
+    pub fn from_dag(dag: &Dag) -> FrontierProfile {
+        FrontierProfile::from_profile(&dag.parallelism_profile())
+    }
+
+    /// Build from raw per-level widths (tests and the simulator).
+    pub fn from_profile(widths: &[usize]) -> FrontierProfile {
+        let mut cum = Vec::with_capacity(widths.len() + 1);
+        let mut acc = 0u64;
+        cum.push(acc);
+        for w in widths {
+            acc += *w as u64;
+            cum.push(acc);
+        }
+        FrontierProfile { cum }
+    }
+
+    /// Total task count.
+    pub fn total(&self) -> u64 {
+        *self.cum.last().unwrap_or(&0)
+    }
+
+    /// Upper bound on this job's ready-or-running tasks within the
+    /// next `k` completions, given `completed` tasks done so far:
+    /// every task of every level reachable by the horizon
+    /// `min(completed + k, total)`, minus the tasks already completed.
+    /// Returns 0 once the job is done (or over-reports completion,
+    /// e.g. a transiently stale counter).
+    pub fn forecast(&self, completed: u64, k: u64) -> u64 {
+        let depth = self.cum.len() - 1;
+        if depth == 0 {
+            return 0;
+        }
+        let horizon = completed.saturating_add(k).min(self.total());
+        // First level the horizon cannot unlock; every level below it
+        // can be fully ready.
+        let locked = self.cum.partition_point(|&c| c <= horizon).min(depth);
+        self.cum[locked].saturating_sub(completed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lambdapack::interp::Env;
+    use crate::lambdapack::programs;
+
+    fn env(pairs: &[(&str, i64)]) -> Env {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn forecast_from_flat_profile() {
+        // GEMM N=3: three levels of 9 (paper Fig 4's flat profile).
+        let f = FrontierProfile::from_profile(&[9, 9, 9]);
+        assert_eq!(f.total(), 27);
+        // Nothing done: level 0 is fully ready regardless of k…
+        assert_eq!(f.forecast(0, 1), 9);
+        // …and a horizon reaching 9 completions unlocks level 1.
+        assert_eq!(f.forecast(0, 9), 18);
+        // Mid-flight: 5 done, 4 more reach the level boundary.
+        assert_eq!(f.forecast(5, 4), 13);
+        // Horizon short of the boundary: only level 0's remainder.
+        assert_eq!(f.forecast(5, 3), 4);
+        // Done (and over-reported) jobs forecast zero.
+        assert_eq!(f.forecast(27, 8), 0);
+        assert_eq!(f.forecast(30, 8), 0);
+    }
+
+    #[test]
+    fn forecast_never_exceeds_remaining_tasks() {
+        let f = FrontierProfile::from_profile(&[1, 4, 2]);
+        for c in 0..=7 {
+            for k in 0..=9 {
+                let fc = f.forecast(c, k);
+                assert!(fc <= 7 - c.min(7), "c={c} k={k} fc={fc}");
+            }
+        }
+        // Unbounded horizon forecasts exactly the remaining work.
+        assert_eq!(f.forecast(0, u64::MAX), 7);
+        assert_eq!(f.forecast(3, u64::MAX), 4);
+    }
+
+    #[test]
+    fn forecast_from_cholesky_dag() {
+        let program = programs::cholesky();
+        let dag = Dag::expand(&program, &env(&[("N", 4)])).unwrap();
+        let f = FrontierProfile::from_dag(&dag);
+        assert_eq!(f.total(), dag.nodes.len() as u64);
+        // Exactly one root (chol of the first block) is ready at start.
+        assert_eq!(f.forecast(0, 0), 1);
+        // One completion unlocks the first trsm wave (3 for N=4).
+        assert_eq!(f.forecast(0, 1), 4);
+        // Forecasts are monotone in the horizon.
+        let mut last = 0;
+        for k in 0..=f.total() {
+            let fc = f.forecast(0, k);
+            assert!(fc >= last, "k={k}");
+            last = fc;
+        }
+        assert_eq!(last, f.total());
+    }
+
+    #[test]
+    fn empty_profile_is_inert() {
+        let f = FrontierProfile::from_profile(&[]);
+        assert_eq!(f.total(), 0);
+        assert_eq!(f.forecast(0, 10), 0);
+    }
+}

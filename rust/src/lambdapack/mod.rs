@@ -24,6 +24,9 @@
 //! * [`dag`] — *explicit* DAG expansion, the baseline LAmbdaPACK
 //!   replaces (Table 3's "Full DAG" column) and what the simulator and
 //!   the profile figures consume.
+//! * [`frontier`] — ready-frontier forecasting over the DAG's level
+//!   widths; the static-analysis input to the predictive provisioner
+//!   (`--provision lookahead=K`).
 //! * [`programs`] — the algorithm library: Cholesky, TSQR, GEMM,
 //!   block LU, and the BDFAC-style banded reduction used by the SVD
 //!   driver.
@@ -32,6 +35,7 @@ pub mod analysis;
 pub mod ast;
 pub mod compiled;
 pub mod dag;
+pub mod frontier;
 pub mod interp;
 pub mod parser;
 pub mod programs;

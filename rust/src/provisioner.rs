@@ -18,6 +18,7 @@
 //! example: sf = 0.5, 100 pending, 40 running → launch 100·0.5 − 40 =
 //! 10).
 
+use crate::config::ProvisionPolicy;
 use crate::executor::worker::{run_worker, ExitReason, WorkerParams};
 use crate::executor::FleetContext;
 use crate::storage::Queue as _;
@@ -66,16 +67,43 @@ impl WorkerPool {
 /// workers to close the gap between the live count and the §4.2
 /// target computed from the aggregate (all-jobs) queue depth.
 pub fn run_provisioner(fleet: Arc<FleetContext>, pool: WorkerPool, sf: f64, max_workers: usize) {
-    while !fleet.is_shutdown() {
+    loop {
+        if fleet.is_shutdown() {
+            return;
+        }
         let pending = fleet.queue.len();
         let live = fleet.metrics.live_workers();
-        let target = scale_target(sf, pending, fleet.cfg.pipeline_width, max_workers);
+        let mut target = scale_target(sf, pending, fleet.cfg.pipeline_width, max_workers);
+        // Predictive lookahead (`--provision lookahead=K`): the queue
+        // depth only shows tasks already released, so a reactive target
+        // meets every DAG parallelism wave with a cold ramp. Each job's
+        // frontier profile bounds how wide its ready set can get within
+        // the next K completions; provisioning to the max of the
+        // reactive and predicted targets warms workers *before* the
+        // wave lands, and never scales below the paper's policy.
+        if let ProvisionPolicy::Lookahead { k, sf: psf } = fleet.cfg.provision {
+            let predicted: u64 = fleet
+                .active_jobs()
+                .iter()
+                .map(|ctx| ctx.forecast(k as u64))
+                .sum();
+            target = target.max(scale_target(
+                psf,
+                predicted as usize,
+                fleet.cfg.pipeline_width,
+                max_workers,
+            ));
+        }
         if target > live {
             for _ in 0..(target - live) {
                 pool.spawn(fleet.clone(), true);
             }
         }
-        std::thread::sleep(fleet.cfg.provision_period);
+        // Interruptible wait: returns true the instant shutdown is
+        // signaled, so teardown never stalls a full provision period.
+        if fleet.wait_shutdown(fleet.cfg.provision_period) {
+            return;
+        }
     }
 }
 

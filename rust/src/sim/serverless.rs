@@ -23,6 +23,7 @@
 //! `executor/worker.rs`).
 
 use crate::config::SubstrateConfig;
+use crate::lambdapack::frontier::FrontierProfile;
 use crate::sim::cost::CostModel;
 use crate::sim::workload::Workload;
 use crate::storage::{KvState as _, Lease, Queue as _, Substrate, TestClock};
@@ -63,6 +64,12 @@ pub struct SimConfig {
     /// to `strict` (single global order → bit-reproducible runs); add
     /// `+chaos(drop=…,dup=…)` for message-level fault injection.
     pub substrate: SubstrateConfig,
+    /// Predictive provisioning (`--provision lookahead=K[,sf=F]`):
+    /// under `WorkerPolicy::Auto`, additionally scale to the DAG's
+    /// forecast ready frontier within the next `K` completions,
+    /// weighted by the predictive `sf`. `None` keeps the reactive
+    /// §4.2 policy bit-for-bit.
+    pub lookahead: Option<(usize, f64)>,
 }
 
 impl Default for SimConfig {
@@ -75,6 +82,7 @@ impl Default for SimConfig {
             limit_tasks: None,
             provision_period: 1.0,
             substrate: SubstrateConfig::strict(),
+            lookahead: None,
         }
     }
 }
@@ -219,6 +227,9 @@ impl<'a> ServerlessSim<'a> {
         let state = sub.state;
         let mut clock_at = Duration::ZERO;
 
+        // Predictive provisioning: one frontier table for the run,
+        // consulted each Provision tick against the live done count.
+        let frontier = self.config.lookahead.map(|_| FrontierProfile::from_dag(dag));
         let mut completed = vec![false; n];
         // Seed the root tasks exactly as the engine does.
         for r in dag.roots() {
@@ -546,8 +557,19 @@ impl<'a> ServerlessSim<'a> {
                         // window makes every tick respawn the same gap.
                         let live =
                             workers.iter().filter(|w| w.up).count() + booting;
-                        let target = ((sf * pending as f64 / pw as f64).ceil() as usize)
+                        let mut target = ((sf * pending as f64 / pw as f64).ceil() as usize)
                             .min(max_workers);
+                        // Lookahead leg: never below the reactive
+                        // target, warm before the forecast wave.
+                        if let (Some((k, psf)), Some(f)) =
+                            (self.config.lookahead, frontier.as_ref())
+                        {
+                            let predicted = f.forecast(done_count as u64, k as u64);
+                            target = target.max(
+                                ((psf * predicted as f64 / pw as f64).ceil() as usize)
+                                    .min(max_workers),
+                            );
+                        }
                         if target > live {
                             for _ in 0..(target - live) {
                                 spawn(&mut workers, &mut heap, &mut seq, &mut booting, now);
@@ -793,6 +815,49 @@ mod tests {
         // Billed core-secs must beat an always-max static pool.
         let static_billed = r.completion_time * 256.0;
         assert!(r.core_secs_billed < static_billed);
+    }
+
+    #[test]
+    fn lookahead_provisioning_warms_ahead_of_the_wave() {
+        // The reactive policy only sees released tasks, so a Cholesky
+        // DAG's widening waves each pay a cold ramp; the lookahead leg
+        // forecasts the frontier and spawns ahead. It must never lose
+        // to reactive on completion time, and must ramp at least as
+        // high by the same waves.
+        let w = chol_workload(12, 1024);
+        let m = CostModel::default();
+        let auto = WorkerPolicy::Auto {
+            sf: 1.0,
+            max_workers: 128,
+            t_timeout: 10.0,
+        };
+        let reactive = ServerlessSim::new(
+            &w,
+            m,
+            SimConfig {
+                policy: auto,
+                ..SimConfig::default()
+            },
+        )
+        .run();
+        let predictive = ServerlessSim::new(
+            &w,
+            m,
+            SimConfig {
+                policy: auto,
+                lookahead: Some((8, 1.0)),
+                ..SimConfig::default()
+            },
+        )
+        .run();
+        assert_eq!(predictive.tasks_done, w.num_tasks());
+        assert!(
+            predictive.completion_time <= reactive.completion_time + 1e-9,
+            "lookahead {} !<= reactive {}",
+            predictive.completion_time,
+            reactive.completion_time
+        );
+        assert!(predictive.peak_workers >= reactive.peak_workers);
     }
 
     #[test]

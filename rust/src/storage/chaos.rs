@@ -736,6 +736,12 @@ impl Queue for ChaosQueue {
         // Control-plane drain — passes through unshaped, like len().
         self.inner.purge_prefix(body_prefix)
     }
+
+    fn set_claim_weights(&self, weights: Arc<crate::storage::traits::ClaimWeights>) {
+        // Explicit forward: the trait default would silently drop the
+        // fair-share map before it reached a weight-aware backend.
+        self.inner.set_claim_weights(weights);
+    }
 }
 
 // ------------------------------------------------------------------ kv

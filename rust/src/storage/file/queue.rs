@@ -32,10 +32,10 @@
 use crate::storage::clock::Clock;
 use crate::storage::file::lock::DirLock;
 use crate::storage::file::Layout;
-use crate::storage::traits::{Lease, Queue};
+use crate::storage::traits::{ClaimWeights, Lease, Queue};
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant, SystemTime};
 
 /// Default hint staleness — matches the sharded family's bound.
@@ -60,6 +60,10 @@ struct Inner {
     clock_anchor: Duration,
     /// Wall time (since `UNIX_EPOCH`) at open.
     unix_anchor: Duration,
+    /// Per-job fair-share weights ([`Queue::set_claim_weights`]) —
+    /// process-local scheduling state, like the in-memory backends;
+    /// `None` (and single-job maps) keep the unweighted claim path.
+    weights: RwLock<Option<Arc<ClaimWeights>>>,
 }
 
 struct Msg {
@@ -101,6 +105,7 @@ impl FileQueue {
                 ),
                 clock_anchor,
                 unix_anchor,
+                weights: RwLock::new(None),
             }),
         })
     }
@@ -219,7 +224,10 @@ impl FileQueue {
         }
     }
 
-    /// One receive attempt, mirroring `queue_core::try_receive_for`.
+    /// One receive attempt, mirroring `queue_core::try_receive_for`:
+    /// hint steering and fair-share weighting both act within the
+    /// equal-top-priority group only, with strict-`>` weight
+    /// replacement so equal weights preserve exact FIFO.
     fn try_receive(&self, claimer: Option<u64>) -> Option<(String, Lease)> {
         self.inner.lock.with(|| {
             let now = self.now_ms();
@@ -232,30 +240,49 @@ impl FileQueue {
                 .inner
                 .hint_staleness_ms
                 .load(std::sync::atomic::Ordering::Relaxed);
+            let weights = self.inner.weights.read().unwrap().clone();
+            let weights = match (claimer, weights) {
+                (Some(_), Some(w)) if w.active() => Some(w),
+                _ => None,
+            };
             let mut deferred: Option<&Msg> = None;
-            let mut chosen: Option<&Msg> = None;
+            let mut chosen: Option<(&Msg, f64)> = None;
+            let mut group: Option<i64> = None;
             for m in &msgs {
-                if let Some(d) = deferred {
-                    if m.priority < d.priority {
+                if let Some(g) = group {
+                    if m.priority < g {
                         // Equal-priority group exhausted; taking this
                         // one would invert priority — fall back to the
-                        // FIFO-best deferred message.
+                        // best seen so far.
                         break;
                     }
                 }
+                group = group.or(Some(m.priority));
                 let steered_away = match (claimer, m.hint) {
                     (Some(w), Some(h)) => {
                         h != w && now.saturating_sub(m.hinted_at_ms) < staleness_ms
                     }
                     _ => false,
                 };
-                if !steered_away {
-                    chosen = Some(m);
-                    break;
+                if steered_away {
+                    deferred = deferred.or(Some(m));
+                    continue;
                 }
-                deferred = deferred.or(Some(m));
+                match &weights {
+                    None => {
+                        chosen = Some((m, 1.0));
+                        break;
+                    }
+                    Some(w) => {
+                        let wt = w.weight_of_body(&m.body);
+                        match chosen {
+                            Some((_, best)) if wt <= best => {}
+                            _ => chosen = Some((m, wt)),
+                        }
+                    }
+                }
             }
-            let m = chosen.or(deferred)?;
+            let m = chosen.map(|(m, _)| m).or(deferred)?;
             let prev = self.read_lease(m.id);
             let receipt = prev.as_ref().map_or(0, |l| l.receipt) + 1;
             let count = prev.as_ref().map_or(0, |l| l.count) + 1;
@@ -403,6 +430,10 @@ impl Queue for FileQueue {
             purged
         })
     }
+
+    fn set_claim_weights(&self, weights: Arc<ClaimWeights>) {
+        *self.inner.weights.write().unwrap() = Some(weights);
+    }
 }
 
 #[cfg(test)]
@@ -511,6 +542,42 @@ mod tests {
         assert!(!q.renew(&lease), "lease on purged message is stale");
         assert!(!q.delete(&lease));
         assert_eq!(q.len(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn claim_weights_prefer_the_starved_job_but_never_invert_priority() {
+        let dir = tmpdir("weights");
+        let q = open(&dir, Arc::new(WallClock::new()));
+        let w = Arc::new(ClaimWeights::default());
+        w.set(1, 0.5);
+        w.set(2, 8.0);
+        q.set_claim_weights(w);
+        // Equal priority: the starved (heavier) job claims first, then
+        // FIFO among the rest.
+        q.send("1|a", 0);
+        q.send("2|b", 0);
+        q.send("1|c", 0);
+        let (body, l) = q.receive_for(3).unwrap();
+        assert_eq!(body, "2|b");
+        assert!(q.delete(&l));
+        let (body, l) = q.receive_for(3).unwrap();
+        assert_eq!(body, "1|a");
+        assert!(q.delete(&l));
+        let (body, l) = q.receive_for(3).unwrap();
+        assert_eq!(body, "1|c");
+        assert!(q.delete(&l));
+        // Weight never beats class/line priority.
+        q.send("2|low", 1);
+        q.send("1|high", 5);
+        let (body, l) = q.receive_for(3).unwrap();
+        assert_eq!(body, "1|high");
+        assert!(q.delete(&l));
+        // Plain receive stays weight-agnostic.
+        q.send("1|d", 1);
+        let (body, l) = q.receive().unwrap();
+        assert_eq!(body, "2|low", "FIFO for plain receive");
+        assert!(q.delete(&l));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -123,7 +123,7 @@ pub use object_store::StrictBlobStore;
 pub use queue::StrictQueue;
 pub use sharded::{ShardedBlobStore, ShardedKvState, ShardedQueue};
 pub use state_store::{status, StrictKvState};
-pub use traits::{BlobStore, KvState, Lease, Queue, StoreStats};
+pub use traits::{BlobStore, ClaimWeights, KvState, Lease, Queue, StoreStats};
 
 use crate::config::{SubstrateBackend, SubstrateConfig};
 use std::path::PathBuf;

@@ -13,7 +13,7 @@
 //! EXPERIMENTS.md §Perf). Lease expiry re-feeds the heap lazily on the
 //! (rare) path where the heap runs dry.
 
-use crate::storage::traits::Lease;
+use crate::storage::traits::{ClaimWeights, Lease};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 use std::time::Duration;
@@ -114,7 +114,8 @@ impl QueueCore {
         }
     }
 
-    /// [`QueueCore::try_receive`] with affinity steering for `claimer`.
+    /// [`QueueCore::try_receive`] with affinity steering for `claimer`
+    /// and optional per-job fair-share weighting.
     ///
     /// Within the **equal-top-priority group** only, a message hinted
     /// at a *different* worker (and whose hint is younger than
@@ -126,15 +127,29 @@ impl QueueCore {
     /// can never starve it. A lower-priority message is never taken
     /// ahead of a deferred higher-priority one: steering bends FIFO
     /// within one priority, nothing more.
+    ///
+    /// When `weights` carries an active fair-share map (two or more
+    /// competing jobs), the whole equal-top-priority group is scanned
+    /// and the unsteered candidate whose job has the **highest claim
+    /// weight** wins; replacement is strict (`>`), so equal weights
+    /// preserve exact FIFO and a `None`/inactive map is byte-identical
+    /// to the early-stopping unweighted walk. Weighting, like
+    /// steering, never crosses a priority boundary.
     pub(crate) fn try_receive_for(
         &mut self,
         now: Duration,
         lease_len: Duration,
         claimer: u64,
         staleness: Duration,
+        weights: Option<&ClaimWeights>,
     ) -> Option<(String, Lease)> {
+        let weights = weights.filter(|w| w.active());
         let mut deferred: Vec<(i64, Reverse<u64>)> = Vec::new();
-        let mut chosen: Option<u64> = None;
+        // Candidates popped but not chosen (weighted scan only) — they
+        // go back on the heap before returning.
+        let mut passed: Vec<(i64, Reverse<u64>)> = Vec::new();
+        let mut chosen: Option<(u64, f64)> = None;
+        let mut group: Option<i64> = None;
         loop {
             let (prio, Reverse(id)) = match self.visible.pop() {
                 Some(x) => x,
@@ -153,34 +168,51 @@ impl QueueCore {
             if m.invisible_until > now && m.invisible_until != Duration::ZERO {
                 continue; // leased since pushed — stale entry
             }
-            if let Some(&(group, _)) = deferred.first() {
-                if prio < group {
+            if let Some(g) = group {
+                if prio < g {
                     // The equal-priority group is exhausted; taking
                     // this one would invert priority. Restore it and
-                    // fall back to the best deferred message.
+                    // fall back to the best seen so far.
                     self.visible.push((prio, Reverse(id)));
                     break;
                 }
             }
+            group = group.or(Some(prio));
             let steered_away = match m.hint {
                 Some(h) => h != claimer && now.saturating_sub(m.hinted_at) < staleness,
                 None => false,
             };
-            if !steered_away {
-                chosen = Some(id);
-                break;
+            if steered_away {
+                deferred.push((prio, Reverse(id)));
+                continue;
             }
-            deferred.push((prio, Reverse(id)));
+            match weights {
+                None => {
+                    chosen = Some((id, 1.0));
+                    break;
+                }
+                Some(w) => {
+                    let wt = w.weight_of_body(&m.body);
+                    match chosen {
+                        Some((best_id, best_wt)) if wt > best_wt => {
+                            passed.push((prio, Reverse(best_id)));
+                            chosen = Some((id, wt));
+                        }
+                        Some(_) => passed.push((prio, Reverse(id))),
+                        None => chosen = Some((id, wt)),
+                    }
+                }
+            }
         }
         let mut deferred = deferred.into_iter();
         let id = match chosen {
-            Some(id) => id,
+            Some((id, _)) => id,
             // Whole group steered elsewhere → take the FIFO-best
             // anyway (no starvation); `None` only when nothing is
             // visible at all.
             None => deferred.next()?.1 .0,
         };
-        for entry in deferred {
+        for entry in deferred.chain(passed) {
             self.visible.push(entry);
         }
         Some(self.lease(id, now, lease_len))

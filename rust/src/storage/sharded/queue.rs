@@ -39,9 +39,9 @@
 
 use crate::storage::clock::{Clock, WallClock};
 use crate::storage::queue_core::QueueCore;
-use crate::storage::traits::{Lease, Queue};
+use crate::storage::traits::{ClaimWeights, Lease, Queue};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 /// How long a locality hint may steer a message away from
@@ -74,6 +74,9 @@ struct Inner {
     waiters: AtomicUsize,
     park: Mutex<()>,
     cv: Condvar,
+    /// Shared per-job fair-share weights ([`Queue::set_claim_weights`]);
+    /// `None` (and single-job maps) keep the unweighted claim path.
+    weights: RwLock<Option<Arc<ClaimWeights>>>,
 }
 
 impl ShardedQueue {
@@ -92,6 +95,7 @@ impl ShardedQueue {
                 waiters: AtomicUsize::new(0),
                 park: Mutex::new(()),
                 cv: Condvar::new(),
+                weights: RwLock::new(None),
             }),
             clock,
             default_lease,
@@ -112,15 +116,22 @@ impl ShardedQueue {
     }
 
     /// One work-stealing pass over the shards; with a claimer, each
-    /// shard applies affinity steering.
+    /// shard applies affinity steering and fair-share weighting.
     fn scan(&self, claimer: Option<u64>) -> Option<(String, Lease)> {
         let now = self.clock.now();
         let n = self.inner.shards.len();
         let start = self.inner.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let weights = self.inner.weights.read().unwrap().clone();
         for k in 0..n {
             let mut shard = self.inner.shards[(start + k) % n].lock().unwrap();
             let got = match claimer {
-                Some(w) => shard.try_receive_for(now, self.default_lease, w, self.hint_staleness),
+                Some(w) => shard.try_receive_for(
+                    now,
+                    self.default_lease,
+                    w,
+                    self.hint_staleness,
+                    weights.as_deref(),
+                ),
                 None => shard.try_receive(now, self.default_lease),
             };
             if got.is_some() {
@@ -246,6 +257,10 @@ impl Queue for ShardedQueue {
             .iter()
             .map(|s| s.lock().unwrap().purge_prefix(body_prefix))
             .sum()
+    }
+
+    fn set_claim_weights(&self, weights: Arc<ClaimWeights>) {
+        *self.inner.weights.write().unwrap() = Some(weights);
     }
 }
 
@@ -415,6 +430,83 @@ mod tests {
         assert!(!q.delete(&lease), "stale lease rejected");
         assert!(q.delete(&lease2));
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn claim_weights_prefer_the_starved_job_within_a_priority() {
+        let q = ShardedQueue::new(1, Duration::from_secs(10));
+        let w = Arc::new(ClaimWeights::default());
+        w.set(1, 0.5);
+        w.set(2, 8.0);
+        q.set_claim_weights(w);
+        // Job 1 enqueued first; equal priority; job 2 is starved
+        // (higher pending-to-inflight weight) so it claims first.
+        q.send("1|a", 0);
+        q.send("2|b", 0);
+        q.send("1|c", 0);
+        assert_eq!(q.receive_for(3).unwrap().0, "2|b");
+        // FIFO among the remaining (same-weight) messages.
+        assert_eq!(q.receive_for(3).unwrap().0, "1|a");
+        assert_eq!(q.receive_for(3).unwrap().0, "1|c");
+    }
+
+    #[test]
+    fn claim_weights_never_invert_priority_and_equal_weights_keep_fifo() {
+        let q = ShardedQueue::new(1, Duration::from_secs(10));
+        let w = Arc::new(ClaimWeights::default());
+        w.set(1, 1.0);
+        w.set(2, 100.0);
+        q.set_claim_weights(w);
+        // Job 2's weight cannot pull its low-priority task ahead of
+        // job 1's high-priority one.
+        q.send("2|low", 1);
+        q.send("1|high", 5);
+        assert_eq!(q.receive_for(3).unwrap().0, "1|high");
+        assert_eq!(q.receive_for(3).unwrap().0, "2|low");
+        // Equal weights: exact FIFO, byte-identical to unweighted.
+        let q = ShardedQueue::new(1, Duration::from_secs(10));
+        let w = Arc::new(ClaimWeights::default());
+        w.set(1, 2.0);
+        w.set(2, 2.0);
+        q.set_claim_weights(w);
+        q.send("1|first", 0);
+        q.send("2|second", 0);
+        assert_eq!(q.receive_for(3).unwrap().0, "1|first");
+        assert_eq!(q.receive_for(3).unwrap().0, "2|second");
+    }
+
+    #[test]
+    fn single_job_weight_map_is_inert_and_plain_receive_ignores_weights() {
+        let q = ShardedQueue::new(1, Duration::from_secs(10));
+        let w = Arc::new(ClaimWeights::default());
+        w.set(2, 100.0);
+        q.set_claim_weights(w.clone());
+        q.send("1|a", 0);
+        q.send("2|b", 0);
+        // One job in the map → fair share inactive → FIFO.
+        assert_eq!(q.receive_for(3).unwrap().0, "1|a");
+        // Two jobs → active, but plain receive stays weight-agnostic.
+        w.set(1, 1.0);
+        q.send("1|c", 0);
+        assert_eq!(q.receive().unwrap().0, "2|b", "FIFO for plain receive");
+        assert_eq!(q.receive_for(3).unwrap().0, "1|c");
+    }
+
+    #[test]
+    fn claim_weights_compose_with_hint_steering() {
+        let clock = Arc::new(TestClock::default());
+        let q = ShardedQueue::with_clock(1, Duration::from_secs(10), clock);
+        let w = Arc::new(ClaimWeights::default());
+        w.set(1, 1.0);
+        w.set(2, 8.0);
+        q.set_claim_weights(w);
+        // The heavy job's only task is freshly hinted at worker 7, so
+        // worker 9 defers it and weight picks among the unsteered rest.
+        q.send_hinted("2|hinted", 0, Some(7));
+        q.send("1|a", 0);
+        assert_eq!(q.receive_for(9).unwrap().0, "1|a");
+        // Nothing unsteered left → FIFO-best steered message anyway.
+        assert_eq!(q.receive_for(9).unwrap().0, "2|hinted");
     }
 
     #[test]

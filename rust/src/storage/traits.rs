@@ -93,6 +93,53 @@ pub struct Lease {
     pub(crate) receipt: u64,
 }
 
+/// Shared per-job claim weights for **dynamic fair share within a
+/// scheduling class**: the job manager's monitor keeps each job's
+/// weight at its pending-to-inflight ratio, and weight-aware queue
+/// backends (`sharded`, `file`) prefer the highest-weight job *among
+/// candidates of equal composite priority* at claim time. A starved
+/// job (deep backlog, little in flight) climbs; a job saturating the
+/// fleet sinks. The same invariant discipline as hint steering: class
+/// and line order are never inverted, equal weights preserve exact
+/// FIFO, and an absent or single-job map is byte-identical to the
+/// unweighted path.
+#[derive(Default)]
+pub struct ClaimWeights {
+    weights: RwLock<HashMap<u64, f64>>,
+}
+
+impl ClaimWeights {
+    /// Set (or update) one job's claim weight.
+    pub fn set(&self, job: u64, weight: f64) {
+        self.weights.write().unwrap().insert(job, weight);
+    }
+
+    /// Drop a finished job's weight.
+    pub fn clear(&self, job: u64) {
+        self.weights.write().unwrap().remove(&job);
+    }
+
+    /// Fair share only means anything with at least two jobs competing
+    /// — below that, weight-aware receives take the unweighted
+    /// (byte-identical, early-stopping) path.
+    pub fn active(&self) -> bool {
+        self.weights.read().unwrap().len() >= 2
+    }
+
+    /// The claim weight of the job owning a `job_id|node_id` message
+    /// body. Unparsable bodies and unknown jobs weigh the neutral 1.0,
+    /// so foreign messages never lose eligibility.
+    pub fn weight_of_body(&self, body: &str) -> f64 {
+        let Some((id, _)) = body.split_once('|') else {
+            return 1.0;
+        };
+        let Ok(job) = id.parse::<u64>() else {
+            return 1.0;
+        };
+        self.weights.read().unwrap().get(&job).copied().unwrap_or(1.0)
+    }
+}
+
 /// S3-like tile store: high-throughput keyed storage with per-key
 /// read-after-write consistency and transfer accounting.
 pub trait BlobStore: Send + Sync {
@@ -234,6 +281,15 @@ pub trait Queue: Send + Sync {
     /// `jobid|…`, so one prefix purge empties its backlog without
     /// waiting for workers to receive-and-drop each one.
     fn purge_prefix(&self, body_prefix: &str) -> usize;
+
+    /// Attach the fleet's shared per-job [`ClaimWeights`] so
+    /// weight-aware backends can apply dynamic fair share at claim
+    /// time (see [`ClaimWeights`]). Weights are advisory scheduling
+    /// state, never delivery semantics; the default (most backends)
+    /// ignores them.
+    fn set_claim_weights(&self, weights: Arc<ClaimWeights>) {
+        let _ = weights;
+    }
 }
 
 /// Redis-like runtime state store: per-key linearizable RMW — all the

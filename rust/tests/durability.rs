@@ -42,6 +42,12 @@ impl Drop for Reaper {
 }
 
 fn spawn_serve(spool: &Path, substrate: &Path, workers: usize) -> Reaper {
+    spawn_serve_with(spool, substrate, workers, &[])
+}
+
+/// `spawn_serve` plus extra CLI args (e.g. `--set store_latency=…` to
+/// stretch task durations so a kill lands genuinely mid-task).
+fn spawn_serve_with(spool: &Path, substrate: &Path, workers: usize, extra: &[&str]) -> Reaper {
     let child = Command::new(BIN)
         .args([
             "serve",
@@ -54,6 +60,7 @@ fn spawn_serve(spool: &Path, substrate: &Path, workers: usize) -> Reaper {
             "--retention",
             "keep",
         ])
+        .args(extra)
         .stdout(Stdio::null())
         .stderr(Stdio::null())
         .spawn()
@@ -232,6 +239,110 @@ fn external_worker_process_joins_a_daemon_fleet() {
     assert!(stdout.contains("detached"), "worker never detached:\n{stdout}");
 
     for d in [&spool, &store] {
+        std::fs::remove_dir_all(d).unwrap();
+    }
+}
+
+/// kill -9 an external `numpywren worker` mid-task: the tasks it was
+/// holding stay leased in the file queue, expire by wall clock, and
+/// redeliver to the daemon's surviving worker — the job completes with
+/// tiles bit-identical to an uninterrupted run. This is the worker-side
+/// complement of the daemon kill test above: here the *submitting*
+/// process survives and a fleet member dies.
+#[cfg(target_os = "linux")]
+#[test]
+fn external_worker_killed_mid_task_redelivers_bit_exactly() {
+    let spool = tmpdir("wkill_spool");
+    let store = tmpdir("wkill_store");
+    let specs = "cholesky:48:8";
+    let seed = 11u64;
+    // Stretch every store op so tasks take tens of milliseconds: the
+    // SIGKILL below lands while a task is genuinely in flight, and the
+    // 0.5 s default lease expires long before the job could finish
+    // without redelivery.
+    let latency = ["--set", "store_latency=0.005"];
+
+    let daemon = spawn_serve_with(&spool, &store, 1, &latency);
+    let mut worker = Reaper(
+        Command::new(BIN)
+            .args([
+                "worker",
+                "--substrate",
+                &format!("file:{}", store.display()),
+                "--workers",
+                "2",
+                "--idle-exit",
+                "30",
+            ])
+            .args(latency)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning numpywren worker"),
+    );
+    // Give the worker's manifest watcher a head start so it attaches
+    // before the daemon's single worker can finish the early chain.
+    std::thread::sleep(Duration::from_millis(300));
+
+    let client = DaemonClient::new(&spool);
+    // max_inflight=2 keeps both processes busy without letting the
+    // run finish too quickly to be killed mid-task.
+    let jobs = submit_keep(&client, specs, seed, Some(2));
+
+    // Wait for real progress, then SIGKILL the external worker. Its
+    // leased messages are files in the shared directory; nothing
+    // cleans them up, so completion *requires* lease expiry.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let st = status_when_up(&client, jobs[0], deadline);
+        if (st.state == "running" && st.completed >= 4) || st.is_terminal() {
+            break;
+        }
+        assert!(Instant::now() < deadline, "j1 never progressed");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    worker.0.kill().unwrap(); // SIGKILL: leases left behind
+    worker.0.wait().unwrap();
+
+    wait_succeeded(&client, &jobs);
+    client.shutdown(Duration::from_secs(30)).unwrap();
+    drop(daemon);
+
+    // The dead worker had really joined the fleet before dying (its
+    // attach line flushed per-println, so SIGKILL cannot have eaten it).
+    let mut stdout = String::new();
+    use std::io::Read as _;
+    worker.0.stdout.take().unwrap().read_to_string(&mut stdout).unwrap();
+    assert!(stdout.contains("attached j1"), "worker never attached:\n{stdout}");
+
+    // Reference: the same submission, uninterrupted, on fresh dirs.
+    let ref_spool = tmpdir("wkill_ref_spool");
+    let ref_store = tmpdir("wkill_ref_store");
+    let reference = spawn_serve(&ref_spool, &ref_store, 2);
+    let ref_client = DaemonClient::new(&ref_spool);
+    let ref_jobs = submit_keep(&ref_client, specs, seed, None);
+    wait_succeeded(&ref_client, &ref_jobs);
+    ref_client.shutdown(Duration::from_secs(30)).unwrap();
+    drop(reference);
+
+    // Exact numerics: tasks redelivered after the kill recompute the
+    // same SSA tiles bit-for-bit, so both directories hold identical
+    // tile sets.
+    let survived = open_substrate(&store);
+    let ref_sub = open_substrate(&ref_store);
+    let keys = blob_keys(&survived);
+    assert_eq!(keys, blob_keys(&ref_sub), "tile sets diverged");
+    assert!(!keys.is_empty());
+    for key in &keys {
+        let a = survived.blob.get(0, key).unwrap();
+        let b = ref_sub.blob.get(0, key).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 0.0, "{key} not bit-exact");
+    }
+    // Every message — including the dead worker's redelivered leases —
+    // was eventually deleted under a valid lease.
+    assert_eq!(survived.queue.len(), 0);
+
+    for d in [&spool, &store, &ref_spool, &ref_store] {
         std::fs::remove_dir_all(d).unwrap();
     }
 }

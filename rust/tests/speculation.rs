@@ -1,0 +1,195 @@
+//! Deterministic straggler-speculation tests on a [`TestClock`].
+//!
+//! The scenario the ISSUE pins: a worker claims a task and then stalls
+//! (here: its kernel blocks on a gate, standing in for a slow Lambda),
+//! virtual time advances past the straggler threshold, and the job
+//! manager's monitor enqueues a bounded speculative duplicate. Either
+//! attempt may finish first; the completion CAS lets exactly one win,
+//! SSA single-writer re-puts are bit-identical, and the output must
+//! equal an unspeculated run exactly — `max_abs_diff == 0.0`, not a
+//! tolerance.
+//!
+//! Nothing here depends on wall-clock timing: leases are 3600 virtual
+//! seconds (so lease-expiry redelivery can never be the rescuer) and
+//! the straggler threshold is crossed only by explicit
+//! `TestClock::advance` calls.
+
+use numpywren::config::{EngineConfig, ScalingMode, SubstrateConfig};
+use numpywren::drivers::{collect_cholesky, stage_cholesky};
+use numpywren::jobs::{JobManager, JobReport, JobSpec, JobStatus};
+use numpywren::kernels::{KernelExecutor, NativeKernels};
+use numpywren::lambdapack::programs;
+use numpywren::linalg::matrix::Matrix;
+use numpywren::storage::TestClock;
+use numpywren::util::prng::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Delegates to [`NativeKernels`] except that the FIRST `execute`
+/// call fleet-wide blocks on a gate until the test releases it — a
+/// deterministic straggler. With a tiny Cholesky the first executed
+/// task is the root factorization, so the whole DAG is stuck behind
+/// the gate until either the speculative duplicate runs it on the
+/// other worker or the gate opens.
+struct GateKernels {
+    inner: NativeKernels,
+    armed: AtomicBool,
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl GateKernels {
+    fn new() -> Arc<GateKernels> {
+        Arc::new(GateKernels {
+            inner: NativeKernels,
+            armed: AtomicBool::new(true),
+            open: Mutex::new(false),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Open the gate; the stalled worker resumes. Always call before
+    /// shutdown or the pool join hangs on the blocked compute thread.
+    fn release(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
+impl KernelExecutor for GateKernels {
+    fn execute(
+        &self,
+        fn_name: &str,
+        inputs: &[Arc<Matrix>],
+        scalars: &[f64],
+    ) -> anyhow::Result<Vec<Matrix>> {
+        if self.armed.swap(false, Ordering::SeqCst) {
+            let mut open = self.open.lock().unwrap();
+            while !*open {
+                open = self.cv.wait(open).unwrap();
+            }
+        }
+        self.inner.execute(fn_name, inputs, scalars)
+    }
+}
+
+/// Two workers, virtual time, deterministic substrate (the CI
+/// substrate matrix is deliberately NOT honored here — chaos wrappers
+/// would blur the "exactly one duplicate source" accounting).
+fn spec_cfg(spec_max: usize) -> EngineConfig {
+    EngineConfig {
+        scaling: ScalingMode::Fixed(2),
+        substrate: SubstrateConfig::parse("sharded:2").unwrap(),
+        // Leases never expire within the test's virtual horizon:
+        // redelivery cannot masquerade as speculation.
+        lease: Duration::from_secs(3600),
+        spec_max,
+        job_timeout: Duration::from_secs(300),
+        ..EngineConfig::default()
+    }
+}
+
+fn run_gated(spec_max: usize, a: &Matrix) -> (JobReport, Matrix) {
+    let clock = Arc::new(TestClock::default());
+    let gate = GateKernels::new();
+    let mgr = JobManager::with_kernels_and_clock(
+        spec_cfg(spec_max),
+        gate.clone() as Arc<dyn KernelExecutor>,
+        clock.clone(),
+    );
+    let (env, inputs, grid) = stage_cholesky(a, 8).unwrap();
+    let job = mgr
+        .submit(JobSpec::new(programs::cholesky_spec().program, env, inputs))
+        .unwrap();
+
+    if spec_max > 0 {
+        // Advance virtual time until the monitor speculates: once a
+        // worker holds the gated root, its claim age crosses the cold
+        // threshold (0.5 virtual seconds) and a duplicate lands in the
+        // queue. The root's own message stays leased (3600 s), so a
+        // depth of 2 can only mean the duplicate was enqueued.
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while mgr.queue_len() < 2 && mgr.status(job) != JobStatus::Succeeded {
+            assert!(Instant::now() < deadline, "monitor never speculated");
+            clock.advance(Duration::from_millis(100));
+            std::thread::sleep(Duration::from_millis(3));
+        }
+        // Let the race run: if the free worker claimed the duplicate it
+        // finishes the whole job while the original is still gated. If
+        // the gated worker's own read stage swallowed the duplicate
+        // instead, the job stays stuck — both outcomes are legitimate
+        // "first completion wins" executions, settled below by opening
+        // the gate.
+        let grace = Instant::now() + Duration::from_secs(3);
+        while mgr.status(job) != JobStatus::Succeeded && Instant::now() < grace {
+            std::thread::sleep(Duration::from_millis(3));
+        }
+    } else {
+        // With speculation disabled, no amount of virtual lateness may
+        // produce a duplicate: the root's message stays the only one.
+        for _ in 0..40 {
+            clock.advance(Duration::from_millis(200));
+            std::thread::sleep(Duration::from_millis(2));
+            assert!(mgr.queue_len() <= 1, "speculated with spec_max=0");
+        }
+        assert_eq!(mgr.queue_len(), 1, "root message went missing");
+        assert!(matches!(mgr.status(job), JobStatus::Running { .. }));
+    }
+
+    gate.release();
+    let report = mgr.wait(job).unwrap();
+    let fetch = |m: &str, idx: &[i64]| mgr.tile(job, m, idx);
+    let l = collect_cholesky(&fetch, a.rows(), 8, grid).unwrap();
+    mgr.shutdown();
+    (report, l)
+}
+
+/// Unspeculated, ungated reference run of the same staging.
+fn run_reference(a: &Matrix) -> Matrix {
+    let mgr = JobManager::new(spec_cfg(0));
+    let (env, inputs, grid) = stage_cholesky(a, 8).unwrap();
+    let job = mgr
+        .submit(JobSpec::new(programs::cholesky_spec().program, env, inputs))
+        .unwrap();
+    mgr.wait(job).unwrap();
+    let fetch = |m: &str, idx: &[i64]| mgr.tile(job, m, idx);
+    let l = collect_cholesky(&fetch, a.rows(), 8, grid).unwrap();
+    mgr.shutdown();
+    l
+}
+
+#[test]
+fn speculative_duplicate_races_straggler_to_an_exact_output() {
+    let mut rng = Rng::new(0x5bec);
+    let a = Matrix::rand_spd(16, &mut rng);
+    let reference = run_reference(&a);
+
+    let (report, l) = run_gated(4, &a);
+    assert!(report.error.is_none(), "{:?}", report.error);
+    assert_eq!(report.completed, report.total_tasks);
+    // Speculation actually fired, and stayed within budget.
+    assert!(
+        (1..=4).contains(&report.spec_enqueued),
+        "spec_enqueued = {}",
+        report.spec_enqueued
+    );
+    // Exactly one output version: duplicates re-put bit-identical SSA
+    // tiles and only one finisher wins the completion CAS, so the
+    // factor matches the unspeculated run bit-for-bit.
+    assert_eq!(l.max_abs_diff(&reference), 0.0, "speculated run diverged");
+    assert!(l.matmul_nt(&l).max_abs_diff(&a) < 1e-8, "LLᵀ ≠ A");
+}
+
+#[test]
+fn spec_max_zero_never_speculates() {
+    let mut rng = Rng::new(0x5bec);
+    let a = Matrix::rand_spd(16, &mut rng);
+    let reference = run_reference(&a);
+
+    let (report, l) = run_gated(0, &a);
+    assert!(report.error.is_none(), "{:?}", report.error);
+    assert_eq!(report.completed, report.total_tasks);
+    assert_eq!(report.spec_enqueued, 0);
+    assert_eq!(l.max_abs_diff(&reference), 0.0);
+}
