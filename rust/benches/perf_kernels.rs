@@ -1,0 +1,236 @@
+//! §Perf — the blocked packed GEMM kernel family and the tile codec.
+//!
+//! Three questions, answered with numbers:
+//!
+//! * how fast is the compute fast path? — GFLOP/s of the blocked
+//!   packed GEMM against the naive sub-cutoff oracle at paper-relevant
+//!   tile sizes, **asserting** the blocked path strictly wins at every
+//!   size ≥ 512 (a kernel regression fails this bench, and CI runs it);
+//! * what do the routed kernels sustain? — syrk / trsm / qr_apply
+//!   GFLOP/s through `NativeKernels` with a reused worker scratch,
+//!   using the same flop model the engine's metrics use;
+//! * what does the wire cost? — tile codec encode/decode MB/s (the
+//!   bulk-copy format shared by the file blob store).
+//!
+//! Emits `BENCH_kernels.json` (uploaded as a CI artifact by the
+//! bench-smoke job; `NUMPYWREN_BENCH_QUICK=1` trims the grid).
+
+use numpywren::kernels::{kernel_flops, KernelExecutor, KernelScratch, NativeKernels};
+use numpywren::linalg::factor;
+use numpywren::linalg::gemm::{self, Scratch, Trans};
+use numpywren::linalg::matrix::Matrix;
+use numpywren::storage::codec;
+use numpywren::util::prng::Rng;
+use numpywren::util::timer::{bench_median, time_n};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn quick() -> bool {
+    std::env::var("NUMPYWREN_BENCH_QUICK").as_deref() == Ok("1")
+}
+
+/// Sizes where blocked and naive both run (the A/B comparison).
+fn ab_sizes() -> Vec<usize> {
+    if quick() {
+        vec![256, 512]
+    } else {
+        vec![256, 512, 1024]
+    }
+}
+
+/// Large sizes where only the blocked path runs (the naive loops
+/// would dominate the bench's wall clock for no extra information).
+fn blocked_only_sizes() -> Vec<usize> {
+    if quick() {
+        vec![]
+    } else {
+        vec![2048, 4096]
+    }
+}
+
+fn kernel_sizes() -> Vec<usize> {
+    if quick() {
+        vec![256, 512]
+    } else {
+        vec![256, 512, 1024]
+    }
+}
+
+fn codec_tile() -> usize {
+    if quick() {
+        512
+    } else {
+        1024
+    }
+}
+
+fn rand(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::randn(rows, cols, &mut rng)
+}
+
+/// Median GFLOP/s of `f`, whose one call performs `flops` flops.
+fn gflops_median(flops: u64, f: impl FnMut()) -> f64 {
+    let (_, med) = bench_median(Duration::from_millis(300), 7, f);
+    flops as f64 / med.max(1e-9) / 1e9
+}
+
+/// Single-shot GFLOP/s for the largest tiles (one run is already
+/// seconds of work; medians would triple the wall clock).
+fn gflops_once(flops: u64, f: impl FnMut()) -> f64 {
+    let (_, per) = time_n(1, f);
+    flops as f64 / per.as_secs_f64().max(1e-9) / 1e9
+}
+
+struct AbRow {
+    n: usize,
+    blocked: f64,
+    naive: f64,
+}
+
+struct KernelRow {
+    kernel: &'static str,
+    n: usize,
+    gflops: f64,
+}
+
+fn main() {
+    println!(
+        "# §Perf kernels — blocked packed GEMM vs naive oracle, sizes {:?} (+{:?} blocked-only)",
+        ab_sizes(),
+        blocked_only_sizes()
+    );
+
+    // --- GEMM A/B: blocked vs naive ---
+    let mut sc = Scratch::new();
+    let mut ab = Vec::new();
+    for n in ab_sizes() {
+        let a = rand(n, n, 0xA0 + n as u64);
+        let b = rand(n, n, 0xB0 + n as u64);
+        let flops = 2 * (n as u64).pow(3);
+        let blocked = gflops_median(flops, || {
+            let c = gemm::product_blocked(&a, Trans::N, &b, Trans::N, &mut sc);
+            assert_eq!(c.rows(), n);
+        });
+        let naive = gflops_median(flops, || {
+            let c = gemm::product_naive(&a, Trans::N, &b, Trans::N);
+            assert_eq!(c.rows(), n);
+        });
+        println!(
+            "gemm {n:>5}: blocked {blocked:>7.2} GF/s  naive {naive:>7.2} GF/s  ({:.2}x)",
+            blocked / naive.max(1e-9)
+        );
+        if n >= 512 {
+            assert!(
+                blocked > naive,
+                "REGRESSION: blocked GEMM ({blocked:.2} GF/s) is not faster than the \
+                 naive loops ({naive:.2} GF/s) at n={n}"
+            );
+        }
+        ab.push(AbRow { n, blocked, naive });
+    }
+
+    let mut blocked_only = Vec::new();
+    for n in blocked_only_sizes() {
+        let a = rand(n, n, 0xC0 + n as u64);
+        let b = rand(n, n, 0xD0 + n as u64);
+        let flops = 2 * (n as u64).pow(3);
+        let gf = gflops_once(flops, || {
+            let c = gemm::product_blocked(&a, Trans::N, &b, Trans::N, &mut sc);
+            assert_eq!(c.rows(), n);
+        });
+        println!("gemm {n:>5}: blocked {gf:>7.2} GF/s  (naive skipped at this size)");
+        blocked_only.push((n, gf));
+    }
+    drop(sc);
+
+    // --- Routed kernels through NativeKernels + reused worker scratch ---
+    let nk = NativeKernels;
+    let mut ws = KernelScratch::default();
+    let mut kernels = Vec::new();
+    for n in kernel_sizes() {
+        let spd = {
+            let mut rng = Rng::new(0xE0 + n as u64);
+            Matrix::rand_spd(n, &mut rng)
+        };
+        let l = Arc::new(factor::cholesky(&spd).unwrap());
+        let s_tile = Arc::new(rand(n, n, 1 + n as u64));
+        let lk = Arc::new(rand(n, n, 2 + n as u64));
+        let ll = Arc::new(rand(n, n, 3 + n as u64));
+        let t = Arc::new(rand(n, n, 4 + n as u64));
+        let s2 = Arc::new(rand(n, n, 5 + n as u64));
+        // qr_apply only multiplies by V — orthogonality is irrelevant
+        // to throughput, so a random 2n×2n stands in for the full Q.
+        let v = Arc::new(rand(2 * n, 2 * n, 6 + n as u64));
+
+        let legs: [(&'static str, Vec<Arc<Matrix>>); 3] = [
+            ("syrk", vec![s_tile.clone(), lk.clone(), ll.clone()]),
+            ("trsm", vec![l.clone(), s_tile.clone()]),
+            ("qr_apply", vec![t.clone(), s2.clone(), v.clone()]),
+        ];
+        for (kernel, inputs) in legs {
+            let flops = kernel_flops(kernel, n as u64);
+            let gflops = gflops_median(flops, || {
+                let out = nk.execute_with_scratch(kernel, &inputs, &[], &mut ws).unwrap();
+                assert!(!out.is_empty());
+            });
+            println!("{kernel:>9} {n:>5}: {gflops:>7.2} GF/s (model flops)");
+            kernels.push(KernelRow { kernel, n, gflops });
+        }
+    }
+
+    // --- Tile codec MB/s ---
+    let n = codec_tile();
+    let tile = rand(n, n, 0xCDEC);
+    let payload_mb = (n * n * 8) as f64 / 1e6;
+    let mut buf = Vec::new();
+    let (_, enc_med) = bench_median(Duration::from_millis(200), 15, || {
+        codec::encode_into(&tile, &mut buf);
+    });
+    let decoded = codec::decode(&buf, "bench").unwrap();
+    assert_eq!(decoded, tile, "codec roundtrip must be bit-exact");
+    let (_, dec_med) = bench_median(Duration::from_millis(200), 15, || {
+        let m = codec::decode(&buf, "bench").unwrap();
+        assert_eq!(m.rows(), n);
+    });
+    let enc_mbs = payload_mb / enc_med.max(1e-9);
+    let dec_mbs = payload_mb / dec_med.max(1e-9);
+    println!("codec {n}x{n}: encode {enc_mbs:.0} MB/s  decode {dec_mbs:.0} MB/s");
+
+    // --- Hand-rolled JSON (no serde in the offline crate set) ---
+    let mut json = String::from("{\n  \"bench\": \"perf_kernels\",\n  \"gemm\": [\n");
+    for (i, r) in ab.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"n\": {}, \"blocked_gflops\": {:.3}, \"naive_gflops\": {:.3}, \
+             \"speedup\": {:.3}}}{}\n",
+            r.n,
+            r.blocked,
+            r.naive,
+            r.blocked / r.naive.max(1e-9),
+            if i + 1 == ab.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n  \"gemm_blocked_only\": [\n");
+    for (i, (n, gf)) in blocked_only.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"n\": {n}, \"blocked_gflops\": {gf:.3}}}{}\n",
+            if i + 1 == blocked_only.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n  \"kernels\": [\n");
+    for (i, r) in kernels.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"n\": {}, \"gflops\": {:.3}}}{}\n",
+            r.kernel,
+            r.n,
+            r.gflops,
+            if i + 1 == kernels.len() { "" } else { "," }
+        ));
+    }
+    json.push_str(&format!(
+        "  ],\n  \"codec\": {{\"tile\": {n}, \"encode_mb_per_sec\": {enc_mbs:.1}, \
+         \"decode_mb_per_sec\": {dec_mbs:.1}}}\n}}\n"
+    ));
+    std::fs::write("BENCH_kernels.json", &json).expect("write BENCH_kernels.json");
+    println!("# wrote BENCH_kernels.json");
+}

@@ -32,6 +32,7 @@
 
 use crate::executor::lease::{LeaseRegistry, LeaseRenewer};
 use crate::executor::{propagate, FleetContext, JobContext};
+use crate::kernels::KernelScratch;
 use crate::lambdapack::analysis::ConcreteTask;
 use crate::lambdapack::interp::Node;
 use crate::linalg::matrix::Matrix;
@@ -384,6 +385,10 @@ fn compute_stage(
     work_rx: Receiver<WorkItem>,
     done_tx: SyncSender<DoneItem>,
 ) {
+    // One GEMM pack scratch per worker, reused for every kernel this
+    // stage ever runs: buffers grow to the blocking high-water mark
+    // once, then steady-state tasks allocate nothing.
+    let mut scratch = KernelScratch::default();
     for item in work_rx {
         let killed = kill.load(Ordering::SeqCst);
         let mut done = DoneItem {
@@ -399,7 +404,12 @@ fn compute_stage(
             bytes_read: item.bytes_read,
         };
         if !killed && !item.skip {
-            match fleet.kernels.execute(&done.task.fn_name, &item.inputs, &done.task.scalars) {
+            match fleet.kernels.execute_with_scratch(
+                &done.task.fn_name,
+                &item.inputs,
+                &done.task.scalars,
+                &mut scratch,
+            ) {
                 Ok(outs) => {
                     done.flops = fleet.kernels.flops(&done.task.fn_name, &item.inputs);
                     done.outputs = outs;

@@ -4,12 +4,21 @@
 //! Every LAmbdaPACK kernel name maps to a tile operation. Two
 //! implementations live behind [`KernelExecutor`]:
 //!
-//! * [`NativeKernels`] — pure-Rust f64 oracle (this module), always
-//!   available, used by tests, small runs, and as the numeric ground
-//!   truth;
-//! * [`crate::runtime::PjrtKernels`] — the production path: AOT-lowered
-//!   JAX/Pallas HLO artifacts executed on the PJRT CPU client, with
-//!   native fallback for kernels/shapes without artifacts.
+//! * [`NativeKernels`] — the pure-Rust f64 production path: every
+//!   O(n³) kernel routes through the cache-blocked packed
+//!   [`gemm`](crate::linalg::gemm) fast path, with the original naive
+//!   loops kept as the sub-cutoff oracle. Deterministic (bit-identical
+//!   run-to-run — the SSA duplicate machinery depends on it) and
+//!   always available.
+//! * [`crate::runtime::PjrtKernels`] — optional AOT-lowered
+//!   JAX/Pallas HLO artifacts executed on the PJRT CPU client (f32),
+//!   with native fallback for kernels/shapes without artifacts.
+//!
+//! Executors take kernel calls either through [`KernelExecutor::execute`]
+//! (borrows a thread-local pack scratch) or
+//! [`KernelExecutor::execute_with_scratch`] (an explicit per-worker
+//! [`KernelScratch`] the compute stage reuses across tasks, so
+//! steady-state kernels allocate nothing).
 //!
 //! ## Kernel semantics
 //!
@@ -37,9 +46,14 @@
 //! | `lq_apply1` | W, P | W·Pᵀ (diagonal-block P applied to one tile) |
 
 use crate::linalg::factor;
+use crate::linalg::gemm::{self, Acc, Trans};
 use crate::linalg::matrix::Matrix;
 use anyhow::{bail, Result};
 use std::sync::Arc;
+
+/// Reusable GEMM pack-buffer scratch, re-exported for executor call
+/// sites (one per worker thread in the compute stage).
+pub use crate::linalg::gemm::Scratch as KernelScratch;
 
 /// Executes a named kernel over tile inputs.
 pub trait KernelExecutor: Send + Sync {
@@ -49,6 +63,22 @@ pub trait KernelExecutor: Send + Sync {
         inputs: &[Arc<Matrix>],
         scalars: &[f64],
     ) -> Result<Vec<Matrix>>;
+
+    /// [`KernelExecutor::execute`] with a caller-owned scratch handle.
+    /// Long-lived callers (the worker compute stage) pass one scratch
+    /// per worker so pack buffers are reused across tasks; the default
+    /// simply ignores the handle and defers to `execute`, which keeps
+    /// test doubles that only implement `execute` working unchanged.
+    fn execute_with_scratch(
+        &self,
+        fn_name: &str,
+        inputs: &[Arc<Matrix>],
+        scalars: &[f64],
+        scratch: &mut KernelScratch,
+    ) -> Result<Vec<Matrix>> {
+        let _ = scratch;
+        self.execute(fn_name, inputs, scalars)
+    }
 
     /// Approximate floating-point work of one invocation (for flop-rate
     /// metrics and the simulator's cost model).
@@ -81,7 +111,8 @@ pub fn kernel_flops(fn_name: &str, b: u64) -> u64 {
     }
 }
 
-/// The native f64 oracle implementation.
+/// The native f64 implementation — the production compute path,
+/// routed through the cache-blocked packed GEMM above its cutoff.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct NativeKernels;
 
@@ -114,7 +145,30 @@ impl KernelExecutor for NativeKernels {
         &self,
         fn_name: &str,
         inputs: &[Arc<Matrix>],
+        scalars: &[f64],
+    ) -> Result<Vec<Matrix>> {
+        gemm::with_tls_scratch(|sc| self.run(fn_name, inputs, scalars, sc))
+    }
+
+    fn execute_with_scratch(
+        &self,
+        fn_name: &str,
+        inputs: &[Arc<Matrix>],
+        scalars: &[f64],
+        scratch: &mut KernelScratch,
+    ) -> Result<Vec<Matrix>> {
+        self.run(fn_name, inputs, scalars, scratch)
+    }
+}
+
+impl NativeKernels {
+    /// The dispatch body shared by both `execute` entry points.
+    fn run(
+        &self,
+        fn_name: &str,
+        inputs: &[Arc<Matrix>],
         _scalars: &[f64],
+        sc: &mut KernelScratch,
     ) -> Result<Vec<Matrix>> {
         let need = |n: usize| -> Result<()> {
             if inputs.len() != n {
@@ -129,24 +183,25 @@ impl KernelExecutor for NativeKernels {
             }
             "trsm" => {
                 need(2)?;
-                vec![factor::trsm_right_lt(&inputs[0], &inputs[1])?]
+                vec![factor::trsm_right_lt_ws(&inputs[0], &inputs[1], sc)?]
             }
             "syrk" => {
                 need(3)?;
-                vec![factor::syrk_update(&inputs[0], &inputs[1], &inputs[2])?]
+                vec![factor::syrk_update_ws(&inputs[0], &inputs[1], &inputs[2], sc)?]
             }
             "gemm_kernel" => {
                 need(2)?;
-                vec![factor::gemm(&inputs[0], &inputs[1])?]
+                vec![factor::gemm_ws(&inputs[0], &inputs[1], sc)?]
             }
             "gemm_accum" => {
                 need(3)?;
-                vec![factor::gemm_accum(&inputs[0], &inputs[1], &inputs[2])?]
+                vec![factor::gemm_accum_ws(&inputs[0], &inputs[1], &inputs[2], sc)?]
             }
             "gemm_sub" => {
                 need(3)?;
-                let prod = inputs[1].matmul(&inputs[2]);
-                vec![&*inputs[0] - &prod]
+                let mut out = (*inputs[0]).clone();
+                gemm::gemm_into(&mut out, &inputs[1], Trans::N, &inputs[2], Trans::N, Acc::Sub, sc);
+                vec![out]
             }
             "copy" => {
                 need(1)?;
@@ -176,7 +231,7 @@ impl KernelExecutor for NativeKernels {
                 let (t, s, v) = (&inputs[0], &inputs[1], &inputs[2]);
                 let stacked = Self::vstack(t, s)?;
                 // [T'; S'] = Vᵀ · [T; S].
-                let updated = v.matmul_tn(&stacked);
+                let updated = gemm::product(v, Trans::T, &stacked, Trans::N, sc);
                 let top = updated.window(0, 0, t.rows(), t.cols());
                 let bot = updated.window(t.rows(), 0, s.rows(), s.cols());
                 vec![top, bot]
@@ -184,13 +239,13 @@ impl KernelExecutor for NativeKernels {
             "qr_apply1" => {
                 need(2)?;
                 // Vᵀ·S with V the diagonal block's full Q.
-                vec![inputs[1].matmul_tn(&inputs[0])]
+                vec![gemm::product(&inputs[1], Trans::T, &inputs[0], Trans::N, sc)]
             }
             "lq_apply1" => {
                 need(2)?;
                 // W·Pᵀ with P the diagonal block's full row-orthogonal
                 // factor.
-                vec![inputs[0].matmul_nt(&inputs[1])]
+                vec![gemm::product(&inputs[0], Trans::N, &inputs[1], Trans::T, sc)]
             }
             "lu_block" => {
                 need(1)?;
@@ -199,11 +254,11 @@ impl KernelExecutor for NativeKernels {
             }
             "trsm_lower" => {
                 need(2)?;
-                vec![factor::trsm_left_lower(&inputs[0], &inputs[1])?]
+                vec![factor::trsm_left_lower_ws(&inputs[0], &inputs[1], sc)?]
             }
             "trsm_upper" => {
                 need(2)?;
-                vec![factor::trsm_right_upper(&inputs[0], &inputs[1])?]
+                vec![factor::trsm_right_upper_ws(&inputs[0], &inputs[1], sc)?]
             }
             "lq_block" => {
                 need(1)?;
@@ -222,7 +277,7 @@ impl KernelExecutor for NativeKernels {
                 let (u, w, p) = (&inputs[0], &inputs[1], &inputs[2]);
                 let wide = Self::hstack(u, w)?;
                 // [U' S'] = [U W] · Pᵀ.
-                let updated = wide.matmul_nt(p);
+                let updated = gemm::product(&wide, Trans::N, p, Trans::T, sc);
                 let left = updated.window(0, 0, u.rows(), u.cols());
                 let right = updated.window(0, u.cols(), w.rows(), w.cols());
                 vec![left, right]

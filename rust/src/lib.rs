@@ -54,10 +54,12 @@
 //! * [`runtime`] — the PJRT execution path: loads AOT-compiled HLO-text
 //!   artifacts (produced once by `python/compile/aot.py` from JAX +
 //!   Pallas kernels) and serves kernel calls from compiled executables.
-//! * [`kernels`] — kernel dispatch: native f64 oracle implementations
-//!   and the PJRT f32 hot path behind one trait.
+//! * [`kernels`] — kernel dispatch: the blocked native f64 production
+//!   path (with per-worker scratch reuse) and the PJRT f32 path behind
+//!   one trait.
 //! * [`linalg`] — the dense linear-algebra substrate (matrices, blocked
-//!   partitioning, reference factorizations).
+//!   partitioning, factorizations, and the cache-blocked packed GEMM
+//!   engine in [`linalg::gemm`]).
 //! * [`sim`] — a discrete-event simulator with a calibrated cost model
 //!   used to regenerate the paper-scale experiments (256K–1M matrices,
 //!   180–1800 cores).

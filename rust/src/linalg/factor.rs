@@ -1,15 +1,27 @@
-//! Native (oracle / fallback) factorization kernels.
+//! Native factorization kernels — the f64 production path.
 //!
 //! These are the per-tile BLAS/LAPACK-shaped operations the paper's
 //! LAmbdaPACK programs call: `chol`, `trsm`, `syrk`, `gemm`,
 //! `qr_factor`, plus forward/backward substitution used by the
-//! `cholesky_solve` example. The PJRT path (AOT-compiled JAX/Pallas)
-//! is the production route; these f64 versions are the correctness
-//! oracle it is cross-checked against, and the fallback when no
-//! artifacts are built.
+//! `cholesky_solve` example. Every O(n³) piece routes through the
+//! cache-blocked packed [`gemm`](crate::linalg::gemm) fast path: the
+//! GEMM-shaped kernels directly, and the triangular solves as
+//! panel-recurrence + GEMM trailing updates (panel width
+//! `TRSM_NB`). Each kernel has a `*_ws` variant taking an explicit
+//! [`Scratch`] handle so the worker compute stage reuses one pack
+//! buffer across tasks; the plain names borrow a thread-local scratch.
+//! The optional PJRT route (AOT-compiled JAX/Pallas, f32) is
+//! cross-checked against these.
 
+use crate::linalg::gemm::{self, Acc, Dims, Scratch, Trans, View};
 use crate::linalg::matrix::Matrix;
 use anyhow::{bail, Result};
+
+/// Panel width for the blocked triangular solves. The in-panel
+/// recurrence stays unblocked (it is O(rows·NB²)); everything past the
+/// panel is a GEMM trailing update. At `n ≤ TRSM_NB` the whole solve
+/// is one panel and runs the original recurrence bit-identically.
+const TRSM_NB: usize = 64;
 
 /// Unblocked right-looking Cholesky of an SPD tile: A = L Lᵀ, returns L
 /// (lower triangular).
@@ -44,75 +56,172 @@ pub fn cholesky(a: &Matrix) -> Result<Matrix> {
 /// given the diagonal factor `l` (lower triangular) and a panel tile
 /// `a` = A_ij, compute X = A L^{-T}, i.e. solve X Lᵀ = A.
 pub fn trsm_right_lt(l: &Matrix, a: &Matrix) -> Result<Matrix> {
+    gemm::with_tls_scratch(|sc| trsm_right_lt_ws(l, a, sc))
+}
+
+/// [`trsm_right_lt`] with an explicit GEMM scratch handle.
+pub fn trsm_right_lt_ws(l: &Matrix, a: &Matrix, sc: &mut Scratch) -> Result<Matrix> {
     let n = l.rows();
     if l.cols() != n || a.cols() != n {
         bail!("trsm: shape mismatch l={:?} a={:?}", l.shape(), a.shape());
     }
     let m = a.rows();
     let mut x = a.clone();
-    // Solve X Lᵀ = A column-block by column: Lᵀ upper triangular, so
-    // x[:, j] = (a[:, j] - Σ_{k<j} x[:, k]·Lᵀ[k, j]) / Lᵀ[j, j]
-    //         = (a[:, j] - Σ_{k<j} x[:, k]·l[j, k]) / l[j, j].
-    for j in 0..n {
-        let d = l[(j, j)];
-        if d == 0.0 {
-            bail!("trsm: singular triangular factor at {j}");
-        }
-        for i in 0..m {
-            let mut s = x[(i, j)];
-            for k in 0..j {
-                s -= x[(i, k)] * l[(j, k)];
+    // Solve X Lᵀ = A by column panels: within a panel, the original
+    // column recurrence (Lᵀ upper triangular, so
+    // x[:, j] = (x[:, j] - Σ_{j0≤k<j} x[:, k]·l[j, k]) / l[j, j]);
+    // then fold the solved panel into every column to its right with
+    // one GEMM: X[:, j1..] -= X[:, j0..j1] · L[j1.., j0..j1]ᵀ.
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + TRSM_NB).min(n);
+        for j in j0..j1 {
+            let d = l[(j, j)];
+            if d == 0.0 {
+                bail!("trsm: singular triangular factor at {j}");
             }
-            x[(i, j)] = s / d;
+            for i in 0..m {
+                let mut s = x[(i, j)];
+                for k in j0..j {
+                    s -= x[(i, k)] * l[(j, k)];
+                }
+                x[(i, j)] = s / d;
+            }
         }
+        if j1 < n {
+            let nb = j1 - j0;
+            // Stage the solved panel in scratch so the trailing GEMM
+            // can borrow the destination rows mutably.
+            let mut panel = std::mem::take(&mut sc.panel);
+            panel.clear();
+            panel.reserve(m * nb);
+            for i in 0..m {
+                panel.extend_from_slice(&x.row(i)[j0..j1]);
+            }
+            let pv = View {
+                data: &panel,
+                ld: nb,
+                trans: Trans::N,
+            };
+            let lv = View {
+                data: &l.data()[j1 * n + j0..],
+                ld: n,
+                trans: Trans::T,
+            };
+            let d = Dims { m, n: n - j1, k: nb };
+            gemm::gemm_view(&mut x.data_mut()[j1..], n, d, pv, lv, Acc::Sub, sc);
+            sc.panel = panel;
+        }
+        j0 = j1;
     }
     Ok(x)
 }
 
 /// Left lower-triangular solve: solve L X = B.
 pub fn trsm_left_lower(l: &Matrix, b: &Matrix) -> Result<Matrix> {
+    gemm::with_tls_scratch(|sc| trsm_left_lower_ws(l, b, sc))
+}
+
+/// [`trsm_left_lower`] with an explicit GEMM scratch handle.
+pub fn trsm_left_lower_ws(l: &Matrix, b: &Matrix, sc: &mut Scratch) -> Result<Matrix> {
     let n = l.rows();
     if l.cols() != n || b.rows() != n {
         bail!("trsm_left: shape mismatch");
     }
     let w = b.cols();
     let mut x = b.clone();
-    for i in 0..n {
-        let d = l[(i, i)];
-        if d == 0.0 {
-            bail!("trsm_left: singular at {i}");
-        }
-        for j in 0..w {
-            let mut s = x[(i, j)];
-            for k in 0..i {
-                s -= l[(i, k)] * x[(k, j)];
+    // Forward row-panel sweep; the trailing rows take one GEMM:
+    // X[i1.., :] -= L[i1.., i0..i1] · X[i0..i1, :].
+    let mut i0 = 0;
+    while i0 < n {
+        let i1 = (i0 + TRSM_NB).min(n);
+        for i in i0..i1 {
+            let d = l[(i, i)];
+            if d == 0.0 {
+                bail!("trsm_left: singular at {i}");
             }
-            x[(i, j)] = s / d;
+            for j in 0..w {
+                let mut s = x[(i, j)];
+                for k in i0..i {
+                    s -= l[(i, k)] * x[(k, j)];
+                }
+                x[(i, j)] = s / d;
+            }
         }
+        if i1 < n {
+            let nb = i1 - i0;
+            // Solved rows and trailing rows are disjoint: split.
+            let (head, tail) = x.data_mut().split_at_mut(i1 * w);
+            let lv = View {
+                data: &l.data()[i1 * n + i0..],
+                ld: n,
+                trans: Trans::N,
+            };
+            let pv = View {
+                data: &head[i0 * w..],
+                ld: w,
+                trans: Trans::N,
+            };
+            let d = Dims {
+                m: n - i1,
+                n: w,
+                k: nb,
+            };
+            gemm::gemm_view(tail, w, d, lv, pv, Acc::Sub, sc);
+        }
+        i0 = i1;
     }
     Ok(x)
 }
 
 /// Left upper-triangular solve: solve U X = B.
 pub fn trsm_left_upper(u: &Matrix, b: &Matrix) -> Result<Matrix> {
+    gemm::with_tls_scratch(|sc| trsm_left_upper_ws(u, b, sc))
+}
+
+/// [`trsm_left_upper`] with an explicit GEMM scratch handle.
+pub fn trsm_left_upper_ws(u: &Matrix, b: &Matrix, sc: &mut Scratch) -> Result<Matrix> {
     let n = u.rows();
     if u.cols() != n || b.rows() != n {
         bail!("trsm_left_upper: shape mismatch");
     }
     let w = b.cols();
     let mut x = b.clone();
-    for i in (0..n).rev() {
-        let d = u[(i, i)];
-        if d == 0.0 {
-            bail!("trsm_left_upper: singular at {i}");
-        }
-        for j in 0..w {
-            let mut s = x[(i, j)];
-            for k in (i + 1)..n {
-                s -= u[(i, k)] * x[(k, j)];
+    // Backward row-panel sweep; each solved panel is folded into every
+    // row above it: X[..i0, :] -= U[..i0, i0..i1] · X[i0..i1, :].
+    let mut i1 = n;
+    while i1 > 0 {
+        let i0 = i1.saturating_sub(TRSM_NB);
+        for i in (i0..i1).rev() {
+            let d = u[(i, i)];
+            if d == 0.0 {
+                bail!("trsm_left_upper: singular at {i}");
             }
-            x[(i, j)] = s / d;
+            for j in 0..w {
+                let mut s = x[(i, j)];
+                for k in (i + 1)..i1 {
+                    s -= u[(i, k)] * x[(k, j)];
+                }
+                x[(i, j)] = s / d;
+            }
         }
+        if i0 > 0 {
+            let nb = i1 - i0;
+            let (head, tail) = x.data_mut().split_at_mut(i0 * w);
+            let uv = View {
+                data: &u.data()[i0..],
+                ld: n,
+                trans: Trans::N,
+            };
+            let pv = View {
+                data: &tail[..nb * w],
+                ld: w,
+                trans: Trans::N,
+            };
+            let d = Dims { m: i0, n: w, k: nb };
+            gemm::gemm_view(head, w, d, uv, pv, Acc::Sub, sc);
+        }
+        i1 = i0;
     }
     Ok(x)
 }
@@ -120,6 +229,11 @@ pub fn trsm_left_upper(u: &Matrix, b: &Matrix) -> Result<Matrix> {
 /// The trailing-update kernel (the paper's `syrk`, line 8 of Alg. 1):
 /// S' = S − L_kj · L_ljᵀ. This is the O(N³) hot spot.
 pub fn syrk_update(s: &Matrix, lk: &Matrix, ll: &Matrix) -> Result<Matrix> {
+    gemm::with_tls_scratch(|sc| syrk_update_ws(s, lk, ll, sc))
+}
+
+/// [`syrk_update`] with an explicit GEMM scratch handle.
+pub fn syrk_update_ws(s: &Matrix, lk: &Matrix, ll: &Matrix, sc: &mut Scratch) -> Result<Matrix> {
     if lk.cols() != ll.cols() || s.rows() != lk.rows() || s.cols() != ll.rows() {
         bail!(
             "syrk: shape mismatch s={:?} lk={:?} ll={:?}",
@@ -128,25 +242,38 @@ pub fn syrk_update(s: &Matrix, lk: &Matrix, ll: &Matrix) -> Result<Matrix> {
             ll.shape()
         );
     }
-    let prod = lk.matmul_nt(ll);
-    Ok(s - &prod)
+    let mut out = s.clone();
+    gemm::gemm_into(&mut out, lk, Trans::N, ll, Trans::T, Acc::Sub, sc);
+    Ok(out)
 }
 
 /// Plain tile GEMM: C = A · B.
 pub fn gemm(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    gemm::with_tls_scratch(|sc| gemm_ws(a, b, sc))
+}
+
+/// [`gemm`] with an explicit GEMM scratch handle.
+pub fn gemm_ws(a: &Matrix, b: &Matrix, sc: &mut Scratch) -> Result<Matrix> {
     if a.cols() != b.rows() {
         bail!("gemm: inner-dim mismatch {:?} {:?}", a.shape(), b.shape());
     }
-    Ok(a.matmul(b))
+    Ok(gemm::product(a, Trans::N, b, Trans::N, sc))
 }
 
 /// Accumulating GEMM: C' = C + A · B (the reduction step of the tiled
 /// matrix-multiply program).
 pub fn gemm_accum(c: &Matrix, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    gemm::with_tls_scratch(|sc| gemm_accum_ws(c, a, b, sc))
+}
+
+/// [`gemm_accum`] with an explicit GEMM scratch handle.
+pub fn gemm_accum_ws(c: &Matrix, a: &Matrix, b: &Matrix, sc: &mut Scratch) -> Result<Matrix> {
     if a.cols() != b.rows() || c.rows() != a.rows() || c.cols() != b.cols() {
         bail!("gemm_accum: shape mismatch");
     }
-    Ok(c + &a.matmul(b))
+    let mut out = c.clone();
+    gemm::gemm_into(&mut out, a, Trans::N, b, Trans::N, Acc::Add, sc);
+    Ok(out)
 }
 
 /// Householder QR of a (possibly tall) tile. Returns (Q, R) with
@@ -293,25 +420,59 @@ pub fn qr_full(a: &Matrix) -> Result<(Matrix, Matrix)> {
 /// Right upper-triangular solve: X U = B → X = B U⁻¹ (used by block
 /// LU's column-panel update).
 pub fn trsm_right_upper(u: &Matrix, b: &Matrix) -> Result<Matrix> {
+    gemm::with_tls_scratch(|sc| trsm_right_upper_ws(u, b, sc))
+}
+
+/// [`trsm_right_upper`] with an explicit GEMM scratch handle.
+pub fn trsm_right_upper_ws(u: &Matrix, b: &Matrix, sc: &mut Scratch) -> Result<Matrix> {
     let n = u.rows();
     if u.cols() != n || b.cols() != n {
         bail!("trsm_right_upper: shape mismatch");
     }
     let m = b.rows();
     let mut x = b.clone();
-    // x[:, j] = (b[:, j] - Σ_{k<j} x[:, k] u[k, j]) / u[j, j].
-    for j in 0..n {
-        let d = u[(j, j)];
-        if d == 0.0 {
-            bail!("trsm_right_upper: singular at {j}");
-        }
-        for i in 0..m {
-            let mut s = x[(i, j)];
-            for k in 0..j {
-                s -= x[(i, k)] * u[(k, j)];
+    // Column-panel sweep: in-panel recurrence
+    // x[:, j] = (x[:, j] - Σ_{j0≤k<j} x[:, k] u[k, j]) / u[j, j],
+    // then X[:, j1..] -= X[:, j0..j1] · U[j0..j1, j1..].
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + TRSM_NB).min(n);
+        for j in j0..j1 {
+            let d = u[(j, j)];
+            if d == 0.0 {
+                bail!("trsm_right_upper: singular at {j}");
             }
-            x[(i, j)] = s / d;
+            for i in 0..m {
+                let mut s = x[(i, j)];
+                for k in j0..j {
+                    s -= x[(i, k)] * u[(k, j)];
+                }
+                x[(i, j)] = s / d;
+            }
         }
+        if j1 < n {
+            let nb = j1 - j0;
+            let mut panel = std::mem::take(&mut sc.panel);
+            panel.clear();
+            panel.reserve(m * nb);
+            for i in 0..m {
+                panel.extend_from_slice(&x.row(i)[j0..j1]);
+            }
+            let pv = View {
+                data: &panel,
+                ld: nb,
+                trans: Trans::N,
+            };
+            let uv = View {
+                data: &u.data()[j0 * n + j1..],
+                ld: n,
+                trans: Trans::N,
+            };
+            let d = Dims { m, n: n - j1, k: nb };
+            gemm::gemm_view(&mut x.data_mut()[j1..], n, d, pv, uv, Acc::Sub, sc);
+            sc.panel = panel;
+        }
+        j0 = j1;
     }
     Ok(x)
 }

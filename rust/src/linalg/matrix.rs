@@ -6,9 +6,15 @@
 //! in [`crate::linalg::factor`]; this type is the shared container plus
 //! the basic BLAS-1/3 operations the engine and tests need.
 
+use crate::linalg::gemm::{self, Trans};
 use crate::util::prng::Rng;
 use std::fmt;
 use std::ops::{Add, Index, IndexMut, Mul, Sub};
+
+/// Edge length of the square tiles the blocked [`Matrix::transpose`]
+/// swaps through: a 32×32 f64 tile is 8 KiB, two of which sit in L1
+/// while rows of one and columns of the other stream.
+const TRANSPOSE_TB: usize = 32;
 
 /// Dense row-major matrix of `f64`.
 #[derive(Clone, PartialEq)]
@@ -100,19 +106,80 @@ impl Matrix {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
-    /// Transpose.
+    /// Transpose (cache-blocked: `TRANSPOSE_TB`-square tiles so both
+    /// the row-major read and the column-strided write stay in L1).
     pub fn transpose(&self) -> Matrix {
-        let mut t = Matrix::zeros(self.cols, self.rows);
-        for i in 0..self.rows {
-            for j in 0..self.cols {
-                t[(j, i)] = self[(i, j)];
+        let (r, c) = (self.rows, self.cols);
+        let mut t = Matrix::zeros(c, r);
+        let mut i0 = 0;
+        while i0 < r {
+            let ih = TRANSPOSE_TB.min(r - i0);
+            let mut j0 = 0;
+            while j0 < c {
+                let jw = TRANSPOSE_TB.min(c - j0);
+                for di in 0..ih {
+                    let src = &self.data[(i0 + di) * c + j0..(i0 + di) * c + j0 + jw];
+                    for (dj, v) in src.iter().enumerate() {
+                        t.data[(j0 + dj) * r + i0 + di] = *v;
+                    }
+                }
+                j0 += TRANSPOSE_TB;
             }
+            i0 += TRANSPOSE_TB;
         }
         t
     }
 
-    /// `self @ other` (ikj loop order, cache-friendly for row major).
+    /// `self @ other`: blocked packed path above the
+    /// [`gemm::CUTOFF`] minimum dimension, [`Matrix::matmul_naive`]
+    /// below it.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        if gemm::use_blocked(gemm::Dims {
+            m: self.rows,
+            n: other.cols,
+            k: self.cols,
+        }) {
+            gemm::with_tls_scratch(|s| gemm::product_blocked(self, Trans::N, other, Trans::N, s))
+        } else {
+            self.matmul_naive(other)
+        }
+    }
+
+    /// `self @ otherᵀ` without materializing the transpose (blocked
+    /// above the cutoff — the packing stage absorbs the transposed
+    /// access pattern).
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        if gemm::use_blocked(gemm::Dims {
+            m: self.rows,
+            n: other.rows,
+            k: self.cols,
+        }) {
+            gemm::with_tls_scratch(|s| gemm::product_blocked(self, Trans::N, other, Trans::T, s))
+        } else {
+            self.matmul_nt_naive(other)
+        }
+    }
+
+    /// `selfᵀ @ other` (blocked above the cutoff).
+    pub fn matmul_tn(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
+        if gemm::use_blocked(gemm::Dims {
+            m: self.cols,
+            n: other.cols,
+            k: self.rows,
+        }) {
+            gemm::with_tls_scratch(|s| gemm::product_blocked(self, Trans::T, other, Trans::N, s))
+        } else {
+            self.matmul_tn_naive(other)
+        }
+    }
+
+    /// `self @ other` — the original unblocked loops (ikj order,
+    /// cache-friendly for row major), kept verbatim as the
+    /// sub-cutoff path and the equivalence-test oracle.
+    pub fn matmul_naive(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut c = Matrix::zeros(m, n);
@@ -132,8 +199,9 @@ impl Matrix {
         c
     }
 
-    /// `self @ otherᵀ` without materializing the transpose.
-    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+    /// `self @ otherᵀ` — the original dot-product loops (sub-cutoff
+    /// path, equivalence-test oracle).
+    pub fn matmul_nt_naive(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.rows);
         let mut c = Matrix::zeros(m, n);
@@ -151,8 +219,9 @@ impl Matrix {
         c
     }
 
-    /// `selfᵀ @ other`.
-    pub fn matmul_tn(&self, other: &Matrix) -> Matrix {
+    /// `selfᵀ @ other` — the original pkij loops (sub-cutoff path,
+    /// equivalence-test oracle).
+    pub fn matmul_tn_naive(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
         let (m, k, n) = (self.cols, self.rows, other.cols);
         let mut c = Matrix::zeros(m, n);
@@ -337,6 +406,23 @@ mod tests {
         let c = Matrix::randn(4, 6, &mut rng);
         let via_t2 = a.transpose().matmul(&c);
         assert!(a.matmul_tn(&c).max_abs_diff(&via_t2) < 1e-12);
+    }
+
+    #[test]
+    fn transpose_blocked_odd_shapes() {
+        let mut rng = Rng::new(7);
+        // Straddle tile boundaries: 33, 64, and sub-tile shapes.
+        for (r, c) in [(33, 65), (64, 64), (1, 10), (10, 1), (0, 5), (70, 3)] {
+            let a = Matrix::randn(r, c, &mut rng);
+            let t = a.transpose();
+            assert_eq!(t.shape(), (c, r));
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(t[(j, i)], a[(i, j)]);
+                }
+            }
+            assert_eq!(t.transpose(), a);
+        }
     }
 
     #[test]

@@ -2,13 +2,15 @@
 //!
 //! numpywren's tasks operate on matrix *tiles* — small dense blocks
 //! that fit in a worker's memory. This module provides the dense
-//! [`Matrix`] type those tiles are made of, the native (oracle /
-//! fallback) factorization kernels, and the [`blocked`] partitioning
+//! [`Matrix`] type those tiles are made of, the cache-blocked packed
+//! [`gemm`] fast path every dense product routes through, the native
+//! factorization kernels built on it, and the [`blocked`] partitioning
 //! helpers that slice a large logical matrix into a tile grid and
 //! stitch it back.
 
 pub mod blocked;
 pub mod factor;
+pub mod gemm;
 pub mod matrix;
 
 pub use blocked::{BlockLayout, BlockedMatrix};

@@ -26,7 +26,7 @@ pub use imp::PjrtKernels;
 
 #[cfg(feature = "xla")]
 mod imp {
-    use crate::kernels::{KernelExecutor, NativeKernels};
+    use crate::kernels::{KernelExecutor, KernelScratch, NativeKernels};
     use crate::linalg::matrix::Matrix;
     use crate::runtime::artifacts::ArtifactRegistry;
     use anyhow::{anyhow, Context, Result};
@@ -142,6 +142,22 @@ mod imp {
                     self.native.execute(fn_name, inputs, scalars)
                 }
             }
+        }
+
+        fn execute_with_scratch(
+            &self,
+            fn_name: &str,
+            inputs: &[Arc<Matrix>],
+            scalars: &[f64],
+            scratch: &mut KernelScratch,
+        ) -> Result<Vec<Matrix>> {
+            // Only the native route benefits from the caller's pack
+            // scratch; artifact-backed kernels go through `execute`.
+            if self.artifact_block(fn_name, inputs).is_none() {
+                self.native_calls.fetch_add(1, Ordering::Relaxed);
+                return self.native.execute_with_scratch(fn_name, inputs, scalars, scratch);
+            }
+            self.execute(fn_name, inputs, scalars)
         }
     }
 
@@ -353,7 +369,7 @@ pub use stub::PjrtKernels;
 
 #[cfg(not(feature = "xla"))]
 mod stub {
-    use crate::kernels::{KernelExecutor, NativeKernels};
+    use crate::kernels::{KernelExecutor, KernelScratch, NativeKernels};
     use crate::linalg::matrix::Matrix;
     use anyhow::{bail, Result};
     use std::path::Path;
@@ -388,6 +404,16 @@ mod stub {
             scalars: &[f64],
         ) -> Result<Vec<Matrix>> {
             self.native.execute(fn_name, inputs, scalars)
+        }
+
+        fn execute_with_scratch(
+            &self,
+            fn_name: &str,
+            inputs: &[Arc<Matrix>],
+            scalars: &[f64],
+            scratch: &mut KernelScratch,
+        ) -> Result<Vec<Matrix>> {
+            self.native.execute_with_scratch(fn_name, inputs, scalars, scratch)
         }
     }
 }

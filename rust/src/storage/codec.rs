@@ -1,0 +1,135 @@
+//! Zero-copy tile codec — the one wire/disk format for tiles.
+//!
+//! Format: 16-byte header (`rows: u64 LE`, `cols: u64 LE`) followed by
+//! the row-major `f64` LE payload. Shared by the file blob store and
+//! any future network wire, so a tile written by one transport is
+//! readable by every other.
+//!
+//! Encode and decode are single-pass bulk copies over exact-capacity
+//! buffers — no per-element `Vec` growth, no intermediate collect. On
+//! little-endian targets the payload loop compiles to a straight
+//! memcpy-shaped sweep; the code stays portable (`to_le_bytes` /
+//! `from_le_bytes` per lane) so big-endian targets still produce the
+//! identical on-disk bytes.
+
+use crate::linalg::matrix::Matrix;
+use anyhow::{bail, Result};
+
+/// Header bytes preceding the payload.
+pub const HEADER_LEN: usize = 16;
+
+/// Exact encoded size of a `rows×cols` tile.
+pub fn encoded_len(rows: usize, cols: usize) -> usize {
+    HEADER_LEN + rows * cols * 8
+}
+
+/// Encode a tile into a fresh exact-capacity buffer.
+pub fn encode(m: &Matrix) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_into(m, &mut out);
+    out
+}
+
+/// Encode a tile into `out` (cleared first; capacity is reserved
+/// exactly once, so a reused buffer reaches its high-water mark and
+/// stops allocating).
+pub fn encode_into(m: &Matrix, out: &mut Vec<u8>) {
+    let (rows, cols) = (m.rows(), m.cols());
+    out.clear();
+    out.reserve(encoded_len(rows, cols));
+    out.extend_from_slice(&(rows as u64).to_le_bytes());
+    out.extend_from_slice(&(cols as u64).to_le_bytes());
+    // Bulk payload copy: resize once, then write each 8-byte lane into
+    // its slot (no length/capacity checks per element as with repeated
+    // `extend_from_slice`).
+    out.resize(encoded_len(rows, cols), 0);
+    for (chunk, v) in out[HEADER_LEN..].chunks_exact_mut(8).zip(m.data()) {
+        chunk.copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Decode a tile; `key` labels corruption errors. Exact length is
+/// enforced — a truncated or padded buffer fails loudly.
+pub fn decode(bytes: &[u8], key: &str) -> Result<Matrix> {
+    if bytes.len() < HEADER_LEN {
+        bail!("corrupt tile `{key}`: {} bytes, header needs 16", bytes.len());
+    }
+    let rows = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
+    let cols = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    let want = HEADER_LEN + rows.saturating_mul(cols).saturating_mul(8);
+    if bytes.len() != want {
+        bail!(
+            "corrupt tile `{key}`: {rows}x{cols} header but {} of {want} bytes",
+            bytes.len()
+        );
+    }
+    // Single-pass exact-capacity decode.
+    let mut data = Vec::with_capacity(rows * cols);
+    data.extend(
+        bytes[HEADER_LEN..]
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap())),
+    );
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip_exact_bits() {
+        let mut rng = Rng::new(41);
+        for (r, c) in [(1, 1), (3, 7), (32, 32), (5, 0), (0, 9)] {
+            let m = Matrix::randn(r, c, &mut rng);
+            let bytes = encode(&m);
+            assert_eq!(bytes.len(), encoded_len(r, c));
+            let back = decode(&bytes, "t").unwrap();
+            assert_eq!(back, m, "exact f64 bits through the codec");
+        }
+    }
+
+    #[test]
+    fn format_is_pinned() {
+        // The on-disk layout is a compatibility contract (durability
+        // and recovery tests re-read tiles across processes): header
+        // u64 LE dims, then row-major f64 LE.
+        let m = Matrix::from_rows(&[&[1.0, -2.5], &[0.25, 3.0]]);
+        let bytes = encode(&m);
+        assert_eq!(&bytes[0..8], &2u64.to_le_bytes());
+        assert_eq!(&bytes[8..16], &2u64.to_le_bytes());
+        let lanes: Vec<f64> = bytes[16..]
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        assert_eq!(lanes, vec![1.0, -2.5, 0.25, 3.0]);
+    }
+
+    #[test]
+    fn encode_into_reuses_capacity() {
+        let mut rng = Rng::new(42);
+        let big = Matrix::randn(16, 16, &mut rng);
+        let small = Matrix::randn(2, 2, &mut rng);
+        let mut buf = Vec::new();
+        encode_into(&big, &mut buf);
+        let cap = buf.capacity();
+        encode_into(&small, &mut buf);
+        assert_eq!(buf.capacity(), cap, "no shrink/realloc on reuse");
+        assert_eq!(decode(&buf, "t").unwrap(), small);
+    }
+
+    #[test]
+    fn corruption_is_loud() {
+        let m = Matrix::zeros(2, 3);
+        let mut bytes = encode(&m);
+        assert!(decode(&bytes[..10], "k").is_err(), "short header");
+        bytes.pop();
+        let err = decode(&bytes, "k").unwrap_err().to_string();
+        assert!(err.contains("2x3"), "dims in message: {err}");
+        let mut fake = Vec::new();
+        fake.extend_from_slice(&1000u64.to_le_bytes());
+        fake.extend_from_slice(&1000u64.to_le_bytes());
+        assert!(decode(&fake, "k").is_err(), "header larger than payload");
+    }
+}

@@ -7,14 +7,17 @@
 //! `prefix_age`/`prefix_ages` report time-since-newest-put across
 //! *processes*, which the in-memory families cannot.
 //!
-//! Tile format: 16-byte header (`rows: u64 LE`, `cols: u64 LE`)
-//! followed by the row-major `f64` LE payload. Accounting counts
-//! payload bytes (`rows*cols*8`), matching the in-memory families.
+//! Tile format: the shared [`codec`](crate::storage::codec) layout —
+//! 16-byte header (`rows: u64 LE`, `cols: u64 LE`) followed by the
+//! row-major `f64` LE payload, bulk-copied in one pass. Accounting
+//! counts payload bytes (`rows*cols*8`), matching the in-memory
+//! families.
 
 use crate::linalg::matrix::Matrix;
+use crate::storage::codec;
 use crate::storage::file::Layout;
 use crate::storage::traits::{BlobStore, StoreStats, TransferAccounting};
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
@@ -68,44 +71,13 @@ impl FileBlobStore {
     }
 }
 
-fn serialize(m: &Matrix) -> Vec<u8> {
-    let (rows, cols) = (m.rows(), m.cols());
-    let mut out = Vec::with_capacity(16 + rows * cols * 8);
-    out.extend_from_slice(&(rows as u64).to_le_bytes());
-    out.extend_from_slice(&(cols as u64).to_le_bytes());
-    for v in m.data() {
-        out.extend_from_slice(&v.to_le_bytes());
-    }
-    out
-}
-
-fn deserialize(bytes: &[u8], key: &str) -> Result<Matrix> {
-    if bytes.len() < 16 {
-        bail!("corrupt tile `{key}`: {} bytes, header needs 16", bytes.len());
-    }
-    let rows = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
-    let cols = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
-    let want = 16 + rows.saturating_mul(cols).saturating_mul(8);
-    if bytes.len() != want {
-        bail!(
-            "corrupt tile `{key}`: {rows}x{cols} header but {} of {want} bytes",
-            bytes.len()
-        );
-    }
-    let data = bytes[16..]
-        .chunks_exact(8)
-        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
-        .collect();
-    Ok(Matrix::from_vec(rows, cols, data))
-}
-
 impl BlobStore for FileBlobStore {
     fn put(&self, worker: usize, key: &str, value: Matrix) -> Result<()> {
         self.latency();
         let bytes = (value.rows() * value.cols() * 8) as u64;
         self.inner
             .layout
-            .write_atomic(&self.path(key), &serialize(&value))
+            .write_atomic(&self.path(key), &codec::encode(&value))
             .with_context(|| format!("file blob store: put `{key}`"))?;
         self.inner.accounting.record_put(worker, bytes);
         Ok(())
@@ -115,7 +87,7 @@ impl BlobStore for FileBlobStore {
         self.latency();
         let raw = std::fs::read(self.path(key))
             .with_context(|| format!("object-store key `{key}` not found"))?;
-        let m = deserialize(&raw, key)?;
+        let m = codec::decode(&raw, key)?;
         let bytes = (m.rows() * m.cols() * 8) as u64;
         self.inner.accounting.record_get(worker, bytes);
         Ok(Arc::new(m))

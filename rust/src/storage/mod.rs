@@ -107,6 +107,7 @@
 pub mod cache;
 pub mod chaos;
 pub mod clock;
+pub mod codec;
 pub mod file;
 pub mod object_store;
 pub mod queue;
