@@ -12,10 +12,18 @@
 //!   time for the TTL sweeper to return the substrate to zero
 //!   residency, and the keys-per-second that implies. `resident_peak`
 //!   is sampled after every job — under TTL churn it must plateau
-//!   instead of growing linearly (the `perf_gc` keep-leg signature).
+//!   instead of growing linearly (the `perf_gc` keep-leg signature);
+//! * **TCP accepted-submits/sec** — a second daemon listening on
+//!   `127.0.0.1:0` takes concurrent submits from [`TCP_CLIENTS`]
+//!   client threads (one connection per request, like real remote
+//!   shells). Measured from first connect to last accepted submit —
+//!   the front door's admission throughput under contention, which
+//!   the `submitted`-table lock serializes at the staging step.
 //!
 //! Emits `BENCH_daemon.json` (uploaded as a CI artifact by the
-//! bench-smoke job; `NUMPYWREN_BENCH_QUICK=1` trims the churn).
+//! bench-smoke job; `NUMPYWREN_BENCH_QUICK=1` trims the churn and the
+//! per-client submit count — never the client count, which is the
+//! point of the TCP leg).
 
 use numpywren::config::{EngineConfig, ScalingMode};
 use numpywren::daemon::{Daemon, DaemonClient};
@@ -29,13 +37,79 @@ const N: usize = 24;
 const BLOCK: usize = 8;
 const TTL: Duration = Duration::from_millis(250);
 const RPC: Duration = Duration::from_secs(30);
+/// Concurrent TCP clients for the front-door leg. ≥100 by design —
+/// the acceptance bar is admission throughput at real fan-in.
+const TCP_CLIENTS: usize = 100;
+const TCP_SUBMITS_FULL: usize = 3;
+const TCP_SUBMITS_QUICK: usize = 1;
+
+fn quick() -> bool {
+    std::env::var("NUMPYWREN_BENCH_QUICK").as_deref() == Ok("1")
+}
 
 fn churn() -> usize {
-    if std::env::var("NUMPYWREN_BENCH_QUICK").as_deref() == Ok("1") {
+    if quick() {
         CHURN_QUICK
     } else {
         CHURN_FULL
     }
+}
+
+/// The TCP leg: stand up a listening daemon, fan in TCP_CLIENTS
+/// threads submitting single-block Cholesky jobs concurrently, and
+/// return (accepted submits, accept-window seconds, drain seconds).
+fn tcp_leg(submits_per_client: usize) -> (usize, f64, f64) {
+    let dir = std::env::temp_dir().join(format!("npw_perf_daemon_tcp_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = EngineConfig {
+        scaling: ScalingMode::Fixed(WORKERS),
+        job_timeout: Duration::from_secs(120),
+        ..EngineConfig::default()
+    };
+    cfg.set("listen", "127.0.0.1:0").expect("listen key");
+    let daemon = Daemon::new(cfg, &dir).expect("tcp daemon spool");
+    let addr = daemon.local_addr().expect("bound listener");
+    let server = std::thread::spawn(move || daemon.run());
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..TCP_CLIENTS)
+        .map(|i| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || -> usize {
+                let client = DaemonClient::connect(addr, None);
+                let mut accepted = 0usize;
+                for k in 0..submits_per_client {
+                    // Single-block jobs: staging, not compute, is what
+                    // this leg stresses.
+                    client
+                        .submit("cholesky:8:8", (i * submits_per_client + k) as u64, None, None, RPC)
+                        .expect("tcp submit");
+                    accepted += 1;
+                }
+                accepted
+            })
+        })
+        .collect();
+    let accepted: usize = handles.into_iter().map(|h| h.join().expect("tcp client")).sum();
+    let accept_secs = t0.elapsed().as_secs_f64();
+
+    // Drain: every accepted job must still complete.
+    let client = DaemonClient::connect(addr.to_string(), None);
+    let t1 = Instant::now();
+    let deadline = t1 + Duration::from_secs(300);
+    loop {
+        let stats = client.stats(RPC).expect("tcp stats");
+        if stats.active == 0 && stats.waiting == 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "TCP-submitted jobs failed to drain");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let drain_secs = t1.elapsed().as_secs_f64();
+    client.shutdown(RPC).expect("tcp shutdown");
+    server.join().unwrap().expect("tcp daemon run");
+    let _ = std::fs::remove_dir_all(&dir);
+    (accepted, accept_secs, drain_secs)
 }
 
 fn main() {
@@ -107,6 +181,17 @@ fn main() {
         fleet.workers_spawned
     );
 
+    let tcp_submits = if quick() { TCP_SUBMITS_QUICK } else { TCP_SUBMITS_FULL };
+    println!(
+        "# TCP front-door leg — {TCP_CLIENTS} concurrent clients × {tcp_submits} submit(s)"
+    );
+    let (tcp_accepted, tcp_accept_secs, tcp_drain_secs) = tcp_leg(tcp_submits);
+    let tcp_accepted_per_sec = tcp_accepted as f64 / tcp_accept_secs.max(1e-9);
+    println!(
+        "tcp: {tcp_accepted} submits accepted in {tcp_accept_secs:.3}s \
+         ({tcp_accepted_per_sec:.0}/s at {TCP_CLIENTS} clients), drained in {tcp_drain_secs:.3}s"
+    );
+
     // Hand-rolled JSON (no serde in the offline crate set).
     fn fmt_series(xs: &[f64]) -> String {
         xs.iter().map(|x| format!("{x:.3}")).collect::<Vec<_>>().join(", ")
@@ -119,7 +204,11 @@ fn main() {
          {{\"mean\": {mean_accept:.3}, \"max\": {max_accept:.3}, \"series\": [{}]}},\n  \
          \"sweep\": {{\"keys_reclaimed\": {keys_at_finish}, \"drain_secs\": {drain_secs:.4}, \
          \"keys_per_sec\": {keys_per_sec:.1}, \"peak_resident\": {peak_resident}, \
-         \"resident_after\": [{resident_series}]}},\n  \"wall_secs\": {wall_secs:.4}\n}}\n",
+         \"resident_after\": [{resident_series}]}},\n  \
+         \"tcp\": {{\"clients\": {TCP_CLIENTS}, \"submits_per_client\": {tcp_submits}, \
+         \"accepted_submits\": {tcp_accepted}, \"accept_secs\": {tcp_accept_secs:.4}, \
+         \"accepted_per_sec\": {tcp_accepted_per_sec:.1}, \
+         \"drain_secs\": {tcp_drain_secs:.4}}},\n  \"wall_secs\": {wall_secs:.4}\n}}\n",
         TTL.as_secs_f64(),
         fmt_series(&accept_ms),
     );

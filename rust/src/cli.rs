@@ -114,14 +114,21 @@ COMMANDS:
             (many shells, one fleet, unbounded uptime)
             --daemon-dir DIR [--workers K | --sf F --max-workers K]
             [--substrate SPEC] [--retention keep|outputs|delete]
-            [--gc-ttl SECS] [--gc-interval SECS] [--set key=value]...
+            [--gc-ttl SECS] [--gc-interval SECS]
+            [--listen ADDR] [--auth-token TOKEN] [--set key=value]...
             (--gc-ttl arms the TTL sweeper: kept/orphaned job
             namespaces expire once write-idle longer than SECS, like
             an S3 lifecycle rule; --gc-interval sets the GC thread's
-            sweep period)
+            sweep period. --listen HOST:PORT additionally opens a TCP
+            front door — :0 picks an ephemeral port, printed at start
+            and recorded under \"addr\" in DIR/daemon.json; clients use
+            --connect. --auth-token (or NUMPYWREN_AUTH_TOKEN) requires
+            every TCP request to carry the token; the connection cap
+            is --set max_conns=N)
   submit    submit jobs to a running daemon; chains reference the
             same request (@K, 1-based) or existing daemon jobs (@jN)
-            --daemon-dir DIR --specs algo:N:BLOCK[:CLASS][@DEP],...
+            (--daemon-dir DIR | --connect ADDR [--auth-token TOKEN])
+            --specs algo:N:BLOCK[:CLASS][@DEP],...
             [--seed N] [--retention R] [--max-inflight Q]
             [--wait true] [--wait-timeout SECS] [--timeout SECS]
   worker    join an external multi-process fleet over a shared durable
@@ -134,9 +141,16 @@ COMMANDS:
             without it the process serves until killed. Leases on the
             file substrate expire by wall clock, so tasks in flight on
             a killed worker redeliver to the survivors)
-  status    poll one daemon job:  --daemon-dir DIR --job jN
-  cancel    cancel one daemon job: --daemon-dir DIR --job jN
-  shutdown  stop the daemon and its fleet: --daemon-dir DIR
+  status    poll one daemon job:
+            (--daemon-dir DIR | --connect ADDR) --job jN
+  wait      block until one daemon job is terminal (over TCP the wait
+            parks server-side; over the spool the client polls):
+            (--daemon-dir DIR | --connect ADDR) --job jN
+            [--wait-timeout SECS]
+  cancel    cancel one daemon job:
+            (--daemon-dir DIR | --connect ADDR) --job jN
+  shutdown  stop the daemon and its fleet:
+            (--daemon-dir DIR | --connect ADDR)
   simulate  paper-scale discrete-event simulation (runs on the same
             substrate backends as the engine, virtual-time clock)
             --algo NAME --n DIM --block B --workers K [--sf F] [--pipeline W]
@@ -173,6 +187,7 @@ pub fn run_cli(argv: &[String]) -> Result<()> {
         "worker" => cmd_worker(&args),
         "submit" => cmd_submit(&args),
         "status" => cmd_status(&args),
+        "wait" => cmd_wait(&args),
         "cancel" => cmd_cancel(&args),
         "shutdown" | "stop" => cmd_shutdown(&args),
         "simulate" => cmd_simulate(&args),
@@ -608,7 +623,13 @@ fn cmd_jobs(args: &Args) -> Result<()> {
 /// until a shutdown command arrives.
 fn cmd_serve(args: &Args) -> Result<()> {
     let dir = args.require("daemon-dir")?.to_string();
-    let cfg = engine_cfg_from(args)?;
+    let mut cfg = engine_cfg_from(args)?;
+    if let Some(addr) = args.get("listen") {
+        cfg.set("listen", addr)?;
+    }
+    if let Some(token) = auth_token(args) {
+        cfg.set("auth_token", &token)?;
+    }
     let gc = cfg.gc;
     let mut d = Daemon::new(cfg, &dir)?;
     d.log = true;
@@ -621,6 +642,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
          `numpywren shutdown --daemon-dir {dir}`",
         std::process::id()
     );
+    if let Some(addr) = d.local_addr() {
+        println!("numpywren daemon: listening on {addr} (submit with `--connect {addr}`)");
+    }
     let fleet = d.run()?;
     println!(
         "fleet: workers={} idle-exits={} billed-core-secs={:.3} read={}B written={}B",
@@ -737,10 +761,34 @@ fn client_timeout(args: &Args) -> Result<Duration> {
     Ok(Duration::from_secs_f64(args.num("timeout", 30.0)?))
 }
 
+/// The shared auth token for TCP requests: `--auth-token TOKEN`, or
+/// the `NUMPYWREN_AUTH_TOKEN` environment variable (so the token need
+/// not appear in `ps` output). Empty values count as unset.
+fn auth_token(args: &Args) -> Option<String> {
+    args.get("auth-token")
+        .map(str::to_string)
+        .or_else(|| std::env::var("NUMPYWREN_AUTH_TOKEN").ok())
+        .filter(|t| !t.is_empty())
+}
+
+/// Build the daemon client from the transport flags: `--connect ADDR`
+/// (TCP front door) or `--daemon-dir DIR` (durable file spool) —
+/// exactly one.
+fn daemon_client(args: &Args) -> Result<DaemonClient> {
+    match (args.get("connect"), args.get("daemon-dir")) {
+        (Some(_), Some(_)) => {
+            bail!("--connect and --daemon-dir are mutually exclusive (one transport per request)")
+        }
+        (Some(addr), None) => Ok(DaemonClient::connect(addr, auth_token(args))),
+        (None, Some(dir)) => Ok(DaemonClient::new(dir)),
+        (None, None) => bail!("missing --connect ADDR or --daemon-dir DIR"),
+    }
+}
+
 /// `numpywren submit`: feed specs to a running daemon; `--wait true`
 /// polls every submitted job to a terminal state.
 fn cmd_submit(args: &Args) -> Result<()> {
-    let client = DaemonClient::new(args.require("daemon-dir")?);
+    let client = daemon_client(args)?;
     let specs = match args.get("specs").or_else(|| args.get("jobs")) {
         Some(s) => s.to_string(),
         None => bail!("missing --specs (or --jobs) algo:N:BLOCK[:CLASS][@DEP],..."),
@@ -787,7 +835,7 @@ fn cmd_submit(args: &Args) -> Result<()> {
 
 /// `numpywren status --job jN`.
 fn cmd_status(args: &Args) -> Result<()> {
-    let client = DaemonClient::new(args.require("daemon-dir")?);
+    let client = daemon_client(args)?;
     let job = daemon::parse_job_token(args.require("job")?)?;
     let st = client.status(job, client_timeout(args)?)?;
     match st.state.as_str() {
@@ -801,9 +849,29 @@ fn cmd_status(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `numpywren wait --job jN`: block until the job is terminal. Over
+/// TCP the park happens server-side (`wait` wire op); over the spool
+/// the client polls status.
+fn cmd_wait(args: &Args) -> Result<()> {
+    let client = daemon_client(args)?;
+    let job = daemon::parse_job_token(args.require("job")?)?;
+    let timeout = Duration::from_secs_f64(args.num("wait-timeout", 600.0)?);
+    let st = client.wait_terminal(job, timeout)?;
+    match st.state.as_str() {
+        "succeeded" => {
+            println!("{job} succeeded");
+            Ok(())
+        }
+        other => {
+            let why = st.error.map(|e| format!(": {e}")).unwrap_or_default();
+            bail!("{job} {other}{why}");
+        }
+    }
+}
+
 /// `numpywren cancel --job jN`.
 fn cmd_cancel(args: &Args) -> Result<()> {
-    let client = DaemonClient::new(args.require("daemon-dir")?);
+    let client = daemon_client(args)?;
     let job = daemon::parse_job_token(args.require("job")?)?;
     if client.cancel(job, client_timeout(args)?)? {
         println!("{job} canceled");
@@ -816,7 +884,7 @@ fn cmd_cancel(args: &Args) -> Result<()> {
 /// `numpywren shutdown`: stop the daemon (its fleet drains and the
 /// serve process exits).
 fn cmd_shutdown(args: &Args) -> Result<()> {
-    let client = DaemonClient::new(args.require("daemon-dir")?);
+    let client = daemon_client(args)?;
     client.shutdown(client_timeout(args)?)?;
     println!("daemon shutdown requested");
     Ok(())
@@ -962,6 +1030,12 @@ mod tests {
 
     fn argv(s: &str) -> Vec<String> {
         s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    /// For argument vectors with empty or space-bearing values, which
+    /// the whitespace-splitting [`argv`] cannot express.
+    fn argv2(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|x| x.to_string()).collect()
     }
 
     #[test]
@@ -1146,6 +1220,33 @@ mod tests {
         assert!(run_cli(&argv("serve")).is_err(), "missing --daemon-dir");
         assert!(run_cli(&argv("submit --daemon-dir /tmp/x")).is_err(), "missing --specs");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn client_transport_flags_validated() {
+        // Exactly one of --daemon-dir / --connect.
+        let err = run_cli(&argv("status --job j1")).unwrap_err();
+        assert!(format!("{err:#}").contains("--connect ADDR or --daemon-dir DIR"), "{err:#}");
+        let err =
+            run_cli(&argv("status --daemon-dir /tmp/x --connect 127.0.0.1:1 --job j1"))
+                .unwrap_err();
+        assert!(format!("{err:#}").contains("mutually exclusive"), "{err:#}");
+        // A TCP target nobody listens on is a connect error, not a hang
+        // (port 1 is privileged and unbound in any sane test box).
+        let err = run_cli(&argv("status --connect 127.0.0.1:1 --job j1 --timeout 0.2"))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("connecting to daemon"), "{err:#}");
+        // `wait` validates its flags the same way.
+        assert!(run_cli(&argv("wait --daemon-dir /tmp/x")).is_err(), "missing --job");
+    }
+
+    #[test]
+    fn auth_token_flag_beats_empty() {
+        let a = Args::parse(&argv("status --auth-token s3cret --daemon-dir /tmp/x")).unwrap();
+        assert_eq!(auth_token(&a), Some("s3cret".to_string()));
+        // An empty flag value counts as unset rather than sending "".
+        let a = Args::parse(&argv2(&["status", "--auth-token", ""])).unwrap();
+        assert_eq!(auth_token(&a), None);
     }
 
     #[test]

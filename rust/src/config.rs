@@ -154,6 +154,41 @@ impl Default for GcConfig {
     }
 }
 
+/// The daemon's TCP front door (`numpywren serve --listen`): a
+/// length-prefixed JSON protocol (see [`crate::daemon::wire`]) that
+/// lets clients which are *not* co-located with the spool directory
+/// reach the same [`crate::jobs::JobManager`]. The file spool keeps
+/// working alongside it — TCP is an additional door, not a
+/// replacement.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NetConfig {
+    /// TCP listen address (`host:port`; port `0` binds an ephemeral
+    /// port, recorded in the `daemon.json` marker). `None` keeps the
+    /// daemon file-spool-only.
+    pub listen: Option<String>,
+    /// Shared token every TCP request must carry in its `"auth"`
+    /// field; `None` accepts unauthenticated requests. The file spool
+    /// never checks it — co-located clients are already gated by
+    /// filesystem permissions.
+    pub auth_token: Option<String>,
+    /// Concurrent TCP connection cap. A connection over the cap gets
+    /// one typed error frame and a close — never a silent hang.
+    pub max_conns: usize,
+}
+
+/// Default concurrent-connection cap for the TCP front door.
+pub const DEFAULT_MAX_CONNS: usize = 256;
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            listen: None,
+            auth_token: None,
+            max_conns: DEFAULT_MAX_CONNS,
+        }
+    }
+}
+
 /// Which substrate backend family a job runs on (see
 /// [`crate::storage`]).
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -415,6 +450,9 @@ pub struct EngineConfig {
     pub retention: RetentionPolicy,
     /// Background GC thread: sweep period + optional namespace TTL.
     pub gc: GcConfig,
+    /// TCP front door for daemon mode (`serve --listen`); ignored by
+    /// the one-shot commands.
+    pub net: NetConfig,
 }
 
 impl Default for EngineConfig {
@@ -436,6 +474,7 @@ impl Default for EngineConfig {
             substrate: SubstrateConfig::from_env_or_default(),
             retention: RetentionPolicy::KeepAll,
             gc: GcConfig::default(),
+            net: NetConfig::default(),
         }
     }
 }
@@ -506,6 +545,25 @@ impl EngineConfig {
                     bail!("gc_interval must be > 0 (the GC thread's sweep period)");
                 }
                 self.gc.sweep_interval = d;
+            }
+            "listen" => {
+                if value.is_empty() {
+                    bail!("listen needs an address (host:port; port 0 = ephemeral)");
+                }
+                self.net.listen = Some(value.to_string());
+            }
+            "auth_token" => {
+                if value.is_empty() {
+                    bail!("auth_token must be non-empty (omit the key to disable auth)");
+                }
+                self.net.auth_token = Some(value.to_string());
+            }
+            "max_conns" => {
+                let n: usize = value.parse().with_context(|| format!("bad max_conns `{value}`"))?;
+                if n == 0 {
+                    bail!("max_conns must be >= 1 (0 would refuse every connection)");
+                }
+                self.net.max_conns = n;
             }
             "failure" => {
                 let (at, frac) = value
@@ -587,6 +645,24 @@ mod tests {
         assert!(c.set("provision", "lookahead=4,max=2").is_err());
         assert!(c.set("provision", "psychic").is_err());
         assert!(c.set("spec_max", "-1").is_err());
+    }
+
+    #[test]
+    fn net_config_parses() {
+        let mut c = EngineConfig::default();
+        assert_eq!(c.net, NetConfig::default());
+        assert_eq!(c.net.listen, None, "file-spool-only by default");
+        assert_eq!(c.net.max_conns, DEFAULT_MAX_CONNS);
+        c.set("listen", "127.0.0.1:0").unwrap();
+        assert_eq!(c.net.listen.as_deref(), Some("127.0.0.1:0"));
+        c.set("auth_token", "sesame").unwrap();
+        assert_eq!(c.net.auth_token.as_deref(), Some("sesame"));
+        c.set("max_conns", "8").unwrap();
+        assert_eq!(c.net.max_conns, 8);
+        assert!(c.set("listen", "").is_err());
+        assert!(c.set("auth_token", "").is_err());
+        assert!(c.set("max_conns", "0").is_err());
+        assert!(c.set("max_conns", "many").is_err());
     }
 
     #[test]

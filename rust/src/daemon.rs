@@ -12,37 +12,61 @@
 //!   number of shells can feed the same fleet; commands spooled while
 //!   the daemon is down are executed when it comes up (that is the
 //!   durability: the spool *is* the queue).
-//! * [`DaemonClient`] is the other half: it writes a command file
-//!   atomically (`.tmp` + rename), then polls for the matching
-//!   response file. `numpywren submit/status/cancel/shutdown
-//!   --daemon-dir …` are thin CLI wrappers over it.
+//! * [`DaemonClient`] is the other half, over either transport: the
+//!   spool (write a command file atomically — `.tmp` + rename — then
+//!   poll for the matching response file) or TCP (`connect`).
+//!   `numpywren submit/status/wait/cancel/shutdown` are thin CLI
+//!   wrappers over it.
+//! * The **TCP front door** (`serve --listen HOST:PORT`) serves the
+//!   same requests to clients that are *not* co-located with the
+//!   spool: an accept loop hands each connection to its own handler
+//!   thread (bounded by [`crate::config::NetConfig::max_conns`]),
+//!   frames are length-prefixed JSON ([`wire`]), and requests may be
+//!   gated by a shared token (`--auth-token`). TCP adds one op the
+//!   spool answers only degenerately: **wait**, a server-side
+//!   long-poll that parks the handler thread until the job is
+//!   terminal (or a server-enforced deadline), so clients stop
+//!   busy-polling `status`.
 //!
 //! ## Spool layout
 //!
 //! ```text
 //! <daemon-dir>/
-//!   daemon.json        # liveness marker: {"pid": …, "workers": …}
+//!   daemon.json        # liveness marker: {"pid": …, "workers": …[, "addr": …]}
 //!   cmd/<id>.json      # requests, processed in name order, deleted after
 //!   rsp/<id>.json      # one response per request, deleted by the client
 //! ```
 //!
+//! The marker's `"addr"` records the bound TCP address when the front
+//! door is up — how a co-located client (or test) discovers an
+//! ephemeral port.
+//!
 //! ## Wire format
 //!
-//! One JSON object per file (hand-rolled codec — the offline crate set
-//! has no serde). Requests:
+//! One JSON object per spool file, and the same objects as
+//! length-prefixed frames over TCP (hand-rolled codec — the offline
+//! crate set has no serde). Requests:
 //!
 //! ```text
 //! {"op":"submit","specs":"cholesky:256:32,gemm:256:32:1@1","seed":42,
 //!  "retention":"outputs","max_inflight":8}
 //! {"op":"status","job":"j3"}   {"op":"cancel","job":"j3"}
+//! {"op":"wait","job":"j3","timeout_ms":30000}
 //! {"op":"stats"}               {"op":"shutdown"}
 //! ```
+//!
+//! Over TCP, every request additionally carries
+//! `"auth":"<shared token>"` when the daemon was started with one;
+//! a missing or wrong token gets a typed error, never a hang. The
+//! spool transport ignores `auth` — co-located clients are gated by
+//! filesystem permissions already.
 //!
 //! Responses always carry `"ok"`; failures carry `"error"`:
 //!
 //! ```text
 //! {"ok":true,"jobs":["j1","j2"]}
 //! {"ok":true,"job":"j3","state":"running","completed":5,"total":12}
+//! {"ok":true,"job":"j3","state":"succeeded","terminal":true}
 //! {"ok":false,"error":"bad job spec `…`"}
 //! ```
 //!
@@ -72,10 +96,13 @@ use crate::storage::{BlobStore as _, KvState as _};
 use crate::util::prng::Rng;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{HashMap, HashSet};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+pub mod wire;
 
 /// Liveness/metadata marker file at the spool root.
 pub const MARKER: &str = "daemon.json";
@@ -85,6 +112,36 @@ const DAEMON_POLL: Duration = Duration::from_millis(2);
 
 /// How often a client polls for its response file.
 const CLIENT_POLL: Duration = Duration::from_millis(1);
+
+/// Accept-loop poll period (the listener is non-blocking so the loop
+/// can watch the shutdown flag).
+const ACCEPT_POLL: Duration = Duration::from_millis(2);
+
+/// Per-read socket timeout on a server-side connection — the tick at
+/// which a parked handler thread rechecks the shutdown flag, and the
+/// bound on how long shutdown waits for handlers to drain.
+const CONN_POLL: Duration = Duration::from_millis(100);
+
+/// Server-side write timeout: a client that stops draining its
+/// responses loses the connection instead of pinning the handler.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Once a frame's first byte arrives, the rest must land within this
+/// (the slow-loris guard — see [`wire::read_frame_interruptible`]).
+const FRAME_DEADLINE: Duration = Duration::from_secs(2);
+
+/// Server-enforced cap on one `wait` long-poll. A client wanting a
+/// longer wait re-issues; the cap bounds how long any handler thread
+/// can be parked by a single request.
+const WAIT_CAP: Duration = Duration::from_secs(30);
+
+/// Poll tick inside a `wait` long-poll.
+const WAIT_POLL: Duration = Duration::from_millis(5);
+
+/// Client-side grace added to the socket read timeout over the
+/// request timeout, so the server's own deadline (not the transport)
+/// decides a long-poll.
+const CLIENT_GRACE: Duration = Duration::from_secs(2);
 
 // ===================================================================
 // Minimal JSON — the offline crate set has no serde, and the wire
@@ -474,6 +531,13 @@ pub enum Request {
         max_inflight: Option<usize>,
     },
     Status { job: JobId },
+    /// Server-side long-poll: answer once the job is terminal or
+    /// `timeout_ms` elapses (the server additionally clamps the park
+    /// time to its own cap; the response's `"terminal"` field tells
+    /// the client whether to re-issue). Over the single-threaded file
+    /// spool the daemon answers with an immediate snapshot instead of
+    /// parking — the client loop still converges.
+    Wait { job: JobId, timeout_ms: u64 },
     Cancel { job: JobId },
     /// Substrate residency + fleet occupancy — what a leak check needs.
     Stats,
@@ -482,7 +546,24 @@ pub enum Request {
 
 impl Request {
     pub fn encode(&self) -> String {
-        let obj = match self {
+        self.to_json().render()
+    }
+
+    /// Encode with a shared auth token attached (the TCP transport;
+    /// see the module docs). [`Request::decode`] ignores unknown
+    /// fields, so the token rides alongside any op.
+    pub fn encode_with_auth(&self, auth: Option<&str>) -> String {
+        let Json::Obj(mut fields) = self.to_json() else {
+            unreachable!("requests encode as JSON objects");
+        };
+        if let Some(token) = auth {
+            fields.push(("auth".to_string(), Json::Str(token.to_string())));
+        }
+        Json::Obj(fields).render()
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
             Request::Submit {
                 specs,
                 seed,
@@ -511,14 +592,18 @@ impl Request {
                 ("op".to_string(), Json::Str("status".into())),
                 ("job".to_string(), Json::Str(job.to_string())),
             ]),
+            Request::Wait { job, timeout_ms } => Json::Obj(vec![
+                ("op".to_string(), Json::Str("wait".into())),
+                ("job".to_string(), Json::Str(job.to_string())),
+                ("timeout_ms".to_string(), Json::Num(*timeout_ms as f64)),
+            ]),
             Request::Cancel { job } => Json::Obj(vec![
                 ("op".to_string(), Json::Str("cancel".into())),
                 ("job".to_string(), Json::Str(job.to_string())),
             ]),
             Request::Stats => Json::Obj(vec![("op".to_string(), Json::Str("stats".into()))]),
             Request::Shutdown => Json::Obj(vec![("op".to_string(), Json::Str("shutdown".into()))]),
-        };
-        obj.render()
+        }
     }
 
     pub fn decode(src: &str) -> Result<Request> {
@@ -556,10 +641,15 @@ impl Request {
                 })
             }
             "status" => Ok(Request::Status { job: job(&v)? }),
+            "wait" => Ok(Request::Wait {
+                job: job(&v)?,
+                // A missing/zero timeout degrades to a status snapshot.
+                timeout_ms: v.get("timeout_ms").and_then(Json::as_u64).unwrap_or(0),
+            }),
             "cancel" => Ok(Request::Cancel { job: job(&v)? }),
             "stats" => Ok(Request::Stats),
             "shutdown" => Ok(Request::Shutdown),
-            other => bail!("unknown op `{other}` (submit|status|cancel|stats|shutdown)"),
+            other => bail!("unknown op `{other}` (submit|status|wait|cancel|stats|shutdown)"),
         }
     }
 }
@@ -636,6 +726,9 @@ pub struct StatsReply {
     pub queue: usize,
     pub active: usize,
     pub waiting: usize,
+    /// Live TCP connections (including the one carrying this very
+    /// request) — the leak check for handler threads.
+    pub conns: usize,
 }
 
 impl StatsReply {
@@ -646,20 +739,45 @@ impl StatsReply {
     }
 }
 
-/// The client half of the spool protocol: one instance per process is
-/// enough (request ids are `pid-seq`). Creating a client does not
-/// require a running daemon — requests spool durably and are served
-/// when `numpywren serve` comes up, or time out on the client side.
+/// How a [`DaemonClient`] reaches its daemon.
+enum Transport {
+    /// The durable file spool (`--daemon-dir`): co-located clients,
+    /// requests survive a daemon outage.
+    Spool { dir: PathBuf, seq: AtomicU64 },
+    /// The TCP front door (`--connect`): one connection per request,
+    /// optionally carrying a shared auth token.
+    Tcp { addr: String, auth: Option<String> },
+}
+
+/// The client half of the daemon protocol, over the file spool
+/// ([`DaemonClient::new`]) or TCP ([`DaemonClient::connect`]). One
+/// instance per process is enough (spool request ids are `pid-seq`;
+/// TCP opens a fresh connection per request). Creating a spool client
+/// does not require a running daemon — requests spool durably and are
+/// served when `numpywren serve` comes up, or time out client-side.
 pub struct DaemonClient {
-    dir: PathBuf,
-    seq: AtomicU64,
+    transport: Transport,
 }
 
 impl DaemonClient {
     pub fn new(dir: impl Into<PathBuf>) -> DaemonClient {
         DaemonClient {
-            dir: dir.into(),
-            seq: AtomicU64::new(0),
+            transport: Transport::Spool {
+                dir: dir.into(),
+                seq: AtomicU64::new(0),
+            },
+        }
+    }
+
+    /// A client for the TCP front door (`serve --listen`). `auth`
+    /// must match the daemon's `--auth-token` when it has one; it is
+    /// attached to every request.
+    pub fn connect(addr: impl Into<String>, auth: Option<String>) -> DaemonClient {
+        DaemonClient {
+            transport: Transport::Tcp {
+                addr: addr.into(),
+                auth,
+            },
         }
     }
 
@@ -667,15 +785,55 @@ impl DaemonClient {
     /// Protocol-level failures (`"ok": false`) come back as errors
     /// carrying the daemon's message.
     pub fn request(&self, req: &Request, timeout: Duration) -> Result<Json> {
-        std::fs::create_dir_all(cmd_dir(&self.dir))?;
-        std::fs::create_dir_all(rsp_dir(&self.dir))?;
+        match &self.transport {
+            Transport::Spool { dir, seq } => Self::request_spool(dir, seq, req, timeout),
+            Transport::Tcp { addr, auth } => Self::request_tcp(addr, auth.as_deref(), req, timeout),
+        }
+    }
+
+    /// One request over TCP: connect, one frame out, one frame back.
+    /// The socket timeout is the request timeout plus a grace window,
+    /// so a server-side long-poll is decided by the *server's*
+    /// deadline, not a transport cutoff racing it.
+    fn request_tcp(
+        addr: &str,
+        auth: Option<&str>,
+        req: &Request,
+        timeout: Duration,
+    ) -> Result<Json> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to daemon at {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        stream
+            .set_read_timeout(Some(timeout + CLIENT_GRACE))
+            .context("setting socket read timeout")?;
+        stream
+            .set_write_timeout(Some(timeout + CLIENT_GRACE))
+            .context("setting socket write timeout")?;
+        wire::write_frame(&mut &stream, &req.encode_with_auth(auth))
+            .with_context(|| format!("sending request to daemon at {addr}"))?;
+        match wire::read_frame(&mut &stream) {
+            Ok(Some(body)) => unwrap_response(&body),
+            Ok(None) => bail!("daemon at {addr} closed the connection without answering"),
+            Err(e) => Err(anyhow!(e).context(format!("reading response from daemon at {addr}"))),
+        }
+    }
+
+    fn request_spool(
+        dir: &Path,
+        seq: &AtomicU64,
+        req: &Request,
+        timeout: Duration,
+    ) -> Result<Json> {
+        std::fs::create_dir_all(cmd_dir(dir))?;
+        std::fs::create_dir_all(rsp_dir(dir))?;
         let id = format!(
             "{:010}-{:06}",
             std::process::id(),
-            self.seq.fetch_add(1, Ordering::SeqCst)
+            seq.fetch_add(1, Ordering::SeqCst)
         );
-        let cmd = cmd_dir(&self.dir).join(format!("{id}.json"));
-        let rsp = rsp_dir(&self.dir).join(format!("{id}.json"));
+        let cmd = cmd_dir(dir).join(format!("{id}.json"));
+        let rsp = rsp_dir(dir).join(format!("{id}.json"));
         // Ids are `pid-seq`, so after OS pid reuse a fresh process can
         // mint an id a crashed predecessor already used. Clear any
         // stale response under this id before publishing the request,
@@ -687,17 +845,7 @@ impl DaemonClient {
         loop {
             if let Ok(body) = std::fs::read_to_string(&rsp) {
                 let _ = std::fs::remove_file(&rsp);
-                let v = Json::parse(&body)
-                    .with_context(|| format!("malformed daemon response `{body}`"))?;
-                if v.get("ok").and_then(Json::as_bool) == Some(true) {
-                    return Ok(v);
-                }
-                let msg = v
-                    .get("error")
-                    .and_then(Json::as_str)
-                    .unwrap_or("daemon reported an unspecified error")
-                    .to_string();
-                bail!("{msg}");
+                return unwrap_response(&body);
             }
             // A daemon that died mid-request leaves its marker behind
             // and will never answer — polling until the timeout just
@@ -707,7 +855,7 @@ impl DaemonClient {
             // request; only a provably dead pid does.
             if last_liveness.elapsed() >= Duration::from_millis(100) {
                 last_liveness = Instant::now();
-                if let Some(pid) = marker_pid(&self.dir) {
+                if let Some(pid) = marker_pid(dir) {
                     if pid_alive(pid) == Some(false) {
                         // Withdraw the command: nobody is waiting on it,
                         // and the restarted daemon must not execute it
@@ -718,8 +866,8 @@ impl DaemonClient {
                              marker; restart `numpywren serve --daemon-dir {dir}` (it will \
                              recover the spool) or delete {marker} if that daemon is gone \
                              for good",
-                            dir = self.dir.display(),
-                            marker = self.dir.join(MARKER).display(),
+                            dir = dir.display(),
+                            marker = dir.join(MARKER).display(),
                         );
                     }
                 }
@@ -732,7 +880,7 @@ impl DaemonClient {
                     "no response from daemon within {:.1}s (is `numpywren serve \
                      --daemon-dir {}` running?)",
                     timeout.as_secs_f64(),
-                    self.dir.display()
+                    dir.display()
                 );
             }
             std::thread::sleep(CLIENT_POLL);
@@ -768,21 +916,14 @@ impl DaemonClient {
 
     pub fn status(&self, job: JobId, timeout: Duration) -> Result<StatusReply> {
         let rsp = self.request(&Request::Status { job }, timeout)?;
-        Ok(StatusReply {
-            job,
-            state: rsp
-                .get("state")
-                .and_then(Json::as_str)
-                .context("status response is missing `state`")?
-                .to_string(),
-            completed: rsp.get("completed").and_then(Json::as_u64).unwrap_or(0),
-            total: rsp.get("total").and_then(Json::as_u64).unwrap_or(0),
-            error: rsp.get("error").and_then(Json::as_str).map(|s| s.to_string()),
-        })
+        decode_status(job, &rsp)
     }
 
-    /// Poll `status` until the job is terminal (succeeded / failed /
-    /// canceled) or `timeout` elapses. An `unknown` job errors at once.
+    /// Block until the job is terminal (succeeded / failed / canceled)
+    /// or `timeout` elapses. Over TCP each round is a server-side
+    /// long-poll (`wait` op) — the handler thread parks, no status
+    /// busy-polling on the wire; over the spool the client polls
+    /// `status`. An `unknown` job errors at once.
     pub fn wait_terminal(&self, job: JobId, timeout: Duration) -> Result<StatusReply> {
         let deadline = Instant::now() + timeout;
         loop {
@@ -790,14 +931,23 @@ impl DaemonClient {
             if remaining.is_zero() {
                 bail!("{job} still not terminal after {:.1}s", timeout.as_secs_f64());
             }
-            let st = self.status(job, remaining)?;
+            let st = match &self.transport {
+                Transport::Spool { .. } => self.status(job, remaining)?,
+                Transport::Tcp { .. } => {
+                    let timeout_ms = u64::try_from(remaining.as_millis()).unwrap_or(u64::MAX);
+                    let rsp = self.request(&Request::Wait { job, timeout_ms }, remaining)?;
+                    decode_status(job, &rsp)?
+                }
+            };
             if st.state == "unknown" {
                 bail!("daemon does not know {job}");
             }
             if st.is_terminal() {
                 return Ok(st);
             }
-            std::thread::sleep(Duration::from_millis(5));
+            if matches!(self.transport, Transport::Spool { .. }) {
+                std::thread::sleep(Duration::from_millis(5));
+            }
         }
     }
 
@@ -815,12 +965,44 @@ impl DaemonClient {
             queue: field("queue"),
             active: field("active"),
             waiting: field("waiting"),
+            conns: field("conns"),
         })
     }
 
     pub fn shutdown(&self, timeout: Duration) -> Result<()> {
         self.request(&Request::Shutdown, timeout).map(|_| ())
     }
+}
+
+/// Shared response unwrapping: `"ok": true` passes the object
+/// through, anything else surfaces the daemon's `"error"` message.
+fn unwrap_response(body: &str) -> Result<Json> {
+    let v = Json::parse(body).with_context(|| format!("malformed daemon response `{body}`"))?;
+    if v.get("ok").and_then(Json::as_bool) == Some(true) {
+        return Ok(v);
+    }
+    let msg = v
+        .get("error")
+        .and_then(Json::as_str)
+        .unwrap_or("daemon reported an unspecified error")
+        .to_string();
+    bail!("{msg}");
+}
+
+/// Decode the status-shaped fields shared by `status` and `wait`
+/// responses.
+fn decode_status(job: JobId, rsp: &Json) -> Result<StatusReply> {
+    Ok(StatusReply {
+        job,
+        state: rsp
+            .get("state")
+            .and_then(Json::as_str)
+            .context("status response is missing `state`")?
+            .to_string(),
+        completed: rsp.get("completed").and_then(Json::as_u64).unwrap_or(0),
+        total: rsp.get("total").and_then(Json::as_u64).unwrap_or(0),
+        error: rsp.get("error").and_then(Json::as_str).map(|s| s.to_string()),
+    })
 }
 
 // ===================================================================
@@ -1124,13 +1306,31 @@ pub struct Daemon {
     /// against). Grows with jobs served, but at ~3 words per job —
     /// unlike job *reports*, which the manager slims (see
     /// [`crate::jobs::JobReport`]), this is negligible at any
-    /// realistic churn.
-    submitted: HashMap<u64, UpstreamInfo>,
+    /// realistic churn. Mutex-wrapped so the spool loop and every TCP
+    /// handler thread share one `&Daemon`; the lock also serializes
+    /// submissions, which keeps `@jN` chain resolution race-free.
+    submitted: Mutex<HashMap<u64, UpstreamInfo>>,
     /// Last orphaned-response reap (see [`Daemon::poll_once`]).
-    last_reap: Instant,
+    last_reap: Mutex<Instant>,
     /// Echo one line per processed command (the CLI sets this; tests
     /// keep it quiet).
     pub log: bool,
+    /// The TCP front door, bound eagerly by [`Daemon::listen`] so an
+    /// ephemeral `:0` port is known before [`Daemon::run`]; `None`
+    /// keeps the daemon file-spool-only.
+    listener: Option<TcpListener>,
+    /// Shared token every TCP request must present; `None` = open.
+    auth: Option<String>,
+    /// Concurrent TCP connection cap (over-cap connects get one typed
+    /// error frame, then a close).
+    max_conns: usize,
+    /// Raised by a `shutdown` request on either transport; the accept
+    /// loop, every handler thread, and every parked `wait` watch it.
+    stop: AtomicBool,
+    /// Live TCP connections — incremented at accept, decremented when
+    /// the handler thread exits (a `Drop` guard, so panics cannot leak
+    /// the count). Reported by `stats` as the thread-leak check.
+    conns: AtomicUsize,
 }
 
 /// How often the daemon looks for orphaned response files, and how
@@ -1168,6 +1368,7 @@ impl Daemon {
                 );
             }
         }
+        let net = cfg.net.clone();
         let mgr = JobManager::new(cfg);
         let workers = mgr.fleet_config().worker_hint();
         let marker = Json::Obj(vec![
@@ -1181,12 +1382,52 @@ impl Daemon {
         let mut daemon = Daemon {
             mgr,
             dir,
-            submitted: HashMap::new(),
-            last_reap: Instant::now(),
+            submitted: Mutex::new(HashMap::new()),
+            last_reap: Mutex::new(Instant::now()),
             log: false,
+            listener: None,
+            auth: net.auth_token,
+            max_conns: net.max_conns.max(1),
+            stop: AtomicBool::new(false),
+            conns: AtomicUsize::new(0),
         };
         daemon.recover();
+        if let Some(addr) = &net.listen {
+            daemon.listen(addr)?;
+        }
         Ok(daemon)
+    }
+
+    /// Bind the TCP front door (also reachable via the config key
+    /// `listen` / `serve --listen`). Eager: the socket is bound here,
+    /// before [`Daemon::run`], so `host:0` resolves its ephemeral port
+    /// immediately; the bound address is returned and recorded in the
+    /// `daemon.json` marker under `"addr"` for discovery.
+    pub fn listen(&mut self, addr: &str) -> Result<SocketAddr> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding daemon listener on {addr}"))?;
+        let local = listener
+            .local_addr()
+            .context("resolving bound listener address")?;
+        // Non-blocking so the accept loop can watch the stop flag.
+        listener
+            .set_nonblocking(true)
+            .context("setting listener non-blocking")?;
+        let body = std::fs::read_to_string(self.dir.join(MARKER))
+            .with_context(|| format!("reading {MARKER} to record the listen address"))?;
+        let Json::Obj(mut fields) = Json::parse(&body)? else {
+            bail!("{MARKER} is not a JSON object");
+        };
+        fields.retain(|(k, _)| k != "addr");
+        fields.push(("addr".to_string(), Json::Str(local.to_string())));
+        write_atomic(&self.dir.join(MARKER), &Json::Obj(fields).render())?;
+        self.listener = Some(listener);
+        Ok(local)
+    }
+
+    /// The bound TCP address, if [`Daemon::listen`] has been called.
+    pub fn local_addr(&self) -> Option<SocketAddr> {
+        self.listener.as_ref().and_then(|l| l.local_addr().ok())
     }
 
     /// Crash-restart recovery: against a durable substrate
@@ -1203,7 +1444,7 @@ impl Daemon {
     /// already retired (retention/TTL) is skipped with a warning; its
     /// residue stays subject to the usual sweeps. In-memory backends
     /// scan empty and recovery is a no-op.
-    fn recover(&mut self) {
+    fn recover(&self) {
         let mut ids: Vec<u64> = self
             .mgr
             .state()
@@ -1213,13 +1454,14 @@ impl Daemon {
             .collect();
         ids.sort_unstable();
         let mut recovered = 0usize;
+        let mut submitted = self.submitted.lock().expect("submitted table poisoned");
         for id in ids {
             let Some(body) = self.mgr.state().get(&Manifest::key(id)) else {
                 continue;
             };
             let staged = Manifest::parse(&body).and_then(|m| {
-                let job = self.stage_one(&m, Some(JobId(id)))?;
-                self.submitted.insert(job.0, m.info()?);
+                let job = self.stage_one(&m, Some(JobId(id)), &submitted)?;
+                submitted.insert(job.0, m.info()?);
                 Ok(())
             });
             match staged {
@@ -1235,25 +1477,177 @@ impl Daemon {
         }
     }
 
-    /// Serve until a `shutdown` command, then stop the fleet and
-    /// return its aggregate report.
-    pub fn run(mut self) -> Result<crate::jobs::FleetReport> {
+    /// Serve until a `shutdown` command (on either transport), then
+    /// stop the fleet and return its aggregate report. When the TCP
+    /// front door is bound, an accept-loop thread and one handler
+    /// thread per connection run alongside the spool loop; shutdown
+    /// raises [`Daemon::stop`], the accept loop exits on its next
+    /// tick, and handler threads drain within one read-timeout tick
+    /// (their blocking reads time out and recheck the flag).
+    pub fn run(self) -> Result<crate::jobs::FleetReport> {
+        let daemon = Arc::new(self);
+        let accept = daemon.listener.is_some().then(|| {
+            let d = daemon.clone();
+            std::thread::spawn(move || d.accept_loop())
+        });
         let outcome = loop {
-            match self.poll_once() {
+            if daemon.stop.load(Ordering::SeqCst) {
+                // A TCP handler saw `shutdown`.
+                break Ok(());
+            }
+            match daemon.poll_once() {
                 Ok(true) => break Ok(()),
                 Ok(false) => std::thread::sleep(DAEMON_POLL),
                 Err(e) => break Err(e),
             }
         };
-        let _ = std::fs::remove_file(self.dir.join(MARKER));
-        let fleet = self.mgr.shutdown();
+        daemon.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = accept {
+            let _ = h.join();
+        }
+        // Wait for the handler threads to drop their `Arc`s — bounded
+        // by CONN_POLL (idle reads) / WAIT_POLL (parked waits) plus
+        // one in-flight response write.
+        let mut daemon = daemon;
+        let this = loop {
+            match Arc::try_unwrap(daemon) {
+                Ok(d) => break d,
+                Err(d) => {
+                    daemon = d;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        };
+        let _ = std::fs::remove_file(this.dir.join(MARKER));
+        let fleet = this.mgr.shutdown();
         outcome.map(|()| fleet)
+    }
+
+    /// Accept TCP connections until shutdown. Each connection gets its
+    /// own handler thread; over the cap, the connection receives one
+    /// typed error frame and is closed (never silently hung).
+    fn accept_loop(self: Arc<Daemon>) {
+        let listener = self.listener.as_ref().expect("accept loop needs a bound listener");
+        while !self.stop.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    if self.conns.fetch_add(1, Ordering::SeqCst) >= self.max_conns {
+                        self.conns.fetch_sub(1, Ordering::SeqCst);
+                        let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+                        let msg = err_response(&format!(
+                            "connection cap reached ({} live connections); retry later",
+                            self.max_conns
+                        ));
+                        let _ = wire::write_frame(&mut &stream, &msg.render());
+                        continue;
+                    }
+                    let d = self.clone();
+                    std::thread::spawn(move || {
+                        // Decrement on every exit path, panics included
+                        // — `conns` is the leak check tests assert on.
+                        struct Guard(Arc<Daemon>);
+                        impl Drop for Guard {
+                            fn drop(&mut self) {
+                                self.0.conns.fetch_sub(1, Ordering::SeqCst);
+                            }
+                        }
+                        let guard = Guard(d);
+                        guard.0.serve_conn(stream);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                // Transient accept errors (EMFILE, aborted handshake):
+                // back off a tick; the door stays open.
+                Err(_) => std::thread::sleep(ACCEPT_POLL),
+            }
+        }
+    }
+
+    /// One TCP connection: frames in, responses out, until clean EOF,
+    /// a framing violation, or shutdown. Frame-level violations
+    /// (oversized declared length, truncation, a mid-frame stall,
+    /// non-UTF-8) close the connection; *request*-level problems
+    /// (garbage JSON, bad auth, unknown op, bad specs) get a typed
+    /// error response and the connection lives on.
+    fn serve_conn(&self, stream: TcpStream) {
+        let _ = stream.set_nodelay(true);
+        if stream.set_read_timeout(Some(CONN_POLL)).is_err()
+            || stream.set_write_timeout(Some(WRITE_TIMEOUT)).is_err()
+        {
+            return;
+        }
+        loop {
+            let body = match wire::read_frame_interruptible(&stream, &self.stop, FRAME_DEADLINE) {
+                Ok(Some(body)) => body,
+                Ok(None) | Err(_) => return,
+            };
+            let (rsp, stop) = self.dispatch_net(&body);
+            if wire::write_frame(&mut &stream, &rsp.render()).is_err() {
+                return;
+            }
+            if stop {
+                self.stop.store(true, Ordering::SeqCst);
+                return;
+            }
+        }
+    }
+
+    /// Authenticate + decode + execute one TCP request body.
+    fn dispatch_net(&self, body: &str) -> (Json, bool) {
+        let parsed = match Json::parse(body) {
+            Ok(v) => v,
+            Err(e) => return (err_response(&format!("bad request: {e:#}")), false),
+        };
+        // Auth precedes dispatch: an unauthenticated caller learns
+        // nothing — not even whether its op or job id was valid.
+        if let Some(expected) = &self.auth {
+            match parsed.get("auth").and_then(Json::as_str) {
+                Some(token) if token == expected => {}
+                Some(_) => return (err_response("unauthorized: bad `auth` token"), false),
+                None => {
+                    return (err_response("unauthorized: request carries no `auth` token"), false)
+                }
+            }
+        }
+        let req = match Request::decode(body) {
+            Ok(req) => req,
+            Err(e) => return (err_response(&format!("bad request: {e:#}")), false),
+        };
+        if self.log {
+            println!("daemon: {req:?} (tcp)");
+        }
+        match req {
+            // Only TCP parks: each connection owns a thread, so a
+            // long-poll here never stalls another client.
+            Request::Wait { job, timeout_ms } => (self.wait_reply(job, timeout_ms, WAIT_CAP), false),
+            req => self.handle(req),
+        }
+    }
+
+    /// Serve one `wait`: poll the job until terminal, settled-unknown,
+    /// `min(timeout_ms, cap)` elapses, or shutdown. The response is
+    /// the usual status shape plus `"terminal"` so the client knows
+    /// whether to re-issue.
+    fn wait_reply(&self, job: JobId, timeout_ms: u64, cap: Duration) -> Json {
+        let deadline = Instant::now() + cap.min(Duration::from_millis(timeout_ms));
+        loop {
+            let (mut fields, state) = self.status_fields(job);
+            let terminal = matches!(state, "succeeded" | "failed" | "canceled");
+            let settled = terminal || state == "unknown";
+            if settled || Instant::now() >= deadline || self.stop.load(Ordering::SeqCst) {
+                fields.push(("terminal".to_string(), Json::Bool(terminal)));
+                return ok_response(fields);
+            }
+            std::thread::sleep(WAIT_POLL);
+        }
     }
 
     /// Drain the commands currently spooled (in file-name order).
     /// Returns whether a `shutdown` command was among them. Exposed so
     /// tests and embedders can drive the loop themselves.
-    pub fn poll_once(&mut self) -> Result<bool> {
+    pub fn poll_once(&self) -> Result<bool> {
         let cmds = cmd_dir(&self.dir);
         let mut batch: Vec<PathBuf> = std::fs::read_dir(&cmds)
             .with_context(|| format!("reading spool {}", cmds.display()))?
@@ -1293,8 +1687,10 @@ impl Daemon {
                 break;
             }
         }
-        if self.last_reap.elapsed() >= REAP_PERIOD {
-            self.last_reap = Instant::now();
+        let mut last = self.last_reap.lock().expect("reap timestamp poisoned");
+        if last.elapsed() >= REAP_PERIOD {
+            *last = Instant::now();
+            drop(last);
             self.reap_orphan_responses();
         }
         Ok(shutdown)
@@ -1323,7 +1719,7 @@ impl Daemon {
     }
 
     /// Execute one request; returns `(response, shutdown?)`.
-    fn handle(&mut self, req: Request) -> (Json, bool) {
+    fn handle(&self, req: Request) -> (Json, bool) {
         match req {
             Request::Submit {
                 specs,
@@ -1341,25 +1737,17 @@ impl Daemon {
                 (rsp, false)
             }
             Request::Status { job } => {
-                let mut fields: Vec<(String, Json)> =
-                    vec![("job".to_string(), Json::Str(job.to_string()))];
-                let state = match self.mgr.status(job) {
-                    JobStatus::Unknown => "unknown",
-                    JobStatus::Waiting => "waiting",
-                    JobStatus::Running { completed, total } => {
-                        fields.push(("completed".to_string(), Json::Num(completed as f64)));
-                        fields.push(("total".to_string(), Json::Num(total as f64)));
-                        "running"
-                    }
-                    JobStatus::Succeeded => "succeeded",
-                    JobStatus::Failed(e) => {
-                        fields.push(("error".to_string(), Json::Str(e)));
-                        "failed"
-                    }
-                    JobStatus::Canceled => "canceled",
-                };
-                fields.insert(1, ("state".to_string(), Json::Str(state.into())));
+                let (fields, _state) = self.status_fields(job);
                 (ok_response(fields), false)
+            }
+            // Over the spool there is one single-threaded loop serving
+            // every client — parking it inside one request would starve
+            // the rest, so `wait` degrades to an immediate snapshot
+            // (the client keeps polling; `terminal` tells it when to
+            // stop). Only the TCP path, one thread per connection,
+            // parks for real.
+            Request::Wait { job, timeout_ms } => {
+                (self.wait_reply(job, timeout_ms, Duration::ZERO), false)
             }
             Request::Cancel { job } => {
                 let canceled = Json::Bool(self.mgr.cancel(job));
@@ -1373,11 +1761,36 @@ impl Daemon {
                     ("queue".to_string(), Json::Num(self.mgr.queue_len() as f64)),
                     ("active".to_string(), Json::Num(self.mgr.active_jobs() as f64)),
                     ("waiting".to_string(), Json::Num(self.mgr.waiting_jobs() as f64)),
+                    ("conns".to_string(), Json::Num(self.conns.load(Ordering::SeqCst) as f64)),
                 ];
                 (ok_response(fields), false)
             }
             Request::Shutdown => (ok_response(Vec::new()), true),
         }
+    }
+
+    /// One job's status as response fields plus its state name —
+    /// shared by `status` responses and the `wait` poll loop.
+    fn status_fields(&self, job: JobId) -> (Vec<(String, Json)>, &'static str) {
+        let mut fields: Vec<(String, Json)> =
+            vec![("job".to_string(), Json::Str(job.to_string()))];
+        let state = match self.mgr.status(job) {
+            JobStatus::Unknown => "unknown",
+            JobStatus::Waiting => "waiting",
+            JobStatus::Running { completed, total } => {
+                fields.push(("completed".to_string(), Json::Num(completed as f64)));
+                fields.push(("total".to_string(), Json::Num(total as f64)));
+                "running"
+            }
+            JobStatus::Succeeded => "succeeded",
+            JobStatus::Failed(e) => {
+                fields.push(("error".to_string(), Json::Str(e)));
+                "failed"
+            }
+            JobStatus::Canceled => "canceled",
+        };
+        fields.insert(1, ("state".to_string(), Json::Str(state.into())));
+        (fields, state)
     }
 
     /// The staging half of a submit: generate the request's input
@@ -1394,7 +1807,7 @@ impl Daemon {
     /// rare (activation failures); their message lists the ids already
     /// running so the client can still manage them.
     fn stage_and_submit(
-        &mut self,
+        &self,
         specs: &str,
         seed: u64,
         retention: Option<RetentionPolicy>,
@@ -1404,6 +1817,10 @@ impl Daemon {
         if entries.is_empty() {
             bail!("empty spec list");
         }
+        // Holding the lock across both phases serializes concurrent
+        // TCP submits: an `@jN` reference resolved in phase 1 cannot
+        // be raced out from under phase 2.
+        let mut submitted = self.submitted.lock().expect("submitted table poisoned");
         // Phase 1: validate everything; nothing is submitted yet. The
         // plan records each entry's resulting shape so later entries
         // (and later requests, via `submitted`) can chain onto it.
@@ -1418,7 +1835,7 @@ impl Daemon {
                 None => None,
                 Some(ChainRef::Index(k)) => Some(plan[k - 1]), // bounds checked by parse_specs
                 Some(ChainRef::Job(job)) => Some(
-                    self.submitted
+                    submitted
                         .get(&job.0)
                         .copied()
                         .with_context(|| format!("chain reference @{job}: no such daemon job"))?,
@@ -1472,7 +1889,7 @@ impl Daemon {
                     Some(ChainRef::Job(job)) => Some(job.0),
                 },
             };
-            let job = self.stage_one(&manifest, None).map_err(|err| {
+            let job = self.stage_one(&manifest, None, &submitted).map_err(|err| {
                 if out.is_empty() {
                     err
                 } else {
@@ -1486,7 +1903,7 @@ impl Daemon {
             // the gap loses only this job's recoverability, never its
             // correctness (the namespace is residue the sweeps own).
             self.mgr.state().set(&Manifest::key(job.0), &manifest.render());
-            self.submitted.insert(job.0, manifest.info()?);
+            submitted.insert(job.0, manifest.info()?);
             out.push(job);
         }
         Ok(out)
@@ -1495,7 +1912,15 @@ impl Daemon {
     /// Stage one job from its manifest and hand it to the fleet —
     /// the single staging path shared by fresh submissions and crash
     /// recovery (`forced` carries the original id to re-occupy).
-    fn stage_one(&self, m: &Manifest, forced: Option<JobId>) -> Result<JobId> {
+    /// Callers pass the `submitted` table they already hold locked;
+    /// taking [`Daemon::submitted`] here would deadlock with
+    /// `stage_and_submit`, which locks it across both phases.
+    fn stage_one(
+        &self,
+        m: &Manifest,
+        forced: Option<JobId>,
+        submitted: &HashMap<u64, UpstreamInfo>,
+    ) -> Result<JobId> {
         let kind = m.kind()?;
         if m.block == 0 || m.n == 0 {
             bail!("manifest has an empty shape ({}x{} blocks of {})", m.n, m.n, m.block);
@@ -1547,8 +1972,7 @@ impl Daemon {
                 // recovery the upstream's manifest (processed first, in
                 // id order) did the same — a missing entry means the
                 // upstream's namespace was already retired.
-                let up_kind = self
-                    .submitted
+                let up_kind = submitted
                     .get(&up)
                     .map(|u| u.kind)
                     .with_context(|| format!("chain reference @{up_job}: no such daemon job"))?;
@@ -1646,6 +2070,7 @@ mod tests {
                 max_inflight: None,
             },
             Request::Status { job: JobId(3) },
+            Request::Wait { job: JobId(5), timeout_ms: 1500 },
             Request::Cancel { job: JobId(12) },
             Request::Stats,
             Request::Shutdown,
@@ -1655,6 +2080,17 @@ mod tests {
         }
         assert!(Request::decode("{\"op\":\"fry\"}").is_err());
         assert!(Request::decode("{\"op\":\"status\"}").is_err(), "missing job");
+    }
+
+    #[test]
+    fn auth_rides_alongside_the_request() {
+        let req = Request::Status { job: JobId(3) };
+        let body = req.encode_with_auth(Some("s3cret"));
+        let v = Json::parse(&body).unwrap();
+        assert_eq!(v.get("auth").and_then(Json::as_str), Some("s3cret"));
+        // Decode ignores the extra field — same request either way.
+        assert_eq!(Request::decode(&body).unwrap(), req);
+        assert_eq!(req.encode_with_auth(None), req.encode());
     }
 
     #[test]

@@ -1,0 +1,253 @@
+//! Length-prefixed frame codec for the daemon's TCP front door.
+//!
+//! One frame per request and one per response: a 4-byte big-endian
+//! `u32` length followed by that many bytes of UTF-8 JSON (the same
+//! documents the file spool carries — see the module docs of
+//! [`crate::daemon`]). The prefix is what makes the stream
+//! self-delimiting without buffering an unbounded scan for a
+//! terminator, and the [`MAX_FRAME`] cap is the first line of defense
+//! against a hostile client declaring a multi-gigabyte body.
+//!
+//! Two read entry points share the decode logic:
+//!
+//! * [`read_frame`] — plain blocking read for clients, which set one
+//!   generous socket timeout for the whole request.
+//! * [`read_frame_interruptible`] — the server side. The socket's
+//!   read timeout acts as a poll tick: at a frame boundary the
+//!   connection may idle indefinitely (re-checking the shutdown flag
+//!   each tick), but once the first byte of a frame arrives the rest
+//!   must land within `frame_deadline` — a client trickling one byte
+//!   at a time (slow-loris) is cut off instead of pinning a handler
+//!   thread forever.
+//!
+//! Framing violations (oversized declared length, truncated frame,
+//! non-UTF-8 body, mid-frame stall) are [`io::Error`]s — the caller
+//! closes the connection; *request-level* problems (garbage JSON, bad
+//! auth, unknown op) are not this layer's business and get typed
+//! error responses upstream.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// Hard cap on a frame body. Requests are spec strings and job
+/// handles — a few hundred bytes; responses top out at a stats
+/// object. 1 MiB is three orders of magnitude of headroom and small
+/// enough that a hostile declared length cannot balloon the server.
+pub const MAX_FRAME: usize = 1 << 20;
+
+/// Serialize one frame: big-endian `u32` length, then the body.
+pub fn write_frame(w: &mut impl Write, body: &str) -> io::Result<()> {
+    let bytes = body.as_bytes();
+    if bytes.len() > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("frame body of {} bytes exceeds the {MAX_FRAME}-byte cap", bytes.len()),
+        ));
+    }
+    w.write_all(&(bytes.len() as u32).to_be_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()
+}
+
+/// Blocking frame read. `Ok(None)` is a clean EOF at a frame
+/// boundary; EOF anywhere else is an error (the peer died mid-frame).
+pub fn read_frame(r: &mut impl Read) -> io::Result<Option<String>> {
+    let mut header = [0u8; 4];
+    match read_until_eof(r, &mut header)? {
+        0 => return Ok(None),
+        4 => {}
+        n => {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                format!("connection closed {n} bytes into a 4-byte frame header"),
+            ))
+        }
+    }
+    let len = checked_len(header)?;
+    let mut body = vec![0u8; len];
+    let got = read_until_eof(r, &mut body)?;
+    if got < len {
+        return Err(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            format!("connection closed {got} bytes into a {len}-byte frame body"),
+        ));
+    }
+    decode_body(body).map(Some)
+}
+
+/// Server-side frame read over a socket whose *read timeout* is the
+/// poll tick (set it before calling; ~100ms). Returns `Ok(None)` on
+/// clean EOF or when `stop` is raised; framing violations and
+/// mid-frame stalls past `frame_deadline` are errors.
+pub fn read_frame_interruptible(
+    stream: &TcpStream,
+    stop: &AtomicBool,
+    frame_deadline: Duration,
+) -> io::Result<Option<String>> {
+    let mut r = stream;
+    let mut header = [0u8; 4];
+    let mut filled = 0usize;
+    // The deadline arms on the frame's first byte: idling between
+    // frames is a healthy keep-alive connection, not an attack.
+    let mut started: Option<Instant> = None;
+    while filled < 4 {
+        match r.read(&mut header[filled..]) {
+            Ok(0) if filled == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    format!("connection closed {filled} bytes into a 4-byte frame header"),
+                ))
+            }
+            Ok(n) => {
+                filled += n;
+                started.get_or_insert_with(Instant::now);
+            }
+            Err(e) if retryable(&e) => {
+                if stop.load(Ordering::SeqCst) {
+                    return Ok(None);
+                }
+                check_deadline(started, frame_deadline)?;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    let len = checked_len(header)?;
+    let mut body = vec![0u8; len];
+    let mut filled = 0usize;
+    while filled < len {
+        match r.read(&mut body[filled..]) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    format!("connection closed {filled} bytes into a {len}-byte frame body"),
+                ))
+            }
+            Ok(n) => filled += n,
+            Err(e) if retryable(&e) => {
+                if stop.load(Ordering::SeqCst) {
+                    return Ok(None);
+                }
+                check_deadline(started, frame_deadline)?;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    decode_body(body).map(Some)
+}
+
+/// Timeout-tick errors a poll loop absorbs (Linux surfaces a recv
+/// timeout as `WouldBlock`, other platforms as `TimedOut`).
+fn retryable(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut | io::ErrorKind::Interrupted
+    )
+}
+
+fn check_deadline(started: Option<Instant>, frame_deadline: Duration) -> io::Result<()> {
+    if started.is_some_and(|t0| t0.elapsed() >= frame_deadline) {
+        return Err(io::Error::new(
+            io::ErrorKind::TimedOut,
+            format!("frame stalled mid-read past the {:.1}s deadline", frame_deadline.as_secs_f64()),
+        ));
+    }
+    Ok(())
+}
+
+fn checked_len(header: [u8; 4]) -> io::Result<usize> {
+    let len = u32::from_be_bytes(header) as usize;
+    if len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("declared frame length {len} exceeds the {MAX_FRAME}-byte cap"),
+        ));
+    }
+    Ok(len)
+}
+
+fn decode_body(body: Vec<u8>) -> io::Result<String> {
+    String::from_utf8(body)
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "frame body is not valid UTF-8"))
+}
+
+/// Read as much of `buf` as the stream has before EOF; never errors on
+/// a short read, only on transport failure.
+fn read_until_eof(r: &mut impl Read, buf: &mut [u8]) -> io::Result<usize> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => break,
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(filled)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn frame_bytes(body: &str) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_frame(&mut out, body).unwrap();
+        out
+    }
+
+    #[test]
+    fn frames_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, "{\"op\":\"stats\"}").unwrap();
+        write_frame(&mut buf, "").unwrap();
+        write_frame(&mut buf, "héllo \u{1F680}").unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some("{\"op\":\"stats\"}"));
+        assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some(""));
+        assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some("héllo \u{1F680}"));
+        // Clean EOF at the frame boundary, repeatably.
+        assert_eq!(read_frame(&mut r).unwrap(), None);
+        assert_eq!(read_frame(&mut r).unwrap(), None);
+    }
+
+    #[test]
+    fn oversized_frames_rejected_both_ways() {
+        let big = "x".repeat(MAX_FRAME + 1);
+        let err = write_frame(&mut Vec::new(), &big).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+        // A declared length over the cap is rejected from the header
+        // alone — no allocation, no read of the body.
+        let mut bytes = ((MAX_FRAME + 1) as u32).to_be_bytes().to_vec();
+        bytes.extend_from_slice(b"ignored");
+        let err = read_frame(&mut Cursor::new(bytes)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // Right at the cap is fine.
+        let exact = "y".repeat(MAX_FRAME);
+        let bytes = frame_bytes(&exact);
+        assert_eq!(read_frame(&mut Cursor::new(bytes)).unwrap().as_deref(), Some(exact.as_str()));
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_hang() {
+        // Mid-header EOF.
+        let err = read_frame(&mut Cursor::new(vec![0u8, 0])).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        // Mid-body EOF.
+        let mut bytes = frame_bytes("{\"op\":\"stats\"}");
+        bytes.truncate(bytes.len() - 3);
+        let err = read_frame(&mut Cursor::new(bytes)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn non_utf8_body_rejected() {
+        let mut bytes = 2u32.to_be_bytes().to_vec();
+        bytes.extend_from_slice(&[0xFF, 0xFE]);
+        let err = read_frame(&mut Cursor::new(bytes)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+}

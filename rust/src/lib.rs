@@ -42,9 +42,13 @@
 //!   ([`config::GcConfig`]).
 //! * [`daemon`] — long-lived service mode (`numpywren serve`): one
 //!   `JobManager` serving many clients over a durable file-based
-//!   command queue (spool directory of JSON requests), with a client
-//!   half (`numpywren submit/status/cancel/shutdown --daemon-dir …`)
-//!   so several shells feed one shared fleet.
+//!   command queue (spool directory of JSON requests) and, with
+//!   `--listen`, a TCP front door ([`daemon::wire`]: length-prefixed
+//!   JSON frames, shared-token auth, a server-side long-poll `wait`
+//!   op, per-connection handler threads under a connection cap), with
+//!   a client half (`numpywren submit/status/wait/cancel/shutdown
+//!   --daemon-dir …|--connect …`) so several shells feed one shared
+//!   fleet.
 //! * [`provisioner`] — the auto-scaling policy (`sf` scale-up factor,
 //!   `T_timeout` idle scale-down), sized from the aggregate queue
 //!   depth across all jobs.

@@ -70,12 +70,23 @@
 //! | `straggle` | `FRAC:MULT`                            | slow workers                 |
 //! | `partition`| `FRAC:DUR`                             | unreachability windows       |
 //! | `kv_err`   | probability in [0,1]                   | internal KV attempt failures |
+//! | `skew`     | signed duration (`50ms`, `-2s`)        | substrate clock offset vs workers' |
 //! | `seed`     | u64                                    | the PRNG seed                |
 //!
 //! Latency specs: a bare duration (`5ms`, `250us`, `0.01s`, plain
 //! seconds) means fixed; `fixed:D`, `uniform:LO:HI`, and
 //! `lognorm:MEDIAN[:SIGMA]` (sigma defaults to 0.5) select the
-//! distribution. `straggle` multiplies the *shaped* blob latency, so
+//! distribution. `skew=D` (optionally negative: `skew=-50ms`) is not a
+//! fault injected by these decorators but a *clock* perturbation: the
+//! substrate builder wraps the queue backends' injected
+//! [`Clock`](crate::storage::clock::Clock) in a
+//! [`SkewClock`](crate::storage::clock::SkewClock) offset by `D`, so
+//! lease stamping and expiry run on a timeline shifted relative to the
+//! workers' — the cross-machine clock-disagreement scenario of a real
+//! S3/SQS deployment. Because a queue reads the *same* skewed handle
+//! for both the lease take and the expiry check, a constant skew must
+//! not change redelivery behavior; the conformance suite pins that
+//! invariance. `straggle` multiplies the *shaped* blob latency, so
 //! it requires a `lat`/`read_lat`/`write_lat` clause (rejected at
 //! parse time otherwise — a stragglerless straggler experiment would
 //! silently measure nothing). Everything is drawn from one seeded xoshiro stream,
@@ -287,6 +298,12 @@ pub struct ChaosConfig {
     /// Per-attempt internal KV failure probability (`kv_err=P`),
     /// absorbed by bounded in-decorator retries.
     pub kv_err: f64,
+    /// Signed clock skew (nanoseconds) the substrate's queue clock
+    /// runs at relative to the workers' (`skew=D`; applied by
+    /// [`Substrate::build_base`](crate::storage::Substrate) via
+    /// [`SkewClock`](crate::storage::clock::SkewClock), not by the
+    /// decorators in this module).
+    pub skew_ns: i64,
     pub seed: u64,
 }
 
@@ -306,6 +323,7 @@ impl Default for ChaosConfig {
             partition_frac: 0.0,
             partition_dur: Duration::ZERO,
             kv_err: 0.0,
+            skew_ns: 0,
             seed: 0x0C1A05,
         }
     }
@@ -360,11 +378,21 @@ impl ChaosConfig {
                     c.partition_dur = parse_duration(d)?;
                 }
                 "kv_err" => c.kv_err = prob(v)?,
+                "skew" => {
+                    let (sign, mag) = match v.strip_prefix('-') {
+                        Some(rest) => (-1i64, rest),
+                        None => (1i64, v),
+                    };
+                    let d = parse_duration(mag)?;
+                    let ns: i64 = i64::try_from(d.as_nanos())
+                        .map_err(|_| anyhow!("skew `{v}` out of range"))?;
+                    c.skew_ns = sign * ns;
+                }
                 "seed" => c.seed = v.parse().map_err(|_| anyhow!("bad seed `{v}`"))?,
                 other => bail!(
                     "unknown chaos key `{other}` \
                      (err|drop|dup|lat|read_lat|write_lat|send_lat|recv_lat|kv_lat|straggle|\
-                      partition|kv_err|seed)"
+                      partition|kv_err|skew|seed)"
                 ),
             }
         }
@@ -899,7 +927,7 @@ mod tests {
     fn chaos_config_grammar() {
         let c = ChaosConfig::parse(
             "err=0.01, drop=0.05,dup=0.02,lat=lognorm:5ms,send_lat=2ms,recv_lat=1ms,\
-             straggle=0.1:16,partition=0.02:50ms,kv_err=0.1,seed=9",
+             straggle=0.1:16,partition=0.02:50ms,kv_err=0.1,skew=250ms,seed=9",
         )
         .unwrap();
         assert_eq!(c.err, 0.01);
@@ -920,7 +948,13 @@ mod tests {
         assert_eq!(c.partition_frac, 0.02);
         assert_eq!(c.partition_dur, Duration::from_millis(50));
         assert_eq!(c.kv_err, 0.1);
+        assert_eq!(c.skew_ns, 250_000_000);
         assert_eq!(c.seed, 9);
+        // Skew is signed: negative puts the substrate behind the fleet.
+        assert_eq!(ChaosConfig::parse("skew=-50ms").unwrap().skew_ns, -50_000_000);
+        assert_eq!(ChaosConfig::parse("skew=2s").unwrap().skew_ns, 2_000_000_000);
+        assert_eq!(ChaosConfig::parse("skew=0ms").unwrap().skew_ns, 0);
+        assert!(ChaosConfig::parse("skew=soon").is_err());
         // Empty body → all defaults (a no-op layer).
         assert_eq!(ChaosConfig::parse("").unwrap(), ChaosConfig::default());
         assert!(ChaosConfig::parse("err=2").is_err());

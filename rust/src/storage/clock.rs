@@ -5,11 +5,48 @@
 //! and lets the simulator reuse the same semantics.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Injectable time source.
 pub trait Clock: Send + Sync + 'static {
     fn now(&self) -> Duration;
+}
+
+/// A clock offset from another by a constant signed skew — the
+/// substrate's view of time when its wall clock disagrees with the
+/// workers' (the `chaos(skew=…)` clause; see
+/// [`crate::storage::chaos`]). A positive skew puts the substrate
+/// *ahead* of the fleet, negative *behind* (clamped at the epoch —
+/// `Clock::now` is an unsigned duration).
+///
+/// Because a queue backend both stamps leases and checks their expiry
+/// through the *same* clock handle, a constant offset cancels inside
+/// the substrate: lease lifetimes are preserved, only the absolute
+/// timeline shifts. That invariance is exactly what makes the §4.1
+/// at-least-once recovery protocol deployable across machines whose
+/// clocks disagree, and the regression tests pin it down.
+pub struct SkewClock {
+    inner: Arc<dyn Clock>,
+    /// Signed offset in nanoseconds added to the inner clock.
+    skew_ns: i64,
+}
+
+impl SkewClock {
+    pub fn new(inner: Arc<dyn Clock>, skew_ns: i64) -> Self {
+        SkewClock { inner, skew_ns }
+    }
+}
+
+impl Clock for SkewClock {
+    fn now(&self) -> Duration {
+        let base = self.inner.now();
+        if self.skew_ns >= 0 {
+            base + Duration::from_nanos(self.skew_ns as u64)
+        } else {
+            base.saturating_sub(Duration::from_nanos(self.skew_ns.unsigned_abs()))
+        }
+    }
 }
 
 /// Real wall-clock.
@@ -52,5 +89,28 @@ impl TestClock {
 impl Clock for TestClock {
     fn now(&self) -> Duration {
         Duration::from_nanos(self.now_ns.load(Ordering::SeqCst))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skew_clock_offsets_and_clamps() {
+        let base = Arc::new(TestClock::default());
+        base.advance(Duration::from_millis(100));
+        let ahead = SkewClock::new(base.clone(), 50_000_000);
+        assert_eq!(ahead.now(), Duration::from_millis(150));
+        let behind = SkewClock::new(base.clone(), -30_000_000);
+        assert_eq!(behind.now(), Duration::from_millis(70));
+        // A skew larger than the inner elapsed time clamps at the
+        // epoch instead of underflowing.
+        let way_behind = SkewClock::new(base.clone(), -500_000_000);
+        assert_eq!(way_behind.now(), Duration::ZERO);
+        // The skewed view tracks the inner clock tick for tick.
+        base.advance(Duration::from_millis(25));
+        assert_eq!(ahead.now(), Duration::from_millis(175));
+        assert_eq!(behind.now(), Duration::from_millis(95));
     }
 }

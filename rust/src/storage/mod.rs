@@ -73,8 +73,13 @@
 //! `kv_err=P` makes each KV RMW internally fail-and-retry with
 //! probability P (absorbed by a bounded in-decorator retry loop, so
 //! the infallible [`KvState`] contract is preserved while the
-//! control plane pays realistic retry latency). Everything is seeded
-//! (`seed=N`) and reproducible. The chaos-wrapped backends pass the
+//! control plane pays realistic retry latency), and `skew=D`
+//! (signed: `skew=-50ms`) offsets the clock the queue backends stamp
+//! and expire leases with relative to the fleet's — the cross-machine
+//! clock-disagreement scenario; a constant skew must leave lease
+//! semantics invariant because take and expiry read the same skewed
+//! handle (see [`SkewClock`]). Everything is seeded (`seed=N`) and
+//! reproducible. The chaos-wrapped backends pass the
 //! same conformance suite — the decorators perturb timing and
 //! delivery, never the contracts.
 //!
@@ -118,7 +123,7 @@ pub mod traits;
 
 pub use cache::{CacheConfig, CacheStats, CachedBlobStore};
 pub use chaos::{ChaosBlobStore, ChaosConfig, ChaosKvState, ChaosQueue, LatencyDist};
-pub use clock::{Clock, TestClock, WallClock};
+pub use clock::{Clock, SkewClock, TestClock, WallClock};
 pub use file::{FileBlobStore, FileKvState, FileQueue};
 pub use object_store::StrictBlobStore;
 pub use queue::StrictQueue;
@@ -197,6 +202,13 @@ impl Substrate {
         store_latency: Duration,
         clock: Arc<dyn Clock>,
     ) -> Substrate {
+        // `chaos(skew=…)` is a clock perturbation, not an op fault: the
+        // queue backends see time through a skewed lens relative to the
+        // fleet's clock (workers, monitor, provisioner keep `clock`).
+        let clock: Arc<dyn Clock> = match cfg.chaos.map(|c| c.skew_ns).unwrap_or(0) {
+            0 => clock,
+            ns => Arc::new(clock::SkewClock::new(clock, ns)),
+        };
         match &cfg.backend {
             SubstrateBackend::Strict => Substrate {
                 blob: Arc::new(StrictBlobStore::with_latency(store_latency)),
@@ -318,6 +330,8 @@ mod tests {
             "file:auto:4+chaos(lat=fixed:0us,seed=3)",
             "file:auto+cache(bytes=2m)",
             "file:auto:2+chaos(lat=fixed:0us,seed=3)+cache(bytes=2m)",
+            "sharded:4+chaos(skew=250ms,seed=3)",
+            "file:auto+chaos(skew=-250ms,seed=3)",
         ] {
             let cfg = SubstrateConfig::parse(spec).unwrap();
             let sub = Substrate::build(&cfg, lease, Duration::ZERO);

@@ -1,0 +1,546 @@
+//! Wire-protocol battery for the daemon's TCP front door.
+//!
+//! Four hardening layers, each pinned end-to-end against a real
+//! listening daemon:
+//!
+//! * **Malformed input** — truncated frames, oversized declared
+//!   lengths, garbage JSON, mid-frame disconnects, and a slow-loris
+//!   trickle. The daemon must never panic, never hang a handler
+//!   thread, and never leak a connection (`stats.conns` is the leak
+//!   check).
+//! * **Concurrency** — ~100 client threads interleaving
+//!   submit/status/wait/cancel/stats. Every accepted job completes
+//!   with tiles bit-identical to a reference run, job ids never
+//!   cross-talk between clients, and wrong/missing auth is rejected
+//!   on every op.
+//! * **Transport equivalence** — the same 2-job `@jN` chain through
+//!   TCP and through the file spool lands bit-identical tiles
+//!   (`max_abs_diff == 0.0`) and identical terminal statuses.
+//! * **CLI round-trip** — a real `numpywren serve --listen` child
+//!   process driven entirely through `--connect` subcommands,
+//!   discovering the ephemeral port from the `daemon.json` marker.
+
+use numpywren::config::{EngineConfig, ScalingMode, SubstrateConfig};
+use numpywren::daemon::{wire, Daemon, DaemonClient, Json, Request};
+use numpywren::jobs::job_prefix;
+use numpywren::storage::{BlobStore as _, Substrate};
+use numpywren::util::prng::Rng;
+use numpywren::JobId;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+const RPC: Duration = Duration::from_secs(30);
+const JOB_WAIT: Duration = Duration::from_secs(180);
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("npw_net_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A daemon config listening on an ephemeral localhost port.
+fn net_cfg(workers: usize, store: Option<&Path>, auth: Option<&str>) -> EngineConfig {
+    let mut cfg = EngineConfig {
+        scaling: ScalingMode::Fixed(workers),
+        job_timeout: Duration::from_secs(120),
+        ..EngineConfig::default()
+    };
+    cfg.set("listen", "127.0.0.1:0").unwrap();
+    if let Some(dir) = store {
+        cfg.set("substrate", &format!("file:{}:2", dir.display())).unwrap();
+    }
+    if let Some(token) = auth {
+        cfg.set("auth_token", token).unwrap();
+    }
+    cfg
+}
+
+/// Stand up an in-process daemon on its own thread; returns the bound
+/// address and the serve-thread handle (join it after `shutdown`).
+fn start(
+    cfg: EngineConfig,
+    spool: &Path,
+) -> (SocketAddr, std::thread::JoinHandle<anyhow::Result<numpywren::FleetReport>>) {
+    let d = Daemon::new(cfg, spool).unwrap();
+    let addr = d.local_addr().expect("net_cfg always listens");
+    (addr, std::thread::spawn(move || d.run()))
+}
+
+/// One raw request frame → one decoded JSON response on a throwaway
+/// connection (what `DaemonClient` does, minus the conveniences —
+/// lets tests send bodies a well-behaved client never would).
+fn raw_request(addr: SocketAddr, body: &str) -> Json {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(RPC)).unwrap();
+    wire::write_frame(&mut &stream, body).unwrap();
+    let rsp = wire::read_frame(&mut &stream).unwrap().expect("response frame");
+    Json::parse(&rsp).unwrap()
+}
+
+/// Sorted tile keys under one job's namespace.
+fn job_tiles(sub: &Substrate, job: JobId) -> Vec<String> {
+    let mut keys = sub.blob.scan_prefix(&job_prefix(job));
+    keys.sort_unstable();
+    keys
+}
+
+fn open_store(dir: &Path) -> Substrate {
+    let cfg = SubstrateConfig::parse(&format!("file:{}:2", dir.display())).unwrap();
+    Substrate::build(&cfg, Duration::from_secs(10), Duration::ZERO)
+}
+
+/// Assert two jobs (possibly in different stores, under different
+/// ids) hold bit-identical tile sets.
+fn assert_tiles_identical(a: (&Substrate, JobId), b: (&Substrate, JobId)) {
+    let (sub_a, job_a) = a;
+    let (sub_b, job_b) = b;
+    let keys_a = job_tiles(sub_a, job_a);
+    let keys_b = job_tiles(sub_b, job_b);
+    assert!(!keys_a.is_empty(), "{job_a} left no tiles to compare");
+    let strip = |keys: &[String], job: JobId| -> Vec<String> {
+        keys.iter().map(|k| k[job_prefix(job).len()..].to_string()).collect()
+    };
+    assert_eq!(strip(&keys_a, job_a), strip(&keys_b, job_b), "{job_a} vs {job_b} key sets");
+    for (ka, kb) in keys_a.iter().zip(&keys_b) {
+        let ta = sub_a.blob.get(0, ka).unwrap();
+        let tb = sub_b.blob.get(0, kb).unwrap();
+        assert_eq!(ta.max_abs_diff(&tb), 0.0, "{ka} vs {kb} differ");
+    }
+}
+
+// ------------------------------------------------------------------
+// Satellite 1: malformed-input battery
+// ------------------------------------------------------------------
+
+#[test]
+fn malformed_frames_never_kill_or_leak() {
+    let spool = tmpdir("mal_spool");
+    let (addr, server) = start(net_cfg(2, None, None), &spool);
+
+    // (a) Mid-header disconnect: two bytes of a four-byte header.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&[0u8, 0]).unwrap();
+    } // dropped: RST/FIN mid-header
+
+    // (b) Declared length over the cap: rejected from the header
+    // alone, connection closed without reading the "body".
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.write_all(&((wire::MAX_FRAME + 1) as u32).to_be_bytes()).unwrap();
+        s.write_all(b"junk that should never be read").unwrap();
+        let mut buf = [0u8; 16];
+        let n = s.read(&mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "server must close, not answer, an oversized frame");
+    }
+
+    // (c) Garbage JSON inside a well-formed frame: a *typed* error
+    // response, and the connection survives for the next request.
+    {
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(RPC)).unwrap();
+        wire::write_frame(&mut &s, "{\"op\": ").unwrap();
+        let rsp = Json::parse(&wire::read_frame(&mut &s).unwrap().unwrap()).unwrap();
+        assert_eq!(rsp.get("ok").and_then(Json::as_bool), Some(false));
+        let msg = rsp.get("error").and_then(Json::as_str).unwrap();
+        assert!(msg.contains("bad request"), "{msg}");
+        // Same connection, now a legal request: still served.
+        wire::write_frame(&mut &s, &Request::Stats.encode()).unwrap();
+        let rsp = Json::parse(&wire::read_frame(&mut &s).unwrap().unwrap()).unwrap();
+        assert_eq!(rsp.get("ok").and_then(Json::as_bool), Some(true));
+    }
+
+    // (d) Unknown op and bad specs: typed errors, never a hang.
+    let rsp = raw_request(addr, "{\"op\":\"fry\"}");
+    assert!(rsp.get("error").and_then(Json::as_str).unwrap().contains("unknown op"));
+    let rsp = raw_request(addr, "{\"op\":\"submit\",\"specs\":\"cholesky:16\"}");
+    assert_eq!(rsp.get("ok").and_then(Json::as_bool), Some(false));
+
+    // (e) Mid-body disconnect: declare 100 bytes, send 40, vanish.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&100u32.to_be_bytes()).unwrap();
+        s.write_all(&[b'x'; 40]).unwrap();
+    }
+
+    // (f) Slow-loris: trickle header bytes slower than the frame
+    // deadline. The server must cut the connection off (~2s), not pin
+    // a handler thread forever.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+        s.write_all(&[0u8]).unwrap();
+        let cut_by = Instant::now() + Duration::from_secs(15);
+        loop {
+            std::thread::sleep(Duration::from_millis(300));
+            // Detect the close from either direction: a read that
+            // returns EOF, or a write that fails (EPIPE/ECONNRESET).
+            let mut buf = [0u8; 1];
+            match s.read(&mut buf) {
+                Ok(0) => break,
+                Ok(_) => panic!("server answered an unfinished header"),
+                Err(_) => {}
+            }
+            if s.write_all(&[0u8]).is_err() {
+                break;
+            }
+            assert!(Instant::now() < cut_by, "slow-loris connection never cut off");
+        }
+    }
+
+    // (g) Seeded random garbage, raw on the socket.
+    let mut rng = Rng::new(0xBADC_0DE);
+    for _ in 0..16 {
+        let n = 1 + rng.below(64);
+        let junk: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        let mut s = TcpStream::connect(addr).unwrap();
+        let _ = s.write_all(&junk);
+    }
+
+    // After the whole battery the daemon still serves, and exactly one
+    // connection (ours, carrying the stats request) is live — every
+    // battery connection's handler thread has exited.
+    let client = DaemonClient::connect(addr.to_string(), None);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats = client.stats(RPC).unwrap();
+        if stats.conns == 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "handler threads leaked: {} connections still live",
+            stats.conns
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    client.shutdown(RPC).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+// ------------------------------------------------------------------
+// Auth: wrong/missing token rejected on every op
+// ------------------------------------------------------------------
+
+#[test]
+fn auth_is_enforced_on_every_op() {
+    let spool = tmpdir("auth_spool");
+    let (addr, server) = start(net_cfg(2, None, Some("s3cret")), &spool);
+
+    let good = DaemonClient::connect(addr.to_string(), Some("s3cret".into()));
+    let wrong = DaemonClient::connect(addr.to_string(), Some("nope".into()));
+    let missing = DaemonClient::connect(addr.to_string(), None);
+
+    let jobs = good.submit("cholesky:12:4", 5, None, None, RPC).unwrap();
+    assert_eq!(jobs, vec![JobId(1)]);
+
+    for (client, expect) in [
+        (&wrong, "unauthorized: bad `auth` token"),
+        (&missing, "unauthorized: request carries no `auth` token"),
+    ] {
+        let ops = [
+            Request::Submit {
+                specs: "cholesky:12:4".into(),
+                seed: 5,
+                retention: None,
+                max_inflight: None,
+            },
+            Request::Status { job: JobId(1) },
+            Request::Wait { job: JobId(1), timeout_ms: 1000 },
+            Request::Cancel { job: JobId(1) },
+            Request::Stats,
+            Request::Shutdown,
+        ];
+        for op in ops {
+            let err = client.request(&op, RPC).unwrap_err().to_string();
+            assert_eq!(err, expect, "op {op:?}");
+        }
+    }
+    // An unauthorized `shutdown` must not have stopped the daemon, and
+    // an unauthenticated caller learns nothing about job validity.
+    let st = good.wait_terminal(JobId(1), JOB_WAIT).unwrap();
+    assert_eq!(st.state, "succeeded", "{:?}", st.error);
+
+    good.shutdown(RPC).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+// ------------------------------------------------------------------
+// Server-side wait semantics
+// ------------------------------------------------------------------
+
+#[test]
+fn wait_parks_server_side_and_reports_terminal() {
+    let spool = tmpdir("wait_spool");
+    let (addr, server) = start(net_cfg(2, None, None), &spool);
+    let client = DaemonClient::connect(addr.to_string(), None);
+
+    // max_inflight=1 serializes the tasks so the job is reliably still
+    // running when the short wait below expires.
+    let jobs = client.submit("cholesky:24:8", 7, None, Some(1), RPC).unwrap();
+    let rsp = client.request(&Request::Wait { job: jobs[0], timeout_ms: 30 }, RPC).unwrap();
+    // The response always carries `terminal`; with a 30ms deadline on
+    // a serialized job it reports a non-terminal snapshot (if the tiny
+    // job somehow won the race, terminal=true is the honest answer).
+    let terminal = rsp.get("terminal").and_then(Json::as_bool).unwrap();
+    let state = rsp.get("state").and_then(Json::as_str).unwrap();
+    assert_eq!(terminal, matches!(state, "succeeded" | "failed" | "canceled"), "{state}");
+
+    // The long-poll path converges to terminal.
+    let st = client.wait_terminal(jobs[0], JOB_WAIT).unwrap();
+    assert_eq!(st.state, "succeeded", "{:?}", st.error);
+    // Terminal job: wait answers immediately, terminal=true.
+    let t0 = Instant::now();
+    let rsp = client.request(&Request::Wait { job: jobs[0], timeout_ms: 60_000 }, RPC).unwrap();
+    assert_eq!(rsp.get("terminal").and_then(Json::as_bool), Some(true));
+    assert!(t0.elapsed() < Duration::from_secs(5), "wait on a terminal job must not park");
+    // Unknown jobs settle immediately too (never a 30s park).
+    let t0 = Instant::now();
+    let rsp = client.request(&Request::Wait { job: JobId(99), timeout_ms: 60_000 }, RPC).unwrap();
+    assert_eq!(rsp.get("state").and_then(Json::as_str), Some("unknown"));
+    assert!(t0.elapsed() < Duration::from_secs(5));
+    assert!(client.wait_terminal(JobId(99), RPC).is_err(), "unknown job errors client-side");
+
+    client.shutdown(RPC).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+// ------------------------------------------------------------------
+// Satellite 2: ~100-client concurrent stress with exact numerics
+// ------------------------------------------------------------------
+
+#[test]
+fn hundred_concurrent_clients_no_crosstalk_exact_numerics() {
+    const CLIENTS: usize = 100;
+    const TOKEN: &str = "stress-token";
+    // Four distinct workloads cycled across the clients; each entry is
+    // (spec, seed) — the daemon derives per-job seeds from these, so
+    // every client running combo k must land tiles bit-identical to
+    // the reference daemon's job for combo k.
+    const COMBOS: [(&str, u64); 4] =
+        [("cholesky:12:4", 5), ("cholesky:16:8", 7), ("gemm:12:4", 9), ("gemm:16:8", 11)];
+
+    // Reference run: one spool-only daemon, the four combos submitted
+    // sequentially as j1..j4.
+    let ref_spool = tmpdir("stress_ref_spool");
+    let ref_store = tmpdir("stress_ref_store");
+    {
+        let mut cfg = EngineConfig {
+            scaling: ScalingMode::Fixed(2),
+            job_timeout: Duration::from_secs(120),
+            ..EngineConfig::default()
+        };
+        cfg.set("substrate", &format!("file:{}:2", ref_store.display())).unwrap();
+        let d = Daemon::new(cfg, &ref_spool).unwrap();
+        let server = std::thread::spawn(move || d.run());
+        let client = DaemonClient::new(&ref_spool);
+        for (k, (spec, seed)) in COMBOS.iter().enumerate() {
+            let jobs = client.submit(spec, *seed, None, None, RPC).unwrap();
+            assert_eq!(jobs, vec![JobId(k as u64 + 1)]);
+        }
+        for k in 1..=COMBOS.len() as u64 {
+            let st = client.wait_terminal(JobId(k), JOB_WAIT).unwrap();
+            assert_eq!(st.state, "succeeded", "reference j{k}: {:?}", st.error);
+        }
+        client.shutdown(RPC).unwrap();
+        server.join().unwrap().unwrap();
+    }
+
+    // Stress run: one TCP daemon, CLIENTS threads interleaving ops.
+    let spool = tmpdir("stress_spool");
+    let store = tmpdir("stress_store");
+    let (addr, server) = start(net_cfg(4, Some(&store), Some(TOKEN)), &spool);
+
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|i| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || -> (usize, JobId) {
+                let combo = i % COMBOS.len();
+                let (spec, seed) = COMBOS[combo];
+                let client = DaemonClient::connect(addr, Some(TOKEN.into()));
+                let jobs = client.submit(spec, seed, None, None, RPC).unwrap();
+                assert_eq!(jobs.len(), 1, "client {i}");
+                let job = jobs[0];
+                // Interleave the other ops while the job runs.
+                let st = client.status(job, RPC).unwrap();
+                assert_eq!(st.job, job);
+                if i % 7 == 0 {
+                    let stats = client.stats(RPC).unwrap();
+                    assert!(stats.conns >= 1);
+                }
+                let st = client.wait_terminal(job, JOB_WAIT).unwrap();
+                assert_eq!(st.state, "succeeded", "client {i} {job}: {:?}", st.error);
+                // Cancel after terminal: a definitive no, not cross-talk
+                // onto some other client's still-running job.
+                assert!(!client.cancel(job, RPC).unwrap(), "client {i} canceled a terminal job");
+                (combo, job)
+            })
+        })
+        .collect();
+    let results: Vec<(usize, JobId)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // No response cross-talk: every client got its own distinct job
+    // id, and together they cover j1..j100 exactly.
+    let mut ids: Vec<u64> = results.iter().map(|(_, j)| j.0).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (1..=CLIENTS as u64).collect::<Vec<_>>());
+
+    let client = DaemonClient::connect(addr.to_string(), Some(TOKEN.into()));
+    let stats = client.stats(RPC).unwrap();
+    assert_eq!(stats.active, 0, "all jobs terminal");
+    client.shutdown(RPC).unwrap();
+    server.join().unwrap().unwrap();
+
+    // Exact numerics: every stress job's tiles are bit-identical to
+    // the reference job of its combo.
+    let stress_sub = open_store(&store);
+    let ref_sub = open_store(&ref_store);
+    for (combo, job) in &results {
+        assert_tiles_identical((&stress_sub, *job), (&ref_sub, JobId(*combo as u64 + 1)));
+    }
+}
+
+// ------------------------------------------------------------------
+// Satellite 3: transport equivalence (TCP vs file spool)
+// ------------------------------------------------------------------
+
+#[test]
+fn tcp_and_spool_transports_are_bit_identical() {
+    let specs = [("cholesky:16:8", 7u64), ("gemm:16:8@j1", 11u64)];
+
+    // Leg 1: file spool only.
+    let spool_a = tmpdir("equiv_a_spool");
+    let store_a = tmpdir("equiv_a_store");
+    let mut statuses_a = Vec::new();
+    {
+        let mut cfg = EngineConfig {
+            scaling: ScalingMode::Fixed(2),
+            job_timeout: Duration::from_secs(120),
+            ..EngineConfig::default()
+        };
+        cfg.set("substrate", &format!("file:{}:2", store_a.display())).unwrap();
+        let d = Daemon::new(cfg, &spool_a).unwrap();
+        let server = std::thread::spawn(move || d.run());
+        let client = DaemonClient::new(&spool_a);
+        for (k, (spec, seed)) in specs.iter().enumerate() {
+            let jobs = client.submit(spec, *seed, None, None, RPC).unwrap();
+            assert_eq!(jobs, vec![JobId(k as u64 + 1)]);
+        }
+        for k in 1..=specs.len() as u64 {
+            let st = client.wait_terminal(JobId(k), JOB_WAIT).unwrap();
+            statuses_a.push(st.state.clone());
+            assert_eq!(st.state, "succeeded", "spool j{k}: {:?}", st.error);
+        }
+        client.shutdown(RPC).unwrap();
+        server.join().unwrap().unwrap();
+    }
+
+    // Leg 2: the same chain over TCP.
+    let spool_b = tmpdir("equiv_b_spool");
+    let store_b = tmpdir("equiv_b_store");
+    let mut statuses_b = Vec::new();
+    {
+        let (addr, server) = start(net_cfg(2, Some(&store_b), None), &spool_b);
+        let client = DaemonClient::connect(addr.to_string(), None);
+        for (k, (spec, seed)) in specs.iter().enumerate() {
+            let jobs = client.submit(spec, *seed, None, None, RPC).unwrap();
+            assert_eq!(jobs, vec![JobId(k as u64 + 1)]);
+        }
+        for k in 1..=specs.len() as u64 {
+            let st = client.wait_terminal(JobId(k), JOB_WAIT).unwrap();
+            statuses_b.push(st.state.clone());
+        }
+        client.shutdown(RPC).unwrap();
+        server.join().unwrap().unwrap();
+    }
+
+    assert_eq!(statuses_a, statuses_b, "terminal statuses must match across transports");
+    let sub_a = open_store(&store_a);
+    let sub_b = open_store(&store_b);
+    for k in 1..=specs.len() as u64 {
+        assert_tiles_identical((&sub_a, JobId(k)), (&sub_b, JobId(k)));
+    }
+}
+
+// ------------------------------------------------------------------
+// CLI round-trip over --connect (real child process)
+// ------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+#[test]
+fn cli_drives_a_tcp_daemon_end_to_end() {
+    use std::process::{Command, Stdio};
+    const BIN: &str = env!("CARGO_BIN_EXE_numpywren");
+
+    let spool = tmpdir("cli_spool");
+    let mut child = Command::new(BIN)
+        .args([
+            "serve",
+            "--daemon-dir",
+            &spool.display().to_string(),
+            "--listen",
+            "127.0.0.1:0",
+            "--auth-token",
+            "cli-token",
+            "--workers",
+            "2",
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning numpywren serve");
+
+    // Discover the ephemeral port from the marker's "addr" field.
+    let marker = spool.join("daemon.json");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let addr = loop {
+        if let Ok(body) = std::fs::read_to_string(&marker) {
+            let got = Json::parse(&body)
+                .ok()
+                .and_then(|v| v.get("addr").and_then(Json::as_str).map(str::to_string));
+            if let Some(addr) = got {
+                break addr;
+            }
+        }
+        assert!(Instant::now() < deadline, "marker never published an addr");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+
+    let run = |args: &[&str]| {
+        Command::new(BIN)
+            .args(args)
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .status()
+            .unwrap()
+    };
+    let connect = ["--connect", &addr, "--auth-token", "cli-token"];
+
+    // submit --wait runs the job to terminal over TCP.
+    let mut submit: Vec<&str> =
+        vec!["submit", "--specs", "cholesky:12:4", "--wait", "true", "--wait-timeout", "120"];
+    submit.extend_from_slice(&connect);
+    assert!(run(&submit).success(), "submit --connect failed");
+
+    // status / wait / cancel over --connect.
+    let mut status: Vec<&str> = vec!["status", "--job", "j1"];
+    status.extend_from_slice(&connect);
+    assert!(run(&status).success());
+    let mut wait: Vec<&str> = vec!["wait", "--job", "j1", "--wait-timeout", "60"];
+    wait.extend_from_slice(&connect);
+    assert!(run(&wait).success());
+
+    // Wrong token fails loudly; the daemon stays up.
+    let status = run(&["status", "--job", "j1", "--connect", &addr, "--auth-token", "oops"]);
+    assert!(!status.success(), "wrong token must be rejected");
+
+    let mut shutdown: Vec<&str> = vec!["shutdown"];
+    shutdown.extend_from_slice(&connect);
+    assert!(run(&shutdown).success());
+    let code = child.wait().expect("serve child");
+    assert!(code.success(), "serve exited with {code:?}");
+}

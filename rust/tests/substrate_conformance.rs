@@ -51,6 +51,14 @@ fn backends() -> Vec<(&'static str, Substrate, Arc<TestClock>)> {
         "file:auto:4",
         "file:auto+chaos(lat=fixed:20us,kv_lat=5us,seed=31)",
         "file:auto+cache(bytes=1048576)",
+        // Clock skew: the queue backends see time through a lens offset
+        // from the fleet's clock. Every contract must hold unchanged —
+        // take and expiry read the same skewed handle, so a constant
+        // offset cancels. (Positive skew here; negative skew would
+        // saturate at a fresh TestClock's epoch — the dedicated
+        // regression test below advances past the offset first.)
+        "sharded:4+chaos(skew=3s,seed=41)",
+        "file:auto+chaos(skew=3s,seed=43)",
     ]
     .into_iter()
     .map(|spec| {
@@ -210,6 +218,68 @@ fn queue_renewal_keeps_invisible() {
         clock.advance(Duration::from_secs(3));
         assert!(q.receive().is_some(), "[{spec}] expired after renewal lapsed");
     }
+}
+
+#[test]
+fn queue_lease_expiry_invariant_under_clock_skew() {
+    // ROADMAP item 3's satellite, pinned as a regression test: the
+    // substrate's clock may disagree with the workers' by a constant
+    // offset (`chaos(skew=…)`), and lease-expiry redelivery — the
+    // whole §4.1 at-least-once protocol — must be *invariant* under
+    // it, because the queue stamps leases and checks expiry through
+    // the same skewed handle. The observable delivery trace must be
+    // identical at zero, large-positive, and large-negative skew.
+    let trace = |spec: &str| -> Vec<(u32, bool, bool)> {
+        let clock = Arc::new(TestClock::default());
+        let cfg = SubstrateConfig::parse(spec).unwrap();
+        let sub = Substrate::build_with_clock(&cfg, LEASE, Duration::ZERO, clock.clone());
+        // Start well past the epoch so a negative offset never
+        // saturates (a real wall clock is never near its epoch).
+        clock.advance(Duration::from_secs(60));
+        let q = sub.queue;
+        let mut out = Vec::new();
+        q.send("t", 0);
+        let (_, lease1) = q.receive().unwrap();
+        out.push((q.delivery_count("t"), q.receive().is_none(), q.renew(&lease1)));
+        // Half a lease: renewed above, so still invisible.
+        clock.advance(LEASE / 2 + Duration::from_secs(1));
+        out.push((q.delivery_count("t"), q.receive().is_none(), q.renew(&lease1)));
+        // Past the renewed lease: redelivered, stale lease rejected.
+        clock.advance(LEASE + Duration::from_secs(1));
+        let (_, lease2) = q.receive().unwrap();
+        out.push((q.delivery_count("t"), q.renew(&lease1), q.delete(&lease1)));
+        out.push((q.delivery_count("t"), q.renew(&lease2), q.delete(&lease2)));
+        out.push((q.delivery_count("t"), q.is_empty(), true));
+        out
+    };
+    let baseline = trace("strict");
+    for spec in [
+        "strict+chaos(skew=5s,seed=1)",
+        "strict+chaos(skew=-5s,seed=1)",
+        "sharded:1+chaos(skew=5s,seed=1)",
+        "sharded:1+chaos(skew=-5s,seed=1)",
+        "file:auto+chaos(skew=5s,seed=1)",
+        "file:auto+chaos(skew=-5s,seed=1)",
+    ] {
+        assert_eq!(trace(spec), baseline, "[{spec}] skew changed lease behavior");
+    }
+    // And the clause really reaches the queue: near the epoch a
+    // negative offset *does* saturate, visibly stretching the first
+    // lease (take stamped at the clamped origin) — proof the skewed
+    // lens, not the fleet clock, is what the backend reads.
+    let clock = Arc::new(TestClock::default());
+    let cfg = SubstrateConfig::parse("strict+chaos(skew=-5s,seed=1)").unwrap();
+    let sub = Substrate::build_with_clock(&cfg, LEASE, Duration::ZERO, clock.clone());
+    let q = sub.queue;
+    q.send("t", 0);
+    let (_, _lease) = q.receive().unwrap();
+    clock.advance(LEASE + Duration::from_secs(1));
+    assert!(
+        q.receive().is_none(),
+        "saturated skewed clock has only advanced 6s of the 10s lease"
+    );
+    clock.advance(Duration::from_secs(9));
+    assert!(q.receive().is_some(), "expires once the skewed clock catches up");
 }
 
 #[test]
